@@ -1,0 +1,67 @@
+//! DeepSeek-V3 prefill case study (paper Sec. 4.5): MHA with 128 query
+//! heads and 128 KV heads, D_HEAD = 56 — the configuration where head
+//! count most exceeds the XCD count, across context lengths and batches.
+//!
+//! Run: `cargo run --release --example deepseek_prefill`
+
+use numa_attn::attn::KernelKind;
+use numa_attn::mapping::{Policy, ALL_POLICIES};
+use numa_attn::metrics::Table;
+use numa_attn::roofline;
+use numa_attn::sim::{simulate, SimConfig};
+use numa_attn::topology::presets;
+use numa_attn::workload::presets as models;
+
+fn main() {
+    let topo = presets::mi300x();
+    let model = models::deepseek_v3();
+    println!(
+        "model: {} (H_Q={}, H_K={}, D_HEAD={}) on {}\n",
+        model.name, model.h_q, model.h_k, model.d_head, topo.name
+    );
+
+    let mut t = Table::new(&[
+        "config", "NBF", "SBF", "NHF", "SHF(norm)", "SHF hit %", "SHF TFLOP/s",
+    ]);
+    for n_ctx in [2048usize, 8192, 32768, 131072] {
+        for batch in [1usize, 8] {
+            let cfg = model.attn(batch, n_ctx);
+            let reports: Vec<_> = ALL_POLICIES
+                .iter()
+                .map(|&p| simulate(&topo, &cfg, &SimConfig::sampled(p, &topo, 2)))
+                .collect();
+            let shf = reports
+                .iter()
+                .find(|r| r.policy == Policy::SwizzledHeadFirst)
+                .unwrap();
+            let rel = |p: Policy| {
+                let r = reports.iter().find(|r| r.policy == p).unwrap();
+                format!("{:.3}", shf.est_total_sec / r.est_total_sec)
+            };
+            t.row(vec![
+                format!("N={}K B={batch}", n_ctx / 1024),
+                rel(Policy::NaiveBlockFirst),
+                rel(Policy::SwizzledBlockFirst),
+                rel(Policy::NaiveHeadFirst),
+                "1.000".into(),
+                format!("{:.1}", shf.l2_hit_pct()),
+                format!("{:.0}", shf.achieved_tflops),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // Why D=56 lowers absolute performance (paper Sec. 4.5).
+    let cfg56 = model.attn(1, 32768);
+    let cfg128 = numa_attn::attn::AttnConfig::mha(1, 128, 32768, 128);
+    let r56 = roofline::attention_roofline(&topo, &cfg56, KernelKind::Forward);
+    let r128 = roofline::attention_roofline(&topo, &cfg128, KernelKind::Forward);
+    println!(
+        "arithmetic profile: D=56 matrix-core efficiency {:.2} (vs {:.2} at D=128); \
+         ideal times {:.2} / {:.2} ms",
+        cfg56.compute_efficiency_factor(),
+        cfg128.compute_efficiency_factor(),
+        r56.ideal_sec * 1e3,
+        r128.ideal_sec * 1e3,
+    );
+}

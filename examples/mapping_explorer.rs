@@ -1,0 +1,75 @@
+//! Mapping explorer: prints the paper's Figs. 7-10 head->XCD layouts for
+//! any grid geometry, measures ACC spread, and sweeps a head-count axis
+//! to show where each policy's locality breaks.
+//!
+//! Run: `cargo run --release --example mapping_explorer -- [--heads 8] [--blocks 128] [--xcds 4]`
+
+use numa_attn::attn::acc::AccSpread;
+use numa_attn::attn::AttnConfig;
+use numa_attn::mapping::{Mapping, ALL_POLICIES};
+use numa_attn::metrics::Table;
+use numa_attn::sched::xcd_of_slot;
+use numa_attn::sim::{simulate, SimConfig};
+use numa_attn::topology::presets;
+use numa_attn::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]).map_err(|e| anyhow::anyhow!(e))?;
+    let heads: usize = args.get_or("heads", 8).map_err(|e| anyhow::anyhow!(e))?;
+    let blocks: usize = args.get_or("blocks", 128).map_err(|e| anyhow::anyhow!(e))?;
+    let xcds: usize = args.get_or("xcds", 4).map_err(|e| anyhow::anyhow!(e))?;
+
+    // --- Figs. 7-10 layouts ------------------------------------------------
+    println!("== head -> XCD layouts ({heads} q-heads, {blocks} row blocks, {xcds} XCDs) ==");
+    for policy in ALL_POLICIES {
+        println!("-- {} --", policy.label());
+        match Mapping::new(policy, 1, heads, blocks, xcds) {
+            Err(e) => println!("   (not applicable: {e})"),
+            Ok(m) => {
+                let mut per_xcd = vec![std::collections::BTreeSet::new(); xcds];
+                for s in 0..m.grid_size() {
+                    let w = m.decode(s);
+                    per_xcd[xcd_of_slot(s, 1, xcds) as usize].insert(w.h);
+                }
+                for (x, hs) in per_xcd.iter().enumerate() {
+                    let hs: Vec<String> = hs.iter().map(|h| format!("HQ{h}")).collect();
+                    println!("   XCD{x}: {}", hs.join(","));
+                }
+                // ACC spread: does any head straddle XCDs?
+                let cfg = AttnConfig::mha(1, heads, blocks * 128, 128);
+                let spread = AccSpread::measure(
+                    &cfg,
+                    xcds,
+                    (0..m.grid_size()).map(|s| (m.decode(s), xcd_of_slot(s, 1, xcds))),
+                );
+                println!(
+                    "   ACC spread: co-located={} max ACCs/XCD={}",
+                    spread.perfectly_colocated(),
+                    spread.max_accs_per_xcd()
+                );
+            }
+        }
+    }
+
+    // --- head-count sweep on the simulator ---------------------------------
+    let topo = presets::mi300x();
+    println!("\n== where locality breaks: H sweep at N_CTX=32K B=2 (MI300X) ==");
+    let mut t = Table::new(&["H_Q", "NBF hit %", "NHF hit %", "SHF hit %", "SHF/NBF speedup"]);
+    for h in [8usize, 16, 32, 64, 128] {
+        let cfg = AttnConfig::mha(2, h, 32 * 1024, 128);
+        let run = |p| simulate(&topo, &cfg, &SimConfig::sampled(p, &topo, 2));
+        let nbf = run(numa_attn::mapping::Policy::NaiveBlockFirst);
+        let nhf = run(numa_attn::mapping::Policy::NaiveHeadFirst);
+        let shf = run(numa_attn::mapping::Policy::SwizzledHeadFirst);
+        t.row(vec![
+            h.to_string(),
+            format!("{:.1}", nbf.l2_hit_pct()),
+            format!("{:.1}", nhf.l2_hit_pct()),
+            format!("{:.1}", shf.l2_hit_pct()),
+            format!("{:.2}x", nbf.est_total_sec / shf.est_total_sec),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

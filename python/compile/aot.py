@@ -1,0 +1,225 @@
+"""AOT compile path: lower L2/L1 entry points to XLA HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust runtime
+(``rust/src/runtime``) loads the text with ``HloModuleProto::from_text_file``,
+compiles it on the PJRT CPU client, and executes it on the request path.
+Python is never imported at runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Outputs (under ``artifacts/``):
+  * ``<name>.hlo.txt``   — one per entry-point variant
+  * ``manifest.json``    — input/output specs, attention config, and golden
+    output checksums (computed with the pure-jnp oracle on deterministic
+    hash-generated inputs) that the Rust serving example verifies against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fa2, ref
+
+# ---------------------------------------------------------------------------
+# Deterministic input generation, mirrored bit-for-bit in Rust
+# (rust/src/runtime/inputs.rs).  Knuth multiplicative hash of (seed + index)
+# mapped to [-0.5, 0.5).
+# ---------------------------------------------------------------------------
+
+_HASH_MULT = np.uint32(2654435761)
+
+
+def det_input(seed: int, shape, dtype=np.float32):
+    """Deterministic pseudo-random tensor, reproducible from Rust."""
+    n = int(np.prod(shape))
+    idx = np.arange(n, dtype=np.uint64) + np.uint64(seed)
+    h = (idx * np.uint64(_HASH_MULT)) & np.uint64(0xFFFFFFFF)
+    vals = h.astype(np.float64) / 4294967296.0 - 0.5
+    return vals.reshape(shape).astype(dtype)
+
+
+def _hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(a):
+    return {"shape": list(a.shape), "dtype": str(a.dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def attn_fwd_entry(causal, policy, num_xcd, block_m, block_n):
+    """(q, k, v) -> (o,) through the Pallas FA2 forward kernel."""
+
+    def f(q, k, v):
+        o, _ = fa2.fa2_forward(
+            q, k, v,
+            causal=causal, block_m=block_m, block_n=block_n,
+            policy=policy, num_xcd=num_xcd,
+        )
+        return (o,)
+
+    return f
+
+
+def block_fwd_entry(num_q_heads, num_kv_heads, head_dim, params):
+    """(x, *weights) -> (y,) through one transformer block."""
+
+    def f(x, wq, wk, wv, wo, w1, w2):
+        w = model.LayerWeights(wq, wk, wv, wo, w1, w2)
+        return (model.transformer_block(
+            x, w, num_q_heads, num_kv_heads, head_dim, params),)
+
+    return f
+
+
+def block_sgd_entry(num_q_heads, num_kv_heads, head_dim, params, lr=2e-4):
+    """One SGD training step: (x, y, *w) -> (loss, *updated_w).
+
+    The gradient flows through the Pallas FA2 forward AND backward
+    kernels (custom_vjp), so this artifact exercises the full L1 stack.
+    """
+
+    def f(x, y, wq, wk, wv, wo, w1, w2):
+        w = model.LayerWeights(wq, wk, wv, wo, w1, w2)
+        loss, grads = model.block_grad(
+            w, x, y, num_q_heads, num_kv_heads, head_dim, params)
+        new_w = jax.tree_util.tree_map(lambda p, g: p - lr * g, w, grads)
+        return (loss, *new_w)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue
+# ---------------------------------------------------------------------------
+
+
+def _attn_variant(name, z, h_q, h_k, n, d, causal=False, dtype=jnp.float32,
+                  block_m=64, block_n=64, policy="swizzled_head_first",
+                  num_xcd=8):
+    q = det_input(1, (z, h_q, n, d))
+    k = det_input(2, (z, h_k, n, d))
+    v = det_input(3, (z, h_k, n, d))
+    oref = np.asarray(ref.attention_ref(q, k, v, causal=causal))
+    entry = attn_fwd_entry(causal, policy, num_xcd, block_m, block_n)
+    specs = [jax.ShapeDtypeStruct(t.shape, dtype) for t in (q, k, v)]
+    lowered = jax.jit(entry).lower(*specs)
+    return {
+        "name": name,
+        "kind": "attn_fwd",
+        "text": _hlo_text(lowered),
+        "inputs": [_spec(t) for t in (q, k, v)],
+        "input_seeds": [1, 2, 3],
+        "outputs": [{"shape": [z, h_q, n, d], "dtype": "float32"}],
+        "attn": {
+            "batch": z, "h_q": h_q, "h_k": h_k, "n_ctx": n, "d_head": d,
+            "causal": causal, "block_m": block_m, "block_n": block_n,
+            "policy": policy, "num_xcd": num_xcd,
+        },
+        "golden": {
+            "abs_sum": float(np.abs(oref).sum()),
+            "mean": float(oref.mean()),
+            "l2": float(np.sqrt((oref.astype(np.float64) ** 2).sum())),
+        },
+    }
+
+
+def build_catalogue(quick=False):
+    arts = []
+    # Serving variants: the shapes the Rust coordinator buckets requests
+    # into.  Small enough to execute quickly on the CPU PJRT client.
+    arts.append(_attn_variant("attn_mha_z1_h8_n128_d64", 1, 8, 8, 128, 64))
+    arts.append(_attn_variant("attn_mha_z1_h8_n256_d64", 1, 8, 8, 256, 64))
+    if not quick:
+        arts.append(_attn_variant(
+            "attn_mha_causal_z1_h8_n256_d64", 1, 8, 8, 256, 64, causal=True))
+        arts.append(_attn_variant(
+            "attn_gqa_z1_hq8_hk2_n256_d64", 1, 8, 2, 256, 64))
+        arts.append(_attn_variant("attn_mha_z2_h8_n256_d64", 2, 8, 8, 256, 64))
+        # DeepSeek-V3-like head-count/dim ratio scaled down (D_HEAD=56
+        # analogue; kept MXU-tile-friendly while exercising d != 64).
+        arts.append(_attn_variant(
+            "attn_mha_z1_h16_n128_d32", 1, 16, 16, 128, 32))
+
+    # Transformer block forward + one SGD step (exercises fwd+bwd kernels).
+    z, n, hq, hk, dh, dm = 1, 128, 4, 2, 32, 128
+    params = model.DEFAULT_PARAMS._replace(block_m=64, block_n=64, num_xcd=4)
+    w = model.init_layer(jax.random.PRNGKey(0), dm, hq, hk, dh)
+    x = jax.ShapeDtypeStruct((z, n, dm), jnp.float32)
+    wspecs = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in w]
+
+    lowered = jax.jit(block_fwd_entry(hq, hk, dh, params)).lower(x, *wspecs)
+    arts.append({
+        "name": "block_fwd_z1_n128_dm128",
+        "kind": "block_fwd",
+        "text": _hlo_text(lowered),
+        "inputs": [{"shape": [z, n, dm], "dtype": "float32"}]
+        + [_spec(t) for t in w],
+        "input_seeds": [10, 11, 12, 13, 14, 15, 16],
+        "outputs": [{"shape": [z, n, dm], "dtype": "float32"}],
+        "model": {"d_model": dm, "h_q": hq, "h_k": hk, "d_head": dh, "n": n},
+    })
+
+    if not quick:
+        lowered = jax.jit(block_sgd_entry(hq, hk, dh, params)).lower(
+            x, x, *wspecs)
+        arts.append({
+            "name": "block_sgd_z1_n128_dm128",
+            "kind": "block_sgd",
+            "text": _hlo_text(lowered),
+            "inputs": [{"shape": [z, n, dm], "dtype": "float32"}] * 2
+            + [_spec(t) for t in w],
+            "input_seeds": [20, 21, 22, 23, 24, 25, 26, 27],
+            "outputs": [{"shape": [], "dtype": "float32"}]
+            + [_spec(t) for t in w],
+            "model": {"d_model": dm, "h_q": hq, "h_k": hk, "d_head": dh, "n": n},
+        })
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="emit only the two core serving variants")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "artifacts": []}
+    for art in build_catalogue(quick=args.quick):
+        fname = f"{art['name']}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(art.pop("text"))
+        art["file"] = fname
+        manifest["artifacts"].append(art)
+        print(f"wrote {path}")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""FlashAttention2 forward as a Pallas kernel with swizzled grid mapping.
+
+This is Layer 1 of the stack: the paper's compute hot-spot.  The kernel
+implements the standard FA2 forward (online softmax over BLOCK_N column
+tiles of K/V, one BLOCK_M row block of Q per grid step) and — the paper's
+contribution — decodes its 1-D grid index through one of the four
+workgroup-mapping policies of ``swizzle.py`` so that the *dispatch order*
+of row blocks matches what a chiplet GPU's round-robin scheduler would
+place on each XCD.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+Triton workgroup becomes one Pallas grid step; per-XCD L2 tiling becomes
+the BlockSpec HBM->VMEM schedule (Q row block resident in VMEM, K/V
+streamed in BLOCK_N tiles); MFMA matmuls become MXU-targeted ``jnp.dot``
+with float32 accumulation.  ``interpret=True`` always: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so real-TPU performance is estimated
+analytically (DESIGN.md §Perf) while numerics are validated here.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import swizzle
+
+# Large negative finite used for causal masking.  Using -inf would produce
+# NaNs through exp(-inf - (-inf)) in fully-masked accumulator updates.
+_MASK_VALUE = -1.0e30
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 64
+DEFAULT_NUM_XCD = 8  # MI300X (paper Table 1)
+
+
+def _fwd_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    lse_ref,
+    *,
+    seqlen: int,
+    block_m: int,
+    block_n: int,
+    sm_scale: float,
+    causal: bool,
+    block_index_fn,
+):
+    """One grid step == one paper workgroup: one (batch, head, row-block)."""
+    wid = pl.program_id(0)
+    b = block_index_fn(wid)  # row-block index of this workgroup
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (BLOCK_M, D)
+    d = q.shape[-1]
+
+    m_i = jnp.full((block_m,), _MASK_VALUE, jnp.float32)
+    l_i = jnp.zeros((block_m,), jnp.float32)
+    acc = jnp.zeros((block_m, d), jnp.float32)
+
+    num_kv_blocks = seqlen // block_n
+    if causal:
+        # Only K/V tiles up to (and including) the diagonal contribute.
+        hi = ((b + 1) * block_m + block_n - 1) // block_n
+        hi = jnp.minimum(hi, num_kv_blocks)
+    else:
+        hi = num_kv_blocks
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = pl.load(
+            k_ref, (0, 0, pl.dslice(i * block_n, block_n), slice(None))
+        ).astype(jnp.float32)
+        v = pl.load(
+            v_ref, (0, 0, pl.dslice(i * block_n, block_n), slice(None))
+        ).astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            rows = b * block_m + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 0
+            )
+            cols = i * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 1
+            )
+            s = jnp.where(rows >= cols, s, _MASK_VALUE)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m_i, l_i, acc = jax.lax.fori_loop(0, hi, body, (m_i, l_i, acc))
+
+    o = acc / l_i[:, None]
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+    lse_ref[0, 0] = m_i + jnp.log(l_i)
+
+
+def _check_shapes(q, k, v, block_m, block_n):
+    z, h_q, n, d = q.shape
+    zk, h_k, nk, dk = k.shape
+    assert k.shape == v.shape, (k.shape, v.shape)
+    assert z == zk and n == nk and d == dk, (q.shape, k.shape)
+    assert h_q % h_k == 0, f"GQA requires H_K | H_Q, got {h_q}, {h_k}"
+    assert n % block_m == 0, f"seqlen {n} must be divisible by BLOCK_M {block_m}"
+    assert n % block_n == 0, f"seqlen {n} must be divisible by BLOCK_N {block_n}"
+    return z, h_q, h_k, n, d
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "sm_scale",
+        "block_m",
+        "block_n",
+        "policy",
+        "num_xcd",
+        "interpret",
+    ),
+)
+def fa2_forward(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = False,
+    sm_scale: float | None = None,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    policy: str = "swizzled_head_first",
+    num_xcd: int = DEFAULT_NUM_XCD,
+    interpret: bool = True,
+):
+    """FlashAttention2 forward pass.
+
+    Args:
+      q: (Z, H_Q, N, D); k, v: (Z, H_K, N, D) with H_K | H_Q.
+      causal: apply a lower-triangular mask.
+      policy: workgroup mapping policy (see ``swizzle.POLICIES``) — controls
+        the *dispatch order* of the grid, i.e. which XCD each (head,
+        row-block) would land on under round-robin hardware scheduling.
+      num_xcd: NUMA domains assumed by the swizzle (8 for MI300X).
+
+    Returns:
+      (o, lse): o is (Z, H_Q, N, D) in q.dtype, lse is (Z, H_Q, N) float32.
+    """
+    z, h_q, h_k, n, d = _check_shapes(q, k, v, block_m, block_n)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    group = h_q // h_k
+    num_blocks = n // block_m
+
+    def work_of(wid):
+        return swizzle.decode(policy, wid, z, h_q, num_blocks, num_xcd)
+
+    def q_map(wid):
+        zz, hh, bb = work_of(wid)
+        return (zz, hh, bb, 0)
+
+    def kv_map(wid):
+        zz, hh, _ = work_of(wid)
+        return (zz, hh // group, 0, 0)
+
+    def lse_map(wid):
+        zz, hh, bb = work_of(wid)
+        return (zz, hh, bb)
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        seqlen=n,
+        block_m=block_m,
+        block_n=block_n,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_index_fn=lambda wid: work_of(wid)[2],
+    )
+
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(z * h_q * num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_m, d), q_map),
+            pl.BlockSpec((1, 1, n, d), kv_map),
+            pl.BlockSpec((1, 1, n, d), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_m, d), q_map),
+            pl.BlockSpec((1, 1, block_m), lse_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((z, h_q, n, d), q.dtype),
+            jax.ShapeDtypeStruct((z, h_q, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+def attention(q, k, v, **kwargs):
+    """Convenience wrapper returning only the attention output."""
+    o, _ = fa2_forward(q, k, v, **kwargs)
+    return o

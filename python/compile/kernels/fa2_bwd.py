@@ -1,0 +1,310 @@
+"""FlashAttention2 backward pass as Pallas kernels (paper Sec. 4.6).
+
+Two kernels, mirroring AITER's FA2 backward structure that the paper
+benchmarks:
+
+* ``dkdv`` kernel — grid over (batch, q-head, K/V *column* block).  Each
+  workgroup owns one BLOCK_N column block of K/V and iterates over all
+  BLOCK_M row blocks of Q/dO, accumulating dK and dV.  Within one head all
+  column-block workgroups share Q, dO, lse, delta — the same ACC spatial
+  locality the forward pass has, which is why the paper's Swizzled
+  Head-first mapping helps the backward pass too (Fig. 16).
+* ``dq`` kernel — grid over (batch, q-head, Q *row* block), iterating over
+  K/V column blocks, accumulating dQ.
+
+Both grids are dispatched through the same workgroup-mapping policies as
+the forward kernel (``swizzle.decode``), with ``num_blocks`` equal to the
+respective block count.
+
+GQA: gradients are computed per *query* head and the wrapper sums dK/dV
+over each query-head group, matching ``jax.vjp`` of the naive reference.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import swizzle
+from .fa2 import DEFAULT_BLOCK_M, DEFAULT_BLOCK_N, DEFAULT_NUM_XCD, _MASK_VALUE
+
+
+def _dkdv_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    do_ref,
+    lse_ref,
+    delta_ref,
+    dk_ref,
+    dv_ref,
+    *,
+    seqlen: int,
+    block_m: int,
+    block_n: int,
+    sm_scale: float,
+    causal: bool,
+    block_index_fn,
+):
+    """One workgroup: one BLOCK_N column block of K/V for one (z, head)."""
+    wid = pl.program_id(0)
+    jb = block_index_fn(wid)  # column-block index
+
+    k = k_ref[0, 0].astype(jnp.float32)  # (BLOCK_N, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (BLOCK_N, D)
+    d = k.shape[-1]
+
+    dk = jnp.zeros((block_n, d), jnp.float32)
+    dv = jnp.zeros((block_n, d), jnp.float32)
+
+    num_row_blocks = seqlen // block_m
+    if causal:
+        # Row blocks strictly above the diagonal see none of this column.
+        lo = (jb * block_n) // block_m
+    else:
+        lo = 0
+
+    def body(i, carry):
+        dk_prev, dv_prev = carry
+        q = pl.load(
+            q_ref, (0, 0, pl.dslice(i * block_m, block_m), slice(None))
+        ).astype(jnp.float32)
+        do = pl.load(
+            do_ref, (0, 0, pl.dslice(i * block_m, block_m), slice(None))
+        ).astype(jnp.float32)
+        lse = pl.load(lse_ref, (0, 0, pl.dslice(i * block_m, block_m)))
+        delta = pl.load(delta_ref, (0, 0, pl.dslice(i * block_m, block_m)))
+
+        s = (
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        )  # (BLOCK_M, BLOCK_N)
+        if causal:
+            rows = i * block_m + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 0
+            )
+            cols = jb * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 1
+            )
+            s = jnp.where(rows >= cols, s, _MASK_VALUE)
+        p = jnp.exp(s - lse[:, None])  # exact softmax probabilities
+        dv_new = dv_prev + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dk_new = dk_prev + jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+        return dk_new, dv_new
+
+    dk, dv = jax.lax.fori_loop(lo, num_row_blocks, body, (dk, dv))
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
+
+
+def _dq_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    do_ref,
+    lse_ref,
+    delta_ref,
+    dq_ref,
+    *,
+    seqlen: int,
+    block_m: int,
+    block_n: int,
+    sm_scale: float,
+    causal: bool,
+    block_index_fn,
+):
+    """One workgroup: one BLOCK_M row block of dQ for one (z, head)."""
+    wid = pl.program_id(0)
+    ib = block_index_fn(wid)  # row-block index
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (BLOCK_M, D)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    delta = delta_ref[0, 0]
+    d = q.shape[-1]
+
+    dq = jnp.zeros((block_m, d), jnp.float32)
+    num_kv_blocks = seqlen // block_n
+    if causal:
+        hi = ((ib + 1) * block_m + block_n - 1) // block_n
+        hi = jnp.minimum(hi, num_kv_blocks)
+    else:
+        hi = num_kv_blocks
+
+    def body(j, dq_prev):
+        k = pl.load(
+            k_ref, (0, 0, pl.dslice(j * block_n, block_n), slice(None))
+        ).astype(jnp.float32)
+        v = pl.load(
+            v_ref, (0, 0, pl.dslice(j * block_n, block_n), slice(None))
+        ).astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            rows = ib * block_m + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 0
+            )
+            cols = j * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 1
+            )
+            s = jnp.where(rows >= cols, s, _MASK_VALUE)
+        p = jnp.exp(s - lse[:, None])
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        return dq_prev + jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, hi, body, dq)
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "sm_scale",
+        "block_m",
+        "block_n",
+        "policy",
+        "num_xcd",
+        "interpret",
+    ),
+)
+def fa2_backward(
+    q,
+    k,
+    v,
+    o,
+    lse,
+    do,
+    *,
+    causal: bool = False,
+    sm_scale: float | None = None,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    policy: str = "swizzled_head_first",
+    num_xcd: int = DEFAULT_NUM_XCD,
+    interpret: bool = True,
+):
+    """FA2 backward: returns (dq, dk, dv).
+
+    q, o, do: (Z, H_Q, N, D); k, v: (Z, H_K, N, D); lse: (Z, H_Q, N).
+    dk/dv are returned in K/V's GQA layout (summed over query-head groups).
+    """
+    z, h_q, n, d = q.shape
+    h_k = k.shape[1]
+    group = h_q // h_k
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    assert n % block_m == 0 and n % block_n == 0, (n, block_m, block_n)
+
+    # Preprocess (the paper's "scalar operations"): delta_i = rowsum(dO * O).
+    delta = jnp.sum(
+        do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+    )  # (Z, H_Q, N)
+
+    k_exp = jnp.repeat(k, group, axis=1) if group > 1 else k
+    v_exp = jnp.repeat(v, group, axis=1) if group > 1 else v
+
+    # --- dK/dV kernel: grid over column blocks -------------------------
+    num_col_blocks = n // block_n
+
+    def col_work(wid):
+        return swizzle.decode(policy, wid, z, h_q, num_col_blocks, num_xcd)
+
+    def full_map(wid):
+        zz, hh, _ = col_work(wid)
+        return (zz, hh, 0, 0)
+
+    def full_vec_map(wid):
+        zz, hh, _ = col_work(wid)
+        return (zz, hh, 0)
+
+    def col_map(wid):
+        zz, hh, bb = col_work(wid)
+        return (zz, hh, bb, 0)
+
+    dkdv_kernel = functools.partial(
+        _dkdv_kernel,
+        seqlen=n,
+        block_m=block_m,
+        block_n=block_n,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_index_fn=lambda wid: col_work(wid)[2],
+    )
+    dk_exp, dv_exp = pl.pallas_call(
+        dkdv_kernel,
+        grid=(z * h_q * num_col_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1, n, d), full_map),  # q
+            pl.BlockSpec((1, 1, block_n, d), col_map),  # k block
+            pl.BlockSpec((1, 1, block_n, d), col_map),  # v block
+            pl.BlockSpec((1, 1, n, d), full_map),  # do
+            pl.BlockSpec((1, 1, n), full_vec_map),  # lse
+            pl.BlockSpec((1, 1, n), full_vec_map),  # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_n, d), col_map),
+            pl.BlockSpec((1, 1, block_n, d), col_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((z, h_q, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((z, h_q, n, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_exp, v_exp, do, lse, delta)
+
+    # --- dQ kernel: grid over row blocks -------------------------------
+    num_row_blocks = n // block_m
+
+    def row_work(wid):
+        return swizzle.decode(policy, wid, z, h_q, num_row_blocks, num_xcd)
+
+    def row_map(wid):
+        zz, hh, bb = row_work(wid)
+        return (zz, hh, bb, 0)
+
+    def row_vec_map(wid):
+        zz, hh, bb = row_work(wid)
+        return (zz, hh, bb)
+
+    def kv_full_map(wid):
+        zz, hh, _ = row_work(wid)
+        return (zz, hh, 0, 0)
+
+    dq_kernel = functools.partial(
+        _dq_kernel,
+        seqlen=n,
+        block_m=block_m,
+        block_n=block_n,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_index_fn=lambda wid: row_work(wid)[2],
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(z * h_q * num_row_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_m, d), row_map),  # q block
+            pl.BlockSpec((1, 1, n, d), kv_full_map),  # k
+            pl.BlockSpec((1, 1, n, d), kv_full_map),  # v
+            pl.BlockSpec((1, 1, block_m, d), row_map),  # do block
+            pl.BlockSpec((1, 1, block_m), row_vec_map),  # lse
+            pl.BlockSpec((1, 1, block_m), row_vec_map),  # delta
+        ],
+        out_specs=[pl.BlockSpec((1, 1, block_m, d), row_map)],
+        out_shape=[jax.ShapeDtypeStruct((z, h_q, n, d), q.dtype)],
+        interpret=interpret,
+    )(q, k_exp, v_exp, do, lse, delta)[0]
+
+    # GQA: reduce expanded gradients over each query-head group.
+    if group > 1:
+        dk = dk_exp.reshape(z, h_k, group, n, d).sum(axis=2)
+        dv = dv_exp.reshape(z, h_k, group, n, d).sum(axis=2)
+    else:
+        dk, dv = dk_exp, dv_exp
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)

@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for the FlashAttention2 kernels.
+
+Naive (materialize-S) attention, forward and backward, for MHA and GQA.
+These are the numerical ground truth every Pallas kernel variant is tested
+against (``python/tests/test_kernel.py``) and the source of the golden
+checksums the Rust serving example verifies (``examples/serve_attention.rs``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_kv(k, num_q_heads):
+    """Broadcast GQA K/V heads up to the query head count.
+
+    k: (Z, H_K, N, D) -> (Z, H_Q, N, D) by repeating each KV head over its
+    query-head group (group size = H_Q // H_K).
+    """
+    z, h_k, n, d = k.shape
+    if h_k == num_q_heads:
+        return k
+    assert num_q_heads % h_k == 0, (num_q_heads, h_k)
+    group = num_q_heads // h_k
+    return jnp.repeat(k, group, axis=1)
+
+
+def attention_ref(q, k, v, causal=False, sm_scale=None):
+    """Reference attention forward.
+
+    q: (Z, H_Q, N, D); k, v: (Z, H_K, N, D) with H_K | H_Q (GQA) or
+    H_K == H_Q (MHA).  Returns (Z, H_Q, N, D) in float32.
+    """
+    z, h_q, n, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    k = expand_kv(k, h_q)
+    v = expand_kv(v, h_q)
+    q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+    s = jnp.einsum("zhnd,zhmd->zhnm", q32, k32) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("zhnm,zhmd->zhnd", p, v)
+
+
+def attention_lse_ref(q, k, v, causal=False, sm_scale=None):
+    """Row-wise log-sum-exp of the (scaled, masked) score matrix.
+
+    Matches the ``lse`` side-output of the Pallas forward kernel, which the
+    backward pass consumes.  Returns (Z, H_Q, N) float32.
+    """
+    z, h_q, n, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    k = expand_kv(k, h_q)
+    s = jnp.einsum(
+        "zhnd,zhmd->zhnm", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    return jax.scipy.special.logsumexp(s, axis=-1)
+
+
+def attention_bwd_ref(q, k, v, do, causal=False, sm_scale=None):
+    """Reference gradients (dq, dk, dv) via jax.vjp of the naive forward.
+
+    Shapes mirror the inputs; GQA gradients for K/V are summed over each
+    query-head group, matching Eq. (2) of the paper generalized to GQA.
+    """
+
+    def f(q_, k_, v_):
+        return attention_ref(q_, k_, v_, causal=causal, sm_scale=sm_scale)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(do.astype(jnp.float32))

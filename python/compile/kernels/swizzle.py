@@ -1,0 +1,142 @@
+"""Workgroup-id remapping policies from the paper (Figs. 3, 7-11).
+
+The hardware dispatcher on a chiplet GPU assigns dispatch slot ``wid`` to
+XCD ``wid % num_xcd`` (chunked round-robin, chunk size 1 — paper Sec. 2.2).
+A *mapping policy* decides which logical unit of work ``(batch, head,
+row_block)`` a given dispatch slot executes.  Remapping the slot -> work
+function is the paper's entire mechanism: it is how software controls
+*where* (which XCD, hence which private L2) each piece of work runs.
+
+All arithmetic here is pure ``//`` and ``%`` so it works identically on
+Python ints, numpy ints, and traced JAX scalars (it is used inside the
+Pallas kernel's index_map as well as in host-side tests).  The same
+formulas are re-implemented in Rust (``rust/src/mapping``) and the two are
+cross-checked by ``python/tests/test_swizzle.py`` golden vectors.
+
+Conventions
+-----------
+* ``num_blocks``  = ceil(seqlen_q / BLOCK_M)  — row blocks per head.
+* Batch is the outermost dimension in every policy (the paper's Fig. 11
+  computes ``batch_offset = (wid // (blocks_per_head * NUM_Q_HEADS)) %
+  BATCH`` which is batch-outermost; its ``wid_per_batch = wid // BATCH``
+  line is a typo for ``wid % (heads * blocks)`` — see DESIGN.md).
+* Swizzled policies require ``num_heads % num_xcd == 0`` (true for every
+  configuration the paper evaluates: H in {8..128}, XCDs in {4, 8}).
+"""
+
+from __future__ import annotations
+
+POLICIES = (
+    "naive_block_first",
+    "swizzled_block_first",
+    "naive_head_first",
+    "swizzled_head_first",
+)
+
+
+def chiplet_swizzle(wgid, grid, num_xcd):
+    """GEMM-style chiplet swizzle (paper Fig. 3).
+
+    Remaps a linear workgroup id so that ids which the round-robin
+    dispatcher sends to the same XCD become *contiguous* in logical space:
+    XCD ``x`` processes logical ids ``[x * grid/num_xcd, ...)`` in order.
+    """
+    wgids_per_xcd = grid // num_xcd
+    xcd = wgid % num_xcd
+    local_wgid = wgid // num_xcd
+    return xcd * wgids_per_xcd + local_wgid
+
+
+def decode_naive_block_first(wid, batch, num_heads, num_blocks, num_xcd):
+    """Block-first iteration, no swizzle (paper Fig. 7).
+
+    Dispatch order: block0 of every head, then block1 of every head, ...
+    Round-robin then stripes *heads* across XCDs, splitting every ACC.
+    """
+    del batch, num_xcd
+    per_batch = num_heads * num_blocks
+    z = wid // per_batch
+    r = wid % per_batch
+    b = r // num_heads
+    h = r % num_heads
+    return z, h, b
+
+
+def decode_swizzled_block_first(wid, batch, num_heads, num_blocks, num_xcd):
+    """Block-first iteration + chiplet swizzle (paper Fig. 8, AITER's scheme).
+
+    XCD ``x`` is pinned to the contiguous head group
+    ``[x*heads_per_xcd, (x+1)*heads_per_xcd)`` and iterates block-first
+    *within* that group: h0 b0, h1 b0, ..., h0 b1, h1 b1, ...
+    Locality is preserved only when the number of head groups sharing data
+    (GQA groups) matches ``num_xcd``; for MHA each XCD serves
+    ``heads_per_xcd`` ACCs simultaneously, splitting its L2.
+    """
+    per_batch = num_heads * num_blocks
+    heads_per_xcd = num_heads // num_xcd
+    z = wid // per_batch
+    r = wid % per_batch
+    x = r % num_xcd          # XCD this slot lands on (round-robin)
+    j = r // num_xcd         # local slot index within the XCD
+    h = x * heads_per_xcd + j % heads_per_xcd
+    b = j // heads_per_xcd
+    return z, h, b
+
+
+def decode_naive_head_first(wid, batch, num_heads, num_blocks, num_xcd):
+    """Head-first iteration, no swizzle (paper Fig. 9, Triton default).
+
+    Dispatch order: all blocks of head0, then all blocks of head1, ...
+    Round-robin stripes each head's *blocks* across every XCD: the live
+    ACC's K/V get replicated into all eight L2s instead of one.
+    """
+    del batch, num_xcd
+    per_batch = num_heads * num_blocks
+    z = wid // per_batch
+    r = wid % per_batch
+    h = r // num_blocks
+    b = r % num_blocks
+    return z, h, b
+
+
+def decode_swizzled_head_first(wid, batch, num_heads, num_blocks, num_xcd):
+    """Swizzled Head-first mapping — the paper's contribution (Figs. 10-11).
+
+    XCD ``x`` processes heads ``[x*heads_per_xcd, (x+1)*heads_per_xcd)``
+    *one head at a time*, in block order: every row block of a head is
+    serviced by the same XCD, so the head's K/V tensors live in exactly one
+    L2 and are reused by all of its row blocks.
+    """
+    per_batch = num_heads * num_blocks
+    heads_per_xcd = num_heads // num_xcd
+    z = wid // per_batch
+    r = wid % per_batch
+    x = r % num_xcd          # XCD this slot lands on
+    j = r // num_xcd         # local slot index within the XCD
+    h = x * heads_per_xcd + j // num_blocks
+    b = j % num_blocks
+    return z, h, b
+
+
+_DECODERS = {
+    "naive_block_first": decode_naive_block_first,
+    "swizzled_block_first": decode_swizzled_block_first,
+    "naive_head_first": decode_naive_head_first,
+    "swizzled_head_first": decode_swizzled_head_first,
+}
+
+
+def decode(policy, wid, batch, num_heads, num_blocks, num_xcd):
+    """Map dispatch slot ``wid`` -> logical work ``(batch, head, row_block)``."""
+    if policy in ("swizzled_block_first", "swizzled_head_first"):
+        if num_heads % num_xcd != 0:
+            raise ValueError(
+                f"{policy} requires num_heads ({num_heads}) divisible by "
+                f"num_xcd ({num_xcd}); see DESIGN.md"
+            )
+    return _DECODERS[policy](wid, batch, num_heads, num_blocks, num_xcd)
+
+
+def xcd_of(wid, num_xcd):
+    """XCD a dispatch slot lands on under chunked round-robin, chunk=1."""
+    return wid % num_xcd

@@ -1,0 +1,185 @@
+"""Layer 2: the JAX compute graph — attention layers and a transformer block.
+
+This is the paper's "model" layer: multi-head / grouped-query attention
+built on the Layer-1 Pallas kernels, differentiable end-to-end through a
+``jax.custom_vjp`` that routes the backward pass through the Pallas FA2
+backward kernels (the configuration benchmarked in paper Sec. 4.6).
+
+Everything here is build-time only: ``aot.py`` lowers selected entry
+points to HLO text once, and the Rust coordinator executes the compiled
+artifacts — Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fa2, fa2_bwd
+
+
+class AttnParams(NamedTuple):
+    """Static kernel configuration threaded through the custom_vjp."""
+
+    causal: bool
+    sm_scale: float | None
+    block_m: int
+    block_n: int
+    policy: str
+    num_xcd: int
+
+
+DEFAULT_PARAMS = AttnParams(
+    causal=False,
+    sm_scale=None,
+    block_m=fa2.DEFAULT_BLOCK_M,
+    block_n=fa2.DEFAULT_BLOCK_N,
+    policy="swizzled_head_first",
+    num_xcd=fa2.DEFAULT_NUM_XCD,
+)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, params: AttnParams = DEFAULT_PARAMS):
+    """Differentiable FlashAttention2 (forward + backward both in Pallas)."""
+    o, _ = fa2.fa2_forward(
+        q,
+        k,
+        v,
+        causal=params.causal,
+        sm_scale=params.sm_scale,
+        block_m=params.block_m,
+        block_n=params.block_n,
+        policy=params.policy,
+        num_xcd=params.num_xcd,
+    )
+    return o
+
+
+def _fa_fwd(q, k, v, params):
+    o, lse = fa2.fa2_forward(
+        q,
+        k,
+        v,
+        causal=params.causal,
+        sm_scale=params.sm_scale,
+        block_m=params.block_m,
+        block_n=params.block_n,
+        policy=params.policy,
+        num_xcd=params.num_xcd,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(params, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = fa2_bwd.fa2_backward(
+        q,
+        k,
+        v,
+        o,
+        lse,
+        do,
+        causal=params.causal,
+        sm_scale=params.sm_scale,
+        block_m=params.block_m,
+        block_n=params.block_n,
+        policy=params.policy,
+        num_xcd=params.num_xcd,
+    )
+    return dq.astype(q.dtype), dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Attention layers (projections + kernel), MHA and GQA.
+# ---------------------------------------------------------------------------
+
+
+class LayerWeights(NamedTuple):
+    """One transformer block's weights.
+
+    wq: (D_MODEL, H_Q*D_HEAD); wk/wv: (D_MODEL, H_K*D_HEAD);
+    wo: (H_Q*D_HEAD, D_MODEL); w1: (D_MODEL, D_FF); w2: (D_FF, D_MODEL).
+    """
+
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    w1: jax.Array
+    w2: jax.Array
+
+
+def init_layer(key, d_model, num_q_heads, num_kv_heads, head_dim, d_ff=None,
+               dtype=jnp.float32):
+    """Xavier-ish init of one block's weights."""
+    d_ff = d_ff or 4 * d_model
+    ks = jax.random.split(key, 6)
+
+    def w(k, shape):
+        fan_in = shape[0]
+        return (jax.random.normal(k, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+    return LayerWeights(
+        wq=w(ks[0], (d_model, num_q_heads * head_dim)),
+        wk=w(ks[1], (d_model, num_kv_heads * head_dim)),
+        wv=w(ks[2], (d_model, num_kv_heads * head_dim)),
+        wo=w(ks[3], (num_q_heads * head_dim, d_model)),
+        w1=w(ks[4], (d_model, d_ff)),
+        w2=w(ks[5], (d_ff, d_model)),
+    )
+
+
+def _split_heads(x, num_heads, head_dim):
+    z, n, _ = x.shape
+    return x.reshape(z, n, num_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    z, h, n, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(z, n, h * d)
+
+
+def attention_layer(x, w: LayerWeights, num_q_heads, num_kv_heads, head_dim,
+                    params: AttnParams = DEFAULT_PARAMS):
+    """Self-attention sub-block: QKV projection -> FA2 -> output projection."""
+    q = _split_heads(x @ w.wq, num_q_heads, head_dim)
+    k = _split_heads(x @ w.wk, num_kv_heads, head_dim)
+    v = _split_heads(x @ w.wv, num_kv_heads, head_dim)
+    o = flash_attention(q, k, v, params)
+    return _merge_heads(o.astype(x.dtype)) @ w.wo
+
+
+def _rms_norm(x, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def transformer_block(x, w: LayerWeights, num_q_heads, num_kv_heads, head_dim,
+                      params: AttnParams = DEFAULT_PARAMS):
+    """Pre-norm transformer block: x + Attn(norm(x)); x + MLP(norm(x))."""
+    x = x + attention_layer(
+        _rms_norm(x), w, num_q_heads, num_kv_heads, head_dim, params
+    )
+    h = _rms_norm(x) @ w.w1
+    return x + (jax.nn.gelu(h) @ w.w2)
+
+
+def block_loss(w: LayerWeights, x, y, num_q_heads, num_kv_heads, head_dim,
+               params: AttnParams = DEFAULT_PARAMS):
+    """Mean-squared-error training loss through one block (for grads)."""
+    out = transformer_block(x, w, num_q_heads, num_kv_heads, head_dim, params)
+    return jnp.mean((out - y) ** 2)
+
+
+def block_grad(w, x, y, num_q_heads, num_kv_heads, head_dim,
+               params: AttnParams = DEFAULT_PARAMS):
+    """Loss + weight gradients; the backward runs the Pallas bwd kernels."""
+    return jax.value_and_grad(block_loss)(
+        w, x, y, num_q_heads, num_kv_heads, head_dim, params
+    )

@@ -1,0 +1,148 @@
+"""Pallas FA2 forward kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for Layer 1: every mapping policy must
+be numerically identical (swizzling only reorders WHERE work runs, never
+WHAT it computes), across causal/non-causal, MHA/GQA, dtypes and shapes
+(hypothesis sweep).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fa2, ref, swizzle
+
+
+def make_qkv(z, h_q, h_k, n, d, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (z, h_q, n, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (z, h_k, n, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (z, h_k, n, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def assert_matches_ref(q, k, v, causal=False, atol=2e-5, **kw):
+    o, lse = fa2.fa2_forward(q, k, v, causal=causal, **kw)
+    o_ref = ref.attention_ref(q, k, v, causal=causal)
+    lse_ref = ref.attention_lse_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref), atol=atol, rtol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(lse), np.asarray(lse_ref), atol=atol, rtol=1e-3)
+
+
+@pytest.mark.parametrize("policy", swizzle.POLICIES)
+def test_policies_match_ref(policy):
+    """All four mapping policies compute identical attention."""
+    q, k, v = make_qkv(1, 8, 8, 128, 32)
+    assert_matches_ref(q, k, v, block_m=32, block_n=32,
+                       policy=policy, num_xcd=4)
+
+
+@pytest.mark.parametrize("policy", swizzle.POLICIES)
+def test_policies_bitwise_identical(policy):
+    """Swizzling must not change the numerics AT ALL vs naive head-first."""
+    q, k, v = make_qkv(1, 8, 8, 128, 32, seed=7)
+    o_base, lse_base = fa2.fa2_forward(
+        q, k, v, block_m=32, block_n=32,
+        policy="naive_head_first", num_xcd=4)
+    o, lse = fa2.fa2_forward(
+        q, k, v, block_m=32, block_n=32, policy=policy, num_xcd=4)
+    assert np.array_equal(np.asarray(o), np.asarray(o_base))
+    assert np.array_equal(np.asarray(lse), np.asarray(lse_base))
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("h_k", [8, 4, 2, 1])
+def test_gqa_group_sizes(causal, h_k):
+    """GQA with group sizes 1, 2, 4, 8 (MQA)."""
+    q, k, v = make_qkv(1, 8, h_k, 128, 32, seed=h_k)
+    assert_matches_ref(q, k, v, causal=causal,
+                       block_m=32, block_n=32, num_xcd=4)
+
+
+def test_causal_first_row_block():
+    """Causal masking of the very first row block (row 0 sees only col 0)."""
+    q, k, v = make_qkv(1, 4, 4, 64, 16, seed=3)
+    o, _ = fa2.fa2_forward(q, k, v, causal=True,
+                           block_m=16, block_n=16, num_xcd=4)
+    # Row 0 attends only to position 0 => output row 0 == v[..., 0, :]
+    np.testing.assert_allclose(
+        np.asarray(o)[:, :, 0, :], np.asarray(v)[:, :, 0, :],
+        atol=1e-5, rtol=1e-5)
+
+
+def test_batch_gt_one():
+    q, k, v = make_qkv(4, 8, 8, 64, 32, seed=11)
+    assert_matches_ref(q, k, v, block_m=32, block_n=32, num_xcd=8)
+
+
+def test_block_m_ne_block_n():
+    """Paper's config uses BLOCK_M=128, BLOCK_N=64 (rectangular tiles)."""
+    q, k, v = make_qkv(1, 8, 8, 256, 32, seed=5)
+    assert_matches_ref(q, k, v, block_m=64, block_n=32, num_xcd=4)
+    assert_matches_ref(q, k, v, causal=True,
+                       block_m=64, block_n=32, num_xcd=4)
+
+
+def test_bf16_inputs():
+    q, k, v = make_qkv(1, 8, 8, 128, 32, dtype=jnp.bfloat16, seed=9)
+    o, _ = fa2.fa2_forward(q, k, v, block_m=32, block_n=32, num_xcd=4)
+    assert o.dtype == jnp.bfloat16
+    o_ref = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref), atol=2e-2, rtol=2e-2)
+
+
+def test_sm_scale_override():
+    q, k, v = make_qkv(1, 4, 4, 64, 16, seed=13)
+    o, _ = fa2.fa2_forward(q, k, v, sm_scale=0.5,
+                           block_m=16, block_n=16, num_xcd=4)
+    o_ref = ref.attention_ref(q, k, v, sm_scale=0.5)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(o_ref), atol=2e-5, rtol=1e-3)
+
+
+def test_single_head_single_block():
+    """Degenerate grid: 1 workgroup total."""
+    q, k, v = make_qkv(1, 1, 1, 32, 16, seed=17)
+    assert_matches_ref(q, k, v, block_m=32, block_n=32,
+                       policy="naive_head_first", num_xcd=1)
+
+
+def test_shape_validation():
+    q, k, v = make_qkv(1, 8, 8, 100, 32)  # 100 not divisible by 32
+    with pytest.raises(AssertionError):
+        fa2.fa2_forward(q, k, v, block_m=32, block_n=32)
+    q, k, v = make_qkv(1, 6, 4, 64, 32)  # 4 does not divide 6
+    with pytest.raises(AssertionError):
+        fa2.fa2_forward(q, k, v, block_m=32, block_n=32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    z=st.integers(1, 2),
+    h_exp=st.integers(0, 2),          # h_q in {4, 8, 16}
+    group_exp=st.integers(0, 2),      # GQA group in {1, 2, 4}
+    n_blocks=st.integers(1, 4),       # n in {32..128}
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_kernel_property_sweep(z, h_exp, group_exp, n_blocks, d, causal,
+                               dtype, seed):
+    """Hypothesis sweep of shapes/dtypes/causal/GQA against the oracle."""
+    h_q = 4 * 2 ** h_exp
+    group = 2 ** group_exp
+    h_k = h_q // group
+    n = 32 * n_blocks
+    q, k, v = make_qkv(z, h_q, h_k, n, d, dtype=dtype, seed=seed)
+    o, _ = fa2.fa2_forward(q, k, v, causal=causal,
+                           block_m=32, block_n=32, num_xcd=4)
+    o_ref = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref), atol=tol, rtol=tol)

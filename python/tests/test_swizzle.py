@@ -1,0 +1,209 @@
+"""Tests for the workgroup-mapping policies (paper Figs. 3, 7-11).
+
+Covers: bijectivity of every policy over the full grid, the locality
+invariants each policy promises (which XCD sees which heads), golden
+vectors for the paper's illustrative configuration (8 heads, 128 blocks,
+4 XCDs — Figs. 7-10), and cross-checks against the Rust implementation's
+golden vectors (kept in rust/src/mapping/golden.rs, generated from here).
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import swizzle
+
+
+def full_grid(policy, batch, heads, blocks, xcd):
+    """Decode the whole grid: list of (z, h, b) in dispatch-slot order."""
+    total = batch * heads * blocks
+    return [
+        swizzle.decode(policy, w, batch, heads, blocks, xcd)
+        for w in range(total)
+    ]
+
+
+def xcd_assignment(policy, batch, heads, blocks, xcd):
+    """Map (z, h, b) -> XCD under chunked round-robin, chunk = 1."""
+    out = {}
+    for w, work in enumerate(full_grid(policy, batch, heads, blocks, xcd)):
+        out[work] = swizzle.xcd_of(w, xcd)
+    return out
+
+
+DIVISIBLE_CONFIGS = [
+    # (batch, heads, blocks, xcd) — paper-like configurations
+    (1, 8, 128, 4),    # the illustration config of Figs. 7-10
+    (1, 8, 16, 8),
+    (2, 16, 8, 8),
+    (1, 128, 32, 8),   # DeepSeek-V3-like head count on MI300X
+    (4, 64, 4, 8),
+    (1, 8, 7, 4),      # blocks not divisible by xcd
+    (3, 32, 5, 8),
+]
+
+
+@pytest.mark.parametrize("policy", swizzle.POLICIES)
+@pytest.mark.parametrize("cfg", DIVISIBLE_CONFIGS)
+def test_bijective(policy, cfg):
+    """Every policy must be a bijection dispatch-slot -> (z, h, b)."""
+    batch, heads, blocks, xcd = cfg
+    grid = full_grid(policy, batch, heads, blocks, xcd)
+    assert len(set(grid)) == len(grid) == batch * heads * blocks
+    for z, h, b in grid:
+        assert 0 <= z < batch and 0 <= h < heads and 0 <= b < blocks
+
+
+@pytest.mark.parametrize("cfg", DIVISIBLE_CONFIGS)
+def test_swizzled_head_first_confines_heads(cfg):
+    """SHF invariant: all blocks of a (batch, head) land on ONE XCD."""
+    batch, heads, blocks, xcd = cfg
+    assign = xcd_assignment("swizzled_head_first", batch, heads, blocks, xcd)
+    for z in range(batch):
+        for h in range(heads):
+            xcds = {assign[(z, h, b)] for b in range(blocks)}
+            assert len(xcds) == 1, f"head {h} split across XCDs {xcds}"
+
+
+@pytest.mark.parametrize("cfg", DIVISIBLE_CONFIGS)
+def test_swizzled_head_first_balances_heads(cfg):
+    """SHF distributes heads evenly: heads/xcd per XCD."""
+    batch, heads, blocks, xcd = cfg
+    assign = xcd_assignment("swizzled_head_first", batch, heads, blocks, xcd)
+    per_xcd = {}
+    for (z, h, b), x in assign.items():
+        per_xcd.setdefault(x, set()).add(h)
+    for x, hs in per_xcd.items():
+        assert len(hs) == heads // xcd
+
+
+@pytest.mark.parametrize("cfg", DIVISIBLE_CONFIGS)
+def test_naive_block_first_interleaves_acc_streams(cfg):
+    """NBF anti-invariant (the locality loss the paper identifies): when
+    heads > xcd, an XCD's *consecutive* slots alternate between different
+    heads (ACCs), so its L2 must hold heads/xcd K/V streams concurrently.
+    (When xcd | heads, each head IS pinned to XCD h % xcd — Fig. 7's
+    caption — but interleaved with heads/xcd - 1 other ACCs.)"""
+    batch, heads, blocks, xcd = cfg
+    if heads <= xcd or blocks < 2:
+        pytest.skip("needs > xcd heads to interleave")
+    grid = full_grid("naive_block_first", batch, heads, blocks, xcd)
+    # XCD0's first heads/xcd slots are all DIFFERENT heads, same block.
+    xcd0 = [grid[w] for w in range(0, xcd * (heads // xcd), xcd)]
+    assert len({h for (_, h, _) in xcd0}) == heads // xcd
+    assert len({b for (_, _, b) in xcd0}) == 1
+
+
+@pytest.mark.parametrize("cfg", DIVISIBLE_CONFIGS)
+def test_naive_head_first_stripes_blocks(cfg):
+    """NHF: consecutive blocks of one head land on consecutive XCDs."""
+    batch, heads, blocks, xcd = cfg
+    if blocks < xcd:
+        pytest.skip("needs >= xcd blocks to stripe")
+    assign = xcd_assignment("naive_head_first", batch, heads, blocks, xcd)
+    xcds = [assign[(0, 0, b)] for b in range(min(blocks, xcd))]
+    assert xcds == list(range(xcd))
+
+
+def test_swizzled_block_first_pins_head_groups():
+    """SBF (Fig. 8): XCD x serves heads [x*hpx, (x+1)*hpx) — and with MHA
+    serves ALL of them interleaved (multiple ACCs per XCD at once)."""
+    heads, blocks, xcd = 8, 128, 4
+    assign = xcd_assignment("swizzled_block_first", 1, heads, blocks, xcd)
+    hpx = heads // xcd
+    for h in range(heads):
+        expected_xcd = h // hpx
+        xcds = {assign[(0, h, b)] for b in range(blocks)}
+        assert xcds == {expected_xcd}
+    # Interleaving: the first two slots of XCD0 are different heads.
+    grid = full_grid("swizzled_block_first", 1, heads, blocks, xcd)
+    xcd0_slots = [grid[w] for w in range(0, 4 * xcd, xcd)]
+    assert xcd0_slots[0][1] != xcd0_slots[1][1]
+
+
+def test_paper_figure_layout():
+    """Golden check of Figs. 7-10 captions (8 qheads, 128 blocks, 4 XCDs):
+    NBF/SBF/SHF head->XCD layouts as printed in the paper."""
+    heads, blocks, xcd = 8, 128, 4
+
+    def heads_on_xcd(policy):
+        assign = xcd_assignment(policy, 1, heads, blocks, xcd)
+        out = [set() for _ in range(xcd)]
+        for (z, h, b), x in assign.items():
+            out[x].add(h)
+        return [sorted(s) for s in out]
+
+    # Fig. 7: XCD0: HQ 0,4 | XCD1: HQ 1,5 | XCD2: HQ 2,6 | XCD3: HQ 3,7
+    assert heads_on_xcd("naive_block_first") == [
+        [0, 4], [1, 5], [2, 6], [3, 7]]
+    # Fig. 8: XCD0: HQ 0,1 | XCD1: HQ 2,3 | XCD2: HQ 4,5 | XCD3: HQ 6,7
+    assert heads_on_xcd("swizzled_block_first") == [
+        [0, 1], [2, 3], [4, 5], [6, 7]]
+    # Fig. 9: every XCD sees all heads
+    assert heads_on_xcd("naive_head_first") == [list(range(8))] * 4
+    # Fig. 10: XCD0: HQ 0,1 | XCD1: HQ 2,3 | XCD2: HQ 4,5 | XCD3: HQ 6,7
+    assert heads_on_xcd("swizzled_head_first") == [
+        [0, 1], [2, 3], [4, 5], [6, 7]]
+
+
+def test_shf_one_acc_at_a_time():
+    """SHF services one ACC (head) at a time per XCD: the sequence of heads
+    seen by an XCD's consecutive local slots is non-decreasing in runs of
+    `blocks` slots."""
+    heads, blocks, xcd = 8, 16, 4
+    grid = full_grid("swizzled_head_first", 1, heads, blocks, xcd)
+    for x in range(xcd):
+        local = [grid[w] for w in range(x, len(grid), xcd)]
+        head_seq = [h for (_, h, _) in local]
+        # runs of `blocks` identical heads
+        for i in range(0, len(head_seq), blocks):
+            assert len(set(head_seq[i:i + blocks])) == 1
+        # and within a run blocks are in order 0..blocks-1
+        blk_seq = [b for (_, _, b) in local[:blocks]]
+        assert blk_seq == list(range(blocks))
+
+
+def test_chiplet_swizzle_matches_paper_fig3():
+    """Fig. 3 arithmetic: grid=16, 4 XCDs."""
+    grid, xcd = 16, 4
+    remapped = [swizzle.chiplet_swizzle(w, grid, xcd) for w in range(grid)]
+    assert sorted(remapped) == list(range(grid))  # bijective
+    # wid 0,4,8,12 (which round-robin to XCD0) map to logical 0,1,2,3
+    assert [remapped[w] for w in (0, 4, 8, 12)] == [0, 1, 2, 3]
+    # wid 1,5,9,13 (XCD1) -> logical 4..7
+    assert [remapped[w] for w in (1, 5, 9, 13)] == [4, 5, 6, 7]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    batch=st.integers(1, 4),
+    heads_mult=st.integers(1, 16),
+    blocks=st.integers(1, 64),
+    xcd=st.sampled_from([2, 4, 8]),
+    policy=st.sampled_from(swizzle.POLICIES),
+)
+def test_bijective_property(batch, heads_mult, blocks, xcd, policy):
+    """Property: bijectivity holds for arbitrary divisible configs."""
+    heads = heads_mult * xcd
+    grid = full_grid(policy, batch, heads, blocks, xcd)
+    assert len(set(grid)) == batch * heads * blocks
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    heads_mult=st.integers(1, 8),
+    blocks=st.integers(1, 32),
+    xcd=st.sampled_from([2, 4, 8]),
+)
+def test_shf_locality_property(heads_mult, blocks, xcd):
+    """Property: SHF never splits a head across XCDs."""
+    heads = heads_mult * xcd
+    assign = xcd_assignment("swizzled_head_first", 1, heads, blocks, xcd)
+    for h in range(heads):
+        assert len({assign[(0, h, b)] for b in range(blocks)}) == 1
+
+
+def test_indivisible_heads_raises():
+    with pytest.raises(ValueError):
+        swizzle.decode("swizzled_head_first", 0, 1, 6, 4, 8)
+    with pytest.raises(ValueError):
+        swizzle.decode("swizzled_block_first", 0, 1, 6, 4, 8)

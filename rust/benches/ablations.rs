@@ -1,0 +1,94 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * dispatch chunk size (the driver detail the paper warns "is subject
+//!   to change across GPU generations"): a swizzle designed for chunk=1
+//!   degrades when the hardware batches dispatch differently;
+//! * L2 capacity per XCD (when does SHF's advantage appear?);
+//! * number of XCDs (Fig. 1's architecture evolution: unified -> dual
+//!   -> quad -> MI300X-style octo);
+//! * prefetch depth (double buffering) and launch stagger.
+
+mod common;
+
+use numa_attn::attn::AttnConfig;
+use numa_attn::mapping::Policy;
+use numa_attn::metrics::Table;
+use numa_attn::sim::{simulate, SimConfig};
+use numa_attn::topology::presets;
+
+fn main() {
+    let base_cfg = AttnConfig::mha(2, 64, 32768, 128);
+
+    // --- chunk size ablation -------------------------------------------
+    let mut t = Table::new(&["dispatch chunk", "SHF hit %", "SHF rel perf vs chunk=1"]);
+    let mut base_time = None;
+    for chunk in [1usize, 2, 4, 8] {
+        let mut topo = presets::mi300x();
+        topo.dispatch_chunk = chunk;
+        let r = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
+        let b = *base_time.get_or_insert(r.est_total_sec);
+        t.row(vec![
+            chunk.to_string(),
+            format!("{:.1}", r.l2_hit_pct()),
+            format!("{:.3}", b / r.est_total_sec),
+        ]);
+    }
+    println!("== ablation: dispatch chunk size (swizzle assumes chunk=1) ==\n{}", t.render());
+
+    // --- L2 capacity ablation ------------------------------------------
+    let mut t = Table::new(&["L2/XCD", "SHF hit %", "NBF hit %", "SHF/NBF speedup"]);
+    for mb in [1u64, 2, 4, 8, 16] {
+        let mut topo = presets::mi300x();
+        topo.l2_bytes_per_xcd = mb * 1024 * 1024;
+        let shf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
+        let nbf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::NaiveBlockFirst, &topo, 2));
+        t.row(vec![
+            format!("{mb} MiB"),
+            format!("{:.1}", shf.l2_hit_pct()),
+            format!("{:.1}", nbf.l2_hit_pct()),
+            format!("{:.3}", nbf.est_total_sec / shf.est_total_sec),
+        ]);
+    }
+    println!("== ablation: L2 capacity per XCD ==\n{}", t.render());
+
+    // --- XCD count (Fig. 1 evolution) -----------------------------------
+    let mut t = Table::new(&["topology", "XCDs", "SHF/NBF speedup", "NBF hit %"]);
+    for topo in [
+        presets::unified_single_die(),
+        presets::dual_die(),
+        presets::quad_die(),
+        presets::mi300x(),
+    ] {
+        let shf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
+        let nbf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::NaiveBlockFirst, &topo, 2));
+        t.row(vec![
+            topo.name.clone(),
+            topo.num_xcds.to_string(),
+            format!("{:.3}", nbf.est_total_sec / shf.est_total_sec),
+            format!("{:.1}", nbf.l2_hit_pct()),
+        ]);
+    }
+    println!("== ablation: disaggregation level (paper Fig. 1) ==\n{}", t.render());
+
+    // --- prefetch depth / launch stagger --------------------------------
+    let topo = presets::mi300x();
+    let mut t = Table::new(&["prefetch", "stagger", "SHF hit %", "NBF hit %"]);
+    for (pf, st) in [(0u32, 20u64), (1, 20), (2, 20), (1, 0), (1, 60)] {
+        let mk = |p| SimConfig {
+            prefetch_depth: pf,
+            launch_stagger: st,
+            ..SimConfig::sampled(p, &topo, 2)
+        };
+        let shf = simulate(&topo, &base_cfg, &mk(Policy::SwizzledHeadFirst));
+        let nbf = simulate(&topo, &base_cfg, &mk(Policy::NaiveBlockFirst));
+        t.row(vec![
+            pf.to_string(),
+            st.to_string(),
+            format!("{:.1}", shf.l2_hit_pct()),
+            format!("{:.1}", nbf.l2_hit_pct()),
+        ]);
+    }
+    println!("== ablation: double buffering & launch stagger ==\n{}", t.render());
+
+    common::check(true, "ablation sweep completed");
+}

@@ -1,0 +1,44 @@
+//! Shared bench scaffolding: every `figN` bench regenerates its paper
+//! figure on the MI300X topology, prints the same rows the paper plots,
+//! asserts the headline *shape* claims, and reports generation time.
+//!
+//! `NUMA_ATTN_FULL=1 cargo bench` runs the full paper grids; the default
+//! is the quick subset (the extreme + a small corner of each sweep).
+
+use numa_attn::figures::FigureResult;
+use numa_attn::topology::{presets, Topology};
+
+pub fn topo() -> Topology {
+    presets::mi300x()
+}
+
+pub fn full_sweep() -> bool {
+    std::env::var("NUMA_ATTN_FULL").is_ok_and(|v| v == "1")
+}
+
+/// Render the regenerated figure and time the regeneration.
+pub fn run_figure(name: &str, f: impl Fn(&Topology, bool) -> FigureResult) -> FigureResult {
+    let topo = topo();
+    let quick = !full_sweep();
+    let t0 = std::time::Instant::now();
+    let fig = f(&topo, quick);
+    let dt = t0.elapsed();
+    println!("{}", fig.render());
+    println!(
+        "[bench] {name}: regenerated {} rows in {:.2} s ({})",
+        fig.rows.len(),
+        dt.as_secs_f64(),
+        if quick { "quick sweep; NUMA_ATTN_FULL=1 for the full grid" } else { "full paper grid" }
+    );
+    fig
+}
+
+/// Assert with a paper-shaped message instead of a panic wall.
+pub fn check(cond: bool, what: &str) {
+    if cond {
+        println!("[check] PASS: {what}");
+    } else {
+        println!("[check] FAIL: {what}");
+        std::process::exit(1);
+    }
+}

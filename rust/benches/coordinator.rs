@@ -1,0 +1,84 @@
+//! Serving-coordinator benchmarks: end-to-end latency/throughput of the
+//! router + batcher + PJRT execution path on the AOT artifacts, plus the
+//! batcher/router micro-costs (the L3 §Perf target: batcher overhead
+//! << PJRT execute time).
+//!
+//! Requires `make artifacts` to have produced `artifacts/`.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use numa_attn::coordinator::{AttentionService, BatcherConfig, BatcherCore, Router, ServiceConfig};
+use numa_attn::runtime::Manifest;
+use numa_attn::util::bench::Harness;
+use numa_attn::workload::{Request, RequestGenerator};
+
+fn main() {
+    let artifact_dir = std::path::Path::new("artifacts");
+    if !artifact_dir.join("manifest.json").exists() {
+        println!("[bench] coordinator: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    }
+    let mut h = Harness::new("coordinator");
+
+    // --- micro: router + batcher ----------------------------------------
+    let manifest = Manifest::load(artifact_dir).unwrap();
+    let router = Router::from_manifest(&manifest);
+    let mut gen = RequestGenerator::new(3, router.bucket_lengths());
+    let reqs: Vec<Request> = gen.take(10_000);
+    h.run("router: 10k routes", 20, || {
+        let mut n = 0usize;
+        for r in &reqs {
+            if router.route(r).is_ok() {
+                n += 1;
+            }
+        }
+        std::hint::black_box(n);
+    });
+
+    h.run("batcher: 10k push/release", 20, || {
+        let mut b = BatcherCore::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let t = Instant::now();
+        let mut released = 0usize;
+        for r in &reqs {
+            let name = router.route(r).unwrap();
+            if let Some(batch) = b.push(name, r.clone(), t) {
+                released += batch.requests.len();
+            }
+        }
+        std::hint::black_box(released);
+    });
+
+    // --- end-to-end service ----------------------------------------------
+    let service = AttentionService::start(ServiceConfig {
+        artifact_dir: artifact_dir.to_path_buf(),
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+    })
+    .expect("service start");
+    let lengths = service.router().bucket_lengths();
+    let mut gen = RequestGenerator::new(7, lengths);
+
+    for batch_requests in [8usize, 32] {
+        let reqs = gen.take(batch_requests);
+        let t0 = Instant::now();
+        let waiters: Vec<_> = reqs
+            .into_iter()
+            .map(|r| service.submit(r).unwrap())
+            .collect();
+        let ok = waiters.into_iter().filter(|_| true).map(|w| w.wait()).filter(Result::is_ok).count();
+        let dt = t0.elapsed();
+        println!(
+            "[bench] serve {batch_requests} reqs: {:.1} ms total, {:.2} ms/req, {:.1} req/s ({ok} ok)",
+            dt.as_secs_f64() * 1e3,
+            dt.as_secs_f64() * 1e3 / batch_requests as f64,
+            batch_requests as f64 / dt.as_secs_f64()
+        );
+    }
+    let m = service.shutdown();
+    println!(
+        "[bench] service metrics: {} reqs, {} batches, {} stacked, queue p99 {} us, exec mean {:.0} us",
+        m.requests, m.batches, m.stacked_executions, m.queue_wait.p99_us, m.exec.mean_us
+    );
+    common::check(m.errors == 0, "no serving errors");
+}

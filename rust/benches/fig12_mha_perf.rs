@@ -1,0 +1,37 @@
+//! Paper Fig. 12: MHA performance relative to Swizzled Head-first across
+//! batch sizes (1-8) and sequence lengths (8K-128K).
+//!
+//! Reproduction targets (shape, not absolute numbers):
+//! * all policies comparable at small head counts;
+//! * block-first degrades as heads/sequence/batch grow;
+//! * at H_Q=128, N_CTX=128K the gap reaches ~1.5x ("up to 50% higher").
+
+mod common;
+
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+
+fn main() {
+    let fig = common::run_figure("fig12", figures::fig12);
+
+    let extreme = "H=128 N=128K B=8";
+    let nbf = fig.value(extreme, Policy::NaiveBlockFirst).unwrap();
+    let sbf = fig.value(extreme, Policy::SwizzledBlockFirst).unwrap();
+    let shf = fig.value(extreme, Policy::SwizzledHeadFirst).unwrap();
+    common::check((shf - 1.0).abs() < 1e-9, "SHF is the normalization baseline");
+    common::check(
+        nbf < 0.75 && sbf < 0.75,
+        &format!("block-first loses >=25% at the extreme config (NBF {nbf:.3}, SBF {sbf:.3})"),
+    );
+    common::check(
+        1.0 / nbf >= 1.3,
+        &format!("SHF speedup over block-first reaches paper scale ({:.2}x)", 1.0 / nbf),
+    );
+
+    let small = "H=8 N=8K B=1";
+    let nbf_small = fig.value(small, Policy::NaiveBlockFirst).unwrap();
+    common::check(
+        nbf_small > 0.9,
+        &format!("small configs perform similarly across policies (NBF {nbf_small:.3})"),
+    );
+}

@@ -1,0 +1,36 @@
+//! Paper Fig. 13: aggregate L2 cache hit rates for the MHA sweep
+//! (2K-128K context, 1-8 batch, 8-128 heads).
+//!
+//! Reproduction targets:
+//! * Swizzled Head-first sustains high hit rates (80-97%) everywhere;
+//! * block-first approaches collapse toward ~1% at H=128 / 128K;
+//! * with few heads / short sequences all approaches are high.
+
+mod common;
+
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+
+fn main() {
+    let fig = common::run_figure("fig13", figures::fig13);
+
+    let extreme = "H=128 N=128K B=8";
+    let shf = fig.value(extreme, Policy::SwizzledHeadFirst).unwrap();
+    let nbf = fig.value(extreme, Policy::NaiveBlockFirst).unwrap();
+    common::check(
+        shf > 80.0,
+        &format!("SHF sustains >80% L2 hit rate at the extreme ({shf:.1}%)"),
+    );
+    common::check(
+        nbf < 20.0,
+        &format!("block-first collapses at the extreme ({nbf:.1}%)"),
+    );
+
+    let small = "H=8 N=2K B=1";
+    let nbf_small = fig.value(small, Policy::NaiveBlockFirst).unwrap();
+    let shf_small = fig.value(small, Policy::SwizzledHeadFirst).unwrap();
+    common::check(
+        nbf_small > 80.0 && shf_small > 80.0,
+        &format!("all approaches ~90% at the small corner (NBF {nbf_small:.1}%, SHF {shf_small:.1}%)"),
+    );
+}

@@ -1,0 +1,36 @@
+//! Paper Fig. 14: Grouped Query Attention (8 KV heads — Llama-3
+//! 8B/70B/405B) performance relative to Swizzled Head-first.
+//!
+//! Reproduction targets:
+//! * both swizzled approaches achieve similar performance (the 8 KV
+//!   groups match the 8 XCDs, so Swizzled Block-first co-locates too);
+//! * Naive Block-first degrades substantially at higher query head
+//!   counts and longer sequences.
+
+mod common;
+
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+
+fn main() {
+    let fig = common::run_figure("fig14", figures::fig14);
+
+    let extreme = "llama3-405b H_Q=128 N=128K B=8";
+    let sbf = fig.value(extreme, Policy::SwizzledBlockFirst).unwrap();
+    let nbf = fig.value(extreme, Policy::NaiveBlockFirst).unwrap();
+    common::check(
+        sbf > 0.95,
+        &format!("Swizzled Block-first matches SHF on GQA with 8 KV heads ({sbf:.3})"),
+    );
+    common::check(
+        nbf < 0.9,
+        &format!("Naive Block-first degrades on GQA at scale ({nbf:.3})"),
+    );
+
+    let small = "llama3-8b H_Q=32 N=8K B=1";
+    let nbf_small = fig.value(small, Policy::NaiveBlockFirst).unwrap();
+    common::check(
+        nbf_small > 0.85,
+        &format!("H_Q=32 keeps policies comparable ({nbf_small:.3})"),
+    );
+}

@@ -1,0 +1,42 @@
+//! Paper Fig. 15 / Sec. 4.5 case study: DeepSeek-V3 prefill — MHA with
+//! 128 query AND 128 KV heads, D_HEAD = 56 — across 2K-128K context and
+//! batch 1-8, relative to Swizzled Head-first.
+//!
+//! Reproduction targets:
+//! * SHF is superior across configurations, especially at long context;
+//! * Naive Block-first is worst at 128K;
+//! * the smaller head dimension lowers ABSOLUTE performance for every
+//!   method (checked via the achieved-TFLOP/s of a direct sim run).
+
+mod common;
+
+use numa_attn::attn::AttnConfig;
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+use numa_attn::sim::{simulate, SimConfig};
+
+fn main() {
+    let fig = common::run_figure("fig15", figures::fig15);
+
+    let extreme = "N=128K B=8";
+    let nbf = fig.value(extreme, Policy::NaiveBlockFirst).unwrap();
+    let shf = fig.value(extreme, Policy::SwizzledHeadFirst).unwrap();
+    common::check((shf - 1.0).abs() < 1e-9, "SHF is the baseline");
+    common::check(
+        nbf < 0.95,
+        &format!("Naive Block-first is worst at 128K ({nbf:.3})"),
+    );
+
+    // D_HEAD=56 lowers absolute performance vs D=128 at the same shape.
+    let topo = common::topo();
+    let sc = SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2);
+    let d56 = simulate(&topo, &AttnConfig::mha(1, 128, 32768, 56), &sc);
+    let d128 = simulate(&topo, &AttnConfig::mha(1, 128, 32768, 128), &sc);
+    common::check(
+        d56.achieved_tflops < d128.achieved_tflops,
+        &format!(
+            "D=56 lowers absolute performance ({:.0} vs {:.0} TFLOP/s)",
+            d56.achieved_tflops, d128.achieved_tflops
+        ),
+    );
+}

@@ -1,0 +1,30 @@
+//! Paper Fig. 16 / Sec. 4.6: FlashAttention2 BACKWARD pass (dK/dV + dQ
+//! kernels) with H_Q = 128, speedup of each mapping over Naive
+//! Block-first across 8K-128K context.
+//!
+//! Reproduction targets:
+//! * Swizzled Head-first consistently >= the other mappings;
+//! * the speedup is MODEST (paper: ~1.10x at 128K) because the backward
+//!   pass's extra scalar work makes it less memory-bound.
+
+mod common;
+
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+
+fn main() {
+    let fig = common::run_figure("fig16", figures::fig16);
+
+    let extreme = "N=128K B=1";
+    let shf = fig.value(extreme, Policy::SwizzledHeadFirst).unwrap();
+    let nbf = fig.value(extreme, Policy::NaiveBlockFirst).unwrap();
+    common::check((nbf - 1.0).abs() < 1e-9, "NBF is the Fig. 16 baseline");
+    common::check(
+        shf >= 1.0,
+        &format!("SHF speeds up the backward pass ({shf:.3}x)"),
+    );
+    common::check(
+        shf < 1.4,
+        &format!("backward gains are modest, as in the paper ({shf:.3}x < 1.4x)"),
+    );
+}

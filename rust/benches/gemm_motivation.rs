@@ -1,0 +1,29 @@
+//! Paper Sec. 1 motivating claim: chiplet-aware workgroup swizzling
+//! lifted GEMM L2 hit rates from 43% to 92% on MI300X (AMD Tensile).
+
+mod common;
+
+use numa_attn::figures;
+
+fn main() {
+    let topo = common::topo();
+    let t0 = std::time::Instant::now();
+    let fig = figures::gemm_motivation(&topo);
+    println!("{}", fig.render());
+    println!("[bench] gemm: {:.2} s", t0.elapsed().as_secs_f64());
+
+    let naive = fig.rows[0].values[0].1;
+    let swz = fig.rows[0].values[1].1;
+    common::check(
+        naive < 60.0,
+        &format!("naive GEMM mapping has poor L2 hit rate ({naive:.1}%)"),
+    );
+    common::check(
+        swz > 80.0,
+        &format!("chiplet-swizzled GEMM exceeds 80% ({swz:.1}%)"),
+    );
+    common::check(
+        swz - naive > 25.0,
+        &format!("swizzle improves hit rate by a large margin (+{:.1} pts)", swz - naive),
+    );
+}

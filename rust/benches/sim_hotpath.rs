@@ -1,0 +1,72 @@
+//! Simulator hot-path micro-benchmarks: tile-access throughput of the
+//! engine, LRU cache ops, and mapping decode — the §Perf targets for
+//! Layer 3 (DESIGN.md: the Table-2 sweep must run in minutes, so the
+//! engine needs >~10M tile-accesses/s/core).
+
+mod common;
+
+use numa_attn::attn::{AttnConfig, KernelKind};
+use numa_attn::cache::LruCache;
+use numa_attn::mapping::{Mapping, Policy};
+use numa_attn::sim::{simulate, SimConfig};
+use numa_attn::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("sim_hotpath");
+    let topo = common::topo();
+
+    // End-to-end engine throughput on a paper-scale sampled config.
+    let cfg = AttnConfig::mha(1, 64, 32768, 128);
+    let mut accesses = 0u64;
+    h.run("engine: H=64 N=32K sampled (SHF)", 5, || {
+        let r = simulate(&topo, &cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
+        accesses = r.l2.accesses();
+    });
+    let per_iter = h.results().last().unwrap().mean.as_secs_f64();
+    println!(
+        "[perf] engine throughput: {:.1}M demand accesses/s ({} accesses/iter)",
+        accesses as f64 / per_iter / 1e6,
+        accesses
+    );
+
+    // Worst-case policy (block-first thrash floods the HBM queue).
+    h.run("engine: H=64 N=32K sampled (NBF)", 5, || {
+        let _ = simulate(&topo, &cfg, &SimConfig::sampled(Policy::NaiveBlockFirst, &topo, 2));
+    });
+
+    // Backward both-kernel run.
+    let bwd_cfg = AttnConfig::mha(1, 128, 8192, 128);
+    h.run("engine: backward H=128 N=8K", 3, || {
+        let _ = numa_attn::sim::simulate_backward(
+            &topo,
+            &bwd_cfg,
+            &SimConfig::backward(Policy::SwizzledHeadFirst),
+        );
+    });
+
+    // LRU cache ops.
+    h.run("lru: 1M mixed accesses, 25% working-set overflow", 10, || {
+        let mut c = LruCache::new(256 * 16 * 1024);
+        for i in 0..1_000_000u64 {
+            c.access(i % 320, 16 * 1024);
+        }
+        std::hint::black_box(c.stats().hits);
+    });
+
+    // Mapping decode (the per-dispatch O(1) path).
+    let m = Mapping::for_kernel(
+        Policy::SwizzledHeadFirst,
+        &AttnConfig::mha(8, 128, 131072, 128),
+        KernelKind::Forward,
+        8,
+    )
+    .unwrap();
+    h.run("mapping: 10M swizzled decodes", 10, || {
+        let mut acc = 0u64;
+        for s in 0..10_000_000usize {
+            let w = m.decode(s % m.grid_size());
+            acc = acc.wrapping_add(w.h as u64);
+        }
+        std::hint::black_box(acc);
+    });
+}

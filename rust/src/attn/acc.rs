@@ -1,0 +1,121 @@
+//! Attention Compute Clusters (paper Fig. 6).
+//!
+//! An ACC is the set of workgroups that share the same K/V tensors:
+//! one per (batch, head) in MHA, one per (batch, KV group) in GQA.
+//! Co-locating an ACC on a single XCD is the paper's key optimization
+//! insight; these helpers derive ACC identities and measure how a mapping
+//! policy distributes ACCs over XCDs (used by tests and `numa-attn
+//! explain`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{AttnConfig, WorkItem};
+
+/// Identity of an attention compute cluster: (batch, kv_head).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AccId {
+    pub z: u32,
+    pub kv_head: u32,
+}
+
+/// ACC of a workgroup: determined by the K/V tensors it streams.
+pub fn acc_of(cfg: &AttnConfig, item: WorkItem) -> AccId {
+    AccId { z: item.z, kv_head: cfg.kv_head(item.h as usize) as u32 }
+}
+
+/// Total ACCs in the workload: batch × H_K groups.
+pub fn num_accs(cfg: &AttnConfig) -> usize {
+    cfg.batch * cfg.h_k
+}
+
+/// Workgroups per ACC (grid cells sharing one K/V tensor pair).
+pub fn wgs_per_acc(cfg: &AttnConfig, blocks: usize) -> usize {
+    cfg.group() * blocks
+}
+
+/// Summary of how a WG->XCD assignment treats ACCs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccSpread {
+    /// For each ACC: how many distinct XCDs its workgroups land on.
+    /// 1 everywhere == perfect co-location (the paper's goal).
+    pub xcds_per_acc: BTreeMap<AccId, usize>,
+    /// For each XCD: how many distinct ACCs it services over the whole
+    /// grid. High values mean the XCD's L2 is timeshared by many K/V
+    /// streams (the block-first pathology).
+    pub accs_per_xcd: Vec<usize>,
+}
+
+impl AccSpread {
+    /// Compute the spread of an assignment `(item, xcd)` pairs.
+    pub fn measure(
+        cfg: &AttnConfig,
+        num_xcds: usize,
+        assignment: impl Iterator<Item = (WorkItem, u32)>,
+    ) -> Self {
+        let mut per_acc: BTreeMap<AccId, BTreeSet<u32>> = BTreeMap::new();
+        let mut per_xcd: Vec<BTreeSet<AccId>> = vec![BTreeSet::new(); num_xcds];
+        for (item, xcd) in assignment {
+            let acc = acc_of(cfg, item);
+            per_acc.entry(acc).or_default().insert(xcd);
+            per_xcd[xcd as usize].insert(acc);
+        }
+        AccSpread {
+            xcds_per_acc: per_acc.into_iter().map(|(k, v)| (k, v.len())).collect(),
+            accs_per_xcd: per_xcd.into_iter().map(|s| s.len()).collect(),
+        }
+    }
+
+    /// True iff every ACC is confined to exactly one XCD.
+    pub fn perfectly_colocated(&self) -> bool {
+        self.xcds_per_acc.values().all(|&n| n == 1)
+    }
+
+    /// Maximum number of distinct ACCs any XCD services.
+    pub fn max_accs_per_xcd(&self) -> usize {
+        self.accs_per_xcd.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mha_one_acc_per_head() {
+        let cfg = AttnConfig::mha(2, 8, 1024, 64);
+        assert_eq!(num_accs(&cfg), 16);
+        let a = acc_of(&cfg, WorkItem { z: 1, h: 3, b: 0 });
+        assert_eq!(a, AccId { z: 1, kv_head: 3 });
+    }
+
+    #[test]
+    fn gqa_groups_share_acc() {
+        let cfg = AttnConfig::gqa(1, 8, 2, 1024, 64);
+        assert_eq!(num_accs(&cfg), 2);
+        let a0 = acc_of(&cfg, WorkItem { z: 0, h: 0, b: 0 });
+        let a3 = acc_of(&cfg, WorkItem { z: 0, h: 3, b: 9 });
+        let a4 = acc_of(&cfg, WorkItem { z: 0, h: 4, b: 0 });
+        assert_eq!(a0, a3);
+        assert_ne!(a0, a4);
+        assert_eq!(wgs_per_acc(&cfg, 16), 4 * 16);
+    }
+
+    #[test]
+    fn spread_detects_colocation() {
+        let cfg = AttnConfig::mha(1, 4, 512, 64);
+        // Perfect: head h -> XCD h.
+        let good = (0..4u32).flat_map(|h| {
+            (0..4u32).map(move |b| (WorkItem { z: 0, h, b }, h))
+        });
+        let s = AccSpread::measure(&cfg, 4, good);
+        assert!(s.perfectly_colocated());
+        assert_eq!(s.max_accs_per_xcd(), 1);
+        // Bad: block b -> XCD b (stripes every head).
+        let bad = (0..4u32).flat_map(|h| {
+            (0..4u32).map(move |b| (WorkItem { z: 0, h, b }, b))
+        });
+        let s = AccSpread::measure(&cfg, 4, bad);
+        assert!(!s.perfectly_colocated());
+        assert_eq!(s.max_accs_per_xcd(), 4);
+    }
+}

@@ -1,0 +1,303 @@
+//! FlashAttention2 grid model: the computational structure the paper's
+//! mapping policies schedule (Figs. 4-6).
+//!
+//! * [`AttnConfig`] — the workload hyper-parameters (Z, H_Q, H_K, N_CTX,
+//!   D_HEAD, BLOCK_M/N, causal, dtype).
+//! * [`WorkItem`] — one workgroup's identity: (batch, head, block).
+//! * [`tile`] — tile-key encoding for the cache simulator.
+//! * [`trace`] — per-workgroup tile access streams for the forward and
+//!   backward kernels ([`trace::WgCursor`]).
+//! * [`acc`] — Attention Compute Cluster derivation: the set of workgroups
+//!   sharing the same K/V (MHA: one per head; GQA: one per KV group).
+
+pub mod acc;
+pub mod tile;
+pub mod trace;
+
+/// Which kernel's grid is being scheduled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// FA2 forward: one WG per Q row block, streaming K/V (Fig. 4).
+    Forward,
+    /// FA2 backward dK/dV: one WG per K/V column block, streaming
+    /// Q/dO/lse/delta.
+    BwdDkDv,
+    /// FA2 backward dQ: one WG per Q row block, streaming K/V.
+    BwdDq,
+}
+
+/// Attention workload hyper-parameters (paper Table 2 / Table 3 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AttnConfig {
+    /// Batch size Z.
+    pub batch: usize,
+    /// Query heads H_Q.
+    pub h_q: usize,
+    /// Key/value heads H_K (== h_q for MHA; h_q % h_k == 0 for GQA).
+    pub h_k: usize,
+    /// Context length N_CTX.
+    pub n_ctx: usize,
+    /// Head dimension D_HEAD.
+    pub d_head: usize,
+    /// Q row-block size (paper: 128).
+    pub block_m: usize,
+    /// K/V column-block size (paper: 64).
+    pub block_n: usize,
+    /// Causal masking (halves the average K/V stream length).
+    pub causal: bool,
+    /// Bytes per element (2 = bf16/fp16, 4 = fp32).
+    pub dtype_bytes: usize,
+}
+
+impl AttnConfig {
+    /// MHA config with the paper's default blocks (Table 2).
+    pub fn mha(batch: usize, heads: usize, n_ctx: usize, d_head: usize) -> Self {
+        AttnConfig {
+            batch,
+            h_q: heads,
+            h_k: heads,
+            n_ctx,
+            d_head,
+            block_m: 128,
+            block_n: 64,
+            causal: false,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// GQA config (Table 3 Llama rows: H_K = 8).
+    pub fn gqa(batch: usize, h_q: usize, h_k: usize, n_ctx: usize, d_head: usize) -> Self {
+        AttnConfig { h_q, h_k, ..Self::mha(batch, h_q, n_ctx, d_head) }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.batch == 0 || self.h_q == 0 || self.h_k == 0 {
+            return Err("batch/h_q/h_k must be > 0".into());
+        }
+        if self.h_q % self.h_k != 0 {
+            return Err(format!("h_k ({}) must divide h_q ({})", self.h_k, self.h_q));
+        }
+        if self.n_ctx == 0 || self.d_head == 0 {
+            return Err("n_ctx/d_head must be > 0".into());
+        }
+        if self.block_m == 0 || self.block_n == 0 {
+            return Err("block sizes must be > 0".into());
+        }
+        if self.dtype_bytes != 2 && self.dtype_bytes != 4 {
+            return Err("dtype_bytes must be 2 or 4".into());
+        }
+        Ok(())
+    }
+
+    /// GQA group size (query heads per KV head).
+    pub fn group(&self) -> usize {
+        self.h_q / self.h_k
+    }
+
+    /// KV head serving query head `h`.
+    pub fn kv_head(&self, h: usize) -> usize {
+        h / self.group()
+    }
+
+    /// Q row blocks per head.
+    pub fn num_row_blocks(&self) -> usize {
+        self.n_ctx.div_ceil(self.block_m)
+    }
+
+    /// K/V column blocks per head.
+    pub fn num_col_blocks(&self) -> usize {
+        self.n_ctx.div_ceil(self.block_n)
+    }
+
+    /// Number of blocks in the dimension a kernel parallelizes over.
+    pub fn blocks_for(&self, kernel: KernelKind) -> usize {
+        match kernel {
+            KernelKind::Forward | KernelKind::BwdDq => self.num_row_blocks(),
+            KernelKind::BwdDkDv => self.num_col_blocks(),
+        }
+    }
+
+    /// Total workgroups in a kernel's grid
+    /// (`batch * h_q * blocks`, the paper's Fig. 11 grid lambda).
+    pub fn grid_size(&self, kernel: KernelKind) -> usize {
+        self.batch * self.h_q * self.blocks_for(kernel)
+    }
+
+    /// Head dimension padded to the MFMA K-granule (64): kernels lay
+    /// K/V/Q tiles out padded so the matrix cores can consume them
+    /// directly, so D_HEAD=56 moves 64-wide tiles (paper Sec. 4.5's
+    /// "lower arithmetic intensity": more bytes per useful FLOP).
+    pub fn padded_d_head(&self) -> usize {
+        self.d_head.div_ceil(64) * 64
+    }
+
+    /// Bytes of one Q row block (also dO/O block), MFMA-padded.
+    pub fn q_block_bytes(&self) -> u64 {
+        (self.block_m * self.padded_d_head() * self.dtype_bytes) as u64
+    }
+
+    /// Bytes of one K (or V) column tile, MFMA-padded.
+    pub fn kv_tile_bytes(&self) -> u64 {
+        (self.block_n * self.padded_d_head() * self.dtype_bytes) as u64
+    }
+
+    /// Bytes of one lse/delta row-block vector (float32).
+    pub fn vec_block_bytes(&self) -> u64 {
+        (self.block_m * 4) as u64
+    }
+
+    /// Bytes of the full K + V tensors of ONE head — the ACC working set
+    /// whose fit (or not) in a 4 MB XCD L2 drives the paper's Fig. 13.
+    pub fn kv_bytes_per_head(&self) -> u64 {
+        2 * (self.n_ctx * self.d_head * self.dtype_bytes) as u64
+    }
+
+    /// FLOPs of one forward K/V tile step for one WG:
+    /// S = Q·K^T (2·m·n·d) plus O += P·V (2·m·n·d).
+    pub fn fwd_step_flops(&self) -> f64 {
+        4.0 * (self.block_m * self.block_n * self.d_head) as f64
+    }
+
+    /// FLOPs of one dK/dV tile step (4 GEMMs: S, dV, dP, dK).
+    pub fn dkdv_step_flops(&self) -> f64 {
+        8.0 * (self.block_m * self.block_n * self.d_head) as f64
+    }
+
+    /// FLOPs of one dQ tile step (3 GEMMs: S, dP, dQ).
+    pub fn dq_step_flops(&self) -> f64 {
+        6.0 * (self.block_m * self.block_n * self.d_head) as f64
+    }
+
+    /// Total forward FLOPs (non-causal: 4·Z·H·N²·D; causal: half).
+    pub fn total_fwd_flops(&self) -> f64 {
+        let full = 4.0
+            * (self.batch * self.h_q) as f64
+            * (self.n_ctx as f64)
+            * (self.n_ctx as f64)
+            * self.d_head as f64;
+        if self.causal {
+            full / 2.0
+        } else {
+            full
+        }
+    }
+
+    /// Arithmetic intensity of the forward pass assuming *ideal* caching
+    /// (each tensor read once from HBM): FLOPs / HBM bytes.
+    pub fn ideal_intensity(&self) -> f64 {
+        let q_bytes = (self.batch * self.h_q * self.n_ctx * self.d_head * self.dtype_bytes) as f64;
+        let kv_bytes = 2.0 * (self.batch * self.h_k * self.n_ctx * self.d_head * self.dtype_bytes) as f64;
+        let o_bytes = q_bytes;
+        self.total_fwd_flops() / (q_bytes + kv_bytes + o_bytes)
+    }
+
+    /// Matrix-core efficiency of the inner GEMMs for this head dimension.
+    ///
+    /// The MFMA/MXU contracts over K in fixed granules; a head dimension
+    /// that is not a granule multiple pads the contraction (D_HEAD = 56
+    /// runs at 56/64 of peak), and a small D also raises the relative
+    /// cost of the softmax vector work (~a few vector ops per m*n score
+    /// element vs 2*D MACs). This is the paper's Sec. 4.5 observation
+    /// ("the smaller head dimension reduces overall arithmetic
+    /// intensity, thereby lowering absolute performance") made concrete.
+    pub fn compute_efficiency_factor(&self) -> f64 {
+        const K_GRANULE: f64 = 64.0;
+        const SOFTMAX_VOPS_PER_SCORE: f64 = 6.0; // exp, max, mul, adds
+        let d = self.d_head as f64;
+        let mfma = d / (d / K_GRANULE).ceil() / K_GRANULE;
+        let softmax_overhead = SOFTMAX_VOPS_PER_SCORE / (4.0 * d);
+        mfma / (1.0 + softmax_overhead)
+    }
+}
+
+/// One workgroup's logical work assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkItem {
+    /// Batch index.
+    pub z: u32,
+    /// Query head index.
+    pub h: u32,
+    /// Block index (row block for Forward/BwdDq, column block for BwdDkDv).
+    pub b: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_config() {
+        let c = AttnConfig::mha(8, 128, 128 * 1024, 128);
+        c.validate().unwrap();
+        assert_eq!(c.num_row_blocks(), 1024);
+        assert_eq!(c.num_col_blocks(), 2048);
+        assert_eq!(c.grid_size(KernelKind::Forward), 8 * 128 * 1024);
+        assert_eq!(c.group(), 1);
+    }
+
+    #[test]
+    fn gqa_llama70b() {
+        // Table 3: Llama-3 70B = GQA H_Q=64 H_K=8 D=128.
+        let c = AttnConfig::gqa(1, 64, 8, 8192, 128);
+        c.validate().unwrap();
+        assert_eq!(c.group(), 8);
+        assert_eq!(c.kv_head(0), 0);
+        assert_eq!(c.kv_head(7), 0);
+        assert_eq!(c.kv_head(8), 1);
+        assert_eq!(c.kv_head(63), 7);
+    }
+
+    #[test]
+    fn tile_byte_sizes() {
+        let c = AttnConfig::mha(1, 8, 8192, 128);
+        assert_eq!(c.q_block_bytes(), 128 * 128 * 2);
+        assert_eq!(c.kv_tile_bytes(), 64 * 128 * 2);
+        // One head's K+V at 128K fp16 D=128 = 64 MiB >> 4 MiB L2.
+        let big = AttnConfig::mha(1, 8, 128 * 1024, 128);
+        assert_eq!(big.kv_bytes_per_head(), 64 * 1024 * 1024);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(AttnConfig::mha(0, 8, 1024, 64).validate().is_err());
+        assert!(AttnConfig::gqa(1, 6, 4, 1024, 64).validate().is_err());
+        let mut c = AttnConfig::mha(1, 8, 1024, 64);
+        c.dtype_bytes = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let c = AttnConfig::mha(1, 1, 1024, 128);
+        // steps per WG (non-causal) = n/block_n = 16;
+        // WGs = n/block_m = 8; total = fwd_step_flops * 16 * 8
+        let total = c.fwd_step_flops() * 16.0 * 8.0;
+        assert!((total - c.total_fwd_flops()).abs() / total < 1e-12);
+    }
+
+    #[test]
+    fn causal_halves_flops() {
+        let mut c = AttnConfig::mha(1, 8, 4096, 128);
+        let full = c.total_fwd_flops();
+        c.causal = true;
+        assert!((c.total_fwd_flops() - full / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn deepseek_low_compute_efficiency() {
+        // D_HEAD=56 pads the MFMA K granule and raises relative softmax
+        // cost vs D=128 (paper Sec. 4.5).
+        let ds = AttnConfig::mha(1, 128, 8192, 56);
+        let std = AttnConfig::mha(1, 128, 8192, 128);
+        assert!(ds.compute_efficiency_factor() < std.compute_efficiency_factor());
+        assert!(ds.compute_efficiency_factor() < 0.9);
+        assert!(std.compute_efficiency_factor() > 0.95);
+    }
+
+    #[test]
+    fn bwd_grids() {
+        let c = AttnConfig::mha(2, 16, 8192, 128);
+        assert_eq!(c.grid_size(KernelKind::BwdDq), 2 * 16 * 64);
+        assert_eq!(c.grid_size(KernelKind::BwdDkDv), 2 * 16 * 128);
+    }
+}

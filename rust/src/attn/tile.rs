@@ -1,0 +1,83 @@
+//! Tile-key encoding: a unique `u64` per cacheable tile of every tensor
+//! in the attention workload, used as the cache/HBM key space.
+//!
+//! Layout (low to high): tile index (28 bits) | head (14) | batch (10) |
+//! tensor kind (4). Bounds checked in debug builds; the paper's largest
+//! config (B=8, H=128, N_CTX=128K, BLOCK_N=64 → 2048 tiles) uses a tiny
+//! fraction of each field.
+
+/// Which tensor a tile belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Tensor {
+    Q = 0,
+    K = 1,
+    V = 2,
+    O = 3,
+    DO = 4,
+    Lse = 5,
+    Delta = 6,
+    /// GEMM operand A (for the GEMM motivation figure).
+    GemmA = 7,
+    /// GEMM operand B.
+    GemmB = 8,
+}
+
+const TILE_BITS: u32 = 28;
+const HEAD_BITS: u32 = 14;
+const BATCH_BITS: u32 = 10;
+
+/// Encode a tile key.
+#[inline]
+pub fn key(tensor: Tensor, z: u32, head: u32, tile: u32) -> u64 {
+    debug_assert!(tile < (1 << TILE_BITS));
+    debug_assert!(head < (1 << HEAD_BITS));
+    debug_assert!(z < (1 << BATCH_BITS));
+    ((tensor as u64) << (TILE_BITS + HEAD_BITS + BATCH_BITS))
+        | ((z as u64) << (TILE_BITS + HEAD_BITS))
+        | ((head as u64) << TILE_BITS)
+        | tile as u64
+}
+
+/// Decode a tile key (diagnostics/tests).
+pub fn decode(k: u64) -> (u8, u32, u32, u32) {
+    let tile = (k & ((1 << TILE_BITS) - 1)) as u32;
+    let head = ((k >> TILE_BITS) & ((1 << HEAD_BITS) - 1)) as u32;
+    let z = ((k >> (TILE_BITS + HEAD_BITS)) & ((1 << BATCH_BITS) - 1)) as u32;
+    let tensor = (k >> (TILE_BITS + HEAD_BITS + BATCH_BITS)) as u8;
+    (tensor, z, head, tile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for (t, z, h, i) in [
+            (Tensor::Q, 0u32, 0u32, 0u32),
+            (Tensor::K, 7, 127, 2047),
+            (Tensor::V, 1, 1, 1),
+            (Tensor::Delta, 1023, 16383, (1 << 28) - 1),
+        ] {
+            let k = key(t, z, h, i);
+            assert_eq!(decode(k), (t as u8, z, h, i));
+        }
+    }
+
+    #[test]
+    fn distinct_tensors_distinct_keys() {
+        let a = key(Tensor::K, 0, 0, 5);
+        let b = key(Tensor::V, 0, 0, 5);
+        let c = key(Tensor::Q, 0, 0, 5);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn distinct_heads_distinct_keys() {
+        assert_ne!(key(Tensor::K, 0, 1, 0), key(Tensor::K, 0, 2, 0));
+        assert_ne!(key(Tensor::K, 1, 1, 0), key(Tensor::K, 2, 1, 0));
+    }
+}

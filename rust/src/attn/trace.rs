@@ -1,0 +1,320 @@
+//! Per-workgroup tile access streams for the FA2 forward and backward
+//! kernels — what the simulator replays through the memory hierarchy.
+//!
+//! A workgroup's life is a *prologue* (operands resident for its whole
+//! duration: the Q row block for the forward kernel, the K/V column block
+//! for dK/dV), followed by a sequence of *steps*, each reading the next
+//! tile(s) of the streamed tensors and performing one tile of compute,
+//! and an output write at the end. [`WgCursor`] yields these steps lazily
+//! so no trace is ever materialized.
+
+use super::tile::{self, Tensor};
+use super::{AttnConfig, KernelKind, WorkItem};
+
+/// One tile read: key + size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Read {
+    pub key: u64,
+    pub bytes: u32,
+}
+
+/// One execution step of a workgroup: up to 4 tile reads then `flops` of
+/// compute.
+#[derive(Debug, Clone, Copy)]
+pub struct Step {
+    reads: [Read; 4],
+    num_reads: u8,
+    pub flops: f64,
+}
+
+impl Step {
+    pub fn reads(&self) -> &[Read] {
+        &self.reads[..self.num_reads as usize]
+    }
+
+    fn new(reads: &[Read], flops: f64) -> Self {
+        let mut arr = [Read { key: 0, bytes: 0 }; 4];
+        arr[..reads.len()].copy_from_slice(reads);
+        Step { reads: arr, num_reads: reads.len() as u8, flops }
+    }
+}
+
+/// Lazy generator of a workgroup's access stream.
+#[derive(Debug, Clone)]
+pub struct WgCursor {
+    cfg: AttnConfig,
+    kernel: KernelKind,
+    item: WorkItem,
+    /// Next step index; 0 = prologue.
+    pos: u32,
+    /// One past the last stream index (exclusive).
+    end: u32,
+    /// First stream index (causal dK/dV skips masked row blocks).
+    start: u32,
+}
+
+impl WgCursor {
+    pub fn new(cfg: &AttnConfig, kernel: KernelKind, item: WorkItem) -> Self {
+        let (start, end) = stream_bounds(cfg, kernel, item);
+        WgCursor { cfg: *cfg, kernel, item, pos: 0, start, end }
+    }
+
+    pub fn item(&self) -> WorkItem {
+        self.item
+    }
+
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Steps remaining, including the prologue if not yet consumed.
+    pub fn remaining_steps(&self) -> u32 {
+        if self.pos == 0 {
+            1 + (self.end - self.start)
+        } else {
+            self.end - (self.start + self.pos - 1)
+        }
+    }
+
+    /// Total stream steps (excluding prologue) this WG performs.
+    pub fn stream_len(&self) -> u32 {
+        self.end - self.start
+    }
+
+    /// Bytes this workgroup writes back to HBM when it retires.
+    pub fn write_bytes(&self) -> u64 {
+        match self.kernel {
+            // O block (+ lse vector).
+            KernelKind::Forward => self.cfg.q_block_bytes() + self.cfg.vec_block_bytes(),
+            // dK + dV column tiles.
+            KernelKind::BwdDkDv => 2 * self.cfg.kv_tile_bytes(),
+            // dQ block.
+            KernelKind::BwdDq => self.cfg.q_block_bytes(),
+        }
+    }
+
+    /// Produce the next step, or `None` when the workgroup retires.
+    pub fn next_step(&mut self) -> Option<Step> {
+        let s = self.step_for_pos(self.pos);
+        if s.is_some() {
+            self.pos += 1;
+        }
+        s
+    }
+
+    /// Look `ahead` steps past the next one without advancing — used by
+    /// the simulator's prefetch (double-buffering) model.
+    pub fn peek(&self, ahead: u32) -> Option<Step> {
+        self.step_for_pos(self.pos + ahead)
+    }
+
+    fn step_for_pos(&self, pos: u32) -> Option<Step> {
+        let cfg = &self.cfg;
+        let WorkItem { z, h, b } = self.item;
+        let kv = cfg.kv_head(h as usize) as u32;
+        if pos == 0 {
+            let step = match self.kernel {
+                KernelKind::Forward => Step::new(
+                    &[Read { key: tile::key(Tensor::Q, z, h, b), bytes: cfg.q_block_bytes() as u32 }],
+                    0.0,
+                ),
+                KernelKind::BwdDkDv => Step::new(
+                    &[
+                        Read { key: tile::key(Tensor::K, z, kv, b), bytes: cfg.kv_tile_bytes() as u32 },
+                        Read { key: tile::key(Tensor::V, z, kv, b), bytes: cfg.kv_tile_bytes() as u32 },
+                    ],
+                    0.0,
+                ),
+                KernelKind::BwdDq => Step::new(
+                    &[
+                        Read { key: tile::key(Tensor::Q, z, h, b), bytes: cfg.q_block_bytes() as u32 },
+                        Read { key: tile::key(Tensor::DO, z, h, b), bytes: cfg.q_block_bytes() as u32 },
+                        Read { key: tile::key(Tensor::Lse, z, h, b), bytes: cfg.vec_block_bytes() as u32 },
+                        Read { key: tile::key(Tensor::Delta, z, h, b), bytes: cfg.vec_block_bytes() as u32 },
+                    ],
+                    0.0,
+                ),
+            };
+            return Some(step);
+        }
+        let idx = self.start + pos - 1;
+        if idx >= self.end {
+            return None;
+        }
+        let step = match self.kernel {
+            KernelKind::Forward => Step::new(
+                &[
+                    Read { key: tile::key(Tensor::K, z, kv, idx), bytes: cfg.kv_tile_bytes() as u32 },
+                    Read { key: tile::key(Tensor::V, z, kv, idx), bytes: cfg.kv_tile_bytes() as u32 },
+                ],
+                cfg.fwd_step_flops(),
+            ),
+            KernelKind::BwdDkDv => Step::new(
+                &[
+                    Read { key: tile::key(Tensor::Q, z, h, idx), bytes: cfg.q_block_bytes() as u32 },
+                    Read { key: tile::key(Tensor::DO, z, h, idx), bytes: cfg.q_block_bytes() as u32 },
+                    Read { key: tile::key(Tensor::Lse, z, h, idx), bytes: cfg.vec_block_bytes() as u32 },
+                    Read { key: tile::key(Tensor::Delta, z, h, idx), bytes: cfg.vec_block_bytes() as u32 },
+                ],
+                cfg.dkdv_step_flops(),
+            ),
+            KernelKind::BwdDq => Step::new(
+                &[
+                    Read { key: tile::key(Tensor::K, z, kv, idx), bytes: cfg.kv_tile_bytes() as u32 },
+                    Read { key: tile::key(Tensor::V, z, kv, idx), bytes: cfg.kv_tile_bytes() as u32 },
+                ],
+                cfg.dq_step_flops(),
+            ),
+        };
+        Some(step)
+    }
+}
+
+/// [start, end) indices of the streamed dimension for one workgroup,
+/// honoring the causal mask exactly like the Pallas kernels
+/// (python/compile/kernels/fa2.py, fa2_bwd.py).
+fn stream_bounds(cfg: &AttnConfig, kernel: KernelKind, item: WorkItem) -> (u32, u32) {
+    let b = item.b as usize;
+    match kernel {
+        KernelKind::Forward | KernelKind::BwdDq => {
+            let n_kv = cfg.num_col_blocks();
+            let hi = if cfg.causal {
+                (((b + 1) * cfg.block_m).div_ceil(cfg.block_n)).min(n_kv)
+            } else {
+                n_kv
+            };
+            (0, hi as u32)
+        }
+        KernelKind::BwdDkDv => {
+            let n_rows = cfg.num_row_blocks();
+            let lo = if cfg.causal { (b * cfg.block_n) / cfg.block_m } else { 0 };
+            (lo as u32, n_rows as u32)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::tile::decode;
+
+    fn cfg() -> AttnConfig {
+        AttnConfig::mha(2, 4, 1024, 64) // 8 row blocks, 16 col blocks
+    }
+
+    fn drain(cur: &mut WgCursor) -> Vec<Step> {
+        let mut v = Vec::new();
+        while let Some(s) = cur.next_step() {
+            v.push(s);
+        }
+        v
+    }
+
+    #[test]
+    fn forward_stream_shape() {
+        let c = cfg();
+        let item = WorkItem { z: 1, h: 2, b: 3 };
+        let mut cur = WgCursor::new(&c, KernelKind::Forward, item);
+        assert_eq!(cur.stream_len(), 16);
+        let steps = drain(&mut cur);
+        assert_eq!(steps.len(), 17); // prologue + 16 K/V steps
+        // Prologue reads this WG's own Q block.
+        let (t, z, h, i) = decode(steps[0].reads()[0].key);
+        assert_eq!((t, z, h, i), (Tensor::Q as u8, 1, 2, 3));
+        // Step j reads K and V tile j of the right head.
+        for (j, s) in steps[1..].iter().enumerate() {
+            assert_eq!(s.reads().len(), 2);
+            let (tk, _, hk, ik) = decode(s.reads()[0].key);
+            let (tv, _, hv, iv) = decode(s.reads()[1].key);
+            assert_eq!(tk, Tensor::K as u8);
+            assert_eq!(tv, Tensor::V as u8);
+            assert_eq!((ik as usize, iv as usize), (j, j));
+            assert_eq!((hk, hv), (2, 2)); // MHA: kv head == q head
+            assert!(s.flops > 0.0);
+        }
+    }
+
+    #[test]
+    fn gqa_reads_shared_kv_head() {
+        let c = AttnConfig::gqa(1, 8, 2, 512, 64);
+        let mut cur = WgCursor::new(&c, KernelKind::Forward, WorkItem { z: 0, h: 5, b: 0 });
+        let steps = drain(&mut cur);
+        let (_, _, h_kv, _) = decode(steps[1].reads()[0].key);
+        assert_eq!(h_kv, 1); // head 5, group 4 -> kv head 1
+    }
+
+    #[test]
+    fn causal_forward_truncates_stream() {
+        let mut c = cfg();
+        c.causal = true;
+        // block_m=128, block_n=64: row block b sees 2(b+1) K/V tiles.
+        for b in 0..8u32 {
+            let cur = WgCursor::new(&c, KernelKind::Forward, WorkItem { z: 0, h: 0, b });
+            assert_eq!(cur.stream_len(), 2 * (b + 1));
+        }
+    }
+
+    #[test]
+    fn causal_dkdv_skips_masked_rows() {
+        let mut c = cfg();
+        c.causal = true;
+        // column block jb starts at row block (jb*64)/128.
+        let cur = WgCursor::new(&c, KernelKind::BwdDkDv, WorkItem { z: 0, h: 0, b: 6 });
+        assert_eq!(cur.stream_len(), 8 - 3);
+    }
+
+    #[test]
+    fn dkdv_stream_reads_q_do_lse_delta() {
+        let c = cfg();
+        let mut cur = WgCursor::new(&c, KernelKind::BwdDkDv, WorkItem { z: 0, h: 1, b: 2 });
+        let steps = drain(&mut cur);
+        assert_eq!(steps.len(), 1 + 8);
+        // Prologue holds this WG's K/V column tiles.
+        assert_eq!(steps[0].reads().len(), 2);
+        let (t0, _, _, i0) = decode(steps[0].reads()[0].key);
+        assert_eq!((t0, i0), (Tensor::K as u8, 2));
+        // Each step reads 4 tensors of row block i.
+        let kinds: Vec<u8> = steps[1].reads().iter().map(|r| decode(r.key).0).collect();
+        assert_eq!(kinds, vec![Tensor::Q as u8, Tensor::DO as u8, Tensor::Lse as u8, Tensor::Delta as u8]);
+    }
+
+    #[test]
+    fn write_bytes() {
+        let c = cfg();
+        let fwd = WgCursor::new(&c, KernelKind::Forward, WorkItem { z: 0, h: 0, b: 0 });
+        assert_eq!(fwd.write_bytes(), c.q_block_bytes() + c.vec_block_bytes());
+        let dkdv = WgCursor::new(&c, KernelKind::BwdDkDv, WorkItem { z: 0, h: 0, b: 0 });
+        assert_eq!(dkdv.write_bytes(), 2 * c.kv_tile_bytes());
+    }
+
+    #[test]
+    fn remaining_steps_counts_down() {
+        let c = cfg();
+        let mut cur = WgCursor::new(&c, KernelKind::Forward, WorkItem { z: 0, h: 0, b: 0 });
+        let total = cur.remaining_steps();
+        assert_eq!(total, 17);
+        cur.next_step();
+        assert_eq!(cur.remaining_steps(), 16);
+        drain(&mut cur);
+        assert_eq!(cur.remaining_steps(), 0);
+    }
+
+    #[test]
+    fn two_wgs_same_head_share_kv_keys() {
+        // The spatial-locality fact the whole paper rests on (Fig. 4):
+        // row blocks of one head read IDENTICAL K/V tile keys.
+        let c = cfg();
+        let mut a = WgCursor::new(&c, KernelKind::Forward, WorkItem { z: 0, h: 1, b: 0 });
+        let mut bq = WgCursor::new(&c, KernelKind::Forward, WorkItem { z: 0, h: 1, b: 5 });
+        a.next_step();
+        bq.next_step(); // skip prologues (different Q blocks)
+        let ka: Vec<u64> = drain(&mut a).iter().flat_map(|s| s.reads().iter().map(|r| r.key)).collect();
+        let kb: Vec<u64> = drain(&mut bq).iter().flat_map(|s| s.reads().iter().map(|r| r.key)).collect();
+        assert_eq!(ka, kb);
+        // ... and different heads share NOTHING.
+        let mut other = WgCursor::new(&c, KernelKind::Forward, WorkItem { z: 0, h: 2, b: 0 });
+        other.next_step();
+        let ko: Vec<u64> = drain(&mut other).iter().flat_map(|s| s.reads().iter().map(|r| r.key)).collect();
+        assert!(ka.iter().all(|k| !ko.contains(k)));
+    }
+}

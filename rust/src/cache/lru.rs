@@ -1,0 +1,413 @@
+//! Size-aware LRU cache over u64 keys, built on a slab + intrusive
+//! doubly-linked list (no per-access allocation on the hot path).
+
+use super::CacheStats;
+use crate::util::fxhash::FastMap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+struct Node {
+    key: u64,
+    bytes: u32,
+    prev: u32,
+    next: u32,
+}
+
+/// LRU cache with byte-capacity eviction.
+///
+/// `access` is the hot-path entry point: it records a hit or a miss and,
+/// on miss, inserts the key (evicting LRU entries until the new entry
+/// fits). `probe`/`fill` split that into the two phases the simulator
+/// needs when a miss must first travel through the HBM queue.
+#[derive(Debug, Clone)]
+pub struct LruCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    map: FastMap<u64, u32>,
+    slab: Vec<Node>,
+    free: Vec<u32>,
+    head: u32, // most recently used
+    tail: u32, // least recently used
+    stats: CacheStats,
+}
+
+impl LruCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        assert!(capacity_bytes > 0, "cache capacity must be > 0");
+        LruCache {
+            capacity_bytes,
+            used_bytes: 0,
+            map: FastMap::default(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Mutable statistics access: the simulator uses this to account
+    /// demand accesses that merge into an in-flight fill (MSHR hits-on-
+    /// miss are recorded as misses there, not via `probe`).
+    pub fn stats_mut(&mut self) -> &mut CacheStats {
+        &mut self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.slab.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.used_bytes = 0;
+    }
+
+    /// Record an access: hit -> promote to MRU; miss -> insert (evicting).
+    /// Returns `true` on hit.
+    pub fn access(&mut self, key: u64, bytes: u32) -> bool {
+        if self.probe(key, bytes) {
+            true
+        } else {
+            self.fill(key, bytes);
+            false
+        }
+    }
+
+    /// Hit check + stat recording WITHOUT filling on miss. The simulator
+    /// uses this when a miss is sent to the HBM queue and `fill` happens
+    /// only once the data arrives.
+    pub fn probe(&mut self, key: u64, bytes: u32) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.stats.hits += 1;
+            self.stats.hit_bytes += bytes as u64;
+            self.touch(idx);
+            true
+        } else {
+            self.stats.misses += 1;
+            self.stats.miss_bytes += bytes as u64;
+            false
+        }
+    }
+
+    /// Peek without recording statistics (used by MSHR-merged waiters so a
+    /// single demand miss isn't double-counted).
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Record a hit + LRU touch if present; record NOTHING if absent
+    /// (the engine attributes the miss after consulting the MSHR file).
+    pub fn try_hit(&mut self, key: u64, bytes: u32) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.stats.hits += 1;
+            self.stats.hit_bytes += bytes as u64;
+            self.touch(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record a hit that was serviced by an in-flight fill issued by a
+    /// DIFFERENT workgroup (MSHR sharing: no new HBM traffic).
+    pub fn record_shared_hit(&mut self, bytes: u32) {
+        self.stats.hits += 1;
+        self.stats.hit_bytes += bytes as u64;
+    }
+
+    /// Record a demand miss (data absent and not covered by another
+    /// workgroup's fetch).
+    pub fn record_miss(&mut self, bytes: u32) {
+        self.stats.misses += 1;
+        self.stats.miss_bytes += bytes as u64;
+    }
+
+    /// Insert `key` (e.g. when its HBM fill arrives), evicting LRU entries
+    /// until it fits. No stats are recorded — the miss was already counted
+    /// by `probe`.
+    pub fn fill(&mut self, key: u64, bytes: u32) {
+        if let Some(&idx) = self.map.get(&key) {
+            self.touch(idx);
+            return;
+        }
+        let bytes64 = bytes as u64;
+        if bytes64 > self.capacity_bytes {
+            // Entry larger than the whole cache: streams straight through.
+            return;
+        }
+        while self.used_bytes + bytes64 > self.capacity_bytes {
+            self.evict_lru();
+        }
+        let idx = self.alloc_node(key, bytes);
+        self.push_front(idx);
+        self.map.insert(key, idx);
+        self.used_bytes += bytes64;
+    }
+
+    /// Invalidate a key if present (failure-injection / flush tests).
+    pub fn invalidate(&mut self, key: u64) -> bool {
+        if let Some(idx) = self.map.remove(&key) {
+            self.unlink(idx);
+            self.used_bytes -= self.slab[idx as usize].bytes as u64;
+            self.free.push(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn alloc_node(&mut self, key: u64, bytes: u32) -> u32 {
+        if let Some(idx) = self.free.pop() {
+            let n = &mut self.slab[idx as usize];
+            n.key = key;
+            n.bytes = bytes;
+            n.prev = NIL;
+            n.next = NIL;
+            idx
+        } else {
+            self.slab.push(Node { key, bytes, prev: NIL, next: NIL });
+            (self.slab.len() - 1) as u32
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let idx = self.tail;
+        debug_assert_ne!(idx, NIL, "evict on empty cache");
+        let (key, bytes) = {
+            let n = &self.slab[idx as usize];
+            (n.key, n.bytes)
+        };
+        self.unlink(idx);
+        self.map.remove(&key);
+        self.used_bytes -= bytes as u64;
+        self.free.push(idx);
+        self.stats.evictions += 1;
+    }
+
+    fn touch(&mut self, idx: u32) {
+        if self.head == idx {
+            return;
+        }
+        self.unlink(idx);
+        self.push_front(idx);
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let (prev, next) = {
+            let n = &self.slab[idx as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.slab[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        let n = &mut self.slab[idx as usize];
+        n.prev = NIL;
+        n.next = NIL;
+    }
+
+    fn push_front(&mut self, idx: u32) {
+        let old_head = self.head;
+        {
+            let n = &mut self.slab[idx as usize];
+            n.prev = NIL;
+            n.next = old_head;
+        }
+        if old_head != NIL {
+            self.slab[old_head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Keys from MRU to LRU (test/debug helper).
+    pub fn keys_mru_to_lru(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut cur = self.head;
+        while cur != NIL {
+            out.push(self.slab[cur as usize].key);
+            cur = self.slab[cur as usize].next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut c = LruCache::new(1000);
+        assert!(!c.access(1, 100));
+        assert!(c.access(1, 100));
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+        assert_eq!(c.used_bytes(), 100);
+    }
+
+    #[test]
+    fn evicts_lru_order() {
+        let mut c = LruCache::new(300);
+        c.access(1, 100);
+        c.access(2, 100);
+        c.access(3, 100);
+        assert_eq!(c.keys_mru_to_lru(), vec![3, 2, 1]);
+        // Touch 1 so 2 becomes LRU.
+        assert!(c.access(1, 100));
+        // Insert 4 -> evicts 2.
+        c.access(4, 100);
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+        assert!(c.contains(3));
+        assert!(c.contains(4));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn size_aware_eviction_evicts_multiple() {
+        let mut c = LruCache::new(300);
+        c.access(1, 100);
+        c.access(2, 100);
+        c.access(3, 100);
+        // 250-byte entry: evicting 1 and 2 leaves 100+250 > 300, so 3
+        // must go too (strict capacity).
+        c.access(4, 250);
+        assert!(!c.contains(1));
+        assert!(!c.contains(2));
+        assert!(!c.contains(3));
+        assert!(c.contains(4));
+        assert_eq!(c.used_bytes(), 250);
+        assert_eq!(c.stats().evictions, 3);
+    }
+
+    #[test]
+    fn oversized_entry_streams_through() {
+        let mut c = LruCache::new(100);
+        assert!(!c.access(1, 200));
+        assert!(!c.contains(1));
+        assert_eq!(c.used_bytes(), 0);
+        // Existing entries untouched.
+        c.access(2, 50);
+        c.access(1, 200);
+        assert!(c.contains(2));
+    }
+
+    #[test]
+    fn probe_then_fill() {
+        let mut c = LruCache::new(100);
+        assert!(!c.probe(7, 10));
+        assert!(!c.contains(7)); // probe does not fill
+        c.fill(7, 10);
+        assert!(c.probe(7, 10));
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn fill_idempotent() {
+        let mut c = LruCache::new(100);
+        c.fill(1, 40);
+        c.fill(1, 40);
+        assert_eq!(c.used_bytes(), 40);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn invalidate() {
+        let mut c = LruCache::new(100);
+        c.fill(1, 40);
+        assert!(c.invalidate(1));
+        assert!(!c.contains(1));
+        assert_eq!(c.used_bytes(), 0);
+        assert!(!c.invalidate(1));
+    }
+
+    #[test]
+    fn clear_resets_contents_not_stats() {
+        let mut c = LruCache::new(100);
+        c.access(1, 10);
+        c.access(1, 10);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+        assert_eq!(c.stats().hits, 1);
+        c.reset_stats();
+        assert_eq!(c.stats().hits, 0);
+    }
+
+    #[test]
+    fn slab_reuse_after_eviction() {
+        let mut c = LruCache::new(200);
+        for k in 0..1000u64 {
+            c.access(k, 100);
+        }
+        // Only 2 entries fit; slab should not have grown to 1000 nodes.
+        assert_eq!(c.len(), 2);
+        assert!(c.slab.len() <= 4, "slab grew to {}", c.slab.len());
+    }
+
+    #[test]
+    fn working_set_within_capacity_all_hits_after_warmup() {
+        let mut c = LruCache::new(1024);
+        let keys: Vec<u64> = (0..8).collect();
+        for &k in &keys {
+            c.access(k, 128);
+        }
+        c.reset_stats();
+        for _ in 0..10 {
+            for &k in &keys {
+                assert!(c.access(k, 128));
+            }
+        }
+        assert_eq!(c.stats().misses, 0);
+        assert!((c.stats().hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn working_set_exceeding_capacity_thrashes_under_lru_scan() {
+        // Classic LRU pathology: cyclic scan of N+1 entries in N-entry
+        // cache misses every time — the block-first collapse mechanism.
+        let mut c = LruCache::new(800); // 8 entries of 100
+        for _ in 0..5 {
+            for k in 0..9u64 {
+                c.access(k, 100);
+            }
+        }
+        let s = c.stats();
+        assert_eq!(s.hits, 0, "cyclic scan must never hit: {s:?}");
+    }
+}

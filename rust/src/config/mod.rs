@@ -1,0 +1,238 @@
+//! Experiment configuration files: INI-style `[section] key = value`
+//! (see `rust/src/util/ini.rs` — the toml crate is unavailable offline,
+//! and the subset used here parses identically). Example:
+//!
+//! ```ini
+//! topology = "mi300x"
+//!
+//! [attention]
+//! batch = 2
+//! h_q = 64
+//! h_k = 8
+//! n_ctx = 8192
+//! d_head = 128
+//!
+//! [sim]
+//! policy = "shf"
+//! generations = 2
+//! ```
+
+use crate::attn::{AttnConfig, KernelKind};
+use crate::mapping::Policy;
+use crate::sim::SimConfig;
+use crate::topology::{presets, Topology};
+use crate::util::ini::Ini;
+
+/// Top-level experiment file.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Topology preset name.
+    pub topology: String,
+    pub attention: AttentionSection,
+    pub sim: SimSection,
+}
+
+#[derive(Debug, Clone)]
+pub struct AttentionSection {
+    pub batch: usize,
+    pub h_q: usize,
+    pub h_k: Option<usize>,
+    pub n_ctx: usize,
+    pub d_head: usize,
+    pub block_m: usize,
+    pub block_n: usize,
+    pub causal: bool,
+    pub dtype_bytes: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SimSection {
+    pub policy: Option<String>,
+    pub backward: bool,
+    pub generations: Option<usize>,
+    pub jitter_denom: Option<u64>,
+    pub launch_stagger: Option<u64>,
+    pub prefetch_depth: Option<u32>,
+    pub compute_efficiency: Option<f64>,
+    pub seed: Option<u64>,
+}
+
+impl ExperimentConfig {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let ini = Ini::parse(text)?;
+        if !ini.has_section("attention") {
+            return Err("missing [attention] section".into());
+        }
+        let attention = AttentionSection {
+            batch: ini
+                .get_parsed("attention", "batch")?
+                .ok_or("attention.batch required")?,
+            h_q: ini
+                .get_parsed("attention", "h_q")?
+                .ok_or("attention.h_q required")?,
+            h_k: ini.get_parsed("attention", "h_k")?,
+            n_ctx: ini
+                .get_parsed("attention", "n_ctx")?
+                .ok_or("attention.n_ctx required")?,
+            d_head: ini
+                .get_parsed("attention", "d_head")?
+                .ok_or("attention.d_head required")?,
+            block_m: ini.get_parsed("attention", "block_m")?.unwrap_or(128),
+            block_n: ini.get_parsed("attention", "block_n")?.unwrap_or(64),
+            causal: ini.get_parsed("attention", "causal")?.unwrap_or(false),
+            dtype_bytes: ini.get_parsed("attention", "dtype_bytes")?.unwrap_or(2),
+        };
+        let sim = SimSection {
+            policy: ini.get("sim", "policy").map(|s| s.to_string()),
+            backward: ini.get_parsed("sim", "backward")?.unwrap_or(false),
+            generations: ini.get_parsed("sim", "generations")?,
+            jitter_denom: ini.get_parsed("sim", "jitter_denom")?,
+            launch_stagger: ini.get_parsed("sim", "launch_stagger")?,
+            prefetch_depth: ini.get_parsed("sim", "prefetch_depth")?,
+            compute_efficiency: ini.get_parsed("sim", "compute_efficiency")?,
+            seed: ini.get_parsed("sim", "seed")?,
+        };
+        Ok(ExperimentConfig {
+            topology: ini.get("", "topology").unwrap_or("mi300x").to_string(),
+            attention,
+            sim,
+        })
+    }
+
+    pub fn topology(&self) -> Result<Topology, String> {
+        presets::by_name(&self.topology)
+            .ok_or_else(|| format!("unknown topology preset '{}'", self.topology))
+    }
+
+    pub fn attn(&self) -> Result<AttnConfig, String> {
+        let a = &self.attention;
+        let cfg = AttnConfig {
+            batch: a.batch,
+            h_q: a.h_q,
+            h_k: a.h_k.unwrap_or(a.h_q),
+            n_ctx: a.n_ctx,
+            d_head: a.d_head,
+            block_m: a.block_m,
+            block_n: a.block_n,
+            causal: a.causal,
+            dtype_bytes: a.dtype_bytes,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn sim(&self, policy: Policy) -> Result<SimConfig, String> {
+        let topo = self.topology()?;
+        let s = &self.sim;
+        let mut cfg = match s.generations {
+            Some(g) => SimConfig::sampled(policy, &topo, g),
+            None => SimConfig::forward(policy),
+        };
+        if s.backward {
+            cfg.kernel = KernelKind::BwdDkDv;
+            cfg.compute_overhead = SimConfig::backward(policy).compute_overhead;
+        }
+        if let Some(j) = s.jitter_denom {
+            cfg.jitter_denom = j;
+        }
+        if let Some(ls) = s.launch_stagger {
+            cfg.launch_stagger = ls;
+        }
+        if let Some(p) = s.prefetch_depth {
+            cfg.prefetch_depth = p;
+        }
+        if let Some(e) = s.compute_efficiency {
+            cfg.compute_efficiency = e;
+        }
+        if let Some(seed) = s.seed {
+            cfg.seed = seed;
+        }
+        Ok(cfg)
+    }
+
+    /// Policy list: explicit one, or all four.
+    pub fn policies(&self) -> Result<Vec<Policy>, String> {
+        match &self.sim.policy {
+            Some(p) => Ok(vec![p.parse()?]),
+            None => Ok(crate::mapping::ALL_POLICIES.to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+topology = "mi300x"
+
+[attention]
+batch = 2
+h_q = 64
+h_k = 8
+n_ctx = 8192
+d_head = 128
+
+[sim]
+policy = "shf"
+generations = 2
+seed = 42
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let c = ExperimentConfig::parse(SAMPLE).unwrap();
+        let topo = c.topology().unwrap();
+        assert_eq!(topo.num_xcds, 8);
+        let attn = c.attn().unwrap();
+        assert_eq!(attn.h_k, 8);
+        assert_eq!(attn.block_m, 128); // default
+        let pols = c.policies().unwrap();
+        assert_eq!(pols, vec![Policy::SwizzledHeadFirst]);
+        let sim = c.sim(pols[0]).unwrap();
+        assert_eq!(sim.seed, 42);
+        assert!(sim.max_wg_completions > 0);
+    }
+
+    #[test]
+    fn defaults_h_k_to_h_q() {
+        let toml = r#"
+[attention]
+batch = 1
+h_q = 8
+n_ctx = 2048
+d_head = 64
+"#;
+        let c = ExperimentConfig::parse(toml).unwrap();
+        assert_eq!(c.attn().unwrap().h_k, 8);
+        assert_eq!(c.policies().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_topo() {
+        let toml = r#"
+topology = "h100"
+[attention]
+batch = 1
+h_q = 8
+n_ctx = 2048
+d_head = 64
+"#;
+        let c = ExperimentConfig::parse(toml).unwrap();
+        assert!(c.topology().is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_attention() {
+        let toml = r#"
+[attention]
+batch = 1
+h_q = 6
+h_k = 4
+n_ctx = 2048
+d_head = 64
+"#;
+        let c = ExperimentConfig::parse(toml).unwrap();
+        assert!(c.attn().is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! NUMA mapping advisor: given an attention geometry, recommend the
+//! workgroup-mapping policy an MI300X deployment should configure and
+//! back it with a quick simulator projection. This is how the paper's
+//! contribution surfaces as a first-class serving feature: the
+//! coordinator doesn't just run attention, it knows *how* the kernel
+//! should be scheduled for the shapes it is serving.
+
+use crate::attn::{AttnConfig, KernelKind};
+use crate::mapping::{Policy, ALL_POLICIES};
+use crate::sim::{self, SimConfig};
+use crate::topology::Topology;
+
+/// Advisor output for one attention geometry.
+#[derive(Debug, Clone)]
+pub struct Advice {
+    pub recommended: Policy,
+    /// (policy, projected aggregate L2 hit %, projected relative perf).
+    pub projections: Vec<(Policy, f64, f64)>,
+    /// True when the recommendation is degenerate (single XCD or fewer
+    /// heads than XCDs — everything performs the same).
+    pub indifferent: bool,
+}
+
+/// Simulate all applicable policies on `topo` and rank them.
+pub fn advise(topo: &Topology, cfg: &AttnConfig) -> Advice {
+    let mut results: Vec<(Policy, f64, f64)> = Vec::new();
+    // Rank by estimated time with a 2% noise band (steady-state sampling
+    // jitter); within the band prefer lower HBM traffic — replication is
+    // wasted power and bandwidth headroom even when latency-hidden.
+    let mut best: Option<(Policy, f64, u64)> = None;
+    for &p in &ALL_POLICIES {
+        if p.requires_divisible_heads() && cfg.h_q % topo.num_xcds != 0 {
+            continue;
+        }
+        let sc = SimConfig {
+            kernel: KernelKind::Forward,
+            ..SimConfig::sampled(p, topo, 2)
+        };
+        let r = sim::simulate(topo, cfg, &sc);
+        results.push((p, r.l2_hit_pct(), r.est_total_sec));
+        let better = match best {
+            None => true,
+            Some((_, t, b)) => {
+                r.est_total_sec < t * 0.98
+                    || (r.est_total_sec < t * 1.02 && r.hbm.bytes_read < b)
+            }
+        };
+        if better {
+            best = Some((p, r.est_total_sec, r.hbm.bytes_read));
+        }
+    }
+    let (recommended, best_sec, _) = best.expect("at least one naive policy always applies");
+    let spread = results
+        .iter()
+        .map(|(_, _, t)| t / best_sec)
+        .fold(1.0f64, f64::max);
+    let projections = results
+        .into_iter()
+        .map(|(p, hit, t)| (p, hit, best_sec / t))
+        .collect();
+    Advice {
+        recommended,
+        projections,
+        indifferent: topo.num_xcds == 1 || spread < 1.02,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn fast_topo() -> Topology {
+        Topology { cus_per_xcd: 8, l2_bytes_per_xcd: 1024 * 1024, hbm_bytes_per_sec: 1.1e12, ..presets::mi300x() }
+    }
+
+    #[test]
+    fn recommends_shf_for_many_head_mha() {
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::mha(1, 64, 16384, 128);
+        let a = advise(&topo, &cfg);
+        assert_eq!(a.recommended, Policy::SwizzledHeadFirst);
+        assert_eq!(a.projections.len(), 4);
+        // relative perf of the recommendation is 1.0
+        let rec = a.projections.iter().find(|(p, _, _)| *p == a.recommended).unwrap();
+        assert!((rec.2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skips_swizzled_when_heads_indivisible() {
+        let topo = fast_topo();
+        let cfg = AttnConfig::mha(1, 12, 4096, 64); // 12 % 8 != 0
+        let a = advise(&topo, &cfg);
+        assert_eq!(a.projections.len(), 2); // only the naive policies
+        assert!(!a.recommended.requires_divisible_heads());
+    }
+
+    #[test]
+    fn unified_gpu_is_indifferent() {
+        let mut topo = presets::unified_single_die();
+        topo.cus_per_xcd = 16;
+        let cfg = AttnConfig::mha(1, 16, 4096, 128);
+        let a = advise(&topo, &cfg);
+        assert!(a.indifferent);
+    }
+}

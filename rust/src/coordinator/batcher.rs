@@ -1,0 +1,193 @@
+//! Continuous batching core: groups routed requests per bucket and
+//! releases a batch when it is full or its oldest member has waited
+//! `max_wait`. Pure data structure (no tokio) so the policy is unit
+//! testable; `service.rs` drives it from the async loop.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::workload::Request;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Max requests per released batch (per bucket).
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before release.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A released batch for one artifact bucket.
+#[derive(Debug)]
+pub struct Batch {
+    pub artifact: String,
+    pub requests: Vec<(Request, Instant)>,
+}
+
+#[derive(Debug)]
+struct Pending {
+    queue: VecDeque<(Request, Instant)>,
+}
+
+/// Per-bucket batching state machine.
+#[derive(Debug)]
+pub struct BatcherCore {
+    cfg: BatcherConfig,
+    pending: HashMap<String, Pending>,
+}
+
+impl BatcherCore {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch > 0);
+        BatcherCore { cfg, pending: HashMap::new() }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.pending.values().map(|p| p.queue.len()).sum()
+    }
+
+    /// Enqueue a routed request. Returns a batch if the bucket filled.
+    pub fn push(&mut self, artifact: &str, req: Request, now: Instant) -> Option<Batch> {
+        let p = self
+            .pending
+            .entry(artifact.to_string())
+            .or_insert_with(|| Pending { queue: VecDeque::new() });
+        p.queue.push_back((req, now));
+        if p.queue.len() >= self.cfg.max_batch {
+            return self.release(artifact);
+        }
+        None
+    }
+
+    /// Release every bucket whose oldest request exceeded `max_wait`.
+    pub fn poll_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| {
+                p.queue
+                    .front()
+                    .is_some_and(|(_, t)| now.duration_since(*t) >= self.cfg.max_wait)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired.into_iter().filter_map(|k| self.release(&k)).collect()
+    }
+
+    /// Force-release a bucket (drain on shutdown).
+    pub fn release(&mut self, artifact: &str) -> Option<Batch> {
+        let p = self.pending.get_mut(artifact)?;
+        if p.queue.is_empty() {
+            return None;
+        }
+        let n = p.queue.len().min(self.cfg.max_batch);
+        let requests: Vec<(Request, Instant)> = p.queue.drain(..n).collect();
+        Some(Batch { artifact: artifact.to_string(), requests })
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let keys: Vec<String> = self.pending.keys().cloned().collect();
+        let mut out = Vec::new();
+        for k in keys {
+            while let Some(b) = self.release(&k) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline across buckets (for the service's sleep timer).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending
+            .values()
+            .filter_map(|p| p.queue.front().map(|(_, t)| *t + self.cfg.max_wait))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, n_ctx: 128, seed: id | 1 }
+    }
+
+    #[test]
+    fn releases_when_full() {
+        let mut b = BatcherCore::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let t = Instant::now();
+        assert!(b.push("a", req(0), t).is_none());
+        assert!(b.push("a", req(1), t).is_none());
+        let batch = b.push("a", req(2), t).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn buckets_are_independent() {
+        let mut b = BatcherCore::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let t = Instant::now();
+        b.push("a", req(0), t);
+        b.push("b", req(1), t);
+        assert_eq!(b.queued(), 2);
+        let batch = b.push("a", req(2), t).unwrap();
+        assert_eq!(batch.artifact, "a");
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn expiry_releases_partial_batch() {
+        let mut b = BatcherCore::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push("a", req(0), t0);
+        assert!(b.poll_expired(t0).is_empty());
+        let later = t0 + Duration::from_millis(6);
+        let batches = b.poll_expired(later);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn next_deadline_is_oldest() {
+        let mut b = BatcherCore::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push("a", req(0), t0);
+        b.push("b", req(1), t0 + Duration::from_millis(1));
+        assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn drain_all_flushes_everything() {
+        let mut b = BatcherCore::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(1) });
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push("a", req(i), t);
+        }
+        // push released 2 batches of 2 already (at i=1 and i=3).
+        let drained = b.drain_all();
+        let total: usize = drained.iter().map(|x| x.requests.len()).sum();
+        assert_eq!(total, 1);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn release_caps_at_max_batch() {
+        let mut b = BatcherCore::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let t = Instant::now();
+        // Fill without triggering auto-release by using distinct buckets…
+        // simpler: push 2 (auto-release), then 1 more and force release.
+        b.push("a", req(0), t);
+        let auto = b.push("a", req(1), t).unwrap();
+        assert_eq!(auto.requests.len(), 2);
+        b.push("a", req(2), t);
+        let manual = b.release("a").unwrap();
+        assert_eq!(manual.requests.len(), 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! The serving coordinator (Layer 3): an async attention-prefill service
+//! over the PJRT runtime, in the style of a vLLM-like router/batcher —
+//! the deployment context the paper's optimization targets (prefill
+//! attention dominates long-context serving).
+//!
+//! Request path (all Rust; Python ran once at build time):
+//!
+//! ```text
+//! client -> Router (bucket by n_ctx -> artifact)
+//!        -> Batcher (group per bucket, max_batch/max_wait)
+//!        -> Worker (PJRT execute on CPU)
+//!        -> response (+ latency metrics)
+//! ```
+//!
+//! The [`advisor`] ties the serving layer back to the paper: for each
+//! bucket's attention geometry it recommends the mapping policy a real
+//! MI300X deployment should configure the kernel with, backed by a quick
+//! simulator run.
+
+pub mod advisor;
+pub mod batcher;
+pub mod router;
+pub mod service;
+
+pub use advisor::{advise, Advice};
+pub use batcher::{Batch, BatcherCore, BatcherConfig};
+pub use router::Router;
+pub use service::{AttentionService, ServiceConfig, ServiceMetrics, Waiter};

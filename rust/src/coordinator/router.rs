@@ -1,0 +1,139 @@
+//! Request routing: bucket incoming prefill requests by context length
+//! onto the fixed-shape attention artifacts the AOT step produced.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::Manifest;
+use crate::workload::Request;
+
+/// Maps a request's n_ctx to the artifact that serves it.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// n_ctx -> artifact name (batch-1 attention artifacts only).
+    buckets: BTreeMap<usize, String>,
+}
+
+impl Router {
+    /// Build from a manifest: one bucket per batch-1 `attn_fwd` artifact,
+    /// keyed by its n_ctx.
+    pub fn from_manifest(manifest: &Manifest) -> Self {
+        let mut buckets = BTreeMap::new();
+        for a in manifest.attention_artifacts() {
+            if let Some(attn) = &a.attn {
+                if attn.batch == 1 && !attn.causal {
+                    buckets.entry(attn.n_ctx).or_insert_with(|| a.name.clone());
+                }
+            }
+        }
+        Router { buckets }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn bucket_lengths(&self) -> Vec<usize> {
+        self.buckets.keys().copied().collect()
+    }
+
+    /// Artifact serving exactly `n_ctx`, if any.
+    pub fn exact(&self, n_ctx: usize) -> Option<&str> {
+        self.buckets.get(&n_ctx).map(|s| s.as_str())
+    }
+
+    /// Route a request: smallest bucket with capacity >= n_ctx
+    /// (prompts are padded up to the bucket length).
+    pub fn route(&self, req: &Request) -> Result<&str, RouteError> {
+        self.buckets
+            .range(req.n_ctx..)
+            .next()
+            .map(|(_, name)| name.as_str())
+            .ok_or(RouteError::TooLong {
+                n_ctx: req.n_ctx,
+                max: self.buckets.keys().next_back().copied().unwrap_or(0),
+            })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    TooLong { n_ctx: usize, max: usize },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::TooLong { n_ctx, max } => {
+                write!(f, "request n_ctx {n_ctx} exceeds largest bucket {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ArtifactMeta, AttnMeta, TensorSpec};
+
+    fn manifest() -> Manifest {
+        let mk = |name: &str, n_ctx: usize, batch: usize, causal: bool| ArtifactMeta {
+            name: name.into(),
+            kind: "attn_fwd".into(),
+            file: format!("{name}.hlo.txt"),
+            inputs: vec![TensorSpec { shape: vec![batch, 8, n_ctx, 64], dtype: "float32".into() }],
+            input_seeds: vec![1],
+            outputs: vec![TensorSpec { shape: vec![batch, 8, n_ctx, 64], dtype: "float32".into() }],
+            attn: Some(AttnMeta {
+                batch,
+                h_q: 8,
+                h_k: 8,
+                n_ctx,
+                d_head: 64,
+                causal,
+                block_m: 64,
+                block_n: 64,
+                policy: "swizzled_head_first".into(),
+                num_xcd: 8,
+            }),
+            golden: None,
+        };
+        Manifest {
+            format: "hlo-text-v1".into(),
+            artifacts: vec![
+                mk("a128", 128, 1, false),
+                mk("a256", 256, 1, false),
+                mk("a256c", 256, 1, true),  // causal: not routable
+                mk("a256b2", 256, 2, false), // batch 2: not a bucket
+            ],
+        }
+    }
+
+    fn req(n_ctx: usize) -> Request {
+        Request { id: 0, n_ctx, seed: 1 }
+    }
+
+    #[test]
+    fn buckets_from_manifest() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(r.num_buckets(), 2);
+        assert_eq!(r.bucket_lengths(), vec![128, 256]);
+    }
+
+    #[test]
+    fn routes_exact_and_padded() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(r.route(&req(128)).unwrap(), "a128");
+        assert_eq!(r.route(&req(100)).unwrap(), "a128");
+        assert_eq!(r.route(&req(129)).unwrap(), "a256");
+        assert_eq!(r.route(&req(256)).unwrap(), "a256");
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let r = Router::from_manifest(&manifest());
+        let err = r.route(&req(512)).unwrap_err();
+        assert_eq!(err, RouteError::TooLong { n_ctx: 512, max: 256 });
+    }
+}

@@ -1,0 +1,409 @@
+//! The attention service: router + batcher + PJRT worker.
+//!
+//! Submissions enqueue immediately and return a [`Waiter`]; execution
+//! happens on a dedicated worker thread because PJRT execution is
+//! synchronous. Concurrent submissions therefore batch naturally. When a released batch
+//! contains 2+ requests and the manifest has a batch-2 variant of the
+//! bucket's artifact, requests are executed *stacked* through it —
+//! dynamic batching that actually changes the executed computation, not
+//! just the queueing.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::oneshot;
+
+use crate::metrics::LatencyHistogram;
+use crate::runtime::{inputs, Runtime};
+use crate::workload::Request;
+
+use super::batcher::{Batch, BatcherConfig, BatcherCore};
+use super::router::Router;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub batcher: BatcherConfig,
+}
+
+/// One served response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub artifact: String,
+    /// abs-sum checksum of this request's output slice (verification).
+    pub checksum: f64,
+    pub queue_wait: Duration,
+    pub exec_time: Duration,
+    /// Requests co-executed in the same PJRT call.
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ServiceMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub stacked_executions: u64,
+    pub errors: u64,
+    pub queue_wait: LatencyHistogramSnapshot,
+    pub exec: LatencyHistogramSnapshot,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct LatencyHistogramSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+fn snapshot(h: &LatencyHistogram) -> LatencyHistogramSnapshot {
+    LatencyHistogramSnapshot {
+        count: h.count(),
+        mean_us: h.mean_us(),
+        p99_us: h.quantile_us(0.99),
+        max_us: h.max_us(),
+    }
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    requests: u64,
+    batches: u64,
+    stacked: u64,
+    errors: u64,
+    queue_wait: LatencyHistogram,
+    exec: LatencyHistogram,
+}
+
+struct Job {
+    req: Request,
+    artifact: String,
+    reply: oneshot::Sender<anyhow::Result<Response>>,
+}
+
+/// Pending response handle.
+pub struct Waiter {
+    rx: oneshot::Receiver<anyhow::Result<Response>>,
+}
+
+impl Waiter {
+    /// Block until the batch containing this request has executed.
+    pub fn wait(self) -> anyhow::Result<Response> {
+        self.rx
+            .wait()
+            .map_err(|_| anyhow::anyhow!("worker dropped reply"))?
+    }
+}
+
+/// Handle to the running service.
+pub struct AttentionService {
+    tx: Option<std::sync::mpsc::Sender<Job>>,
+    router: Router,
+    metrics: Arc<Mutex<MetricsInner>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl AttentionService {
+    /// Load artifacts, build the router, spawn the worker thread.
+    ///
+    /// PJRT handles are not `Send`, so the [`Runtime`] is constructed
+    /// *inside* the worker thread; startup errors are reported back over
+    /// a one-shot before any request is accepted.
+    pub fn start(cfg: ServiceConfig) -> anyhow::Result<Self> {
+        // The router only needs the manifest, which is plain data.
+        let manifest = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
+        let router = Router::from_manifest(&manifest);
+        anyhow::ensure!(router.num_buckets() > 0, "no batch-1 attention artifacts in manifest");
+
+        let metrics = Arc::new(Mutex::new(MetricsInner::default()));
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = oneshot::channel::<Result<(), String>>();
+        let worker_metrics = metrics.clone();
+        let batcher_cfg = cfg.batcher;
+        let artifact_dir = cfg.artifact_dir.clone();
+        let worker = std::thread::Builder::new()
+            .name("attn-worker".into())
+            .spawn(move || {
+                // Compile every attention artifact up front (serving never
+                // compiles on the request path).
+                let runtime = (|| -> anyhow::Result<Runtime> {
+                    let mut rt = Runtime::open(&artifact_dir)?;
+                    let names: Vec<String> = rt
+                        .manifest()
+                        .attention_artifacts()
+                        .map(|a| a.name.clone())
+                        .collect();
+                    for n in &names {
+                        rt.load(n)?;
+                    }
+                    Ok(rt)
+                })();
+                match runtime {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        worker_loop(rt, rx, batcher_cfg, worker_metrics);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                    }
+                }
+            })?;
+        ready_rx
+            .wait()
+            .map_err(|_| anyhow::anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow::anyhow!("worker startup: {e}"))?;
+
+        Ok(AttentionService { tx: Some(tx), router, metrics, worker: Some(worker) })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit a request. The job is enqueued *immediately* (so the
+    /// batcher can group concurrent submissions); the returned [`Waiter`]
+    /// resolves when its batch has executed.
+    pub fn submit(&self, req: Request) -> anyhow::Result<Waiter> {
+        let artifact = self
+            .router
+            .route(&req)
+            .map_err(|e| anyhow::anyhow!("routing: {e}"))?
+            .to_string();
+        let (reply, rx) = oneshot::channel();
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send(Job { req, artifact, reply })
+            .map_err(|_| anyhow::anyhow!("service worker stopped"))?;
+        Ok(Waiter { rx })
+    }
+
+    pub fn metrics(&self) -> ServiceMetrics {
+        let m = self.metrics.lock().unwrap();
+        ServiceMetrics {
+            requests: m.requests,
+            batches: m.batches,
+            stacked_executions: m.stacked,
+            errors: m.errors,
+            queue_wait: snapshot(&m.queue_wait),
+            exec: snapshot(&m.exec),
+        }
+    }
+
+    /// Graceful shutdown: drain queued work, join the worker.
+    pub fn shutdown(mut self) -> ServiceMetrics {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics()
+    }
+}
+
+impl Drop for AttentionService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    runtime: Runtime,
+    rx: std::sync::mpsc::Receiver<Job>,
+    batcher_cfg: BatcherConfig,
+    metrics: Arc<Mutex<MetricsInner>>,
+) {
+    let mut batcher = BatcherCore::new(batcher_cfg);
+    let mut replies: std::collections::HashMap<u64, oneshot::Sender<anyhow::Result<Response>>> =
+        std::collections::HashMap::new();
+
+    loop {
+        let now = Instant::now();
+        let job = match batcher.next_deadline() {
+            Some(deadline) => {
+                let timeout = deadline.saturating_duration_since(now);
+                match rx.recv_timeout(timeout) {
+                    Ok(j) => Some(j),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(j) => Some(j),
+                Err(_) => break,
+            },
+        };
+        if let Some(job) = job {
+            replies.insert(job.req.id, job.reply);
+            if let Some(batch) = batcher.push(&job.artifact, job.req, Instant::now()) {
+                execute_batch(&runtime, batch, &mut replies, &metrics);
+            }
+        }
+        for batch in batcher.poll_expired(Instant::now()) {
+            execute_batch(&runtime, batch, &mut replies, &metrics);
+        }
+    }
+    // Shutdown: drain remaining queued requests.
+    for batch in batcher.drain_all() {
+        execute_batch(&runtime, batch, &mut replies, &metrics);
+    }
+}
+
+/// Derive the three deterministic QKV input seeds of a request.
+pub fn qkv_seeds(req_seed: u64) -> [u64; 3] {
+    [req_seed, req_seed.wrapping_add(1_000_003), req_seed.wrapping_add(2_000_003)]
+}
+
+fn execute_batch(
+    runtime: &Runtime,
+    batch: Batch,
+    replies: &mut std::collections::HashMap<u64, oneshot::Sender<anyhow::Result<Response>>>,
+    metrics: &Arc<Mutex<MetricsInner>>,
+) {
+    let now = Instant::now();
+    let meta = runtime
+        .manifest()
+        .get(&batch.artifact)
+        .expect("routed artifact exists")
+        .clone();
+    let n = batch.requests.len();
+
+    // Find a stacked (batch-2) variant with identical geometry.
+    let stacked_name = meta.attn.as_ref().and_then(|a| {
+        runtime
+            .manifest()
+            .attention_artifacts()
+            .find(|c| {
+                c.attn.as_ref().is_some_and(|ca| {
+                    ca.batch == 2
+                        && ca.n_ctx == a.n_ctx
+                        && ca.h_q == a.h_q
+                        && ca.h_k == a.h_k
+                        && ca.d_head == a.d_head
+                        && ca.causal == a.causal
+                })
+            })
+            .filter(|c| runtime.is_loaded(&c.name))
+            .map(|c| c.name.clone())
+    });
+
+    let mut idx = 0;
+    while idx < n {
+        let pair = stacked_name.is_some() && idx + 1 < n;
+        let result = if pair {
+            execute_stacked(
+                runtime,
+                stacked_name.as_deref().unwrap(),
+                &batch.requests[idx].0,
+                &batch.requests[idx + 1].0,
+            )
+        } else {
+            execute_single(runtime, &batch.artifact, &batch.requests[idx].0).map(|(c, d)| (c, 0.0, d))
+        };
+
+        let consumed = if pair { 2 } else { 1 };
+        match result {
+            Ok((ck0, ck1, exec_d)) => {
+                for (k, ck) in [(idx, ck0), (idx + 1, ck1)].into_iter().take(consumed) {
+                    let (req, enq) = &batch.requests[k];
+                    let resp = Response {
+                        id: req.id,
+                        artifact: if pair {
+                            stacked_name.clone().unwrap()
+                        } else {
+                            batch.artifact.clone()
+                        },
+                        checksum: ck,
+                        queue_wait: now.duration_since(*enq),
+                        exec_time: exec_d,
+                        batch_size: consumed,
+                    };
+                    let mut m = metrics.lock().unwrap();
+                    m.requests += 1;
+                    m.queue_wait.record(resp.queue_wait);
+                    m.exec.record(exec_d);
+                    if pair {
+                        m.stacked += 1;
+                    }
+                    drop(m);
+                    if let Some(tx) = replies.remove(&req.id) {
+                        let _ = tx.send(Ok(resp));
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for k in idx..(idx + consumed).min(n) {
+                    let (req, _) = &batch.requests[k];
+                    metrics.lock().unwrap().errors += 1;
+                    if let Some(tx) = replies.remove(&req.id) {
+                        let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        idx += consumed;
+    }
+    metrics.lock().unwrap().batches += 1;
+}
+
+fn request_qkv(runtime: &Runtime, artifact: &str, req: &Request) -> anyhow::Result<Vec<Vec<f32>>> {
+    let meta = runtime
+        .manifest()
+        .get(artifact)
+        .ok_or_else(|| anyhow::anyhow!("artifact '{artifact}' missing"))?;
+    let seeds = qkv_seeds(req.seed);
+    Ok(meta
+        .inputs
+        .iter()
+        .zip(seeds)
+        .map(|(spec, seed)| inputs::det_input(seed, spec.num_elements()))
+        .collect())
+}
+
+fn execute_single(
+    runtime: &Runtime,
+    artifact: &str,
+    req: &Request,
+) -> anyhow::Result<(f64, Duration)> {
+    let qkv = request_qkv(runtime, artifact, req)?;
+    let r = runtime.execute(artifact, &qkv)?;
+    let (abs_sum, _, _) = inputs::stats(&r.outputs[0]);
+    Ok((abs_sum, r.elapsed))
+}
+
+/// Stack two requests' Q/K/V along the batch axis and run the batch-2
+/// artifact; split the output checksums back per request.
+fn execute_stacked(
+    runtime: &Runtime,
+    stacked_artifact: &str,
+    a: &Request,
+    b: &Request,
+) -> anyhow::Result<(f64, f64, Duration)> {
+    // The stacked artifact's inputs are (2, H, N, D); each request's
+    // deterministic tensors are (1, H, N, D) halves.
+    let meta = runtime
+        .manifest()
+        .get(stacked_artifact)
+        .ok_or_else(|| anyhow::anyhow!("artifact '{stacked_artifact}' missing"))?;
+    let sa = qkv_seeds(a.seed);
+    let sb = qkv_seeds(b.seed);
+    let mut stacked_inputs = Vec::with_capacity(3);
+    for (i, spec) in meta.inputs.iter().enumerate() {
+        let half = spec.num_elements() / 2;
+        let mut buf = inputs::det_input(sa[i], half);
+        buf.extend(inputs::det_input(sb[i], half));
+        stacked_inputs.push(buf);
+    }
+    let r = runtime.execute(stacked_artifact, &stacked_inputs)?;
+    let out = &r.outputs[0];
+    let half = out.len() / 2;
+    let (ck_a, _, _) = inputs::stats(&out[..half]);
+    let (ck_b, _, _) = inputs::stats(&out[half..]);
+    Ok((ck_a, ck_b, r.elapsed))
+}

@@ -1,0 +1,380 @@
+//! Paper figure/table regeneration (DESIGN.md §5 experiment index).
+//!
+//! Each `figN` function runs the corresponding sweep on the simulator and
+//! returns a [`FigureResult`] whose rows mirror the series the paper
+//! plots. The criterion benches (`rust/benches/figN_*.rs`) and the CLI
+//! (`numa-attn figure N`) both call these.
+
+use crate::attn::KernelKind;
+use crate::mapping::{Policy, ALL_POLICIES};
+use crate::metrics::Table;
+use crate::roofline;
+use crate::sim::{self, gemm, SimConfig, SimReport};
+use crate::topology::Topology;
+use crate::workload::sweeps::{self, SweepPoint};
+
+/// One x-axis point: metric value per policy.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub label: String,
+    pub values: Vec<(Policy, f64)>,
+}
+
+/// A regenerated figure: rows of (config, per-policy metric).
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub id: String,
+    pub title: String,
+    /// What the numbers mean (y-axis).
+    pub metric: String,
+    pub rows: Vec<FigureRow>,
+}
+
+impl FigureResult {
+    pub fn render(&self) -> String {
+        let mut headers: Vec<&str> = vec!["config"];
+        let labels: Vec<&str> = self
+            .rows
+            .first()
+            .map(|r| r.values.iter().map(|(p, _)| p.label()).collect())
+            .unwrap_or_default();
+        headers.extend(labels);
+        let mut t = Table::new(&headers);
+        for row in &self.rows {
+            let mut cells = vec![row.label.clone()];
+            cells.extend(row.values.iter().map(|(_, v)| format!("{v:.3}")));
+            t.row(cells);
+        }
+        format!("== {} — {} ==\nmetric: {}\n{}", self.id, self.title, self.metric, t.render())
+    }
+
+    /// JSON rendering for `--json` CLI output.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("title", Json::str(self.title.clone())),
+            ("metric", Json::str(self.metric.clone())),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("label", Json::str(r.label.clone())),
+                        (
+                            "values",
+                            Json::Obj(
+                                r.values
+                                    .iter()
+                                    .map(|(p, v)| (p.name().to_string(), Json::num(*v)))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Value for (row label, policy), for assertions in tests/benches.
+    pub fn value(&self, label: &str, policy: Policy) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)?
+            .values
+            .iter()
+            .find(|(p, _)| *p == policy)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// How many steady-state occupancy generations the sampled runs measure.
+const GENERATIONS: usize = 2;
+
+/// Run all four policies on one sweep point; forward kernel.
+pub fn run_point(topo: &Topology, pt: &SweepPoint) -> Vec<(Policy, SimReport)> {
+    ALL_POLICIES
+        .iter()
+        .map(|&p| {
+            let cfg = SimConfig {
+                kernel: KernelKind::Forward,
+                ..SimConfig::sampled(p, topo, GENERATIONS)
+            };
+            (p, sim::simulate(topo, &pt.cfg, &cfg))
+        })
+        .collect()
+}
+
+fn perf_rows(topo: &Topology, points: &[SweepPoint]) -> Vec<FigureRow> {
+    points
+        .iter()
+        .map(|pt| {
+            let reports = run_point(topo, pt);
+            let baseline = reports
+                .iter()
+                .find(|(p, _)| *p == Policy::SwizzledHeadFirst)
+                .map(|(_, r)| r.est_total_sec)
+                .unwrap();
+            FigureRow {
+                label: pt.label.clone(),
+                values: reports
+                    .into_iter()
+                    .map(|(p, r)| (p, baseline / r.est_total_sec))
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+fn hit_rate_rows(topo: &Topology, points: &[SweepPoint]) -> Vec<FigureRow> {
+    points
+        .iter()
+        .map(|pt| {
+            let reports = run_point(topo, pt);
+            FigureRow {
+                label: pt.label.clone(),
+                values: reports.into_iter().map(|(p, r)| (p, r.l2_hit_pct())).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Sweep subsetting for quick runs (CI) vs full paper grids.
+fn mha_points(quick: bool) -> Vec<SweepPoint> {
+    if quick {
+        sweeps::mha_sensitivity(&[8192, 131072], &[1, 8], &[8, 128])
+    } else {
+        sweeps::mha_sensitivity(
+            &sweeps::TABLE2_N_CTX,
+            &sweeps::TABLE2_BATCH,
+            &sweeps::TABLE2_HEADS,
+        )
+    }
+}
+
+/// Fig. 12: MHA performance relative to Swizzled Head-first across batch
+/// sizes and sequence lengths.
+pub fn fig12(topo: &Topology, quick: bool) -> FigureResult {
+    FigureResult {
+        id: "fig12".into(),
+        title: "MHA performance relative to Swizzled Head-first".into(),
+        metric: "normalized performance (SHF = 1.0)".into(),
+        rows: perf_rows(topo, &mha_points(quick)),
+    }
+}
+
+/// Fig. 13: aggregate L2 cache hit rates for the MHA sweep.
+pub fn fig13(topo: &Topology, quick: bool) -> FigureResult {
+    let points = if quick {
+        sweeps::mha_sensitivity(&[2048, 131072], &[1, 8], &[8, 128])
+    } else {
+        sweeps::mha_sensitivity(
+            &sweeps::FIG13_N_CTX,
+            &sweeps::TABLE2_BATCH,
+            &sweeps::TABLE2_HEADS,
+        )
+    };
+    FigureResult {
+        id: "fig13".into(),
+        title: "MHA aggregate L2 cache hit rates".into(),
+        metric: "L2 hit rate (%)".into(),
+        rows: hit_rate_rows(topo, &points),
+    }
+}
+
+/// Fig. 14: GQA (8 KV heads, Llama-3 family) performance relative to SHF.
+pub fn fig14(topo: &Topology, quick: bool) -> FigureResult {
+    let points = if quick {
+        sweeps::gqa_sensitivity(&[8192, 131072], &[1, 8])
+    } else {
+        sweeps::gqa_sensitivity(&sweeps::TABLE2_N_CTX, &sweeps::TABLE2_BATCH)
+    };
+    FigureResult {
+        id: "fig14".into(),
+        title: "GQA performance relative to Swizzled Head-first".into(),
+        metric: "normalized performance (SHF = 1.0)".into(),
+        rows: perf_rows(topo, &points),
+    }
+}
+
+/// Fig. 15: DeepSeek-V3 prefill (MHA, 128 heads, D=56) relative to SHF.
+pub fn fig15(topo: &Topology, quick: bool) -> FigureResult {
+    let points = if quick {
+        sweeps::deepseek_prefill(&[2048, 131072], &[1, 8])
+    } else {
+        sweeps::deepseek_prefill(&sweeps::FIG13_N_CTX, &sweeps::TABLE2_BATCH)
+    };
+    FigureResult {
+        id: "fig15".into(),
+        title: "DeepSeek-V3 prefill performance relative to SHF".into(),
+        metric: "normalized performance (SHF = 1.0)".into(),
+        rows: perf_rows(topo, &points),
+    }
+}
+
+/// Fig. 16: FA2 backward speedup vs Naive Block-first (H_Q = 128).
+pub fn fig16(topo: &Topology, quick: bool) -> FigureResult {
+    let points = if quick {
+        sweeps::backward_sweep(&[8192, 131072], &[1])
+    } else {
+        sweeps::backward_sweep(&[8192, 32768, 131072], &[1, 2])
+    };
+    let rows = points
+        .iter()
+        .map(|pt| {
+            let reports: Vec<(Policy, SimReport)> = ALL_POLICIES
+                .iter()
+                .map(|&p| {
+                    let cfg = SimConfig {
+                        max_wg_completions: SimConfig::sampled(p, topo, GENERATIONS)
+                            .max_wg_completions,
+                        warmup_completions: SimConfig::sampled(p, topo, GENERATIONS)
+                            .warmup_completions,
+                        ..SimConfig::backward(p)
+                    };
+                    (p, sim::simulate_backward(topo, &pt.cfg, &cfg))
+                })
+                .collect();
+            let baseline = reports
+                .iter()
+                .find(|(p, _)| *p == Policy::NaiveBlockFirst)
+                .map(|(_, r)| r.est_total_sec)
+                .unwrap();
+            FigureRow {
+                label: pt.label.clone(),
+                values: reports
+                    .into_iter()
+                    .map(|(p, r)| (p, baseline / r.est_total_sec))
+                    .collect(),
+            }
+        })
+        .collect();
+    FigureResult {
+        id: "fig16".into(),
+        title: "FA2 backward speedup vs Naive Block-first (H_Q=128)".into(),
+        metric: "speedup over Naive Block-first".into(),
+        rows,
+    }
+}
+
+/// Sec. 1 motivating claim: GEMM L2 hit rate 43% -> 92% with the chiplet
+/// swizzle.
+pub fn gemm_motivation(topo: &Topology) -> FigureResult {
+    let cfg = gemm::GemmConfig::default();
+    let naive = gemm::simulate_gemm(topo, &cfg, false);
+    let swizzled = gemm::simulate_gemm(topo, &cfg, true);
+    FigureResult {
+        id: "gemm".into(),
+        title: "GEMM workgroup swizzling (Sec. 1 motivation)".into(),
+        metric: "L2 hit rate (%)".into(),
+        rows: vec![
+            FigureRow {
+                label: "GEMM 4096x65536x4096 bf16".into(),
+                values: vec![
+                    (Policy::NaiveBlockFirst, 100.0 * naive.l2.hit_rate()),
+                    (Policy::SwizzledBlockFirst, 100.0 * swizzled.l2.hit_rate()),
+                ],
+            },
+        ],
+    }
+}
+
+/// Table 1 as a rendered string (`numa-attn explain --topo`).
+pub fn table1(topo: &Topology) -> String {
+    let mut t = Table::new(&["component", "specification"]);
+    t.row(vec!["Number of XCDs".into(), topo.num_xcds.to_string()]);
+    t.row(vec![
+        "Compute Units per XCD".into(),
+        format!("{} ({} total)", topo.cus_per_xcd, topo.total_cus()),
+    ]);
+    t.row(vec![
+        "L2 Cache per XCD".into(),
+        format!(
+            "{} MB ({} MB total)",
+            topo.l2_bytes_per_xcd / (1024 * 1024),
+            topo.total_l2_bytes() / (1024 * 1024)
+        ),
+    ]);
+    t.row(vec![
+        "HBM Bandwidth".into(),
+        format!("{:.1} TB/s", topo.hbm_bytes_per_sec / 1e12),
+    ]);
+    t.row(vec![
+        "Peak bf16".into(),
+        format!("{:.0} TFLOP/s", topo.device_flops_per_sec() / 1e12),
+    ]);
+    t.row(vec![
+        "Balance point".into(),
+        format!("{:.0} FLOP/byte", topo.balance_flops_per_byte()),
+    ]);
+    t.render()
+}
+
+/// Roofline summary rows for a config (used by `explain` and perf docs).
+pub fn roofline_summary(topo: &Topology, pt: &SweepPoint) -> String {
+    let r = roofline::attention_roofline(topo, &pt.cfg, KernelKind::Forward);
+    let k = roofline::kernel_estimate(&pt.cfg);
+    format!(
+        "{}: {:.1} GFLOP, intensity {:.0} flop/B ({}), ideal {:.3} ms | \
+         kernel: VMEM {:.1} KiB, MXU util {:.0}%",
+        pt.label,
+        r.total_flops / 1e9,
+        r.intensity,
+        if r.compute_bound { "compute-bound" } else { "memory-bound" },
+        r.ideal_sec * 1e3,
+        k.vmem_bytes as f64 / 1024.0,
+        100.0 * k.mxu_utilization,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn fast_topo() -> Topology {
+        // Scaled-down MI300X (keeps ratios; 8x fewer CUs, 8x smaller L2
+        // and bandwidth) so unit tests run fast.
+        Topology {
+            name: "mi300x-mini".into(),
+            cus_per_xcd: 8,
+            l2_bytes_per_xcd: 1024 * 1024,
+            hbm_bytes_per_sec: 5.3e12 / 4.75,
+            ..presets::mi300x()
+        }
+    }
+
+    #[test]
+    fn fig12_shape_shf_wins_at_scale() {
+        let topo = fast_topo();
+        let f = fig12(&topo, true);
+        assert_eq!(f.rows.len(), 2 * 2 * 2);
+        // At the extreme point, block-first must lose noticeably.
+        let label = "H=128 N=128K B=8";
+        let nbf = f.value(label, Policy::NaiveBlockFirst).unwrap();
+        let shf = f.value(label, Policy::SwizzledHeadFirst).unwrap();
+        assert!((shf - 1.0).abs() < 1e-9, "baseline normalization");
+        assert!(nbf < 0.9, "NBF should degrade at extreme config, got {nbf}");
+        // At the small point, all policies are close (paper: similar).
+        let small = "H=8 N=8K B=1";
+        let nbf_small = f.value(small, Policy::NaiveBlockFirst).unwrap();
+        assert!(nbf_small > 0.8, "small configs similar, got {nbf_small}");
+    }
+
+    #[test]
+    fn gemm_motivation_shape() {
+        let f = gemm_motivation(&presets::mi300x());
+        let naive = f.rows[0].values[0].1;
+        let swz = f.rows[0].values[1].1;
+        assert!(swz > naive + 20.0);
+        assert!(swz > 80.0);
+    }
+
+    #[test]
+    fn table1_renders() {
+        let s = table1(&presets::mi300x());
+        assert!(s.contains("8"));
+        assert!(s.contains("38 (304 total)"));
+        assert!(s.contains("4 MB (32 MB total)"));
+        assert!(s.contains("5.3 TB/s"));
+    }
+}

@@ -1,0 +1,47 @@
+//! # numa-attn
+//!
+//! Reproduction of *"Optimizing Attention on GPUs by Exploiting GPU
+//! Architectural NUMA Effects"* (CS.AR 2025): NUMA-aware workgroup
+//! scheduling for FlashAttention2 on chiplet GPUs, evaluated on a
+//! trace-driven chiplet-GPU memory-hierarchy simulator (we have no MI300X;
+//! see `DESIGN.md` for the substitution argument).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`topology`] — chiplet GPU architecture models (MI300X preset etc.)
+//! * [`cache`] — set-associative/LRU cache models with hit/miss statistics
+//! * [`mem`] — HBM bandwidth/queue model shared across XCDs
+//! * [`attn`] — FlashAttention2 grid model: workgroups and their tile
+//!   access streams (forward and backward), MHA/GQA, ACC derivation
+//! * [`mapping`] — the four workgroup-mapping policies of the paper
+//!   (Naive/Swizzled × Block-first/Head-first) plus ablation variants
+//! * [`sched`] — the hardware dispatcher model (chunked round-robin)
+//! * [`sim`] — the simulation engine: replays tile access streams through
+//!   per-XCD L2s + HBM and reports hit rates / cycles / normalized perf
+//! * [`roofline`] — analytic FLOPs/bytes and kernel VMEM/MXU estimates
+//! * [`workload`] — model presets (Llama-3, DeepSeek-V3) and paper sweeps
+//! * [`figures`] — one generator per paper table/figure (Figs. 12-16 ...)
+//! * [`runtime`] — PJRT CPU runtime executing AOT-compiled HLO artifacts
+//! * [`coordinator`] — the serving layer: router, batcher, workers
+//! * [`metrics`] — counters/histograms and report formatting
+
+pub mod attn;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod mapping;
+pub mod mem;
+pub mod metrics;
+pub mod roofline;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod topology;
+pub mod util;
+pub mod workload;
+
+pub use attn::AttnConfig;
+pub use mapping::Policy;
+pub use sim::{SimConfig, SimReport};
+pub use topology::Topology;

@@ -1,0 +1,315 @@
+//! `numa-attn` CLI: the leader entrypoint for simulations, figure
+//! regeneration, artifact verification, and the serving demo.
+//!
+//! Subcommands:
+//!   simulate  — run the chiplet simulator on one attention configuration
+//!   figure    — regenerate a paper figure (12..16, gemm, all)
+//!   explain   — print Table-1 style topology specs and mapping layouts
+//!   verify    — check AOT artifacts against golden checksums
+//!   serve     — run deterministic requests through the coordinator
+//!
+//! Run `numa-attn <subcommand> --help` for flags.
+
+use std::str::FromStr;
+
+use numa_attn::attn::AttnConfig;
+use numa_attn::config::ExperimentConfig;
+use numa_attn::coordinator::{self, BatcherConfig, ServiceConfig};
+use numa_attn::figures;
+use numa_attn::mapping::{Mapping, Policy, ALL_POLICIES};
+use numa_attn::metrics::Table;
+use numa_attn::sched::xcd_of_slot;
+use numa_attn::sim::{self, SimConfig};
+use numa_attn::topology::presets;
+use numa_attn::util::args::Args;
+use numa_attn::util::json::Json;
+use numa_attn::workload::RequestGenerator;
+
+const USAGE: &str = "\
+numa-attn — NUMA-aware attention scheduling on chiplet GPUs
+
+USAGE:
+  numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
+  numa-attn figure <12|13|14|15|16|gemm|all> [--topo T] [--quick] [--json]
+  numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
+  numa-attn verify [--artifacts DIR]
+  numa-attn serve [--artifacts DIR] [--requests N] [--max-batch B] [--max-wait-ms MS]
+
+simulate flags:
+  --topo NAME          topology preset (mi300x, unified, dual_die, quad_die)
+  --policy P           nbf|sbf|nhf|shf (default: all four)
+  --batch Z --heads H --kv-heads HK --n-ctx N --d-head D
+  --causal             causal masking
+  --backward           FA2 backward pass (dK/dV + dQ kernels)
+  --generations G      steady-state sample size (0 = whole grid)
+  --json               machine-readable output
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&raw, &["causal", "backward", "quick", "json", "help"])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("");
+    match cmd {
+        "simulate" => cmd_simulate(&args),
+        "figure" => cmd_figure(&args),
+        "explain" => cmd_explain(&args),
+        "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
+        other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn topo_arg(args: &Args) -> anyhow::Result<numa_attn::topology::Topology> {
+    let name: String = args.get_or("topo", "mi300x".to_string()).map_err(|e| anyhow::anyhow!(e))?;
+    presets::by_name(&name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown topology '{name}' (available: {})",
+            presets::all_names().join(", ")
+        )
+    })
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let a = |e: String| anyhow::anyhow!(e);
+    // Config-file mode: the experiment file fully determines everything.
+    if let Some(path) = args.get::<String>("config").map_err(a)? {
+        let text = std::fs::read_to_string(&path)?;
+        let exp = ExperimentConfig::parse(&text).map_err(a)?;
+        let topo = exp.topology().map_err(a)?;
+        let attn = exp.attn().map_err(a)?;
+        let mut reports = Vec::new();
+        for p in exp.policies().map_err(a)? {
+            if p.requires_divisible_heads() && attn.h_q % topo.num_xcds != 0 {
+                continue;
+            }
+            let sc = exp.sim(p).map_err(a)?;
+            let r = if exp.sim.backward {
+                sim::simulate_backward(&topo, &attn, &sc)
+            } else {
+                sim::simulate(&topo, &attn, &sc)
+            };
+            reports.push(r);
+        }
+        return print_reports(args, reports);
+    }
+    let (topo, attn, policies, backward, generations) =
+        {
+            let topo = topo_arg(args)?;
+            let heads: usize = args.get_or("heads", 32).map_err(a)?;
+            let attn = AttnConfig {
+                causal: args.has("causal"),
+                ..AttnConfig::gqa(
+                    args.get_or("batch", 1).map_err(a)?,
+                    heads,
+                    args.get_or("kv-heads", heads).map_err(a)?,
+                    args.get_or("n-ctx", 8192).map_err(a)?,
+                    args.get_or("d-head", 128).map_err(a)?,
+                )
+            };
+            attn.validate().map_err(a)?;
+            let policies = match args.get::<String>("policy").map_err(a)? {
+                Some(p) => vec![Policy::from_str(&p).map_err(a)?],
+                None => ALL_POLICIES.to_vec(),
+            };
+            (topo, attn, policies, args.has("backward"), args.get_or("generations", 2).map_err(a)?)
+        };
+
+    let mut reports = Vec::new();
+    for p in policies {
+        if p.requires_divisible_heads() && attn.h_q % topo.num_xcds != 0 {
+            eprintln!("note: skipping {} (heads {} not divisible by XCDs {})", p, attn.h_q, topo.num_xcds);
+            continue;
+        }
+        let mut sc = if backward { SimConfig::backward(p) } else { SimConfig::forward(p) };
+        if generations > 0 {
+            let sampled = SimConfig::sampled(p, &topo, generations);
+            sc.max_wg_completions = sampled.max_wg_completions;
+            sc.warmup_completions = sampled.warmup_completions;
+        }
+        let r = if backward {
+            sim::simulate_backward(&topo, &attn, &sc)
+        } else {
+            sim::simulate(&topo, &attn, &sc)
+        };
+        reports.push(r);
+    }
+    print_reports(args, reports)
+}
+
+fn print_reports(args: &Args, reports: Vec<sim::SimReport>) -> anyhow::Result<()> {
+    anyhow::ensure!(!reports.is_empty(), "no applicable policies");
+
+    if args.has("json") {
+        let arr = Json::arr(reports.iter().map(|r| r.to_json()));
+        println!("{}", arr.render());
+        return Ok(());
+    }
+    let best = reports.iter().map(|r| r.est_total_sec).fold(f64::INFINITY, f64::min);
+    let mut table = Table::new(&["policy", "L2 hit %", "HBM GB", "est time (ms)", "TFLOP/s", "rel perf"]);
+    for r in &reports {
+        table.row(vec![
+            r.policy.label().into(),
+            format!("{:.1}", r.l2_hit_pct()),
+            format!("{:.3}", r.hbm.bytes_read as f64 / 1e9),
+            format!("{:.3}", r.est_total_sec * 1e3),
+            format!("{:.1}", r.achieved_tflops),
+            format!("{:.3}", best / r.est_total_sec),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_arg(args)?;
+    let quick = args.has("quick");
+    let id = args
+        .positional()
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let figs: Vec<figures::FigureResult> = match id {
+        "12" | "fig12" => vec![figures::fig12(&topo, quick)],
+        "13" | "fig13" => vec![figures::fig13(&topo, quick)],
+        "14" | "fig14" => vec![figures::fig14(&topo, quick)],
+        "15" | "fig15" => vec![figures::fig15(&topo, quick)],
+        "16" | "fig16" => vec![figures::fig16(&topo, quick)],
+        "gemm" => vec![figures::gemm_motivation(&topo)],
+        "all" => vec![
+            figures::fig12(&topo, quick),
+            figures::fig13(&topo, quick),
+            figures::fig14(&topo, quick),
+            figures::fig15(&topo, quick),
+            figures::fig16(&topo, quick),
+            figures::gemm_motivation(&topo),
+        ],
+        other => anyhow::bail!("unknown figure '{other}'"),
+    };
+    for f in figs {
+        if args.has("json") {
+            println!("{}", f.to_json().render());
+        } else {
+            println!("{}", f.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_explain(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_arg(args)?;
+    println!("== {} (Table 1) ==\n{}", topo.name, figures::table1(&topo));
+    if let Some(m) = args.get::<String>("mapping").map_err(|e| anyhow::anyhow!(e))? {
+        let heads: usize = args.get_or("heads", 8).map_err(|e| anyhow::anyhow!(e))?;
+        let blocks: usize = args.get_or("blocks", 128).map_err(|e| anyhow::anyhow!(e))?;
+        let pols = if m == "all" {
+            ALL_POLICIES.to_vec()
+        } else {
+            vec![Policy::from_str(&m).map_err(|e| anyhow::anyhow!(e))?]
+        };
+        for p in pols {
+            println!(
+                "-- {} (heads={heads}, blocks={blocks}, XCDs={}) --",
+                p.label(),
+                topo.num_xcds
+            );
+            match Mapping::new(p, 1, heads, blocks, topo.num_xcds) {
+                Ok(map) => {
+                    let mut per_xcd: Vec<std::collections::BTreeSet<u32>> =
+                        vec![Default::default(); topo.num_xcds];
+                    for s in 0..map.grid_size() {
+                        let w = map.decode(s);
+                        per_xcd[xcd_of_slot(s, topo.dispatch_chunk, topo.num_xcds) as usize]
+                            .insert(w.h);
+                    }
+                    for (x, hs) in per_xcd.iter().enumerate() {
+                        let list: Vec<String> = hs.iter().map(|h| format!("HQ{h}")).collect();
+                        println!("  XCD{x}: {}", list.join(","));
+                    }
+                }
+                Err(e) => println!("  (not applicable: {e})"),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let dir: String = args.get_or("artifacts", "artifacts".to_string()).map_err(|e| anyhow::anyhow!(e))?;
+    let mut rt = numa_attn::runtime::Runtime::open(&dir)?;
+    rt.load_all()?;
+    let names: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.golden.is_some())
+        .map(|a| a.name.clone())
+        .collect();
+    println!("platform: {}", rt.platform());
+    for n in names {
+        let (got, want) = rt.verify(&n, 1e-3)?;
+        println!("  {n}: abs_sum {got:.4} (golden {want:.4}) OK");
+    }
+    println!("all golden checks passed");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let a = |e: String| anyhow::anyhow!(e);
+    let dir: String = args.get_or("artifacts", "artifacts".to_string()).map_err(a)?;
+    let requests: usize = args.get_or("requests", 32).map_err(a)?;
+    let cfg = ServiceConfig {
+        artifact_dir: dir.into(),
+        batcher: BatcherConfig {
+            max_batch: args.get_or("max-batch", 4).map_err(a)?,
+            max_wait: std::time::Duration::from_millis(args.get_or("max-wait-ms", 2).map_err(a)?),
+        },
+    };
+    let service = coordinator::AttentionService::start(cfg)?;
+    let lengths = service.router().bucket_lengths();
+    println!("buckets: {lengths:?}");
+    let mut gen = RequestGenerator::new(args.get_or("seed", 7).map_err(a)?, lengths);
+    let reqs = gen.take(requests);
+    let t0 = std::time::Instant::now();
+    let waiters: Vec<_> = reqs
+        .into_iter()
+        .map(|r| service.submit(r))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let mut ok = 0;
+    for w in waiters {
+        if w.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "served {ok}/{requests} in {:.1} ms ({:.1} req/s)",
+        elapsed.as_secs_f64() * 1e3,
+        requests as f64 / elapsed.as_secs_f64()
+    );
+    let m = service.shutdown();
+    println!(
+        "batches: {} (stacked execs: {}), queue p99 {} us, exec mean {:.0} us",
+        m.batches, m.stacked_executions, m.queue_wait.p99_us, m.exec.mean_us
+    );
+    Ok(())
+}

@@ -1,0 +1,294 @@
+//! Workgroup-mapping policies (paper Sec. 3.2-3.3, Figs. 3 & 7-11).
+//!
+//! A policy defines which logical work item `(batch, head, block)` a given
+//! *dispatch slot* executes. The hardware dispatcher assigns slots to
+//! XCDs in chunked round-robin order ([`crate::sched`]), so the policy is
+//! the software's only lever over *where* work runs — exactly the
+//! swizzling mechanism of the paper.
+//!
+//! The arithmetic here mirrors `python/compile/kernels/swizzle.py`
+//! line-for-line; `golden` tests pin the two implementations together.
+
+mod golden;
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::attn::{AttnConfig, KernelKind, WorkItem};
+
+/// The four mapping strategies the paper evaluates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Fig. 7: block-first iteration, round-robin XCDs. Splits every
+    /// XCD's L2 across H_Q/num_xcds concurrent ACC streams.
+    NaiveBlockFirst,
+    /// Fig. 8: block-first + chiplet swizzle (AITER's scheme). Pins
+    /// contiguous head groups per XCD; optimal for GQA when groups ==
+    /// XCDs, still interleaves multiple ACCs per XCD for MHA.
+    SwizzledBlockFirst,
+    /// Fig. 9: head-first iteration, round-robin XCDs (Triton default).
+    /// One ACC live at a time but replicated into every XCD's L2.
+    NaiveHeadFirst,
+    /// Figs. 10-11: the paper's contribution. Head-first + spatial
+    /// swizzle: every block of a head lands on one XCD; each XCD services
+    /// one ACC at a time.
+    SwizzledHeadFirst,
+}
+
+pub const ALL_POLICIES: [Policy; 4] = [
+    Policy::NaiveBlockFirst,
+    Policy::SwizzledBlockFirst,
+    Policy::NaiveHeadFirst,
+    Policy::SwizzledHeadFirst,
+];
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::NaiveBlockFirst => "naive_block_first",
+            Policy::SwizzledBlockFirst => "swizzled_block_first",
+            Policy::NaiveHeadFirst => "naive_head_first",
+            Policy::SwizzledHeadFirst => "swizzled_head_first",
+        }
+    }
+
+    /// Short label used in figure output (matches the paper's legends).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::NaiveBlockFirst => "Naive Block-first",
+            Policy::SwizzledBlockFirst => "Swizzled Block-first",
+            Policy::NaiveHeadFirst => "Naive Head-first",
+            Policy::SwizzledHeadFirst => "Swizzled Head-first",
+        }
+    }
+
+    /// Does this policy's swizzle arithmetic require `num_xcds | h_q`?
+    pub fn requires_divisible_heads(&self) -> bool {
+        matches!(self, Policy::SwizzledBlockFirst | Policy::SwizzledHeadFirst)
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "naive_block_first" | "nbf" => Ok(Policy::NaiveBlockFirst),
+            "swizzled_block_first" | "sbf" => Ok(Policy::SwizzledBlockFirst),
+            "naive_head_first" | "nhf" => Ok(Policy::NaiveHeadFirst),
+            "swizzled_head_first" | "shf" => Ok(Policy::SwizzledHeadFirst),
+            other => Err(format!(
+                "unknown policy '{other}' (expected one of nbf/sbf/nhf/shf or full names)"
+            )),
+        }
+    }
+}
+
+/// GEMM-style chiplet swizzle (paper Fig. 3): remaps a linear workgroup id
+/// so ids that round-robin to the same XCD become contiguous logically.
+pub fn chiplet_swizzle(wgid: usize, grid: usize, num_xcd: usize) -> usize {
+    let wgids_per_xcd = grid / num_xcd;
+    let xcd = wgid % num_xcd;
+    let local_wgid = wgid / num_xcd;
+    xcd * wgids_per_xcd + local_wgid
+}
+
+/// A mapping instance bound to a grid geometry: decodes dispatch slots to
+/// work items in O(1) with no allocation (the simulator hot path).
+#[derive(Debug, Clone, Copy)]
+pub struct Mapping {
+    pub policy: Policy,
+    pub batch: usize,
+    pub heads: usize,
+    pub blocks: usize,
+    pub num_xcds: usize,
+}
+
+impl Mapping {
+    pub fn new(
+        policy: Policy,
+        batch: usize,
+        heads: usize,
+        blocks: usize,
+        num_xcds: usize,
+    ) -> Result<Self, String> {
+        if batch == 0 || heads == 0 || blocks == 0 || num_xcds == 0 {
+            return Err("mapping dimensions must be > 0".into());
+        }
+        if policy.requires_divisible_heads() && heads % num_xcds != 0 {
+            return Err(format!(
+                "{policy} requires num_heads ({heads}) divisible by num_xcds ({num_xcds})"
+            ));
+        }
+        Ok(Mapping { policy, batch, heads, blocks, num_xcds })
+    }
+
+    /// Build a mapping for an attention kernel grid.
+    pub fn for_kernel(
+        policy: Policy,
+        cfg: &AttnConfig,
+        kernel: KernelKind,
+        num_xcds: usize,
+    ) -> Result<Self, String> {
+        Self::new(policy, cfg.batch, cfg.h_q, cfg.blocks_for(kernel), num_xcds)
+    }
+
+    pub fn grid_size(&self) -> usize {
+        self.batch * self.heads * self.blocks
+    }
+
+    /// Decode dispatch slot -> logical (batch, head, block).
+    ///
+    /// Mirrors `swizzle.decode` in Python; batch is outermost everywhere
+    /// (the paper Fig. 11's `wid_per_batch = wid // BATCH` line is a typo
+    /// for `wid % (heads*blocks)` — see DESIGN.md).
+    #[inline]
+    pub fn decode(&self, slot: usize) -> WorkItem {
+        debug_assert!(slot < self.grid_size());
+        let per_batch = self.heads * self.blocks;
+        let z = (slot / per_batch) as u32;
+        let r = slot % per_batch;
+        let (h, b) = match self.policy {
+            Policy::NaiveBlockFirst => (r % self.heads, r / self.heads),
+            Policy::SwizzledBlockFirst => {
+                let hpx = self.heads / self.num_xcds;
+                let x = r % self.num_xcds;
+                let j = r / self.num_xcds;
+                (x * hpx + j % hpx, j / hpx)
+            }
+            Policy::NaiveHeadFirst => (r / self.blocks, r % self.blocks),
+            Policy::SwizzledHeadFirst => {
+                let hpx = self.heads / self.num_xcds;
+                let x = r % self.num_xcds;
+                let j = r / self.num_xcds;
+                (x * hpx + j / self.blocks, j % self.blocks)
+            }
+        };
+        WorkItem { z, h: h as u32, b: b as u32 }
+    }
+
+    /// Decode the whole grid in slot order (tests / `explain`).
+    pub fn decode_all(&self) -> Vec<WorkItem> {
+        (0..self.grid_size()).map(|s| self.decode(s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    use super::*;
+    use crate::attn::acc::AccSpread;
+    use crate::sched::xcd_of_slot;
+
+    fn spread(policy: Policy, cfg: &AttnConfig, xcds: usize) -> AccSpread {
+        let m = Mapping::for_kernel(policy, cfg, KernelKind::Forward, xcds).unwrap();
+        AccSpread::measure(
+            cfg,
+            xcds,
+            (0..m.grid_size()).map(|s| (m.decode(s), xcd_of_slot(s, 1, xcds))),
+        )
+    }
+
+    #[test]
+    fn bijective_all_policies() {
+        for policy in ALL_POLICIES {
+            for (b, h, nb, x) in [(1, 8, 16, 4), (2, 16, 7, 8), (3, 8, 1, 2), (1, 128, 32, 8)] {
+                let m = Mapping::new(policy, b, h, nb, x).unwrap();
+                let set: BTreeSet<_> = m.decode_all().into_iter().map(|w| (w.z, w.h, w.b)).collect();
+                assert_eq!(set.len(), m.grid_size(), "{policy} {b}x{h}x{nb}/{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn shf_confines_each_head_to_one_xcd() {
+        let cfg = AttnConfig::mha(2, 16, 2048, 128);
+        let s = spread(Policy::SwizzledHeadFirst, &cfg, 8);
+        assert!(s.perfectly_colocated());
+    }
+
+    #[test]
+    fn nhf_replicates_each_head_everywhere() {
+        let cfg = AttnConfig::mha(1, 8, 8192, 128); // 64 blocks each
+        let s = spread(Policy::NaiveHeadFirst, &cfg, 8);
+        for (_, n) in &s.xcds_per_acc {
+            assert_eq!(*n, 8, "each head striped across all XCDs");
+        }
+    }
+
+    #[test]
+    fn block_first_interleaves_many_accs_per_xcd() {
+        let cfg = AttnConfig::mha(1, 128, 8192, 128);
+        let nbf = spread(Policy::NaiveBlockFirst, &cfg, 8);
+        let shf = spread(Policy::SwizzledHeadFirst, &cfg, 8);
+        assert_eq!(nbf.max_accs_per_xcd(), 16); // 128 heads / 8 XCDs
+        assert_eq!(shf.max_accs_per_xcd(), 16); // over the whole grid...
+        // ...but SHF still perfectly co-locates each ACC:
+        assert!(shf.perfectly_colocated());
+        assert!(nbf.perfectly_colocated()); // NBF pins heads too (h % X)!
+        // The difference is CONCURRENCY, covered by sim tests: NBF's
+        // consecutive slots on one XCD alternate heads, SHF's don't.
+        let m = Mapping::new(Policy::NaiveBlockFirst, 1, 128, 64, 8).unwrap();
+        let h0 = m.decode(0).h;
+        let h1 = m.decode(8).h; // next slot on XCD0
+        assert_ne!(h0, h1);
+        let m = Mapping::new(Policy::SwizzledHeadFirst, 1, 128, 64, 8).unwrap();
+        assert_eq!(m.decode(0).h, m.decode(8).h);
+    }
+
+    #[test]
+    fn sbf_gqa_pins_groups_when_groups_match_xcds() {
+        // Paper Sec. 4.4: H_K == num XCDs makes SBF co-locate perfectly.
+        let cfg = AttnConfig::gqa(1, 64, 8, 8192, 128);
+        let s = spread(Policy::SwizzledBlockFirst, &cfg, 8);
+        assert!(s.perfectly_colocated());
+        assert_eq!(s.max_accs_per_xcd(), 1);
+        // NBF spreads each group everywhere instead.
+        let s = spread(Policy::NaiveBlockFirst, &cfg, 8);
+        assert!(!s.perfectly_colocated());
+    }
+
+    #[test]
+    fn chiplet_swizzle_fig3() {
+        let remapped: Vec<usize> = (0..16).map(|w| chiplet_swizzle(w, 16, 4)).collect();
+        let mut sorted = remapped.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<_>>());
+        assert_eq!(
+            [remapped[0], remapped[4], remapped[8], remapped[12]],
+            [0, 1, 2, 3]
+        );
+        assert_eq!(
+            [remapped[1], remapped[5], remapped[9], remapped[13]],
+            [4, 5, 6, 7]
+        );
+    }
+
+    #[test]
+    fn indivisible_heads_rejected_for_swizzled() {
+        assert!(Mapping::new(Policy::SwizzledHeadFirst, 1, 6, 4, 8).is_err());
+        assert!(Mapping::new(Policy::SwizzledBlockFirst, 1, 6, 4, 8).is_err());
+        assert!(Mapping::new(Policy::NaiveHeadFirst, 1, 6, 4, 8).is_ok());
+        assert!(Mapping::new(Policy::NaiveBlockFirst, 1, 6, 4, 8).is_ok());
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!("shf".parse::<Policy>().unwrap(), Policy::SwizzledHeadFirst);
+        assert_eq!(
+            "naive_block_first".parse::<Policy>().unwrap(),
+            Policy::NaiveBlockFirst
+        );
+        assert!("bogus".parse::<Policy>().is_err());
+        for p in ALL_POLICIES {
+            assert_eq!(p.name().parse::<Policy>().unwrap(), p);
+        }
+    }
+}

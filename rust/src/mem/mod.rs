@@ -1,0 +1,17 @@
+//! HBM memory system model: a bandwidth-budgeted request queue shared by
+//! all XCDs, with per-XCD MSHR merging.
+//!
+//! This is where the NUMA *traffic* costs of the paper materialize:
+//! * every L2 miss becomes an HBM request;
+//! * requests for the same tile from the *same* XCD are merged (MSHRs),
+//!   so lockstep workgroups sharing a stream cost one fetch;
+//! * requests for the same tile from *different* XCDs are NOT merged —
+//!   that is the replication traffic of Naive Head-first (Fig. 9), where
+//!   all eight dies stream identical K/V;
+//! * the queue drains at the topology's bandwidth budget per tick, so
+//!   miss storms (block-first thrash, Fig. 13's ~1% hit rates) saturate
+//!   the queue and stall compute — the 50% performance loss of Fig. 12.
+
+pub mod hbm;
+
+pub use hbm::{Completion, HbmModel, HbmStats, RequestId};

@@ -1,0 +1,157 @@
+//! Analytic roofline and kernel-resource models.
+//!
+//! Two uses:
+//! * sanity-bounding the simulator (a policy can never beat the
+//!   compute/bandwidth roofline), and
+//! * the L1 performance estimate the Pallas kernel cannot give us on CPU
+//!   (interpret mode): VMEM footprint and MXU utilization from the
+//!   BlockSpec tile shapes (DESIGN.md §Perf).
+
+use crate::attn::{AttnConfig, KernelKind};
+use crate::topology::Topology;
+
+/// Roofline estimate for one kernel launch.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub total_flops: f64,
+    /// HBM bytes with perfect per-device caching (each tensor once).
+    pub ideal_bytes: f64,
+    /// HBM bytes if every XCD streams its own copy of shared tensors
+    /// (the replication worst case, e.g. Naive Head-first).
+    pub replicated_bytes: f64,
+    pub compute_sec: f64,
+    pub ideal_memory_sec: f64,
+    /// min attainable time = max(compute, ideal memory).
+    pub ideal_sec: f64,
+    pub intensity: f64,
+    pub compute_bound: bool,
+}
+
+/// Roofline for an attention kernel on a topology.
+pub fn attention_roofline(topo: &Topology, cfg: &AttnConfig, kernel: KernelKind) -> Roofline {
+    let steps = crate::sim::avg_stream_len(cfg, kernel);
+    let (step_flops, grid) = match kernel {
+        KernelKind::Forward => (cfg.fwd_step_flops(), cfg.grid_size(kernel)),
+        KernelKind::BwdDkDv => (cfg.dkdv_step_flops(), cfg.grid_size(kernel)),
+        KernelKind::BwdDq => (cfg.dq_step_flops(), cfg.grid_size(kernel)),
+    };
+    let total_flops = grid as f64 * step_flops * steps;
+
+    let elt = cfg.dtype_bytes as f64;
+    let q = (cfg.batch * cfg.h_q * cfg.n_ctx * cfg.d_head) as f64 * elt;
+    let kv = 2.0 * (cfg.batch * cfg.h_k * cfg.n_ctx * cfg.d_head) as f64 * elt;
+    let o = q;
+    let ideal_bytes = match kernel {
+        KernelKind::Forward => q + kv + o,
+        // backward reads q, k, v, o(do), lse, delta and writes dq/dk/dv
+        _ => 3.0 * q + 2.0 * kv,
+    };
+    let replicated_bytes = ideal_bytes
+        + (topo.num_xcds as f64 - 1.0) * kv.min(ideal_bytes);
+
+    let compute_sec = total_flops / topo.device_flops_per_sec();
+    let ideal_memory_sec = ideal_bytes / topo.hbm_bytes_per_sec;
+    let intensity = total_flops / ideal_bytes;
+    Roofline {
+        total_flops,
+        ideal_bytes,
+        replicated_bytes,
+        compute_sec,
+        ideal_memory_sec,
+        ideal_sec: compute_sec.max(ideal_memory_sec),
+        intensity,
+        compute_bound: intensity > topo.balance_flops_per_byte(),
+    }
+}
+
+/// Pallas-kernel VMEM/MXU estimate from the BlockSpec tile shapes — the
+/// L1 performance deliverable for a CPU-only environment (DESIGN.md
+/// §Hardware-Adaptation). Mirrors python/compile/kernels/fa2.py.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelEstimate {
+    /// Bytes resident in VMEM per grid step: Q block + K/V tiles (double
+    /// buffered) + accumulator + softmax state.
+    pub vmem_bytes: u64,
+    /// Fraction of the 128x128 MXU each dot's operand tiles fill.
+    pub mxu_utilization: f64,
+    /// FLOPs per grid step.
+    pub step_flops: f64,
+}
+
+pub fn kernel_estimate(cfg: &AttnConfig) -> KernelEstimate {
+    let elt = cfg.dtype_bytes as u64;
+    let (m, n, d) = (cfg.block_m as u64, cfg.block_n as u64, cfg.d_head as u64);
+    // Q tile + 2x double-buffered K and V tiles + f32 accumulator
+    // (m x d) + m/l vectors (f32) + S/P scratch (m x n f32).
+    let vmem = m * d * elt + 2 * 2 * (n * d * elt) + m * d * 4 + 2 * m * 4 + m * n * 4;
+    // MXU on TPU-like hardware multiplies 128x128 tiles; a dot of
+    // (m x d) @ (d x n) utilizes min(m,128)/128 * min(n,128)/128 ...
+    // averaged over the two dots (S = Q K^T over d, O = P V over n).
+    let u = |rows: u64, cols: u64| -> f64 {
+        (rows.min(128) as f64 / 128.0) * (cols.min(128) as f64 / 128.0)
+    };
+    let mxu = 0.5 * (u(m, n) + u(m, d));
+    KernelEstimate {
+        vmem_bytes: vmem,
+        mxu_utilization: mxu,
+        step_flops: cfg.fwd_step_flops(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    #[test]
+    fn fwd_roofline_matches_hand_math() {
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::mha(1, 8, 8192, 128);
+        let r = attention_roofline(&topo, &cfg, KernelKind::Forward);
+        // 4 Z H N^2 D
+        let expected = 4.0 * 8.0 * 8192.0f64 * 8192.0 * 128.0;
+        assert!((r.total_flops - expected).abs() / expected < 1e-9);
+        assert!(r.compute_bound); // D=128 fp16 attention is compute bound
+    }
+
+    #[test]
+    fn deepseek_d56_lower_absolute_performance() {
+        // Paper Sec. 4.5: D_HEAD = 56 lowers absolute performance across
+        // all methods — modeled as reduced matrix-core efficiency.
+        let d128 = AttnConfig::mha(1, 128, 8192, 128);
+        let d56 = AttnConfig::mha(1, 128, 8192, 56);
+        assert!(d56.compute_efficiency_factor() < d128.compute_efficiency_factor());
+    }
+
+    #[test]
+    fn replication_inflates_bytes() {
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::mha(1, 8, 8192, 128);
+        let r = attention_roofline(&topo, &cfg, KernelKind::Forward);
+        assert!(r.replicated_bytes > 2.0 * r.ideal_bytes);
+    }
+
+    #[test]
+    fn kernel_estimate_fits_vmem() {
+        // The paper's tile config must fit a TPU-like 16 MiB VMEM easily.
+        let cfg = AttnConfig::mha(1, 8, 8192, 128);
+        let e = kernel_estimate(&cfg);
+        assert!(e.vmem_bytes < 16 * 1024 * 1024);
+        assert!(e.vmem_bytes > 0);
+        // 128x64 blocks with D=128: S-dot uses a half-full MXU in n.
+        assert!((e.mxu_utilization - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simulator_never_beats_roofline() {
+        use crate::mapping::Policy;
+        use crate::sim::{simulate, SimConfig};
+        let mut topo = presets::mi300x();
+        topo.cus_per_xcd = 8; // keep test fast
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 128) };
+        let r = attention_roofline(&topo, &cfg, KernelKind::Forward);
+        let s = simulate(&topo, &cfg, &SimConfig::forward(Policy::SwizzledHeadFirst));
+        // Efficiency < 1.0 of peak is enforced, so sim time > roofline.
+        assert!(s.est_total_sec >= r.compute_sec * 0.99, "{} vs {}", s.est_total_sec, r.compute_sec);
+    }
+}

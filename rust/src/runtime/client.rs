@@ -1,0 +1,192 @@
+//! The PJRT client wrapper: compile-once, execute-many.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// Output of one artifact execution.
+#[derive(Debug, Clone)]
+pub struct ExecutionResult {
+    /// One flat f32 buffer per declared output.
+    pub outputs: Vec<Vec<f32>>,
+    /// Device execution time (compile excluded).
+    pub elapsed: Duration,
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// Compiled-artifact registry over a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, Loaded>,
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime over `artifact_dir` without compiling anything.
+    pub fn open(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, loaded: HashMap::new(), manifest, dir })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.loaded.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Load + compile one artifact by name (idempotent).
+    pub fn load(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.loaded.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling '{name}': {e:?}"))?;
+        self.loaded.insert(name.to_string(), Loaded { exe, meta });
+        Ok(())
+    }
+
+    /// Load + compile every artifact in the manifest.
+    pub fn load_all(&mut self) -> anyhow::Result<()> {
+        let names: Vec<String> = self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in names {
+            self.load(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on flat f32 input buffers (shapes from
+    /// the manifest). Returns flat f32 outputs.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> anyhow::Result<ExecutionResult> {
+        let loaded = self
+            .loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let meta = &loaded.meta;
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "'{name}' expects {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&meta.inputs) {
+            anyhow::ensure!(
+                buf.len() == spec.num_elements(),
+                "input size {} != spec {:?}",
+                buf.len(),
+                spec.shape
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
+            literals.push(lit);
+        }
+
+        let start = Instant::now();
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing '{name}': {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
+        let elapsed = start.elapsed();
+
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing tuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == meta.outputs.len(),
+            "'{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            meta.outputs.len()
+        );
+        let mut outputs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outputs.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("reading f32 output: {e:?}"))?,
+            );
+        }
+        Ok(ExecutionResult { outputs, elapsed })
+    }
+
+    /// Execute an artifact on its manifest-declared deterministic inputs
+    /// (the golden path used by `verify`).
+    pub fn execute_with_det_inputs(&self, name: &str) -> anyhow::Result<ExecutionResult> {
+        let meta = &self
+            .loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?
+            .meta;
+        let inputs: Vec<Vec<f32>> = meta
+            .input_seeds
+            .iter()
+            .zip(&meta.inputs)
+            .map(|(&seed, spec)| super::inputs::det_input(seed, spec.num_elements()))
+            .collect();
+        self.execute(name, &inputs)
+    }
+
+    /// Execute with deterministic inputs and check against the manifest's
+    /// golden statistics. Returns (abs_sum_measured, abs_sum_expected).
+    pub fn verify(&self, name: &str, tol: f64) -> anyhow::Result<(f64, f64)> {
+        let meta = self
+            .loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?
+            .meta
+            .clone();
+        let golden = meta
+            .golden
+            .as_ref()
+            .with_context(|| format!("artifact '{name}' has no golden stats"))?;
+        let result = self.execute_with_det_inputs(name)?;
+        let (abs_sum, _, _) = super::inputs::stats(&result.outputs[0]);
+        let rel = (abs_sum - golden.abs_sum).abs() / golden.abs_sum.max(1e-9);
+        anyhow::ensure!(
+            rel < tol,
+            "'{name}' golden mismatch: measured {abs_sum:.4}, expected {:.4} (rel {rel:.2e})",
+            golden.abs_sum
+        );
+        Ok((abs_sum, golden.abs_sum))
+    }
+}

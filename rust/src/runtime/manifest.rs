@@ -1,0 +1,245 @@
+//! `artifacts/manifest.json` schema (written by python/compile/aot.py),
+//! parsed with the in-tree JSON parser (`util::json`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Attention geometry of an `attn_fwd` artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttnMeta {
+    pub batch: usize,
+    pub h_q: usize,
+    pub h_k: usize,
+    pub n_ctx: usize,
+    pub d_head: usize,
+    pub causal: bool,
+    pub block_m: usize,
+    pub block_n: usize,
+    pub policy: String,
+    pub num_xcd: usize,
+}
+
+/// Golden output statistics computed by the Python oracle on the
+/// deterministic inputs (`input_seeds` + runtime::inputs::det_input).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Golden {
+    pub abs_sum: f64,
+    pub mean: f64,
+    pub l2: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub input_seeds: Vec<u64>,
+    pub outputs: Vec<TensorSpec>,
+    pub attn: Option<AttnMeta>,
+    pub golden: Option<Golden>,
+}
+
+fn spec_from(j: &Json) -> anyhow::Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("tensor spec missing shape")?
+        .iter()
+        .map(|d| d.as_usize().context("bad shape dim"))
+        .collect::<anyhow::Result<Vec<usize>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .context("tensor spec missing dtype")?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+fn req_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("missing/invalid '{key}'"))
+}
+
+fn artifact_from(j: &Json) -> anyhow::Result<ArtifactMeta> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .context("artifact missing name")?
+        .to_string();
+    let parse = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .with_context(|| format!("'{name}' missing {key}"))?
+            .iter()
+            .map(spec_from)
+            .collect()
+    };
+    let attn = match j.get("attn") {
+        None | Some(Json::Null) => None,
+        Some(a) => Some(AttnMeta {
+            batch: req_usize(a, "batch")?,
+            h_q: req_usize(a, "h_q")?,
+            h_k: req_usize(a, "h_k")?,
+            n_ctx: req_usize(a, "n_ctx")?,
+            d_head: req_usize(a, "d_head")?,
+            causal: a.get("causal").and_then(Json::as_bool).unwrap_or(false),
+            block_m: req_usize(a, "block_m")?,
+            block_n: req_usize(a, "block_n")?,
+            policy: a
+                .get("policy")
+                .and_then(Json::as_str)
+                .unwrap_or("swizzled_head_first")
+                .to_string(),
+            num_xcd: req_usize(a, "num_xcd")?,
+        }),
+    };
+    let golden = match j.get("golden") {
+        None | Some(Json::Null) => None,
+        Some(g) => Some(Golden {
+            abs_sum: g.get("abs_sum").and_then(Json::as_f64).context("golden.abs_sum")?,
+            mean: g.get("mean").and_then(Json::as_f64).context("golden.mean")?,
+            l2: g.get("l2").and_then(Json::as_f64).context("golden.l2")?,
+        }),
+    };
+    Ok(ArtifactMeta {
+        kind: j
+            .get("kind")
+            .and_then(Json::as_str)
+            .context("artifact missing kind")?
+            .to_string(),
+        file: j
+            .get("file")
+            .and_then(Json::as_str)
+            .context("artifact missing file")?
+            .to_string(),
+        inputs: parse("inputs")?,
+        input_seeds: j
+            .get("input_seeds")
+            .and_then(Json::as_arr)
+            .context("missing input_seeds")?
+            .iter()
+            .map(|s| s.as_u64().context("bad seed"))
+            .collect::<anyhow::Result<Vec<u64>>>()?,
+        outputs: parse("outputs")?,
+        attn,
+        golden,
+        name,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_str)
+            .context("manifest missing format")?
+            .to_string();
+        anyhow::ensure!(format == "hlo-text-v1", "unsupported artifact format '{format}'");
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+            .iter()
+            .map(artifact_from)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest { format, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// attn_fwd artifacts, the serving catalogue.
+    pub fn attention_artifacts(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == "attn_fwd")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "artifacts": [{
+        "name": "attn_mha_z1_h8_n256_d64",
+        "kind": "attn_fwd",
+        "file": "attn_mha_z1_h8_n256_d64.hlo.txt",
+        "inputs": [{"shape": [1,8,256,64], "dtype": "float32"}],
+        "input_seeds": [1],
+        "outputs": [{"shape": [1,8,256,64], "dtype": "float32"}],
+        "attn": {"batch":1,"h_q":8,"h_k":8,"n_ctx":256,"d_head":64,
+                 "causal":false,"block_m":64,"block_n":64,
+                 "policy":"swizzled_head_first","num_xcd":8},
+        "golden": {"abs_sum": 123.4, "mean": 0.01, "l2": 5.0}
+      }]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("attn_mha_z1_h8_n256_d64").unwrap();
+        assert_eq!(a.inputs[0].num_elements(), 8 * 256 * 64);
+        assert_eq!(a.attn.as_ref().unwrap().n_ctx, 256);
+        assert!((a.golden.as_ref().unwrap().abs_sum - 123.4).abs() < 1e-9);
+        assert!(m.get("nope").is_none());
+        assert_eq!(m.attention_artifacts().count(), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text-v1", "hlo-v2");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = SAMPLE.replace("\"kind\": \"attn_fwd\",", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.attention_artifacts().count() >= 2);
+            for a in &m.artifacts {
+                assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+                assert_eq!(a.input_seeds.len(), a.inputs.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. Python never runs
+//! on the request path: `make artifacts` is a build step, after which the
+//! Rust binary is self-contained.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod inputs;
+pub mod manifest;
+
+mod client;
+
+pub use client::{ExecutionResult, Runtime};
+pub use manifest::{ArtifactMeta, Manifest, TensorSpec};

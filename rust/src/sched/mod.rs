@@ -1,0 +1,174 @@
+//! Hardware dispatcher model (paper Sec. 2.2).
+//!
+//! Modern multi-die GPUs schedule workgroups across compute dies with a
+//! *chunked round-robin* policy: each die receives `chunk` consecutive
+//! dispatch slots before the scheduler advances to the next die. Current
+//! hardware uses chunk = 1. This module provides the slot ↔ XCD algebra
+//! and a [`Dispatcher`] that hands out work in dispatch order per XCD —
+//! exactly the behavior the mapping policies are designed against (and,
+//! because the chunk size is a driver detail that "is subject to change
+//! across GPU generations", an ablation axis: see
+//! `rust/tests/ablation.rs` for what happens to a chunk=1 swizzle on
+//! chunk=2 hardware).
+
+use crate::mapping::Mapping;
+use crate::attn::WorkItem;
+
+/// XCD that dispatch slot `slot` lands on under chunked round-robin.
+#[inline]
+pub fn xcd_of_slot(slot: usize, chunk: usize, num_xcds: usize) -> u32 {
+    ((slot / chunk) % num_xcds) as u32
+}
+
+/// The `n`-th dispatch slot that lands on XCD `x` (inverse of
+/// [`xcd_of_slot`] restricted to one XCD).
+#[inline]
+pub fn slot_of_xcd_local(n: usize, x: u32, chunk: usize, num_xcds: usize) -> usize {
+    let group = n / chunk;
+    let r = n % chunk;
+    (group * num_xcds + x as usize) * chunk + r
+}
+
+/// Hands out workgroups to XCDs in hardware dispatch order.
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    mapping: Mapping,
+    chunk: usize,
+    num_xcds: usize,
+    /// Per-XCD count of workgroups already dispatched.
+    issued: Vec<usize>,
+}
+
+impl Dispatcher {
+    pub fn new(mapping: Mapping, chunk: usize, num_xcds: usize) -> Self {
+        assert!(chunk > 0 && num_xcds > 0);
+        Dispatcher { mapping, chunk, num_xcds, issued: vec![0; num_xcds] }
+    }
+
+    pub fn grid_size(&self) -> usize {
+        self.mapping.grid_size()
+    }
+
+    /// Total workgroups dispatched so far.
+    pub fn total_issued(&self) -> usize {
+        self.issued.iter().sum()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.grid_size() - self.total_issued()
+    }
+
+    /// Next workgroup for XCD `x`, if any remain for it.
+    ///
+    /// Note: an XCD can run out of work while others still have some when
+    /// the grid size is not a multiple of `num_xcds * chunk` — the tail
+    /// imbalance real hardware has too.
+    pub fn next_for_xcd(&mut self, x: u32) -> Option<(usize, WorkItem)> {
+        let n = self.issued[x as usize];
+        let slot = slot_of_xcd_local(n, x, self.chunk, self.num_xcds);
+        if slot >= self.grid_size() {
+            return None;
+        }
+        self.issued[x as usize] += 1;
+        Some((slot, self.mapping.decode(slot)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::Policy;
+
+    #[test]
+    fn chunk1_round_robin() {
+        for slot in 0..32 {
+            assert_eq!(xcd_of_slot(slot, 1, 8), (slot % 8) as u32);
+        }
+    }
+
+    #[test]
+    fn chunk2_pairs() {
+        let xcds: Vec<u32> = (0..12).map(|s| xcd_of_slot(s, 2, 4)).collect();
+        assert_eq!(xcds, vec![0, 0, 1, 1, 2, 2, 3, 3, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn slot_inverse_roundtrip() {
+        for chunk in [1, 2, 4] {
+            for num_xcds in [2, 4, 8] {
+                for x in 0..num_xcds as u32 {
+                    for n in 0..20 {
+                        let slot = slot_of_xcd_local(n, x, chunk, num_xcds);
+                        assert_eq!(xcd_of_slot(slot, chunk, num_xcds), x);
+                    }
+                }
+                // All slots covered exactly once.
+                let mut seen: Vec<usize> = (0..num_xcds as u32)
+                    .flat_map(|x| (0..8).map(move |n| (n, x)))
+                    .map(|(n, x)| slot_of_xcd_local(n, x, chunk, num_xcds))
+                    .collect();
+                seen.sort_unstable();
+                let expected: Vec<usize> = (0..8 * num_xcds).collect();
+                assert_eq!(seen, expected);
+            }
+        }
+    }
+
+    #[test]
+    fn dispatcher_exhausts_grid_exactly_once() {
+        let m = Mapping::new(Policy::SwizzledHeadFirst, 1, 8, 5, 4).unwrap();
+        let mut d = Dispatcher::new(m, 1, 4);
+        let mut items = Vec::new();
+        loop {
+            let mut any = false;
+            for x in 0..4 {
+                if let Some((slot, w)) = d.next_for_xcd(x) {
+                    assert_eq!(xcd_of_slot(slot, 1, 4), x);
+                    items.push((w.z, w.h, w.b));
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        assert_eq!(items.len(), 40);
+        items.sort_unstable();
+        items.dedup();
+        assert_eq!(items.len(), 40, "every work item exactly once");
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn dispatcher_tail_imbalance() {
+        // 10 WGs over 4 XCDs: XCD0/1 get 3, XCD2/3 get 2.
+        let m = Mapping::new(Policy::NaiveHeadFirst, 1, 1, 10, 4).unwrap();
+        let mut d = Dispatcher::new(m, 1, 4);
+        let mut counts = [0; 4];
+        for x in 0..4u32 {
+            while d.next_for_xcd(x).is_some() {
+                counts[x as usize] += 1;
+            }
+        }
+        assert_eq!(counts, [3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn shf_dispatch_keeps_head_on_xcd() {
+        // End-to-end: SHF through the dispatcher gives each XCD
+        // consecutive blocks of "its" heads.
+        let m = Mapping::new(Policy::SwizzledHeadFirst, 1, 8, 16, 4).unwrap();
+        let mut d = Dispatcher::new(m, 1, 4);
+        for x in 0..4u32 {
+            let mut heads = Vec::new();
+            while let Some((_, w)) = d.next_for_xcd(x) {
+                heads.push(w.h);
+            }
+            let expected: Vec<u32> = std::iter::repeat(x * 2)
+                .take(16)
+                .chain(std::iter::repeat(x * 2 + 1).take(16))
+                .collect();
+            assert_eq!(heads, expected, "XCD {x}");
+        }
+    }
+}

@@ -1,0 +1,620 @@
+//! The tick-level simulation engine.
+
+use crate::attn::trace::WgCursor;
+use crate::attn::{AttnConfig, KernelKind};
+use crate::cache::{CacheStats, LruCache};
+use crate::mapping::Mapping;
+use crate::mem::{HbmModel, HbmStats};
+use crate::sched::Dispatcher;
+use crate::topology::Topology;
+
+use super::{avg_stream_len, SimConfig, SimReport};
+
+/// One resident workgroup.
+#[derive(Debug)]
+struct Wg {
+    cursor: WgCursor,
+    /// Demand reads still waiting for an HBM fill.
+    outstanding: u16,
+    /// Tick at which the current step's compute completes (valid when
+    /// `outstanding == 0`).
+    ready_at: u64,
+    /// Compute ticks to charge once the outstanding reads arrive.
+    staged_ticks: u64,
+    /// Steps executed so far (jitter hash input).
+    steps_done: u64,
+    /// Keys this WG already *issued* L2 transactions for (double-buffered
+    /// loads): their hit/miss was recorded at issue time, so the consume
+    /// step must not double-count. Small ring, cleared on consume.
+    issued: [u64; 16],
+    issued_len: u8,
+    /// Issued keys whose fill has NOT yet arrived. Once a fill arrives
+    /// the data is in the CU's LDS/register double buffer, so later L2
+    /// eviction cannot invalidate it.
+    pending: [u64; 16],
+    pending_len: u8,
+    /// Keys the current step's consume is blocked on (subset of pending).
+    blocked: [u64; 8],
+    blocked_len: u8,
+}
+
+impl Wg {
+    fn ring_remove(ring: &mut [u64], len: &mut u8, key: u64) -> bool {
+        for i in 0..*len as usize {
+            if ring[i] == key {
+                ring[i] = ring[*len as usize - 1];
+                *len -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn ring_contains(ring: &[u64], len: u8, key: u64) -> bool {
+        ring[..len as usize].contains(&key)
+    }
+
+    fn ring_push(ring: &mut [u64], len: &mut u8, key: u64) {
+        if (*len as usize) < ring.len() {
+            ring[*len as usize] = key;
+            *len += 1;
+        }
+    }
+
+    fn was_issued(&mut self, key: u64) -> bool {
+        Self::ring_remove(&mut self.issued, &mut self.issued_len, key)
+    }
+
+    fn mark_issued(&mut self, key: u64) {
+        Self::ring_push(&mut self.issued, &mut self.issued_len, key);
+    }
+
+    fn mark_pending(&mut self, key: u64) {
+        Self::ring_push(&mut self.pending, &mut self.pending_len, key);
+    }
+
+    fn is_pending(&self, key: u64) -> bool {
+        Self::ring_contains(&self.pending, self.pending_len, key)
+    }
+
+    fn block_on(&mut self, key: u64) {
+        Self::ring_push(&mut self.blocked, &mut self.blocked_len, key);
+        self.outstanding += 1;
+    }
+
+    /// A fill arrived: clear pending; if the consume was blocked on it,
+    /// unblock. Returns true if this was the last blocking read.
+    fn note_arrival(&mut self, key: u64) -> bool {
+        Self::ring_remove(&mut self.pending, &mut self.pending_len, key);
+        if Self::ring_remove(&mut self.blocked, &mut self.blocked_len, key) {
+            debug_assert!(self.outstanding > 0);
+            self.outstanding -= 1;
+            return self.outstanding == 0;
+        }
+        false
+    }
+}
+
+pub struct Engine {
+    topo: Topology,
+    attn: AttnConfig,
+    sim: SimConfig,
+    dispatcher: Dispatcher,
+    caches: Vec<LruCache>,
+    hbm: HbmModel,
+    /// XCD-major slot array: index = xcd * slots_per_xcd + local.
+    slots: Vec<Option<Wg>>,
+    slots_per_xcd: usize,
+    /// (xcd, key) -> global slot indices waiting on the fill.
+    waiters: crate::util::fxhash::FastMap<(u32, u64), Vec<u32>>,
+    tick: u64,
+    completed: usize,
+    target: usize,
+    /// Seconds represented by one tick (see `SimConfig` docs).
+    sec_per_tick: f64,
+    /// Measurement window bookkeeping.
+    warmup_done: bool,
+    window_start_tick: u64,
+    window_start_completed: usize,
+    hbm_baseline: HbmStats,
+}
+
+impl Engine {
+    pub fn new(topo: Topology, attn: AttnConfig, sim: SimConfig) -> Self {
+        topo.validate().expect("invalid topology");
+        attn.validate().expect("invalid attention config");
+        let mapping = Mapping::for_kernel(sim.policy, &attn, sim.kernel, topo.num_xcds)
+            .expect("invalid mapping");
+        let dispatcher = Dispatcher::new(mapping, topo.dispatch_chunk, topo.num_xcds);
+
+        let step_flops = match sim.kernel {
+            KernelKind::Forward => attn.fwd_step_flops(),
+            KernelKind::BwdDkDv => attn.dkdv_step_flops(),
+            KernelKind::BwdDq => attn.dq_step_flops(),
+        };
+        // compute_efficiency_factor models D_HEAD effects (MFMA K-granule
+        // padding + softmax overhead — paper Sec. 4.5's D=56 slowdown).
+        let cu_eff = topo.cu_flops_per_sec
+            * sim.compute_efficiency
+            * attn.compute_efficiency_factor();
+        let sec_per_tick = step_flops * sim.compute_overhead / cu_eff;
+        // Achievable DRAM efficiency for streaming tile reads (row
+        // activations, refresh, read/write turnaround) — ~90% of pin rate.
+        const DRAM_EFFICIENCY: f64 = 0.9;
+        let hbm_bytes_per_tick =
+            ((topo.hbm_bytes_per_sec * DRAM_EFFICIENCY * sec_per_tick) as u64).max(1);
+        let hbm_latency_ticks = (topo.hbm_latency_sec / sec_per_tick).ceil() as u64;
+        let hbm = HbmModel::new(hbm_bytes_per_tick, hbm_latency_ticks);
+
+        // Effective L2 capacity available to the K/V streams: half the
+        // physical L2. The other half holds the resident working set the
+        // tile streams compete with — every in-flight WG's Q row block and
+        // O write-allocate lines (38 x 64 KiB ~ 2.4 MiB on MI300X), lse/
+        // delta vectors, and metadata. This is a large part of why many
+        // concurrent ACC streams per XCD thrash (Fig. 13's collapse).
+        let slots_per_xcd = topo.wg_slots_per_xcd();
+        let effective_l2 = (topo.l2_bytes_per_xcd / 2).max(attn.kv_tile_bytes());
+        let caches = (0..topo.num_xcds)
+            .map(|_| LruCache::new(effective_l2))
+            .collect();
+        let slots = (0..topo.num_xcds * slots_per_xcd).map(|_| None).collect();
+
+        let grid = dispatcher.grid_size();
+        let target = if sim.max_wg_completions == 0 {
+            grid
+        } else {
+            sim.max_wg_completions.min(grid)
+        };
+
+        Engine {
+            topo,
+            attn,
+            sim,
+            dispatcher,
+            caches,
+            hbm,
+            slots,
+            slots_per_xcd,
+            waiters: Default::default(),
+            tick: 0,
+            completed: 0,
+            target,
+            sec_per_tick,
+            warmup_done: false,
+            window_start_tick: 0,
+            window_start_completed: 0,
+            hbm_baseline: HbmStats::default(),
+        }
+    }
+
+    /// Deterministic per-step jitter: models wavefront-scheduling noise.
+    #[inline]
+    fn jitter(&self, slot: u32, step: u64) -> u64 {
+        if self.sim.jitter_denom == 0 {
+            return 0;
+        }
+        let mut x = self
+            .sim
+            .seed
+            .wrapping_add((slot as u64) << 32)
+            .wrapping_add(step)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+        x ^= x >> 27;
+        u64::from(x % self.sim.jitter_denom == 0)
+    }
+
+    pub fn run(mut self) -> SimReport {
+        let exact = self.target == self.dispatcher.grid_size();
+        let mut truncated = false;
+
+        while self.completed < self.target {
+            if self.tick >= self.sim.max_ticks {
+                truncated = true;
+                break;
+            }
+            self.step_tick();
+            self.tick += 1;
+            // Warmup boundary: reset measurement window.
+            if !exact
+                && !self.warmup_done
+                && self.completed >= self.sim.warmup_completions
+            {
+                self.warmup_done = true;
+                self.window_start_tick = self.tick;
+                self.window_start_completed = self.completed;
+                for c in &mut self.caches {
+                    c.reset_stats();
+                }
+                self.hbm_baseline = *self.hbm.stats();
+            }
+        }
+        self.report(exact, truncated)
+    }
+
+    fn step_tick(&mut self) {
+        // 1. HBM completions: fill caches, wake waiters.
+        let completions = self.hbm.step(self.tick);
+        for c in completions {
+            self.caches[c.xcd as usize].fill(c.key, c.bytes);
+            if let Some(ws) = self.waiters.remove(&(c.xcd, c.key)) {
+                for slot_idx in ws {
+                    // Slot may have been recycled if the WG retired with
+                    // non-blocking prefetches still in flight.
+                    let Some(wg) = self.slots[slot_idx as usize].as_mut() else {
+                        continue;
+                    };
+                    if wg.note_arrival(c.key) {
+                        wg.ready_at = self.tick + wg.staged_ticks;
+                    }
+                }
+            }
+        }
+
+        // 2. Advance every XCD's slots: dispatch into empty ones, issue
+        //    the next step for ready ones.
+        for xcd in 0..self.topo.num_xcds as u32 {
+            for local in 0..self.slots_per_xcd {
+                let idx = xcd as usize * self.slots_per_xcd + local;
+                // Retire / dispatch loop: a retiring WG frees the slot for
+                // a new dispatch in the same tick (hardware back-to-back).
+                loop {
+                    match &mut self.slots[idx] {
+                        None => {
+                            let Some((dispatch_slot, item)) = self.dispatcher.next_for_xcd(xcd)
+                            else {
+                                break;
+                            };
+                            let cursor = WgCursor::new(&self.attn, self.sim.kernel, item);
+                            // Bounded launch stagger (see SimConfig docs).
+                            // Phase spread grows with kernel duration
+                            // (longer streams accumulate more completion
+                            // skew), capped at `launch_stagger`.
+                            let span = (8 + cursor.stream_len() as u64 / 64)
+                                .min(self.sim.launch_stagger.max(1));
+                            let stagger = if self.sim.launch_stagger == 0 {
+                                0
+                            } else {
+                                crate::util::rng::mix(
+                                    self.sim.seed ^ (dispatch_slot as u64) << 17,
+                                ) % (span + 1)
+                            };
+                            self.slots[idx] = Some(Wg {
+                                cursor,
+                                outstanding: 0,
+                                ready_at: self.tick + stagger,
+                                staged_ticks: 0,
+                                steps_done: 0,
+                                issued: [0; 16],
+                                issued_len: 0,
+                                pending: [0; 16],
+                                pending_len: 0,
+                                blocked: [0; 8],
+                                blocked_len: 0,
+                            });
+                            // fall through (advances this tick if stagger 0)
+                        }
+                        Some(wg) => {
+                            if wg.outstanding > 0 || wg.ready_at > self.tick {
+                                break; // stalled or computing
+                            }
+                            if !self.advance_wg(xcd, idx as u32) {
+                                // retired: slot now empty; loop dispatches.
+                                continue;
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Issue the next step of the WG in `slot`. Returns false if the WG
+    /// retired (slot cleared).
+    fn advance_wg(&mut self, xcd: u32, slot: u32) -> bool {
+        let wg = self.slots[slot as usize].as_mut().expect("advance empty");
+        let Some(step) = wg.cursor.next_step() else {
+            // Retire: write outputs, free the slot.
+            let bytes = wg.cursor.write_bytes();
+            self.hbm.write(bytes);
+            self.slots[slot as usize] = None;
+            self.completed += 1;
+            return false;
+        };
+        wg.steps_done += 1;
+        let steps_done = wg.steps_done;
+        let compute = if step.flops > 0.0 { 1 } else { 0 };
+
+        // Double-buffered loads for the step `prefetch_depth` ahead. On
+        // real hardware these ARE the L2 read transactions (the kernel
+        // issues tile j+1's loads while computing tile j), so hit/miss is
+        // recorded HERE, at issue time. The first advance issues the whole
+        // window 0..depth so every stream step is issued exactly once.
+        let mut prefetch_keys: [(u64, u32); 8] = [(0, 0); 8];
+        let mut n_prefetch = 0;
+        if self.sim.prefetch_depth > 0 {
+            let first = steps_done == 1;
+            let range = if first { 0..self.sim.prefetch_depth } else { self.sim.prefetch_depth - 1..self.sim.prefetch_depth };
+            for ahead in range {
+                let Some(p) = wg.cursor.peek(ahead) else { break };
+                for r in p.reads() {
+                    if n_prefetch < prefetch_keys.len() {
+                        prefetch_keys[n_prefetch] = (r.key, r.bytes);
+                        n_prefetch += 1;
+                    }
+                }
+            }
+        }
+
+        // Consume this step's reads. If this WG issued the load earlier
+        // (double buffering), the L2 transaction was already counted; we
+        // only wait for data that has not arrived. Otherwise (prologue,
+        // depth 0, ring overflow) this IS the L2 transaction.
+        let mut reads: [(u64, u32); 4] = [(0, 0); 4];
+        let n_reads = step.reads().len();
+        for (dst, r) in reads.iter_mut().zip(step.reads()) {
+            *dst = (r.key, r.bytes);
+        }
+        for &(key, bytes) in &reads[..n_reads] {
+            let (pre_issued, still_pending) = {
+                let wg = self.slots[slot as usize].as_mut().unwrap();
+                let pending = wg.is_pending(key);
+                (wg.was_issued(key), pending)
+            };
+            if pre_issued {
+                // Stats were counted at issue. If the fill already
+                // arrived, the data sits in the CU's double buffer (L2
+                // eviction irrelevant); otherwise block on it.
+                if still_pending {
+                    self.slots[slot as usize].as_mut().unwrap().block_on(key);
+                }
+                continue;
+            }
+            // Un-prefetched access (prologue / depth 0 / ring overflow):
+            // present -> hit; another WG's fill in flight -> shared hit
+            // (MSHR); else miss + fetch.
+            let cache = &mut self.caches[xcd as usize];
+            if cache.try_hit(key, bytes) {
+                continue;
+            }
+            match self.hbm.inflight_origin(xcd, key) {
+                Some(origin) if origin != slot => {
+                    self.caches[xcd as usize].record_shared_hit(bytes);
+                }
+                Some(_) => self.caches[xcd as usize].record_miss(bytes),
+                None => {
+                    self.caches[xcd as usize].record_miss(bytes);
+                    self.hbm.request(self.tick, xcd, key, bytes, slot);
+                }
+            }
+            self.waiters.entry((xcd, key)).or_default().push(slot);
+            let wg = self.slots[slot as usize].as_mut().unwrap();
+            wg.mark_pending(key);
+            wg.block_on(key);
+        }
+
+        // Issue the double-buffered loads (after demand so demand sits
+        // earlier in the FIFO queue), recording their hit/miss now.
+        for &(key, bytes) in &prefetch_keys[..n_prefetch] {
+            let cache = &mut self.caches[xcd as usize];
+            let mut in_flight = false;
+            if cache.try_hit(key, bytes) {
+                // Already resident: free hit, lands in the double buffer.
+            } else {
+                match self.hbm.inflight_origin(xcd, key) {
+                    Some(origin) if origin != slot => {
+                        cache.record_shared_hit(bytes);
+                        in_flight = true;
+                    }
+                    Some(_) => in_flight = true, // own earlier issue
+                    None => {
+                        cache.record_miss(bytes);
+                        self.hbm.request(self.tick, xcd, key, bytes, slot);
+                        in_flight = true;
+                    }
+                }
+            }
+            if in_flight {
+                self.waiters.entry((xcd, key)).or_default().push(slot);
+            }
+            let wg = self.slots[slot as usize].as_mut().unwrap();
+            wg.mark_issued(key);
+            if in_flight {
+                wg.mark_pending(key);
+            }
+        }
+
+        let jitter = self.jitter(slot, steps_done);
+        let wg = self.slots[slot as usize].as_mut().unwrap();
+        if wg.outstanding == 0 {
+            wg.ready_at = self.tick + compute + jitter;
+        } else {
+            wg.staged_ticks = compute + jitter;
+        }
+        true
+    }
+
+    fn report(&self, exact: bool, truncated: bool) -> SimReport {
+        let grid = self.dispatcher.grid_size();
+        let mut l2 = CacheStats::default();
+        for c in &self.caches {
+            l2.merge(c.stats());
+        }
+        let l2_per_xcd = self.caches.iter().map(|c| c.stats().hit_rate()).collect();
+
+        let hbm_raw = *self.hbm.stats();
+        let hbm = HbmStats {
+            bytes_read: hbm_raw.bytes_read - self.hbm_baseline.bytes_read,
+            requests: hbm_raw.requests - self.hbm_baseline.requests,
+            mshr_merges: hbm_raw.mshr_merges - self.hbm_baseline.mshr_merges,
+            busy_ticks: hbm_raw.busy_ticks - self.hbm_baseline.busy_ticks,
+            queue_depth_sum: hbm_raw.queue_depth_sum - self.hbm_baseline.queue_depth_sum,
+            bytes_written: hbm_raw.bytes_written - self.hbm_baseline.bytes_written,
+        };
+
+        let window_ticks = self.tick - self.window_start_tick;
+        let window_completions = self.completed - self.window_start_completed;
+        let throughput = if window_ticks > 0 {
+            window_completions as f64 / window_ticks as f64
+        } else {
+            0.0
+        };
+        let est_total_ticks = if exact && !truncated {
+            self.tick as f64
+        } else if throughput > 0.0 {
+            grid as f64 / throughput
+        } else {
+            f64::INFINITY
+        };
+        let est_total_sec = est_total_ticks * self.sec_per_tick;
+
+        let step_flops = match self.sim.kernel {
+            KernelKind::Forward => self.attn.fwd_step_flops(),
+            KernelKind::BwdDkDv => self.attn.dkdv_step_flops(),
+            KernelKind::BwdDq => self.attn.dq_step_flops(),
+        };
+        let total_flops =
+            grid as f64 * step_flops * avg_stream_len(&self.attn, self.sim.kernel);
+
+        SimReport {
+            policy: self.sim.policy,
+            kernel: self.sim.kernel,
+            grid_size: grid,
+            simulated_wgs: self.completed,
+            ticks: window_ticks,
+            sec_per_tick: self.sec_per_tick,
+            l2,
+            l2_hit_rate_per_xcd: l2_per_xcd,
+            hbm,
+            throughput_wgs_per_tick: throughput,
+            est_total_ticks,
+            est_total_sec,
+            achieved_tflops: total_flops / est_total_sec / 1e12,
+            truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::Policy;
+    use crate::topology::presets;
+
+    fn topo4() -> Topology {
+        Topology {
+            name: "t4".into(),
+            num_xcds: 4,
+            cus_per_xcd: 8,
+            l2_bytes_per_xcd: 1024 * 1024,
+            ..presets::mi300x()
+        }
+    }
+
+    #[test]
+    fn conservation_all_wgs_complete() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(2, 8, 2048, 64) };
+        let sim = SimConfig::forward(Policy::SwizzledHeadFirst);
+        let r = Engine::new(topo4(), cfg, sim).run();
+        assert_eq!(r.simulated_wgs, cfg.grid_size(KernelKind::Forward));
+    }
+
+    #[test]
+    fn access_count_matches_trace_math() {
+        // Non-causal forward: each WG does 1 Q read + 2 reads/stream step.
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 4, 2048, 64) };
+        let sim = SimConfig { jitter_denom: 0, ..SimConfig::forward(Policy::NaiveHeadFirst) };
+        let r = Engine::new(topo4(), cfg, sim).run();
+        let wgs = cfg.grid_size(KernelKind::Forward) as u64;
+        let expected = wgs * (1 + 2 * cfg.num_col_blocks() as u64);
+        assert_eq!(r.l2.accesses(), expected);
+    }
+
+    #[test]
+    fn deterministic_same_seed() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 64) };
+        let sim = SimConfig::forward(Policy::NaiveBlockFirst);
+        let a = Engine::new(topo4(), cfg, sim).run();
+        let b = Engine::new(topo4(), cfg, sim).run();
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.l2.hits, b.l2.hits);
+        assert_eq!(a.hbm.bytes_read, b.hbm.bytes_read);
+    }
+
+    #[test]
+    fn different_seed_changes_jitter_not_conservation() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 64) };
+        let a = Engine::new(topo4(), cfg, SimConfig::forward(Policy::NaiveBlockFirst)).run();
+        let sim_b = SimConfig { seed: 123, ..SimConfig::forward(Policy::NaiveBlockFirst) };
+        let b = Engine::new(topo4(), cfg, sim_b).run();
+        assert_eq!(a.simulated_wgs, b.simulated_wgs);
+        assert_eq!(a.l2.accesses(), b.l2.accesses());
+    }
+
+    #[test]
+    fn hbm_reads_bounded_by_compulsory_and_capacity() {
+        // Total HBM read bytes can never be less than one copy of the
+        // distinct data actually touched per XCD that touches it.
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 4, 2048, 64) };
+        let sim = SimConfig::forward(Policy::SwizzledHeadFirst);
+        let r = Engine::new(topo4(), cfg, sim).run();
+        // SHF: each head's K/V fetched once on its own XCD (plus Q).
+        let kv_bytes = 4 * cfg.kv_bytes_per_head() as u64;
+        let q_bytes = (4 * cfg.n_ctx * cfg.d_head * cfg.dtype_bytes) as u64;
+        let compulsory = kv_bytes + q_bytes;
+        assert!(r.hbm.bytes_read >= compulsory, "{} < {compulsory}", r.hbm.bytes_read);
+        // ... and is not wildly above it for the swizzled policy.
+        assert!(
+            (r.hbm.bytes_read as f64) < 2.5 * compulsory as f64,
+            "{} vs {compulsory}",
+            r.hbm.bytes_read
+        );
+    }
+
+    #[test]
+    fn no_deadlock_with_tiny_cache() {
+        // Cache smaller than a single tile: everything streams through.
+        let mut topo = topo4();
+        topo.l2_bytes_per_xcd = 1024;
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 4, 1024, 64) };
+        let r = Engine::new(topo, cfg, SimConfig::forward(Policy::NaiveHeadFirst)).run();
+        assert_eq!(r.simulated_wgs, cfg.grid_size(KernelKind::Forward));
+        assert!(r.l2.hit_rate() < 0.2);
+    }
+
+    #[test]
+    fn prefetch_improves_or_equals_performance() {
+        // Double buffering hides fill latency: never slower, usually
+        // faster. (Hit RATE semantics differ — with prefetch the counted
+        // transaction happens at issue time — so only time is compared.)
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 4096, 128) };
+        let with = Engine::new(
+            topo4(),
+            cfg,
+            SimConfig { prefetch_depth: 1, ..SimConfig::forward(Policy::SwizzledHeadFirst) },
+        )
+        .run();
+        let without = Engine::new(
+            topo4(),
+            cfg,
+            SimConfig { prefetch_depth: 0, ..SimConfig::forward(Policy::SwizzledHeadFirst) },
+        )
+        .run();
+        assert!(
+            with.est_total_sec <= without.est_total_sec * 1.02,
+            "with {} vs without {}",
+            with.est_total_sec,
+            without.est_total_sec
+        );
+    }
+
+    #[test]
+    fn max_ticks_truncates() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(4, 16, 8192, 128) };
+        let sim = SimConfig { max_ticks: 50, ..SimConfig::forward(Policy::NaiveBlockFirst) };
+        let r = Engine::new(topo4(), cfg, sim).run();
+        assert!(r.truncated);
+    }
+}

@@ -1,0 +1,156 @@
+//! GEMM workgroup-swizzling microbenchmark — reproduces the motivating
+//! claim of paper Sec. 1: spatially-aware mapping lifted GEMM L2 hit
+//! rates from 43% to 92% on MI300X (AMD Tensile data).
+//!
+//! A tiled GEMM C = A·B assigns one C tile per workgroup; WG (i, j)
+//! streams row panel A(i, :) and column panel B(:, j) over the K loop.
+//!
+//! * **Naive**: row-major tile order + round-robin dispatch. With a wide
+//!   C (tiles_n >= one wave), every XCD's in-flight WGs sit in the same
+//!   tile row with strided columns: the A panel is shared but every B
+//!   tile is private -> hit rate collapses toward ~50%.
+//! * **Swizzled**: Tensile/Triton-style *grouped* ordering (GROUP_M tile
+//!   rows traversed column-fastest) combined with the Fig.-3 chiplet
+//!   swizzle, giving each XCD a compact 2D block of C tiles whose A rows
+//!   AND B columns are both shared.
+
+use crate::attn::tile::{key, Tensor};
+use crate::cache::{CacheStats, LruCache};
+use crate::mapping::chiplet_swizzle;
+use crate::topology::Topology;
+
+/// GEMM geometry (dimensions in *tiles*; each tile read is `tile_bytes`).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmConfig {
+    /// C tile grid rows (M / BLOCK_M).
+    pub tiles_m: usize,
+    /// C tile grid cols (N / BLOCK_N).
+    pub tiles_n: usize,
+    /// K-loop length in tiles.
+    pub tiles_k: usize,
+    /// Bytes of one A/B tile.
+    pub tile_bytes: u32,
+    /// Grouped-ordering row-group size (Triton GROUP_SIZE_M; Tensile
+    /// WorkGroupMapping). Used by the swizzled variant.
+    pub group_m: usize,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        // 4096x65536x4096 bf16 with 128x128x128 tiles: a wide skinny
+        // GEMM like an LLM's LM-head / MLP, where the naive mapping's
+        // locality loss is most visible.
+        GemmConfig { tiles_m: 32, tiles_n: 512, tiles_k: 32, tile_bytes: 32 * 1024, group_m: 8 }
+    }
+}
+
+/// Result of one GEMM replay.
+#[derive(Debug, Clone)]
+pub struct GemmReport {
+    pub l2: CacheStats,
+    pub hbm_bytes: u64,
+}
+
+/// Map a logical *ordering index* to a C tile (i, j).
+fn tile_of(cfg: &GemmConfig, idx: usize, grouped: bool) -> (usize, usize) {
+    if !grouped {
+        return (idx / cfg.tiles_n, idx % cfg.tiles_n);
+    }
+    // Triton grouped ordering: walk GROUP_M rows column-fastest.
+    let group_rows = cfg.group_m.min(cfg.tiles_m);
+    let per_group = group_rows * cfg.tiles_n;
+    let g = idx / per_group;
+    let r = idx % per_group;
+    let first_row = g * group_rows;
+    let rows_here = group_rows.min(cfg.tiles_m - first_row);
+    (first_row + r % rows_here, r / rows_here)
+}
+
+/// Replay the GEMM tile traffic on `topo`'s L2s, in occupancy-sized
+/// waves (no timing — the motivating claim is about hit rates).
+pub fn simulate_gemm(topo: &Topology, cfg: &GemmConfig, swizzled: bool) -> GemmReport {
+    let grid = cfg.tiles_m * cfg.tiles_n;
+    let num_xcds = topo.num_xcds;
+    let mut caches: Vec<LruCache> =
+        (0..num_xcds).map(|_| LruCache::new(topo.l2_bytes_per_xcd)).collect();
+    let mut hbm_bytes = 0u64;
+    let slots = topo.wg_slots_per_xcd();
+
+    // Dispatch slot s -> XCD s % num_xcds. The logical tile that slot
+    // executes: naive = row-major order at index s; swizzled = grouped
+    // order at the chiplet-swizzled index.
+    let mut next_slot = 0usize;
+    while next_slot < grid {
+        let wave_end = (next_slot + slots * num_xcds).min(grid);
+        // K-loop outer: wave members advance in lockstep like real
+        // wavefront execution, touching A(i,k) and B(j,k) per step.
+        for k in 0..cfg.tiles_k {
+            for s in next_slot..wave_end {
+                let xcd = s % num_xcds;
+                let logical = if swizzled { chiplet_swizzle(s, grid, num_xcds) } else { s };
+                let (i, j) = tile_of(cfg, logical, swizzled);
+                let a = key(Tensor::GemmA, 0, i as u32, k as u32);
+                let b = key(Tensor::GemmB, 0, j as u32, k as u32);
+                for t in [a, b] {
+                    if !caches[xcd].access(t, cfg.tile_bytes) {
+                        hbm_bytes += cfg.tile_bytes as u64;
+                    }
+                }
+            }
+        }
+        next_slot = wave_end;
+    }
+
+    let mut l2 = CacheStats::default();
+    for c in &caches {
+        l2.merge(c.stats());
+    }
+    GemmReport { l2, hbm_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    #[test]
+    fn grouped_order_covers_grid() {
+        let cfg = GemmConfig { tiles_m: 12, tiles_n: 7, tiles_k: 1, group_m: 8, tile_bytes: 1024 };
+        let mut seen: Vec<(usize, usize)> =
+            (0..cfg.tiles_m * cfg.tiles_n).map(|i| tile_of(&cfg, i, true)).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), cfg.tiles_m * cfg.tiles_n);
+    }
+
+    #[test]
+    fn swizzle_dramatically_improves_gemm_hit_rate() {
+        let topo = presets::mi300x();
+        let cfg = GemmConfig::default();
+        let naive = simulate_gemm(&topo, &cfg, false);
+        let swizzled = simulate_gemm(&topo, &cfg, true);
+        let (hn, hs) = (naive.l2.hit_rate(), swizzled.l2.hit_rate());
+        // Paper Sec. 1: 43% -> 92%. Shape check: big jump, high absolute.
+        assert!(hs > hn + 0.2, "naive {hn:.2} swizzled {hs:.2}");
+        assert!(hs > 0.8, "swizzled {hs:.2}");
+        assert!(hn < 0.6, "naive {hn:.2}");
+    }
+
+    #[test]
+    fn traffic_drops_with_swizzle() {
+        let topo = presets::mi300x();
+        let cfg = GemmConfig::default();
+        let naive = simulate_gemm(&topo, &cfg, false);
+        let swizzled = simulate_gemm(&topo, &cfg, true);
+        assert!(swizzled.hbm_bytes < naive.hbm_bytes);
+    }
+
+    #[test]
+    fn conservation_accesses() {
+        let topo = presets::mi300x();
+        let cfg = GemmConfig::default();
+        let r = simulate_gemm(&topo, &cfg, true);
+        let expected = (cfg.tiles_m * cfg.tiles_n * cfg.tiles_k * 2) as u64;
+        assert_eq!(r.l2.accesses(), expected);
+    }
+}

@@ -1,0 +1,397 @@
+//! The chiplet-GPU simulator: replays FA2 workgroup tile streams through
+//! per-XCD L2 caches and a shared HBM bandwidth queue, under a chosen
+//! workgroup-mapping policy, and reports the metrics of the paper's
+//! evaluation — aggregate L2 hit rate (Fig. 13) and relative performance
+//! (Figs. 12/14/15/16).
+//!
+//! ## Fidelity model (DESIGN.md §7)
+//!
+//! * One simulator *tick* = the time one CU spends computing one stream
+//!   step (one K/V tile of FA2 forward). All rates are normalized to it.
+//! * Workgroups occupy CU slots per XCD; freed slots immediately receive
+//!   the next workgroup in hardware dispatch order (chunked round-robin
+//!   over *policy-remapped* slots — exactly the paper's mechanism).
+//! * Each step's tile reads probe the XCD's private L2 (size-aware LRU).
+//!   Misses enqueue HBM fetches; fetches for the same (XCD, tile) merge
+//!   (MSHR); fetches from different XCDs do NOT merge — that is the NUMA
+//!   replication traffic.
+//! * A workgroup prefetches `prefetch_depth` steps ahead (the kernel's
+//!   double buffering), so latency is hidden while bandwidth keeps up.
+//! * A small deterministic per-step jitter models wavefront-scheduling
+//!   noise; drift between workgroups sharing a stream is then bounded by
+//!   the L2 *window* (capacity / live streams), which is what makes many
+//!   concurrent ACC streams per XCD collapse — the paper's block-first
+//!   pathology.
+//! * Performance is reported as steady-state throughput over a sampled
+//!   window (whole grid if small), extrapolated to the full grid.
+
+mod engine;
+pub mod gemm;
+
+pub use engine::Engine;
+
+use crate::attn::{AttnConfig, KernelKind};
+use crate::cache::CacheStats;
+use crate::mapping::Policy;
+use crate::mem::HbmStats;
+use crate::topology::Topology;
+
+/// Simulation parameters (knobs beyond topology/workload).
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub kernel: KernelKind,
+    pub policy: Policy,
+    /// Stop after this many workgroup completions (0 = run whole grid).
+    /// Sampled runs extrapolate steady-state throughput to the grid.
+    pub max_wg_completions: usize,
+    /// Completions before statistics reset (cold-start exclusion for
+    /// sampled runs). Ignored when the whole grid is simulated.
+    pub warmup_completions: usize,
+    /// Hard tick limit (safety net; sets `truncated` in the report).
+    pub max_ticks: u64,
+    /// Fraction of peak CU FLOPs actually achieved by the kernel's
+    /// inner GEMMs (MXU/MFMA efficiency).
+    pub compute_efficiency: f64,
+    /// Extra per-step scalar-op overhead multiplier (1.0 = none).
+    /// The FA2 backward's softmax-recompute/scalar work (paper Sec. 4.6)
+    /// uses > 1.
+    pub compute_overhead: f64,
+    /// Steps of double-buffered prefetch issued ahead of the demand
+    /// stream (0 = no prefetch).
+    pub prefetch_depth: u32,
+    /// 1-in-N chance a step takes +1 tick (deterministic hash jitter
+    /// modeling wavefront scheduling noise). 0 disables jitter.
+    /// NOTE: per-step jitter random-walks workgroup phases apart without
+    /// bound, which is unphysical (real wavefront noise is elastic); the
+    /// default is 0 and `launch_stagger` models phase spread instead.
+    pub jitter_denom: u64,
+    /// Workgroup launch-stagger CAP: a new WG starts up to
+    /// min(8 + stream/64, this) ticks after its slot frees
+    /// (hash-deterministic; spread grows with kernel duration). This bounded phase
+    /// spread is what separates policies: it stays inside the per-stream
+    /// L2 window when an XCD serves ONE ACC (head-first swizzled) and
+    /// exceeds it when the L2 is split across many ACC streams
+    /// (block-first) — the paper's Fig. 13 mechanism.
+    pub launch_stagger: u64,
+    /// RNG seed for the jitter hash.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn forward(policy: Policy) -> Self {
+        SimConfig {
+            kernel: KernelKind::Forward,
+            policy,
+            max_wg_completions: 0,
+            warmup_completions: 0,
+            max_ticks: 50_000_000,
+            compute_efficiency: 0.85,
+            compute_overhead: 1.0,
+            prefetch_depth: 2,
+            jitter_denom: 0,
+            launch_stagger: 40,
+            seed: 0x5eed,
+        }
+    }
+
+    /// Sampled steady-state run: simulate ~`generations` full occupancy
+    /// generations after one generation of warmup.
+    pub fn sampled(policy: Policy, topo: &Topology, generations: usize) -> Self {
+        let slots = topo.total_wg_slots();
+        SimConfig {
+            max_wg_completions: slots * (generations + 1),
+            warmup_completions: slots,
+            ..Self::forward(policy)
+        }
+    }
+
+    pub fn backward(policy: Policy) -> Self {
+        SimConfig {
+            kernel: KernelKind::BwdDkDv,
+            // Paper Sec. 4.6: additional scalar operations constrain the
+            // backward pass; it is less memory-bound than the forward,
+            // which is why the Fig. 16 speedups are modest (~1.10x).
+            compute_overhead: 1.45,
+            ..Self::forward(policy)
+        }
+    }
+}
+
+/// Simulation outcome: the quantities the paper's figures plot.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub policy: Policy,
+    pub kernel: KernelKind,
+    pub grid_size: usize,
+    /// Workgroups actually simulated (== grid_size for exact runs).
+    pub simulated_wgs: usize,
+    /// Ticks in the measured (post-warmup) window.
+    pub ticks: u64,
+    /// Wall-clock seconds represented by one tick.
+    pub sec_per_tick: f64,
+    /// Aggregate L2 statistics across all XCDs (paper Fig. 13 metric).
+    pub l2: CacheStats,
+    /// Per-XCD L2 hit rates.
+    pub l2_hit_rate_per_xcd: Vec<f64>,
+    pub hbm: HbmStats,
+    /// Workgroup completions per tick in the measured window.
+    pub throughput_wgs_per_tick: f64,
+    /// Estimated ticks for the full grid at steady-state throughput.
+    pub est_total_ticks: f64,
+    /// Estimated seconds for the full grid.
+    pub est_total_sec: f64,
+    /// Achieved TFLOP/s over the estimated run.
+    pub achieved_tflops: f64,
+    /// True if the run hit `max_ticks` before its completion target.
+    pub truncated: bool,
+}
+
+impl SimReport {
+    /// Aggregate L2 hit rate in percent (the Fig. 13 y-axis).
+    pub fn l2_hit_pct(&self) -> f64 {
+        100.0 * self.l2.hit_rate()
+    }
+
+    /// JSON rendering for `--json` CLI output.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.name())),
+            ("kernel", Json::str(format!("{:?}", self.kernel))),
+            ("grid_size", Json::num(self.grid_size as f64)),
+            ("simulated_wgs", Json::num(self.simulated_wgs as f64)),
+            ("ticks", Json::num(self.ticks as f64)),
+            ("sec_per_tick", Json::num(self.sec_per_tick)),
+            ("l2_hit_pct", Json::num(self.l2_hit_pct())),
+            ("l2_hits", Json::num(self.l2.hits as f64)),
+            ("l2_misses", Json::num(self.l2.misses as f64)),
+            (
+                "l2_hit_rate_per_xcd",
+                Json::arr(self.l2_hit_rate_per_xcd.iter().map(|&r| Json::num(r))),
+            ),
+            ("hbm_bytes_read", Json::num(self.hbm.bytes_read as f64)),
+            ("hbm_bytes_written", Json::num(self.hbm.bytes_written as f64)),
+            ("hbm_mshr_merges", Json::num(self.hbm.mshr_merges as f64)),
+            ("est_total_sec", Json::num(self.est_total_sec)),
+            ("achieved_tflops", Json::num(self.achieved_tflops)),
+            ("truncated", Json::Bool(self.truncated)),
+        ])
+    }
+
+    /// Performance of this run relative to `baseline` (the Fig. 12/14/15
+    /// y-axis when baseline = Swizzled Head-first, Fig. 16 when baseline
+    /// = Naive Block-first).
+    pub fn perf_relative_to(&self, baseline: &SimReport) -> f64 {
+        baseline.est_total_sec / self.est_total_sec
+    }
+}
+
+/// Run one simulation.
+pub fn simulate(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) -> SimReport {
+    Engine::new(topo.clone(), *attn, *sim).run()
+}
+
+/// Run the FA2 backward pass: both kernels (dK/dV then dQ) sequentially,
+/// combining traffic/hit statistics and summing time — matching how the
+/// AITER backward launches (paper Sec. 4.6).
+pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) -> SimReport {
+    let dkdv = Engine::new(
+        topo.clone(),
+        *attn,
+        SimConfig { kernel: KernelKind::BwdDkDv, ..*sim },
+    )
+    .run();
+    let dq = Engine::new(
+        topo.clone(),
+        *attn,
+        SimConfig { kernel: KernelKind::BwdDq, ..*sim },
+    )
+    .run();
+
+    let mut l2 = dkdv.l2;
+    l2.merge(&dq.l2);
+    let mut hbm = dkdv.hbm;
+    hbm.bytes_read += dq.hbm.bytes_read;
+    hbm.requests += dq.hbm.requests;
+    hbm.mshr_merges += dq.hbm.mshr_merges;
+    hbm.busy_ticks += dq.hbm.busy_ticks;
+    hbm.queue_depth_sum += dq.hbm.queue_depth_sum;
+    hbm.bytes_written += dq.hbm.bytes_written;
+
+    let est_total_sec = dkdv.est_total_sec + dq.est_total_sec;
+    let total_flops = attn.grid_size(KernelKind::BwdDkDv) as f64
+        * attn.dkdv_step_flops()
+        * avg_stream_len(attn, KernelKind::BwdDkDv)
+        + attn.grid_size(KernelKind::BwdDq) as f64
+            * attn.dq_step_flops()
+            * avg_stream_len(attn, KernelKind::BwdDq);
+    SimReport {
+        policy: sim.policy,
+        kernel: KernelKind::BwdDkDv,
+        grid_size: dkdv.grid_size + dq.grid_size,
+        simulated_wgs: dkdv.simulated_wgs + dq.simulated_wgs,
+        ticks: dkdv.ticks + dq.ticks,
+        sec_per_tick: dkdv.sec_per_tick,
+        l2,
+        l2_hit_rate_per_xcd: dkdv.l2_hit_rate_per_xcd.clone(),
+        hbm,
+        throughput_wgs_per_tick: 0.0,
+        est_total_ticks: dkdv.est_total_ticks + dq.est_total_ticks,
+        est_total_sec,
+        achieved_tflops: total_flops / est_total_sec / 1e12,
+        truncated: dkdv.truncated || dq.truncated,
+    }
+}
+
+/// Mean stream length over a kernel's workgroups (causal-aware).
+pub(crate) fn avg_stream_len(cfg: &AttnConfig, kernel: KernelKind) -> f64 {
+    if !cfg.causal {
+        return match kernel {
+            KernelKind::Forward | KernelKind::BwdDq => cfg.num_col_blocks() as f64,
+            KernelKind::BwdDkDv => cfg.num_row_blocks() as f64,
+        };
+    }
+    // Causal: average over blocks (exact, mirrors trace::stream_bounds).
+    let blocks = cfg.blocks_for(kernel);
+    let total: usize = (0..blocks)
+        .map(|b| {
+            let cur = crate::attn::trace::WgCursor::new(
+                cfg,
+                kernel,
+                crate::attn::WorkItem { z: 0, h: 0, b: b as u32 },
+            );
+            cur.stream_len() as usize
+        })
+        .sum();
+    total as f64 / blocks as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn small_cfg() -> AttnConfig {
+        AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 4096, 128) }
+    }
+
+    fn tiny_topo() -> Topology {
+        Topology {
+            name: "tiny".into(),
+            num_xcds: 4,
+            cus_per_xcd: 4,
+            l2_bytes_per_xcd: 512 * 1024,
+            ..presets::mi300x()
+        }
+    }
+
+    #[test]
+    fn exact_run_completes_whole_grid() {
+        let topo = tiny_topo();
+        let cfg = small_cfg();
+        let sim = SimConfig::forward(Policy::SwizzledHeadFirst);
+        let r = simulate(&topo, &cfg, &sim);
+        assert_eq!(r.simulated_wgs, cfg.grid_size(KernelKind::Forward));
+        assert!(!r.truncated);
+        assert!(r.ticks > 0);
+        assert!(r.est_total_sec > 0.0);
+        assert!(r.l2.accesses() > 0);
+    }
+
+    #[test]
+    fn shf_beats_naive_block_first_on_many_heads() {
+        // The headline claim: with heads >> XCDs and streams >> L2,
+        // swizzled head-first must win on both hit rate and time.
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::mha(1, 64, 32768, 128);
+        let sampled = |p| SimConfig::sampled(p, &topo, 2);
+        let shf = simulate(&topo, &cfg, &sampled(Policy::SwizzledHeadFirst));
+        let nbf = simulate(&topo, &cfg, &sampled(Policy::NaiveBlockFirst));
+        assert!(
+            shf.l2.hit_rate() > nbf.l2.hit_rate() + 0.3,
+            "SHF {:.3} vs NBF {:.3}",
+            shf.l2.hit_rate(),
+            nbf.l2.hit_rate()
+        );
+        assert!(
+            shf.est_total_sec < nbf.est_total_sec * 0.95,
+            "SHF {:.6} vs NBF {:.6}",
+            shf.est_total_sec,
+            nbf.est_total_sec
+        );
+    }
+
+    #[test]
+    fn shf_sustains_high_hit_rate() {
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::mha(1, 64, 16384, 128);
+        let sim = SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2);
+        let r = simulate(&topo, &cfg, &sim);
+        assert!(r.l2_hit_pct() > 80.0, "hit rate {:.1}%", r.l2_hit_pct());
+    }
+
+    #[test]
+    fn replication_traffic_nhf_vs_shf() {
+        // Naive Head-first replicates each head's K/V into every XCD.
+        // The replication tax is visible when a head's K/V fits in one
+        // L2 (short context): SHF fetches it once, NHF once PER XCD.
+        // (At very long contexts both policies re-stream per occupancy
+        // generation and total traffic converges — see EXPERIMENTS.md.)
+        let topo = tiny_topo();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 1024, 64) };
+        let shf = simulate(&topo, &cfg, &SimConfig::forward(Policy::SwizzledHeadFirst));
+        let nhf = simulate(&topo, &cfg, &SimConfig::forward(Policy::NaiveHeadFirst));
+        assert!(
+            nhf.hbm.bytes_read as f64 > 1.5 * shf.hbm.bytes_read as f64,
+            "NHF {} vs SHF {}",
+            nhf.hbm.bytes_read,
+            shf.hbm.bytes_read
+        );
+    }
+
+    #[test]
+    fn backward_combines_both_kernels() {
+        let topo = tiny_topo();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 64) };
+        let sim = SimConfig::backward(Policy::SwizzledHeadFirst);
+        let r = simulate_backward(&topo, &cfg, &sim);
+        let dkdv_wgs = cfg.grid_size(KernelKind::BwdDkDv);
+        let dq_wgs = cfg.grid_size(KernelKind::BwdDq);
+        assert_eq!(r.simulated_wgs, dkdv_wgs + dq_wgs);
+        assert!(r.achieved_tflops > 0.0);
+    }
+
+    #[test]
+    fn causal_avg_stream_len() {
+        let mut cfg = AttnConfig::mha(1, 1, 1024, 64); // 8 row, 16 col blocks
+        assert_eq!(avg_stream_len(&cfg, KernelKind::Forward), 16.0);
+        cfg.causal = true;
+        // Row block b streams 2(b+1) tiles, avg over b=0..8 = 9.
+        assert_eq!(avg_stream_len(&cfg, KernelKind::Forward), 9.0);
+    }
+
+    #[test]
+    fn sampled_run_extrapolates() {
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::mha(4, 64, 32768, 128);
+        let sim = SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2);
+        let r = simulate(&topo, &cfg, &sim);
+        assert!(r.simulated_wgs < cfg.grid_size(KernelKind::Forward));
+        assert!(r.est_total_ticks > r.ticks as f64);
+        assert!(!r.truncated);
+    }
+
+    #[test]
+    fn unified_topology_is_policy_insensitive() {
+        // On a single-die GPU (Fig. 1a) all policies see one shared L2:
+        // mapping must make little difference (< 10% in est time).
+        let topo = presets::unified_single_die();
+        let mut topo = topo;
+        topo.cus_per_xcd = 16; // keep the test fast
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 16, 4096, 128) };
+        let shf = simulate(&topo, &cfg, &SimConfig::forward(Policy::SwizzledHeadFirst));
+        let nbf = simulate(&topo, &cfg, &SimConfig::forward(Policy::NaiveBlockFirst));
+        let ratio = nbf.est_total_sec / shf.est_total_sec;
+        assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Chiplet GPU architecture models (paper Fig. 1, Table 1).
+//!
+//! A [`Topology`] describes the NUMA-relevant structure of an accelerator:
+//! how many compute dies (XCDs) it has, how much private L2 each die owns,
+//! aggregate HBM bandwidth, and the compute rate of one CU — all in
+//! physical units. The simulator ([`crate::sim`]) normalizes these to
+//! discrete *ticks* per workload (one tick = the time one CU needs for one
+//! FA2 K/V tile step), so the same experiment can be replayed on a
+//! traditional unified-cache GPU (Fig. 1a), a dual-die part (Fig. 1b), or
+//! MI300X (Fig. 1c / Table 1).
+
+pub mod presets;
+
+/// Architecture description of a (possibly chiplet-based) GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Human-readable name, e.g. `"mi300x"`.
+    pub name: String,
+    /// Number of accelerator complex dies (NUMA domains). 1 = unified GPU.
+    pub num_xcds: usize,
+    /// Compute units per XCD (MI300X: 38).
+    pub cus_per_xcd: usize,
+    /// Private L2 capacity per XCD in bytes (MI300X: 4 MiB).
+    pub l2_bytes_per_xcd: u64,
+    /// Cacheline size in bytes; tile accesses are line-quantized.
+    pub line_bytes: u64,
+    /// Aggregate HBM bandwidth in bytes/second, shared by all XCDs
+    /// (MI300X: 5.3 TB/s).
+    pub hbm_bytes_per_sec: f64,
+    /// Uncontended HBM access latency in seconds (queueing on top of this
+    /// is modeled by the bandwidth budget).
+    pub hbm_latency_sec: f64,
+    /// Peak dense-matmul throughput of one CU in FLOP/second
+    /// (MI300X bf16: ~1307 TFLOP/s over 304 CUs ≈ 4.3 TFLOP/s per CU).
+    pub cu_flops_per_sec: f64,
+    /// Workgroups resident per CU (occupancy). FA2 WGs are register/LDS
+    /// heavy, so 1 on MI300X.
+    pub wgs_per_cu: usize,
+    /// Dispatcher chunk size: how many consecutive WGs each XCD receives
+    /// before the scheduler advances (paper Sec. 2.2: 1 on current HW).
+    pub dispatch_chunk: usize,
+}
+
+impl Topology {
+    /// Total compute units across all XCDs.
+    pub fn total_cus(&self) -> usize {
+        self.num_xcds * self.cus_per_xcd
+    }
+
+    /// Maximum workgroups in flight per XCD.
+    pub fn wg_slots_per_xcd(&self) -> usize {
+        self.cus_per_xcd * self.wgs_per_cu
+    }
+
+    /// Maximum workgroups in flight device-wide.
+    pub fn total_wg_slots(&self) -> usize {
+        self.num_xcds * self.wg_slots_per_xcd()
+    }
+
+    /// Aggregate L2 capacity across dies. Fragmented: data cached on one
+    /// die gives no benefit to another — the whole point of the paper.
+    pub fn total_l2_bytes(&self) -> u64 {
+        self.num_xcds as u64 * self.l2_bytes_per_xcd
+    }
+
+    /// Peak device matmul throughput in FLOP/second.
+    pub fn device_flops_per_sec(&self) -> f64 {
+        self.cu_flops_per_sec * self.total_cus() as f64
+    }
+
+    /// Machine-balance point in FLOP/byte: arithmetic intensities above
+    /// this are compute-bound, below are HBM-bound.
+    pub fn balance_flops_per_byte(&self) -> f64 {
+        self.device_flops_per_sec() / self.hbm_bytes_per_sec
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_xcds == 0 {
+            return Err("num_xcds must be > 0".into());
+        }
+        if self.cus_per_xcd == 0 || self.wgs_per_cu == 0 {
+            return Err("cus_per_xcd and wgs_per_cu must be > 0".into());
+        }
+        if self.l2_bytes_per_xcd == 0 {
+            return Err("l2_bytes_per_xcd must be > 0".into());
+        }
+        if self.hbm_bytes_per_sec <= 0.0 || self.cu_flops_per_sec <= 0.0 {
+            return Err("bandwidth and compute rates must be > 0".into());
+        }
+        if self.dispatch_chunk == 0 {
+            return Err("dispatch_chunk must be > 0".into());
+        }
+        if self.line_bytes == 0 || !self.line_bytes.is_power_of_two() {
+            return Err("line_bytes must be a power of two".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+
+    #[test]
+    fn mi300x_matches_table1() {
+        // Paper Table 1: 8 XCDs, 38 CUs/XCD (304 total), 4 MB L2/XCD
+        // (32 MB total), 5.3 TB/s HBM3.
+        let t = presets::mi300x();
+        assert_eq!(t.num_xcds, 8);
+        assert_eq!(t.cus_per_xcd, 38);
+        assert_eq!(t.total_cus(), 304);
+        assert_eq!(t.l2_bytes_per_xcd, 4 * 1024 * 1024);
+        assert_eq!(t.total_l2_bytes(), 32 * 1024 * 1024);
+        assert!((t.hbm_bytes_per_sec - 5.3e12).abs() < 1e9);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn balance_point_is_near_roofline_knee() {
+        // MI300X bf16 peak ~1307 TFLOP/s over 5.3 TB/s ~= 247 FLOP/byte.
+        let t = presets::mi300x();
+        let b = t.balance_flops_per_byte();
+        assert!(b > 150.0 && b < 350.0, "balance {b}");
+    }
+
+    #[test]
+    fn unified_preset_has_single_domain() {
+        let t = presets::unified_single_die();
+        assert_eq!(t.num_xcds, 1);
+        assert_eq!(t.total_l2_bytes(), 32 * 1024 * 1024);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn dual_and_quad_die_presets() {
+        assert_eq!(presets::dual_die().num_xcds, 2);
+        assert_eq!(presets::quad_die().num_xcds, 4);
+        presets::dual_die().validate().unwrap();
+        presets::quad_die().validate().unwrap();
+    }
+
+    #[test]
+    fn presets_have_equal_aggregate_resources() {
+        // The Fig. 1 evolution keeps total compute/L2/HBM roughly constant
+        // while increasing disaggregation, isolating the NUMA effect.
+        let uni = presets::unified_single_die();
+        let quad = presets::quad_die();
+        let mi = presets::mi300x();
+        assert_eq!(uni.total_l2_bytes(), quad.total_l2_bytes());
+        assert_eq!(uni.total_l2_bytes(), mi.total_l2_bytes());
+        assert_eq!(uni.total_cus(), mi.total_cus());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate() {
+        let mut t = presets::mi300x();
+        t.num_xcds = 0;
+        assert!(t.validate().is_err());
+        let mut t = presets::mi300x();
+        t.line_bytes = 100; // not a power of two
+        assert!(t.validate().is_err());
+        let mut t = presets::mi300x();
+        t.dispatch_chunk = 0;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn preset_lookup_by_name() {
+        for name in ["mi300x", "unified", "dual_die", "quad_die"] {
+            let t = presets::by_name(name).unwrap();
+            t.validate().unwrap();
+        }
+        assert!(presets::by_name("nonexistent").is_none());
+    }
+}

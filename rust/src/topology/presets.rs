@@ -1,0 +1,91 @@
+//! Named topology presets mirroring the paper's Fig. 1 architecture
+//! evolution plus the MI300X specification of Table 1.
+//!
+//! The unified/dual/quad presets keep aggregate compute, L2, and HBM equal
+//! to MI300X while varying only the number of NUMA domains, so ablations
+//! isolate the effect of disaggregation itself.
+
+use super::Topology;
+
+/// MI300X bf16 matmul peak (TFLOP/s) — used to derive the per-CU rate.
+const MI300X_BF16_TFLOPS: f64 = 1307.0;
+const MI300X_TOTAL_CUS: f64 = 304.0;
+
+/// AMD Instinct MI300X (paper Table 1): 8 XCDs × 38 CUs, 4 MB L2 per XCD,
+/// 5.3 TB/s HBM3, NUMA effects exposed to software.
+pub fn mi300x() -> Topology {
+    Topology {
+        name: "mi300x".into(),
+        num_xcds: 8,
+        cus_per_xcd: 38,
+        l2_bytes_per_xcd: 4 * 1024 * 1024,
+        line_bytes: 128,
+        hbm_bytes_per_sec: 5.3e12,
+        hbm_latency_sec: 600e-9,
+        cu_flops_per_sec: MI300X_BF16_TFLOPS * 1e12 / MI300X_TOTAL_CUS,
+        wgs_per_cu: 1,
+        dispatch_chunk: 1,
+    }
+}
+
+/// Traditional single-die GPU (Fig. 1a — A100/H100/MI200 style): one
+/// unified L2 shared by all CUs, uniform memory access. Same aggregate
+/// resources as MI300X so comparisons isolate NUMA.
+pub fn unified_single_die() -> Topology {
+    Topology {
+        name: "unified".into(),
+        num_xcds: 1,
+        cus_per_xcd: 304,
+        l2_bytes_per_xcd: 32 * 1024 * 1024,
+        ..mi300x()
+    }
+}
+
+/// Dual-die chiplet architecture (Fig. 1b — Blackwell-class geometry,
+/// but with NUMA *exposed* rather than hidden by hardware coherency).
+pub fn dual_die() -> Topology {
+    Topology {
+        name: "dual_die".into(),
+        num_xcds: 2,
+        cus_per_xcd: 152,
+        l2_bytes_per_xcd: 16 * 1024 * 1024,
+        ..mi300x()
+    }
+}
+
+/// Quad-die chiplet architecture (Fig. 1c — Rubin-Ultra/MI300-class).
+pub fn quad_die() -> Topology {
+    Topology {
+        name: "quad_die".into(),
+        num_xcds: 4,
+        cus_per_xcd: 76,
+        l2_bytes_per_xcd: 8 * 1024 * 1024,
+        ..mi300x()
+    }
+}
+
+/// The 4-XCD toy configuration used by the paper's Figs. 7-10
+/// illustrations (8 query heads, 128 row blocks, 4 XCDs).
+pub fn paper_illustration() -> Topology {
+    Topology {
+        name: "paper_fig7_10".into(),
+        ..quad_die()
+    }
+}
+
+/// Look a preset up by name (CLI `--topo` flag).
+pub fn by_name(name: &str) -> Option<Topology> {
+    match name {
+        "mi300x" => Some(mi300x()),
+        "unified" | "single_die" => Some(unified_single_die()),
+        "dual_die" => Some(dual_die()),
+        "quad_die" => Some(quad_die()),
+        "paper_fig7_10" => Some(paper_illustration()),
+        _ => None,
+    }
+}
+
+/// All preset names, for CLI help and sweep tooling.
+pub fn all_names() -> &'static [&'static str] {
+    &["mi300x", "unified", "dual_die", "quad_die", "paper_fig7_10"]
+}

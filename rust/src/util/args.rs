@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser: `--key value`, `--key=value`, boolean
+//! `--flag`, and positionals. The caller declares which flags are boolean
+//! so `--causal --heads 8` parses unambiguously.
+
+use std::collections::{HashMap, HashSet};
+use std::str::FromStr;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    map: HashMap<String, String>,
+    bools: HashSet<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (program name excluded). `bool_flags` lists
+    /// the valueless flags.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let boolset: HashSet<&str> = bool_flags.iter().copied().collect();
+        let mut map = HashMap::new();
+        let mut bools = HashSet::new();
+        let mut pos = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    map.insert(k.to_string(), v.to_string());
+                } else if boolset.contains(name) {
+                    bools.insert(name.to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    map.insert(name.to_string(), v.clone());
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { map, bools, pos })
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&raw, bool_flags)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.bools.contains(flag)
+    }
+
+    pub fn get<T: FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{key} '{v}': {e}")),
+        }
+    }
+
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    pub fn require<T: FromStr>(&self, key: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get(key)?.ok_or_else(|| format!("missing required --{key}"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = Args::parse(
+            &sv(&["figure", "--topo=mi300x", "--heads", "64", "--quick"]),
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["figure".to_string()]);
+        assert_eq!(a.get::<String>("topo").unwrap().unwrap(), "mi300x");
+        assert_eq!(a.get::<usize>("heads").unwrap().unwrap(), 64);
+        assert!(a.has("quick"));
+        assert!(!a.has("json"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(&sv(&["--n", "3"]), &[]).unwrap();
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 3);
+        assert_eq!(a.get_or("m", 7usize).unwrap(), 7);
+        assert!(a.require::<usize>("missing").is_err());
+    }
+
+    #[test]
+    fn bad_value_reports_flag() {
+        let a = Args::parse(&sv(&["--n", "abc"]), &[]).unwrap();
+        let err = a.get::<usize>("n").unwrap_err();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--n"]), &[]).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (criterion replacement): warmup, repeated
+//! timed runs, mean/min/max reporting. Used by every `rust/benches/*.rs`
+//! target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<48} {:>10.3} ms/iter (min {:.3}, max {:.3}, n={})",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.max.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for up to `iters` iterations (after one warmup run), or stop
+/// early once `budget` wall time is spent.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, budget: Duration, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    let total: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        mean: total / times.len() as u32,
+        min: times.iter().min().copied().unwrap(),
+        max: times.iter().max().copied().unwrap(),
+    }
+}
+
+/// Collect results and print a closing summary (mirrors criterion's
+/// console layout closely enough for `cargo bench` logs).
+#[derive(Debug, Default)]
+pub struct Harness {
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    pub fn new(title: &str) -> Self {
+        println!("=== bench: {title} ===");
+        Harness { results: Vec::new() }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, f: F) {
+        let r = bench(name, iters, Duration::from_secs(20), f);
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 5, Duration::from_secs(1), || {
+            std::hint::black_box((0..10_000u64).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean && r.mean <= r.max.max(r.mean));
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let r = bench("sleepy", 1000, Duration::from_millis(30), || {
+            std::thread::sleep(Duration::from_millis(10));
+        });
+        assert!(r.iters < 1000);
+    }
+}

@@ -1,0 +1,105 @@
+//! Experiment-config file format: INI-style `[section]` + `key = value`
+//! (the toml crate is unavailable offline; this covers the subset the
+//! project needs — scalars only, `#`/`;` comments, no nesting).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Ini {
+    /// section -> key -> raw value string. Top-level keys live under "".
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl Ini {
+    pub fn parse(text: &str) -> Result<Ini, String> {
+        let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                current = name.trim().to_string();
+                sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected 'key = value'", lineno + 1));
+            };
+            let v = v.trim().trim_matches('"').to_string();
+            sections
+                .entry(current.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(Ini { sections })
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        section: &str,
+        key: &str,
+    ) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("[{section}] {key} = '{v}': {e}")),
+        }
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment
+topology = "mi300x"
+
+[attention]
+batch = 2
+h_q = 64
+causal = true
+
+[sim]
+policy = shf
+"#;
+
+    #[test]
+    fn parse_sections() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get("", "topology"), Some("mi300x"));
+        assert_eq!(ini.get_parsed::<usize>("attention", "batch").unwrap(), Some(2));
+        assert_eq!(ini.get_parsed::<bool>("attention", "causal").unwrap(), Some(true));
+        assert_eq!(ini.get("sim", "policy"), Some("shf"));
+        assert_eq!(ini.get("sim", "nope"), None);
+        assert!(ini.has_section("attention"));
+        assert!(!ini.has_section("other"));
+    }
+
+    #[test]
+    fn bad_line_rejected() {
+        assert!(Ini::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_location() {
+        let ini = Ini::parse("[a]\nx = abc").unwrap();
+        let err = ini.get_parsed::<usize>("a", "x").unwrap_err();
+        assert!(err.contains("[a] x"), "{err}");
+    }
+}

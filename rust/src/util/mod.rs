@@ -1,0 +1,21 @@
+//! Dependency-free utility layer.
+//!
+//! The offline build environment vendors only the `xla` crate's closure,
+//! so the conveniences a production crate would pull from the ecosystem
+//! are implemented here, small and fully tested:
+//!
+//! * [`json`] — minimal JSON parser/writer (manifest.json, `--json` output)
+//! * [`args`] — CLI flag parsing (replaces clap)
+//! * [`rng`] — SplitMix64 deterministic RNG (sim jitter, property tests)
+//! * [`mod@bench`] — micro-benchmark harness (replaces criterion)
+//! * [`oneshot`] — one-shot channel (replaces tokio::sync::oneshot)
+//! * [`fxhash`] — fast u64 hasher for the simulator's hot maps
+//! * [`ini`] — key=value experiment-config format (replaces toml)
+
+pub mod args;
+pub mod bench;
+pub mod fxhash;
+pub mod ini;
+pub mod json;
+pub mod oneshot;
+pub mod rng;

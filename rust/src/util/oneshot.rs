@@ -1,0 +1,72 @@
+//! One-shot channel (tokio is unavailable offline): a thin typed wrapper
+//! over `std::sync::mpsc::sync_channel(1)` with consume-on-send.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+pub struct Sender<T>(mpsc::SyncSender<T>);
+pub struct Receiver<T>(mpsc::Receiver<T>);
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let (tx, rx) = mpsc::sync_channel(1);
+    (Sender(tx), Receiver(rx))
+}
+
+impl<T> Sender<T> {
+    /// Send the single value; returns it back if the receiver is gone.
+    pub fn send(self, value: T) -> Result<(), T> {
+        self.0.try_send(value).map_err(|e| match e {
+            mpsc::TrySendError::Full(v) | mpsc::TrySendError::Disconnected(v) => v,
+        })
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until the value arrives (or the sender is dropped).
+    pub fn wait(self) -> Result<T, RecvError> {
+        self.0.recv().map_err(|_| RecvError)
+    }
+
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        self.0.recv_timeout(timeout).map_err(|_| RecvError)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_then_wait() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        assert_eq!(rx.wait(), Ok(42));
+    }
+
+    #[test]
+    fn dropped_sender_errors() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert_eq!(rx.wait(), Err(RecvError));
+    }
+
+    #[test]
+    fn cross_thread() {
+        let (tx, rx) = channel();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send("done").unwrap();
+        });
+        assert_eq!(rx.wait(), Ok("done"));
+    }
+
+    #[test]
+    fn dropped_receiver_returns_value() {
+        let (tx, rx) = channel();
+        drop(rx);
+        assert_eq!(tx.send(7), Err(7));
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload presets and sweep builders: the paper's Tables 2-3 plus a
+//! request generator for the serving coordinator.
+
+pub mod presets;
+pub mod requests;
+pub mod sweeps;
+
+pub use presets::ModelPreset;
+pub use requests::{Request, RequestGenerator};

@@ -1,0 +1,89 @@
+//! Model presets from the paper's Table 3 (plus the MHA sweep shapes).
+
+use crate::attn::AttnConfig;
+
+/// A named model attention configuration (paper Table 3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelPreset {
+    pub name: String,
+    pub h_q: usize,
+    pub h_k: usize,
+    pub d_head: usize,
+    /// True for grouped-query attention.
+    pub gqa: bool,
+}
+
+impl ModelPreset {
+    /// Attention config at a given batch size and context length.
+    pub fn attn(&self, batch: usize, n_ctx: usize) -> AttnConfig {
+        AttnConfig::gqa(batch, self.h_q, self.h_k, n_ctx, self.d_head)
+    }
+}
+
+/// Llama-3 8B: GQA, H_Q=32, H_K=8, D=128.
+pub fn llama3_8b() -> ModelPreset {
+    ModelPreset { name: "llama3-8b".into(), h_q: 32, h_k: 8, d_head: 128, gqa: true }
+}
+
+/// Llama-3 70B: GQA, H_Q=64, H_K=8, D=128.
+pub fn llama3_70b() -> ModelPreset {
+    ModelPreset { name: "llama3-70b".into(), h_q: 64, h_k: 8, d_head: 128, gqa: true }
+}
+
+/// Llama-3 405B: GQA, H_Q=128, H_K=8, D=128.
+pub fn llama3_405b() -> ModelPreset {
+    ModelPreset { name: "llama3-405b".into(), h_q: 128, h_k: 8, d_head: 128, gqa: true }
+}
+
+/// DeepSeek-V3 prefill: MHA, H_Q=H_K=128, D=56 (paper Sec. 4.5).
+pub fn deepseek_v3() -> ModelPreset {
+    ModelPreset { name: "deepseek-v3".into(), h_q: 128, h_k: 128, d_head: 56, gqa: false }
+}
+
+pub fn by_name(name: &str) -> Option<ModelPreset> {
+    match name {
+        "llama3-8b" => Some(llama3_8b()),
+        "llama3-70b" => Some(llama3_70b()),
+        "llama3-405b" => Some(llama3_405b()),
+        "deepseek-v3" => Some(deepseek_v3()),
+        _ => None,
+    }
+}
+
+pub fn all() -> Vec<ModelPreset> {
+    vec![llama3_8b(), llama3_70b(), llama3_405b(), deepseek_v3()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_rows() {
+        let l8 = llama3_8b();
+        assert_eq!((l8.h_q, l8.h_k, l8.d_head), (32, 8, 128));
+        let l70 = llama3_70b();
+        assert_eq!((l70.h_q, l70.h_k, l70.d_head), (64, 8, 128));
+        let l405 = llama3_405b();
+        assert_eq!((l405.h_q, l405.h_k, l405.d_head), (128, 8, 128));
+        let ds = deepseek_v3();
+        assert_eq!((ds.h_q, ds.h_k, ds.d_head), (128, 128, 56));
+        assert!(!ds.gqa);
+    }
+
+    #[test]
+    fn attn_config_roundtrip() {
+        let cfg = llama3_70b().attn(2, 8192);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.group(), 8);
+        assert_eq!(cfg.batch, 2);
+    }
+
+    #[test]
+    fn lookup() {
+        for p in all() {
+            assert_eq!(by_name(&p.name).unwrap(), p);
+        }
+        assert!(by_name("gpt-5").is_none());
+    }
+}

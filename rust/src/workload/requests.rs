@@ -1,0 +1,82 @@
+//! Serving request generation for the coordinator: deterministic,
+//! seedable streams of prefill requests with mixed context lengths —
+//! the workload of `examples/serve_attention.rs` and the coordinator
+//! benches.
+
+/// One attention prefill request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    /// Context length of the prompt (tokens).
+    pub n_ctx: usize,
+    /// Deterministic input seed (see runtime::inputs).
+    pub seed: u64,
+}
+
+/// Deterministic request generator (splitmix64-based).
+#[derive(Debug, Clone)]
+pub struct RequestGenerator {
+    state: u64,
+    next_id: u64,
+    /// Allowed context lengths (requests are bucketed to these).
+    pub lengths: Vec<usize>,
+}
+
+impl RequestGenerator {
+    pub fn new(seed: u64, lengths: Vec<usize>) -> Self {
+        assert!(!lengths.is_empty());
+        RequestGenerator { state: seed, next_id: 0, lengths }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_request(&mut self) -> Request {
+        let r = self.next_u64();
+        let n_ctx = self.lengths[(r % self.lengths.len() as u64) as usize];
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, n_ctx, seed: r | 1 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = RequestGenerator::new(7, vec![128, 256]);
+        let mut b = RequestGenerator::new(7, vec![128, 256]);
+        assert_eq!(a.take(10), b.take(10));
+    }
+
+    #[test]
+    fn ids_monotonic_lengths_bucketed() {
+        let mut g = RequestGenerator::new(1, vec![128, 256]);
+        let reqs = g.take(100);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.n_ctx == 128 || r.n_ctx == 256);
+        }
+        // Both buckets occur.
+        assert!(reqs.iter().any(|r| r.n_ctx == 128));
+        assert!(reqs.iter().any(|r| r.n_ctx == 256));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = RequestGenerator::new(1, vec![128, 256]);
+        let mut b = RequestGenerator::new(2, vec![128, 256]);
+        assert_ne!(a.take(20), b.take(20));
+    }
+}

@@ -1,0 +1,132 @@
+//! Experiment sweep builders matching the paper's evaluation grids.
+
+use crate::attn::AttnConfig;
+
+use super::presets;
+
+/// One point of a sweep, labeled for figure output.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    pub cfg: AttnConfig,
+}
+
+pub const TABLE2_N_CTX: [usize; 3] = [8 * 1024, 32 * 1024, 128 * 1024];
+pub const TABLE2_BATCH: [usize; 4] = [1, 2, 4, 8];
+pub const TABLE2_HEADS: [usize; 5] = [8, 16, 32, 64, 128];
+pub const FIG13_N_CTX: [usize; 4] = [2 * 1024, 8 * 1024, 32 * 1024, 128 * 1024];
+
+/// Paper Table 2: the MHA sensitivity grid (Figs. 12-13).
+/// D_HEAD = 128, BLOCK = 128x64.
+pub fn mha_sensitivity(
+    n_ctxs: &[usize],
+    batches: &[usize],
+    heads: &[usize],
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &h in heads {
+        for &n in n_ctxs {
+            for &b in batches {
+                out.push(SweepPoint {
+                    label: format!("H={h} N={} B={b}", fmt_ctx(n)),
+                    cfg: AttnConfig::mha(b, h, n, 128),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Paper Fig. 14: GQA with fixed 8 KV heads, H_Q in {32, 64, 128}
+/// (Llama-3 8B/70B/405B).
+pub fn gqa_sensitivity(n_ctxs: &[usize], batches: &[usize]) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for preset in [presets::llama3_8b(), presets::llama3_70b(), presets::llama3_405b()] {
+        for &n in n_ctxs {
+            for &b in batches {
+                out.push(SweepPoint {
+                    label: format!("{} H_Q={} N={} B={b}", preset.name, preset.h_q, fmt_ctx(n)),
+                    cfg: preset.attn(b, n),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Paper Fig. 15: DeepSeek-V3 prefill (MHA, 128 heads, D=56).
+pub fn deepseek_prefill(n_ctxs: &[usize], batches: &[usize]) -> Vec<SweepPoint> {
+    let preset = presets::deepseek_v3();
+    let mut out = Vec::new();
+    for &n in n_ctxs {
+        for &b in batches {
+            out.push(SweepPoint {
+                label: format!("N={} B={b}", fmt_ctx(n)),
+                cfg: preset.attn(b, n),
+            });
+        }
+    }
+    out
+}
+
+/// Paper Fig. 16: backward pass, H_Q = 128 MHA, batch 1-2.
+pub fn backward_sweep(n_ctxs: &[usize], batches: &[usize]) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &n in n_ctxs {
+        for &b in batches {
+            out.push(SweepPoint {
+                label: format!("N={} B={b}", fmt_ctx(n)),
+                cfg: AttnConfig::mha(b, 128, n, 128),
+            });
+        }
+    }
+    out
+}
+
+/// "8K" / "128K" style context-length labels (paper axis format).
+pub fn fmt_ctx(n: usize) -> String {
+    if n % 1024 == 0 {
+        format!("{}K", n / 1024)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_grid_size() {
+        let pts = mha_sensitivity(&TABLE2_N_CTX, &TABLE2_BATCH, &TABLE2_HEADS);
+        assert_eq!(pts.len(), 3 * 4 * 5);
+        for p in &pts {
+            p.cfg.validate().unwrap();
+            assert_eq!(p.cfg.d_head, 128);
+            assert_eq!(p.cfg.block_m, 128);
+            assert_eq!(p.cfg.block_n, 64);
+        }
+    }
+
+    #[test]
+    fn gqa_all_have_8_kv_heads() {
+        for p in gqa_sensitivity(&[8192], &[1, 8]) {
+            assert_eq!(p.cfg.h_k, 8);
+        }
+    }
+
+    #[test]
+    fn deepseek_shape() {
+        for p in deepseek_prefill(&[2048], &[1]) {
+            assert_eq!(p.cfg.h_q, 128);
+            assert_eq!(p.cfg.d_head, 56);
+        }
+    }
+
+    #[test]
+    fn ctx_labels() {
+        assert_eq!(fmt_ctx(8192), "8K");
+        assert_eq!(fmt_ctx(131072), "128K");
+        assert_eq!(fmt_ctx(100), "100");
+    }
+}

@@ -1,0 +1,149 @@
+//! Failure-injection tests: corrupt artifacts, missing files, tampered
+//! goldens, and degenerate service configurations must fail loudly and
+//! precisely — never hang, never serve wrong numbers silently.
+
+use std::fs;
+use std::path::PathBuf;
+
+use numa_attn::coordinator::{AttentionService, BatcherConfig, ServiceConfig};
+use numa_attn::runtime::{Manifest, Runtime};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Copy the real artifacts into a temp dir we can corrupt.
+fn scratch_copy(name: &str) -> Option<PathBuf> {
+    let src = artifact_dir()?;
+    let dst = std::env::temp_dir().join(format!("numa-attn-fi-{name}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dst);
+    fs::create_dir_all(&dst).unwrap();
+    for entry in fs::read_dir(&src).unwrap() {
+        let e = entry.unwrap();
+        fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+    }
+    Some(dst)
+}
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let dir = std::env::temp_dir().join("numa-attn-empty");
+    let _ = fs::create_dir_all(&dir);
+    let err = Runtime::open(&dir).err().expect("must fail");
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+}
+
+#[test]
+fn corrupt_manifest_json_is_an_error() {
+    let Some(dir) = scratch_copy("badjson") else { return };
+    fs::write(dir.join("manifest.json"), "{ not json !!").unwrap();
+    assert!(Runtime::open(&dir).is_err());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_referencing_missing_hlo_file_fails_at_load() {
+    let Some(dir) = scratch_copy("missinghlo") else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let victim = manifest.attention_artifacts().next().unwrap().clone();
+    fs::remove_file(dir.join(&victim.file)).unwrap();
+    let mut rt = Runtime::open(&dir).unwrap();
+    let err = rt.load(&victim.name).unwrap_err();
+    assert!(
+        format!("{err:#}").contains(&victim.file) || format!("{err:#}").contains("HLO"),
+        "{err:#}"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_hlo_text_fails_to_parse() {
+    let Some(dir) = scratch_copy("trunc") else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let victim = manifest.attention_artifacts().next().unwrap().clone();
+    let path = dir.join(&victim.file);
+    let text = fs::read_to_string(&path).unwrap();
+    fs::write(&path, &text[..text.len() / 3]).unwrap();
+    let mut rt = Runtime::open(&dir).unwrap();
+    assert!(rt.load(&victim.name).is_err());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tampered_golden_is_detected() {
+    let Some(dir) = scratch_copy("golden") else { return };
+    // Inflate every golden abs_sum by 10%: verify must fail.
+    let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let tampered = regex_free_scale_abs_sums(&text);
+    fs::write(dir.join("manifest.json"), tampered).unwrap();
+    let mut rt = Runtime::open(&dir).unwrap();
+    let name = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.golden.is_some())
+        .unwrap()
+        .name
+        .clone();
+    rt.load(&name).unwrap();
+    let err = rt.verify(&name, 1e-3).unwrap_err();
+    assert!(format!("{err:#}").contains("golden mismatch"), "{err:#}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Multiply every "abs_sum": <num> in the JSON by 1.1 without regex.
+fn regex_free_scale_abs_sums(text: &str) -> String {
+    let mut out = String::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find("\"abs_sum\":") {
+        let (head, tail) = rest.split_at(pos + "\"abs_sum\":".len());
+        out.push_str(head);
+        let end = tail
+            .find(|c: char| c == ',' || c == '}')
+            .expect("number terminator");
+        let num: f64 = tail[..end].trim().parse().expect("abs_sum number");
+        out.push_str(&format!(" {}", num * 1.1));
+        rest = &tail[end..];
+    }
+    out.push_str(rest);
+    out
+}
+
+#[test]
+fn service_fails_fast_on_empty_catalogue() {
+    let Some(dir) = scratch_copy("nocat") else { return };
+    // Strip all attention artifacts from the manifest.
+    let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let stripped = text.replace("\"attn_fwd\"", "\"attn_disabled\"");
+    fs::write(dir.join("manifest.json"), stripped).unwrap();
+    let err = AttentionService::start(ServiceConfig {
+        artifact_dir: dir.clone(),
+        batcher: BatcherConfig::default(),
+    })
+    .err()
+    .expect("must fail");
+    assert!(format!("{err:#}").contains("no batch-1 attention artifacts"), "{err:#}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn verify_on_artifact_without_golden_errors() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let name = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.golden.is_none())
+        .map(|a| a.name.clone());
+    if let Some(name) = name {
+        rt.load(&name).unwrap();
+        assert!(rt.verify(&name, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Cross-module integration tests: simulator-over-workload shape checks,
+//! experiment config files end-to-end, and the paper's headline orderings
+//! at reduced scale (the full grids run in the benches).
+
+use numa_attn::attn::AttnConfig;
+use numa_attn::config::ExperimentConfig;
+use numa_attn::coordinator::advise;
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+use numa_attn::sim::{simulate, simulate_backward, SimConfig};
+use numa_attn::topology::presets;
+use numa_attn::workload::{presets as models, sweeps};
+
+fn sampled(p: Policy) -> SimConfig {
+    SimConfig::sampled(p, &presets::mi300x(), 2)
+}
+
+#[test]
+fn headline_ordering_holds_at_scale() {
+    // SHF >= NHF >= block-first at the paper's stress point (reduced to
+    // H=64/32K to keep the test fast).
+    let topo = presets::mi300x();
+    let cfg = AttnConfig::mha(2, 64, 32768, 128);
+    let shf = simulate(&topo, &cfg, &sampled(Policy::SwizzledHeadFirst));
+    let nhf = simulate(&topo, &cfg, &sampled(Policy::NaiveHeadFirst));
+    let nbf = simulate(&topo, &cfg, &sampled(Policy::NaiveBlockFirst));
+    assert!(shf.est_total_sec <= nhf.est_total_sec * 1.02);
+    assert!(nhf.est_total_sec < nbf.est_total_sec);
+    assert!(shf.l2_hit_pct() > 90.0, "SHF {:.1}%", shf.l2_hit_pct());
+    assert!(nbf.l2_hit_pct() < 40.0, "NBF {:.1}%", nbf.l2_hit_pct());
+}
+
+#[test]
+fn gqa_sbf_matches_shf_with_8_kv_heads() {
+    // Paper Sec. 4.4 (Fig. 14): when KV groups == XCDs, Swizzled
+    // Block-first co-locates and matches SHF; Naive Block-first doesn't.
+    let topo = presets::mi300x();
+    let cfg = models::llama3_70b().attn(2, 32768);
+    let shf = simulate(&topo, &cfg, &sampled(Policy::SwizzledHeadFirst));
+    let sbf = simulate(&topo, &cfg, &sampled(Policy::SwizzledBlockFirst));
+    let nbf = simulate(&topo, &cfg, &sampled(Policy::NaiveBlockFirst));
+    let rel_sbf = shf.est_total_sec / sbf.est_total_sec;
+    assert!(rel_sbf > 0.95, "SBF rel {rel_sbf:.3}");
+    assert!(shf.est_total_sec / nbf.est_total_sec < 0.95);
+}
+
+#[test]
+fn backward_speedup_is_modest() {
+    // Paper Fig. 16: backward gains bounded (~1.10x at 128K).
+    let topo = presets::mi300x();
+    let cfg = AttnConfig::mha(1, 128, 16384, 128);
+    let shf = simulate_backward(&topo, &cfg, &SimConfig {
+        ..SimConfig::backward(Policy::SwizzledHeadFirst)
+    });
+    let nbf = simulate_backward(&topo, &cfg, &SimConfig {
+        ..SimConfig::backward(Policy::NaiveBlockFirst)
+    });
+    let speedup = nbf.est_total_sec / shf.est_total_sec;
+    assert!((0.95..1.45).contains(&speedup), "speedup {speedup:.3}");
+}
+
+#[test]
+fn unified_gpu_shows_no_numa_effect() {
+    // Fig. 1a control: one die, one L2 -> mapping barely matters.
+    let mut topo = presets::unified_single_die();
+    topo.cus_per_xcd = 64; // keep runtime bounded
+    let cfg = AttnConfig::mha(1, 32, 8192, 128);
+    let shf = simulate(&topo, &cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
+    let nbf = simulate(&topo, &cfg, &SimConfig::sampled(Policy::NaiveBlockFirst, &topo, 2));
+    let ratio = nbf.est_total_sec / shf.est_total_sec;
+    assert!((0.9..1.12).contains(&ratio), "ratio {ratio:.3}");
+}
+
+#[test]
+fn chunk_mismatch_degrades_swizzle() {
+    // Paper Sec. 2.2: the driver's chunk size can change across GPU
+    // generations; a chunk-1 swizzle on chunk!=1 hardware loses locality.
+    let cfg = AttnConfig::mha(1, 64, 16384, 128);
+    let mut chunk1 = presets::mi300x();
+    chunk1.dispatch_chunk = 1;
+    let mut chunk4 = presets::mi300x();
+    chunk4.dispatch_chunk = 4;
+    let good = simulate(&chunk1, &cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &chunk1, 2));
+    let bad = simulate(&chunk4, &cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &chunk4, 2));
+    assert!(
+        bad.l2_hit_pct() < good.l2_hit_pct() - 5.0,
+        "chunk-4 {:.1}% vs chunk-1 {:.1}%",
+        bad.l2_hit_pct(),
+        good.l2_hit_pct()
+    );
+}
+
+#[test]
+fn experiment_config_roundtrip() {
+    let text = r#"
+topology = "quad_die"
+
+[attention]
+batch = 1
+h_q = 16
+h_k = 4
+n_ctx = 4096
+d_head = 64
+causal = true
+
+[sim]
+policy = "nbf"
+generations = 1
+seed = 9
+prefetch_depth = 2
+"#;
+    let exp = ExperimentConfig::parse(text).unwrap();
+    let topo = exp.topology().unwrap();
+    assert_eq!(topo.num_xcds, 4);
+    let attn = exp.attn().unwrap();
+    assert!(attn.causal);
+    let pols = exp.policies().unwrap();
+    assert_eq!(pols, vec![Policy::NaiveBlockFirst]);
+    let sc = exp.sim(pols[0]).unwrap();
+    assert_eq!(sc.prefetch_depth, 2);
+    let r = simulate(&topo, &attn, &sc);
+    assert!(r.est_total_sec > 0.0);
+    assert!(!r.truncated);
+}
+
+#[test]
+fn advisor_consistent_with_figures() {
+    // The advisor's recommendation must be the best policy in the
+    // corresponding figure row.
+    let topo = presets::mi300x();
+    let cfg = AttnConfig::mha(1, 64, 32768, 128);
+    let advice = advise(&topo, &cfg);
+    assert_eq!(advice.recommended, Policy::SwizzledHeadFirst);
+    let best_rel = advice
+        .projections
+        .iter()
+        .map(|(_, _, rel)| *rel)
+        .fold(0.0f64, f64::max);
+    assert!(best_rel <= 1.0 + 1e-9);
+}
+
+#[test]
+fn quick_fig13_extremes() {
+    // One end-to-end figure run (quick sweep) sanity-checking both ends.
+    let topo = presets::mi300x();
+    let fig = figures::fig13(&topo, true);
+    let shf_small = fig.value("H=8 N=2K B=1", Policy::SwizzledHeadFirst).unwrap();
+    let shf_big = fig.value("H=128 N=128K B=8", Policy::SwizzledHeadFirst).unwrap();
+    let nbf_big = fig.value("H=128 N=128K B=8", Policy::NaiveBlockFirst).unwrap();
+    assert!(shf_small > 80.0);
+    assert!(shf_big > 80.0);
+    assert!(nbf_big < 20.0);
+}
+
+#[test]
+fn sweep_labels_are_unique() {
+    let pts = sweeps::mha_sensitivity(&sweeps::TABLE2_N_CTX, &sweeps::TABLE2_BATCH, &sweeps::TABLE2_HEADS);
+    let mut labels: Vec<&str> = pts.iter().map(|p| p.label.as_str()).collect();
+    labels.sort_unstable();
+    let before = labels.len();
+    labels.dedup();
+    assert_eq!(labels.len(), before);
+}

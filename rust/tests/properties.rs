@@ -1,0 +1,213 @@
+//! Property-based tests (hand-rolled generator over `util::rng` — the
+//! proptest crate is unavailable offline; each property runs hundreds of
+//! randomized cases from a fixed seed, printing the failing case on
+//! violation).
+
+use numa_attn::attn::acc::AccSpread;
+use numa_attn::attn::trace::WgCursor;
+use numa_attn::attn::{AttnConfig, KernelKind, WorkItem};
+use numa_attn::cache::LruCache;
+use numa_attn::mapping::{chiplet_swizzle, Mapping, Policy, ALL_POLICIES};
+use numa_attn::sched::{xcd_of_slot, Dispatcher};
+use numa_attn::util::rng::SplitMix64;
+
+fn policies(rng: &mut SplitMix64) -> Policy {
+    ALL_POLICIES[rng.gen_range(4) as usize]
+}
+
+/// Random grid geometry with heads divisible by xcds (paper configs).
+fn geometry(rng: &mut SplitMix64) -> (usize, usize, usize, usize) {
+    let xcds = [2usize, 4, 8][rng.gen_range(3) as usize];
+    let heads = xcds * (1 + rng.gen_range(16) as usize);
+    let blocks = 1 + rng.gen_range(64) as usize;
+    let batch = 1 + rng.gen_range(4) as usize;
+    (batch, heads, blocks, xcds)
+}
+
+#[test]
+fn prop_mapping_bijective() {
+    let mut rng = SplitMix64::new(101);
+    for case in 0..300 {
+        let (b, h, nb, x) = geometry(&mut rng);
+        let p = policies(&mut rng);
+        let m = Mapping::new(p, b, h, nb, x).unwrap();
+        let mut seen = vec![false; m.grid_size()];
+        for s in 0..m.grid_size() {
+            let w = m.decode(s);
+            let idx = ((w.z as usize * h) + w.h as usize) * nb + w.b as usize;
+            assert!(!seen[idx], "case {case}: duplicate work {w:?} ({p}, {b}x{h}x{nb}/{x})");
+            seen[idx] = true;
+        }
+    }
+}
+
+#[test]
+fn prop_shf_never_splits_a_head() {
+    let mut rng = SplitMix64::new(202);
+    for case in 0..200 {
+        let (b, h, nb, x) = geometry(&mut rng);
+        let m = Mapping::new(Policy::SwizzledHeadFirst, b, h, nb, x).unwrap();
+        let mut head_xcd = vec![None; b * h];
+        for s in 0..m.grid_size() {
+            let w = m.decode(s);
+            let xcd = xcd_of_slot(s, 1, x);
+            let key = w.z as usize * h + w.h as usize;
+            match head_xcd[key] {
+                None => head_xcd[key] = Some(xcd),
+                Some(prev) => assert_eq!(
+                    prev, xcd,
+                    "case {case}: head {} split across XCDs ({b}x{h}x{nb}/{x})",
+                    w.h
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sbf_gqa_groups_colocated_when_groups_eq_xcds() {
+    // Paper Sec. 4.4: SBF co-locates ACCs exactly when H_K == num XCDs.
+    let mut rng = SplitMix64::new(303);
+    for _ in 0..100 {
+        let x = [2usize, 4, 8][rng.gen_range(3) as usize];
+        let h_k = x;
+        let group = 1 + rng.gen_range(8) as usize;
+        let h_q = h_k * group;
+        if h_q % x != 0 {
+            continue;
+        }
+        let nb = 1 + rng.gen_range(32) as usize;
+        let cfg = AttnConfig::gqa(1, h_q, h_k, nb * 128, 128);
+        let m = Mapping::new(Policy::SwizzledBlockFirst, 1, h_q, nb, x).unwrap();
+        let spread = AccSpread::measure(
+            &cfg,
+            x,
+            (0..m.grid_size()).map(|s| (m.decode(s), xcd_of_slot(s, 1, x))),
+        );
+        assert!(spread.perfectly_colocated(), "h_q={h_q} h_k={h_k} x={x} nb={nb}");
+        assert_eq!(spread.max_accs_per_xcd(), 1);
+    }
+}
+
+#[test]
+fn prop_chiplet_swizzle_bijective_when_divisible() {
+    let mut rng = SplitMix64::new(404);
+    for _ in 0..200 {
+        let x = [2usize, 4, 8][rng.gen_range(3) as usize];
+        let grid = x * (1 + rng.gen_range(256) as usize);
+        let mut seen = vec![false; grid];
+        for s in 0..grid {
+            let l = chiplet_swizzle(s, grid, x);
+            assert!(l < grid);
+            assert!(!seen[l], "grid {grid} x {x}");
+            seen[l] = true;
+        }
+    }
+}
+
+#[test]
+fn prop_dispatcher_covers_grid_for_any_chunk() {
+    let mut rng = SplitMix64::new(505);
+    for _ in 0..100 {
+        let (b, h, nb, x) = geometry(&mut rng);
+        let chunk = 1 + rng.gen_range(4) as usize;
+        let p = policies(&mut rng);
+        let m = Mapping::new(p, b, h, nb, x).unwrap();
+        let grid = m.grid_size();
+        let mut d = Dispatcher::new(m, chunk, x);
+        let mut count = 0usize;
+        let mut seen = std::collections::HashSet::new();
+        loop {
+            let mut any = false;
+            for xcd in 0..x as u32 {
+                if let Some((slot, w)) = d.next_for_xcd(xcd) {
+                    assert_eq!(xcd_of_slot(slot, chunk, x), xcd);
+                    assert!(seen.insert((w.z, w.h, w.b)));
+                    count += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        assert_eq!(count, grid);
+    }
+}
+
+#[test]
+fn prop_lru_never_exceeds_capacity_and_counts_consistently() {
+    let mut rng = SplitMix64::new(606);
+    for _ in 0..50 {
+        let cap = 1024 * (1 + rng.gen_range(64));
+        let mut c = LruCache::new(cap);
+        let key_space = 1 + rng.gen_range(200);
+        let mut ops = 0u64;
+        for _ in 0..2000 {
+            let key = rng.gen_range(key_space);
+            let bytes = (64 * (1 + rng.gen_range(8))) as u32;
+            c.access(key, bytes);
+            ops += 1;
+            assert!(c.used_bytes() <= cap, "over capacity");
+        }
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, ops);
+        assert_eq!(s.hit_bytes + s.miss_bytes, s.hit_bytes + s.miss_bytes);
+    }
+}
+
+#[test]
+fn prop_causal_streams_monotonic_in_block() {
+    // Forward: later row blocks see >= K/V tiles; dK/dV: later column
+    // blocks see <= row blocks.
+    let mut rng = SplitMix64::new(707);
+    for _ in 0..100 {
+        let blocks_m = 1 + rng.gen_range(16) as usize;
+        let cfg = AttnConfig {
+            causal: true,
+            ..AttnConfig::mha(1, 4, blocks_m * 128, 64)
+        };
+        let mut prev = 0;
+        for b in 0..cfg.num_row_blocks() {
+            let cur = WgCursor::new(&cfg, KernelKind::Forward, WorkItem { z: 0, h: 0, b: b as u32 });
+            assert!(cur.stream_len() >= prev);
+            prev = cur.stream_len();
+        }
+        let mut prev = u32::MAX;
+        for b in 0..cfg.num_col_blocks() {
+            let cur = WgCursor::new(&cfg, KernelKind::BwdDkDv, WorkItem { z: 0, h: 0, b: b as u32 });
+            assert!(cur.stream_len() <= prev);
+            prev = cur.stream_len();
+        }
+    }
+}
+
+#[test]
+fn prop_trace_flops_match_totals() {
+    // Summing per-step flops over every WG must equal the closed form.
+    let mut rng = SplitMix64::new(808);
+    for _ in 0..30 {
+        let h = 1 + rng.gen_range(4) as usize;
+        let nb = 1 + rng.gen_range(8) as usize;
+        let causal = rng.gen_range(2) == 0;
+        let cfg = AttnConfig { causal, ..AttnConfig::mha(1, h, nb * 128, 64) };
+        let mut total = 0.0f64;
+        for hh in 0..h as u32 {
+            for b in 0..cfg.num_row_blocks() as u32 {
+                let mut cur = WgCursor::new(&cfg, KernelKind::Forward, WorkItem { z: 0, h: hh, b });
+                while let Some(s) = cur.next_step() {
+                    total += s.flops;
+                }
+            }
+        }
+        if !causal {
+            let expected = cfg.total_fwd_flops();
+            assert!((total - expected).abs() / expected < 1e-9, "{total} vs {expected}");
+        } else {
+            // Causal tile count over-covers the exact N^2/2 a bit
+            // (diagonal blocks are full tiles); bounded above by full.
+            assert!(total >= cfg.total_fwd_flops() * 0.99);
+            assert!(total <= cfg.total_fwd_flops() * 2.0 + 1.0);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Runtime + coordinator integration over the real AOT artifacts.
+//! Every test is skipped (with a notice) if `make artifacts` has not run —
+//! they are exercised by `make test`, which builds artifacts first.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use numa_attn::coordinator::{AttentionService, BatcherConfig, ServiceConfig};
+use numa_attn::runtime::{inputs, Runtime};
+use numa_attn::workload::{Request, RequestGenerator};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn load_and_verify_all_golden_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.load_all().unwrap();
+    let names: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.golden.is_some())
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(!names.is_empty());
+    for n in names {
+        let (got, want) = rt.verify(&n, 1e-3).unwrap();
+        assert!((got - want).abs() / want < 1e-3, "{n}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn attention_artifact_executes_with_custom_inputs() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let name = "attn_mha_z1_h8_n128_d64";
+    rt.load(name).unwrap();
+    let meta = rt.manifest().get(name).unwrap().clone();
+    let qkv: Vec<Vec<f32>> = meta
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| inputs::det_input(100 + i as u64, spec.num_elements()))
+        .collect();
+    let r = rt.execute(name, &qkv).unwrap();
+    assert_eq!(r.outputs.len(), 1);
+    assert_eq!(r.outputs[0].len(), meta.outputs[0].num_elements());
+    assert!(r.outputs[0].iter().all(|v| v.is_finite()));
+    // Attention output is a convex combination of V rows: bounded by
+    // max |v| (v values are in [-0.5, 0.5)).
+    assert!(r.outputs[0].iter().all(|v| v.abs() <= 0.5 + 1e-4));
+    // Same inputs -> identical outputs (deterministic execution).
+    let r2 = rt.execute(name, &qkv).unwrap();
+    assert_eq!(r.outputs[0], r2.outputs[0]);
+}
+
+#[test]
+fn execute_rejects_wrong_arity_and_shape() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let name = "attn_mha_z1_h8_n128_d64";
+    rt.load(name).unwrap();
+    assert!(rt.execute(name, &[vec![0.0; 8]]).is_err());
+    let bad = vec![vec![0.0f32; 7]; 3];
+    assert!(rt.execute(name, &bad).is_err());
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn service_serves_and_batches() {
+    let Some(dir) = artifact_dir() else { return };
+    let service = AttentionService::start(ServiceConfig {
+        artifact_dir: dir,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+    })
+    .unwrap();
+    let lengths = service.router().bucket_lengths();
+    assert!(!lengths.is_empty());
+    let mut gen = RequestGenerator::new(5, lengths);
+    let reqs = gen.take(16);
+    let waiters: Vec<_> = reqs.iter().map(|r| service.submit(r.clone()).unwrap()).collect();
+    for w in waiters {
+        let resp = w.wait().unwrap();
+        assert!(resp.checksum > 0.0);
+        assert!(resp.batch_size >= 1);
+    }
+    let m = service.shutdown();
+    assert_eq!(m.requests, 16);
+    assert_eq!(m.errors, 0);
+    assert!(m.batches >= 1);
+}
+
+#[test]
+fn service_rejects_oversized_requests() {
+    let Some(dir) = artifact_dir() else { return };
+    let service = AttentionService::start(ServiceConfig {
+        artifact_dir: dir,
+        batcher: BatcherConfig::default(),
+    })
+    .unwrap();
+    let too_long = Request { id: 0, n_ctx: 1 << 20, seed: 1 };
+    assert!(service.submit(too_long).is_err());
+}
+
+#[test]
+fn stacked_execution_checksums_match_singles() {
+    // Two requests served through the batch-2 artifact must produce the
+    // same per-request checksums as serving them alone (failure injection
+    // for the stacking path).
+    let Some(dir) = artifact_dir() else { return };
+    let mk = |max_batch| {
+        AttentionService::start(ServiceConfig {
+            artifact_dir: dir.clone(),
+            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(30) },
+        })
+        .unwrap()
+    };
+    let reqs = vec![
+        Request { id: 0, n_ctx: 256, seed: 1001 },
+        Request { id: 1, n_ctx: 256, seed: 2002 },
+    ];
+
+    // Batched (stacked) run.
+    let service = mk(2);
+    let waiters: Vec<_> = reqs.iter().map(|r| service.submit(r.clone()).unwrap()).collect();
+    let batched: Vec<f64> = waiters.into_iter().map(|w| w.wait().unwrap().checksum).collect();
+    let m = service.shutdown();
+
+    // Sequential singles.
+    let service = mk(1);
+    let mut single = Vec::new();
+    for r in &reqs {
+        single.push(service.submit(r.clone()).unwrap().wait().unwrap().checksum);
+    }
+    service.shutdown();
+
+    for (b, s) in batched.iter().zip(&single) {
+        assert!((b - s).abs() / s < 1e-5, "stacked {b} vs single {s}");
+    }
+    assert!(m.stacked_executions > 0, "batch-2 artifact was not used");
+}
