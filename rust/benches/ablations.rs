@@ -7,41 +7,63 @@
 //! * number of XCDs (Fig. 1's architecture evolution: unified -> dual
 //!   -> quad -> MI300X-style octo);
 //! * prefetch depth (double buffering) and launch stagger.
+//!
+//! Every sweep is declared as a flat job list and submitted to the shared
+//! simulation driver, so the ablation grid fans out across all cores.
 
 mod common;
 
 use numa_attn::attn::AttnConfig;
+use numa_attn::driver::SimJob;
 use numa_attn::mapping::Policy;
 use numa_attn::metrics::Table;
-use numa_attn::sim::{simulate, SimConfig};
+use numa_attn::sim::SimConfig;
 use numa_attn::topology::presets;
 
 fn main() {
     let base_cfg = AttnConfig::mha(2, 64, 32768, 128);
+    let driver = common::bench_driver();
+    let t0 = std::time::Instant::now();
 
     // --- chunk size ablation -------------------------------------------
+    let chunks = [1usize, 2, 4, 8];
+    let jobs: Vec<SimJob> = chunks
+        .iter()
+        .map(|&chunk| {
+            let mut topo = presets::mi300x();
+            topo.dispatch_chunk = chunk;
+            let sc = SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2);
+            SimJob::forward(&topo, &base_cfg, sc)
+        })
+        .collect();
+    let reports = driver.run_all(jobs);
     let mut t = Table::new(&["dispatch chunk", "SHF hit %", "SHF rel perf vs chunk=1"]);
-    let mut base_time = None;
-    for chunk in [1usize, 2, 4, 8] {
-        let mut topo = presets::mi300x();
-        topo.dispatch_chunk = chunk;
-        let r = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
-        let b = *base_time.get_or_insert(r.est_total_sec);
+    let base_time = reports[0].est_total_sec;
+    for (chunk, r) in chunks.iter().zip(&reports) {
         t.row(vec![
             chunk.to_string(),
             format!("{:.1}", r.l2_hit_pct()),
-            format!("{:.3}", b / r.est_total_sec),
+            format!("{:.3}", base_time / r.est_total_sec),
         ]);
     }
     println!("== ablation: dispatch chunk size (swizzle assumes chunk=1) ==\n{}", t.render());
 
     // --- L2 capacity ablation ------------------------------------------
+    let l2_mibs = [1u64, 2, 4, 8, 16];
+    let jobs: Vec<SimJob> = l2_mibs
+        .iter()
+        .flat_map(|&mb| {
+            let mut topo = presets::mi300x();
+            topo.l2_bytes_per_xcd = mb * 1024 * 1024;
+            [Policy::SwizzledHeadFirst, Policy::NaiveBlockFirst].map(|p| {
+                SimJob::forward(&topo, &base_cfg, SimConfig::sampled(p, &topo, 2))
+            })
+        })
+        .collect();
+    let reports = driver.run_all(jobs);
     let mut t = Table::new(&["L2/XCD", "SHF hit %", "NBF hit %", "SHF/NBF speedup"]);
-    for mb in [1u64, 2, 4, 8, 16] {
-        let mut topo = presets::mi300x();
-        topo.l2_bytes_per_xcd = mb * 1024 * 1024;
-        let shf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
-        let nbf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::NaiveBlockFirst, &topo, 2));
+    for (mb, pair) in l2_mibs.iter().zip(reports.chunks(2)) {
+        let (shf, nbf) = (&pair[0], &pair[1]);
         t.row(vec![
             format!("{mb} MiB"),
             format!("{:.1}", shf.l2_hit_pct()),
@@ -52,15 +74,24 @@ fn main() {
     println!("== ablation: L2 capacity per XCD ==\n{}", t.render());
 
     // --- XCD count (Fig. 1 evolution) -----------------------------------
-    let mut t = Table::new(&["topology", "XCDs", "SHF/NBF speedup", "NBF hit %"]);
-    for topo in [
+    let topos = [
         presets::unified_single_die(),
         presets::dual_die(),
         presets::quad_die(),
         presets::mi300x(),
-    ] {
-        let shf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
-        let nbf = simulate(&topo, &base_cfg, &SimConfig::sampled(Policy::NaiveBlockFirst, &topo, 2));
+    ];
+    let jobs: Vec<SimJob> = topos
+        .iter()
+        .flat_map(|topo| {
+            [Policy::SwizzledHeadFirst, Policy::NaiveBlockFirst].map(|p| {
+                SimJob::forward(topo, &base_cfg, SimConfig::sampled(p, topo, 2))
+            })
+        })
+        .collect();
+    let reports = driver.run_all(jobs);
+    let mut t = Table::new(&["topology", "XCDs", "SHF/NBF speedup", "NBF hit %"]);
+    for (topo, pair) in topos.iter().zip(reports.chunks(2)) {
+        let (shf, nbf) = (&pair[0], &pair[1]);
         t.row(vec![
             topo.name.clone(),
             topo.num_xcds.to_string(),
@@ -72,23 +103,38 @@ fn main() {
 
     // --- prefetch depth / launch stagger --------------------------------
     let topo = presets::mi300x();
+    let knobs = [(0u32, 20u64), (1, 20), (2, 20), (1, 0), (1, 60)];
+    let jobs: Vec<SimJob> = knobs
+        .iter()
+        .flat_map(|&(pf, st)| {
+            [Policy::SwizzledHeadFirst, Policy::NaiveBlockFirst].map(|p| {
+                let sc = SimConfig {
+                    prefetch_depth: pf,
+                    launch_stagger: st,
+                    ..SimConfig::sampled(p, &topo, 2)
+                };
+                SimJob::forward(&topo, &base_cfg, sc)
+            })
+        })
+        .collect();
+    let reports = driver.run_all(jobs);
     let mut t = Table::new(&["prefetch", "stagger", "SHF hit %", "NBF hit %"]);
-    for (pf, st) in [(0u32, 20u64), (1, 20), (2, 20), (1, 0), (1, 60)] {
-        let mk = |p| SimConfig {
-            prefetch_depth: pf,
-            launch_stagger: st,
-            ..SimConfig::sampled(p, &topo, 2)
-        };
-        let shf = simulate(&topo, &base_cfg, &mk(Policy::SwizzledHeadFirst));
-        let nbf = simulate(&topo, &base_cfg, &mk(Policy::NaiveBlockFirst));
+    for ((pf, st), pair) in knobs.iter().zip(reports.chunks(2)) {
         t.row(vec![
             pf.to_string(),
             st.to_string(),
-            format!("{:.1}", shf.l2_hit_pct()),
-            format!("{:.1}", nbf.l2_hit_pct()),
+            format!("{:.1}", pair[0].l2_hit_pct()),
+            format!("{:.1}", pair[1].l2_hit_pct()),
         ]);
     }
     println!("== ablation: double buffering & launch stagger ==\n{}", t.render());
 
+    let cache = driver.cache().counters();
+    println!(
+        "[bench] ablations: {} engine run(s) on {} thread(s) in {:.2} s",
+        cache.misses,
+        driver.threads(),
+        t0.elapsed().as_secs_f64()
+    );
     common::check(true, "ablation sweep completed");
 }

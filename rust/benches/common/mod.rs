@@ -1,10 +1,18 @@
 //! Shared bench scaffolding: every `figN` bench regenerates its paper
 //! figure on the MI300X topology, prints the same rows the paper plots,
 //! asserts the headline *shape* claims, and reports generation time.
+//! All figure regeneration executes through the shared simulation driver
+//! (`numa_attn::driver`): the sweep fans out across worker threads and
+//! repeated jobs hit the memoizing report cache.
 //!
 //! `NUMA_ATTN_FULL=1 cargo bench` runs the full paper grids; the default
 //! is the quick subset (the extreme + a small corner of each sweep).
+//! `NUMA_ATTN_THREADS=N` overrides the worker count (default: all cores).
 
+// Each bench is its own crate and uses a subset of these helpers.
+#![allow(dead_code)]
+
+use numa_attn::driver::{self, SimDriver};
 use numa_attn::figures::FigureResult;
 use numa_attn::topology::{presets, Topology};
 
@@ -16,18 +24,37 @@ pub fn full_sweep() -> bool {
     std::env::var("NUMA_ATTN_FULL").is_ok_and(|v| v == "1")
 }
 
+/// Driver for bench sweeps: all cores unless `NUMA_ATTN_THREADS` says
+/// otherwise.
+pub fn bench_driver() -> SimDriver {
+    let threads = std::env::var("NUMA_ATTN_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(driver::default_threads);
+    SimDriver::new(threads)
+}
+
 /// Render the regenerated figure and time the regeneration.
-pub fn run_figure(name: &str, f: impl Fn(&Topology, bool) -> FigureResult) -> FigureResult {
+pub fn run_figure(
+    name: &str,
+    f: impl Fn(&SimDriver, &Topology, bool) -> FigureResult,
+) -> FigureResult {
     let topo = topo();
     let quick = !full_sweep();
+    let driver = bench_driver();
     let t0 = std::time::Instant::now();
-    let fig = f(&topo, quick);
+    let fig = f(&driver, &topo, quick);
     let dt = t0.elapsed();
     println!("{}", fig.render());
+    let cache = driver.cache().counters();
     println!(
-        "[bench] {name}: regenerated {} rows in {:.2} s ({})",
+        "[bench] {name}: regenerated {} rows in {:.2} s on {} thread(s), \
+         cache {} hit(s)/{} miss(es) ({})",
         fig.rows.len(),
         dt.as_secs_f64(),
+        driver.threads(),
+        cache.hits,
+        cache.misses,
         if quick { "quick sweep; NUMA_ATTN_FULL=1 for the full grid" } else { "full paper grid" }
     );
     fig

@@ -5,9 +5,10 @@
 //! coordinator doesn't just run attention, it knows *how* the kernel
 //! should be scheduled for the shapes it is serving.
 
-use crate::attn::{AttnConfig, KernelKind};
+use crate::attn::AttnConfig;
+use crate::driver::{self, SimDriver, SimJob};
 use crate::mapping::{Policy, ALL_POLICIES};
-use crate::sim::{self, SimConfig};
+use crate::sim::SimConfig;
 use crate::topology::Topology;
 
 /// Advisor output for one attention geometry.
@@ -21,22 +22,34 @@ pub struct Advice {
     pub indifferent: bool,
 }
 
-/// Simulate all applicable policies on `topo` and rank them.
+/// Simulate all applicable policies and rank them, using the process-wide
+/// shared driver: the four projections fan out across its workers, and a
+/// repeated call on the same (topology, geometry) is answered entirely
+/// from the report cache — zero new engine runs.
 pub fn advise(topo: &Topology, cfg: &AttnConfig) -> Advice {
+    advise_with(driver::global(), topo, cfg)
+}
+
+/// [`advise`] through an explicit driver (tests and embedders that want
+/// their own cache or thread budget).
+pub fn advise_with(driver: &SimDriver, topo: &Topology, cfg: &AttnConfig) -> Advice {
+    let policies: Vec<Policy> = ALL_POLICIES
+        .iter()
+        .copied()
+        .filter(|p| !(p.requires_divisible_heads() && cfg.h_q % topo.num_xcds != 0))
+        .collect();
+    let jobs: Vec<SimJob> = policies
+        .iter()
+        .map(|&p| SimJob::forward(topo, cfg, SimConfig::sampled(p, topo, 2)))
+        .collect();
+    let reports = driver.run_all(jobs);
+
     let mut results: Vec<(Policy, f64, f64)> = Vec::new();
     // Rank by estimated time with a 2% noise band (steady-state sampling
     // jitter); within the band prefer lower HBM traffic — replication is
     // wasted power and bandwidth headroom even when latency-hidden.
     let mut best: Option<(Policy, f64, u64)> = None;
-    for &p in &ALL_POLICIES {
-        if p.requires_divisible_heads() && cfg.h_q % topo.num_xcds != 0 {
-            continue;
-        }
-        let sc = SimConfig {
-            kernel: KernelKind::Forward,
-            ..SimConfig::sampled(p, topo, 2)
-        };
-        let r = sim::simulate(topo, cfg, &sc);
+    for (&p, r) in policies.iter().zip(&reports) {
         results.push((p, r.l2_hit_pct(), r.est_total_sec));
         let better = match best {
             None => true,
@@ -84,6 +97,28 @@ mod tests {
         // relative perf of the recommendation is 1.0
         let rec = a.projections.iter().find(|(p, _, _)| *p == a.recommended).unwrap();
         assert!((rec.2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeat_advice_is_free() {
+        // Second advise on the same (topology, geometry) must perform
+        // zero new engine runs: all projections come from the cache.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = AttnConfig::mha(1, 16, 4096, 64);
+        let first = advise_with(&driver, &topo, &cfg);
+        let runs_after_first = driver.cache().misses();
+        assert_eq!(runs_after_first, 4, "one engine run per policy");
+        let second = advise_with(&driver, &topo, &cfg);
+        assert_eq!(driver.cache().misses(), runs_after_first, "zero new engine runs");
+        assert_eq!(driver.cache().hits(), 4);
+        assert_eq!(first.recommended, second.recommended);
+        assert_eq!(first.projections.len(), second.projections.len());
+        for (a, b) in first.projections.iter().zip(&second.projections) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+            assert_eq!(a.2.to_bits(), b.2.to_bits());
+        }
     }
 
     #[test]

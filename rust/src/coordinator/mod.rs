@@ -15,14 +15,16 @@
 //! The [`advisor`] ties the serving layer back to the paper: for each
 //! bucket's attention geometry it recommends the mapping policy a real
 //! MI300X deployment should configure the kernel with, backed by a quick
-//! simulator run.
+//! simulator projection executed through the shared simulation driver
+//! ([`crate::driver`]) — repeated advice on a geometry the coordinator
+//! has already seen is served from the driver's report cache.
 
 pub mod advisor;
 pub mod batcher;
 pub mod router;
 pub mod service;
 
-pub use advisor::{advise, Advice};
+pub use advisor::{advise, advise_with, Advice};
 pub use batcher::{Batch, BatcherCore, BatcherConfig};
 pub use router::Router;
 pub use service::{AttentionService, ServiceConfig, ServiceMetrics, Waiter};

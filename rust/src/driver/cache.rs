@@ -1,0 +1,116 @@
+//! Memoization of simulation reports by canonical job key.
+
+use std::sync::Mutex;
+
+use crate::metrics::Counter;
+use crate::sim::SimReport;
+use crate::util::fxhash::FastMap;
+
+use super::SimJob;
+
+/// Snapshot of the cache's counters (CLI `--threads`/cache-stats output).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    /// Reports currently memoized.
+    pub entries: usize,
+}
+
+/// Concurrency-safe memo table from [`SimJob`] to [`SimReport`].
+///
+/// Keys are full jobs (not just their hashes), so a fingerprint collision
+/// can never alias two different simulations. The engine is deterministic
+/// per job, which is the invariant that makes substituting a memoized
+/// report for a fresh run safe — and lets two workers racing on the same
+/// job both insert without coordination (they produce identical reports).
+#[derive(Debug)]
+pub struct ReportCache {
+    enabled: bool,
+    inner: Mutex<FastMap<SimJob, SimReport>>,
+    hits: Counter,
+    misses: Counter,
+}
+
+impl Default for ReportCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReportCache {
+    pub fn new() -> Self {
+        ReportCache {
+            enabled: true,
+            inner: Mutex::new(FastMap::default()),
+            hits: Counter::new(),
+            misses: Counter::new(),
+        }
+    }
+
+    /// A pass-through cache (CLI `--no-cache`): every lookup misses and
+    /// nothing is stored, but the miss counter still tallies engine runs.
+    pub fn disabled() -> Self {
+        ReportCache { enabled: false, ..Self::new() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn get(&self, job: &SimJob) -> Option<SimReport> {
+        if !self.enabled {
+            self.misses.inc();
+            return None;
+        }
+        let found = self.inner.lock().unwrap().get(job).cloned();
+        if found.is_some() {
+            self.hits.inc();
+        } else {
+            self.misses.inc();
+        }
+        found
+    }
+
+    pub fn insert(&self, job: SimJob, report: SimReport) {
+        if self.enabled {
+            self.inner.lock().unwrap().insert(job, report);
+        }
+    }
+
+    /// Memoized execution: the cached report if present, else run the
+    /// simulation and cache the result.
+    pub fn get_or_run(&self, job: &SimJob) -> SimReport {
+        if let Some(r) = self.get(job) {
+            return r;
+        }
+        let report = job.run();
+        self.insert(job.clone(), report.clone());
+        report
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters { hits: self.hits(), misses: self.misses(), entries: self.len() }
+    }
+
+    /// Drop all memoized reports (counters are preserved).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}

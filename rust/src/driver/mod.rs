@@ -1,0 +1,182 @@
+//! The shared simulation driver: ONE execution path for every consumer
+//! of the simulator (figure generators, the serving advisor, the CLI,
+//! and the benches).
+//!
+//! Historically each consumer called [`crate::sim::simulate`] serially
+//! and from scratch: `figure all` replayed hundreds of (sweep-point ×
+//! policy) runs one at a time, and every `advise` call re-simulated all
+//! four policies even for a geometry it had already ranked. This module
+//! replaces that with:
+//!
+//! * [`SimJob`] — a fully-specified, hashable simulation request
+//!   (topology + attention geometry + sim knobs + forward/backward).
+//!   Hash/Eq compare the f64-bearing configs by IEEE-754 *bit pattern*
+//!   (see the manual impls on [`Topology`] and [`SimConfig`]), so a job
+//!   is a canonical memoization key.
+//! * [`ReportCache`] — a concurrency-safe memo table from job to
+//!   [`SimReport`], with hit/miss [`crate::metrics::Counter`]s. The
+//!   engine is deterministic per job, so a cached report is
+//!   bit-identical to a fresh run.
+//! * [`SimDriver`] — a std-only worker pool (`std::thread` + channels,
+//!   the same idiom as `coordinator/service.rs` / `util/oneshot.rs`)
+//!   that executes submitted jobs across N threads through the cache.
+//!   `run_all` preserves submission order, so parallel execution is
+//!   bit-identical to serial (asserted in `tests/driver_determinism.rs`).
+//!
+//! The CLI exposes the pool via `--threads N` / `--no-cache`;
+//! [`global()`] provides the process-wide driver the serving advisor
+//! shares so repeated advice is O(1).
+
+mod cache;
+mod pool;
+
+pub use cache::{CacheCounters, ReportCache};
+pub use pool::{JobHandle, SimDriver};
+
+use std::sync::OnceLock;
+
+use crate::attn::AttnConfig;
+use crate::sim::{self, SimConfig, SimReport};
+use crate::topology::Topology;
+
+/// A fully-specified simulation request — the unit of work the driver
+/// schedules and the key the report cache memoizes on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SimJob {
+    pub topo: Topology,
+    pub attn: AttnConfig,
+    pub sim: SimConfig,
+    /// Run both backward kernels (dK/dV then dQ) via
+    /// [`sim::simulate_backward`] instead of a single forward run.
+    pub backward: bool,
+}
+
+impl SimJob {
+    /// Forward-kernel job.
+    pub fn forward(topo: &Topology, attn: &AttnConfig, sim: SimConfig) -> SimJob {
+        SimJob { topo: topo.clone(), attn: *attn, sim, backward: false }
+    }
+
+    /// Combined backward-pass job (dK/dV + dQ).
+    pub fn backward(topo: &Topology, attn: &AttnConfig, sim: SimConfig) -> SimJob {
+        SimJob { topo: topo.clone(), attn: *attn, sim, backward: true }
+    }
+
+    /// Execute the job directly (no cache, no pool). The pool's workers
+    /// call this through [`ReportCache::get_or_run`].
+    pub fn run(&self) -> SimReport {
+        if self.backward {
+            sim::simulate_backward(&self.topo, &self.attn, &self.sim)
+        } else {
+            sim::simulate(&self.topo, &self.attn, &self.sim)
+        }
+    }
+
+    /// Canonical 64-bit fingerprint of the job key (debug/display aid;
+    /// the cache itself keys on the full job to rule out collisions).
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::BuildHasher;
+        crate::util::fxhash::MixBuildHasher::default().hash_one(self)
+    }
+}
+
+/// Default worker count: one per available hardware thread.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<SimDriver> = OnceLock::new();
+
+/// The process-wide shared driver. All callers share one report cache,
+/// which is what makes repeated [`crate::coordinator::advise`] calls on
+/// the same (topology, geometry) free after the first.
+pub fn global() -> &'static SimDriver {
+    GLOBAL.get_or_init(|| SimDriver::new(default_threads().min(8)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{Policy, ALL_POLICIES};
+    use crate::topology::presets;
+
+    fn tiny_topo() -> Topology {
+        Topology {
+            name: "tiny".into(),
+            num_xcds: 4,
+            cus_per_xcd: 4,
+            l2_bytes_per_xcd: 512 * 1024,
+            ..presets::mi300x()
+        }
+    }
+
+    fn tiny_jobs() -> Vec<SimJob> {
+        let topo = tiny_topo();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 1024, 64) };
+        ALL_POLICIES
+            .iter()
+            .map(|&p| SimJob::forward(&topo, &cfg, SimConfig::forward(p)))
+            .collect()
+    }
+
+    #[test]
+    fn job_key_roundtrip() {
+        let jobs = tiny_jobs();
+        assert_eq!(jobs[0], jobs[0].clone());
+        assert_ne!(jobs[0], jobs[1]); // policies differ
+        assert_ne!(jobs[0].fingerprint(), jobs[1].fingerprint());
+        let bwd = SimJob { backward: true, ..jobs[0].clone() };
+        assert_ne!(jobs[0], bwd);
+    }
+
+    #[test]
+    fn pool_preserves_submission_order() {
+        let driver = SimDriver::new(4);
+        let jobs = tiny_jobs();
+        let reports = driver.run_all(jobs.clone());
+        assert_eq!(reports.len(), jobs.len());
+        for (job, report) in jobs.iter().zip(&reports) {
+            assert_eq!(report.policy, job.sim.policy);
+            // Each result must equal a direct, in-thread run.
+            let direct = job.run();
+            assert_eq!(report.to_json().render(), direct.to_json().render());
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_repeat_batches() {
+        let driver = SimDriver::new(2);
+        let jobs = tiny_jobs();
+        let first = driver.run_all(jobs.clone());
+        assert_eq!(driver.cache().misses(), jobs.len() as u64);
+        assert_eq!(driver.cache().hits(), 0);
+        let second = driver.run_all(jobs.clone());
+        assert_eq!(driver.cache().misses(), jobs.len() as u64, "no new engine runs");
+        assert_eq!(driver.cache().hits(), jobs.len() as u64);
+        assert_eq!(driver.cache().len(), jobs.len());
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.to_json().render(), b.to_json().render());
+        }
+    }
+
+    #[test]
+    fn disabled_cache_always_runs() {
+        let driver =
+            SimDriver::with_cache(2, std::sync::Arc::new(ReportCache::disabled()));
+        let jobs = tiny_jobs();
+        driver.run_all(jobs.clone());
+        driver.run_all(jobs.clone());
+        assert_eq!(driver.cache().hits(), 0);
+        assert_eq!(driver.cache().misses(), 2 * jobs.len() as u64);
+        assert_eq!(driver.cache().len(), 0);
+    }
+
+    #[test]
+    fn single_job_submit() {
+        let driver = SimDriver::new(1);
+        let job = tiny_jobs().remove(0);
+        let report = driver.submit(job.clone()).wait();
+        assert_eq!(report.policy, job.sim.policy);
+        assert!(report.ticks > 0);
+    }
+}

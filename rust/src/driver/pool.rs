@@ -1,0 +1,131 @@
+//! The std-only simulation worker pool.
+//!
+//! Same construction as the serving worker in `coordinator/service.rs`:
+//! plain `std::thread` workers, an `mpsc` job queue, and the repo's
+//! [`oneshot`] channel for replies. Workers pull jobs from a shared
+//! receiver (work stealing by contention), execute them through the
+//! shared [`ReportCache`], and reply on the job's oneshot. Because every
+//! job is independently deterministic, the *results* are identical for
+//! any worker count — only wall-clock changes.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::sim::SimReport;
+use crate::util::oneshot;
+
+use super::cache::ReportCache;
+use super::SimJob;
+
+struct Task {
+    job: SimJob,
+    reply: oneshot::Sender<SimReport>,
+}
+
+/// Pending result of a submitted job.
+pub struct JobHandle {
+    rx: oneshot::Receiver<SimReport>,
+}
+
+impl JobHandle {
+    /// Block until the job's report is ready.
+    pub fn wait(self) -> SimReport {
+        self.rx.wait().expect("driver worker dropped its reply")
+    }
+}
+
+/// Handle to the worker pool. Dropping it drains the queue and joins the
+/// workers (jobs already submitted still complete).
+pub struct SimDriver {
+    tx: Mutex<Option<mpsc::Sender<Task>>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    cache: Arc<ReportCache>,
+}
+
+impl SimDriver {
+    /// Pool with `threads` workers (min 1) over a fresh enabled cache.
+    pub fn new(threads: usize) -> Self {
+        Self::with_cache(threads, Arc::new(ReportCache::new()))
+    }
+
+    /// Pool over an explicit (possibly shared or disabled) cache.
+    pub fn with_cache(threads: usize, cache: Arc<ReportCache>) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let cache = Arc::clone(&cache);
+                std::thread::Builder::new()
+                    .name(format!("sim-driver-{i}"))
+                    .spawn(move || worker_loop(rx, cache))
+                    .expect("spawning sim-driver worker")
+            })
+            .collect();
+        SimDriver { tx: Mutex::new(Some(tx)), workers, threads, cache }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn cache(&self) -> &ReportCache {
+        &self.cache
+    }
+
+    /// Enqueue one job; returns immediately with a [`JobHandle`].
+    pub fn submit(&self, job: SimJob) -> JobHandle {
+        let (reply, rx) = oneshot::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .expect("driver running")
+            .send(Task { job, reply })
+            .expect("driver workers alive");
+        JobHandle { rx }
+    }
+
+    /// Execute a batch, returning reports in submission order. This is
+    /// the call every consumer (figures, advisor, CLI, benches) makes:
+    /// submit the whole flat job list up front, then collect in order.
+    pub fn run_all(&self, jobs: Vec<SimJob>) -> Vec<SimReport> {
+        let handles: Vec<JobHandle> = jobs.into_iter().map(|j| self.submit(j)).collect();
+        handles.into_iter().map(JobHandle::wait).collect()
+    }
+
+    /// Convenience: submit one job and wait.
+    pub fn run(&self, job: SimJob) -> SimReport {
+        self.submit(job).wait()
+    }
+}
+
+impl Drop for SimDriver {
+    fn drop(&mut self) {
+        drop(self.tx.lock().unwrap().take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<Task>>>, cache: Arc<ReportCache>) {
+    loop {
+        // Hold the queue lock only for the dequeue, never across a run.
+        let task = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match task {
+            Ok(t) => {
+                let report = cache.get_or_run(&t.job);
+                // A dropped handle just means the caller lost interest.
+                let _ = t.reply.send(report);
+            }
+            Err(_) => break, // driver dropped the sender: shut down
+        }
+    }
+}

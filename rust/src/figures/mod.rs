@@ -1,15 +1,20 @@
 //! Paper figure/table regeneration (DESIGN.md §5 experiment index).
 //!
-//! Each `figN` function runs the corresponding sweep on the simulator and
-//! returns a [`FigureResult`] whose rows mirror the series the paper
-//! plots. The criterion benches (`rust/benches/figN_*.rs`) and the CLI
-//! (`numa-attn figure N`) both call these.
+//! Each `figN` function declares the corresponding sweep as a *flat job
+//! list* — one [`SimJob`] per (sweep point × policy) — and submits the
+//! whole list to the shared [`SimDriver`], which fans it out across
+//! worker threads through the memoizing report cache. Results come back
+//! in submission order, so the rendered rows are byte-identical to the
+//! historical serial loops at any `--threads` count. The benches
+//! (`rust/benches/figN_*.rs`) and the CLI (`numa-attn figure N`) both
+//! call these with their own driver.
 
 use crate::attn::KernelKind;
+use crate::driver::{SimDriver, SimJob};
 use crate::mapping::{Policy, ALL_POLICIES};
 use crate::metrics::Table;
 use crate::roofline;
-use crate::sim::{self, gemm, SimConfig, SimReport};
+use crate::sim::{gemm, SimConfig, SimReport};
 use crate::topology::Topology;
 use crate::workload::sweeps::{self, SweepPoint};
 
@@ -90,51 +95,82 @@ impl FigureResult {
 /// How many steady-state occupancy generations the sampled runs measure.
 const GENERATIONS: usize = 2;
 
+/// The sampled forward-kernel job for one (point, policy).
+fn forward_job(topo: &Topology, pt: &SweepPoint, policy: Policy) -> SimJob {
+    SimJob::forward(topo, &pt.cfg, SimConfig::sampled(policy, topo, GENERATIONS))
+}
+
+/// The sampled backward-pass job for one (point, policy) — Fig. 16.
+fn backward_job(topo: &Topology, pt: &SweepPoint, policy: Policy) -> SimJob {
+    let sampled = SimConfig::sampled(policy, topo, GENERATIONS);
+    let sim = SimConfig {
+        max_wg_completions: sampled.max_wg_completions,
+        warmup_completions: sampled.warmup_completions,
+        ..SimConfig::backward(policy)
+    };
+    SimJob::backward(topo, &pt.cfg, sim)
+}
+
+/// Flat job list for a sweep: every point × every policy, point-major
+/// (so chunking results by `ALL_POLICIES.len()` recovers the rows).
+fn sweep_jobs(
+    topo: &Topology,
+    points: &[SweepPoint],
+    job: impl Fn(&Topology, &SweepPoint, Policy) -> SimJob,
+) -> Vec<SimJob> {
+    let mut jobs = Vec::with_capacity(points.len() * ALL_POLICIES.len());
+    for pt in points {
+        for &p in &ALL_POLICIES {
+            jobs.push(job(topo, pt, p));
+        }
+    }
+    jobs
+}
+
 /// Run all four policies on one sweep point; forward kernel.
-pub fn run_point(topo: &Topology, pt: &SweepPoint) -> Vec<(Policy, SimReport)> {
-    ALL_POLICIES
+pub fn run_point(driver: &SimDriver, topo: &Topology, pt: &SweepPoint) -> Vec<(Policy, SimReport)> {
+    let jobs: Vec<SimJob> = ALL_POLICIES.iter().map(|&p| forward_job(topo, pt, p)).collect();
+    ALL_POLICIES.iter().copied().zip(driver.run_all(jobs)).collect()
+}
+
+/// Reduce a point's four reports to one figure row.
+fn row_from(pt: &SweepPoint, reports: &[SimReport], value: impl Fn(&SimReport) -> f64) -> FigureRow {
+    FigureRow {
+        label: pt.label.clone(),
+        values: ALL_POLICIES.iter().copied().zip(reports.iter().map(&value)).collect(),
+    }
+}
+
+/// Per-policy performance relative to `baseline`, one row per point.
+fn perf_rows_vs(
+    driver: &SimDriver,
+    topo: &Topology,
+    points: &[SweepPoint],
+    baseline: Policy,
+    job: impl Fn(&Topology, &SweepPoint, Policy) -> SimJob,
+) -> Vec<FigureRow> {
+    let reports = driver.run_all(sweep_jobs(topo, points, job));
+    let base_idx = ALL_POLICIES.iter().position(|&p| p == baseline).unwrap();
+    points
         .iter()
-        .map(|&p| {
-            let cfg = SimConfig {
-                kernel: KernelKind::Forward,
-                ..SimConfig::sampled(p, topo, GENERATIONS)
-            };
-            (p, sim::simulate(topo, &pt.cfg, &cfg))
+        .zip(reports.chunks(ALL_POLICIES.len()))
+        .map(|(pt, chunk)| {
+            let base_sec = chunk[base_idx].est_total_sec;
+            row_from(pt, chunk, |r| base_sec / r.est_total_sec)
         })
         .collect()
 }
 
-fn perf_rows(topo: &Topology, points: &[SweepPoint]) -> Vec<FigureRow> {
-    points
-        .iter()
-        .map(|pt| {
-            let reports = run_point(topo, pt);
-            let baseline = reports
-                .iter()
-                .find(|(p, _)| *p == Policy::SwizzledHeadFirst)
-                .map(|(_, r)| r.est_total_sec)
-                .unwrap();
-            FigureRow {
-                label: pt.label.clone(),
-                values: reports
-                    .into_iter()
-                    .map(|(p, r)| (p, baseline / r.est_total_sec))
-                    .collect(),
-            }
-        })
-        .collect()
+fn perf_rows(driver: &SimDriver, topo: &Topology, points: &[SweepPoint]) -> Vec<FigureRow> {
+    perf_rows_vs(driver, topo, points, Policy::SwizzledHeadFirst, forward_job)
 }
 
-fn hit_rate_rows(topo: &Topology, points: &[SweepPoint]) -> Vec<FigureRow> {
+fn hit_rate_rows(driver: &SimDriver, topo: &Topology, points: &[SweepPoint]) -> Vec<FigureRow> {
+    let reports = driver.run_all(sweep_jobs(topo, points, forward_job));
     points
         .iter()
-        .map(|pt| {
-            let reports = run_point(topo, pt);
-            FigureRow {
-                label: pt.label.clone(),
-                values: reports.into_iter().map(|(p, r)| (p, r.l2_hit_pct())).collect(),
-            }
-        })
+        .zip(reports.chunks(ALL_POLICIES.len()))
+        .map(|(pt, chunk)| row_from(pt, chunk, |r| r.l2_hit_pct()))
         .collect()
 }
 
@@ -153,17 +189,17 @@ fn mha_points(quick: bool) -> Vec<SweepPoint> {
 
 /// Fig. 12: MHA performance relative to Swizzled Head-first across batch
 /// sizes and sequence lengths.
-pub fn fig12(topo: &Topology, quick: bool) -> FigureResult {
+pub fn fig12(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
     FigureResult {
         id: "fig12".into(),
         title: "MHA performance relative to Swizzled Head-first".into(),
         metric: "normalized performance (SHF = 1.0)".into(),
-        rows: perf_rows(topo, &mha_points(quick)),
+        rows: perf_rows(driver, topo, &mha_points(quick)),
     }
 }
 
 /// Fig. 13: aggregate L2 cache hit rates for the MHA sweep.
-pub fn fig13(topo: &Topology, quick: bool) -> FigureResult {
+pub fn fig13(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
     let points = if quick {
         sweeps::mha_sensitivity(&[2048, 131072], &[1, 8], &[8, 128])
     } else {
@@ -177,12 +213,12 @@ pub fn fig13(topo: &Topology, quick: bool) -> FigureResult {
         id: "fig13".into(),
         title: "MHA aggregate L2 cache hit rates".into(),
         metric: "L2 hit rate (%)".into(),
-        rows: hit_rate_rows(topo, &points),
+        rows: hit_rate_rows(driver, topo, &points),
     }
 }
 
 /// Fig. 14: GQA (8 KV heads, Llama-3 family) performance relative to SHF.
-pub fn fig14(topo: &Topology, quick: bool) -> FigureResult {
+pub fn fig14(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
     let points = if quick {
         sweeps::gqa_sensitivity(&[8192, 131072], &[1, 8])
     } else {
@@ -192,12 +228,12 @@ pub fn fig14(topo: &Topology, quick: bool) -> FigureResult {
         id: "fig14".into(),
         title: "GQA performance relative to Swizzled Head-first".into(),
         metric: "normalized performance (SHF = 1.0)".into(),
-        rows: perf_rows(topo, &points),
+        rows: perf_rows(driver, topo, &points),
     }
 }
 
 /// Fig. 15: DeepSeek-V3 prefill (MHA, 128 heads, D=56) relative to SHF.
-pub fn fig15(topo: &Topology, quick: bool) -> FigureResult {
+pub fn fig15(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
     let points = if quick {
         sweeps::deepseek_prefill(&[2048, 131072], &[1, 8])
     } else {
@@ -207,53 +243,39 @@ pub fn fig15(topo: &Topology, quick: bool) -> FigureResult {
         id: "fig15".into(),
         title: "DeepSeek-V3 prefill performance relative to SHF".into(),
         metric: "normalized performance (SHF = 1.0)".into(),
-        rows: perf_rows(topo, &points),
+        rows: perf_rows(driver, topo, &points),
     }
 }
 
 /// Fig. 16: FA2 backward speedup vs Naive Block-first (H_Q = 128).
-pub fn fig16(topo: &Topology, quick: bool) -> FigureResult {
+pub fn fig16(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
     let points = if quick {
         sweeps::backward_sweep(&[8192, 131072], &[1])
     } else {
         sweeps::backward_sweep(&[8192, 32768, 131072], &[1, 2])
     };
-    let rows = points
-        .iter()
-        .map(|pt| {
-            let reports: Vec<(Policy, SimReport)> = ALL_POLICIES
-                .iter()
-                .map(|&p| {
-                    let cfg = SimConfig {
-                        max_wg_completions: SimConfig::sampled(p, topo, GENERATIONS)
-                            .max_wg_completions,
-                        warmup_completions: SimConfig::sampled(p, topo, GENERATIONS)
-                            .warmup_completions,
-                        ..SimConfig::backward(p)
-                    };
-                    (p, sim::simulate_backward(topo, &pt.cfg, &cfg))
-                })
-                .collect();
-            let baseline = reports
-                .iter()
-                .find(|(p, _)| *p == Policy::NaiveBlockFirst)
-                .map(|(_, r)| r.est_total_sec)
-                .unwrap();
-            FigureRow {
-                label: pt.label.clone(),
-                values: reports
-                    .into_iter()
-                    .map(|(p, r)| (p, baseline / r.est_total_sec))
-                    .collect(),
-            }
-        })
-        .collect();
     FigureResult {
         id: "fig16".into(),
         title: "FA2 backward speedup vs Naive Block-first (H_Q=128)".into(),
         metric: "speedup over Naive Block-first".into(),
-        rows,
+        rows: perf_rows_vs(driver, topo, &points, Policy::NaiveBlockFirst, backward_job),
     }
+}
+
+/// Regenerate every figure (the `numa-attn figure all` path) through one
+/// driver: the whole set is still submitted figure-by-figure, but each
+/// figure's grid fans out across the pool and repeated (point, policy)
+/// jobs between figures (e.g. Fig. 12's grid overlapping Fig. 13's) are
+/// served from the report cache.
+pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult> {
+    vec![
+        fig12(driver, topo, quick),
+        fig13(driver, topo, quick),
+        fig14(driver, topo, quick),
+        fig15(driver, topo, quick),
+        fig16(driver, topo, quick),
+        gemm_motivation(topo),
+    ]
 }
 
 /// Sec. 1 motivating claim: GEMM L2 hit rate 43% -> 92% with the chiplet
@@ -346,8 +368,11 @@ mod tests {
     #[test]
     fn fig12_shape_shf_wins_at_scale() {
         let topo = fast_topo();
-        let f = fig12(&topo, true);
+        let driver = SimDriver::new(4);
+        let f = fig12(&driver, &topo, true);
         assert_eq!(f.rows.len(), 2 * 2 * 2);
+        // Every (point × policy) run went through the driver's cache.
+        assert_eq!(driver.cache().misses() as usize, 2 * 2 * 2 * ALL_POLICIES.len());
         // At the extreme point, block-first must lose noticeably.
         let label = "H=128 N=128K B=8";
         let nbf = f.value(label, Policy::NaiveBlockFirst).unwrap();
@@ -358,6 +383,38 @@ mod tests {
         let small = "H=8 N=8K B=1";
         let nbf_small = f.value(small, Policy::NaiveBlockFirst).unwrap();
         assert!(nbf_small > 0.8, "small configs similar, got {nbf_small}");
+    }
+
+    #[test]
+    fn parallel_rows_match_serial_rows() {
+        // The acceptance invariant: >1 worker produces row-for-row
+        // identical figure output to a single worker (the full-figure
+        // version of this is tests/driver_determinism.rs).
+        let topo = fast_topo();
+        let points = sweeps::mha_sensitivity(&[2048, 8192], &[1], &[8]);
+        let serial = perf_rows(&SimDriver::new(1), &topo, &points);
+        let parallel = perf_rows(&SimDriver::new(8), &topo, &points);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.label, b.label);
+            for ((pa, va), (pb, vb)) in a.values.iter().zip(&b.values) {
+                assert_eq!(pa, pb);
+                assert_eq!(va.to_bits(), vb.to_bits(), "{} {pa:?}", a.label);
+            }
+        }
+    }
+
+    #[test]
+    fn run_point_reports_all_policies_in_order() {
+        let topo = fast_topo();
+        let driver = SimDriver::new(2);
+        let pt = &sweeps::mha_sensitivity(&[8192], &[1], &[8])[0];
+        let reports = run_point(&driver, &topo, pt);
+        assert_eq!(reports.len(), ALL_POLICIES.len());
+        for ((p, r), want) in reports.iter().zip(ALL_POLICIES) {
+            assert_eq!(*p, want);
+            assert_eq!(r.policy, want);
+        }
     }
 
     #[test]

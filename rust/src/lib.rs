@@ -18,6 +18,10 @@
 //! * [`sched`] — the hardware dispatcher model (chunked round-robin)
 //! * [`sim`] — the simulation engine: replays tile access streams through
 //!   per-XCD L2s + HBM and reports hit rates / cycles / normalized perf
+//! * [`driver`] — the shared simulation driver: a hashable [`driver::SimJob`]
+//!   spec, a std-thread worker pool, and a memoizing report cache — the
+//!   ONE execution path figures, the advisor, the CLI (`--threads N`,
+//!   `--no-cache`), and the benches all run simulations through
 //! * [`roofline`] — analytic FLOPs/bytes and kernel VMEM/MXU estimates
 //! * [`workload`] — model presets (Llama-3, DeepSeek-V3) and paper sweeps
 //! * [`figures`] — one generator per paper table/figure (Figs. 12-16 ...)
@@ -29,6 +33,7 @@ pub mod attn;
 pub mod cache;
 pub mod config;
 pub mod coordinator;
+pub mod driver;
 pub mod figures;
 pub mod mapping;
 pub mod mem;
@@ -42,6 +47,7 @@ pub mod util;
 pub mod workload;
 
 pub use attn::AttnConfig;
+pub use driver::{ReportCache, SimDriver, SimJob};
 pub use mapping::Policy;
 pub use sim::{SimConfig, SimReport};
 pub use topology::Topology;

@@ -11,10 +11,12 @@
 //! Run `numa-attn <subcommand> --help` for flags.
 
 use std::str::FromStr;
+use std::sync::Arc;
 
 use numa_attn::attn::AttnConfig;
 use numa_attn::config::ExperimentConfig;
 use numa_attn::coordinator::{self, BatcherConfig, ServiceConfig};
+use numa_attn::driver::{self, ReportCache, SimDriver, SimJob};
 use numa_attn::figures;
 use numa_attn::mapping::{Mapping, Policy, ALL_POLICIES};
 use numa_attn::metrics::Table;
@@ -34,6 +36,14 @@ USAGE:
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--artifacts DIR] [--requests N] [--max-batch B] [--max-wait-ms MS]
+
+driver flags (simulate, figure):
+  all simulations execute through the shared driver (src/driver): a worker
+  pool plus a memoizing report cache keyed on (topology, attention, sim
+  config). Results are bit-identical at any worker count.
+  --threads N          simulation worker threads (default: all cores)
+  --no-cache           disable report memoization (every job re-runs)
+  cache/thread statistics are printed to stderr after the run
 
 simulate flags:
   --topo NAME          topology preset (mi300x, unified, dual_die, quad_die)
@@ -58,7 +68,7 @@ fn run() -> anyhow::Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&raw, &["causal", "backward", "quick", "json", "help"])
+    let args = Args::parse(&raw, &["causal", "backward", "quick", "json", "help", "no-cache"])
         .map_err(|e| anyhow::anyhow!(e))?;
     if args.has("help") {
         print!("{USAGE}");
@@ -89,28 +99,58 @@ fn topo_arg(args: &Args) -> anyhow::Result<numa_attn::topology::Topology> {
     })
 }
 
+/// Build the simulation driver from `--threads` / `--no-cache`.
+fn driver_arg(args: &Args) -> anyhow::Result<SimDriver> {
+    let threads: usize = args
+        .get_or("threads", driver::default_threads())
+        .map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(threads > 0, "--threads must be > 0");
+    let cache = if args.has("no-cache") {
+        Arc::new(ReportCache::disabled())
+    } else {
+        Arc::new(ReportCache::new())
+    };
+    Ok(SimDriver::with_cache(threads, cache))
+}
+
+/// Cache/thread statistics on stderr (stdout stays row-for-row stable).
+fn print_driver_stats(driver: &SimDriver) {
+    let c = driver.cache().counters();
+    eprintln!(
+        "[driver] {} thread(s); cache {}: {} hit(s), {} miss(es), {} report(s) memoized",
+        driver.threads(),
+        if driver.cache().is_enabled() { "on" } else { "off" },
+        c.hits,
+        c.misses,
+        c.entries,
+    );
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let a = |e: String| anyhow::anyhow!(e);
+    let driver = driver_arg(args)?;
     // Config-file mode: the experiment file fully determines everything.
     if let Some(path) = args.get::<String>("config").map_err(a)? {
         let text = std::fs::read_to_string(&path)?;
         let exp = ExperimentConfig::parse(&text).map_err(a)?;
         let topo = exp.topology().map_err(a)?;
         let attn = exp.attn().map_err(a)?;
-        let mut reports = Vec::new();
+        let mut jobs = Vec::new();
         for p in exp.policies().map_err(a)? {
             if p.requires_divisible_heads() && attn.h_q % topo.num_xcds != 0 {
                 continue;
             }
             let sc = exp.sim(p).map_err(a)?;
-            let r = if exp.sim.backward {
-                sim::simulate_backward(&topo, &attn, &sc)
+            jobs.push(if exp.sim.backward {
+                SimJob::backward(&topo, &attn, sc)
             } else {
-                sim::simulate(&topo, &attn, &sc)
-            };
-            reports.push(r);
+                SimJob::forward(&topo, &attn, sc)
+            });
         }
-        return print_reports(args, reports);
+        let reports = driver.run_all(jobs);
+        print_reports(args, reports)?;
+        print_driver_stats(&driver);
+        return Ok(());
     }
     let (topo, attn, policies, backward, generations) =
         {
@@ -134,7 +174,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             (topo, attn, policies, args.has("backward"), args.get_or("generations", 2).map_err(a)?)
         };
 
-    let mut reports = Vec::new();
+    let mut jobs = Vec::new();
     for p in policies {
         if p.requires_divisible_heads() && attn.h_q % topo.num_xcds != 0 {
             eprintln!("note: skipping {} (heads {} not divisible by XCDs {})", p, attn.h_q, topo.num_xcds);
@@ -146,14 +186,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             sc.max_wg_completions = sampled.max_wg_completions;
             sc.warmup_completions = sampled.warmup_completions;
         }
-        let r = if backward {
-            sim::simulate_backward(&topo, &attn, &sc)
+        jobs.push(if backward {
+            SimJob::backward(&topo, &attn, sc)
         } else {
-            sim::simulate(&topo, &attn, &sc)
-        };
-        reports.push(r);
+            SimJob::forward(&topo, &attn, sc)
+        });
     }
-    print_reports(args, reports)
+    let reports = driver.run_all(jobs);
+    print_reports(args, reports)?;
+    print_driver_stats(&driver);
+    Ok(())
 }
 
 fn print_reports(args: &Args, reports: Vec<sim::SimReport>) -> anyhow::Result<()> {
@@ -183,26 +225,20 @@ fn print_reports(args: &Args, reports: Vec<sim::SimReport>) -> anyhow::Result<()
 fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     let topo = topo_arg(args)?;
     let quick = args.has("quick");
+    let driver = driver_arg(args)?;
     let id = args
         .positional()
         .get(1)
         .map(String::as_str)
         .unwrap_or("all");
     let figs: Vec<figures::FigureResult> = match id {
-        "12" | "fig12" => vec![figures::fig12(&topo, quick)],
-        "13" | "fig13" => vec![figures::fig13(&topo, quick)],
-        "14" | "fig14" => vec![figures::fig14(&topo, quick)],
-        "15" | "fig15" => vec![figures::fig15(&topo, quick)],
-        "16" | "fig16" => vec![figures::fig16(&topo, quick)],
+        "12" | "fig12" => vec![figures::fig12(&driver, &topo, quick)],
+        "13" | "fig13" => vec![figures::fig13(&driver, &topo, quick)],
+        "14" | "fig14" => vec![figures::fig14(&driver, &topo, quick)],
+        "15" | "fig15" => vec![figures::fig15(&driver, &topo, quick)],
+        "16" | "fig16" => vec![figures::fig16(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
-        "all" => vec![
-            figures::fig12(&topo, quick),
-            figures::fig13(&topo, quick),
-            figures::fig14(&topo, quick),
-            figures::fig15(&topo, quick),
-            figures::fig16(&topo, quick),
-            figures::gemm_motivation(&topo),
-        ],
+        "all" => figures::all(&driver, &topo, quick),
         other => anyhow::bail!("unknown figure '{other}'"),
     };
     for f in figs {
@@ -212,6 +248,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
             println!("{}", f.render());
         }
     }
+    print_driver_stats(&driver);
     Ok(())
 }
 

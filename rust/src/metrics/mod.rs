@@ -1,7 +1,34 @@
 //! Lightweight metrics: counters, latency histograms, and the table
 //! formatter the figure generators use to print paper-style rows.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Monotonic event counter, shareable across threads (`&self` API).
+/// The simulation driver's report cache exposes its hit/miss totals
+/// through these; the serving layer can adopt them incrementally.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add 1; returns the new total.
+    pub fn inc(&self) -> u64 {
+        self.add(1)
+    }
+
+    /// Add `n`; returns the new total.
+    pub fn add(&self, n: u64) -> u64 {
+        self.0.fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// Fixed-boundary latency histogram (power-of-two microsecond buckets).
 #[derive(Debug, Clone)]
@@ -121,6 +148,27 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counter_counts_across_threads() {
+        let c = std::sync::Arc::new(Counter::new());
+        assert_eq!(c.get(), 0);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 400);
+        assert_eq!(c.add(10), 410);
+    }
 
     #[test]
     fn histogram_basics() {

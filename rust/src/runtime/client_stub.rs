@@ -1,0 +1,119 @@
+//! Stub PJRT client used when the crate is built without the `pjrt`
+//! feature (the default in offline environments, where the `xla` bindings
+//! crate and its native xla_extension libraries are unavailable).
+//!
+//! The stub keeps every *metadata* operation working — manifests load and
+//! validate, artifacts "load" (existence-checked against the manifest) —
+//! so the router/batcher/coordinator layers stay fully testable. Only the
+//! actual HLO *execution* entry points return a clear error directing the
+//! user to rebuild with `--features pjrt`. The integration tests skip
+//! themselves when `artifacts/` is absent, so `cargo test` passes either
+//! way.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::Context;
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// Output of one artifact execution (never produced by the stub).
+#[derive(Debug, Clone)]
+pub struct ExecutionResult {
+    /// One flat f32 buffer per declared output.
+    pub outputs: Vec<Vec<f32>>,
+    /// Device execution time (compile excluded).
+    pub elapsed: Duration,
+}
+
+/// Compiled-artifact registry without a PJRT client behind it.
+pub struct Runtime {
+    loaded: HashMap<String, ArtifactMeta>,
+    manifest: Manifest,
+    #[allow(dead_code)]
+    dir: PathBuf,
+}
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} requires the PJRT runtime, but this binary was built without it \
+         (rebuild with `cargo build --features pjrt` and the xla bindings crate)"
+    )
+}
+
+impl Runtime {
+    /// Create a runtime over `artifact_dir` without compiling anything.
+    pub fn open(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Ok(Runtime { loaded: HashMap::new(), manifest, dir })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.loaded.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Register one artifact by name (idempotent). Metadata only: the
+    /// stub validates the manifest entry but compiles nothing.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.loaded.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        self.loaded.insert(name.to_string(), meta);
+        Ok(())
+    }
+
+    /// Register every artifact in the manifest.
+    pub fn load_all(&mut self) -> anyhow::Result<()> {
+        let names: Vec<String> = self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in names {
+            self.load(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execution is unavailable without PJRT.
+    pub fn execute(&self, name: &str, _inputs: &[Vec<f32>]) -> anyhow::Result<ExecutionResult> {
+        self.loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        Err(unavailable("executing an artifact"))
+    }
+
+    /// Execution is unavailable without PJRT.
+    pub fn execute_with_det_inputs(&self, name: &str) -> anyhow::Result<ExecutionResult> {
+        self.loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        Err(unavailable("executing an artifact"))
+    }
+
+    /// Golden verification is unavailable without PJRT.
+    pub fn verify(&self, name: &str, _tol: f64) -> anyhow::Result<(f64, f64)> {
+        self.loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        Err(unavailable("golden verification"))
+    }
+}

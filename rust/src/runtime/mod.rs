@@ -12,6 +12,13 @@
 pub mod inputs;
 pub mod manifest;
 
+// The real PJRT client needs the `xla` bindings crate (native libs, no
+// offline build); the default build substitutes a stub with the same API
+// whose execute paths error. See rust/src/runtime/client_stub.rs.
+#[cfg(feature = "pjrt")]
+mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 mod client;
 
 pub use client::{ExecutionResult, Runtime};

@@ -442,7 +442,8 @@ impl Engine {
         for c in &self.caches {
             l2.merge(c.stats());
         }
-        let l2_per_xcd = self.caches.iter().map(|c| c.stats().hit_rate()).collect();
+        let l2_stats_per_xcd: Vec<CacheStats> = self.caches.iter().map(|c| *c.stats()).collect();
+        let l2_per_xcd = l2_stats_per_xcd.iter().map(|s| s.hit_rate()).collect();
 
         let hbm_raw = *self.hbm.stats();
         let hbm = HbmStats {
@@ -486,6 +487,7 @@ impl Engine {
             ticks: window_ticks,
             sec_per_tick: self.sec_per_tick,
             l2,
+            l2_stats_per_xcd,
             l2_hit_rate_per_xcd: l2_per_xcd,
             hbm,
             throughput_wgs_per_tick: throughput,

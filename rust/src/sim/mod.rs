@@ -37,6 +37,10 @@ use crate::mem::HbmStats;
 use crate::topology::Topology;
 
 /// Simulation parameters (knobs beyond topology/workload).
+///
+/// Equality and hashing compare the f64 knobs by IEEE-754 bit pattern
+/// (manual impls below) so a `SimConfig` can be part of the driver's
+/// memoization key ([`crate::driver::SimJob`]).
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
     pub kernel: KernelKind,
@@ -117,6 +121,44 @@ impl SimConfig {
     }
 }
 
+// Hash/Eq by bits (f64 knobs via `to_bits()`): two configs are the same
+// cache key iff every knob is bit-identical — the deterministic engine
+// then guarantees bit-identical reports, which is what lets the driver's
+// report cache substitute a memoized result for a fresh run.
+impl PartialEq for SimConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.kernel == other.kernel
+            && self.policy == other.policy
+            && self.max_wg_completions == other.max_wg_completions
+            && self.warmup_completions == other.warmup_completions
+            && self.max_ticks == other.max_ticks
+            && self.compute_efficiency.to_bits() == other.compute_efficiency.to_bits()
+            && self.compute_overhead.to_bits() == other.compute_overhead.to_bits()
+            && self.prefetch_depth == other.prefetch_depth
+            && self.jitter_denom == other.jitter_denom
+            && self.launch_stagger == other.launch_stagger
+            && self.seed == other.seed
+    }
+}
+
+impl Eq for SimConfig {}
+
+impl std::hash::Hash for SimConfig {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.kernel.hash(state);
+        self.policy.hash(state);
+        self.max_wg_completions.hash(state);
+        self.warmup_completions.hash(state);
+        self.max_ticks.hash(state);
+        self.compute_efficiency.to_bits().hash(state);
+        self.compute_overhead.to_bits().hash(state);
+        self.prefetch_depth.hash(state);
+        self.jitter_denom.hash(state);
+        self.launch_stagger.hash(state);
+        self.seed.hash(state);
+    }
+}
+
 /// Simulation outcome: the quantities the paper's figures plot.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -131,7 +173,11 @@ pub struct SimReport {
     pub sec_per_tick: f64,
     /// Aggregate L2 statistics across all XCDs (paper Fig. 13 metric).
     pub l2: CacheStats,
-    /// Per-XCD L2 hit rates.
+    /// Per-XCD L2 hit/miss statistics. Kept as full counts (not just
+    /// rates) so multi-kernel runs (`simulate_backward`) can merge
+    /// per-XCD statistics exactly.
+    pub l2_stats_per_xcd: Vec<CacheStats>,
+    /// Per-XCD L2 hit rates (derived from `l2_stats_per_xcd`).
     pub l2_hit_rate_per_xcd: Vec<f64>,
     pub hbm: HbmStats,
     /// Workgroup completions per tick in the measured window.
@@ -210,6 +256,20 @@ pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) ->
 
     let mut l2 = dkdv.l2;
     l2.merge(&dq.l2);
+    // Merge per-XCD statistics from BOTH kernels (the dQ kernel sees the
+    // same XCDs; dropping it understated per-XCD traffic) and derive the
+    // combined per-XCD hit rates from the merged counts.
+    let l2_stats_per_xcd: Vec<CacheStats> = dkdv
+        .l2_stats_per_xcd
+        .iter()
+        .zip(&dq.l2_stats_per_xcd)
+        .map(|(a, b)| {
+            let mut s = *a;
+            s.merge(b);
+            s
+        })
+        .collect();
+    let l2_hit_rate_per_xcd: Vec<f64> = l2_stats_per_xcd.iter().map(|s| s.hit_rate()).collect();
     let mut hbm = dkdv.hbm;
     hbm.bytes_read += dq.hbm.bytes_read;
     hbm.requests += dq.hbm.requests;
@@ -217,6 +277,14 @@ pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) ->
     hbm.busy_ticks += dq.hbm.busy_ticks;
     hbm.queue_depth_sum += dq.hbm.queue_depth_sum;
     hbm.bytes_written += dq.hbm.bytes_written;
+
+    // Combined throughput over both measured windows: each kernel's
+    // window completed `throughput * ticks` workgroups, so the merged
+    // rate is total completions over total window ticks.
+    let ticks = dkdv.ticks + dq.ticks;
+    let window_completions = dkdv.throughput_wgs_per_tick * dkdv.ticks as f64
+        + dq.throughput_wgs_per_tick * dq.ticks as f64;
+    let throughput_wgs_per_tick = if ticks > 0 { window_completions / ticks as f64 } else { 0.0 };
 
     let est_total_sec = dkdv.est_total_sec + dq.est_total_sec;
     let total_flops = attn.grid_size(KernelKind::BwdDkDv) as f64
@@ -230,12 +298,13 @@ pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) ->
         kernel: KernelKind::BwdDkDv,
         grid_size: dkdv.grid_size + dq.grid_size,
         simulated_wgs: dkdv.simulated_wgs + dq.simulated_wgs,
-        ticks: dkdv.ticks + dq.ticks,
+        ticks,
         sec_per_tick: dkdv.sec_per_tick,
         l2,
-        l2_hit_rate_per_xcd: dkdv.l2_hit_rate_per_xcd.clone(),
+        l2_stats_per_xcd,
+        l2_hit_rate_per_xcd,
         hbm,
-        throughput_wgs_per_tick: 0.0,
+        throughput_wgs_per_tick,
         est_total_ticks: dkdv.est_total_ticks + dq.est_total_ticks,
         est_total_sec,
         achieved_tflops: total_flops / est_total_sec / 1e12,
@@ -359,6 +428,54 @@ mod tests {
         let dq_wgs = cfg.grid_size(KernelKind::BwdDq);
         assert_eq!(r.simulated_wgs, dkdv_wgs + dq_wgs);
         assert!(r.achieved_tflops > 0.0);
+        // The merged report must carry a real combined throughput, not
+        // the historical hard-coded 0.0.
+        assert!(r.throughput_wgs_per_tick > 0.0);
+        // Exact run, no warmup window: throughput == completions/ticks.
+        let expected = r.simulated_wgs as f64 / r.ticks as f64;
+        assert!((r.throughput_wgs_per_tick - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backward_merges_per_xcd_stats_from_both_kernels() {
+        let topo = tiny_topo();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 64) };
+        let sim = SimConfig::backward(Policy::SwizzledHeadFirst);
+        let dkdv = simulate(&topo, &cfg, &SimConfig { kernel: KernelKind::BwdDkDv, ..sim });
+        let dq = simulate(&topo, &cfg, &SimConfig { kernel: KernelKind::BwdDq, ..sim });
+        let r = simulate_backward(&topo, &cfg, &sim);
+        assert_eq!(r.l2_stats_per_xcd.len(), topo.num_xcds);
+        for (x, merged) in r.l2_stats_per_xcd.iter().enumerate() {
+            let mut want = dkdv.l2_stats_per_xcd[x];
+            want.merge(&dq.l2_stats_per_xcd[x]);
+            assert_eq!(*merged, want, "XCD{x} merged stats");
+            assert!((r.l2_hit_rate_per_xcd[x] - want.hit_rate()).abs() < 1e-12);
+        }
+        // The dQ kernel streams K/V again: its accesses must be visible
+        // in the merged per-XCD counts (i.e., not dropped).
+        let merged_accesses: u64 = r.l2_stats_per_xcd.iter().map(|s| s.accesses()).sum();
+        let dkdv_accesses: u64 = dkdv.l2_stats_per_xcd.iter().map(|s| s.accesses()).sum();
+        assert!(merged_accesses > dkdv_accesses);
+    }
+
+    #[test]
+    fn sim_config_hash_eq_by_bits() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let hash_of = |c: &SimConfig| {
+            let mut h = DefaultHasher::new();
+            c.hash(&mut h);
+            h.finish()
+        };
+        let a = SimConfig::forward(Policy::SwizzledHeadFirst);
+        let b = SimConfig::forward(Policy::SwizzledHeadFirst);
+        assert_eq!(a, b);
+        assert_eq!(hash_of(&a), hash_of(&b));
+        let c = SimConfig { compute_efficiency: 0.9, ..a };
+        assert_ne!(a, c);
+        assert_ne!(hash_of(&a), hash_of(&c));
+        let d = SimConfig::forward(Policy::NaiveBlockFirst);
+        assert_ne!(a, d);
     }
 
     #[test]

@@ -12,7 +12,12 @@
 pub mod presets;
 
 /// Architecture description of a (possibly chiplet-based) GPU.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Equality and hashing compare the f64 rate fields by IEEE-754 *bit
+/// pattern* (see the manual impls below), which makes `Topology` usable
+/// as part of a hash key — the simulation driver's report cache
+/// ([`crate::driver`]) memoizes on (topology, attention, sim config).
+#[derive(Debug, Clone)]
 pub struct Topology {
     /// Human-readable name, e.g. `"mi300x"`.
     pub name: String,
@@ -97,6 +102,43 @@ impl Topology {
     }
 }
 
+// Hash/Eq by bits: the three f64 fields are compared and hashed via
+// `to_bits()`, so a `Topology` can key the driver's report cache. The
+// bit convention means `NaN == NaN` and `0.0 != -0.0`, which is exactly
+// the canonical-key behavior a memoization table wants (and no preset
+// ever carries a NaN — `validate()` rejects non-positive rates).
+impl PartialEq for Topology {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.num_xcds == other.num_xcds
+            && self.cus_per_xcd == other.cus_per_xcd
+            && self.l2_bytes_per_xcd == other.l2_bytes_per_xcd
+            && self.line_bytes == other.line_bytes
+            && self.hbm_bytes_per_sec.to_bits() == other.hbm_bytes_per_sec.to_bits()
+            && self.hbm_latency_sec.to_bits() == other.hbm_latency_sec.to_bits()
+            && self.cu_flops_per_sec.to_bits() == other.cu_flops_per_sec.to_bits()
+            && self.wgs_per_cu == other.wgs_per_cu
+            && self.dispatch_chunk == other.dispatch_chunk
+    }
+}
+
+impl Eq for Topology {}
+
+impl std::hash::Hash for Topology {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.name.hash(state);
+        self.num_xcds.hash(state);
+        self.cus_per_xcd.hash(state);
+        self.l2_bytes_per_xcd.hash(state);
+        self.line_bytes.hash(state);
+        self.hbm_bytes_per_sec.to_bits().hash(state);
+        self.hbm_latency_sec.to_bits().hash(state);
+        self.cu_flops_per_sec.to_bits().hash(state);
+        self.wgs_per_cu.hash(state);
+        self.dispatch_chunk.hash(state);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::presets;
@@ -162,6 +204,25 @@ mod tests {
         let mut t = presets::mi300x();
         t.dispatch_chunk = 0;
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn hash_eq_by_bits() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let hash_of = |t: &super::Topology| {
+            let mut h = DefaultHasher::new();
+            t.hash(&mut h);
+            h.finish()
+        };
+        let a = presets::mi300x();
+        let b = presets::mi300x();
+        assert_eq!(a, b);
+        assert_eq!(hash_of(&a), hash_of(&b));
+        let mut c = presets::mi300x();
+        c.hbm_bytes_per_sec *= 2.0;
+        assert_ne!(a, c);
+        assert_ne!(hash_of(&a), hash_of(&c));
     }
 
     #[test]

@@ -1,0 +1,78 @@
+//! Determinism contract of the simulation driver: parallel execution is
+//! *bit-identical* to serial. The engine is deterministic per job; the
+//! pool must not change results — only wall-clock — at any worker count,
+//! with or without the memoizing cache.
+
+use numa_attn::attn::AttnConfig;
+use numa_attn::driver::{ReportCache, SimDriver, SimJob};
+use numa_attn::mapping::ALL_POLICIES;
+use numa_attn::sim::SimConfig;
+use numa_attn::topology::{presets, Topology};
+use numa_attn::workload::sweeps;
+
+fn small_topo() -> Topology {
+    Topology {
+        name: "tiny".into(),
+        num_xcds: 4,
+        cus_per_xcd: 4,
+        l2_bytes_per_xcd: 512 * 1024,
+        ..presets::mi300x()
+    }
+}
+
+/// A small sweep × all policies, forward and backward: 3 points × 4
+/// policies × 2 kernels = 24 jobs.
+fn sweep_jobs() -> Vec<SimJob> {
+    let topo = small_topo();
+    let points = sweeps::mha_sensitivity(&[1024, 2048], &[1], &[4]);
+    let extra = sweeps::backward_sweep(&[1024], &[1]);
+    let mut jobs = Vec::new();
+    for pt in points.iter().chain(&extra) {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, h_q: 4, h_k: 4, ..pt.cfg };
+        for &p in &ALL_POLICIES {
+            jobs.push(SimJob::forward(&topo, &cfg, SimConfig::forward(p)));
+            jobs.push(SimJob::backward(&topo, &cfg, SimConfig::backward(p)));
+        }
+    }
+    jobs
+}
+
+fn render_all(reports: &[numa_attn::SimReport]) -> Vec<String> {
+    reports.iter().map(|r| r.to_json().render()).collect()
+}
+
+#[test]
+fn threads_1_and_8_produce_byte_identical_reports() {
+    let jobs = sweep_jobs();
+    let serial = SimDriver::new(1).run_all(jobs.clone());
+    let parallel = SimDriver::new(8).run_all(jobs.clone());
+    assert_eq!(serial.len(), jobs.len());
+    let a = render_all(&serial);
+    let b = render_all(&parallel);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x, y, "job {i} diverged between 1 and 8 workers");
+    }
+}
+
+#[test]
+fn cache_off_matches_cache_on() {
+    // Duplicate the job list so the cached driver serves half its batch
+    // from memo hits — results must still be byte-identical with a
+    // pass-through cache.
+    let mut jobs = sweep_jobs();
+    let dup = jobs.clone();
+    jobs.extend(dup);
+    let cached = SimDriver::new(4).run_all(jobs.clone());
+    let uncached = SimDriver::with_cache(4, std::sync::Arc::new(ReportCache::disabled()))
+        .run_all(jobs.clone());
+    assert_eq!(render_all(&cached), render_all(&uncached));
+}
+
+#[test]
+fn repeated_parallel_runs_are_stable() {
+    let jobs = sweep_jobs();
+    let d = SimDriver::new(8);
+    let first = render_all(&d.run_all(jobs.clone()));
+    let second = render_all(&d.run_all(jobs));
+    assert_eq!(first, second);
+}

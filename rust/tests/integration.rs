@@ -5,6 +5,7 @@
 use numa_attn::attn::AttnConfig;
 use numa_attn::config::ExperimentConfig;
 use numa_attn::coordinator::advise;
+use numa_attn::driver::SimDriver;
 use numa_attn::figures;
 use numa_attn::mapping::Policy;
 use numa_attn::sim::{simulate, simulate_backward, SimConfig};
@@ -143,7 +144,7 @@ fn advisor_consistent_with_figures() {
 fn quick_fig13_extremes() {
     // One end-to-end figure run (quick sweep) sanity-checking both ends.
     let topo = presets::mi300x();
-    let fig = figures::fig13(&topo, true);
+    let fig = figures::fig13(&SimDriver::new(4), &topo, true);
     let shf_small = fig.value("H=8 N=2K B=1", Policy::SwizzledHeadFirst).unwrap();
     let shf_big = fig.value("H=128 N=128K B=8", Policy::SwizzledHeadFirst).unwrap();
     let nbf_big = fig.value("H=128 N=128K B=8", Policy::NaiveBlockFirst).unwrap();

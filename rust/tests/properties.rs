@@ -211,3 +211,22 @@ fn prop_trace_flops_match_totals() {
         }
     }
 }
+
+#[test]
+fn policy_name_display_fromstr_roundtrip() {
+    // Every policy round-trips through all three textual forms:
+    // `name()`, `Display`, and the short CLI alias.
+    for p in ALL_POLICIES {
+        assert_eq!(p.name().parse::<Policy>().unwrap(), p, "name() round-trip");
+        assert_eq!(p.to_string().parse::<Policy>().unwrap(), p, "Display round-trip");
+        assert_eq!(format!("{p}"), p.name(), "Display renders name()");
+        let alias: String = p
+            .name()
+            .split('_')
+            .map(|w| w.chars().next().unwrap())
+            .collect();
+        assert_eq!(alias.parse::<Policy>().unwrap(), p, "short alias {alias}");
+        assert!(!p.label().is_empty());
+    }
+    assert!("not_a_policy".parse::<Policy>().is_err());
+}
