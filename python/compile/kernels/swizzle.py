@@ -140,3 +140,22 @@ def decode(policy, wid, batch, num_heads, num_blocks, num_xcd):
 def xcd_of(wid, num_xcd):
     """XCD a dispatch slot lands on under chunked round-robin, chunk=1."""
     return wid % num_xcd
+
+
+def decode_split_kv(policy, wid, batch, num_heads, num_splits, num_xcd):
+    """Map a *flash-decode* dispatch slot -> ``(batch, head, kv_split)``.
+
+    The split-KV decode grid (one query token per (batch, head), KV
+    streamed in ``num_splits`` contiguous slices) reuses the prefill
+    policy arithmetic verbatim with the block dimension reinterpreted as
+    the split index — so every policy's locality invariant carries over:
+    ``swizzled_head_first`` keeps all splits of one head's KV stream (and
+    its partial results) on a single XCD, while ``naive_head_first``
+    stripes them across XCDs, replicating each GQA group's shared KV
+    slices into several L2s whenever ``num_splits % num_xcd != 0``.
+
+    Mirrored in Rust by ``Mapping::for_kernel(_, _, DecodeSplitKv, _)``
+    and pinned by the decode golden vectors in
+    ``rust/src/mapping/golden.rs``.
+    """
+    return decode(policy, wid, batch, num_heads, num_splits, num_xcd)

@@ -207,3 +207,67 @@ def test_indivisible_heads_raises():
         swizzle.decode("swizzled_head_first", 0, 1, 6, 4, 8)
     with pytest.raises(ValueError):
         swizzle.decode("swizzled_block_first", 0, 1, 6, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Flash-decode split-KV grid (splits reuse the block dimension).
+# ---------------------------------------------------------------------------
+
+
+def decode_full_grid(policy, batch, heads, splits, xcd):
+    total = batch * heads * splits
+    return [
+        swizzle.decode_split_kv(policy, w, batch, heads, splits, xcd)
+        for w in range(total)
+    ]
+
+
+@pytest.mark.parametrize("policy", swizzle.POLICIES)
+@pytest.mark.parametrize("splits", [1, 2, 4, 8])
+def test_decode_bijective(policy, splits):
+    grid = decode_full_grid(policy, 2, 16, splits, 8)
+    assert len(set(grid)) == len(grid) == 2 * 16 * splits
+
+
+@pytest.mark.parametrize("splits", [2, 4, 8])
+def test_decode_shf_confines_head_splits(splits):
+    """SHF decode invariant: every split of one head's KV stream lands on
+    ONE XCD (chunk = 1), so its partial results never cross L2 domains."""
+    batch, heads, xcd = 2, 64, 8
+    by_head = {}
+    for w, (z, h, s) in enumerate(decode_full_grid(
+            "swizzled_head_first", batch, heads, splits, xcd)):
+        by_head.setdefault((z, h), set()).add(swizzle.xcd_of(w, xcd))
+    assert all(len(v) == 1 for v in by_head.values())
+
+
+def test_decode_nhf_replicates_group_streams():
+    """NHF decode anti-invariant (the `decode` figure's mechanism): with
+    GQA-8 and a split count that does not divide into the XCD
+    round-robin, every (kv head, split) KV slice is streamed by WGs on
+    several XCDs — replicated into several L2s."""
+    heads, h_k, splits, xcd = 64, 8, 2, 8
+    group = heads // h_k
+    per_stream = {}
+    for w, (z, h, s) in enumerate(decode_full_grid(
+            "naive_head_first", 1, heads, splits, xcd)):
+        per_stream.setdefault((z, h // group, s), set()).add(
+            swizzle.xcd_of(w, xcd))
+    assert all(len(v) == 4 for v in per_stream.values())
+
+
+def test_decode_golden_matches_rust():
+    """The decode golden vectors pinned in rust/src/mapping/golden.rs
+    (batch=2, heads=8, splits=4, num_xcds=4) — generated from here."""
+    grid = decode_full_grid("swizzled_head_first", 2, 8, 4, 4)
+    assert grid[:8] == [
+        (0, 0, 0), (0, 2, 0), (0, 4, 0), (0, 6, 0),
+        (0, 0, 1), (0, 2, 1), (0, 4, 1), (0, 6, 1),
+    ]
+    assert grid[8 * 4 - 1] == (0, 7, 3)
+    assert grid[8 * 4] == (1, 0, 0)
+    grid = decode_full_grid("swizzled_block_first", 2, 8, 4, 4)
+    assert grid[:8] == [
+        (0, 0, 0), (0, 2, 0), (0, 4, 0), (0, 6, 0),
+        (0, 1, 0), (0, 3, 0), (0, 5, 0), (0, 7, 0),
+    ]

@@ -1,0 +1,36 @@
+//! Split-KV decode figure (beyond the paper: the serving regime the
+//! ROADMAP targets): aggregate L2 hit rates of the two-phase
+//! flash-decode pass on the GQA-8 sweep.
+//!
+//! Reproduction targets:
+//! * Swizzled Head-first's hit rate is >= Naive Head-first's on every
+//!   row — NHF replicates each (kv head, split) stream across XCDs when
+//!   the split count does not divide into the round-robin;
+//! * the gap widens with batch (more concurrent streams per L2).
+
+mod common;
+
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+
+fn main() {
+    let fig = common::run_figure("decode", figures::decode_fig);
+
+    for row in &fig.rows {
+        let shf = fig.value(&row.label, Policy::SwizzledHeadFirst).unwrap();
+        let nhf = fig.value(&row.label, Policy::NaiveHeadFirst).unwrap();
+        common::check(
+            shf >= nhf,
+            &format!("{}: SHF ({shf:.1}%) >= NHF ({nhf:.1}%)", row.label),
+        );
+    }
+
+    let label = "llama3-70b B=8 N=64K S=4";
+    let shf = fig.value(label, Policy::SwizzledHeadFirst).unwrap();
+    let nhf = fig.value(label, Policy::NaiveHeadFirst).unwrap();
+    common::check(
+        shf > nhf,
+        &format!("batched decode separates the policies (SHF {shf:.1}% vs NHF {nhf:.1}%)"),
+    );
+    common::check(shf > 50.0, &format!("SHF keeps a useful hit rate at B=8/64K/S=4 ({shf:.1}%)"));
+}

@@ -14,11 +14,16 @@ use super::{AttnConfig, WorkItem};
 /// Identity of an attention compute cluster: (batch, kv_head).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct AccId {
+    /// Batch index.
     pub z: u32,
+    /// KV head (group) index.
     pub kv_head: u32,
 }
 
-/// ACC of a workgroup: determined by the K/V tensors it streams.
+/// ACC of a workgroup: determined by the K/V tensors it streams. The
+/// block index never matters — on the flash-decode grid, where `b` is a
+/// KV split, all splits of a head stream (slices of) the same K/V pair
+/// and so belong to the same ACC.
 pub fn acc_of(cfg: &AttnConfig, item: WorkItem) -> AccId {
     AccId { z: item.z, kv_head: cfg.kv_head(item.h as usize) as u32 }
 }
@@ -98,6 +103,22 @@ mod tests {
         assert_eq!(a0, a3);
         assert_ne!(a0, a4);
         assert_eq!(wgs_per_acc(&cfg, 16), 4 * 16);
+    }
+
+    #[test]
+    fn decode_splits_of_one_head_share_an_acc() {
+        // Flash-decode grid: b is the KV split index; every split of a
+        // (batch, head) — and every group-mate's splits under GQA —
+        // derive the same ACC, because they stream the same K/V tensors.
+        let cfg = AttnConfig::gqa(2, 8, 2, 4096, 64);
+        let a = acc_of(&cfg, WorkItem { z: 1, h: 2, b: 0 });
+        let b = acc_of(&cfg, WorkItem { z: 1, h: 2, b: 7 }); // other split
+        let c = acc_of(&cfg, WorkItem { z: 1, h: 3, b: 5 }); // group-mate
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_ne!(a, acc_of(&cfg, WorkItem { z: 0, h: 2, b: 0 }));
+        // Workgroups per ACC on a decode grid = group size * splits.
+        assert_eq!(wgs_per_acc(&cfg, 8), 4 * 8);
     }
 
     #[test]

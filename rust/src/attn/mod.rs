@@ -3,7 +3,8 @@
 //!
 //! * [`AttnConfig`] — the workload hyper-parameters (Z, H_Q, H_K, N_CTX,
 //!   D_HEAD, BLOCK_M/N, causal, dtype).
-//! * [`WorkItem`] — one workgroup's identity: (batch, head, block).
+//! * [`WorkItem`] — one workgroup's identity: (batch, head, block) —
+//!   where "block" is a KV split for the flash-decode kernels.
 //! * [`tile`] — tile-key encoding for the cache simulator.
 //! * [`trace`] — per-workgroup tile access streams for the forward and
 //!   backward kernels ([`trace::WgCursor`]).
@@ -24,6 +25,49 @@ pub enum KernelKind {
     BwdDkDv,
     /// FA2 backward dQ: one WG per Q row block, streaming K/V.
     BwdDq,
+    /// Flash-decode phase 1: one WG per (batch, head, KV split), each
+    /// streaming its contiguous slice of the head's K/V and writing a
+    /// partial (O, lse) result. The decode grid has one query token per
+    /// (batch, head) — too small to fill eight XCDs unless the KV
+    /// dimension is split, which is exactly what this kernel does
+    /// (FlashAttention-2's split-KV work partitioning; see
+    /// docs/REFERENCE.md and DESIGN.md §9).
+    DecodeSplitKv {
+        /// Number of KV splits per (batch, head) — the grid's block
+        /// dimension. Mapping policies treat splits exactly like blocks.
+        num_splits: usize,
+    },
+    /// Flash-decode phase 2: one WG per (batch, head), reading the
+    /// `num_splits` partial (O, lse) results of phase 1 and reducing
+    /// them into the final output row.
+    DecodeReduce {
+        /// Splits produced by the matching [`KernelKind::DecodeSplitKv`]
+        /// launch (the reduction's stream length).
+        num_splits: usize,
+    },
+}
+
+impl KernelKind {
+    /// Stable lowercase identifier (JSON output, CLI messages).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Forward => "forward",
+            KernelKind::BwdDkDv => "bwd_dkdv",
+            KernelKind::BwdDq => "bwd_dq",
+            KernelKind::DecodeSplitKv { .. } => "decode_split_kv",
+            KernelKind::DecodeReduce { .. } => "decode_reduce",
+        }
+    }
+
+    /// KV splits for the decode kernels, `None` for prefill/backward.
+    pub fn num_splits(&self) -> Option<usize> {
+        match self {
+            KernelKind::DecodeSplitKv { num_splits } | KernelKind::DecodeReduce { num_splits } => {
+                Some(*num_splits)
+            }
+            _ => None,
+        }
+    }
 }
 
 /// Attention workload hyper-parameters (paper Table 2 / Table 3 rows).
@@ -70,6 +114,8 @@ impl AttnConfig {
         AttnConfig { h_q, h_k, ..Self::mha(batch, h_q, n_ctx, d_head) }
     }
 
+    /// Check the geometry's internal consistency (GQA divisibility,
+    /// positive sizes, supported dtype width).
     pub fn validate(&self) -> Result<(), String> {
         if self.batch == 0 || self.h_q == 0 || self.h_k == 0 {
             return Err("batch/h_q/h_k must be > 0".into());
@@ -114,7 +160,27 @@ impl AttnConfig {
         match kernel {
             KernelKind::Forward | KernelKind::BwdDq => self.num_row_blocks(),
             KernelKind::BwdDkDv => self.num_col_blocks(),
+            KernelKind::DecodeSplitKv { num_splits } => num_splits,
+            KernelKind::DecodeReduce { .. } => 1,
         }
+    }
+
+    /// Clamp a requested KV split count to the valid range: at least 1,
+    /// at most one KV column block per split (beyond that, extra splits
+    /// stream nothing and only multiply partial-result traffic). The
+    /// single definition of the bound the CLI, the advisor, and the
+    /// experiment-file parser all share.
+    pub fn clamp_num_splits(&self, requested: usize) -> usize {
+        requested.clamp(1, self.num_col_blocks().max(1))
+    }
+
+    /// [start, end) K/V column-block range of decode split `split` out of
+    /// `num_splits` — the balanced partition FlashAttention-2 uses (every
+    /// column block covered exactly once; sizes differ by at most one).
+    pub fn split_bounds(&self, split: usize, num_splits: usize) -> (usize, usize) {
+        debug_assert!(num_splits > 0 && split < num_splits);
+        let nb = self.num_col_blocks();
+        (split * nb / num_splits, (split + 1) * nb / num_splits)
     }
 
     /// Total workgroups in a kernel's grid
@@ -146,6 +212,19 @@ impl AttnConfig {
         (self.block_m * 4) as u64
     }
 
+    /// Bytes of one decode query vector (a single token's Q row,
+    /// MFMA-padded like the block operands).
+    pub fn q_vec_bytes(&self) -> u64 {
+        (self.padded_d_head() * self.dtype_bytes) as u64
+    }
+
+    /// Bytes of one decode partial result: an fp32 accumulator row plus
+    /// the split's (max, sum-of-exp) softmax state — what each phase-1
+    /// split-KV workgroup writes and the phase-2 reduction reads.
+    pub fn decode_partial_bytes(&self) -> u64 {
+        (self.padded_d_head() * 4 + 8) as u64
+    }
+
     /// Bytes of the full K + V tensors of ONE head — the ACC working set
     /// whose fit (or not) in a 4 MB XCD L2 drives the paper's Fig. 13.
     pub fn kv_bytes_per_head(&self) -> u64 {
@@ -166,6 +245,31 @@ impl AttnConfig {
     /// FLOPs of one dQ tile step (3 GEMMs: S, dP, dQ).
     pub fn dq_step_flops(&self) -> f64 {
         6.0 * (self.block_m * self.block_n * self.d_head) as f64
+    }
+
+    /// FLOPs of one decode split-KV step: the forward tile step with a
+    /// single query row (m = 1) — s = q·K^T plus o += p·V.
+    pub fn decode_step_flops(&self) -> f64 {
+        4.0 * (self.block_n * self.d_head) as f64
+    }
+
+    /// FLOPs of one decode-reduce step: rescale one partial accumulator
+    /// row and fold it into the running (max, sum) softmax state
+    /// (~4 vector ops per element).
+    pub fn reduce_step_flops(&self) -> f64 {
+        (4 * self.padded_d_head()) as f64
+    }
+
+    /// FLOPs of one stream step of `kernel` — the quantity one simulator
+    /// tick is normalized to ([`crate::sim`]).
+    pub fn step_flops_for(&self, kernel: KernelKind) -> f64 {
+        match kernel {
+            KernelKind::Forward => self.fwd_step_flops(),
+            KernelKind::BwdDkDv => self.dkdv_step_flops(),
+            KernelKind::BwdDq => self.dq_step_flops(),
+            KernelKind::DecodeSplitKv { .. } => self.decode_step_flops(),
+            KernelKind::DecodeReduce { .. } => self.reduce_step_flops(),
+        }
     }
 
     /// Total forward FLOPs (non-causal: 4·Z·H·N²·D; causal: half).
@@ -217,7 +321,8 @@ pub struct WorkItem {
     pub z: u32,
     /// Query head index.
     pub h: u32,
-    /// Block index (row block for Forward/BwdDq, column block for BwdDkDv).
+    /// Block index: row block for Forward/BwdDq, column block for
+    /// BwdDkDv, KV split for DecodeSplitKv (always 0 for DecodeReduce).
     pub b: u32,
 }
 
@@ -299,5 +404,54 @@ mod tests {
         let c = AttnConfig::mha(2, 16, 8192, 128);
         assert_eq!(c.grid_size(KernelKind::BwdDq), 2 * 16 * 64);
         assert_eq!(c.grid_size(KernelKind::BwdDkDv), 2 * 16 * 128);
+    }
+
+    #[test]
+    fn decode_grids() {
+        // Decode grid = batch * heads * splits; reduce grid = batch * heads.
+        let c = AttnConfig::gqa(4, 64, 8, 65536, 128);
+        assert_eq!(c.grid_size(KernelKind::DecodeSplitKv { num_splits: 8 }), 4 * 64 * 8);
+        assert_eq!(c.grid_size(KernelKind::DecodeReduce { num_splits: 8 }), 4 * 64);
+        assert_eq!(KernelKind::DecodeSplitKv { num_splits: 8 }.num_splits(), Some(8));
+        assert_eq!(KernelKind::Forward.num_splits(), None);
+        assert_eq!(KernelKind::DecodeSplitKv { num_splits: 8 }.name(), "decode_split_kv");
+    }
+
+    #[test]
+    fn split_bounds_partition_col_blocks() {
+        // Balanced partition: covers every column block exactly once,
+        // sizes differ by at most one, including non-divisible counts.
+        for (n_ctx, splits) in [(65536, 8), (4096, 4), (4096, 3), (1024, 16), (128, 4)] {
+            let c = AttnConfig::mha(1, 8, n_ctx, 128);
+            let nb = c.num_col_blocks();
+            let mut covered = 0;
+            let mut sizes = Vec::new();
+            for s in 0..splits {
+                let (lo, hi) = c.split_bounds(s, splits);
+                assert_eq!(lo, covered, "split {s} of {splits} at N={n_ctx}");
+                assert!(hi >= lo);
+                sizes.push(hi - lo);
+                covered = hi;
+            }
+            assert_eq!(covered, nb);
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "unbalanced split sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn decode_byte_and_flop_accounting() {
+        let c = AttnConfig::mha(1, 8, 8192, 128);
+        assert_eq!(c.q_vec_bytes(), 128 * 2);
+        assert_eq!(c.decode_partial_bytes(), 128 * 4 + 8);
+        // m = 1 forward tile step.
+        assert!((c.decode_step_flops() - 4.0 * 64.0 * 128.0).abs() < 1e-9);
+        assert!(c.reduce_step_flops() > 0.0);
+        assert_eq!(
+            c.step_flops_for(KernelKind::DecodeSplitKv { num_splits: 4 }),
+            c.decode_step_flops()
+        );
+        assert_eq!(c.step_flops_for(KernelKind::Forward), c.fwd_step_flops());
     }
 }

@@ -10,17 +10,29 @@
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum Tensor {
+    /// Query row blocks (one token vector in decode).
     Q = 0,
+    /// Key column tiles.
     K = 1,
+    /// Value column tiles.
     V = 2,
+    /// Output row blocks.
     O = 3,
+    /// Backward: upstream gradient dO row blocks.
     DO = 4,
+    /// Log-sum-exp row vectors.
     Lse = 5,
+    /// Backward: the precomputed rowsum(dO * O) vectors.
     Delta = 6,
     /// GEMM operand A (for the GEMM motivation figure).
     GemmA = 7,
     /// GEMM operand B.
     GemmB = 8,
+    /// Flash-decode phase-1 partial output row, indexed by KV split.
+    PartialO = 9,
+    /// Flash-decode phase-1 partial (max, sum-of-exp) softmax state,
+    /// indexed by KV split.
+    PartialLse = 10,
 }
 
 const TILE_BITS: u32 = 28;
@@ -59,6 +71,8 @@ mod tests {
             (Tensor::K, 7, 127, 2047),
             (Tensor::V, 1, 1, 1),
             (Tensor::Delta, 1023, 16383, (1 << 28) - 1),
+            (Tensor::PartialO, 3, 63, 255),
+            (Tensor::PartialLse, 3, 63, 255),
         ] {
             let k = key(t, z, h, i);
             assert_eq!(decode(k), (t as u8, z, h, i));

@@ -3,10 +3,12 @@
 //!
 //! A workgroup's life is a *prologue* (operands resident for its whole
 //! duration: the Q row block for the forward kernel, the K/V column block
-//! for dK/dV), followed by a sequence of *steps*, each reading the next
-//! tile(s) of the streamed tensors and performing one tile of compute,
-//! and an output write at the end. [`WgCursor`] yields these steps lazily
-//! so no trace is ever materialized.
+//! for dK/dV, the single-token query vector for decode), followed by a
+//! sequence of *steps*, each reading the next tile(s) of the streamed
+//! tensors and performing one tile of compute, and an output write at the
+//! end. [`WgCursor`] yields these steps lazily so no trace is ever
+//! materialized. The flash-decode kernels stream a KV *split* (phase 1)
+//! or the phase-1 partial results (phase 2 reduction).
 
 use super::tile::{self, Tensor};
 use super::{AttnConfig, KernelKind, WorkItem};
@@ -14,7 +16,9 @@ use super::{AttnConfig, KernelKind, WorkItem};
 /// One tile read: key + size.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Read {
+    /// Tile key ([`tile::key`]).
     pub key: u64,
+    /// Tile size in bytes.
     pub bytes: u32,
 }
 
@@ -24,10 +28,12 @@ pub struct Read {
 pub struct Step {
     reads: [Read; 4],
     num_reads: u8,
+    /// FLOPs of this step's compute (0 for the prologue).
     pub flops: f64,
 }
 
 impl Step {
+    /// The tile reads this step performs.
     pub fn reads(&self) -> &[Read] {
         &self.reads[..self.num_reads as usize]
     }
@@ -54,15 +60,18 @@ pub struct WgCursor {
 }
 
 impl WgCursor {
+    /// Cursor over workgroup `item`'s access stream for `kernel`.
     pub fn new(cfg: &AttnConfig, kernel: KernelKind, item: WorkItem) -> Self {
         let (start, end) = stream_bounds(cfg, kernel, item);
         WgCursor { cfg: *cfg, kernel, item, pos: 0, start, end }
     }
 
+    /// The workgroup's identity.
     pub fn item(&self) -> WorkItem {
         self.item
     }
 
+    /// The kernel this workgroup belongs to.
     pub fn kernel(&self) -> KernelKind {
         self.kernel
     }
@@ -90,6 +99,10 @@ impl WgCursor {
             KernelKind::BwdDkDv => 2 * self.cfg.kv_tile_bytes(),
             // dQ block.
             KernelKind::BwdDq => self.cfg.q_block_bytes(),
+            // Partial (O, lse) of one split.
+            KernelKind::DecodeSplitKv { .. } => self.cfg.decode_partial_bytes(),
+            // Final output row of one (batch, head).
+            KernelKind::DecodeReduce { .. } => self.cfg.q_vec_bytes(),
         }
     }
 
@@ -134,6 +147,15 @@ impl WgCursor {
                     ],
                     0.0,
                 ),
+                // Every split of a head reads the SAME single-token query
+                // vector (tile index 0): splits that co-locate share it.
+                KernelKind::DecodeSplitKv { .. } => Step::new(
+                    &[Read { key: tile::key(Tensor::Q, z, h, 0), bytes: cfg.q_vec_bytes() as u32 }],
+                    0.0,
+                ),
+                // The reduction has no resident operands: it only streams
+                // the phase-1 partials.
+                KernelKind::DecodeReduce { .. } => Step::new(&[], 0.0),
             };
             return Some(step);
         }
@@ -165,6 +187,27 @@ impl WgCursor {
                 ],
                 cfg.dq_step_flops(),
             ),
+            // Same K/V column tiles as the forward kernel, restricted to
+            // this split's [start, end) slice by `stream_bounds`.
+            KernelKind::DecodeSplitKv { .. } => Step::new(
+                &[
+                    Read { key: tile::key(Tensor::K, z, kv, idx), bytes: cfg.kv_tile_bytes() as u32 },
+                    Read { key: tile::key(Tensor::V, z, kv, idx), bytes: cfg.kv_tile_bytes() as u32 },
+                ],
+                cfg.decode_step_flops(),
+            ),
+            // Stream the phase-1 partials of this (batch, head), one
+            // split per step.
+            KernelKind::DecodeReduce { .. } => Step::new(
+                &[
+                    Read {
+                        key: tile::key(Tensor::PartialO, z, h, idx),
+                        bytes: (cfg.decode_partial_bytes() - 8) as u32,
+                    },
+                    Read { key: tile::key(Tensor::PartialLse, z, h, idx), bytes: 8 },
+                ],
+                cfg.reduce_step_flops(),
+            ),
         };
         Some(step)
     }
@@ -190,6 +233,14 @@ fn stream_bounds(cfg: &AttnConfig, kernel: KernelKind, item: WorkItem) -> (u32, 
             let lo = if cfg.causal { (b * cfg.block_n) / cfg.block_m } else { 0 };
             (lo as u32, n_rows as u32)
         }
+        // Decode generates the NEXT token: the query is the last position
+        // and attends to the whole context, so the causal mask never
+        // truncates a split's slice.
+        KernelKind::DecodeSplitKv { num_splits } => {
+            let (lo, hi) = cfg.split_bounds(b, num_splits);
+            (lo as u32, hi as u32)
+        }
+        KernelKind::DecodeReduce { num_splits } => (0, num_splits as u32),
     }
 }
 
@@ -297,6 +348,99 @@ mod tests {
         assert_eq!(cur.remaining_steps(), 16);
         drain(&mut cur);
         assert_eq!(cur.remaining_steps(), 0);
+    }
+
+    #[test]
+    fn decode_split_stream_shape() {
+        let c = cfg(); // 16 col blocks
+        let kernel = KernelKind::DecodeSplitKv { num_splits: 4 };
+        let mut cur = WgCursor::new(&c, kernel, WorkItem { z: 1, h: 2, b: 3 });
+        assert_eq!(cur.stream_len(), 4); // 16 col blocks / 4 splits
+        assert_eq!(cur.write_bytes(), c.decode_partial_bytes());
+        let steps = drain(&mut cur);
+        assert_eq!(steps.len(), 1 + 4);
+        // Prologue reads the single-token query vector (tile 0).
+        let (t, z, h, i) = decode(steps[0].reads()[0].key);
+        assert_eq!((t, z, h, i), (Tensor::Q as u8, 1, 2, 0));
+        assert_eq!(steps[0].reads()[0].bytes, c.q_vec_bytes() as u32);
+        // Split 3 of 4 covers column blocks 12..16.
+        for (j, s) in steps[1..].iter().enumerate() {
+            assert_eq!(s.reads().len(), 2);
+            let (tk, _, hk, ik) = decode(s.reads()[0].key);
+            let (tv, _, _, iv) = decode(s.reads()[1].key);
+            assert_eq!((tk, tv), (Tensor::K as u8, Tensor::V as u8));
+            assert_eq!((ik as usize, iv as usize), (12 + j, 12 + j));
+            assert_eq!(hk, 2); // MHA: kv head == q head
+            assert!(s.flops > 0.0);
+        }
+    }
+
+    #[test]
+    fn decode_splits_partition_kv_stream() {
+        // Across all splits, each K/V column tile of a head is read by
+        // exactly one split-KV workgroup (splits are disjoint and cover).
+        let c = cfg();
+        let kernel = KernelKind::DecodeSplitKv { num_splits: 3 }; // 16 % 3 != 0
+        let mut seen = Vec::new();
+        for b in 0..3u32 {
+            let mut cur = WgCursor::new(&c, kernel, WorkItem { z: 0, h: 1, b });
+            cur.next_step(); // skip prologue
+            while let Some(s) = cur.next_step() {
+                let (_, _, _, idx) = decode(s.reads()[0].key);
+                seen.push(idx as usize);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..c.num_col_blocks()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn decode_gqa_splits_share_group_kv() {
+        // Two query heads of the same GQA group read identical K/V tile
+        // keys for the same split — the decode locality the mapping
+        // policies compete on.
+        let c = AttnConfig::gqa(1, 8, 2, 1024, 64);
+        let kernel = KernelKind::DecodeSplitKv { num_splits: 4 };
+        let keys = |h: u32| {
+            let mut cur = WgCursor::new(&c, kernel, WorkItem { z: 0, h, b: 2 });
+            cur.next_step();
+            drain(&mut cur).iter().flat_map(|s| s.reads().iter().map(|r| r.key)).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(4), keys(7)); // heads 4..7 share kv head 1
+        assert_ne!(keys(0), keys(4)); // different groups share nothing
+    }
+
+    #[test]
+    fn decode_reduce_streams_partials() {
+        let c = cfg();
+        let kernel = KernelKind::DecodeReduce { num_splits: 5 };
+        let mut cur = WgCursor::new(&c, kernel, WorkItem { z: 1, h: 3, b: 0 });
+        assert_eq!(cur.stream_len(), 5);
+        assert_eq!(cur.write_bytes(), c.q_vec_bytes());
+        let steps = drain(&mut cur);
+        assert_eq!(steps.len(), 1 + 5);
+        assert_eq!(steps[0].reads().len(), 0); // no resident operands
+        for (j, s) in steps[1..].iter().enumerate() {
+            let (to, z, h, i) = decode(s.reads()[0].key);
+            let (tl, _, _, il) = decode(s.reads()[1].key);
+            assert_eq!((to, tl), (Tensor::PartialO as u8, Tensor::PartialLse as u8));
+            assert_eq!((z, h), (1, 3));
+            assert_eq!((i as usize, il as usize), (j, j));
+        }
+        // Total partial bytes streamed == what phase 1 wrote.
+        let read: u64 = steps.iter().flat_map(|s| s.reads().iter().map(|r| r.bytes as u64)).sum();
+        assert_eq!(read, 5 * c.decode_partial_bytes());
+    }
+
+    #[test]
+    fn causal_does_not_truncate_decode() {
+        let mut c = cfg();
+        c.causal = true;
+        let kernel = KernelKind::DecodeSplitKv { num_splits: 2 };
+        for b in 0..2u32 {
+            let cur = WgCursor::new(&c, kernel, WorkItem { z: 0, h: 0, b });
+            assert_eq!(cur.stream_len(), 8); // 16 col blocks / 2, mask-free
+        }
     }
 
     #[test]

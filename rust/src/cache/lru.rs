@@ -33,6 +33,7 @@ pub struct LruCache {
 }
 
 impl LruCache {
+    /// An empty cache bounded to `capacity_bytes`.
     pub fn new(capacity_bytes: u64) -> Self {
         assert!(capacity_bytes > 0, "cache capacity must be > 0");
         LruCache {
@@ -47,22 +48,27 @@ impl LruCache {
         }
     }
 
+    /// The configured capacity.
     pub fn capacity_bytes(&self) -> u64 {
         self.capacity_bytes
     }
 
+    /// Bytes currently resident.
     pub fn used_bytes(&self) -> u64 {
         self.used_bytes
     }
 
+    /// Tiles currently resident.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is resident.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Accumulated hit/miss statistics.
     pub fn stats(&self) -> &CacheStats {
         &self.stats
     }
@@ -74,10 +80,12 @@ impl LruCache {
         &mut self.stats
     }
 
+    /// Zero the statistics (warmup boundary) without evicting data.
     pub fn reset_stats(&mut self) {
         self.stats = CacheStats::default();
     }
 
+    /// Evict everything (statistics are preserved).
     pub fn clear(&mut self) {
         self.map.clear();
         self.slab.clear();

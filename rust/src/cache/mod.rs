@@ -15,10 +15,15 @@ pub use lru::LruCache;
 /// Hit/miss statistics for one cache.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
+    /// Requests served from the cache.
     pub hits: u64,
+    /// Requests that had to fetch.
     pub misses: u64,
+    /// Tiles evicted to make room.
     pub evictions: u64,
+    /// Bytes served from the cache.
     pub hit_bytes: u64,
+    /// Bytes fetched on misses.
     pub miss_bytes: u64,
 }
 
@@ -42,6 +47,7 @@ impl CacheStats {
         self.hit_bytes as f64 / total as f64
     }
 
+    /// Total requests (hits + misses).
     pub fn accesses(&self) -> u64 {
         self.hits + self.misses
     }

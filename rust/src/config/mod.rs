@@ -16,6 +16,12 @@
 //! policy = "shf"
 //! generations = 2
 //! ```
+//!
+//! The full key set (attention blocks/causal/dtype, sim kernel selection
+//! incl. `kernel = "decode"` + `num_splits`, engine knobs) is documented
+//! in `examples/experiment.ini` and mirrored by [`ATTENTION_KEYS`] /
+//! [`SIM_KEYS`]; the `example_experiment_file_stays_reconciled` test
+//! pins that the example file and this parser stay reconciled.
 
 use crate::attn::{AttnConfig, KernelKind};
 use crate::mapping::Policy;
@@ -23,41 +29,94 @@ use crate::sim::SimConfig;
 use crate::topology::{presets, Topology};
 use crate::util::ini::Ini;
 
+/// Every `[attention]` key [`ExperimentConfig::parse`] reads. Update
+/// this list (and `examples/experiment.ini`) when adding a key — the
+/// `example_experiment_file_stays_reconciled` test checks the example
+/// file against it.
+pub const ATTENTION_KEYS: [&str; 9] = [
+    "batch", "h_q", "h_k", "n_ctx", "d_head", "block_m", "block_n", "causal", "dtype_bytes",
+];
+
+/// Every `[sim]` key [`ExperimentConfig::parse`] reads (see
+/// [`ATTENTION_KEYS`]).
+pub const SIM_KEYS: [&str; 10] = [
+    "policy", "kernel", "num_splits", "backward", "generations", "jitter_denom",
+    "launch_stagger", "prefetch_depth", "compute_efficiency", "seed",
+];
+
 /// Top-level experiment file.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     /// Topology preset name.
     pub topology: String,
+    /// `[attention]` section (required).
     pub attention: AttentionSection,
+    /// `[sim]` section (optional keys).
     pub sim: SimSection,
 }
 
+/// `[attention]` section: the workload geometry.
 #[derive(Debug, Clone)]
 pub struct AttentionSection {
+    /// Batch size Z.
     pub batch: usize,
+    /// Query heads.
     pub h_q: usize,
+    /// KV heads (defaults to `h_q`, i.e. MHA).
     pub h_k: Option<usize>,
+    /// Context length.
     pub n_ctx: usize,
+    /// Head dimension.
     pub d_head: usize,
+    /// Q row-block size (default 128).
     pub block_m: usize,
+    /// K/V column-block size (default 64).
     pub block_n: usize,
+    /// Causal masking (default false).
     pub causal: bool,
+    /// Bytes per element (default 2 = bf16/fp16).
     pub dtype_bytes: usize,
 }
 
+/// `[sim]` section: engine knobs (every key optional).
 #[derive(Debug, Clone, Default)]
 pub struct SimSection {
+    /// Policy short/full name; omitted = compare all four.
     pub policy: Option<String>,
+    /// Legacy alias for `kernel = "backward"`.
     pub backward: bool,
+    /// Which pass to run: "forward" (default), "backward", or "decode".
+    pub kernel: Option<String>,
+    /// KV splits per (batch, head); required when `kernel = "decode"`.
+    pub num_splits: Option<usize>,
+    /// Steady-state sample generations; omitted = run the whole grid.
     pub generations: Option<usize>,
+    /// 1-in-N per-step jitter (see [`SimConfig::jitter_denom`]).
     pub jitter_denom: Option<u64>,
+    /// Launch stagger cap (see [`SimConfig::launch_stagger`]).
     pub launch_stagger: Option<u64>,
+    /// Double-buffered prefetch depth.
     pub prefetch_depth: Option<u32>,
+    /// Fraction of peak CU FLOPs the inner GEMMs achieve.
     pub compute_efficiency: Option<f64>,
+    /// Jitter/stagger hash seed.
     pub seed: Option<u64>,
 }
 
+/// Which pass an experiment file requests ([`ExperimentConfig::kernel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpKernel {
+    /// The FA2 forward kernel.
+    Forward,
+    /// The combined backward pass (dK/dV + dQ).
+    Backward,
+    /// The two-phase split-KV decode pass, with this many KV splits.
+    Decode(usize),
+}
+
 impl ExperimentConfig {
+    /// Parse an experiment file (INI subset of TOML; see the module doc
+    /// and `examples/experiment.ini`).
     pub fn parse(text: &str) -> Result<Self, String> {
         let ini = Ini::parse(text)?;
         if !ini.has_section("attention") {
@@ -85,6 +144,8 @@ impl ExperimentConfig {
         let sim = SimSection {
             policy: ini.get("sim", "policy").map(|s| s.to_string()),
             backward: ini.get_parsed("sim", "backward")?.unwrap_or(false),
+            kernel: ini.get("sim", "kernel").map(|s| s.to_string()),
+            num_splits: ini.get_parsed("sim", "num_splits")?,
             generations: ini.get_parsed("sim", "generations")?,
             jitter_denom: ini.get_parsed("sim", "jitter_denom")?,
             launch_stagger: ini.get_parsed("sim", "launch_stagger")?,
@@ -99,11 +160,13 @@ impl ExperimentConfig {
         })
     }
 
+    /// Resolve the topology preset named by the file.
     pub fn topology(&self) -> Result<Topology, String> {
         presets::by_name(&self.topology)
             .ok_or_else(|| format!("unknown topology preset '{}'", self.topology))
     }
 
+    /// Build and validate the attention config from `[attention]`.
     pub fn attn(&self) -> Result<AttnConfig, String> {
         let a = &self.attention;
         let cfg = AttnConfig {
@@ -121,6 +184,32 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Which pass the file requests: the `sim.kernel` key, with the
+    /// legacy `sim.backward` flag as an alias for `kernel = "backward"`.
+    pub fn kernel(&self) -> Result<ExpKernel, String> {
+        let s = &self.sim;
+        match s.kernel.as_deref() {
+            None => Ok(if s.backward { ExpKernel::Backward } else { ExpKernel::Forward }),
+            Some("forward") => Ok(ExpKernel::Forward),
+            Some("backward") => Ok(ExpKernel::Backward),
+            Some("decode") => {
+                let ns = s
+                    .num_splits
+                    .ok_or("sim.num_splits required when sim.kernel = \"decode\"")?;
+                if ns == 0 {
+                    return Err("sim.num_splits must be >= 1".into());
+                }
+                Ok(ExpKernel::Decode(ns))
+            }
+            Some(other) => Err(format!(
+                "unknown sim.kernel '{other}' (expected forward, backward, or decode)"
+            )),
+        }
+    }
+
+    /// Build the sim config for one policy: kernel selection from
+    /// [`Self::kernel`], sampling from `generations`, then the knob
+    /// overrides.
     pub fn sim(&self, policy: Policy) -> Result<SimConfig, String> {
         let topo = self.topology()?;
         let s = &self.sim;
@@ -128,9 +217,21 @@ impl ExperimentConfig {
             Some(g) => SimConfig::sampled(policy, &topo, g),
             None => SimConfig::forward(policy),
         };
-        if s.backward {
-            cfg.kernel = KernelKind::BwdDkDv;
-            cfg.compute_overhead = SimConfig::backward(policy).compute_overhead;
+        match self.kernel()? {
+            ExpKernel::Forward => {}
+            ExpKernel::Backward => {
+                cfg.kernel = KernelKind::BwdDkDv;
+                cfg.compute_overhead = SimConfig::backward(policy).compute_overhead;
+            }
+            ExpKernel::Decode(num_splits) => {
+                // Decode grids are small: run them exactly, like
+                // `SimConfig::decode`. An oversized split count clamps
+                // to the shared bound so it can't schedule empty splits.
+                let num_splits = self.attn()?.clamp_num_splits(num_splits);
+                cfg.kernel = KernelKind::DecodeSplitKv { num_splits };
+                cfg.max_wg_completions = 0;
+                cfg.warmup_completions = 0;
+            }
         }
         if let Some(j) = s.jitter_denom {
             cfg.jitter_denom = j;
@@ -206,6 +307,150 @@ d_head = 64
         let c = ExperimentConfig::parse(toml).unwrap();
         assert_eq!(c.attn().unwrap().h_k, 8);
         assert_eq!(c.policies().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn decode_kernel_requires_num_splits() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 8
+n_ctx = 2048
+d_head = 64
+"#;
+        let with_splits = format!("{base}\n[sim]\nkernel = \"decode\"\nnum_splits = 4\n");
+        let c = ExperimentConfig::parse(&with_splits).unwrap();
+        assert_eq!(c.kernel().unwrap(), ExpKernel::Decode(4));
+        let sc = c.sim(Policy::SwizzledHeadFirst).unwrap();
+        assert_eq!(sc.kernel, KernelKind::DecodeSplitKv { num_splits: 4 });
+        assert_eq!(sc.max_wg_completions, 0, "decode runs exactly");
+
+        // Oversized split counts clamp to one KV column block per split.
+        let oversized = format!("{base}\n[sim]\nkernel = \"decode\"\nnum_splits = 512\n");
+        let c = ExperimentConfig::parse(&oversized).unwrap();
+        let sc = c.sim(Policy::NaiveHeadFirst).unwrap();
+        let blocks = c.attn().unwrap().num_col_blocks();
+        assert_eq!(sc.kernel, KernelKind::DecodeSplitKv { num_splits: blocks });
+
+        let missing = format!("{base}\n[sim]\nkernel = \"decode\"\n");
+        let c = ExperimentConfig::parse(&missing).unwrap();
+        assert!(c.kernel().is_err());
+        let zero = format!("{base}\n[sim]\nkernel = \"decode\"\nnum_splits = 0\n");
+        assert!(ExperimentConfig::parse(&zero).unwrap().kernel().is_err());
+        let bogus = format!("{base}\n[sim]\nkernel = \"prefill\"\n");
+        assert!(ExperimentConfig::parse(&bogus).unwrap().kernel().is_err());
+    }
+
+    #[test]
+    fn backward_flag_is_kernel_alias() {
+        let text = r#"
+[attention]
+batch = 1
+h_q = 8
+n_ctx = 2048
+d_head = 64
+
+[sim]
+backward = true
+"#;
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.kernel().unwrap(), ExpKernel::Backward);
+        let sc = c.sim(Policy::NaiveHeadFirst).unwrap();
+        assert_eq!(sc.kernel, KernelKind::BwdDkDv);
+    }
+
+    #[test]
+    fn example_experiment_file_stays_reconciled() {
+        // The reconciliation contract, enforced against the REAL example
+        // file: it must parse, and every key its reference block
+        // documents must be one this parser reads. A key added to the
+        // docs without parser support (or vice versa) fails here.
+        let text = include_str!("../../../examples/experiment.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        c.attn().unwrap();
+        assert_eq!(c.policies().unwrap().len(), 4);
+        let sc = c.sim(Policy::SwizzledHeadFirst).unwrap();
+        assert!(sc.max_wg_completions > 0); // generations = 2 applied
+        assert_eq!(sc.seed, 42);
+
+        let mut documented = 0;
+        for line in text.lines() {
+            // Reference-block entries look like `#   key ...`; prose,
+            // section headers, and continuation lines don't match the
+            // identifier shape.
+            let Some(rest) = line.strip_prefix("#   ") else { continue };
+            if rest.starts_with(' ') {
+                continue; // continuation line, not a key entry
+            }
+            let Some(key) = rest.split_whitespace().next() else { continue };
+            if key.is_empty() || !key.chars().all(|ch| ch.is_ascii_lowercase() || ch == '_') {
+                continue;
+            }
+            documented += 1;
+            assert!(
+                key == "topology" || ATTENTION_KEYS.contains(&key) || SIM_KEYS.contains(&key),
+                "examples/experiment.ini documents key '{key}' the parser does not read"
+            );
+        }
+        // The reference block must actually cover the full key set.
+        assert!(
+            documented >= 1 + ATTENTION_KEYS.len() + SIM_KEYS.len(),
+            "only {documented} keys documented in examples/experiment.ini"
+        );
+    }
+
+    #[test]
+    fn every_documented_key_is_parsed() {
+        // An experiment file exercising EVERY supported key must parse,
+        // and each value must land where the docs say (no
+        // silently-ignored keys). The documented key set itself is
+        // pinned by `example_experiment_file_stays_reconciled`.
+        let text = r#"
+topology = "quad_die"
+
+[attention]
+batch = 3
+h_q = 16
+h_k = 4
+n_ctx = 4096
+d_head = 64
+block_m = 64
+block_n = 32
+causal = true
+dtype_bytes = 4
+
+[sim]
+policy = "nhf"
+kernel = "forward"
+num_splits = 2
+generations = 3
+jitter_denom = 64
+launch_stagger = 10
+prefetch_depth = 1
+compute_efficiency = 0.5
+seed = 123
+"#;
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "quad_die");
+        let attn = c.attn().unwrap();
+        assert_eq!(
+            (attn.batch, attn.h_q, attn.h_k, attn.n_ctx, attn.d_head),
+            (3, 16, 4, 4096, 64)
+        );
+        assert_eq!((attn.block_m, attn.block_n), (64, 32));
+        assert!(attn.causal);
+        assert_eq!(attn.dtype_bytes, 4);
+        assert_eq!(c.policies().unwrap(), vec![Policy::NaiveHeadFirst]);
+        assert_eq!(c.kernel().unwrap(), ExpKernel::Forward);
+        assert_eq!(c.sim.num_splits, Some(2)); // parsed even when unused
+        let sc = c.sim(Policy::NaiveHeadFirst).unwrap();
+        assert!(sc.max_wg_completions > 0); // generations applied
+        assert_eq!(sc.jitter_denom, 64);
+        assert_eq!(sc.launch_stagger, 10);
+        assert_eq!(sc.prefetch_depth, 1);
+        assert_eq!(sc.compute_efficiency, 0.5);
+        assert_eq!(sc.seed, 123);
     }
 
     #[test]

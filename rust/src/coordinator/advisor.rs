@@ -4,6 +4,11 @@
 //! contribution surfaces as a first-class serving feature: the
 //! coordinator doesn't just run attention, it knows *how* the kernel
 //! should be scheduled for the shapes it is serving.
+//!
+//! For the decode regime (one query row per request) the advisor also
+//! picks the KV split count: [`pick_num_splits`] lifts the split-KV grid
+//! until it fills the device's workgroup slots, and [`advise_decode`]
+//! projects the mapping policies over the resulting two-phase pass.
 
 use crate::attn::AttnConfig;
 use crate::driver::{self, SimDriver, SimJob};
@@ -14,12 +19,17 @@ use crate::topology::Topology;
 /// Advisor output for one attention geometry.
 #[derive(Debug, Clone)]
 pub struct Advice {
+    /// The mapping policy the deployment should configure.
     pub recommended: Policy,
     /// (policy, projected aggregate L2 hit %, projected relative perf).
     pub projections: Vec<(Policy, f64, f64)>,
     /// True when the recommendation is degenerate (single XCD or fewer
     /// heads than XCDs — everything performs the same).
     pub indifferent: bool,
+    /// For decode advice: the KV split count the projections used
+    /// (chosen by [`pick_num_splits`] unless the caller fixed it).
+    /// `None` for prefill/backward advice.
+    pub num_splits: Option<usize>,
 }
 
 /// Simulate all applicable policies and rank them, using the process-wide
@@ -33,23 +43,83 @@ pub fn advise(topo: &Topology, cfg: &AttnConfig) -> Advice {
 /// [`advise`] through an explicit driver (tests and embedders that want
 /// their own cache or thread budget).
 pub fn advise_with(driver: &SimDriver, topo: &Topology, cfg: &AttnConfig) -> Advice {
-    let policies: Vec<Policy> = ALL_POLICIES
-        .iter()
-        .copied()
-        .filter(|p| !(p.requires_divisible_heads() && cfg.h_q % topo.num_xcds != 0))
-        .collect();
+    let policies = applicable_policies(topo, cfg);
     let jobs: Vec<SimJob> = policies
         .iter()
         .map(|&p| SimJob::forward(topo, cfg, SimConfig::sampled(p, topo, 2)))
         .collect();
     let reports = driver.run_all(jobs);
+    rank(topo, &policies, &reports, None)
+}
 
+/// Decode advisor: pick a KV split count for the geometry (unless the
+/// caller fixes one), project all applicable policies over the two-phase
+/// split-KV pass, and recommend. Uses the process-wide shared driver, so
+/// repeated decode advice on a known geometry is served from the report
+/// cache like [`advise`].
+pub fn advise_decode(topo: &Topology, cfg: &AttnConfig, num_splits: Option<usize>) -> Advice {
+    advise_decode_with(driver::global(), topo, cfg, num_splits)
+}
+
+/// [`advise_decode`] through an explicit driver.
+pub fn advise_decode_with(
+    driver: &SimDriver,
+    topo: &Topology,
+    cfg: &AttnConfig,
+    num_splits: Option<usize>,
+) -> Advice {
+    // Caller-fixed split counts obey the same bound pick_num_splits
+    // applies to its own choice.
+    let splits = cfg.clamp_num_splits(num_splits.unwrap_or_else(|| pick_num_splits(topo, cfg)));
+    let policies = applicable_policies(topo, cfg);
+    let jobs: Vec<SimJob> = policies
+        .iter()
+        .map(|&p| SimJob::decode(topo, cfg, SimConfig::decode(p, splits)))
+        .collect();
+    let reports = driver.run_all(jobs);
+    rank(topo, &policies, &reports, Some(splits))
+}
+
+/// KV split count for a decode geometry: the smallest power of two that
+/// lifts the phase-1 grid (batch × heads × splits) to at least the
+/// device's workgroup slot count — one query row per request leaves most
+/// XCDs idle otherwise — capped so every split still owns at least one
+/// KV column block.
+pub fn pick_num_splits(topo: &Topology, cfg: &AttnConfig) -> usize {
+    let target = topo.total_wg_slots();
+    let base = (cfg.batch * cfg.h_q).max(1);
+    let max_splits = cfg.num_col_blocks().max(1);
+    let mut splits = 1usize;
+    while base * splits < target && splits < max_splits {
+        splits *= 2;
+    }
+    cfg.clamp_num_splits(splits)
+}
+
+/// Policies whose swizzle arithmetic is applicable to this geometry —
+/// the one place the divisible-heads rule lives (the CLI and the
+/// advisor must agree on which policies run).
+pub fn applicable_policies(topo: &Topology, cfg: &AttnConfig) -> Vec<Policy> {
+    ALL_POLICIES
+        .iter()
+        .copied()
+        .filter(|p| !(p.requires_divisible_heads() && cfg.h_q % topo.num_xcds != 0))
+        .collect()
+}
+
+/// Rank projections by estimated time with a 2% noise band (steady-state
+/// sampling jitter); within the band prefer lower HBM traffic —
+/// replication is wasted power and bandwidth headroom even when
+/// latency-hidden.
+fn rank(
+    topo: &Topology,
+    policies: &[Policy],
+    reports: &[crate::sim::SimReport],
+    num_splits: Option<usize>,
+) -> Advice {
     let mut results: Vec<(Policy, f64, f64)> = Vec::new();
-    // Rank by estimated time with a 2% noise band (steady-state sampling
-    // jitter); within the band prefer lower HBM traffic — replication is
-    // wasted power and bandwidth headroom even when latency-hidden.
     let mut best: Option<(Policy, f64, u64)> = None;
-    for (&p, r) in policies.iter().zip(&reports) {
+    for (&p, r) in policies.iter().zip(reports) {
         results.push((p, r.l2_hit_pct(), r.est_total_sec));
         let better = match best {
             None => true,
@@ -75,6 +145,7 @@ pub fn advise_with(driver: &SimDriver, topo: &Topology, cfg: &AttnConfig) -> Adv
         recommended,
         projections,
         indifferent: topo.num_xcds == 1 || spread < 1.02,
+        num_splits,
     }
 }
 
@@ -119,6 +190,45 @@ mod tests {
             assert_eq!(a.1.to_bits(), b.1.to_bits());
             assert_eq!(a.2.to_bits(), b.2.to_bits());
         }
+    }
+
+    #[test]
+    fn pick_num_splits_fills_the_device() {
+        let topo = presets::mi300x(); // 304 WG slots
+        // Llama-3 70B decode, batch 1: 64 WGs without splitting.
+        let cfg = AttnConfig::gqa(1, 64, 8, 65536, 128);
+        let s = pick_num_splits(&topo, &cfg);
+        assert!(s.is_power_of_two());
+        assert!(cfg.batch * cfg.h_q * s >= topo.total_wg_slots(), "grid fills CUs");
+        assert_eq!(s, 8); // 64 -> 128 -> 256 -> 512 >= 304
+        // A large batch already fills the device: no splitting needed.
+        let big = AttnConfig::gqa(8, 64, 8, 65536, 128);
+        assert_eq!(pick_num_splits(&topo, &big), 1);
+        // Short contexts cap the split count at one column block each.
+        let short = AttnConfig::gqa(1, 8, 8, 256, 128); // 4 col blocks
+        assert!(pick_num_splits(&topo, &short) <= short.num_col_blocks());
+        // A caller-fixed oversized count is clamped the same way.
+        let a = advise_decode_with(&SimDriver::new(1), &topo, &short, Some(1000));
+        assert_eq!(a.num_splits, Some(short.num_col_blocks()));
+    }
+
+    #[test]
+    fn decode_advice_projects_all_policies_and_caches() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = AttnConfig::gqa(1, 16, 8, 4096, 128);
+        let a = advise_decode_with(&driver, &topo, &cfg, Some(2));
+        assert_eq!(a.num_splits, Some(2));
+        assert_eq!(a.projections.len(), 4);
+        assert!(a.projections.iter().any(|(p, _, _)| *p == a.recommended));
+        let runs = driver.cache().misses();
+        assert_eq!(runs, 4, "one decode pass per policy");
+        // Repeat advice with the same fixed split count is free.
+        let b = advise_decode_with(&driver, &topo, &cfg, Some(2));
+        assert_eq!(driver.cache().misses(), runs, "zero new engine runs");
+        assert_eq!(a.recommended, b.recommended);
+        // Prefill advice carries no split count.
+        assert_eq!(advise_with(&driver, &topo, &cfg).num_splits, None);
     }
 
     #[test]

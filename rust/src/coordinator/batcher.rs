@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 use crate::workload::Request;
 
 #[derive(Debug, Clone, Copy)]
+/// Batching policy: how large and how long a batch may grow.
 pub struct BatcherConfig {
     /// Max requests per released batch (per bucket).
     pub max_batch: usize,
@@ -25,7 +26,9 @@ impl Default for BatcherConfig {
 /// A released batch for one artifact bucket.
 #[derive(Debug)]
 pub struct Batch {
+    /// Artifact every request in this batch routes to.
     pub artifact: String,
+    /// The batched requests with their enqueue times.
     pub requests: Vec<(Request, Instant)>,
 }
 
@@ -42,11 +45,13 @@ pub struct BatcherCore {
 }
 
 impl BatcherCore {
+    /// An empty batcher with the given policy.
     pub fn new(cfg: BatcherConfig) -> Self {
         assert!(cfg.max_batch > 0);
         BatcherCore { cfg, pending: HashMap::new() }
     }
 
+    /// Requests currently waiting across all buckets.
     pub fn queued(&self) -> usize {
         self.pending.values().map(|p| p.queue.len()).sum()
     }

@@ -24,7 +24,10 @@ pub mod batcher;
 pub mod router;
 pub mod service;
 
-pub use advisor::{advise, advise_with, Advice};
+pub use advisor::{
+    advise, advise_decode, advise_decode_with, advise_with, applicable_policies, pick_num_splits,
+    Advice,
+};
 pub use batcher::{Batch, BatcherCore, BatcherConfig};
 pub use router::Router;
 pub use service::{AttentionService, ServiceConfig, ServiceMetrics, Waiter};

@@ -28,10 +28,12 @@ impl Router {
         Router { buckets }
     }
 
+    /// Number of context-length buckets.
     pub fn num_buckets(&self) -> usize {
         self.buckets.len()
     }
 
+    /// The bucket boundary lengths, ascending.
     pub fn bucket_lengths(&self) -> Vec<usize> {
         self.buckets.keys().copied().collect()
     }
@@ -56,7 +58,9 @@ impl Router {
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
+/// Why a request could not be routed.
 pub enum RouteError {
+    /// The request's context exceeds every bucket.
     TooLong { n_ctx: usize, max: usize },
 }
 

@@ -24,38 +24,56 @@ use super::router::Router;
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Directory holding `manifest.json` and the AOT artifacts.
     pub artifact_dir: std::path::PathBuf,
+    /// Batching policy (max batch size, max wait).
     pub batcher: BatcherConfig,
 }
 
 /// One served response.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The request id this response answers.
     pub id: u64,
+    /// Artifact the request executed through.
     pub artifact: String,
     /// abs-sum checksum of this request's output slice (verification).
     pub checksum: f64,
+    /// Time spent queued before its batch released.
     pub queue_wait: Duration,
+    /// PJRT execution time of the batch.
     pub exec_time: Duration,
     /// Requests co-executed in the same PJRT call.
     pub batch_size: usize,
 }
 
+/// Aggregate service counters and latency snapshots.
 #[derive(Debug, Default, Clone)]
 pub struct ServiceMetrics {
+    /// Requests accepted.
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Batches executed stacked through a batch-2 artifact.
     pub stacked_executions: u64,
+    /// Requests that failed.
     pub errors: u64,
+    /// Queue-wait latency distribution.
     pub queue_wait: LatencyHistogramSnapshot,
+    /// Execution latency distribution.
     pub exec: LatencyHistogramSnapshot,
 }
 
+/// Point-in-time summary of a latency histogram.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyHistogramSnapshot {
+    /// Samples recorded.
     pub count: u64,
+    /// Mean latency in microseconds.
     pub mean_us: f64,
+    /// 99th-percentile latency in microseconds.
     pub p99_us: u64,
+    /// Maximum latency in microseconds.
     pub max_us: u64,
 }
 
@@ -159,6 +177,7 @@ impl AttentionService {
         Ok(AttentionService { tx: Some(tx), router, metrics, worker: Some(worker) })
     }
 
+    /// The service's context-length router.
     pub fn router(&self) -> &Router {
         &self.router
     }
@@ -181,6 +200,7 @@ impl AttentionService {
         Ok(Waiter { rx })
     }
 
+    /// Snapshot the service counters and latency histograms.
     pub fn metrics(&self) -> ServiceMetrics {
         let m = self.metrics.lock().unwrap();
         ServiceMetrics {

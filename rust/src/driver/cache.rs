@@ -11,7 +11,9 @@ use super::SimJob;
 /// Snapshot of the cache's counters (CLI `--threads`/cache-stats output).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CacheCounters {
+    /// Cache hits served.
     pub hits: u64,
+    /// Misses (== engine runs performed).
     pub misses: u64,
     /// Reports currently memoized.
     pub entries: usize,
@@ -39,6 +41,7 @@ impl Default for ReportCache {
 }
 
 impl ReportCache {
+    /// An enabled, empty cache.
     pub fn new() -> Self {
         ReportCache {
             enabled: true,
@@ -54,10 +57,12 @@ impl ReportCache {
         ReportCache { enabled: false, ..Self::new() }
     }
 
+    /// False for the `--no-cache` pass-through instance.
     pub fn is_enabled(&self) -> bool {
         self.enabled
     }
 
+    /// Look a job up, counting the hit or miss.
     pub fn get(&self, job: &SimJob) -> Option<SimReport> {
         if !self.enabled {
             self.misses.inc();
@@ -72,6 +77,7 @@ impl ReportCache {
         found
     }
 
+    /// Memoize a report (no-op when disabled).
     pub fn insert(&self, job: SimJob, report: SimReport) {
         if self.enabled {
             self.inner.lock().unwrap().insert(job, report);
@@ -89,22 +95,27 @@ impl ReportCache {
         report
     }
 
+    /// Total cache hits.
     pub fn hits(&self) -> u64 {
         self.hits.get()
     }
 
+    /// Total misses (each one was an engine run).
     pub fn misses(&self) -> u64 {
         self.misses.get()
     }
 
+    /// Reports currently memoized.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().len()
     }
 
+    /// True when nothing is memoized.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Snapshot hits/misses/entries for stats output.
     pub fn counters(&self) -> CacheCounters {
         CacheCounters { hits: self.hits(), misses: self.misses(), entries: self.len() }
     }

@@ -39,36 +39,65 @@ use crate::attn::AttnConfig;
 use crate::sim::{self, SimConfig, SimReport};
 use crate::topology::Topology;
 
+/// Which multi-kernel composition a [`SimJob`] executes. Part of the
+/// memoization key: the same (topology, attention, sim config) simulated
+/// as a lone kernel vs. a two-phase pass are different reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimPass {
+    /// A single kernel run via [`sim::simulate`] (whatever
+    /// `sim.kernel` names — forward by convention).
+    Single,
+    /// Both backward kernels (dK/dV then dQ) via
+    /// [`sim::simulate_backward`].
+    Backward,
+    /// Split-KV decode plus its reduction via [`sim::simulate_decode`];
+    /// `sim.kernel` must be `DecodeSplitKv`.
+    Decode,
+}
+
 /// A fully-specified simulation request — the unit of work the driver
 /// schedules and the key the report cache memoizes on.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SimJob {
+    /// Topology the simulation runs on.
     pub topo: Topology,
+    /// Attention workload geometry.
     pub attn: AttnConfig,
+    /// Engine knobs (kernel, policy, sampling, seeds).
     pub sim: SimConfig,
-    /// Run both backward kernels (dK/dV then dQ) via
-    /// [`sim::simulate_backward`] instead of a single forward run.
-    pub backward: bool,
+    /// Single kernel, backward pair, or decode pair.
+    pub pass: SimPass,
 }
 
 impl SimJob {
     /// Forward-kernel job.
     pub fn forward(topo: &Topology, attn: &AttnConfig, sim: SimConfig) -> SimJob {
-        SimJob { topo: topo.clone(), attn: *attn, sim, backward: false }
+        SimJob { topo: topo.clone(), attn: *attn, sim, pass: SimPass::Single }
     }
 
     /// Combined backward-pass job (dK/dV + dQ).
     pub fn backward(topo: &Topology, attn: &AttnConfig, sim: SimConfig) -> SimJob {
-        SimJob { topo: topo.clone(), attn: *attn, sim, backward: true }
+        SimJob { topo: topo.clone(), attn: *attn, sim, pass: SimPass::Backward }
+    }
+
+    /// Combined decode-pass job (split-KV + reduction). `sim.kernel`
+    /// must be [`crate::attn::KernelKind::DecodeSplitKv`] (see
+    /// [`SimConfig::decode`]).
+    pub fn decode(topo: &Topology, attn: &AttnConfig, sim: SimConfig) -> SimJob {
+        debug_assert!(
+            matches!(sim.kernel, crate::attn::KernelKind::DecodeSplitKv { .. }),
+            "decode jobs require a DecodeSplitKv sim config"
+        );
+        SimJob { topo: topo.clone(), attn: *attn, sim, pass: SimPass::Decode }
     }
 
     /// Execute the job directly (no cache, no pool). The pool's workers
     /// call this through [`ReportCache::get_or_run`].
     pub fn run(&self) -> SimReport {
-        if self.backward {
-            sim::simulate_backward(&self.topo, &self.attn, &self.sim)
-        } else {
-            sim::simulate(&self.topo, &self.attn, &self.sim)
+        match self.pass {
+            SimPass::Single => sim::simulate(&self.topo, &self.attn, &self.sim),
+            SimPass::Backward => sim::simulate_backward(&self.topo, &self.attn, &self.sim),
+            SimPass::Decode => sim::simulate_decode(&self.topo, &self.attn, &self.sim),
         }
     }
 
@@ -125,8 +154,26 @@ mod tests {
         assert_eq!(jobs[0], jobs[0].clone());
         assert_ne!(jobs[0], jobs[1]); // policies differ
         assert_ne!(jobs[0].fingerprint(), jobs[1].fingerprint());
-        let bwd = SimJob { backward: true, ..jobs[0].clone() };
+        let bwd = SimJob { pass: SimPass::Backward, ..jobs[0].clone() };
         assert_ne!(jobs[0], bwd);
+    }
+
+    #[test]
+    fn decode_jobs_run_both_phases_and_memoize() {
+        let topo = tiny_topo();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 1024, 64) };
+        let sim = SimConfig::decode(Policy::SwizzledHeadFirst, 2);
+        let driver = SimDriver::new(2);
+        let job = SimJob::decode(&topo, &cfg, sim);
+        let first = driver.run_all(vec![job.clone()]);
+        assert_eq!(
+            first[0].simulated_wgs,
+            cfg.grid_size(crate::attn::KernelKind::DecodeSplitKv { num_splits: 2 })
+                + cfg.grid_size(crate::attn::KernelKind::DecodeReduce { num_splits: 2 })
+        );
+        let second = driver.run_all(vec![job]);
+        assert_eq!(driver.cache().hits(), 1, "repeat decode job served from cache");
+        assert_eq!(first[0].to_json().render(), second[0].to_json().render());
     }
 
     #[test]

@@ -68,10 +68,12 @@ impl SimDriver {
         SimDriver { tx: Mutex::new(Some(tx)), workers, threads, cache }
     }
 
+    /// Worker thread count.
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// The report cache jobs execute through.
     pub fn cache(&self) -> &ReportCache {
         &self.cache
     }

@@ -16,26 +16,32 @@ use crate::metrics::Table;
 use crate::roofline;
 use crate::sim::{gemm, SimConfig, SimReport};
 use crate::topology::Topology;
-use crate::workload::sweeps::{self, SweepPoint};
+use crate::workload::sweeps::{self, DecodePoint, SweepPoint};
 
 /// One x-axis point: metric value per policy.
 #[derive(Debug, Clone)]
 pub struct FigureRow {
+    /// The x-axis label (sweep-point identity).
     pub label: String,
+    /// Metric value per policy, in [`ALL_POLICIES`] order.
     pub values: Vec<(Policy, f64)>,
 }
 
 /// A regenerated figure: rows of (config, per-policy metric).
 #[derive(Debug, Clone)]
 pub struct FigureResult {
+    /// Stable figure id (`fig12` … `decode`, `gemm`).
     pub id: String,
+    /// Human-readable title.
     pub title: String,
     /// What the numbers mean (y-axis).
     pub metric: String,
+    /// One row per sweep point, in sweep order.
     pub rows: Vec<FigureRow>,
 }
 
 impl FigureResult {
+    /// Render as the aligned text table the CLI prints.
     pub fn render(&self) -> String {
         let mut headers: Vec<&str> = vec!["config"];
         let labels: Vec<&str> = self
@@ -113,10 +119,12 @@ fn backward_job(topo: &Topology, pt: &SweepPoint, policy: Policy) -> SimJob {
 
 /// Flat job list for a sweep: every point × every policy, point-major
 /// (so chunking results by `ALL_POLICIES.len()` recovers the rows).
-fn sweep_jobs(
+/// Generic over the point type so the prefill and decode sweeps share
+/// the one place this invariant lives.
+fn sweep_jobs<P>(
     topo: &Topology,
-    points: &[SweepPoint],
-    job: impl Fn(&Topology, &SweepPoint, Policy) -> SimJob,
+    points: &[P],
+    job: impl Fn(&Topology, &P, Policy) -> SimJob,
 ) -> Vec<SimJob> {
     let mut jobs = Vec::with_capacity(points.len() * ALL_POLICIES.len());
     for pt in points {
@@ -172,6 +180,13 @@ fn hit_rate_rows(driver: &SimDriver, topo: &Topology, points: &[SweepPoint]) -> 
         .zip(reports.chunks(ALL_POLICIES.len()))
         .map(|(pt, chunk)| row_from(pt, chunk, |r| r.l2_hit_pct()))
         .collect()
+}
+
+/// The exact-run decode job for one (decode point, policy) — phase 1
+/// (split-KV) plus phase 2 (reduction) merged by the driver's
+/// [`crate::sim::simulate_decode`] path.
+fn decode_job(topo: &Topology, pt: &DecodePoint, policy: Policy) -> SimJob {
+    SimJob::decode(topo, &pt.cfg, SimConfig::decode(policy, pt.num_splits))
 }
 
 /// Sweep subsetting for quick runs (CI) vs full paper grids.
@@ -262,6 +277,44 @@ pub fn fig16(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
     }
 }
 
+/// Decode figure (beyond the paper: the serving regime AMMA/FA2 split-KV
+/// target): aggregate L2 hit rates of the two-phase flash-decode pass on
+/// the GQA-8 sweep. Split counts are chosen so the KV split dimension
+/// does NOT divide evenly into the XCD round-robin (see
+/// [`sweeps::DECODE_SPLITS`]) — the regime where the mapping policy, not
+/// dispatch luck, decides whether a (kv head, split) stream is replicated
+/// across L2 domains.
+pub fn decode_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    let points = if quick {
+        sweeps::gqa8_decode_sweep(&[16 * 1024, 64 * 1024], &[1, 8], &sweeps::DECODE_SPLITS)
+    } else {
+        sweeps::gqa8_decode_sweep(
+            &sweeps::DECODE_N_CTX,
+            &sweeps::DECODE_BATCH,
+            &sweeps::DECODE_SPLITS,
+        )
+    };
+    let reports = driver.run_all(sweep_jobs(topo, &points, decode_job));
+    let rows = points
+        .iter()
+        .zip(reports.chunks(ALL_POLICIES.len()))
+        .map(|(pt, chunk)| FigureRow {
+            label: pt.label.clone(),
+            values: ALL_POLICIES
+                .iter()
+                .copied()
+                .zip(chunk.iter().map(|r| r.l2_hit_pct()))
+                .collect(),
+        })
+        .collect();
+    FigureResult {
+        id: "decode".into(),
+        title: "Split-KV decode aggregate L2 hit rates (GQA-8)".into(),
+        metric: "L2 hit rate (%), both phases merged".into(),
+        rows,
+    }
+}
+
 /// Regenerate every figure (the `numa-attn figure all` path) through one
 /// driver: the whole set is still submitted figure-by-figure, but each
 /// figure's grid fans out across the pool and repeated (point, policy)
@@ -274,6 +327,7 @@ pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult
         fig14(driver, topo, quick),
         fig15(driver, topo, quick),
         fig16(driver, topo, quick),
+        decode_fig(driver, topo, quick),
         gemm_motivation(topo),
     ]
 }
@@ -415,6 +469,26 @@ mod tests {
             assert_eq!(*p, want);
             assert_eq!(r.policy, want);
         }
+    }
+
+    #[test]
+    fn decode_fig_shf_at_least_nhf_and_thread_invariant() {
+        // The decode acceptance claims: (a) SwizzledHeadFirst's L2 hit
+        // rate is >= NaiveHeadFirst's on every GQA-8 decode row (NHF
+        // replicates each (kv head, split) stream across XCDs), and
+        // (b) the figure is byte-identical at 1 and 8 worker threads.
+        // Runs on the real MI300X topology: decode grids are small, and
+        // the 38-slot XCDs are what make the locality effect well-posed.
+        let topo = presets::mi300x();
+        let serial = decode_fig(&SimDriver::new(1), &topo, true);
+        assert_eq!(serial.rows.len(), 2 * 2 * 2);
+        for row in &serial.rows {
+            let shf = serial.value(&row.label, Policy::SwizzledHeadFirst).unwrap();
+            let nhf = serial.value(&row.label, Policy::NaiveHeadFirst).unwrap();
+            assert!(shf >= nhf, "{}: SHF {shf:.2}% < NHF {nhf:.2}%", row.label);
+        }
+        let parallel = decode_fig(&SimDriver::new(8), &topo, true);
+        assert_eq!(serial.to_json().render(), parallel.to_json().render());
     }
 
     #[test]

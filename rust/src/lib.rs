@@ -27,7 +27,12 @@
 //! * [`figures`] — one generator per paper table/figure (Figs. 12-16 ...)
 //! * [`runtime`] — PJRT CPU runtime executing AOT-compiled HLO artifacts
 //! * [`coordinator`] — the serving layer: router, batcher, workers
+//!   (including the mapping/split-count advisor)
 //! * [`metrics`] — counters/histograms and report formatting
+
+// Doc rot fails CI: every public item must carry a doc comment
+// (`cargo doc --no-deps` runs with RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
 
 pub mod attn;
 pub mod cache;
@@ -47,7 +52,7 @@ pub mod util;
 pub mod workload;
 
 pub use attn::AttnConfig;
-pub use driver::{ReportCache, SimDriver, SimJob};
+pub use driver::{ReportCache, SimDriver, SimJob, SimPass};
 pub use mapping::Policy;
 pub use sim::{SimConfig, SimReport};
 pub use topology::Topology;

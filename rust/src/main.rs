@@ -3,7 +3,8 @@
 //!
 //! Subcommands:
 //!   simulate  — run the chiplet simulator on one attention configuration
-//!   figure    — regenerate a paper figure (12..16, gemm, all)
+//!   decode    — run the two-phase split-KV decode pass (auto split count)
+//!   figure    — regenerate a paper figure (12..16, decode, gemm, all)
 //!   explain   — print Table-1 style topology specs and mapping layouts
 //!   verify    — check AOT artifacts against golden checksums
 //!   serve     — run deterministic requests through the coordinator
@@ -14,7 +15,7 @@ use std::str::FromStr;
 use std::sync::Arc;
 
 use numa_attn::attn::AttnConfig;
-use numa_attn::config::ExperimentConfig;
+use numa_attn::config::{self, ExperimentConfig};
 use numa_attn::coordinator::{self, BatcherConfig, ServiceConfig};
 use numa_attn::driver::{self, ReportCache, SimDriver, SimJob};
 use numa_attn::figures;
@@ -32,7 +33,9 @@ numa-attn — NUMA-aware attention scheduling on chiplet GPUs
 
 USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
-  numa-attn figure <12|13|14|15|16|gemm|all> [--topo T] [--quick] [--json]
+  numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
+                   [--num-splits S] [--policy P] [--json]
+  numa-attn figure <12|13|14|15|16|decode|gemm|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--artifacts DIR] [--requests N] [--max-batch B] [--max-wait-ms MS]
@@ -53,6 +56,13 @@ simulate flags:
   --backward           FA2 backward pass (dK/dV + dQ kernels)
   --generations G      steady-state sample size (0 = whole grid)
   --json               machine-readable output
+
+decode flags:
+  same geometry flags as simulate; the whole grid runs exactly.
+  --num-splits S       KV splits per (batch, head); 0 (default) lets the
+                       advisor pick the smallest power of two that fills
+                       the device's workgroup slots (chosen value goes to
+                       stderr; stdout stays row-stable)
 ";
 
 fn main() {
@@ -81,6 +91,7 @@ fn run() -> anyhow::Result<()> {
         .unwrap_or("");
     match cmd {
         "simulate" => cmd_simulate(&args),
+        "decode" => cmd_decode(&args),
         "figure" => cmd_figure(&args),
         "explain" => cmd_explain(&args),
         "verify" => cmd_verify(&args),
@@ -113,6 +124,29 @@ fn driver_arg(args: &Args) -> anyhow::Result<SimDriver> {
     Ok(SimDriver::with_cache(threads, cache))
 }
 
+/// Filter to the policies applicable to this geometry (the advisor's
+/// rule), printing a note for each one skipped.
+fn filter_applicable(
+    policies: Vec<Policy>,
+    topo: &numa_attn::topology::Topology,
+    attn: &AttnConfig,
+) -> Vec<Policy> {
+    let applicable = coordinator::applicable_policies(topo, attn);
+    policies
+        .into_iter()
+        .filter(|p| {
+            let ok = applicable.contains(p);
+            if !ok {
+                eprintln!(
+                    "note: skipping {} (heads {} not divisible by XCDs {})",
+                    p, attn.h_q, topo.num_xcds
+                );
+            }
+            ok
+        })
+        .collect()
+}
+
 /// Cache/thread statistics on stderr (stdout stays row-for-row stable).
 fn print_driver_stats(driver: &SimDriver) {
     let c = driver.cache().counters();
@@ -135,16 +169,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let exp = ExperimentConfig::parse(&text).map_err(a)?;
         let topo = exp.topology().map_err(a)?;
         let attn = exp.attn().map_err(a)?;
+        let kernel = exp.kernel().map_err(a)?;
+        let applicable = coordinator::applicable_policies(&topo, &attn);
         let mut jobs = Vec::new();
         for p in exp.policies().map_err(a)? {
-            if p.requires_divisible_heads() && attn.h_q % topo.num_xcds != 0 {
+            if !applicable.contains(&p) {
                 continue;
             }
             let sc = exp.sim(p).map_err(a)?;
-            jobs.push(if exp.sim.backward {
-                SimJob::backward(&topo, &attn, sc)
-            } else {
-                SimJob::forward(&topo, &attn, sc)
+            jobs.push(match kernel {
+                config::ExpKernel::Backward => SimJob::backward(&topo, &attn, sc),
+                config::ExpKernel::Decode(_) => SimJob::decode(&topo, &attn, sc),
+                config::ExpKernel::Forward => SimJob::forward(&topo, &attn, sc),
             });
         }
         let reports = driver.run_all(jobs);
@@ -175,11 +211,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         };
 
     let mut jobs = Vec::new();
-    for p in policies {
-        if p.requires_divisible_heads() && attn.h_q % topo.num_xcds != 0 {
-            eprintln!("note: skipping {} (heads {} not divisible by XCDs {})", p, attn.h_q, topo.num_xcds);
-            continue;
-        }
+    for p in filter_applicable(policies, &topo, &attn) {
         let mut sc = if backward { SimConfig::backward(p) } else { SimConfig::forward(p) };
         if generations > 0 {
             let sampled = SimConfig::sampled(p, &topo, generations);
@@ -192,6 +224,56 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             SimJob::forward(&topo, &attn, sc)
         });
     }
+    let reports = driver.run_all(jobs);
+    print_reports(args, reports)?;
+    print_driver_stats(&driver);
+    Ok(())
+}
+
+/// Run the two-phase split-KV decode pass (flash-decode) on one
+/// geometry: all four mapping policies unless `--policy` narrows it,
+/// with the KV split count auto-picked by the advisor unless
+/// `--num-splits` fixes it.
+fn cmd_decode(args: &Args) -> anyhow::Result<()> {
+    let a = |e: String| anyhow::anyhow!(e);
+    let driver = driver_arg(args)?;
+    let topo = topo_arg(args)?;
+    let heads: usize = args.get_or("heads", 64).map_err(a)?;
+    let attn = AttnConfig::gqa(
+        args.get_or("batch", 1).map_err(a)?,
+        heads,
+        args.get_or("kv-heads", heads).map_err(a)?,
+        args.get_or("n-ctx", 65536).map_err(a)?,
+        args.get_or("d-head", 128).map_err(a)?,
+    );
+    attn.validate().map_err(a)?;
+    let requested: usize = args.get_or("num-splits", 0).map_err(a)?;
+    let num_splits = if requested == 0 {
+        let s = coordinator::pick_num_splits(&topo, &attn);
+        eprintln!(
+            "[decode] auto num_splits = {s}: grid {} over {} WG slots",
+            attn.batch * attn.h_q * s,
+            topo.total_wg_slots()
+        );
+        s
+    } else {
+        let clamped = attn.clamp_num_splits(requested);
+        if clamped != requested {
+            eprintln!(
+                "note: clamping --num-splits {requested} to {clamped} ({} KV column blocks)",
+                attn.num_col_blocks()
+            );
+        }
+        clamped
+    };
+    let policies = match args.get::<String>("policy").map_err(a)? {
+        Some(p) => vec![Policy::from_str(&p).map_err(a)?],
+        None => ALL_POLICIES.to_vec(),
+    };
+    let jobs: Vec<SimJob> = filter_applicable(policies, &topo, &attn)
+        .into_iter()
+        .map(|p| SimJob::decode(&topo, &attn, SimConfig::decode(p, num_splits)))
+        .collect();
     let reports = driver.run_all(jobs);
     print_reports(args, reports)?;
     print_driver_stats(&driver);
@@ -237,6 +319,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "14" | "fig14" => vec![figures::fig14(&driver, &topo, quick)],
         "15" | "fig15" => vec![figures::fig15(&driver, &topo, quick)],
         "16" | "fig16" => vec![figures::fig16(&driver, &topo, quick)],
+        "decode" => vec![figures::decode_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
         "all" => figures::all(&driver, &topo, quick),
         other => anyhow::bail!("unknown figure '{other}'"),

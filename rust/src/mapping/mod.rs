@@ -35,6 +35,7 @@ pub enum Policy {
     SwizzledHeadFirst,
 }
 
+/// The four policies in the paper's presentation order.
 pub const ALL_POLICIES: [Policy; 4] = [
     Policy::NaiveBlockFirst,
     Policy::SwizzledBlockFirst,
@@ -43,6 +44,7 @@ pub const ALL_POLICIES: [Policy; 4] = [
 ];
 
 impl Policy {
+    /// Stable snake_case identifier (CLI/JSON).
     pub fn name(&self) -> &'static str {
         match self {
             Policy::NaiveBlockFirst => "naive_block_first",
@@ -103,14 +105,21 @@ pub fn chiplet_swizzle(wgid: usize, grid: usize, num_xcd: usize) -> usize {
 /// work items in O(1) with no allocation (the simulator hot path).
 #[derive(Debug, Clone, Copy)]
 pub struct Mapping {
+    /// The mapping strategy.
     pub policy: Policy,
+    /// Batch size (outermost grid dimension).
     pub batch: usize,
+    /// Query heads.
     pub heads: usize,
+    /// Block-dimension extent (row/column blocks or KV splits).
     pub blocks: usize,
+    /// XCDs the swizzle arithmetic targets.
     pub num_xcds: usize,
 }
 
 impl Mapping {
+    /// A mapping over an explicit grid geometry; rejects degenerate
+    /// dimensions and (for swizzled policies) indivisible head counts.
     pub fn new(
         policy: Policy,
         batch: usize,
@@ -139,6 +148,7 @@ impl Mapping {
         Self::new(policy, cfg.batch, cfg.h_q, cfg.blocks_for(kernel), num_xcds)
     }
 
+    /// Total dispatch slots.
     pub fn grid_size(&self) -> usize {
         self.batch * self.heads * self.blocks
     }
@@ -253,6 +263,46 @@ mod tests {
         // NBF spreads each group everywhere instead.
         let s = spread(Policy::NaiveBlockFirst, &cfg, 8);
         assert!(!s.perfectly_colocated());
+    }
+
+    #[test]
+    fn decode_grid_shf_confines_head_splits_to_one_xcd() {
+        // Split-KV decode: the block dimension is the KV split. SHF must
+        // keep every split of one head's KV stream on a single XCD
+        // (chunk = 1) so a head's partials never cross L2 domains.
+        let cfg = AttnConfig::gqa(2, 64, 8, 65536, 128);
+        for num_splits in [2usize, 4, 8] {
+            let kernel = KernelKind::DecodeSplitKv { num_splits };
+            let m = Mapping::for_kernel(Policy::SwizzledHeadFirst, &cfg, kernel, 8).unwrap();
+            assert_eq!(m.blocks, num_splits);
+            let s = AccSpread::measure(
+                &cfg,
+                8,
+                (0..m.grid_size()).map(|s| (m.decode(s), xcd_of_slot(s, 1, 8))),
+            );
+            assert!(s.perfectly_colocated(), "num_splits={num_splits}");
+        }
+    }
+
+    #[test]
+    fn decode_grid_nhf_replicates_group_streams() {
+        // The decode anti-invariant the figure quantifies: with splits
+        // not a multiple of the XCD count, NHF lands the same (kv head,
+        // split) stream on several XCDs.
+        let cfg = AttnConfig::gqa(1, 64, 8, 65536, 128);
+        let kernel = KernelKind::DecodeSplitKv { num_splits: 2 };
+        let m = Mapping::for_kernel(Policy::NaiveHeadFirst, &cfg, kernel, 8).unwrap();
+        let s = AccSpread::measure(
+            &cfg,
+            8,
+            (0..m.grid_size()).map(|s| (m.decode(s), xcd_of_slot(s, 1, 8))),
+        );
+        assert!(!s.perfectly_colocated());
+        // Python cross-check: every (batch, kv head) lands on 8 XCDs
+        // (4 per split — see python/tests/test_swizzle.py).
+        for (_, n) in &s.xcds_per_acc {
+            assert_eq!(*n, 8);
+        }
     }
 
     #[test]

@@ -30,9 +30,13 @@ struct Request {
 /// workgroups waiting on it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Completion {
+    /// The request's id.
     pub id: RequestId,
+    /// XCD whose L2 requested the fill.
     pub xcd: u32,
+    /// Tile key being filled.
     pub key: u64,
+    /// Fill size in bytes.
     pub bytes: u32,
 }
 
@@ -54,6 +58,7 @@ pub struct HbmStats {
 }
 
 impl HbmStats {
+    /// Mean queue depth over the run (contention indicator).
     pub fn avg_queue_depth(&self) -> f64 {
         if self.busy_ticks == 0 {
             0.0
@@ -82,6 +87,7 @@ pub struct HbmModel {
 }
 
 impl HbmModel {
+    /// An idle HBM model with the given bandwidth and base latency.
     pub fn new(bytes_per_tick: u64, latency_ticks: u64) -> Self {
         assert!(bytes_per_tick > 0);
         HbmModel {
@@ -95,10 +101,12 @@ impl HbmModel {
         }
     }
 
+    /// Accumulated traffic statistics.
     pub fn stats(&self) -> &HbmStats {
         &self.stats
     }
 
+    /// The modeled bandwidth budget per tick.
     pub fn bytes_per_tick(&self) -> u64 {
         self.bytes_per_tick
     }

@@ -11,6 +11,7 @@ use std::time::Duration;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// A zeroed counter.
     pub fn new() -> Self {
         Counter(AtomicU64::new(0))
     }
@@ -25,6 +26,7 @@ impl Counter {
         self.0.fetch_add(n, Ordering::Relaxed) + n
     }
 
+    /// Current count.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -47,10 +49,12 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         LatencyHistogram { buckets: vec![0; 32], count: 0, sum_us: 0, max_us: 0 }
     }
 
+    /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros() as u64;
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
@@ -60,10 +64,12 @@ impl LatencyHistogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean latency in microseconds.
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -72,6 +78,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Maximum recorded latency in microseconds.
     pub fn max_us(&self) -> u64 {
         self.max_us
     }
@@ -101,16 +108,19 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// Rows appended so far.
     pub fn num_rows(&self) -> usize {
         self.rows.len()
     }

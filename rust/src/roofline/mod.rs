@@ -13,41 +13,63 @@ use crate::topology::Topology;
 /// Roofline estimate for one kernel launch.
 #[derive(Debug, Clone, Copy)]
 pub struct Roofline {
+    /// Total FLOPs of the launch.
     pub total_flops: f64,
     /// HBM bytes with perfect per-device caching (each tensor once).
     pub ideal_bytes: f64,
     /// HBM bytes if every XCD streams its own copy of shared tensors
     /// (the replication worst case, e.g. Naive Head-first).
     pub replicated_bytes: f64,
+    /// Time at peak compute throughput.
     pub compute_sec: f64,
+    /// Time at peak HBM bandwidth with ideal caching.
     pub ideal_memory_sec: f64,
     /// min attainable time = max(compute, ideal memory).
     pub ideal_sec: f64,
+    /// Arithmetic intensity in FLOP/byte.
     pub intensity: f64,
+    /// True when intensity exceeds the machine balance point.
     pub compute_bound: bool,
 }
 
 /// Roofline for an attention kernel on a topology.
 pub fn attention_roofline(topo: &Topology, cfg: &AttnConfig, kernel: KernelKind) -> Roofline {
     let steps = crate::sim::avg_stream_len(cfg, kernel);
-    let (step_flops, grid) = match kernel {
-        KernelKind::Forward => (cfg.fwd_step_flops(), cfg.grid_size(kernel)),
-        KernelKind::BwdDkDv => (cfg.dkdv_step_flops(), cfg.grid_size(kernel)),
-        KernelKind::BwdDq => (cfg.dq_step_flops(), cfg.grid_size(kernel)),
-    };
+    let step_flops = cfg.step_flops_for(kernel);
+    let grid = cfg.grid_size(kernel);
     let total_flops = grid as f64 * step_flops * steps;
 
     let elt = cfg.dtype_bytes as f64;
     let q = (cfg.batch * cfg.h_q * cfg.n_ctx * cfg.d_head) as f64 * elt;
     let kv = 2.0 * (cfg.batch * cfg.h_k * cfg.n_ctx * cfg.d_head) as f64 * elt;
     let o = q;
+    let q_vec = (cfg.batch * cfg.h_q) as f64 * cfg.q_vec_bytes() as f64;
     let ideal_bytes = match kernel {
         KernelKind::Forward => q + kv + o,
+        // Decode phase 1: one query token per (batch, head); the KV
+        // stream dominates, plus the partial results written out.
+        KernelKind::DecodeSplitKv { num_splits } => {
+            let partials =
+                (cfg.batch * cfg.h_q * num_splits) as f64 * cfg.decode_partial_bytes() as f64;
+            kv + q_vec + partials
+        }
+        // Decode phase 2 never touches K/V: it re-reads the phase-1
+        // partials and writes the final output rows.
+        KernelKind::DecodeReduce { num_splits } => {
+            let partials =
+                (cfg.batch * cfg.h_q * num_splits) as f64 * cfg.decode_partial_bytes() as f64;
+            partials + q_vec
+        }
         // backward reads q, k, v, o(do), lse, delta and writes dq/dk/dv
-        _ => 3.0 * q + 2.0 * kv,
+        KernelKind::BwdDkDv | KernelKind::BwdDq => 3.0 * q + 2.0 * kv,
     };
-    let replicated_bytes = ideal_bytes
-        + (topo.num_xcds as f64 - 1.0) * kv.min(ideal_bytes);
+    // Replication worst case: every XCD streams its own copy of the
+    // shared K/V. The decode reduction has no shared tensors at all —
+    // each partial is read by exactly one WG — so it cannot replicate.
+    let replicated_bytes = match kernel {
+        KernelKind::DecodeReduce { .. } => ideal_bytes,
+        _ => ideal_bytes + (topo.num_xcds as f64 - 1.0) * kv.min(ideal_bytes),
+    };
 
     let compute_sec = total_flops / topo.device_flops_per_sec();
     let ideal_memory_sec = ideal_bytes / topo.hbm_bytes_per_sec;
@@ -78,6 +100,8 @@ pub struct KernelEstimate {
     pub step_flops: f64,
 }
 
+/// Estimate the Pallas kernel's VMEM footprint and MXU utilization
+/// from the BlockSpec tile shapes.
 pub fn kernel_estimate(cfg: &AttnConfig) -> KernelEstimate {
     let elt = cfg.dtype_bytes as u64;
     let (m, n, d) = (cfg.block_m as u64, cfg.block_n as u64, cfg.d_head as u64);
@@ -121,6 +145,26 @@ mod tests {
         let d128 = AttnConfig::mha(1, 128, 8192, 128);
         let d56 = AttnConfig::mha(1, 128, 8192, 56);
         assert!(d56.compute_efficiency_factor() < d128.compute_efficiency_factor());
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        // Split-KV decode reads the whole KV stream to produce a single
+        // token per (batch, head): intensity is ~2 FLOPs per KV element,
+        // far below the MI300X balance point.
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::gqa(1, 64, 8, 65536, 128);
+        let r = attention_roofline(&topo, &cfg, KernelKind::DecodeSplitKv { num_splits: 8 });
+        assert!(!r.compute_bound, "decode must be memory-bound");
+        assert!(r.intensity < topo.balance_flops_per_byte() / 10.0, "intensity {}", r.intensity);
+        assert!(r.total_flops > 0.0 && r.ideal_bytes > 0.0);
+        // The reduction only moves partials + output rows — orders of
+        // magnitude below phase 1's KV stream.
+        let red = attention_roofline(&topo, &cfg, KernelKind::DecodeReduce { num_splits: 8 });
+        assert!(red.ideal_bytes < r.ideal_bytes / 100.0, "{} vs {}", red.ideal_bytes, r.ideal_bytes);
+        // Per-WG-private partials cannot be replicated across XCDs.
+        assert_eq!(red.replicated_bytes, red.ideal_bytes);
+        assert!(r.replicated_bytes > r.ideal_bytes);
     }
 
     #[test]

@@ -51,18 +51,22 @@ impl Runtime {
         Ok(Runtime { loaded: HashMap::new(), manifest, dir })
     }
 
+    /// The parsed artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// The PJRT platform name (or the stub's placeholder).
     pub fn platform(&self) -> String {
         "stub (built without the `pjrt` feature)".to_string()
     }
 
+    /// True when the artifact has been loaded/compiled.
     pub fn is_loaded(&self, name: &str) -> bool {
         self.loaded.contains_key(name)
     }
 
+    /// Names of all loaded artifacts, sorted.
     pub fn loaded_names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.loaded.keys().cloned().collect();
         v.sort();

@@ -7,19 +7,26 @@ use anyhow::{anyhow, Context};
 
 use crate::util::json::Json;
 
+/// The parsed `artifacts/manifest.json`: the AOT artifact catalogue.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Schema version tag (must be `"hlo-text-v1"`).
     pub format: String,
+    /// Every artifact the manifest describes, in file order.
     pub artifacts: Vec<ArtifactMeta>,
 }
 
+/// Shape + dtype of one artifact input or output tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Element type name as emitted by the compiler (e.g. `"float32"`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count (product of the shape).
     pub fn num_elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -28,15 +35,25 @@ impl TensorSpec {
 /// Attention geometry of an `attn_fwd` artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AttnMeta {
+    /// Batch size Z.
     pub batch: usize,
+    /// Query heads.
     pub h_q: usize,
+    /// KV heads.
     pub h_k: usize,
+    /// Context length.
     pub n_ctx: usize,
+    /// Head dimension.
     pub d_head: usize,
+    /// Causal masking.
     pub causal: bool,
+    /// Q row-block size the kernel was compiled with.
     pub block_m: usize,
+    /// K/V column-block size the kernel was compiled with.
     pub block_n: usize,
+    /// Mapping policy name baked into the kernel grid.
     pub policy: String,
+    /// XCD count the swizzle was compiled for.
     pub num_xcd: usize,
 }
 
@@ -44,20 +61,33 @@ pub struct AttnMeta {
 /// deterministic inputs (`input_seeds` + runtime::inputs::det_input).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Golden {
+    /// Sum of absolute output values.
     pub abs_sum: f64,
+    /// Mean output value.
     pub mean: f64,
+    /// L2 norm of the output.
     pub l2: f64,
 }
 
+/// One AOT-compiled artifact: file location, I/O contract, and the
+/// attention/golden metadata when applicable.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Unique artifact name (the serving router's key).
     pub name: String,
+    /// Artifact kind tag (e.g. `"attn_fwd"`).
     pub kind: String,
+    /// HLO text file name, relative to the artifact directory.
     pub file: String,
+    /// Input tensor specs, in argument order.
     pub inputs: Vec<TensorSpec>,
+    /// Deterministic-input seeds, one per input.
     pub input_seeds: Vec<u64>,
+    /// Output tensor specs.
     pub outputs: Vec<TensorSpec>,
+    /// Attention geometry, for `attn_fwd` artifacts.
     pub attn: Option<AttnMeta>,
+    /// Golden statistics, when the oracle produced them.
     pub golden: Option<Golden>,
 }
 
@@ -151,6 +181,8 @@ fn artifact_from(j: &Json) -> anyhow::Result<ArtifactMeta> {
 }
 
 impl Manifest {
+    /// Parse a manifest from JSON text, validating the format tag and
+    /// every artifact's required fields.
     pub fn parse(text: &str) -> anyhow::Result<Self> {
         let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
         let format = j
@@ -169,6 +201,7 @@ impl Manifest {
         Ok(Manifest { format, artifacts })
     }
 
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> anyhow::Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -176,6 +209,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Look an artifact up by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -40,11 +40,13 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
+    /// A dispatcher over `mapping`'s grid with the given chunk size.
     pub fn new(mapping: Mapping, chunk: usize, num_xcds: usize) -> Self {
         assert!(chunk > 0 && num_xcds > 0);
         Dispatcher { mapping, chunk, num_xcds, issued: vec![0; num_xcds] }
     }
 
+    /// Total workgroups in the grid.
     pub fn grid_size(&self) -> usize {
         self.mapping.grid_size()
     }
@@ -54,6 +56,7 @@ impl Dispatcher {
         self.issued.iter().sum()
     }
 
+    /// Workgroups not yet dispatched.
     pub fn remaining(&self) -> usize {
         self.grid_size() - self.total_issued()
     }

@@ -95,6 +95,8 @@ impl Wg {
     }
 }
 
+/// The tick-level simulation engine for one kernel launch: per-XCD
+/// slots and L2s, the shared HBM queue, and the dispatcher.
 pub struct Engine {
     topo: Topology,
     attn: AttnConfig,
@@ -120,18 +122,22 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine for one (topology, workload, sim-config) triple.
+    /// Panics on invalid configs — the driver's job keys are validated
+    /// upstream.
     pub fn new(topo: Topology, attn: AttnConfig, sim: SimConfig) -> Self {
         topo.validate().expect("invalid topology");
         attn.validate().expect("invalid attention config");
+        if let KernelKind::DecodeSplitKv { num_splits } | KernelKind::DecodeReduce { num_splits } =
+            sim.kernel
+        {
+            assert!(num_splits > 0, "decode kernels require num_splits >= 1");
+        }
         let mapping = Mapping::for_kernel(sim.policy, &attn, sim.kernel, topo.num_xcds)
             .expect("invalid mapping");
         let dispatcher = Dispatcher::new(mapping, topo.dispatch_chunk, topo.num_xcds);
 
-        let step_flops = match sim.kernel {
-            KernelKind::Forward => attn.fwd_step_flops(),
-            KernelKind::BwdDkDv => attn.dkdv_step_flops(),
-            KernelKind::BwdDq => attn.dq_step_flops(),
-        };
+        let step_flops = attn.step_flops_for(sim.kernel);
         // compute_efficiency_factor models D_HEAD effects (MFMA K-granule
         // padding + softmax overhead — paper Sec. 4.5's D=56 slowdown).
         let cu_eff = topo.cu_flops_per_sec
@@ -205,6 +211,7 @@ impl Engine {
         u64::from(x % self.sim.jitter_denom == 0)
     }
 
+    /// Run to the completion target (or `max_ticks`) and report.
     pub fn run(mut self) -> SimReport {
         let exact = self.target == self.dispatcher.grid_size();
         let mut truncated = false;
@@ -471,11 +478,7 @@ impl Engine {
         };
         let est_total_sec = est_total_ticks * self.sec_per_tick;
 
-        let step_flops = match self.sim.kernel {
-            KernelKind::Forward => self.attn.fwd_step_flops(),
-            KernelKind::BwdDkDv => self.attn.dkdv_step_flops(),
-            KernelKind::BwdDq => self.attn.dq_step_flops(),
-        };
+        let step_flops = self.attn.step_flops_for(self.sim.kernel);
         let total_flops =
             grid as f64 * step_flops * avg_stream_len(&self.attn, self.sim.kernel);
 
@@ -610,6 +613,35 @@ mod tests {
             with.est_total_sec,
             without.est_total_sec
         );
+    }
+
+    #[test]
+    fn decode_conservation_and_access_math() {
+        // Split-KV decode: every WG completes; accesses = 1 Q-vector
+        // prologue read + 2 reads per streamed K/V tile, and the splits
+        // exactly partition each head's column blocks.
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(2, 8, 2048, 64) };
+        let num_splits = 4;
+        let sim = SimConfig::decode(Policy::SwizzledHeadFirst, num_splits);
+        let r = Engine::new(topo4(), cfg, sim).run();
+        let grid = cfg.grid_size(KernelKind::DecodeSplitKv { num_splits });
+        assert_eq!(r.simulated_wgs, grid);
+        let expected = grid as u64 + 2 * (cfg.batch * cfg.h_q * cfg.num_col_blocks()) as u64;
+        assert_eq!(r.l2.accesses(), expected);
+    }
+
+    #[test]
+    fn decode_reduce_conservation() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(2, 8, 2048, 64) };
+        let num_splits = 4;
+        let sim = SimConfig {
+            kernel: KernelKind::DecodeReduce { num_splits },
+            ..SimConfig::decode(Policy::SwizzledHeadFirst, num_splits)
+        };
+        let r = Engine::new(topo4(), cfg, sim).run();
+        assert_eq!(r.simulated_wgs, cfg.batch * cfg.h_q);
+        // 2 reads per split per WG, prologue reads nothing.
+        assert_eq!(r.l2.accesses(), (cfg.batch * cfg.h_q * num_splits * 2) as u64);
     }
 
     #[test]

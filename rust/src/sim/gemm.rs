@@ -47,7 +47,9 @@ impl Default for GemmConfig {
 /// Result of one GEMM replay.
 #[derive(Debug, Clone)]
 pub struct GemmReport {
+    /// Aggregate L2 statistics across XCDs.
     pub l2: CacheStats,
+    /// Total bytes fetched from HBM.
     pub hbm_bytes: u64,
 }
 

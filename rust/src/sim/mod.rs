@@ -2,7 +2,10 @@
 //! per-XCD L2 caches and a shared HBM bandwidth queue, under a chosen
 //! workgroup-mapping policy, and reports the metrics of the paper's
 //! evaluation — aggregate L2 hit rate (Fig. 13) and relative performance
-//! (Figs. 12/14/15/16).
+//! (Figs. 12/14/15/16). Beyond the paper's prefill/backward grids it also
+//! simulates the serving-side flash-decode pass ([`simulate_decode`]):
+//! the split-KV kernel plus its partial-result reduction, merged into one
+//! report (DESIGN.md §9).
 //!
 //! ## Fidelity model (DESIGN.md §7)
 //!
@@ -43,7 +46,9 @@ use crate::topology::Topology;
 /// memoization key ([`crate::driver::SimJob`]).
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
+    /// Which kernel grid is simulated.
     pub kernel: KernelKind,
+    /// Workgroup-mapping policy under test.
     pub policy: Policy,
     /// Stop after this many workgroup completions (0 = run whole grid).
     /// Sampled runs extrapolate steady-state throughput to the grid.
@@ -82,6 +87,7 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// Forward-kernel defaults (exact run of the whole grid).
     pub fn forward(policy: Policy) -> Self {
         SimConfig {
             kernel: KernelKind::Forward,
@@ -109,6 +115,7 @@ impl SimConfig {
         }
     }
 
+    /// Backward-pass defaults (dK/dV first; see [`simulate_backward`]).
     pub fn backward(policy: Policy) -> Self {
         SimConfig {
             kernel: KernelKind::BwdDkDv,
@@ -116,6 +123,17 @@ impl SimConfig {
             // backward pass; it is less memory-bound than the forward,
             // which is why the Fig. 16 speedups are modest (~1.10x).
             compute_overhead: 1.45,
+            ..Self::forward(policy)
+        }
+    }
+
+    /// Split-KV decode phase-1 config ([`KernelKind::DecodeSplitKv`]).
+    /// Decode grids are small (batch × heads × splits), so the whole grid
+    /// runs exactly — no steady-state sampling.
+    pub fn decode(policy: Policy, num_splits: usize) -> Self {
+        assert!(num_splits > 0, "decode requires num_splits >= 1");
+        SimConfig {
+            kernel: KernelKind::DecodeSplitKv { num_splits },
             ..Self::forward(policy)
         }
     }
@@ -162,8 +180,12 @@ impl std::hash::Hash for SimConfig {
 /// Simulation outcome: the quantities the paper's figures plot.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Policy the run was mapped with.
     pub policy: Policy,
+    /// Kernel simulated (the first phase's kernel for merged two-phase
+    /// reports: BwdDkDv for backward, DecodeSplitKv for decode).
     pub kernel: KernelKind,
+    /// Total workgroups in the grid (both phases for merged reports).
     pub grid_size: usize,
     /// Workgroups actually simulated (== grid_size for exact runs).
     pub simulated_wgs: usize,
@@ -179,6 +201,7 @@ pub struct SimReport {
     pub l2_stats_per_xcd: Vec<CacheStats>,
     /// Per-XCD L2 hit rates (derived from `l2_stats_per_xcd`).
     pub l2_hit_rate_per_xcd: Vec<f64>,
+    /// HBM traffic statistics.
     pub hbm: HbmStats,
     /// Workgroup completions per tick in the measured window.
     pub throughput_wgs_per_tick: f64,
@@ -203,7 +226,11 @@ impl SimReport {
         use crate::util::json::Json;
         Json::obj(vec![
             ("policy", Json::str(self.policy.name())),
-            ("kernel", Json::str(format!("{:?}", self.kernel))),
+            ("kernel", Json::str(self.kernel.name())),
+            (
+                "num_splits",
+                Json::num(self.kernel.num_splits().unwrap_or(0) as f64),
+            ),
             ("grid_size", Json::num(self.grid_size as f64)),
             ("simulated_wgs", Json::num(self.simulated_wgs as f64)),
             ("ticks", Json::num(self.ticks as f64)),
@@ -253,16 +280,43 @@ pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) ->
         SimConfig { kernel: KernelKind::BwdDq, ..*sim },
     )
     .run();
+    merge_two_phase(attn, dkdv, dq)
+}
 
-    let mut l2 = dkdv.l2;
-    l2.merge(&dq.l2);
-    // Merge per-XCD statistics from BOTH kernels (the dQ kernel sees the
-    // same XCDs; dropping it understated per-XCD traffic) and derive the
-    // combined per-XCD hit rates from the merged counts.
-    let l2_stats_per_xcd: Vec<CacheStats> = dkdv
+/// Run the flash-decode pass: the split-KV kernel (one WG per
+/// (batch, head, split)) followed by the partial-result reduction (one WG
+/// per (batch, head)), launched back-to-back like the backward kernels.
+/// The merged report carries both phases' traffic and per-XCD statistics;
+/// `sim.kernel` must be [`KernelKind::DecodeSplitKv`] (see
+/// [`SimConfig::decode`]).
+pub fn simulate_decode(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) -> SimReport {
+    let KernelKind::DecodeSplitKv { num_splits } = sim.kernel else {
+        panic!("simulate_decode requires a DecodeSplitKv sim config");
+    };
+    let split = Engine::new(topo.clone(), *attn, *sim).run();
+    let reduce = Engine::new(
+        topo.clone(),
+        *attn,
+        SimConfig { kernel: KernelKind::DecodeReduce { num_splits }, ..*sim },
+    )
+    .run();
+    merge_two_phase(attn, split, reduce)
+}
+
+/// Merge two sequentially-launched kernel phases into one report: traffic
+/// and per-XCD hit statistics are summed, times add, and throughput is
+/// total completions over total window ticks. The merged report keeps the
+/// FIRST phase's kernel/`sec_per_tick` as its identity.
+fn merge_two_phase(attn: &AttnConfig, first: SimReport, second: SimReport) -> SimReport {
+    let mut l2 = first.l2;
+    l2.merge(&second.l2);
+    // Merge per-XCD statistics from BOTH kernels (the second kernel sees
+    // the same XCDs; dropping it understated per-XCD traffic) and derive
+    // the combined per-XCD hit rates from the merged counts.
+    let l2_stats_per_xcd: Vec<CacheStats> = first
         .l2_stats_per_xcd
         .iter()
-        .zip(&dq.l2_stats_per_xcd)
+        .zip(&second.l2_stats_per_xcd)
         .map(|(a, b)| {
             let mut s = *a;
             s.merge(b);
@@ -270,54 +324,69 @@ pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) ->
         })
         .collect();
     let l2_hit_rate_per_xcd: Vec<f64> = l2_stats_per_xcd.iter().map(|s| s.hit_rate()).collect();
-    let mut hbm = dkdv.hbm;
-    hbm.bytes_read += dq.hbm.bytes_read;
-    hbm.requests += dq.hbm.requests;
-    hbm.mshr_merges += dq.hbm.mshr_merges;
-    hbm.busy_ticks += dq.hbm.busy_ticks;
-    hbm.queue_depth_sum += dq.hbm.queue_depth_sum;
-    hbm.bytes_written += dq.hbm.bytes_written;
+    let mut hbm = first.hbm;
+    hbm.bytes_read += second.hbm.bytes_read;
+    hbm.requests += second.hbm.requests;
+    hbm.mshr_merges += second.hbm.mshr_merges;
+    hbm.busy_ticks += second.hbm.busy_ticks;
+    hbm.queue_depth_sum += second.hbm.queue_depth_sum;
+    hbm.bytes_written += second.hbm.bytes_written;
 
-    // Combined throughput over both measured windows: each kernel's
-    // window completed `throughput * ticks` workgroups, so the merged
-    // rate is total completions over total window ticks.
-    let ticks = dkdv.ticks + dq.ticks;
-    let window_completions = dkdv.throughput_wgs_per_tick * dkdv.ticks as f64
-        + dq.throughput_wgs_per_tick * dq.ticks as f64;
+    // The phases normalize their ticks to different step FLOPs (a decode
+    // reduce tick is ~64x shorter than a split-KV tick), so raw tick
+    // counts are not commensurate: convert the second phase's window
+    // onto the FIRST phase's tick scale before summing. Merged ticks ×
+    // sec_per_tick then equals the combined window time, and the merged
+    // throughput is total completions over that combined window.
+    let scale = second.sec_per_tick / first.sec_per_tick;
+    let ticks = first.ticks + (second.ticks as f64 * scale).round() as u64;
+    let window_completions = first.throughput_wgs_per_tick * first.ticks as f64
+        + second.throughput_wgs_per_tick * second.ticks as f64;
     let throughput_wgs_per_tick = if ticks > 0 { window_completions / ticks as f64 } else { 0.0 };
 
-    let est_total_sec = dkdv.est_total_sec + dq.est_total_sec;
-    let total_flops = attn.grid_size(KernelKind::BwdDkDv) as f64
-        * attn.dkdv_step_flops()
-        * avg_stream_len(attn, KernelKind::BwdDkDv)
-        + attn.grid_size(KernelKind::BwdDq) as f64
-            * attn.dq_step_flops()
-            * avg_stream_len(attn, KernelKind::BwdDq);
+    let est_total_sec = first.est_total_sec + second.est_total_sec;
+    let total_flops = attn.grid_size(first.kernel) as f64
+        * attn.step_flops_for(first.kernel)
+        * avg_stream_len(attn, first.kernel)
+        + attn.grid_size(second.kernel) as f64
+            * attn.step_flops_for(second.kernel)
+            * avg_stream_len(attn, second.kernel);
     SimReport {
-        policy: sim.policy,
-        kernel: KernelKind::BwdDkDv,
-        grid_size: dkdv.grid_size + dq.grid_size,
-        simulated_wgs: dkdv.simulated_wgs + dq.simulated_wgs,
+        policy: first.policy,
+        kernel: first.kernel,
+        grid_size: first.grid_size + second.grid_size,
+        simulated_wgs: first.simulated_wgs + second.simulated_wgs,
         ticks,
-        sec_per_tick: dkdv.sec_per_tick,
+        sec_per_tick: first.sec_per_tick,
         l2,
         l2_stats_per_xcd,
         l2_hit_rate_per_xcd,
         hbm,
         throughput_wgs_per_tick,
-        est_total_ticks: dkdv.est_total_ticks + dq.est_total_ticks,
+        est_total_ticks: first.est_total_ticks + second.est_total_ticks * scale,
         est_total_sec,
         achieved_tflops: total_flops / est_total_sec / 1e12,
-        truncated: dkdv.truncated || dq.truncated,
+        truncated: first.truncated || second.truncated,
     }
 }
 
 /// Mean stream length over a kernel's workgroups (causal-aware).
 pub(crate) fn avg_stream_len(cfg: &AttnConfig, kernel: KernelKind) -> f64 {
+    match kernel {
+        // Decode is causal-insensitive: the query is the last token, so
+        // every split streams its full slice (exact mean — the balanced
+        // partition sums to num_col_blocks).
+        KernelKind::DecodeSplitKv { num_splits } => {
+            return cfg.num_col_blocks() as f64 / num_splits as f64;
+        }
+        KernelKind::DecodeReduce { num_splits } => return num_splits as f64,
+        _ => {}
+    }
     if !cfg.causal {
         return match kernel {
             KernelKind::Forward | KernelKind::BwdDq => cfg.num_col_blocks() as f64,
             KernelKind::BwdDkDv => cfg.num_row_blocks() as f64,
+            KernelKind::DecodeSplitKv { .. } | KernelKind::DecodeReduce { .. } => unreachable!(),
         };
     }
     // Causal: average over blocks (exact, mirrors trace::stream_bounds).
@@ -456,6 +525,78 @@ mod tests {
         let merged_accesses: u64 = r.l2_stats_per_xcd.iter().map(|s| s.accesses()).sum();
         let dkdv_accesses: u64 = dkdv.l2_stats_per_xcd.iter().map(|s| s.accesses()).sum();
         assert!(merged_accesses > dkdv_accesses);
+    }
+
+    #[test]
+    fn decode_combines_both_phases() {
+        let topo = tiny_topo();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 64) };
+        let sim = SimConfig::decode(Policy::SwizzledHeadFirst, 4);
+        let r = simulate_decode(&topo, &cfg, &sim);
+        let split_wgs = cfg.grid_size(KernelKind::DecodeSplitKv { num_splits: 4 });
+        let reduce_wgs = cfg.grid_size(KernelKind::DecodeReduce { num_splits: 4 });
+        assert_eq!(r.simulated_wgs, split_wgs + reduce_wgs);
+        assert_eq!(r.grid_size, split_wgs + reduce_wgs);
+        assert!(matches!(r.kernel, KernelKind::DecodeSplitKv { num_splits: 4 }));
+        assert!(r.achieved_tflops > 0.0);
+        assert!(r.throughput_wgs_per_tick > 0.0);
+        // Exact run, no warmup window: throughput == completions/ticks.
+        let expected = r.simulated_wgs as f64 / r.ticks as f64;
+        assert!((r.throughput_wgs_per_tick - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_merges_per_xcd_stats_from_both_phases() {
+        let topo = tiny_topo();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 64) };
+        let sim = SimConfig::decode(Policy::SwizzledHeadFirst, 4);
+        let split = simulate(&topo, &cfg, &sim);
+        let reduce = simulate(
+            &topo,
+            &cfg,
+            &SimConfig { kernel: KernelKind::DecodeReduce { num_splits: 4 }, ..sim },
+        );
+        let r = simulate_decode(&topo, &cfg, &sim);
+        assert_eq!(r.l2_stats_per_xcd.len(), topo.num_xcds);
+        for (x, merged) in r.l2_stats_per_xcd.iter().enumerate() {
+            let mut want = split.l2_stats_per_xcd[x];
+            want.merge(&reduce.l2_stats_per_xcd[x]);
+            assert_eq!(*merged, want, "XCD{x} merged stats");
+            assert!((r.l2_hit_rate_per_xcd[x] - want.hit_rate()).abs() < 1e-12);
+        }
+        // The reduction streams the partials phase 1 wrote: its accesses
+        // must be visible in the merged counts and its reads in HBM.
+        let merged_accesses: u64 = r.l2_stats_per_xcd.iter().map(|s| s.accesses()).sum();
+        let split_accesses: u64 = split.l2_stats_per_xcd.iter().map(|s| s.accesses()).sum();
+        assert!(merged_accesses > split_accesses);
+        assert_eq!(r.hbm.bytes_read, split.hbm.bytes_read + reduce.hbm.bytes_read);
+        assert_eq!(r.est_total_sec, split.est_total_sec + reduce.est_total_sec);
+    }
+
+    #[test]
+    fn decode_shf_beats_nhf_on_gqa8() {
+        // The decode locality claim (docs/REFERENCE.md): with GQA-8 on 8
+        // XCDs and a split count that is not a multiple of the XCD count,
+        // Naive Head-first replicates every (kv head, split) stream onto
+        // several XCDs while Swizzled Head-first keeps each on exactly
+        // one — so SHF's aggregate L2 hit rate must be at least NHF's.
+        let topo = presets::mi300x();
+        let cfg = AttnConfig::gqa(1, 64, 8, 16384, 128);
+        let shf = simulate_decode(&topo, &cfg, &SimConfig::decode(Policy::SwizzledHeadFirst, 2));
+        let nhf = simulate_decode(&topo, &cfg, &SimConfig::decode(Policy::NaiveHeadFirst, 2));
+        assert!(
+            shf.l2.hit_rate() >= nhf.l2.hit_rate(),
+            "SHF {:.3} vs NHF {:.3}",
+            shf.l2.hit_rate(),
+            nhf.l2.hit_rate()
+        );
+        // The replication is also visible as raw HBM read traffic.
+        assert!(
+            shf.hbm.bytes_read < nhf.hbm.bytes_read,
+            "SHF {} vs NHF {}",
+            shf.hbm.bytes_read,
+            nhf.hbm.bytes_read
+        );
     }
 
     #[test]

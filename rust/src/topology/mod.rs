@@ -79,6 +79,7 @@ impl Topology {
         self.device_flops_per_sec() / self.hbm_bytes_per_sec
     }
 
+    /// Check the architecture description for degenerate values.
     pub fn validate(&self) -> Result<(), String> {
         if self.num_xcds == 0 {
             return Err("num_xcds must be > 0".into());

@@ -6,6 +6,8 @@ use std::collections::{HashMap, HashSet};
 use std::str::FromStr;
 
 #[derive(Debug, Clone)]
+/// Parsed command line: positional args plus `--key value` /
+/// `--flag` options.
 pub struct Args {
     map: HashMap<String, String>,
     bools: HashSet<String>,
@@ -49,10 +51,12 @@ impl Args {
         Self::parse(&raw, bool_flags)
     }
 
+    /// True when the boolean flag was passed.
     pub fn has(&self, flag: &str) -> bool {
         self.bools.contains(flag)
     }
 
+    /// Parse an optional `--key value` option.
     pub fn get<T: FromStr>(&self, key: &str) -> Result<Option<T>, String>
     where
         T::Err: std::fmt::Display,
@@ -66,6 +70,7 @@ impl Args {
         }
     }
 
+    /// Parse `--key value` with a default.
     pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> Result<T, String>
     where
         T::Err: std::fmt::Display,
@@ -73,6 +78,7 @@ impl Args {
         Ok(self.get(key)?.unwrap_or(default))
     }
 
+    /// Parse a mandatory `--key value` option.
     pub fn require<T: FromStr>(&self, key: &str) -> Result<T, String>
     where
         T::Err: std::fmt::Display,
@@ -80,6 +86,7 @@ impl Args {
         self.get(key)?.ok_or_else(|| format!("missing required --{key}"))
     }
 
+    /// The positional (non-option) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.pos
     }

@@ -5,15 +5,22 @@
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
+/// Timing summary of one benchmark case.
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Iterations timed.
     pub iters: usize,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// One-line human-readable rendering.
     pub fn line(&self) -> String {
         format!(
             "{:<48} {:>10.3} ms/iter (min {:.3}, max {:.3}, n={})",
@@ -58,17 +65,20 @@ pub struct Harness {
 }
 
 impl Harness {
+    /// A named benchmark suite.
     pub fn new(title: &str) -> Self {
         println!("=== bench: {title} ===");
         Harness { results: Vec::new() }
     }
 
+    /// Time `f` for `iters` iterations and record the result.
     pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, f: F) {
         let r = bench(name, iters, Duration::from_secs(20), f);
         println!("{}", r.line());
         self.results.push(r);
     }
 
+    /// All recorded results.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -50,6 +50,7 @@ impl Hasher for MixHasher {
     }
 }
 
+/// BuildHasher for [`MixHasher`] (fingerprints, fast maps).
 pub type MixBuildHasher = BuildHasherDefault<MixHasher>;
 
 /// HashMap with the fast hasher.

@@ -5,12 +5,15 @@
 use std::collections::HashMap;
 
 #[derive(Debug, Clone, Default, PartialEq)]
+/// A parsed INI document: `(section, key) -> value` with quotes
+/// stripped; the pre-section prelude is section `""`.
 pub struct Ini {
     /// section -> key -> raw value string. Top-level keys live under "".
     sections: HashMap<String, HashMap<String, String>>,
 }
 
 impl Ini {
+    /// Parse INI text (comments `#`/`;`, `[sections]`, `key = value`).
     pub fn parse(text: &str) -> Result<Ini, String> {
         let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
         let mut current = String::new();
@@ -36,10 +39,12 @@ impl Ini {
         Ok(Ini { sections })
     }
 
+    /// Raw string value lookup.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
 
+    /// Typed value lookup (`None` when the key is absent).
     pub fn get_parsed<T: std::str::FromStr>(
         &self,
         section: &str,
@@ -57,6 +62,7 @@ impl Ini {
         }
     }
 
+    /// True when the section header appeared.
     pub fn has_section(&self, section: &str) -> bool {
         self.sections.contains_key(section)
     }

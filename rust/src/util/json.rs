@@ -4,19 +4,27 @@
 
 use std::fmt::Write as _;
 
+/// A JSON value tree.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, key order preserved.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
     // ----- accessors ---------------------------------------------------
 
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -24,6 +32,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -31,6 +40,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -38,14 +48,17 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if whole.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
 
+    /// The value as a usize, if a whole non-negative number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|n| n as usize)
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -53,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -62,24 +76,29 @@ impl Json {
 
     // ----- construction helpers ----------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(kvs: Vec<(&str, Json)>) -> Json {
         Json::Obj(kvs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from an iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a number.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
     // ----- parse --------------------------------------------------------
 
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(text: &str) -> Result<Json, String> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0 };
@@ -94,6 +113,8 @@ impl Json {
 
     // ----- write --------------------------------------------------------
 
+    /// Serialize to compact JSON text (deterministic: key order is
+    /// preserved, whole numbers render without a fraction).
     pub fn render(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -4,12 +4,16 @@
 use std::sync::mpsc;
 use std::time::Duration;
 
+/// Sending half: consumes itself on send.
 pub struct Sender<T>(mpsc::SyncSender<T>);
+/// Receiving half: blocks until the value (or disconnect) arrives.
 pub struct Receiver<T>(mpsc::Receiver<T>);
 
 #[derive(Debug, PartialEq, Eq)]
+/// The sender was dropped without sending.
 pub struct RecvError;
 
+/// A rendezvous channel for exactly one value.
 pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
     let (tx, rx) = mpsc::sync_channel(1);
     (Sender(tx), Receiver(rx))
@@ -30,6 +34,7 @@ impl<T> Receiver<T> {
         self.0.recv().map_err(|_| RecvError)
     }
 
+    /// Wait up to `timeout` for the value.
     pub fn wait_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
         self.0.recv_timeout(timeout).map_err(|_| RecvError)
     }

@@ -2,15 +2,19 @@
 //! workload generation, and the hand-rolled property tests.
 
 #[derive(Debug, Clone)]
+/// SplitMix64: a tiny deterministic PRNG (test-case generation,
+/// launch staggers).
 pub struct SplitMix64 {
     state: u64,
 }
 
 impl SplitMix64 {
+    /// Seeded generator.
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         mix(self.state)

@@ -5,9 +5,13 @@ use crate::attn::AttnConfig;
 /// A named model attention configuration (paper Table 3).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelPreset {
+    /// Preset name (Table 3 row).
     pub name: String,
+    /// Query heads.
     pub h_q: usize,
+    /// KV heads.
     pub h_k: usize,
+    /// Head dimension.
     pub d_head: usize,
     /// True for grouped-query attention.
     pub gqa: bool,
@@ -40,6 +44,7 @@ pub fn deepseek_v3() -> ModelPreset {
     ModelPreset { name: "deepseek-v3".into(), h_q: 128, h_k: 128, d_head: 56, gqa: false }
 }
 
+/// Preset lookup by name.
 pub fn by_name(name: &str) -> Option<ModelPreset> {
     match name {
         "llama3-8b" => Some(llama3_8b()),
@@ -50,6 +55,7 @@ pub fn by_name(name: &str) -> Option<ModelPreset> {
     }
 }
 
+/// Every model preset (Table 3).
 pub fn all() -> Vec<ModelPreset> {
     vec![llama3_8b(), llama3_70b(), llama3_405b(), deepseek_v3()]
 }

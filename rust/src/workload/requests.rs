@@ -6,6 +6,7 @@
 /// One attention prefill request.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
+    /// Unique request id.
     pub id: u64,
     /// Context length of the prompt (tokens).
     pub n_ctx: usize,
@@ -23,6 +24,7 @@ pub struct RequestGenerator {
 }
 
 impl RequestGenerator {
+    /// A deterministic generator over the given bucket lengths.
     pub fn new(seed: u64, lengths: Vec<usize>) -> Self {
         assert!(!lengths.is_empty());
         RequestGenerator { state: seed, next_id: 0, lengths }
@@ -36,6 +38,7 @@ impl RequestGenerator {
         z ^ (z >> 31)
     }
 
+    /// Generate the next request.
     pub fn next_request(&mut self) -> Request {
         let r = self.next_u64();
         let n_ctx = self.lengths[(r % self.lengths.len() as u64) as usize];
@@ -44,6 +47,7 @@ impl RequestGenerator {
         Request { id, n_ctx, seed: r | 1 }
     }
 
+    /// Generate `n` requests.
     pub fn take(&mut self, n: usize) -> Vec<Request> {
         (0..n).map(|_| self.next_request()).collect()
     }

@@ -1,4 +1,6 @@
-//! Experiment sweep builders matching the paper's evaluation grids.
+//! Experiment sweep builders matching the paper's evaluation grids, plus
+//! the serving-regime split-KV decode sweeps (batch × KV length × split
+//! count) the `decode` figure plots.
 
 use crate::attn::AttnConfig;
 
@@ -7,14 +9,41 @@ use super::presets;
 /// One point of a sweep, labeled for figure output.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Row label for figure output.
     pub label: String,
+    /// The point's attention geometry.
     pub cfg: AttnConfig,
 }
 
+/// One point of a decode sweep: a geometry plus its KV split count.
+#[derive(Debug, Clone)]
+pub struct DecodePoint {
+    /// Row label for figure output (model, batch, context, splits).
+    pub label: String,
+    /// Decode-shaped attention geometry (`n_ctx` = KV length served).
+    pub cfg: AttnConfig,
+    /// KV splits per (batch, head) — the split-KV grid's block dim.
+    pub num_splits: usize,
+}
+
+/// Paper Table 2 context lengths (MHA sensitivity grid).
 pub const TABLE2_N_CTX: [usize; 3] = [8 * 1024, 32 * 1024, 128 * 1024];
+/// Paper Table 2 batch sizes.
 pub const TABLE2_BATCH: [usize; 4] = [1, 2, 4, 8];
+/// Paper Table 2 query-head counts.
 pub const TABLE2_HEADS: [usize; 5] = [8, 16, 32, 64, 128];
+/// Paper Fig. 13 context lengths (adds the 2K short-context corner).
 pub const FIG13_N_CTX: [usize; 4] = [2 * 1024, 8 * 1024, 32 * 1024, 128 * 1024];
+/// Decode-sweep KV lengths: serving-regime contexts (16K-256K).
+pub const DECODE_N_CTX: [usize; 3] = [16 * 1024, 64 * 1024, 256 * 1024];
+/// Decode-sweep batch sizes (concurrent requests being generated).
+pub const DECODE_BATCH: [usize; 3] = [1, 4, 8];
+/// Decode-sweep split counts. Deliberately NOT multiples of the MI300X
+/// XCD count: when `num_splits % num_xcds == 0`, round-robin dispatch
+/// incidentally co-locates each (kv head, split) stream even under the
+/// naive head-first mapping, hiding the locality difference the sweep
+/// measures (see docs/REFERENCE.md).
+pub const DECODE_SPLITS: [usize; 2] = [2, 4];
 
 /// Paper Table 2: the MHA sensitivity grid (Figs. 12-13).
 /// D_HEAD = 128, BLOCK = 128x64.
@@ -83,6 +112,48 @@ pub fn backward_sweep(n_ctxs: &[usize], batches: &[usize]) -> Vec<SweepPoint> {
     out
 }
 
+/// Split-KV decode sweep over batch × KV length × split count for one
+/// model preset (one query token per (batch, head)).
+pub fn decode_sweep(
+    preset: &presets::ModelPreset,
+    n_ctxs: &[usize],
+    batches: &[usize],
+    splits: &[usize],
+) -> Vec<DecodePoint> {
+    let mut out = Vec::new();
+    for &n in n_ctxs {
+        for &b in batches {
+            for &s in splits {
+                out.push(DecodePoint {
+                    label: format!("{} B={b} N={} S={s}", preset.name, fmt_ctx(n)),
+                    cfg: preset.attn(b, n),
+                    num_splits: s,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The GQA-8 decode sweep (Llama-3 70B: H_Q=64, H_K=8) — the serving
+/// shape the `decode` figure plots.
+pub fn gqa8_decode_sweep(n_ctxs: &[usize], batches: &[usize], splits: &[usize]) -> Vec<DecodePoint> {
+    decode_sweep(&presets::llama3_70b(), n_ctxs, batches, splits)
+}
+
+/// MHA decode sweep (64 query heads, D=128) — the non-grouped control
+/// row for the decode experiments.
+pub fn mha_decode_sweep(n_ctxs: &[usize], batches: &[usize], splits: &[usize]) -> Vec<DecodePoint> {
+    let preset = presets::ModelPreset {
+        name: "mha-64".into(),
+        h_q: 64,
+        h_k: 64,
+        d_head: 128,
+        gqa: false,
+    };
+    decode_sweep(&preset, n_ctxs, batches, splits)
+}
+
 /// "8K" / "128K" style context-length labels (paper axis format).
 pub fn fmt_ctx(n: usize) -> String {
     if n % 1024 == 0 {
@@ -128,5 +199,42 @@ mod tests {
         assert_eq!(fmt_ctx(8192), "8K");
         assert_eq!(fmt_ctx(131072), "128K");
         assert_eq!(fmt_ctx(100), "100");
+    }
+
+    #[test]
+    fn ctx_labels_non_power_of_two() {
+        // Any multiple of 1024 gets the K suffix, even non-powers of two;
+        // everything else renders verbatim. Pinned because sweep labels
+        // are part of the figures' stable output.
+        assert_eq!(fmt_ctx(3 * 1024), "3K");
+        assert_eq!(fmt_ctx(48 * 1024), "48K");
+        assert_eq!(fmt_ctx(1536), "1536");
+        assert_eq!(fmt_ctx(1000), "1000");
+        assert_eq!(fmt_ctx(1), "1");
+        assert_eq!(fmt_ctx(1025), "1025");
+    }
+
+    #[test]
+    fn gqa8_decode_sweep_shape() {
+        let pts = gqa8_decode_sweep(&DECODE_N_CTX, &DECODE_BATCH, &DECODE_SPLITS);
+        assert_eq!(pts.len(), 3 * 3 * 2);
+        for p in &pts {
+            p.cfg.validate().unwrap();
+            assert_eq!(p.cfg.h_k, 8);
+            assert_eq!(p.cfg.h_q, 64);
+            assert!(p.num_splits > 0);
+            // Splits never exceed the KV column blocks at these lengths.
+            assert!(p.num_splits <= p.cfg.num_col_blocks());
+        }
+        let labels: std::collections::BTreeSet<_> = pts.iter().map(|p| p.label.clone()).collect();
+        assert_eq!(labels.len(), pts.len(), "decode labels unique");
+    }
+
+    #[test]
+    fn mha_decode_sweep_shape() {
+        for p in mha_decode_sweep(&[16384], &[1, 8], &[2]) {
+            assert_eq!(p.cfg.h_q, p.cfg.h_k);
+            assert_eq!(p.cfg.d_head, 128);
+        }
     }
 }

@@ -20,8 +20,8 @@ fn small_topo() -> Topology {
     }
 }
 
-/// A small sweep × all policies, forward and backward: 3 points × 4
-/// policies × 2 kernels = 24 jobs.
+/// A small sweep × all policies, forward, backward, and the two-phase
+/// decode pass: 3 points × 4 policies × 3 passes = 36 jobs.
 fn sweep_jobs() -> Vec<SimJob> {
     let topo = small_topo();
     let points = sweeps::mha_sensitivity(&[1024, 2048], &[1], &[4]);
@@ -32,6 +32,7 @@ fn sweep_jobs() -> Vec<SimJob> {
         for &p in &ALL_POLICIES {
             jobs.push(SimJob::forward(&topo, &cfg, SimConfig::forward(p)));
             jobs.push(SimJob::backward(&topo, &cfg, SimConfig::backward(p)));
+            jobs.push(SimJob::decode(&topo, &cfg, SimConfig::decode(p, 2)));
         }
     }
     jobs

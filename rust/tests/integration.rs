@@ -125,6 +125,58 @@ prefetch_depth = 2
 }
 
 #[test]
+fn decode_experiment_config_roundtrip() {
+    // The serving-regime decode workload end to end: INI file -> decode
+    // sim config -> two-phase simulation, on a scaled-down topology.
+    let text = r#"
+topology = "quad_die"
+
+[attention]
+batch = 1
+h_q = 16
+h_k = 4
+n_ctx = 8192
+d_head = 64
+
+[sim]
+policy = "shf"
+kernel = "decode"
+num_splits = 4
+"#;
+    let exp = ExperimentConfig::parse(text).unwrap();
+    assert_eq!(exp.kernel().unwrap(), numa_attn::config::ExpKernel::Decode(4));
+    let topo = exp.topology().unwrap();
+    let attn = exp.attn().unwrap();
+    let sc = exp.sim(Policy::SwizzledHeadFirst).unwrap();
+    let r = numa_attn::sim::simulate_decode(&topo, &attn, &sc);
+    // Phase 1: batch*h_q*splits WGs; phase 2: batch*h_q WGs.
+    assert_eq!(r.simulated_wgs, 16 * 4 + 16);
+    assert!(!r.truncated);
+    assert!(r.est_total_sec > 0.0);
+    // Decode streams the whole KV once in phase 1 at minimum.
+    assert!(r.hbm.bytes_read >= attn.kv_bytes_per_head() * attn.h_k as u64);
+}
+
+#[test]
+fn decode_advisor_fills_device_and_ranks() {
+    // The decode advisor picks a split count that fills the device and
+    // its recommendation is the best-ranked projection.
+    let topo = presets::mi300x();
+    let cfg = models::llama3_70b().attn(1, 16384);
+    let advice = numa_attn::coordinator::advise_decode(&topo, &cfg, None);
+    let splits = advice.num_splits.unwrap();
+    assert!(cfg.batch * cfg.h_q * splits >= topo.total_wg_slots());
+    assert!(splits <= cfg.num_col_blocks());
+    let best_rel = advice
+        .projections
+        .iter()
+        .map(|(_, _, rel)| *rel)
+        .fold(0.0f64, f64::max);
+    assert!(best_rel <= 1.0 + 1e-9);
+    assert!(advice.projections.iter().any(|(p, _, _)| *p == advice.recommended));
+}
+
+#[test]
 fn advisor_consistent_with_figures() {
     // The advisor's recommendation must be the best policy in the
     // corresponding figure row.

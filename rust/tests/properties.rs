@@ -65,6 +65,60 @@ fn prop_shf_never_splits_a_head() {
 }
 
 #[test]
+fn prop_decode_mapping_bijective() {
+    // Every policy is a bijection dispatch-slot <-> (batch, head, split)
+    // on the flash-decode grid, for arbitrary split counts (including
+    // splits that don't divide the column blocks or the XCD count).
+    let mut rng = SplitMix64::new(909);
+    for case in 0..200 {
+        let (b, h, _, x) = geometry(&mut rng);
+        let splits = 1 + rng.gen_range(16) as usize;
+        let p = policies(&mut rng);
+        let cfg = AttnConfig::mha(b, h, 128 * 32, 64);
+        let kernel = KernelKind::DecodeSplitKv { num_splits: splits };
+        let m = Mapping::for_kernel(p, &cfg, kernel, x).unwrap();
+        assert_eq!(m.grid_size(), b * h * splits);
+        let mut seen = vec![false; m.grid_size()];
+        for s in 0..m.grid_size() {
+            let w = m.decode(s);
+            assert!((w.b as usize) < splits, "split out of range");
+            let idx = ((w.z as usize * h) + w.h as usize) * splits + w.b as usize;
+            assert!(!seen[idx], "case {case}: duplicate {w:?} ({p}, {b}x{h}x{splits}/{x})");
+            seen[idx] = true;
+        }
+    }
+}
+
+#[test]
+fn prop_shf_decode_splits_never_leave_their_xcd() {
+    // SwizzledHeadFirst on the decode grid with chunk = 1 dispatch: all
+    // splits of one (batch, head) — hence all of its partial results —
+    // land on a single XCD.
+    let mut rng = SplitMix64::new(1010);
+    for case in 0..200 {
+        let (b, h, _, x) = geometry(&mut rng);
+        let splits = 1 + rng.gen_range(16) as usize;
+        let cfg = AttnConfig::mha(b, h, 128 * 32, 64);
+        let kernel = KernelKind::DecodeSplitKv { num_splits: splits };
+        let m = Mapping::for_kernel(Policy::SwizzledHeadFirst, &cfg, kernel, x).unwrap();
+        let mut head_xcd = vec![None; b * h];
+        for s in 0..m.grid_size() {
+            let w = m.decode(s);
+            let xcd = xcd_of_slot(s, 1, x);
+            let key = w.z as usize * h + w.h as usize;
+            match head_xcd[key] {
+                None => head_xcd[key] = Some(xcd),
+                Some(prev) => assert_eq!(
+                    prev, xcd,
+                    "case {case}: head {} split {} left its XCD ({b}x{h}x{splits}/{x})",
+                    w.h, w.b
+                ),
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_sbf_gqa_groups_colocated_when_groups_eq_xcds() {
     // Paper Sec. 4.4: SBF co-locates ACCs exactly when H_K == num XCDs.
     let mut rng = SplitMix64::new(303);

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Approximate missing_docs linter for offline development.
+
+Walks rust/src and flags public items (fn/struct/enum/trait/type/const/
+static, struct fields, variants of pub enums) that are not immediately
+preceded by a doc comment. `pub mod x;` declarations count as documented
+when the module file opens with `//!`. It mirrors rustc's `missing_docs`
+lint closely enough to burn warnings down without a toolchain; CI's
+`cargo doc` step (RUSTDOCFLAGS="-D warnings") is the source of truth.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ITEM = re.compile(
+    r"^(\s*)pub\s+(?:unsafe\s+|async\s+|extern\s+\"C\"\s+)*"
+    r"(fn|struct|enum|trait|type|const|static|mod)\s+([A-Za-z_][A-Za-z0-9_]*)"
+)
+FIELD = re.compile(r"^(\s*)pub\s+([a-z_][A-Za-z0-9_]*)\s*:")
+VARIANT = re.compile(r"^(\s+)([A-Z][A-Za-z0-9_]*)\s*(\{|\(|,|\s*=)")
+RESTRICTED = re.compile(r"^\s*pub\s*\(")
+
+
+def has_doc(lines, i):
+    j = i - 1
+    while j >= 0:
+        s = lines[j].strip()
+        if s.startswith("///"):
+            return True
+        if s.startswith("#["):
+            j -= 1
+            continue
+        return False
+    return False
+
+
+def mod_file_has_inner_docs(path, name):
+    for cand in (path.parent / f"{name}.rs", path.parent / name / "mod.rs",
+                 path.parent / path.stem / f"{name}.rs",
+                 path.parent / path.stem / name / "mod.rs"):
+        if cand.exists():
+            head = cand.read_text().lstrip()
+            return head.startswith("//!")
+    return False
+
+
+def main():
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else "rust/src")
+    problems = []
+    for path in sorted(root.rglob("*.rs")):
+        lines = path.read_text().splitlines()
+        depth = 0
+        exempt_stack = []
+        enum_regions = []  # (start_depth, active) for pub enums
+        in_pub_enum_depth = None
+        for i, line in enumerate(lines):
+            if re.match(r"^\s*#\[cfg\(test\)\]", line):
+                for k in range(i + 1, min(i + 3, len(lines))):
+                    if re.match(r"^\s*(pub\s+)?mod\s+\w+", lines[k]):
+                        exempt_stack.append(depth)
+                        break
+            opens = line.count("{") - line.count("}")
+            in_test = bool(exempt_stack)
+            if not in_test and not RESTRICTED.match(line):
+                m = ITEM.match(line)
+                f = FIELD.match(line)
+                if m:
+                    kind, name = m.group(2), m.group(3)
+                    documented = has_doc(lines, i)
+                    if kind == "mod" and line.rstrip().endswith(";"):
+                        documented = documented or mod_file_has_inner_docs(path, name)
+                    if not documented:
+                        problems.append(f"{path}:{i+1}: pub {kind} {name}")
+                    if kind == "enum" and "{" in line:
+                        in_pub_enum_depth = depth
+                elif f and not has_doc(lines, i):
+                    problems.append(f"{path}:{i+1}: pub field {f.group(2)}")
+                elif (
+                    in_pub_enum_depth is not None
+                    and depth == in_pub_enum_depth + 1
+                    and VARIANT.match(line)
+                    and not has_doc(lines, i)
+                ):
+                    problems.append(
+                        f"{path}:{i+1}: enum variant {VARIANT.match(line).group(2)}"
+                    )
+            depth += opens
+            if in_pub_enum_depth is not None and depth <= in_pub_enum_depth:
+                in_pub_enum_depth = None
+            if exempt_stack and depth <= exempt_stack[-1] and "}" in line:
+                exempt_stack.pop()
+    for p in problems:
+        print(p)
+    print(f"{len(problems)} potentially undocumented public items")
+
+
+if __name__ == "__main__":
+    main()
