@@ -18,10 +18,14 @@
 //! ```
 //!
 //! The full key set (attention blocks/causal/dtype, sim kernel selection
-//! incl. `kernel = "decode"` + `num_splits`, engine knobs) is documented
-//! in `examples/experiment.ini` and mirrored by [`ATTENTION_KEYS`] /
-//! [`SIM_KEYS`]; the `example_experiment_file_stays_reconciled` test
-//! pins that the example file and this parser stay reconciled.
+//! incl. `kernel = "decode"` + `num_splits`, engine knobs, and the
+//! `[serve]` decode-serving-loop section) is documented in
+//! `examples/experiment.ini` and mirrored by [`ATTENTION_KEYS`] /
+//! [`SIM_KEYS`] / [`SERVE_KEYS`]; the
+//! `example_experiment_file_stays_reconciled` test pins that the example
+//! file and this parser stay reconciled, and
+//! `example_serve_file_builds_the_serving_config` pins the worked
+//! serving scenario in `examples/serve.ini` (docs/SERVING.md).
 
 use crate::attn::{AttnConfig, KernelKind};
 use crate::mapping::Policy;
@@ -44,6 +48,16 @@ pub const SIM_KEYS: [&str; 10] = [
     "launch_stagger", "prefetch_depth", "compute_efficiency", "seed",
 ];
 
+/// Every `[serve]` key [`ExperimentConfig::parse`] reads — the decode
+/// serving loop's knobs (`numa-attn serve --config`, docs/SERVING.md).
+/// The served model geometry comes from `[attention]` (`n_ctx` is the
+/// KV capacity; `batch` is ignored — the per-step batch is the number of
+/// active sessions).
+pub const SERVE_KEYS: [&str; 8] = [
+    "arrival_per_sec", "prefill_lengths", "decode_tokens", "sessions", "max_active", "steps",
+    "kv_bucket", "seed",
+];
+
 /// Top-level experiment file.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -53,6 +67,8 @@ pub struct ExperimentConfig {
     pub attention: AttentionSection,
     /// `[sim]` section (optional keys).
     pub sim: SimSection,
+    /// `[serve]` section (decode serving loop; every key optional).
+    pub serve: ServeSection,
 }
 
 /// `[attention]` section: the workload geometry.
@@ -100,6 +116,29 @@ pub struct SimSection {
     /// Fraction of peak CU FLOPs the inner GEMMs achieve.
     pub compute_efficiency: Option<f64>,
     /// Jitter/stagger hash seed.
+    pub seed: Option<u64>,
+}
+
+/// `[serve]` section: the decode serving loop's traffic trace and loop
+/// knobs (every key optional; defaults from
+/// [`crate::coordinator::ServeConfig`]).
+#[derive(Debug, Clone, Default)]
+pub struct ServeSection {
+    /// Session arrival rate (sessions per simulated second).
+    pub arrival_per_sec: Option<f64>,
+    /// Comma-separated prompt-length mix, e.g. `"2048,8192"`.
+    pub prefill_lengths: Option<String>,
+    /// Comma-separated decode-budget mix, e.g. `"32,128"`.
+    pub decode_tokens: Option<String>,
+    /// Sessions in the trace.
+    pub sessions: Option<usize>,
+    /// Max concurrently decoding sessions (continuous-batch cap).
+    pub max_active: Option<usize>,
+    /// Decode-step budget.
+    pub steps: Option<usize>,
+    /// KV bucketing quantum (tokens).
+    pub kv_bucket: Option<usize>,
+    /// Trace seed.
     pub seed: Option<u64>,
 }
 
@@ -153,10 +192,21 @@ impl ExperimentConfig {
             compute_efficiency: ini.get_parsed("sim", "compute_efficiency")?,
             seed: ini.get_parsed("sim", "seed")?,
         };
+        let serve = ServeSection {
+            arrival_per_sec: ini.get_parsed("serve", "arrival_per_sec")?,
+            prefill_lengths: ini.get("serve", "prefill_lengths").map(|s| s.to_string()),
+            decode_tokens: ini.get("serve", "decode_tokens").map(|s| s.to_string()),
+            sessions: ini.get_parsed("serve", "sessions")?,
+            max_active: ini.get_parsed("serve", "max_active")?,
+            steps: ini.get_parsed("serve", "steps")?,
+            kv_bucket: ini.get_parsed("serve", "kv_bucket")?,
+            seed: ini.get_parsed("serve", "seed")?,
+        };
         Ok(ExperimentConfig {
             topology: ini.get("", "topology").unwrap_or("mi300x").to_string(),
             attention,
             sim,
+            serve,
         })
     }
 
@@ -258,6 +308,59 @@ impl ExperimentConfig {
             None => Ok(crate::mapping::ALL_POLICIES.to_vec()),
         }
     }
+
+    /// Build the decode serving loop configuration: model geometry from
+    /// `[attention]` (`n_ctx` = KV capacity, `batch` ignored), traffic
+    /// and loop knobs from `[serve]` with
+    /// [`crate::coordinator::ServeConfig`] defaults for absent keys.
+    pub fn serve_config(&self) -> Result<crate::coordinator::ServeConfig, String> {
+        let attn = self.attn()?;
+        let s = &self.serve;
+        let defaults = crate::coordinator::ServeConfig::default();
+        let cfg = crate::coordinator::ServeConfig {
+            h_q: attn.h_q,
+            h_k: attn.h_k,
+            d_head: attn.d_head,
+            block_m: attn.block_m,
+            block_n: attn.block_n,
+            causal: attn.causal,
+            dtype_bytes: attn.dtype_bytes,
+            kv_cap: attn.n_ctx,
+            kv_bucket: s.kv_bucket.unwrap_or(defaults.kv_bucket),
+            arrival_per_sec: s.arrival_per_sec.unwrap_or(defaults.arrival_per_sec),
+            prefill_lengths: match &s.prefill_lengths {
+                Some(list) => parse_usize_list("serve.prefill_lengths", list)?,
+                None => defaults.prefill_lengths,
+            },
+            decode_tokens: match &s.decode_tokens {
+                Some(list) => parse_usize_list("serve.decode_tokens", list)?,
+                None => defaults.decode_tokens,
+            },
+            sessions: s.sessions.unwrap_or(defaults.sessions),
+            max_active: s.max_active.unwrap_or(defaults.max_active),
+            max_steps: s.steps.unwrap_or(defaults.max_steps),
+            seed: s.seed.unwrap_or(defaults.seed),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Parse a comma-separated list of positive integers (the `[serve]`
+/// session-mix keys).
+fn parse_usize_list(what: &str, list: &str) -> Result<Vec<usize>, String> {
+    let out: Vec<usize> = list
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|e| format!("{what}: '{}': {e}", t.trim()))
+        })
+        .collect::<Result<_, _>>()?;
+    if out.is_empty() || out.contains(&0) {
+        return Err(format!("{what} must be a non-empty list of positive integers"));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -389,15 +492,66 @@ backward = true
             }
             documented += 1;
             assert!(
-                key == "topology" || ATTENTION_KEYS.contains(&key) || SIM_KEYS.contains(&key),
+                key == "topology"
+                    || ATTENTION_KEYS.contains(&key)
+                    || SIM_KEYS.contains(&key)
+                    || SERVE_KEYS.contains(&key),
                 "examples/experiment.ini documents key '{key}' the parser does not read"
             );
         }
         // The reference block must actually cover the full key set.
         assert!(
-            documented >= 1 + ATTENTION_KEYS.len() + SIM_KEYS.len(),
+            documented >= 1 + ATTENTION_KEYS.len() + SIM_KEYS.len() + SERVE_KEYS.len(),
             "only {documented} keys documented in examples/experiment.ini"
         );
+    }
+
+    #[test]
+    fn example_serve_file_builds_the_serving_config() {
+        // examples/serve.ini is the worked scenario docs/SERVING.md walks
+        // through; this pins that it parses and every [serve] key lands.
+        let text = include_str!("../../../examples/serve.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        let cfg = c.serve_config().unwrap();
+        assert_eq!((cfg.h_q, cfg.h_k, cfg.d_head), (64, 8, 128));
+        assert_eq!(cfg.kv_cap, 131072);
+        assert_eq!(cfg.kv_bucket, 4096);
+        assert_eq!(cfg.arrival_per_sec, 80.0);
+        assert_eq!(cfg.prefill_lengths, vec![2048, 8192]);
+        assert_eq!(cfg.decode_tokens, vec![32, 128]);
+        assert_eq!(cfg.sessions, 16);
+        assert_eq!(cfg.max_active, 8);
+        assert_eq!(cfg.max_steps, 1200);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn serve_section_defaults_and_list_errors() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        // No [serve] section: the coordinator defaults apply, with the
+        // geometry still taken from [attention].
+        let c = ExperimentConfig::parse(base).unwrap();
+        let cfg = c.serve_config().unwrap();
+        let defaults = crate::coordinator::ServeConfig::default();
+        assert_eq!(cfg.h_q, 16);
+        assert_eq!(cfg.kv_cap, 8192);
+        assert_eq!(cfg.max_active, defaults.max_active);
+        assert_eq!(cfg.prefill_lengths, defaults.prefill_lengths);
+
+        // Malformed list values are rejected with the key's name.
+        let bad = format!("{base}\n[serve]\nprefill_lengths = \"2048,zebra\"\n");
+        let err = ExperimentConfig::parse(&bad).unwrap().serve_config().unwrap_err();
+        assert!(err.contains("prefill_lengths"), "{err}");
+        let zero = format!("{base}\n[serve]\ndecode_tokens = \"0\"\n");
+        assert!(ExperimentConfig::parse(&zero).unwrap().serve_config().is_err());
     }
 
     #[test]

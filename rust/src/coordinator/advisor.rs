@@ -9,6 +9,13 @@
 //! picks the KV split count: [`pick_num_splits`] lifts the split-KV grid
 //! until it fills the device's workgroup slots, and [`advise_decode`]
 //! projects the mapping policies over the resulting two-phase pass.
+//!
+//! The decode serving loop ([`super::serve_decode`]) is the advisor's
+//! in-the-loop consumer: it re-consults [`advise_decode`] whenever a
+//! session's growing KV cache crosses a bucket boundary (or the active
+//! batch changes size), and because the projections run through the
+//! shared driver's report cache, re-advising a geometry the process has
+//! already seen costs zero engine runs (DESIGN.md §8).
 
 use crate::attn::AttnConfig;
 use crate::driver::{self, SimDriver, SimJob};

@@ -1,12 +1,20 @@
-//! Continuous batching core: groups routed requests per bucket and
-//! releases a batch when it is full or its oldest member has waited
-//! `max_wait`. Pure data structure (no tokio) so the policy is unit
-//! testable; `service.rs` drives it from the async loop.
+//! Batching cores for the two serving paths, both pure data structures
+//! so the policies are unit testable:
+//!
+//! * [`BatcherCore`] — wall-clock request batching for the live PJRT
+//!   service: groups routed requests per bucket and releases a batch
+//!   when it is full or its oldest member has waited `max_wait`
+//!   (`service.rs` drives it from the worker loop).
+//! * [`StepBatcher`] — *iteration-level* continuous batching for the
+//!   simulated decode serving loop ([`crate::coordinator::serve_decode`],
+//!   docs/SERVING.md): the active batch is re-formed every decode step
+//!   as sessions arrive and finish, vLLM-style, instead of holding a
+//!   batch together until every member completes.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
-use crate::workload::Request;
+use crate::workload::{Request, Session};
 
 #[derive(Debug, Clone, Copy)]
 /// Batching policy: how large and how long a batch may grow.
@@ -116,12 +124,178 @@ impl BatcherCore {
     }
 }
 
+/// A session admitted to the decode loop, with its generation progress.
+#[derive(Debug, Clone)]
+pub struct ActiveSession {
+    /// The admitted session.
+    pub session: Session,
+    /// Decode tokens generated so far.
+    pub generated: usize,
+}
+
+impl ActiveSession {
+    /// Current KV-cache length, clamped to the deployment's capacity.
+    pub fn kv_len(&self, kv_cap: usize) -> usize {
+        self.session.kv_len(self.generated, kv_cap)
+    }
+
+    /// True once the session has generated its full decode budget.
+    pub fn done(&self) -> bool {
+        self.generated >= self.session.decode_tokens
+    }
+}
+
+/// Iteration-level continuous batcher over simulated decode steps.
+///
+/// Holds the arrival-ordered backlog of not-yet-admitted sessions and the
+/// active set currently generating. Every decode step the serving loop
+/// (1) admits arrived sessions up to `max_active` ([`Self::admit`]),
+/// (2) reads the active set to form this step's kernel launches, and
+/// (3) calls [`Self::advance_step`] to emit one token per active session
+/// and retire the finished ones — freeing their slots for the next
+/// arrivals. No session ever waits for an unrelated session's completion,
+/// which is the continuous-batching property (docs/SERVING.md §3).
+#[derive(Debug)]
+pub struct StepBatcher {
+    max_active: usize,
+    backlog: VecDeque<Session>,
+    active: Vec<ActiveSession>,
+    completed: usize,
+}
+
+impl StepBatcher {
+    /// A batcher over an arrival-ordered trace (re-sorted defensively;
+    /// ties break on session id so the order is total and deterministic).
+    pub fn new(mut sessions: Vec<Session>, max_active: usize) -> Self {
+        assert!(max_active > 0, "max_active must be > 0");
+        sessions.sort_by(|a, b| {
+            a.arrival_sec.total_cmp(&b.arrival_sec).then(a.id.cmp(&b.id))
+        });
+        StepBatcher {
+            max_active,
+            backlog: sessions.into(),
+            active: Vec::new(),
+            completed: 0,
+        }
+    }
+
+    /// Admit every backlog session that has arrived by `now_sec`, oldest
+    /// first, until the active set reaches `max_active`. Returns the
+    /// newly admitted sessions (the serving loop charges their prefill).
+    pub fn admit(&mut self, now_sec: f64) -> Vec<Session> {
+        let mut newly = Vec::new();
+        while self.active.len() < self.max_active {
+            match self.backlog.front() {
+                Some(s) if s.arrival_sec <= now_sec => {
+                    let s = self.backlog.pop_front().unwrap();
+                    newly.push(s.clone());
+                    self.active.push(ActiveSession { session: s, generated: 0 });
+                }
+                _ => break,
+            }
+        }
+        newly
+    }
+
+    /// The sessions decoding this step, in admission order.
+    pub fn active(&self) -> &[ActiveSession] {
+        &self.active
+    }
+
+    /// Arrival time of the next backlog session (for jumping simulated
+    /// time across idle gaps), `None` when the backlog is drained.
+    pub fn next_arrival_sec(&self) -> Option<f64> {
+        self.backlog.front().map(|s| s.arrival_sec)
+    }
+
+    /// One decode step: every active session generates one token;
+    /// finished sessions retire, freeing their slots. Returns the number
+    /// of tokens emitted (the active count at entry).
+    pub fn advance_step(&mut self) -> usize {
+        let emitted = self.active.len();
+        for a in &mut self.active {
+            a.generated += 1;
+        }
+        let before = self.active.len();
+        self.active.retain(|a| !a.done());
+        self.completed += before - self.active.len();
+        emitted
+    }
+
+    /// Sessions retired so far.
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Sessions still waiting for admission.
+    pub fn backlog_len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    /// True once every session has been admitted and retired.
+    pub fn done(&self) -> bool {
+        self.backlog.is_empty() && self.active.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
         Request { id, n_ctx: 128, seed: id | 1 }
+    }
+
+    fn sess(id: u64, arrival: f64, decode: usize) -> Session {
+        Session { id, arrival_sec: arrival, prefill: 1024, decode_tokens: decode }
+    }
+
+    #[test]
+    fn step_batcher_admits_in_arrival_order_up_to_cap() {
+        let trace = vec![sess(0, 0.0, 4), sess(1, 0.0, 4), sess(2, 0.5, 4), sess(3, 9.0, 4)];
+        let mut b = StepBatcher::new(trace, 2);
+        let newly = b.admit(0.6);
+        assert_eq!(newly.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.active().len(), 2, "capacity caps admission");
+        assert_eq!(b.backlog_len(), 2);
+        assert_eq!(b.next_arrival_sec(), Some(0.5), "session 2 arrived but has no slot");
+        // Nothing new admitted while full.
+        assert!(b.admit(0.7).is_empty());
+    }
+
+    #[test]
+    fn step_batcher_continuous_refill_and_completion() {
+        let trace = vec![sess(0, 0.0, 2), sess(1, 0.0, 5), sess(2, 0.0, 5)];
+        let mut b = StepBatcher::new(trace, 2);
+        b.admit(0.0);
+        assert_eq!(b.advance_step(), 2); // ids 0, 1 emit a token each
+        assert_eq!(b.advance_step(), 2); // id 0 finishes here
+        assert_eq!(b.completed(), 1);
+        assert_eq!(b.active().len(), 1);
+        // The freed slot admits session 2 without waiting for session 1.
+        let newly = b.admit(0.0);
+        assert_eq!(newly.len(), 1);
+        assert_eq!(newly[0].id, 2);
+        let mut steps = 0;
+        while !b.done() {
+            b.advance_step();
+            b.admit(0.0);
+            steps += 1;
+            assert!(steps < 20, "loop must terminate");
+        }
+        assert_eq!(b.completed(), 3);
+        assert_eq!(b.advance_step(), 0, "idle steps emit nothing");
+    }
+
+    #[test]
+    fn step_batcher_kv_grows_per_token() {
+        let mut b = StepBatcher::new(vec![sess(0, 0.0, 3)], 1);
+        b.admit(0.0);
+        assert_eq!(b.active()[0].kv_len(1 << 20), 1024);
+        b.advance_step();
+        assert_eq!(b.active()[0].kv_len(1 << 20), 1025);
+        assert_eq!(b.active()[0].kv_len(1025), 1025);
+        assert_eq!(b.active()[0].kv_len(512), 512, "capacity clamp");
     }
 
     #[test]

@@ -1,9 +1,9 @@
-//! The serving coordinator (Layer 3): an async attention-prefill service
-//! over the PJRT runtime, in the style of a vLLM-like router/batcher —
-//! the deployment context the paper's optimization targets (prefill
-//! attention dominates long-context serving).
+//! The serving coordinator (Layer 3): the deployment context the paper's
+//! optimization targets, in two regimes (docs/SERVING.md is the
+//! end-to-end handbook):
 //!
-//! Request path (all Rust; Python ran once at build time):
+//! * **Live prefill path** — an async attention-prefill service over the
+//!   PJRT runtime, in the style of a vLLM-like router/batcher:
 //!
 //! ```text
 //! client -> Router (bucket by n_ctx -> artifact)
@@ -12,9 +12,19 @@
 //!        -> response (+ latency metrics)
 //! ```
 //!
-//! The [`advisor`] ties the serving layer back to the paper: for each
-//! bucket's attention geometry it recommends the mapping policy a real
-//! MI300X deployment should configure the kernel with, backed by a quick
+//! * **Decode serving loop** ([`serve_decode`]) — iteration-level
+//!   continuous batching over simulated decode steps: sessions arrive on
+//!   a seeded schedule, the [`batcher::StepBatcher`] re-forms the active
+//!   batch every step, each step is priced by simulator reports from the
+//!   shared driver's cache, and the advisor re-picks the KV split count
+//!   as caches grow across bucket boundaries. This is the regime that
+//!   dominates production traffic (decode over growing KV caches) and
+//!   the first consumer that exercises the report cache across hundreds
+//!   of related geometries in one run.
+//!
+//! The [`advisor`] ties both paths back to the paper: for each served
+//! attention geometry it recommends the mapping policy a real MI300X
+//! deployment should configure the kernel with, backed by a quick
 //! simulator projection executed through the shared simulation driver
 //! ([`crate::driver`]) — repeated advice on a geometry the coordinator
 //! has already seen is served from the driver's report cache.
@@ -28,6 +38,9 @@ pub use advisor::{
     advise, advise_decode, advise_decode_with, advise_with, applicable_policies, pick_num_splits,
     Advice,
 };
-pub use batcher::{Batch, BatcherCore, BatcherConfig};
+pub use batcher::{ActiveSession, Batch, BatcherCore, BatcherConfig, StepBatcher};
 pub use router::Router;
-pub use service::{AttentionService, ServiceConfig, ServiceMetrics, Waiter};
+pub use service::{
+    serve_decode, serve_decode_with, serve_report, serve_scenarios, AttentionService, ServeConfig,
+    ServeReport, ServeRow, ServeScenario, ServeStats, ServiceConfig, ServiceMetrics, Waiter,
+};

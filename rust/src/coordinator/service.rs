@@ -1,24 +1,45 @@
-//! The attention service: router + batcher + PJRT worker.
+//! The serving services, one per regime (docs/SERVING.md):
 //!
-//! Submissions enqueue immediately and return a [`Waiter`]; execution
-//! happens on a dedicated worker thread because PJRT execution is
-//! synchronous. Concurrent submissions therefore batch naturally. When a released batch
-//! contains 2+ requests and the manifest has a batch-2 variant of the
-//! bucket's artifact, requests are executed *stacked* through it —
-//! dynamic batching that actually changes the executed computation, not
-//! just the queueing.
+//! * **Live prefill service** ([`AttentionService`]): router + batcher +
+//!   PJRT worker. Submissions enqueue immediately and return a
+//!   [`Waiter`]; execution happens on a dedicated worker thread because
+//!   PJRT execution is synchronous. Concurrent submissions therefore
+//!   batch naturally. When a released batch contains 2+ requests and the
+//!   manifest has a batch-2 variant of the bucket's artifact, requests
+//!   are executed *stacked* through it — dynamic batching that actually
+//!   changes the executed computation, not just the queueing.
+//! * **Simulated decode serving loop** ([`serve_decode`]): the
+//!   iteration-level continuous-batching driver over the chiplet
+//!   simulator. Sessions arrive on a seeded Poisson-ish schedule, the
+//!   [`super::batcher::StepBatcher`] re-forms the active batch every
+//!   decode step, each step's kernel launches are priced by
+//!   [`crate::sim::SimReport`] tick costs obtained through the shared
+//!   simulation driver, and the advisor re-picks the KV split count
+//!   whenever a geometry is first seen (KV growth crossing a bucket
+//!   boundary, or the batch changing size). This is how the paper's
+//!   NUMA-aware mapping becomes the thing the service consults on every
+//!   decode step rather than an offline figure.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::util::oneshot;
 
-use crate::metrics::LatencyHistogram;
+use crate::attn::AttnConfig;
+use crate::driver::{self, SimDriver, SimJob};
+use crate::mapping::Policy;
+use crate::metrics::{percentile, LatencyHistogram, Table};
 use crate::runtime::{inputs, Runtime};
+use crate::sim::SimConfig;
+use crate::topology::Topology;
+use crate::util::json::Json;
+use crate::workload::SessionGenerator;
 use crate::workload::Request;
 
-use super::batcher::{Batch, BatcherConfig, BatcherCore};
+use super::advisor;
+use super::batcher::{Batch, BatcherConfig, BatcherCore, StepBatcher};
 use super::router::Router;
 
 /// Service configuration.
@@ -426,4 +447,616 @@ fn execute_stacked(
     let (ck_a, _, _) = inputs::stats(&out[..half]);
     let (ck_b, _, _) = inputs::stats(&out[half..]);
     Ok((ck_a, ck_b, r.elapsed))
+}
+
+// ---------------------------------------------------------------------
+// The simulated continuous-batching decode serving loop (docs/SERVING.md)
+// ---------------------------------------------------------------------
+
+/// Configuration of one decode serving run: the model geometry being
+/// served plus the traffic trace and loop knobs. Defaults model Llama-3
+/// 70B (GQA-8) under a moderate arrival rate; `examples/serve.ini` and
+/// the `[serve]` INI section ([`crate::config::SERVE_KEYS`]) override
+/// these per deployment.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Query heads of the served model.
+    pub h_q: usize,
+    /// KV heads of the served model (GQA; `h_q` for MHA).
+    pub h_k: usize,
+    /// Head dimension of the served model.
+    pub d_head: usize,
+    /// Q row-block size of the served kernels (`[attention] block_m`).
+    pub block_m: usize,
+    /// K/V column-block size of the served kernels (`[attention]
+    /// block_n` — also the granularity KV splits partition over).
+    pub block_n: usize,
+    /// Causal masking for the prefill kernels (decode is
+    /// causal-insensitive; the query is always the last token).
+    pub causal: bool,
+    /// Bytes per element (2 = bf16/fp16, 4 = fp32).
+    pub dtype_bytes: usize,
+    /// KV-cache capacity in tokens (sessions clamp to this — the
+    /// `[attention] n_ctx` key in serving INI files).
+    pub kv_cap: usize,
+    /// KV bucketing quantum: per-session KV lengths round up to the next
+    /// multiple of this for kernel-launch grouping and advisor keying.
+    pub kv_bucket: usize,
+    /// Session arrival rate (sessions per simulated second).
+    pub arrival_per_sec: f64,
+    /// Prompt-length mix, sampled uniformly per session.
+    pub prefill_lengths: Vec<usize>,
+    /// Decode-budget mix (tokens to generate), sampled uniformly.
+    pub decode_tokens: Vec<usize>,
+    /// Sessions in the trace.
+    pub sessions: usize,
+    /// Max sessions decoding concurrently (the continuous batch cap).
+    pub max_active: usize,
+    /// Decode-step budget: the loop stops (and marks the run truncated)
+    /// after this many steps even if sessions remain.
+    pub max_steps: usize,
+    /// Trace seed (arrivals and session mix draws).
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            h_q: 64,
+            h_k: 8,
+            d_head: 128,
+            block_m: 128,
+            block_n: 64,
+            causal: false,
+            dtype_bytes: 2,
+            kv_cap: 128 * 1024,
+            kv_bucket: 4096,
+            arrival_per_sec: 120.0,
+            prefill_lengths: vec![2048, 8192],
+            decode_tokens: vec![32, 128],
+            sessions: 16,
+            max_active: 8,
+            max_steps: 1200,
+            seed: 7,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Check the knobs are internally consistent (geometry validity,
+    /// non-empty mixes, positive rates and budgets).
+    pub fn validate(&self) -> Result<(), String> {
+        self.base_geometry().validate()?;
+        if self.kv_bucket == 0 || self.kv_cap == 0 {
+            return Err("kv_bucket/kv_cap must be > 0".into());
+        }
+        if self.arrival_per_sec.is_nan() || self.arrival_per_sec <= 0.0 {
+            return Err("arrival_per_sec must be > 0".into());
+        }
+        if self.prefill_lengths.is_empty() || self.decode_tokens.is_empty() {
+            return Err("prefill_lengths/decode_tokens must be non-empty".into());
+        }
+        if self.prefill_lengths.contains(&0) || self.decode_tokens.contains(&0) {
+            return Err("prefill_lengths/decode_tokens entries must be > 0".into());
+        }
+        if self.sessions == 0 {
+            return Err("sessions must be > 0".into());
+        }
+        if self.max_active == 0 || self.max_steps == 0 {
+            return Err("max_active/max_steps must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// The geometry of one kernel launch: `batch` sessions at context
+    /// `n_ctx`, with every `[attention]` knob (blocks, masking, dtype)
+    /// carried through — only `batch` from an experiment file is
+    /// replaced, by the live session count.
+    pub fn geometry(&self, batch: usize, n_ctx: usize) -> AttnConfig {
+        AttnConfig {
+            block_m: self.block_m,
+            block_n: self.block_n,
+            causal: self.causal,
+            dtype_bytes: self.dtype_bytes,
+            ..AttnConfig::gqa(batch, self.h_q, self.h_k, n_ctx, self.d_head)
+        }
+    }
+
+    /// The served model's geometry at full KV capacity and batch 1 —
+    /// the shape policy applicability is decided on.
+    pub fn base_geometry(&self) -> AttnConfig {
+        self.geometry(1, self.kv_cap)
+    }
+
+    /// Round a KV length up to the bucket the loop launches kernels at,
+    /// never past the KV capacity: a deployment cannot launch a longer
+    /// context than its cache holds, so the top bucket is `kv_cap`
+    /// itself even when the quantum does not divide it.
+    pub fn bucket_of(&self, kv_len: usize) -> usize {
+        (kv_len.max(1).div_ceil(self.kv_bucket) * self.kv_bucket).min(self.kv_cap.max(1))
+    }
+}
+
+/// Outcome of one serving run (one scenario × one mapping policy): the
+/// throughput and per-token latency a deployment configured with that
+/// policy would observe, in simulated time.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// The mapping policy every kernel launch in the run used.
+    pub policy: Policy,
+    /// Sessions that finished their full decode budget.
+    pub sessions_completed: usize,
+    /// Decode tokens emitted across all sessions.
+    pub tokens: u64,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Simulated time at the end of the run (includes idle gaps spent
+    /// waiting for arrivals).
+    pub sim_sec: f64,
+    /// Decode throughput: `tokens / sim_sec`.
+    pub tokens_per_sec: f64,
+    /// Median time-per-output-token over all emitted tokens (ms).
+    pub tpot_p50_ms: f64,
+    /// 99th-percentile time-per-output-token (ms).
+    pub tpot_p99_ms: f64,
+    /// Simulated time spent in prefill kernels (stalls decode — the
+    /// continuous-batching TPOT tax; see docs/SERVING.md §4).
+    pub prefill_sec: f64,
+    /// Times the advisor was (re-)consulted — once per distinct
+    /// (batch size, KV bucket) geometry the loop encountered.
+    pub advisor_consults: usize,
+    /// Distinct decode geometries the run launched.
+    pub distinct_geometries: usize,
+    /// True when the step budget ran out before the trace drained.
+    pub truncated: bool,
+}
+
+impl ServeStats {
+    /// JSON rendering (stable key order) for `serve --json` output and
+    /// the byte-identical determinism tests.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.name())),
+            ("sessions_completed", Json::num(self.sessions_completed as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("sim_sec", Json::num(self.sim_sec)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+            ("tpot_p50_ms", Json::num(self.tpot_p50_ms)),
+            ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
+            ("prefill_sec", Json::num(self.prefill_sec)),
+            ("advisor_consults", Json::num(self.advisor_consults as f64)),
+            ("distinct_geometries", Json::num(self.distinct_geometries as f64)),
+            ("truncated", Json::Bool(self.truncated)),
+        ])
+    }
+}
+
+/// One serving-report row: a scenario label plus the per-policy stats
+/// (in [`crate::mapping::ALL_POLICIES`] order, filtered to the policies
+/// applicable to the scenario's geometry).
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// Scenario label (arrival rate, batch cap, mix).
+    pub label: String,
+    /// One [`ServeStats`] per applicable policy.
+    pub stats: Vec<ServeStats>,
+}
+
+/// The full serving report the `serve` CLI subcommand emits: one row per
+/// sweep scenario, each comparing every applicable mapping policy.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Scenario rows in sweep order.
+    pub rows: Vec<ServeRow>,
+}
+
+impl ServeReport {
+    /// Aligned-table rendering (one table per scenario).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            let mut t = Table::new(&[
+                "policy",
+                "tokens/s",
+                "TPOT p50 (ms)",
+                "TPOT p99 (ms)",
+                "sessions",
+                "tokens",
+                "steps",
+                "re-advised",
+                "geoms",
+            ]);
+            for s in &row.stats {
+                t.row(vec![
+                    s.policy.label().into(),
+                    format!("{:.0}", s.tokens_per_sec),
+                    format!("{:.3}", s.tpot_p50_ms),
+                    format!("{:.3}", s.tpot_p99_ms),
+                    format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
+                    s.tokens.to_string(),
+                    s.steps.to_string(),
+                    s.advisor_consults.to_string(),
+                    s.distinct_geometries.to_string(),
+                ]);
+            }
+            out.push_str(&format!("== serve — {} ==\n{}", row.label, t.render()));
+        }
+        if self.rows.iter().any(|r| r.stats.iter().any(|s| s.truncated)) {
+            out.push_str("(* = step budget exhausted before the trace drained)\n");
+        }
+        out
+    }
+
+    /// JSON rendering for `serve --json` (stable row/policy order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "rows",
+            Json::arr(self.rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("label", Json::str(r.label.clone())),
+                    ("policies", Json::arr(r.stats.iter().map(ServeStats::to_json))),
+                ])
+            })),
+        )])
+    }
+
+    /// Stats for (row label, policy), for assertions in tests/benches.
+    pub fn stats(&self, label: &str, policy: Policy) -> Option<&ServeStats> {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)?
+            .stats
+            .iter()
+            .find(|s| s.policy == policy)
+    }
+}
+
+/// One serving sweep scenario: a label plus the loop configuration.
+#[derive(Debug, Clone)]
+pub struct ServeScenario {
+    /// Row label in the serving report / `serve` figure.
+    pub label: String,
+    /// The loop configuration the row runs (once per policy).
+    pub cfg: ServeConfig,
+}
+
+/// The serving sweep: Llama-3 70B (GQA-8) scenarios varying arrival rate,
+/// continuous-batch cap, and context mix. `quick` runs the two-scenario
+/// CI subset; the full sweep adds a wide-batch and a long-context row.
+pub fn serve_scenarios(quick: bool) -> Vec<ServeScenario> {
+    let base = ServeConfig::default();
+    let mut out = vec![
+        ServeScenario {
+            label: "llama3-70b arr=60/s cap=4".into(),
+            cfg: ServeConfig {
+                arrival_per_sec: 60.0,
+                max_active: 4,
+                sessions: 10,
+                ..base.clone()
+            },
+        },
+        ServeScenario {
+            label: "llama3-70b arr=120/s cap=8".into(),
+            cfg: ServeConfig { arrival_per_sec: 120.0, max_active: 8, ..base.clone() },
+        },
+    ];
+    if !quick {
+        out.push(ServeScenario {
+            label: "llama3-70b arr=120/s cap=16".into(),
+            cfg: ServeConfig {
+                arrival_per_sec: 120.0,
+                max_active: 16,
+                sessions: 32,
+                max_steps: 2400,
+                ..base.clone()
+            },
+        });
+        out.push(ServeScenario {
+            label: "llama3-70b long-ctx arr=60/s cap=8".into(),
+            cfg: ServeConfig {
+                arrival_per_sec: 60.0,
+                max_active: 8,
+                sessions: 12,
+                prefill_lengths: vec![16 * 1024, 64 * 1024],
+                decode_tokens: vec![64, 256],
+                max_steps: 2400,
+                ..base
+            },
+        });
+    }
+    out
+}
+
+/// Run the continuous-batching decode serving loop for one policy,
+/// through the process-wide shared driver ([`driver::global`]): repeated
+/// geometries — within the run and across policy runs — are priced from
+/// the memoized report cache, zero new engine runs.
+pub fn serve_decode(topo: &Topology, cfg: &ServeConfig, policy: Policy) -> ServeStats {
+    serve_decode_with(driver::global(), topo, cfg, policy)
+}
+
+/// [`serve_decode`] through an explicit driver (tests, CLI `--threads`).
+///
+/// The loop (docs/SERVING.md has the worked walk-through):
+/// 1. admit arrived sessions up to the batch cap, charging each one's
+///    prefill (a sampled forward-kernel report at its prompt length);
+/// 2. group the active set by bucketed KV length — each group is one
+///    split-KV decode launch whose split count comes from the advisor,
+///    re-consulted whenever the (batch, KV bucket) geometry is new;
+/// 3. advance simulated time by the step's summed `est_total_sec` and
+///    emit one token per active session (each gets the step duration as
+///    its TPOT sample);
+/// 4. retire finished sessions and loop until the trace drains or the
+///    step budget runs out.
+pub fn serve_decode_with(
+    driver: &SimDriver,
+    topo: &Topology,
+    cfg: &ServeConfig,
+    policy: Policy,
+) -> ServeStats {
+    cfg.validate().expect("valid serve config");
+    assert!(
+        advisor::applicable_policies(topo, &cfg.base_geometry()).contains(&policy),
+        "policy {policy} is not applicable to h_q={} on {} XCDs",
+        cfg.h_q,
+        topo.num_xcds
+    );
+    let mut gen = SessionGenerator::new(
+        cfg.seed,
+        cfg.arrival_per_sec,
+        cfg.prefill_lengths.clone(),
+        cfg.decode_tokens.clone(),
+    );
+    let mut batcher = StepBatcher::new(gen.take(cfg.sessions), cfg.max_active);
+
+    let mut now_sec = 0.0f64;
+    let mut prefill_sec = 0.0f64;
+    let mut tokens = 0u64;
+    let mut steps = 0usize;
+    let mut tpot_ms: Vec<f64> = Vec::new();
+    // (batch size, KV bucket) -> advised split count. A miss here IS the
+    // "KV crossed a bucket boundary / batch changed" re-advise event; the
+    // driver's report cache makes the advisor projections behind it free
+    // on repeats (DESIGN.md §8).
+    let mut advice: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    let mut consults = 0usize;
+
+    while steps < cfg.max_steps && !batcher.done() {
+        if batcher.active().is_empty() {
+            // Idle: jump simulated time forward to the next arrival.
+            match batcher.next_arrival_sec() {
+                Some(t) => now_sec = now_sec.max(t),
+                None => break,
+            }
+        }
+        let newly = batcher.admit(now_sec);
+        let mut step_sec = 0.0f64;
+        // Prefill charge for this step's admissions: prompts run as
+        // sampled forward kernels before decode resumes, so co-scheduled
+        // admissions stretch every active session's TPOT — the
+        // continuous-batching prefill tax.
+        if !newly.is_empty() {
+            let jobs: Vec<SimJob> = newly
+                .iter()
+                .map(|s| {
+                    let attn = cfg.geometry(1, s.prefill.clamp(1, cfg.kv_cap));
+                    SimJob::forward(topo, &attn, SimConfig::sampled(policy, topo, 2))
+                })
+                .collect();
+            for r in driver.run_all(jobs) {
+                prefill_sec += r.est_total_sec;
+                step_sec += r.est_total_sec;
+            }
+        }
+        // Iteration-level batch: group the active set by bucketed KV
+        // length; each group is one two-phase split-KV decode launch.
+        let mut groups: BTreeMap<usize, usize> = BTreeMap::new();
+        for a in batcher.active() {
+            *groups.entry(cfg.bucket_of(a.kv_len(cfg.kv_cap))).or_insert(0) += 1;
+        }
+        let mut jobs = Vec::with_capacity(groups.len());
+        for (&bucket, &count) in &groups {
+            let attn = cfg.geometry(count, bucket);
+            let splits = match advice.get(&(count, bucket)) {
+                Some(&s) => s,
+                None => {
+                    consults += 1;
+                    let a = advisor::advise_decode_with(driver, topo, &attn, None);
+                    let s = a.num_splits.unwrap_or(1);
+                    advice.insert((count, bucket), s);
+                    s
+                }
+            };
+            jobs.push(SimJob::decode(topo, &attn, SimConfig::decode(policy, splits)));
+        }
+        for r in driver.run_all(jobs) {
+            step_sec += r.est_total_sec;
+        }
+        now_sec += step_sec;
+        let emitted = batcher.advance_step();
+        tokens += emitted as u64;
+        tpot_ms.extend(std::iter::repeat(step_sec * 1e3).take(emitted));
+        steps += 1;
+    }
+
+    ServeStats {
+        policy,
+        sessions_completed: batcher.completed(),
+        tokens,
+        steps,
+        sim_sec: now_sec,
+        tokens_per_sec: if now_sec > 0.0 { tokens as f64 / now_sec } else { 0.0 },
+        tpot_p50_ms: percentile(&tpot_ms, 0.50),
+        tpot_p99_ms: percentile(&tpot_ms, 0.99),
+        prefill_sec,
+        advisor_consults: consults,
+        distinct_geometries: advice.len(),
+        truncated: !batcher.done(),
+    }
+}
+
+/// The full serving report: every sweep scenario run under every
+/// applicable mapping policy, through one driver — the report cache is
+/// shared across policies, scenarios, and the advisor's projections, so
+/// the hundreds of related geometries the sweep touches each simulate
+/// exactly once per policy.
+pub fn serve_report(driver: &SimDriver, topo: &Topology, quick: bool) -> ServeReport {
+    let rows = serve_scenarios(quick)
+        .into_iter()
+        .map(|sc| {
+            let policies = advisor::applicable_policies(topo, &sc.cfg.base_geometry());
+            let stats = policies
+                .into_iter()
+                .map(|p| serve_decode_with(driver, topo, &sc.cfg, p))
+                .collect();
+            ServeRow { label: sc.label, stats }
+        })
+        .collect();
+    ServeReport { rows }
+}
+
+#[cfg(test)]
+mod serve_tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn fast_topo() -> Topology {
+        Topology {
+            cus_per_xcd: 8,
+            l2_bytes_per_xcd: 1024 * 1024,
+            hbm_bytes_per_sec: 1.1e12,
+            ..presets::mi300x()
+        }
+    }
+
+    fn tiny_serve() -> ServeConfig {
+        ServeConfig {
+            h_q: 16,
+            h_k: 8,
+            d_head: 64,
+            kv_cap: 8192,
+            kv_bucket: 2048,
+            arrival_per_sec: 2000.0,
+            prefill_lengths: vec![1024, 2048],
+            decode_tokens: vec![4, 12],
+            sessions: 6,
+            max_active: 3,
+            max_steps: 200,
+            seed: 9,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn bucket_of_rounds_up_but_never_past_capacity() {
+        let cfg = ServeConfig { kv_cap: 10000, kv_bucket: 4096, ..tiny_serve() };
+        assert_eq!(cfg.bucket_of(1), 4096);
+        assert_eq!(cfg.bucket_of(4096), 4096);
+        assert_eq!(cfg.bucket_of(4097), 8192);
+        // The top bucket is the capacity itself, not a rounding past it.
+        assert_eq!(cfg.bucket_of(9000), 10000);
+        assert_eq!(cfg.bucket_of(10000), 10000);
+        // A quantum wider than the capacity still prices at capacity.
+        let wide = ServeConfig { kv_cap: 2048, kv_bucket: 4096, ..tiny_serve() };
+        assert_eq!(wide.bucket_of(100), 2048);
+    }
+
+    #[test]
+    fn serve_smoke_completes_the_trace() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let s = serve_decode_with(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        assert_eq!(s.sessions_completed, cfg.sessions);
+        assert!(!s.truncated);
+        // Token count equals the trace's summed decode budgets.
+        let trace = SessionGenerator::new(
+            cfg.seed,
+            cfg.arrival_per_sec,
+            cfg.prefill_lengths.clone(),
+            cfg.decode_tokens.clone(),
+        )
+        .take(cfg.sessions);
+        let want: u64 = trace.iter().map(|t| t.decode_tokens as u64).sum();
+        assert_eq!(s.tokens, want);
+        assert!(s.tokens_per_sec > 0.0);
+        assert!(s.sim_sec > 0.0);
+        assert!(s.prefill_sec > 0.0 && s.prefill_sec < s.sim_sec);
+        assert!(s.tpot_p50_ms > 0.0 && s.tpot_p50_ms <= s.tpot_p99_ms);
+        // Every distinct geometry consulted the advisor exactly once.
+        assert!(s.advisor_consults >= 1);
+        assert_eq!(s.advisor_consults, s.distinct_geometries);
+        // At least max_active steps ran (the trace has more tokens than
+        // any single batch can emit in one step).
+        assert!(s.steps >= (want as usize) / cfg.max_active);
+    }
+
+    #[test]
+    fn repeat_serve_run_is_engine_free() {
+        // The whole point of pricing steps through the shared driver: a
+        // second identical run re-plays every geometry from the report
+        // cache — zero new engine runs — and reproduces the stats
+        // byte-for-byte.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let first = serve_decode_with(&driver, &topo, &cfg, Policy::NaiveHeadFirst);
+        let misses = driver.cache().misses();
+        let second = serve_decode_with(&driver, &topo, &cfg, Policy::NaiveHeadFirst);
+        assert_eq!(driver.cache().misses(), misses, "zero new engine runs");
+        assert_eq!(first.to_json().render(), second.to_json().render());
+    }
+
+    #[test]
+    fn serve_kv_growth_crosses_buckets_and_readvises() {
+        // Sessions start below one bucket boundary and decode across it,
+        // so the loop must see (and advise) geometries in at least two
+        // KV buckets.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = ServeConfig {
+            prefill_lengths: vec![2040], // 8 tokens below the 2048 boundary
+            decode_tokens: vec![24],     // decodes well past it
+            sessions: 3,
+            max_active: 3,
+            ..tiny_serve()
+        };
+        let s = serve_decode_with(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        assert!(!s.truncated);
+        assert!(
+            s.distinct_geometries >= 2,
+            "KV growth must cross a bucket boundary (saw {} geometries)",
+            s.distinct_geometries
+        );
+    }
+
+    #[test]
+    fn serve_report_rows_cover_applicable_policies() {
+        let driver = SimDriver::new(4);
+        let topo = fast_topo();
+        // Shrink the sweep's scenarios to the tiny geometry for speed:
+        // exercise serve_report's plumbing, not the full llama sweep.
+        let rows: Vec<ServeRow> = vec![ServeRow {
+            label: "tiny".into(),
+            stats: advisor::applicable_policies(&topo, &tiny_serve().base_geometry())
+                .into_iter()
+                .map(|p| serve_decode_with(&driver, &topo, &tiny_serve(), p))
+                .collect(),
+        }];
+        let report = ServeReport { rows };
+        assert_eq!(report.rows[0].stats.len(), 4, "16 heads / 8 XCDs: all four apply");
+        let shf = report.stats("tiny", Policy::SwizzledHeadFirst).unwrap();
+        let nhf = report.stats("tiny", Policy::NaiveHeadFirst).unwrap();
+        assert!(
+            shf.tokens_per_sec >= nhf.tokens_per_sec,
+            "SHF {} < NHF {}",
+            shf.tokens_per_sec,
+            nhf.tokens_per_sec
+        );
+        let rendered = report.render();
+        assert!(rendered.contains("tokens/s"));
+        let json = report.to_json().render();
+        assert!(json.contains("\"tokens_per_sec\""));
+    }
 }

@@ -26,6 +26,14 @@
 //! The CLI exposes the pool via `--threads N` / `--no-cache`;
 //! [`global()`] provides the process-wide driver the serving advisor
 //! shares so repeated advice is O(1).
+//!
+//! The heaviest cache consumer is the continuous-batching decode serving
+//! loop ([`crate::coordinator::serve_decode`], DESIGN.md §10): every
+//! decode step prices its kernel launches through this cache, so a run
+//! touching hundreds of related (batch, KV-bucket) geometries performs
+//! one engine pass per distinct geometry per policy and answers every
+//! repeat — thousands of steps, plus the advisor's projections, plus the
+//! other policies' runs over the same trace — from memoized reports.
 
 mod cache;
 mod pool;

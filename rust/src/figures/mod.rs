@@ -315,6 +315,32 @@ pub fn decode_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureRes
     }
 }
 
+/// Serving figure (beyond the paper, DESIGN.md §10): decode throughput
+/// of the continuous-batching serving loop per mapping policy, one row
+/// per sweep scenario ([`crate::coordinator::serve_scenarios`]). The
+/// loop prices every step from simulator reports, so this figure is the
+/// end-to-end answer to "what does the paper's mapping buy a serving
+/// deployment": SwizzledHeadFirst's tokens/s is >= NaiveHeadFirst's on
+/// every row (asserted by `tests/serving_loop.rs` and the `serve_loop`
+/// bench). The richer per-policy report (TPOT percentiles, advisor
+/// consult counts) is `numa-attn serve`.
+pub fn serve_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    let report = crate::coordinator::serve_report(driver, topo, quick);
+    FigureResult {
+        id: "serve".into(),
+        title: "Continuous-batching decode serving throughput (Llama-3 70B GQA-8)".into(),
+        metric: "decode tokens/s over simulated time".into(),
+        rows: report
+            .rows
+            .iter()
+            .map(|row| FigureRow {
+                label: row.label.clone(),
+                values: row.stats.iter().map(|s| (s.policy, s.tokens_per_sec)).collect(),
+            })
+            .collect(),
+    }
+}
+
 /// Regenerate every figure (the `numa-attn figure all` path) through one
 /// driver: the whole set is still submitted figure-by-figure, but each
 /// figure's grid fans out across the pool and repeated (point, policy)
@@ -328,6 +354,7 @@ pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult
         fig15(driver, topo, quick),
         fig16(driver, topo, quick),
         decode_fig(driver, topo, quick),
+        serve_fig(driver, topo, quick),
         gemm_motivation(topo),
     ]
 }

@@ -26,8 +26,9 @@
 //! * [`workload`] — model presets (Llama-3, DeepSeek-V3) and paper sweeps
 //! * [`figures`] — one generator per paper table/figure (Figs. 12-16 ...)
 //! * [`runtime`] — PJRT CPU runtime executing AOT-compiled HLO artifacts
-//! * [`coordinator`] — the serving layer: router, batcher, workers
-//!   (including the mapping/split-count advisor)
+//! * [`coordinator`] — the serving layer: router, batcher, workers, the
+//!   mapping/split-count advisor, and the continuous-batching decode
+//!   serving loop ([`coordinator::serve_decode`], docs/SERVING.md)
 //! * [`metrics`] — counters/histograms and report formatting
 
 // Doc rot fails CI: every public item must carry a doc comment

@@ -1,15 +1,17 @@
 //! `numa-attn` CLI: the leader entrypoint for simulations, figure
-//! regeneration, artifact verification, and the serving demo.
+//! regeneration, artifact verification, and the serving loop.
 //!
 //! Subcommands:
 //!   simulate  — run the chiplet simulator on one attention configuration
 //!   decode    — run the two-phase split-KV decode pass (auto split count)
-//!   figure    — regenerate a paper figure (12..16, decode, gemm, all)
+//!   figure    — regenerate a paper figure (12..16, decode, serve, gemm, all)
 //!   explain   — print Table-1 style topology specs and mapping layouts
 //!   verify    — check AOT artifacts against golden checksums
-//!   serve     — run deterministic requests through the coordinator
+//!   serve     — run the continuous-batching decode serving loop
+//!               (docs/SERVING.md); `--live` runs the PJRT prefill demo
 //!
-//! Run `numa-attn <subcommand> --help` for flags.
+//! Run `numa-attn <subcommand> --help` for flags. The USAGE text below is
+//! pinned against README.md and the parsed flag set by `usage_tests`.
 
 use std::str::FromStr;
 use std::sync::Arc;
@@ -35,12 +37,14 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|gemm|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|gemm|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
-  numa-attn serve [--artifacts DIR] [--requests N] [--max-batch B] [--max-wait-ms MS]
+  numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
+  numa-attn serve --live [--artifacts DIR] [--requests N] [--max-batch B]
+                  [--max-wait-ms MS] [--seed S]
 
-driver flags (simulate, figure):
+driver flags (simulate, decode, figure, serve):
   all simulations execute through the shared driver (src/driver): a worker
   pool plus a memoizing report cache keyed on (topology, attention, sim
   config). Results are bit-identical at any worker count.
@@ -63,6 +67,14 @@ decode flags:
                        advisor pick the smallest power of two that fills
                        the device's workgroup slots (chosen value goes to
                        stderr; stdout stays row-stable)
+
+serve flags (the continuous-batching decode loop; docs/SERVING.md):
+  --quick              run the two-scenario CI sweep (default: full sweep)
+  --config FILE        serve ONE scenario from an experiment file's
+                       [serve] section instead of the built-in sweep
+  --live               run the live PJRT prefill demo instead (requires
+                       artifacts; uses --artifacts/--requests/--max-batch/
+                       --max-wait-ms/--seed)
 ";
 
 fn main() {
@@ -78,8 +90,9 @@ fn run() -> anyhow::Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&raw, &["causal", "backward", "quick", "json", "help", "no-cache"])
-        .map_err(|e| anyhow::anyhow!(e))?;
+    let args =
+        Args::parse(&raw, &["causal", "backward", "quick", "json", "help", "no-cache", "live"])
+            .map_err(|e| anyhow::anyhow!(e))?;
     if args.has("help") {
         print!("{USAGE}");
         return Ok(());
@@ -96,9 +109,17 @@ fn run() -> anyhow::Result<()> {
         "explain" => cmd_explain(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
-        other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+        other => anyhow::bail!(
+            "unknown subcommand '{other}' (expected one of: {})\n{USAGE}",
+            SUBCOMMANDS.join(", ")
+        ),
     }
 }
+
+/// Every CLI subcommand. `usage_tests` pins this list against the USAGE
+/// text, the dispatch match above, and README.md, so none of the three
+/// can drift from the others.
+const SUBCOMMANDS: [&str; 6] = ["simulate", "decode", "figure", "explain", "verify", "serve"];
 
 fn topo_arg(args: &Args) -> anyhow::Result<numa_attn::topology::Topology> {
     let name: String = args.get_or("topo", "mi300x".to_string()).map_err(|e| anyhow::anyhow!(e))?;
@@ -320,6 +341,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "15" | "fig15" => vec![figures::fig15(&driver, &topo, quick)],
         "16" | "fig16" => vec![figures::fig16(&driver, &topo, quick)],
         "decode" => vec![figures::decode_fig(&driver, &topo, quick)],
+        "serve" => vec![figures::serve_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
         "all" => figures::all(&driver, &topo, quick),
         other => anyhow::bail!("unknown figure '{other}'"),
@@ -393,7 +415,44 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The continuous-batching decode serving loop (docs/SERVING.md): run
+/// the built-in scenario sweep — or one `[serve]` INI scenario — under
+/// every applicable mapping policy, pricing every step through the
+/// shared simulation driver, and emit the deterministic serving report
+/// (tokens/s and TPOT p50/p99 per policy). `--live` instead runs the
+/// historical PJRT prefill demo ([`cmd_serve_live`]).
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has("live") {
+        return cmd_serve_live(args);
+    }
+    let a = |e: String| anyhow::anyhow!(e);
+    let driver = driver_arg(args)?;
+    let report = if let Some(path) = args.get::<String>("config").map_err(a)? {
+        let text = std::fs::read_to_string(&path)?;
+        let exp = ExperimentConfig::parse(&text).map_err(a)?;
+        let topo = exp.topology().map_err(a)?;
+        let cfg = exp.serve_config().map_err(a)?;
+        let stats = coordinator::applicable_policies(&topo, &cfg.base_geometry())
+            .into_iter()
+            .map(|p| coordinator::serve_decode_with(&driver, &topo, &cfg, p))
+            .collect();
+        coordinator::ServeReport { rows: vec![coordinator::ServeRow { label: path, stats }] }
+    } else {
+        let topo = topo_arg(args)?;
+        coordinator::serve_report(&driver, &topo, args.has("quick"))
+    };
+    if args.has("json") {
+        println!("{}", report.to_json().render());
+    } else {
+        print!("{}", report.render());
+    }
+    print_driver_stats(&driver);
+    Ok(())
+}
+
+/// The live PJRT prefill demo (`serve --live`): deterministic requests
+/// through the router/batcher/worker service over AOT artifacts.
+fn cmd_serve_live(args: &Args) -> anyhow::Result<()> {
     let a = |e: String| anyhow::anyhow!(e);
     let dir: String = args.get_or("artifacts", "artifacts".to_string()).map_err(a)?;
     let requests: usize = args.get_or("requests", 32).map_err(a)?;
@@ -432,4 +491,99 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         m.batches, m.stacked_executions, m.queue_wait.p99_us, m.exec.mean_us
     );
     Ok(())
+}
+
+/// USAGE-drift pins (the satellite contract of docs/SERVING.md's PR):
+/// the USAGE text, the dispatch table, README.md, and the actually-parsed
+/// flag set must all agree, `include_str!`-style, so the CLI docs cannot
+/// silently rot the way free-floating usage strings do.
+#[cfg(test)]
+mod usage_tests {
+    use super::{SUBCOMMANDS, USAGE};
+
+    /// This file's own source — the ground truth for which subcommand
+    /// and flag string literals the CLI actually dispatches on.
+    const SRC: &str = include_str!("main.rs");
+    const README: &str = include_str!("../../README.md");
+
+    #[test]
+    fn every_subcommand_is_in_usage_readme_and_dispatch() {
+        for cmd in SUBCOMMANDS {
+            assert!(
+                USAGE.contains(&format!("numa-attn {cmd}")),
+                "USAGE is missing the '{cmd}' subcommand"
+            );
+            assert!(
+                README.contains(&format!("**`{cmd}`**")),
+                "README.md Subcommands section is missing '{cmd}'"
+            );
+            // Match-arm shape ('"cmd" => '), not a bare quoted literal:
+            // the SUBCOMMANDS const and this test live in the same file,
+            // so a bare literal would match itself and never catch a
+            // deleted dispatch arm.
+            assert!(
+                SRC.contains(&format!("\"{cmd}\" => ")),
+                "dispatch match is missing the '{cmd}' arm"
+            );
+        }
+    }
+
+    /// Every `--flag` the USAGE text documents must appear as a parsed
+    /// key somewhere in this file (an `args.get*("flag")` / bool-flag
+    /// string literal). A flag documented but never parsed — or renamed
+    /// in code but not in the docs — fails here.
+    #[test]
+    fn every_documented_flag_is_parsed() {
+        let mut flags: Vec<String> = Vec::new();
+        let mut rest = USAGE;
+        while let Some(at) = rest.find("--") {
+            rest = &rest[at + 2..];
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || *c == '-')
+                .collect();
+            if !name.is_empty() && !flags.contains(&name) {
+                flags.push(name);
+            }
+        }
+        assert!(flags.len() >= 20, "flag extraction looks broken: {flags:?}");
+        for f in &flags {
+            assert!(
+                SRC.contains(&format!("\"{f}\"")),
+                "USAGE documents --{f} but main.rs never parses it"
+            );
+        }
+    }
+
+    /// Every figure id the USAGE advertises must have a dispatch arm.
+    #[test]
+    fn every_documented_figure_id_is_dispatched() {
+        let line = USAGE
+            .lines()
+            .find(|l| l.contains("figure <"))
+            .expect("USAGE documents the figure id list");
+        let ids = line.split_once('<').unwrap().1.split_once('>').unwrap().0;
+        let ids: Vec<&str> = ids.split('|').collect();
+        assert!(ids.contains(&"serve") && ids.contains(&"all"), "{ids:?}");
+        for id in ids {
+            // Match-arm shape only (see the dispatch-arm pin above): an
+            // id must open an arm ('"id" =>') or an alternation
+            // ('"id" |'), so quoting the id elsewhere cannot satisfy it.
+            assert!(
+                SRC.contains(&format!("\"{id}\" =>")) || SRC.contains(&format!("\"{id}\" |")),
+                "USAGE advertises figure id '{id}' with no dispatch arm"
+            );
+        }
+    }
+
+    /// README's quickstart and the USAGE text must agree on the binary's
+    /// driver flags (the shared `--threads` / `--no-cache` contract).
+    #[test]
+    fn readme_documents_the_driver_flags() {
+        for flag in ["--threads", "--no-cache"] {
+            assert!(USAGE.contains(flag), "USAGE lost {flag}");
+            assert!(README.contains(flag), "README lost {flag}");
+        }
+        assert!(README.contains("docs/SERVING.md"), "README must link the serving handbook");
+    }
 }

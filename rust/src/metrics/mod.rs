@@ -100,6 +100,20 @@ impl LatencyHistogram {
     }
 }
 
+/// Nearest-rank percentile of a sample set, `q` in `[0, 1]`. Sorts a
+/// copy with the IEEE-754 total order, so the result is deterministic
+/// for any input order — the serving report's TPOT p50/p99 go through
+/// this. Returns 0.0 for an empty slice.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(f64::total_cmp);
+    let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+    v[rank - 1]
+}
+
 /// Markdown/console table builder for figure output.
 #[derive(Debug, Clone)]
 pub struct Table {
@@ -197,6 +211,20 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean_us(), 0.0);
         assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 0.99), 5.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        // Input order never matters (total-order sort).
+        let mut r = v;
+        r.reverse();
+        assert_eq!(percentile(&r, 0.5), percentile(&v, 0.5));
     }
 
     #[test]

@@ -288,7 +288,9 @@ pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) ->
 /// per (batch, head)), launched back-to-back like the backward kernels.
 /// The merged report carries both phases' traffic and per-XCD statistics;
 /// `sim.kernel` must be [`KernelKind::DecodeSplitKv`] (see
-/// [`SimConfig::decode`]).
+/// [`SimConfig::decode`]). The merged `est_total_sec` is also the tick
+/// cost the decode serving loop charges for one iteration-level batch
+/// step ([`crate::coordinator::serve_decode`], DESIGN.md §10).
 pub fn simulate_decode(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) -> SimReport {
     let KernelKind::DecodeSplitKv { num_splits } = sim.kernel else {
         panic!("simulate_decode requires a DecodeSplitKv sim config");

@@ -1,9 +1,10 @@
-//! Workload presets and sweep builders: the paper's Tables 2-3 plus a
-//! request generator for the serving coordinator.
+//! Workload presets and sweep builders: the paper's Tables 2-3 plus the
+//! serving request/session generators for the coordinator (one-shot
+//! prefill [`Request`]s and continuous-batching decode [`Session`]s).
 
 pub mod presets;
 pub mod requests;
 pub mod sweeps;
 
 pub use presets::ModelPreset;
-pub use requests::{Request, RequestGenerator};
+pub use requests::{Request, RequestGenerator, Session, SessionGenerator};

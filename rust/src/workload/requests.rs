@@ -1,7 +1,12 @@
 //! Serving request generation for the coordinator: deterministic,
 //! seedable streams of prefill requests with mixed context lengths —
 //! the workload of `examples/serve_attention.rs` and the coordinator
-//! benches.
+//! benches — plus the [`Session`] abstraction the continuous-batching
+//! decode loop serves (docs/SERVING.md): a prompt to prefill followed by
+//! a fixed number of decode steps, arriving on a Poisson-ish seeded
+//! schedule ([`SessionGenerator`]).
+
+use crate::util::rng::SplitMix64;
 
 /// One attention prefill request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -53,6 +58,91 @@ impl RequestGenerator {
     }
 }
 
+/// One decode serving session: a prompt that is prefilled once, then
+/// `decode_tokens` iteration-level decode steps over a KV cache that
+/// grows by one token per step. Sessions are what the continuous-batching
+/// loop ([`crate::coordinator::serve_decode`]) admits, batches, and
+/// retires (docs/SERVING.md describes the full lifecycle).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Session {
+    /// Unique session id (monotonic per generator).
+    pub id: u64,
+    /// Simulated arrival time in seconds since the trace start.
+    pub arrival_sec: f64,
+    /// Prompt length in tokens (the prefill cost and the KV cache's
+    /// starting length).
+    pub prefill: usize,
+    /// Decode tokens to generate before the session finishes.
+    pub decode_tokens: usize,
+}
+
+impl Session {
+    /// KV-cache length after `generated` decode steps, clamped to the
+    /// serving deployment's KV capacity.
+    pub fn kv_len(&self, generated: usize, kv_cap: usize) -> usize {
+        (self.prefill + generated).max(1).min(kv_cap.max(1))
+    }
+}
+
+/// Deterministic session-trace generator: Poisson-ish arrivals
+/// (exponential inter-arrival times from a seeded [`SplitMix64`]) with
+/// prompt lengths and decode budgets drawn uniformly from caller-supplied
+/// mixes. Identical seeds and mixes produce identical traces, which is
+/// what makes the serving report reproducible bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct SessionGenerator {
+    rng: SplitMix64,
+    next_id: u64,
+    clock_sec: f64,
+    arrival_per_sec: f64,
+    /// Prompt-length mix (uniformly sampled).
+    pub prefill_lengths: Vec<usize>,
+    /// Decode-budget mix (uniformly sampled).
+    pub decode_tokens: Vec<usize>,
+}
+
+impl SessionGenerator {
+    /// A seeded generator with the given arrival rate (sessions per
+    /// simulated second) and session mix. Both mixes must be non-empty
+    /// and the arrival rate positive.
+    pub fn new(
+        seed: u64,
+        arrival_per_sec: f64,
+        prefill_lengths: Vec<usize>,
+        decode_tokens: Vec<usize>,
+    ) -> Self {
+        assert!(arrival_per_sec > 0.0, "arrival rate must be > 0");
+        assert!(!prefill_lengths.is_empty() && !decode_tokens.is_empty());
+        SessionGenerator {
+            rng: SplitMix64::new(seed),
+            next_id: 0,
+            clock_sec: 0.0,
+            arrival_per_sec,
+            prefill_lengths,
+            decode_tokens,
+        }
+    }
+
+    /// Generate the next session. Arrival times are non-decreasing: each
+    /// call advances the trace clock by an exponential inter-arrival gap
+    /// with mean `1 / arrival_per_sec`.
+    pub fn next_session(&mut self) -> Session {
+        // Inverse-CDF sampling; 1 - u is in (0, 1] so ln() is finite.
+        let u = self.rng.next_f64();
+        self.clock_sec += -(1.0 - u).ln() / self.arrival_per_sec;
+        let prefill = *self.rng.choose(&self.prefill_lengths);
+        let decode = *self.rng.choose(&self.decode_tokens);
+        let id = self.next_id;
+        self.next_id += 1;
+        Session { id, arrival_sec: self.clock_sec, prefill, decode_tokens: decode }
+    }
+
+    /// Generate a trace of `n` sessions (arrival-ordered).
+    pub fn take(&mut self, n: usize) -> Vec<Session> {
+        (0..n).map(|_| self.next_session()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,6 +152,35 @@ mod tests {
         let mut a = RequestGenerator::new(7, vec![128, 256]);
         let mut b = RequestGenerator::new(7, vec![128, 256]);
         assert_eq!(a.take(10), b.take(10));
+    }
+
+    #[test]
+    fn sessions_deterministic_and_arrival_ordered() {
+        let mk = || SessionGenerator::new(11, 100.0, vec![1024, 4096], vec![16, 64]);
+        let a = mk().take(50);
+        let b = mk().take(50);
+        assert_eq!(a, b);
+        for (i, s) in a.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            assert!(s.prefill == 1024 || s.prefill == 4096);
+            assert!(s.decode_tokens == 16 || s.decode_tokens == 64);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_sec <= w[1].arrival_sec, "arrivals ordered");
+        }
+        // Both mix entries occur over 50 draws.
+        assert!(a.iter().any(|s| s.prefill == 1024) && a.iter().any(|s| s.prefill == 4096));
+        // Mean inter-arrival roughly matches 1/rate (loose band).
+        let mean = a.last().unwrap().arrival_sec / 50.0;
+        assert!((0.002..0.05).contains(&mean), "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn session_kv_len_grows_then_caps() {
+        let s = Session { id: 0, arrival_sec: 0.0, prefill: 1000, decode_tokens: 10 };
+        assert_eq!(s.kv_len(0, 4096), 1000);
+        assert_eq!(s.kv_len(5, 4096), 1005);
+        assert_eq!(s.kv_len(5000, 4096), 4096); // clamped to capacity
     }
 
     #[test]

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Intra-repo markdown link checker.
+
+Walks the repo's markdown set (README.md, DESIGN.md, ROADMAP.md, PAPER*,
+docs/*.md, ...) and validates every `[text](target)` link whose target
+is a repo path: the file (or directory) must exist, and a `#fragment`
+into a markdown file must match a real heading's GitHub-style anchor.
+External links (http/https/mailto) are skipped — this checker never
+touches the network, so it can run in CI alongside
+check_missing_docs.py.
+
+Usage: python3 scripts/check_doc_links.py [repo_root]
+Exits non-zero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links like [text](target); images ![alt](target) share the tail.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def anchor_of(heading: str) -> str:
+    """GitHub-style slug: lowercase, spaces to dashes, punctuation out."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+_ANCHOR_CACHE = {}
+
+
+def anchors_in(path: Path) -> set:
+    cached = _ANCHOR_CACHE.get(path)
+    if cached is not None:
+        return cached
+    anchors = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING.match(line)
+        if m:
+            anchors.add(anchor_of(m.group(1)))
+    _ANCHOR_CACHE[path] = anchors
+    return anchors
+
+
+def markdown_files(root: Path):
+    for pattern in ("*.md", "docs/*.md", "examples/*.md", "scripts/*.md",
+                    "rust/*.md", "python/*.md"):
+        yield from sorted(root.glob(pattern))
+
+
+def check_file(md: Path, root: Path) -> list:
+    problems = []
+    in_fence = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in LINK.findall(line):
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, fragment = target.partition("#")
+            where = f"{md.relative_to(root)}:{lineno}"
+            if not path_part:  # pure '#fragment' into this file
+                dest = md
+            else:
+                dest = (md.parent / path_part).resolve()
+                try:
+                    dest.relative_to(root.resolve())
+                except ValueError:
+                    problems.append(f"{where}: link escapes the repo: {target}")
+                    continue
+                if not dest.exists():
+                    problems.append(f"{where}: broken link target: {target}")
+                    continue
+            if fragment and dest.suffix == ".md" and dest.exists():
+                # GitHub de-duplicates repeat anchors with -1/-2 suffixes;
+                # strip one trailing -N before matching.
+                frag = re.sub(r"-\d+$", "", fragment)
+                anchors = anchors_in(dest)
+                if fragment not in anchors and frag not in anchors:
+                    problems.append(
+                        f"{where}: missing anchor #{fragment} in {dest.name}")
+    return problems
+
+
+def main():
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    files = list(markdown_files(root))
+    if not files:
+        print(f"check_doc_links: no markdown files under {root}", file=sys.stderr)
+        return 1
+    problems = []
+    for md in files:
+        problems.extend(check_file(md, root))
+    if problems:
+        print(f"check_doc_links: {len(problems)} broken link(s):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    nlinks = sum(
+        len(LINK.findall(md.read_text())) for md in files)
+    print(f"check_doc_links: OK — {len(files)} file(s), {nlinks} link(s) scanned")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
