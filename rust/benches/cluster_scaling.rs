@@ -1,0 +1,118 @@
+//! Tensor-parallel cluster serving bench (docs/CLUSTER.md): runs the
+//! cluster sweep on real MI300X devices and asserts the two-level NUMA
+//! claims end to end.
+//!
+//! Reproduction targets:
+//! * SwizzledHeadFirst's decode tokens/s >= NaiveHeadFirst's on every
+//!   (scenario, TP) row — the level-2 mapping win survives head sharding;
+//! * SHF's decode L2 hit rate >= NHF's on every row, and on the raw
+//!   per-shard decode grids at the TP extremes;
+//! * TP-8 serves tokens at least as fast as TP-1 (sharding pays for its
+//!   all-gather) on every scenario, under SHF;
+//! * identical shards collapse in the report cache (hits > misses).
+
+mod common;
+
+use numa_attn::coordinator::serve_cluster_report;
+use numa_attn::driver::SimJob;
+use numa_attn::mapping::Policy;
+use numa_attn::sim::SimConfig;
+use numa_attn::workload::sweeps;
+
+fn main() {
+    let driver = common::bench_driver();
+    let topo = common::topo();
+    let quick = !common::full_sweep();
+
+    let t0 = std::time::Instant::now();
+    let report = serve_cluster_report(&driver, &topo, quick);
+    let dt = t0.elapsed();
+    print!("{}", report.render());
+
+    // Per-row policy ordering: throughput AND decode locality.
+    for row in &report.rows {
+        let shf = report.stats(&row.label, Policy::SwizzledHeadFirst).unwrap();
+        let nhf = report.stats(&row.label, Policy::NaiveHeadFirst).unwrap();
+        common::check(
+            shf.tokens_per_sec >= nhf.tokens_per_sec,
+            &format!(
+                "{}: SHF ({:.0} tok/s) >= NHF ({:.0} tok/s)",
+                row.label, shf.tokens_per_sec, nhf.tokens_per_sec
+            ),
+        );
+        common::check(
+            shf.decode_l2_hit_pct >= nhf.decode_l2_hit_pct,
+            &format!(
+                "{}: SHF decode L2 ({:.1}%) >= NHF ({:.1}%)",
+                row.label, shf.decode_l2_hit_pct, nhf.decode_l2_hit_pct
+            ),
+        );
+        common::check(shf.tokens_per_sec > 0.0, &format!("{}: non-degenerate", row.label));
+    }
+
+    // TP scaling: the widest shard must at least match the narrowest on
+    // every scenario (the all-gather tax never eats the whole win). The
+    // endpoints come from the sweep axis itself, so extending CLUSTER_TP
+    // moves this check to the new extremes automatically.
+    let (tp_min, tp_max) = (sweeps::CLUSTER_TP[0], *sweeps::CLUSTER_TP.last().unwrap());
+    let bases: Vec<String> = {
+        let mut b: Vec<String> = report.rows.iter().map(|r| r.base.clone()).collect();
+        b.dedup();
+        b
+    };
+    for base in &bases {
+        let lo = report.rows.iter().find(|r| r.base == *base && r.tp == tp_min).unwrap();
+        let hi = report.rows.iter().find(|r| r.base == *base && r.tp == tp_max).unwrap();
+        let s_lo = report.stats(&lo.label, Policy::SwizzledHeadFirst).unwrap();
+        let s_hi = report.stats(&hi.label, Policy::SwizzledHeadFirst).unwrap();
+        common::check(
+            s_hi.tokens_per_sec >= s_lo.tokens_per_sec,
+            &format!(
+                "{base}: TP-{tp_max} ({:.0} tok/s) >= TP-{tp_min} ({:.0} tok/s)",
+                s_hi.tokens_per_sec, s_lo.tokens_per_sec
+            ),
+        );
+        let eff = report.efficiency(hi, Policy::SwizzledHeadFirst).unwrap();
+        println!("[bench] {base}: TP-{tp_max} scaling efficiency {eff:.2} vs ideal");
+    }
+
+    // Level-2 locality on the raw per-shard decode grids: the sharded
+    // GQA-8 sweep must keep SHF's L2 hit rate at or above NHF's at both
+    // TP extremes (split counts deliberately not XCD multiples).
+    for tp in [tp_min, tp_max] {
+        let n_ctxs = [16 * 1024, 64 * 1024];
+        let pts = sweeps::sharded_gqa8_decode_sweep(tp, &n_ctxs, &[1, 8], &sweeps::DECODE_SPLITS);
+        for pt in &pts {
+            let run = |p: Policy| {
+                driver.run(SimJob::decode(&topo, &pt.cfg, SimConfig::decode(p, pt.num_splits)))
+            };
+            let shf = run(Policy::SwizzledHeadFirst);
+            let nhf = run(Policy::NaiveHeadFirst);
+            common::check(
+                shf.l2_hit_pct() >= nhf.l2_hit_pct(),
+                &format!(
+                    "{}: shard SHF L2 ({:.1}%) >= NHF ({:.1}%)",
+                    pt.label,
+                    shf.l2_hit_pct(),
+                    nhf.l2_hit_pct()
+                ),
+            );
+        }
+    }
+
+    let c = driver.cache().counters();
+    common::check(
+        c.hits > c.misses,
+        &format!("identical shards collapse in the cache (hits {} > misses {})", c.hits, c.misses),
+    );
+    println!(
+        "[bench] cluster_scaling: {} row(s) in {:.2} s on {} thread(s), \
+         cache {} hit(s)/{} miss(es) ({})",
+        report.rows.len(),
+        dt.as_secs_f64(),
+        driver.threads(),
+        c.hits,
+        c.misses,
+        if quick { "quick sweep; NUMA_ATTN_FULL=1 for the full TP axis" } else { "full sweep" }
+    );
+}

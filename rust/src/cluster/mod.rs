@@ -1,0 +1,441 @@
+//! The two-level NUMA cluster layer (docs/CLUSTER.md): many chiplet GPUs
+//! serving one attention workload with tensor-parallel head sharding.
+//!
+//! The paper's thesis — scheduling must follow the NUMA hierarchy — does
+//! not stop at the XCDs inside one MI300X. A production attention
+//! deployment spans a *second* NUMA level: several devices connected by
+//! an interconnect that is two orders of magnitude slower than HBM, with
+//! query heads partitioned across them (FlashAttention-2's head-parallel
+//! work partitioning; AMMA's multi-chiplet serving design in PAPERS.md).
+//! This module models that level:
+//!
+//! * [`ClusterTopology`] — N devices, each a full [`Topology`] (its own
+//!   XCDs, L2s, HBM), plus a bytes/sec + latency interconnect model for
+//!   the per-step all-gather of sharded attention outputs.
+//! * [`ShardPlan`] — a GQA-aware tensor-parallel partition of the H_Q
+//!   query heads across devices: KV heads are **never split** (every
+//!   query head of a KV group lands on the KV head's device, so no KV
+//!   cache entry is replicated or sliced across devices), and the plan is
+//!   a bijection over heads (pinned by `tests/properties.rs`).
+//!
+//! Together they form a two-level NUMA tree: the plan decides which
+//! *device* owns a head (level 1), then the paper's workgroup-mapping
+//! policies decide which *XCD* of that device owns each of the head's
+//! blocks (level 2) — Swizzled Head-first applies unchanged *within* each
+//! shard's local head range. The serving loop fans each decode step's
+//! kernel launches across the shards through
+//! [`crate::coordinator::serve_decode_cluster`], advancing time by the
+//! slowest device plus the interconnect charge.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::attn::AttnConfig;
+use crate::topology::Topology;
+
+/// Default per-device interconnect bandwidth: 128 GB/s, the effective
+/// per-peer Infinity-Fabric/NVLink-class link rate of current 8-GPU
+/// serving nodes (~40× slower than one MI300X's HBM).
+pub const DEFAULT_LINK_BYTES_PER_SEC: f64 = 128e9;
+
+/// Default interconnect hop latency: 1 µs (switch + serialization).
+pub const DEFAULT_LINK_LATENCY_SEC: f64 = 1e-6;
+
+/// A cluster of chiplet GPUs: the second NUMA level above
+/// [`Topology`]'s XCDs.
+///
+/// Equality and hashing compare the f64 interconnect fields by IEEE-754
+/// bit pattern (like [`Topology`] itself), so a `ClusterTopology` can key
+/// memoization tables the same way single-device topologies do.
+#[derive(Debug, Clone)]
+pub struct ClusterTopology {
+    /// Human-readable name, e.g. `"mi300x x8"`.
+    pub name: String,
+    /// The member devices. Homogeneous in every preset, but the model
+    /// carries one [`Topology`] per device so heterogeneous clusters
+    /// price correctly (the step advances by the *slowest* device).
+    pub devices: Vec<Topology>,
+    /// Per-device interconnect bandwidth in bytes/second (the rate one
+    /// device can send to its ring neighbor during an all-gather).
+    pub link_bytes_per_sec: f64,
+    /// Per-hop interconnect latency in seconds.
+    pub link_latency_sec: f64,
+}
+
+impl ClusterTopology {
+    /// A homogeneous cluster: `n` copies of `device` joined by the given
+    /// interconnect. All devices share the device's name (identical
+    /// shards then share one memoized report in the driver's cache).
+    pub fn homogeneous(
+        device: &Topology,
+        n: usize,
+        link_bytes_per_sec: f64,
+        link_latency_sec: f64,
+    ) -> ClusterTopology {
+        ClusterTopology {
+            name: format!("{} x{n}", device.name),
+            devices: vec![device.clone(); n],
+            link_bytes_per_sec,
+            link_latency_sec,
+        }
+    }
+
+    /// A homogeneous cluster with the default interconnect
+    /// ([`DEFAULT_LINK_BYTES_PER_SEC`] / [`DEFAULT_LINK_LATENCY_SEC`]).
+    pub fn node_of(device: &Topology, n: usize) -> ClusterTopology {
+        Self::homogeneous(device, n, DEFAULT_LINK_BYTES_PER_SEC, DEFAULT_LINK_LATENCY_SEC)
+    }
+
+    /// Number of member devices.
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The `i`-th member device.
+    pub fn device(&self, i: usize) -> &Topology {
+        &self.devices[i]
+    }
+
+    /// Total workgroup slots across every device (the cluster-wide
+    /// occupancy the tensor-parallel grid must fill).
+    pub fn total_wg_slots(&self) -> usize {
+        self.devices.iter().map(Topology::total_wg_slots).sum()
+    }
+
+    /// Check the cluster description for degenerate values: at least one
+    /// device, every device valid, positive interconnect rates.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.devices.is_empty() {
+            return Err("cluster needs at least one device".into());
+        }
+        for (i, d) in self.devices.iter().enumerate() {
+            d.validate().map_err(|e| format!("device {i}: {e}"))?;
+        }
+        if self.link_bytes_per_sec.is_nan() || self.link_bytes_per_sec <= 0.0 {
+            return Err("link_bytes_per_sec must be > 0".into());
+        }
+        if self.link_latency_sec.is_nan() || self.link_latency_sec < 0.0 {
+            return Err("link_latency_sec must be >= 0".into());
+        }
+        Ok(())
+    }
+
+    /// Time for a ring all-gather in which each device contributes
+    /// `bytes_per_device` bytes: `(N-1)` hops, each moving one device's
+    /// contribution over the link. Zero on a single-device cluster —
+    /// which is what makes the `tp = 1` cluster serving path
+    /// byte-identical to the single-device one (tests/cluster_serving.rs).
+    pub fn all_gather_sec(&self, bytes_per_device: f64) -> f64 {
+        let n = self.devices.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * (bytes_per_device / self.link_bytes_per_sec + self.link_latency_sec)
+    }
+}
+
+// Hash/Eq by bits, same convention as Topology/SimConfig: canonical
+// memoization-key behavior for the two f64 interconnect fields.
+impl PartialEq for ClusterTopology {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.devices == other.devices
+            && self.link_bytes_per_sec.to_bits() == other.link_bytes_per_sec.to_bits()
+            && self.link_latency_sec.to_bits() == other.link_latency_sec.to_bits()
+    }
+}
+
+impl Eq for ClusterTopology {}
+
+impl std::hash::Hash for ClusterTopology {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.name.hash(state);
+        self.devices.hash(state);
+        self.link_bytes_per_sec.to_bits().hash(state);
+        self.link_latency_sec.to_bits().hash(state);
+    }
+}
+
+/// How a [`ShardPlan`] lays KV groups out across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardStrategy {
+    /// Device `d` owns the contiguous KV-head range
+    /// `[d·H_K/tp, (d+1)·H_K/tp)` — the vLLM/Megatron default.
+    Contiguous,
+    /// Device `d` owns KV heads `{k : k mod tp == d}` — round-robin
+    /// striding, useful when adjacent heads have correlated load.
+    Strided,
+}
+
+impl ShardStrategy {
+    /// Stable lowercase identifier (INI/CLI/JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardStrategy::Contiguous => "contiguous",
+            ShardStrategy::Strided => "strided",
+        }
+    }
+}
+
+impl fmt::Display for ShardStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ShardStrategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "contiguous" => Ok(ShardStrategy::Contiguous),
+            "strided" => Ok(ShardStrategy::Strided),
+            other => Err(format!(
+                "unknown shard strategy '{other}' (expected contiguous or strided)"
+            )),
+        }
+    }
+}
+
+/// A tensor-parallel partition of the query heads across `tp` devices.
+///
+/// The plan is GQA-aware: it assigns whole **KV heads** (hence whole GQA
+/// groups of `h_q / h_k` query heads) to devices, so a KV cache entry is
+/// owned by exactly one device — never split, never replicated. This
+/// requires `tp` to divide `H_K`, which also makes every shard the same
+/// size (`H_Q/tp` query heads, `H_K/tp` KV heads): the balanced partition
+/// every production TP implementation uses.
+///
+/// Invariants (property-tested in `tests/properties.rs`):
+/// * **bijection** — each of the `H_Q` query heads lands on exactly one
+///   device;
+/// * **group alignment** — the query heads of one KV group all land on
+///   their KV head's device.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ShardPlan {
+    /// Tensor-parallel degree (number of shards == number of devices).
+    pub tp: usize,
+    /// The layout strategy the plan was built with.
+    pub strategy: ShardStrategy,
+    /// Query heads of the sharded (global) geometry.
+    pub h_q: usize,
+    /// KV heads of the sharded (global) geometry.
+    pub h_k: usize,
+    /// KV head -> owning device (`h_k` entries).
+    kv_owner: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Build the plan for a geometry at the given TP degree. Fails when
+    /// the geometry is invalid or `tp` does not divide `H_K` (splitting a
+    /// KV head would shard its KV cache — exactly what the plan forbids).
+    pub fn new(cfg: &AttnConfig, tp: usize, strategy: ShardStrategy) -> Result<ShardPlan, String> {
+        cfg.validate()?;
+        if tp == 0 {
+            return Err("tp must be > 0".into());
+        }
+        if cfg.h_k % tp != 0 {
+            return Err(format!(
+                "tp ({tp}) must divide h_k ({}): KV heads are never split across devices",
+                cfg.h_k
+            ));
+        }
+        let kpd = cfg.h_k / tp; // KV heads per device
+        let kv_owner = (0..cfg.h_k)
+            .map(|k| match strategy {
+                ShardStrategy::Contiguous => k / kpd,
+                ShardStrategy::Strided => k % tp,
+            })
+            .collect();
+        Ok(ShardPlan { tp, strategy, h_q: cfg.h_q, h_k: cfg.h_k, kv_owner })
+    }
+
+    /// GQA group size (query heads per KV head) of the global geometry.
+    pub fn group(&self) -> usize {
+        self.h_q / self.h_k
+    }
+
+    /// Device owning KV head `k` (and its whole KV-cache stream).
+    pub fn device_of_kv_head(&self, k: usize) -> usize {
+        self.kv_owner[k]
+    }
+
+    /// Device owning query head `h` — its KV group's device.
+    pub fn device_of_query_head(&self, h: usize) -> usize {
+        self.kv_owner[h / self.group()]
+    }
+
+    /// The global query-head ids resident on device `d`, ascending.
+    pub fn query_heads(&self, d: usize) -> Vec<usize> {
+        (0..self.h_q).filter(|&h| self.device_of_query_head(h) == d).collect()
+    }
+
+    /// The shard-local view of a global geometry: the same workload with
+    /// `H_Q/tp` query heads and `H_K/tp` KV heads (blocks, masking, and
+    /// dtype unchanged). Every shard of the balanced partition has this
+    /// one shape, which is what lets a homogeneous cluster's per-shard
+    /// reports collapse to a single memoized entry in the driver's cache.
+    /// The paper's mapping policies then apply *within* this local head
+    /// range — level 2 of the NUMA tree.
+    pub fn local_attn(&self, cfg: &AttnConfig) -> AttnConfig {
+        debug_assert_eq!((cfg.h_q, cfg.h_k), (self.h_q, self.h_k), "plan built for this geometry");
+        AttnConfig { h_q: cfg.h_q / self.tp, h_k: cfg.h_k / self.tp, ..*cfg }
+    }
+
+    /// Bytes one device contributes to the per-step output all-gather for
+    /// `tokens` query tokens: its `H_Q/tp` heads' output rows.
+    pub fn output_bytes_per_device(&self, cfg: &AttnConfig, tokens: usize) -> f64 {
+        (tokens * (self.h_q / self.tp) * cfg.d_head * cfg.dtype_bytes) as f64
+    }
+}
+
+impl fmt::Display for ShardPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "tp={} {} ({}q+{}kv heads/device)",
+            self.tp,
+            self.strategy,
+            self.h_q / self.tp,
+            self.h_k / self.tp
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn llama70b() -> AttnConfig {
+        AttnConfig::gqa(1, 64, 8, 16384, 128)
+    }
+
+    #[test]
+    fn homogeneous_cluster_shape_and_validation() {
+        let c = ClusterTopology::node_of(&presets::mi300x(), 8);
+        assert_eq!(c.num_devices(), 8);
+        assert_eq!(c.total_wg_slots(), 8 * 304);
+        assert_eq!(c.device(3).num_xcds, 8);
+        c.validate().unwrap();
+        let empty = ClusterTopology { devices: vec![], ..c.clone() };
+        assert!(empty.validate().is_err());
+        let bad_link = ClusterTopology { link_bytes_per_sec: 0.0, ..c.clone() };
+        assert!(bad_link.validate().is_err());
+        let mut bad_dev = c;
+        bad_dev.devices[1].num_xcds = 0;
+        let err = bad_dev.validate().unwrap_err();
+        assert!(err.contains("device 1"), "{err}");
+    }
+
+    #[test]
+    fn all_gather_is_free_on_one_device_and_ring_priced_beyond() {
+        let one = ClusterTopology::node_of(&presets::mi300x(), 1);
+        assert_eq!(one.all_gather_sec(1e9), 0.0);
+        let eight = ClusterTopology::homogeneous(&presets::mi300x(), 8, 100e9, 1e-6);
+        let t = eight.all_gather_sec(1e6); // 1 MB per device
+        let want = 7.0 * (1e6 / 100e9 + 1e-6);
+        assert!((t - want).abs() < 1e-15, "{t} vs {want}");
+        // More devices move more data: all-gather grows with N.
+        let four = ClusterTopology::homogeneous(&presets::mi300x(), 4, 100e9, 1e-6);
+        assert!(four.all_gather_sec(1e6) < t);
+    }
+
+    #[test]
+    fn cluster_hash_eq_by_bits() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let hash_of = |c: &ClusterTopology| {
+            let mut h = DefaultHasher::new();
+            c.hash(&mut h);
+            h.finish()
+        };
+        let a = ClusterTopology::node_of(&presets::mi300x(), 4);
+        let b = ClusterTopology::node_of(&presets::mi300x(), 4);
+        assert_eq!(a, b);
+        assert_eq!(hash_of(&a), hash_of(&b));
+        let mut c = ClusterTopology::node_of(&presets::mi300x(), 4);
+        c.link_bytes_per_sec *= 2.0;
+        assert_ne!(a, c);
+        assert_ne!(hash_of(&a), hash_of(&c));
+    }
+
+    #[test]
+    fn contiguous_plan_owns_contiguous_ranges() {
+        let cfg = llama70b();
+        let plan = ShardPlan::new(&cfg, 4, ShardStrategy::Contiguous).unwrap();
+        assert_eq!(plan.group(), 8);
+        // Device d owns KV heads [2d, 2d+2) -> query heads [16d, 16d+16).
+        for d in 0..4 {
+            let heads = plan.query_heads(d);
+            assert_eq!(heads.len(), 16);
+            assert_eq!(heads, (16 * d..16 * (d + 1)).collect::<Vec<_>>());
+        }
+        assert_eq!(plan.device_of_kv_head(0), 0);
+        assert_eq!(plan.device_of_kv_head(7), 3);
+        assert_eq!(plan.device_of_query_head(63), 3);
+    }
+
+    #[test]
+    fn strided_plan_round_robins_kv_groups() {
+        let cfg = llama70b();
+        let plan = ShardPlan::new(&cfg, 4, ShardStrategy::Strided).unwrap();
+        // KV head k -> device k % 4; its 8 query heads follow it.
+        for k in 0..8 {
+            assert_eq!(plan.device_of_kv_head(k), k % 4);
+            for h in 8 * k..8 * (k + 1) {
+                assert_eq!(plan.device_of_query_head(h), k % 4, "head {h}");
+            }
+        }
+        // Still balanced: 16 query heads per device.
+        for d in 0..4 {
+            assert_eq!(plan.query_heads(d).len(), 16);
+        }
+    }
+
+    #[test]
+    fn local_attn_shrinks_heads_and_stays_valid() {
+        let cfg = AttnConfig { causal: true, dtype_bytes: 2, ..llama70b() };
+        for tp in [1usize, 2, 4, 8] {
+            let plan = ShardPlan::new(&cfg, tp, ShardStrategy::Contiguous).unwrap();
+            let local = plan.local_attn(&cfg);
+            assert_eq!(local.h_q, 64 / tp);
+            assert_eq!(local.h_k, 8 / tp);
+            assert_eq!(local.group(), cfg.group(), "GQA ratio preserved");
+            assert_eq!(local.n_ctx, cfg.n_ctx);
+            assert!(local.causal);
+            local.validate().unwrap();
+        }
+        // tp = 1 is the identity plan.
+        let plan = ShardPlan::new(&cfg, 1, ShardStrategy::Contiguous).unwrap();
+        assert_eq!(plan.local_attn(&cfg), cfg);
+    }
+
+    #[test]
+    fn plan_rejects_kv_head_splits() {
+        let cfg = llama70b(); // h_k = 8
+        assert!(ShardPlan::new(&cfg, 3, ShardStrategy::Contiguous).is_err());
+        assert!(ShardPlan::new(&cfg, 16, ShardStrategy::Contiguous).is_err());
+        assert!(ShardPlan::new(&cfg, 0, ShardStrategy::Contiguous).is_err());
+        let err = ShardPlan::new(&cfg, 5, ShardStrategy::Strided).unwrap_err();
+        assert!(err.contains("never split"), "{err}");
+    }
+
+    #[test]
+    fn output_bytes_match_sharded_rows() {
+        let cfg = llama70b(); // d_head 128, bf16
+        let plan = ShardPlan::new(&cfg, 8, ShardStrategy::Contiguous).unwrap();
+        // 8 local heads x 128 x 2 bytes per token.
+        assert_eq!(plan.output_bytes_per_device(&cfg, 1), (8 * 128 * 2) as f64);
+        assert_eq!(plan.output_bytes_per_device(&cfg, 16), (16 * 8 * 128 * 2) as f64);
+    }
+
+    #[test]
+    fn strategy_parsing_round_trips() {
+        for s in [ShardStrategy::Contiguous, ShardStrategy::Strided] {
+            assert_eq!(s.name().parse::<ShardStrategy>().unwrap(), s);
+            assert_eq!(format!("{s}"), s.name());
+        }
+        assert!("diagonal".parse::<ShardStrategy>().is_err());
+    }
+}

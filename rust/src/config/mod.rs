@@ -28,6 +28,7 @@
 //! serving scenario in `examples/serve.ini` (docs/SERVING.md).
 
 use crate::attn::{AttnConfig, KernelKind};
+use crate::cluster::{ClusterTopology, ShardPlan, ShardStrategy};
 use crate::mapping::Policy;
 use crate::sim::SimConfig;
 use crate::topology::{presets, Topology};
@@ -58,6 +59,13 @@ pub const SERVE_KEYS: [&str; 8] = [
     "kv_bucket", "seed",
 ];
 
+/// Every `[cluster]` key [`ExperimentConfig::parse`] reads — the
+/// two-level NUMA cluster deployment (`numa-attn cluster --config`,
+/// docs/CLUSTER.md). The worked key set lives in `examples/cluster.ini`,
+/// pinned by the `example_cluster_file_stays_reconciled` test.
+pub const CLUSTER_KEYS: [&str; 6] =
+    ["devices", "topology", "tp", "strategy", "link_gbs", "link_latency_us"];
+
 /// Top-level experiment file.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -69,6 +77,8 @@ pub struct ExperimentConfig {
     pub sim: SimSection,
     /// `[serve]` section (decode serving loop; every key optional).
     pub serve: ServeSection,
+    /// `[cluster]` section (`None` when the file has no such section).
+    pub cluster: Option<ClusterSection>,
 }
 
 /// `[attention]` section: the workload geometry.
@@ -142,6 +152,26 @@ pub struct ServeSection {
     pub seed: Option<u64>,
 }
 
+/// `[cluster]` section: the two-level NUMA deployment — device count,
+/// per-device topology, tensor-parallel head sharding, and the
+/// interconnect model (docs/CLUSTER.md).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSection {
+    /// Devices in the cluster (required).
+    pub devices: Option<usize>,
+    /// Per-device topology preset (default: the top-level `topology`).
+    pub topology: Option<String>,
+    /// Tensor-parallel degree (default: `devices`; must equal it —
+    /// shards map 1:1 onto devices).
+    pub tp: Option<usize>,
+    /// Shard layout: `"contiguous"` (default) or `"strided"`.
+    pub strategy: Option<String>,
+    /// Per-device interconnect bandwidth in GB/s (default 128).
+    pub link_gbs: Option<f64>,
+    /// Interconnect hop latency in microseconds (default 1).
+    pub link_latency_us: Option<f64>,
+}
+
 /// Which pass an experiment file requests ([`ExperimentConfig::kernel`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExpKernel {
@@ -202,18 +232,69 @@ impl ExperimentConfig {
             kv_bucket: ini.get_parsed("serve", "kv_bucket")?,
             seed: ini.get_parsed("serve", "seed")?,
         };
+        let cluster = if ini.has_section("cluster") {
+            Some(ClusterSection {
+                devices: ini.get_parsed("cluster", "devices")?,
+                topology: ini.get("cluster", "topology").map(|s| s.to_string()),
+                tp: ini.get_parsed("cluster", "tp")?,
+                strategy: ini.get("cluster", "strategy").map(|s| s.to_string()),
+                link_gbs: ini.get_parsed("cluster", "link_gbs")?,
+                link_latency_us: ini.get_parsed("cluster", "link_latency_us")?,
+            })
+        } else {
+            None
+        };
         Ok(ExperimentConfig {
             topology: ini.get("", "topology").unwrap_or("mi300x").to_string(),
             attention,
             sim,
             serve,
+            cluster,
         })
     }
 
-    /// Resolve the topology preset named by the file.
+    /// Resolve the topology preset named by the file. An unknown name
+    /// reports the available preset list
+    /// ([`presets::by_name_or_err`]).
     pub fn topology(&self) -> Result<Topology, String> {
-        presets::by_name(&self.topology)
-            .ok_or_else(|| format!("unknown topology preset '{}'", self.topology))
+        presets::by_name_or_err(&self.topology)
+    }
+
+    /// Build the cluster topology from `[cluster]`: `devices` copies of
+    /// the per-device preset (default: the top-level `topology`) joined
+    /// by the configured interconnect. Requires a `[cluster]` section
+    /// with `devices`, and `tp` (when given) equal to `devices`.
+    pub fn cluster_topology(&self) -> Result<ClusterTopology, String> {
+        let c = self.cluster.as_ref().ok_or("missing [cluster] section")?;
+        let devices = c.devices.ok_or("cluster.devices required")?;
+        if devices == 0 {
+            return Err("cluster.devices must be > 0".into());
+        }
+        cluster_tp(c)?;
+        let device = presets::by_name_or_err(c.topology.as_deref().unwrap_or(&self.topology))?;
+        let link_gbs = c.link_gbs.unwrap_or(crate::cluster::DEFAULT_LINK_BYTES_PER_SEC / 1e9);
+        let link_latency_us =
+            c.link_latency_us.unwrap_or(crate::cluster::DEFAULT_LINK_LATENCY_SEC * 1e6);
+        let cluster =
+            ClusterTopology::homogeneous(&device, devices, link_gbs * 1e9, link_latency_us * 1e-6);
+        cluster.validate()?;
+        Ok(cluster)
+    }
+
+    /// Build the shard plan from `[cluster]` + `[attention]`: the
+    /// GQA-aware tensor-parallel partition of the served model's heads
+    /// at the configured degree and strategy. Enforces the same
+    /// `tp == devices` consistency rule as [`Self::cluster_topology`],
+    /// so an inconsistent section errors here instead of panicking later
+    /// in the executor.
+    pub fn shard_plan(&self) -> Result<ShardPlan, String> {
+        let c = self.cluster.as_ref().ok_or("missing [cluster] section")?;
+        let tp = cluster_tp(c)?;
+        let strategy = match c.strategy.as_deref() {
+            None => ShardStrategy::Contiguous,
+            Some(s) => s.parse::<ShardStrategy>()?,
+        };
+        ShardPlan::new(&self.attn()?, tp, strategy)
     }
 
     /// Build and validate the attention config from `[attention]`.
@@ -346,6 +427,23 @@ impl ExperimentConfig {
     }
 }
 
+/// The `[cluster]` section's effective TP degree: `tp` defaulting to
+/// `devices`, with the tp == devices consistency rule (shards map 1:1
+/// onto devices) enforced in ONE place for both
+/// [`ExperimentConfig::cluster_topology`] and
+/// [`ExperimentConfig::shard_plan`].
+fn cluster_tp(c: &ClusterSection) -> Result<usize, String> {
+    match (c.devices, c.tp) {
+        (Some(d), Some(t)) if t != d => Err(format!(
+            "cluster.tp ({t}) must equal cluster.devices ({d}): \
+             head shards map 1:1 onto devices"
+        )),
+        (_, Some(t)) => Ok(t),
+        (Some(d), None) => Ok(d),
+        (None, None) => Err("cluster.devices or cluster.tp required".into()),
+    }
+}
+
 /// Parse a comma-separated list of positive integers (the `[serve]`
 /// session-mix keys).
 fn parse_usize_list(what: &str, list: &str) -> Result<Vec<usize>, String> {
@@ -462,6 +560,29 @@ backward = true
         assert_eq!(sc.kernel, KernelKind::BwdDkDv);
     }
 
+    /// Extract the keys an example INI's reference block documents:
+    /// `#   key ...` lines, skipping continuation lines and anything not
+    /// shaped like a key identifier. Shared by both reconciliation tests
+    /// so the comment convention is parsed exactly one way.
+    fn documented_keys(text: &str) -> Vec<&str> {
+        let mut keys = Vec::new();
+        for line in text.lines() {
+            // Reference-block entries look like `#   key ...`; prose,
+            // section headers, and continuation lines don't match the
+            // identifier shape.
+            let Some(rest) = line.strip_prefix("#   ") else { continue };
+            if rest.starts_with(' ') {
+                continue; // continuation line, not a key entry
+            }
+            let Some(key) = rest.split_whitespace().next() else { continue };
+            if key.is_empty() || !key.chars().all(|ch| ch.is_ascii_lowercase() || ch == '_') {
+                continue;
+            }
+            keys.push(key);
+        }
+        keys
+    }
+
     #[test]
     fn example_experiment_file_stays_reconciled() {
         // The reconciliation contract, enforced against the REAL example
@@ -477,32 +598,21 @@ backward = true
         assert!(sc.max_wg_completions > 0); // generations = 2 applied
         assert_eq!(sc.seed, 42);
 
-        let mut documented = 0;
-        for line in text.lines() {
-            // Reference-block entries look like `#   key ...`; prose,
-            // section headers, and continuation lines don't match the
-            // identifier shape.
-            let Some(rest) = line.strip_prefix("#   ") else { continue };
-            if rest.starts_with(' ') {
-                continue; // continuation line, not a key entry
-            }
-            let Some(key) = rest.split_whitespace().next() else { continue };
-            if key.is_empty() || !key.chars().all(|ch| ch.is_ascii_lowercase() || ch == '_') {
-                continue;
-            }
-            documented += 1;
+        let documented = documented_keys(text);
+        for key in &documented {
             assert!(
-                key == "topology"
-                    || ATTENTION_KEYS.contains(&key)
-                    || SIM_KEYS.contains(&key)
-                    || SERVE_KEYS.contains(&key),
+                *key == "topology"
+                    || ATTENTION_KEYS.contains(key)
+                    || SIM_KEYS.contains(key)
+                    || SERVE_KEYS.contains(key),
                 "examples/experiment.ini documents key '{key}' the parser does not read"
             );
         }
         // The reference block must actually cover the full key set.
         assert!(
-            documented >= 1 + ATTENTION_KEYS.len() + SIM_KEYS.len() + SERVE_KEYS.len(),
-            "only {documented} keys documented in examples/experiment.ini"
+            documented.len() >= 1 + ATTENTION_KEYS.len() + SIM_KEYS.len() + SERVE_KEYS.len(),
+            "only {} keys documented in examples/experiment.ini",
+            documented.len()
         );
     }
 
@@ -619,6 +729,148 @@ d_head = 64
 "#;
         let c = ExperimentConfig::parse(toml).unwrap();
         assert!(c.topology().is_err());
+    }
+
+    #[test]
+    fn unknown_topology_error_lists_available_presets() {
+        // The error must name every preset the user could have meant,
+        // not just echo the bad name back.
+        let toml = r#"
+topology = "h100"
+[attention]
+batch = 1
+h_q = 8
+n_ctx = 2048
+d_head = 64
+"#;
+        let err = ExperimentConfig::parse(toml).unwrap().topology().unwrap_err();
+        assert!(err.contains("'h100'"), "{err}");
+        for name in crate::topology::presets::all_names() {
+            assert!(err.contains(name), "error does not list preset '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn cluster_section_builds_topology_and_plan() {
+        let text = r#"
+topology = "mi300x"
+
+[attention]
+batch = 1
+h_q = 64
+h_k = 8
+n_ctx = 65536
+d_head = 128
+
+[cluster]
+devices = 4
+topology = "quad_die"
+tp = 4
+strategy = "strided"
+link_gbs = 200
+link_latency_us = 2
+"#;
+        let c = ExperimentConfig::parse(text).unwrap();
+        let cluster = c.cluster_topology().unwrap();
+        assert_eq!(cluster.num_devices(), 4);
+        assert_eq!(cluster.device(0).name, "quad_die", "per-device preset wins");
+        assert_eq!(cluster.link_bytes_per_sec, 200e9);
+        assert!((cluster.link_latency_sec - 2e-6).abs() < 1e-18);
+        let plan = c.shard_plan().unwrap();
+        assert_eq!(plan.tp, 4);
+        assert_eq!(plan.strategy, crate::cluster::ShardStrategy::Strided);
+        assert_eq!(plan.query_heads(0).len(), 16);
+    }
+
+    #[test]
+    fn cluster_section_defaults_and_errors() {
+        let base = r#"
+topology = "mi300x"
+
+[attention]
+batch = 1
+h_q = 64
+h_k = 8
+n_ctx = 65536
+d_head = 128
+"#;
+        // No [cluster] section at all.
+        let c = ExperimentConfig::parse(base).unwrap();
+        assert!(c.cluster.is_none());
+        assert!(c.cluster_topology().unwrap_err().contains("[cluster]"));
+
+        // Minimal section: device preset defaults to the top level,
+        // tp defaults to devices, interconnect to the module defaults.
+        let minimal = format!("{base}\n[cluster]\ndevices = 8\n");
+        let c = ExperimentConfig::parse(&minimal).unwrap();
+        let cluster = c.cluster_topology().unwrap();
+        assert_eq!(cluster.num_devices(), 8);
+        assert_eq!(cluster.device(0).name, "mi300x");
+        assert_eq!(cluster.link_bytes_per_sec, crate::cluster::DEFAULT_LINK_BYTES_PER_SEC);
+        let plan = c.shard_plan().unwrap();
+        assert_eq!(plan.tp, 8);
+        assert_eq!(plan.strategy, crate::cluster::ShardStrategy::Contiguous);
+
+        // devices is required; tp must equal devices; strategy must
+        // parse; tp must divide the KV heads.
+        let missing = format!("{base}\n[cluster]\ntp = 4\n");
+        assert!(ExperimentConfig::parse(&missing).unwrap().cluster_topology().is_err());
+        let mismatch = format!("{base}\n[cluster]\ndevices = 8\ntp = 4\n");
+        let parsed = ExperimentConfig::parse(&mismatch).unwrap();
+        let err = parsed.cluster_topology().unwrap_err();
+        assert!(err.contains("must equal"), "{err}");
+        // Both builders enforce the same rule: an inconsistent section
+        // can never yield a plan that panics in the executor later.
+        let err = parsed.shard_plan().unwrap_err();
+        assert!(err.contains("must equal"), "{err}");
+        let bogus = format!("{base}\n[cluster]\ndevices = 2\nstrategy = \"diagonal\"\n");
+        assert!(ExperimentConfig::parse(&bogus).unwrap().shard_plan().is_err());
+        let indivisible = format!("{base}\n[cluster]\ndevices = 3\n");
+        let err = ExperimentConfig::parse(&indivisible).unwrap().shard_plan().unwrap_err();
+        assert!(err.contains("never split"), "{err}");
+        // Unknown per-device preset reports the available list.
+        let badtopo = format!("{base}\n[cluster]\ndevices = 2\ntopology = \"b200\"\n");
+        let err = ExperimentConfig::parse(&badtopo).unwrap().cluster_topology().unwrap_err();
+        assert!(err.contains("available"), "{err}");
+    }
+
+    #[test]
+    fn example_cluster_file_stays_reconciled() {
+        // Same contract as `example_experiment_file_stays_reconciled`,
+        // for the worked cluster scenario: the file must parse, build the
+        // cluster topology + shard plan + serving config it documents,
+        // and every key its reference block documents must be one the
+        // parser reads — with the full [cluster] key set covered.
+        let text = include_str!("../../../examples/cluster.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        let cluster = c.cluster_topology().unwrap();
+        assert_eq!(cluster.num_devices(), 8);
+        let plan = c.shard_plan().unwrap();
+        assert_eq!(plan.tp, 8);
+        let serve = c.serve_config().unwrap();
+        assert_eq!((serve.h_q, serve.h_k), (64, 8));
+        // The plan must shard the served geometry cleanly.
+        let local = plan.local_attn(&serve.base_geometry());
+        assert_eq!((local.h_q, local.h_k), (8, 1));
+
+        let documented = documented_keys(text);
+        for key in &documented {
+            assert!(
+                *key == "topology"
+                    || ATTENTION_KEYS.contains(key)
+                    || SIM_KEYS.contains(key)
+                    || SERVE_KEYS.contains(key)
+                    || CLUSTER_KEYS.contains(key),
+                "examples/cluster.ini documents key '{key}' the parser does not read"
+            );
+        }
+        for key in CLUSTER_KEYS {
+            assert!(
+                documented.contains(&key),
+                "examples/cluster.ini does not document the [cluster] key '{key}'"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,412 @@
+//! Step executors: how the continuous-batching decode serving loop
+//! prices one step's kernel launches (docs/CLUSTER.md §4).
+//!
+//! [`super::service::serve_decode`] historically called the simulation
+//! driver directly, which welded the loop to exactly one device. The loop
+//! is now generic over a [`StepExecutor`]:
+//!
+//! * [`SingleDeviceExecutor`] preserves the historical behavior
+//!   *byte-for-byte* — same jobs, same driver calls, same
+//!   floating-point accumulation order (pinned by
+//!   `tests/cluster_serving.rs` against the tp = 1 cluster path and by
+//!   `tests/serving_loop.rs` across worker counts).
+//! * [`ClusterExecutor`] fans every launch across the shards of a
+//!   [`ShardPlan`]: each device runs the shard-local geometry on its own
+//!   topology (level-2 NUMA mapping unchanged within the shard), the
+//!   step advances by the *slowest* device
+//!   ([`crate::sim::merge_parallel`]), and an interconnect all-gather of
+//!   the sharded outputs is charged on top
+//!   ([`ClusterTopology::all_gather_sec`]).
+//!
+//! Both executors consult the advisor per distinct (batch, KV-bucket)
+//! geometry and price launches through the shared driver's report cache;
+//! the cluster executor advises on the *shard-local* geometry, so the
+//! split count fills one device's workgroup slots, not the cluster's.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterTopology, ShardPlan};
+use crate::driver::{SimDriver, SimJob};
+use crate::mapping::Policy;
+use crate::sim::{merge_parallel, SimConfig};
+use crate::topology::Topology;
+
+use super::advisor;
+use super::service::ServeConfig;
+
+/// Steady-state sample generations for prefill-kernel pricing (matches
+/// the figure sweeps' sampling depth).
+const GENERATIONS: usize = 2;
+
+/// Prices the kernel launches of one decode-serving step. The serving
+/// loop is generic over this trait; implementations own the advisor
+/// state (split-count advice per geometry) and the launch accounting.
+pub trait StepExecutor {
+    /// The mapping policy every launch this executor prices is mapped
+    /// with — the one the resulting [`super::ServeStats`] is stamped
+    /// with, so a run can never be labeled with a policy it didn't use.
+    fn policy(&self) -> Policy;
+
+    /// Price the prefill kernels of this step's newly admitted sessions
+    /// (prompt lengths in admission order). Returns one duration in
+    /// seconds per session, in the same order — the loop accumulates
+    /// them in order, so implementations control nothing about summation.
+    fn prefill_charges(&mut self, prompts: &[usize]) -> Vec<f64>;
+
+    /// Price this step's decode launches: one `(kv_bucket, batch)` group
+    /// per entry, in ascending bucket order. Returns one duration in
+    /// seconds per group, in the same order.
+    fn decode_charges(&mut self, groups: &[(usize, usize)]) -> Vec<f64>;
+
+    /// Times the advisor has been consulted (== first sightings of a
+    /// (batch, KV-bucket) geometry).
+    fn consults(&self) -> usize;
+
+    /// Distinct decode geometries launched so far.
+    fn distinct_geometries(&self) -> usize;
+
+    /// Aggregate L2 (hits, misses) across every decode launch priced so
+    /// far — the serving report's `decode_l2_hit_pct` source.
+    fn decode_l2(&self) -> (u64, u64);
+}
+
+/// The advisor/accounting state both executors embed — ONE definition of
+/// the per-(batch, KV-bucket) advice memo, the consult counter, and the
+/// decode L2 accumulators, so the two pricing paths cannot drift in
+/// their bookkeeping semantics.
+#[derive(Default)]
+struct AdviceState {
+    // (batch size, KV bucket) -> advised split count. A miss here IS the
+    // "KV crossed a bucket boundary / batch changed" re-advise event; the
+    // driver's report cache makes the advisor projections behind it free
+    // on repeats (DESIGN.md §8).
+    advice: BTreeMap<(usize, usize), usize>,
+    consults: usize,
+    l2_hits: u64,
+    l2_misses: u64,
+}
+
+impl AdviceState {
+    /// The advised split count for a geometry key, calling `advise`
+    /// (and counting a consult) exactly once per distinct key.
+    fn splits_for(&mut self, key: (usize, usize), advise: impl FnOnce() -> usize) -> usize {
+        match self.advice.get(&key) {
+            Some(&s) => s,
+            None => {
+                self.consults += 1;
+                let s = advise();
+                self.advice.insert(key, s);
+                s
+            }
+        }
+    }
+
+    /// Accumulate one decode launch's L2 statistics.
+    fn record_l2(&mut self, hits: u64, misses: u64) {
+        self.l2_hits += hits;
+        self.l2_misses += misses;
+    }
+}
+
+/// The historical single-device execution path, factored behind
+/// [`StepExecutor`] with byte-identical output.
+pub struct SingleDeviceExecutor<'a> {
+    driver: &'a SimDriver,
+    topo: &'a Topology,
+    cfg: &'a ServeConfig,
+    policy: Policy,
+    state: AdviceState,
+}
+
+impl<'a> SingleDeviceExecutor<'a> {
+    /// An executor pricing every launch on one device.
+    pub fn new(
+        driver: &'a SimDriver,
+        topo: &'a Topology,
+        cfg: &'a ServeConfig,
+        policy: Policy,
+    ) -> Self {
+        SingleDeviceExecutor { driver, topo, cfg, policy, state: AdviceState::default() }
+    }
+}
+
+impl StepExecutor for SingleDeviceExecutor<'_> {
+    fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    fn prefill_charges(&mut self, prompts: &[usize]) -> Vec<f64> {
+        let jobs: Vec<SimJob> = prompts
+            .iter()
+            .map(|&p| {
+                let attn = self.cfg.geometry(1, p.clamp(1, self.cfg.kv_cap));
+                let sim = SimConfig::sampled(self.policy, self.topo, GENERATIONS);
+                SimJob::forward(self.topo, &attn, sim)
+            })
+            .collect();
+        self.driver.run_all(jobs).iter().map(|r| r.est_total_sec).collect()
+    }
+
+    fn decode_charges(&mut self, groups: &[(usize, usize)]) -> Vec<f64> {
+        let mut jobs = Vec::with_capacity(groups.len());
+        for &(bucket, count) in groups {
+            let attn = self.cfg.geometry(count, bucket);
+            let (driver, topo) = (self.driver, self.topo);
+            let splits = self.state.splits_for((count, bucket), || {
+                advisor::advise_decode_with(driver, topo, &attn, None).num_splits.unwrap_or(1)
+            });
+            jobs.push(SimJob::decode(self.topo, &attn, SimConfig::decode(self.policy, splits)));
+        }
+        self.driver
+            .run_all(jobs)
+            .iter()
+            .map(|r| {
+                self.state.record_l2(r.l2.hits, r.l2.misses);
+                r.est_total_sec
+            })
+            .collect()
+    }
+
+    fn consults(&self) -> usize {
+        self.state.consults
+    }
+
+    fn distinct_geometries(&self) -> usize {
+        self.state.advice.len()
+    }
+
+    fn decode_l2(&self) -> (u64, u64) {
+        (self.state.l2_hits, self.state.l2_misses)
+    }
+}
+
+/// The cluster execution path: every launch fans out across the shard
+/// plan's devices, the step advances by the slowest device, and the
+/// interconnect all-gather of the sharded outputs is charged on top.
+///
+/// Device 0 is the *planner*: split-count advice is computed against its
+/// topology and applied cluster-wide (every preset builds homogeneous
+/// clusters, where this is exact; on a heterogeneous cluster the other
+/// devices still price their own kernels on their own topologies, but
+/// share device 0's split count — and policy applicability is checked
+/// per device by [`super::service::serve_decode_cluster_with`]).
+pub struct ClusterExecutor<'a> {
+    driver: &'a SimDriver,
+    cluster: &'a ClusterTopology,
+    plan: &'a ShardPlan,
+    cfg: &'a ServeConfig,
+    policy: Policy,
+    // Advice is keyed like the single-device executor's — per global
+    // (batch, KV bucket) — but computed on the shard-LOCAL geometry, so
+    // the split count fills ONE device's slots.
+    state: AdviceState,
+}
+
+impl<'a> ClusterExecutor<'a> {
+    /// An executor fanning every launch across `plan.tp` devices of
+    /// `cluster`. The plan's TP degree must equal the cluster size:
+    /// shards map 1:1 onto devices.
+    pub fn new(
+        driver: &'a SimDriver,
+        cluster: &'a ClusterTopology,
+        plan: &'a ShardPlan,
+        cfg: &'a ServeConfig,
+        policy: Policy,
+    ) -> Self {
+        cluster.validate().expect("valid cluster topology");
+        assert_eq!(
+            plan.tp,
+            cluster.num_devices(),
+            "shard plan tp must equal the cluster's device count"
+        );
+        ClusterExecutor { driver, cluster, plan, cfg, policy, state: AdviceState::default() }
+    }
+
+    /// The devices' merged launch cost plus the output all-gather for
+    /// `tokens` query tokens per device.
+    fn fan_out(
+        &self,
+        jobs: Vec<SimJob>,
+        launches: usize,
+        tokens: &[usize],
+    ) -> Vec<(f64, u64, u64)> {
+        debug_assert_eq!(jobs.len(), launches * self.cluster.num_devices());
+        let reports = self.driver.run_all(jobs);
+        let base = self.cfg.base_geometry();
+        reports
+            .chunks(self.cluster.num_devices())
+            .zip(tokens)
+            .map(|(chunk, &toks)| {
+                let merged = merge_parallel(chunk);
+                let gather =
+                    self.cluster.all_gather_sec(self.plan.output_bytes_per_device(&base, toks));
+                (merged.est_total_sec + gather, merged.l2.hits, merged.l2.misses)
+            })
+            .collect()
+    }
+}
+
+impl StepExecutor for ClusterExecutor<'_> {
+    fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    fn prefill_charges(&mut self, prompts: &[usize]) -> Vec<f64> {
+        let n_dev = self.cluster.num_devices();
+        let mut jobs = Vec::with_capacity(prompts.len() * n_dev);
+        let mut tokens = Vec::with_capacity(prompts.len());
+        for &p in prompts {
+            let toks = p.clamp(1, self.cfg.kv_cap);
+            tokens.push(toks);
+            let attn = self.cfg.geometry(1, toks);
+            for d in 0..n_dev {
+                let sim = SimConfig::sampled(self.policy, self.cluster.device(d), GENERATIONS);
+                jobs.push(SimJob::sharded_forward(self.cluster, self.plan, d, &attn, sim));
+            }
+        }
+        self.fan_out(jobs, prompts.len(), &tokens).into_iter().map(|(sec, _, _)| sec).collect()
+    }
+
+    fn decode_charges(&mut self, groups: &[(usize, usize)]) -> Vec<f64> {
+        let n_dev = self.cluster.num_devices();
+        let mut jobs = Vec::with_capacity(groups.len() * n_dev);
+        let mut tokens = Vec::with_capacity(groups.len());
+        for &(bucket, count) in groups {
+            let attn = self.cfg.geometry(count, bucket);
+            let (driver, cluster, plan) = (self.driver, self.cluster, self.plan);
+            let splits = self.state.splits_for((count, bucket), || {
+                let local = plan.local_attn(&attn);
+                advisor::advise_decode_with(driver, cluster.device(0), &local, None)
+                    .num_splits
+                    .unwrap_or(1)
+            });
+            // One token emitted per active session in the group: the
+            // all-gather moves `count` sharded output rows.
+            tokens.push(count);
+            for d in 0..n_dev {
+                jobs.push(SimJob::sharded_decode(
+                    self.cluster,
+                    self.plan,
+                    d,
+                    &attn,
+                    SimConfig::decode(self.policy, splits),
+                ));
+            }
+        }
+        self.fan_out(jobs, groups.len(), &tokens)
+            .into_iter()
+            .map(|(sec, hits, misses)| {
+                self.state.record_l2(hits, misses);
+                sec
+            })
+            .collect()
+    }
+
+    fn consults(&self) -> usize {
+        self.state.consults
+    }
+
+    fn distinct_geometries(&self) -> usize {
+        self.state.advice.len()
+    }
+
+    fn decode_l2(&self) -> (u64, u64) {
+        (self.state.l2_hits, self.state.l2_misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ShardStrategy;
+    use crate::topology::presets;
+
+    fn fast_topo() -> Topology {
+        Topology {
+            cus_per_xcd: 8,
+            l2_bytes_per_xcd: 1024 * 1024,
+            hbm_bytes_per_sec: 1.1e12,
+            ..presets::mi300x()
+        }
+    }
+
+    fn tiny_serve() -> ServeConfig {
+        ServeConfig {
+            h_q: 16,
+            h_k: 8,
+            d_head: 64,
+            kv_cap: 8192,
+            kv_bucket: 2048,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_and_tp1_cluster_charges_are_bit_identical() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let cluster = ClusterTopology::node_of(&topo, 1);
+        let plan = ShardPlan::new(&cfg.base_geometry(), 1, ShardStrategy::Contiguous).unwrap();
+        let mut single = SingleDeviceExecutor::new(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        let mut tp1 =
+            ClusterExecutor::new(&driver, &cluster, &plan, &cfg, Policy::SwizzledHeadFirst);
+
+        let a = single.prefill_charges(&[2048, 4000]);
+        let b = tp1.prefill_charges(&[2048, 4000]);
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "tp=1 prefill charge diverged");
+        }
+
+        let groups = [(2048usize, 2usize), (4096, 1)];
+        let a = single.decode_charges(&groups);
+        let b = tp1.decode_charges(&groups);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "tp=1 decode charge diverged");
+        }
+        assert_eq!(single.consults(), 2);
+        assert_eq!(tp1.consults(), 2);
+        assert_eq!(single.distinct_geometries(), tp1.distinct_geometries());
+        assert_eq!(single.decode_l2(), tp1.decode_l2());
+    }
+
+    #[test]
+    fn cluster_executor_shards_shrink_device_work() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let base = cfg.base_geometry();
+        let plan2 = ShardPlan::new(&base, 2, ShardStrategy::Contiguous).unwrap();
+        let cluster2 = ClusterTopology::node_of(&topo, 2);
+        let mut tp1 = SingleDeviceExecutor::new(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        let mut tp2 =
+            ClusterExecutor::new(&driver, &cluster2, &plan2, &cfg, Policy::SwizzledHeadFirst);
+        // A long prefill: the sharded kernel runs on half the heads per
+        // device, so even with the all-gather charge the step is shorter.
+        let full = tp1.prefill_charges(&[8192])[0];
+        let sharded = tp2.prefill_charges(&[8192])[0];
+        assert!(
+            sharded < full,
+            "tp=2 prefill ({sharded:.3e} s) should beat tp=1 ({full:.3e} s)"
+        );
+        // Decode charges exist and both shards' L2 traffic is accounted.
+        let t = tp2.decode_charges(&[(8192, 2)]);
+        assert_eq!(t.len(), 1);
+        assert!(t[0] > 0.0);
+        let (h, m) = tp2.decode_l2();
+        assert!(h + m > 0, "decode L2 accounting is live");
+        assert_eq!(tp2.consults(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "device count")]
+    fn cluster_executor_rejects_tp_device_mismatch() {
+        let driver = SimDriver::new(1);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let cluster = ClusterTopology::node_of(&topo, 4);
+        let plan = ShardPlan::new(&cfg.base_geometry(), 2, ShardStrategy::Contiguous).unwrap();
+        let _ = ClusterExecutor::new(&driver, &cluster, &plan, &cfg, Policy::SwizzledHeadFirst);
+    }
+}

@@ -22,6 +22,13 @@
 //!   the first consumer that exercises the report cache across hundreds
 //!   of related geometries in one run.
 //!
+//! Launch *pricing* inside the decode loop is pluggable
+//! ([`executor::StepExecutor`]): the historical single-device path and
+//! the tensor-parallel cluster path ([`serve_decode_cluster`],
+//! docs/CLUSTER.md) share one loop, with the cluster executor fanning
+//! every launch across a [`crate::cluster::ShardPlan`]'s devices and
+//! charging the interconnect all-gather on top.
+//!
 //! The [`advisor`] ties both paths back to the paper: for each served
 //! attention geometry it recommends the mapping policy a real MI300X
 //! deployment should configure the kernel with, backed by a quick
@@ -31,6 +38,7 @@
 
 pub mod advisor;
 pub mod batcher;
+pub mod executor;
 pub mod router;
 pub mod service;
 
@@ -39,8 +47,11 @@ pub use advisor::{
     Advice,
 };
 pub use batcher::{ActiveSession, Batch, BatcherCore, BatcherConfig, StepBatcher};
+pub use executor::{ClusterExecutor, SingleDeviceExecutor, StepExecutor};
 pub use router::Router;
 pub use service::{
-    serve_decode, serve_decode_with, serve_report, serve_scenarios, AttentionService, ServeConfig,
-    ServeReport, ServeRow, ServeScenario, ServeStats, ServiceConfig, ServiceMetrics, Waiter,
+    cluster_row, cluster_scenarios, serve_cluster_report, serve_decode, serve_decode_cluster,
+    serve_decode_cluster_with, serve_decode_with, serve_report, serve_scenarios, AttentionService,
+    ClusterReport, ClusterRow, ClusterScenario, ServeConfig, ServeReport, ServeRow, ServeScenario,
+    ServeStats, ServiceConfig, ServiceMetrics, Waiter,
 };

@@ -28,18 +28,20 @@ use std::time::{Duration, Instant};
 use crate::util::oneshot;
 
 use crate::attn::AttnConfig;
-use crate::driver::{self, SimDriver, SimJob};
+use crate::cluster::{ClusterTopology, ShardPlan, ShardStrategy};
+use crate::driver::{self, SimDriver};
 use crate::mapping::Policy;
 use crate::metrics::{percentile, LatencyHistogram, Table};
 use crate::runtime::{inputs, Runtime};
-use crate::sim::SimConfig;
 use crate::topology::Topology;
 use crate::util::json::Json;
-use crate::workload::SessionGenerator;
+use crate::workload::sweeps::CLUSTER_TP;
 use crate::workload::Request;
+use crate::workload::SessionGenerator;
 
 use super::advisor;
 use super::batcher::{Batch, BatcherConfig, BatcherCore, StepBatcher};
+use super::executor::{ClusterExecutor, SingleDeviceExecutor, StepExecutor};
 use super::router::Router;
 
 /// Service configuration.
@@ -602,6 +604,10 @@ pub struct ServeStats {
     /// Simulated time spent in prefill kernels (stalls decode — the
     /// continuous-batching TPOT tax; see docs/SERVING.md §4).
     pub prefill_sec: f64,
+    /// Aggregate L2 hit rate (%) across every decode launch the run
+    /// priced — the serving-loop analogue of the `decode` figure's
+    /// metric (summed over all shards for cluster runs).
+    pub decode_l2_hit_pct: f64,
     /// Times the advisor was (re-)consulted — once per distinct
     /// (batch size, KV bucket) geometry the loop encountered.
     pub advisor_consults: usize,
@@ -625,6 +631,7 @@ impl ServeStats {
             ("tpot_p50_ms", Json::num(self.tpot_p50_ms)),
             ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
             ("prefill_sec", Json::num(self.prefill_sec)),
+            ("decode_l2_hit_pct", Json::num(self.decode_l2_hit_pct)),
             ("advisor_consults", Json::num(self.advisor_consults as f64)),
             ("distinct_geometries", Json::num(self.distinct_geometries as f64)),
             ("truncated", Json::Bool(self.truncated)),
@@ -661,6 +668,7 @@ impl ServeReport {
                 "tokens/s",
                 "TPOT p50 (ms)",
                 "TPOT p99 (ms)",
+                "dec L2 %",
                 "sessions",
                 "tokens",
                 "steps",
@@ -673,6 +681,7 @@ impl ServeReport {
                     format!("{:.0}", s.tokens_per_sec),
                     format!("{:.3}", s.tpot_p50_ms),
                     format!("{:.3}", s.tpot_p99_ms),
+                    format!("{:.1}", s.decode_l2_hit_pct),
                     format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
                     s.tokens.to_string(),
                     s.steps.to_string(),
@@ -802,6 +811,62 @@ pub fn serve_decode_with(
         cfg.h_q,
         topo.num_xcds
     );
+    let mut exec = SingleDeviceExecutor::new(driver, topo, cfg, policy);
+    run_serve_loop(&mut exec, cfg)
+}
+
+/// [`serve_decode`] across a cluster: the same continuous-batching loop,
+/// with every kernel launch fanned out over the shard plan's devices by a
+/// [`ClusterExecutor`] — each device runs the shard-local geometry, the
+/// step advances by the slowest device, and the interconnect all-gather
+/// of the sharded outputs is charged on top (docs/CLUSTER.md). Uses the
+/// process-wide shared driver like [`serve_decode`].
+pub fn serve_decode_cluster(
+    cluster: &ClusterTopology,
+    plan: &ShardPlan,
+    cfg: &ServeConfig,
+    policy: Policy,
+) -> ServeStats {
+    serve_decode_cluster_with(driver::global(), cluster, plan, cfg, policy)
+}
+
+/// [`serve_decode_cluster`] through an explicit driver. At `tp = 1` the
+/// output is byte-identical to [`serve_decode_with`] on the same device
+/// (pinned by `tests/cluster_serving.rs`): a one-device cluster launches
+/// the identical jobs and its all-gather charge is exactly zero.
+pub fn serve_decode_cluster_with(
+    driver: &SimDriver,
+    cluster: &ClusterTopology,
+    plan: &ShardPlan,
+    cfg: &ServeConfig,
+    policy: Policy,
+) -> ServeStats {
+    cfg.validate().expect("valid serve config");
+    let local = plan.local_attn(&cfg.base_geometry());
+    // Every device runs the shard-local geometry, so the policy must be
+    // applicable on each one — a heterogeneous cluster with one
+    // incompatible device is rejected here, not silently mispriced.
+    for (i, device) in cluster.devices.iter().enumerate() {
+        assert!(
+            advisor::applicable_policies(device, &local).contains(&policy),
+            "policy {policy} is not applicable to the shard-local h_q={} on device {i}'s {} XCDs",
+            local.h_q,
+            device.num_xcds
+        );
+    }
+    let mut exec = ClusterExecutor::new(driver, cluster, plan, cfg, policy);
+    run_serve_loop(&mut exec, cfg)
+}
+
+/// The executor-generic continuous-batching loop body shared by the
+/// single-device and cluster serving paths: admission, KV-bucket
+/// grouping, time advance, and retirement are identical in both — only
+/// launch *pricing* differs, behind [`StepExecutor`]. Charges are
+/// accumulated one launch at a time in launch order, so an executor
+/// cannot perturb the floating-point summation the determinism tests pin.
+/// The stats are stamped with the executor's own policy, so a run can
+/// never be labeled with a policy it didn't price.
+fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats {
     let mut gen = SessionGenerator::new(
         cfg.seed,
         cfg.arrival_per_sec,
@@ -815,12 +880,6 @@ pub fn serve_decode_with(
     let mut tokens = 0u64;
     let mut steps = 0usize;
     let mut tpot_ms: Vec<f64> = Vec::new();
-    // (batch size, KV bucket) -> advised split count. A miss here IS the
-    // "KV crossed a bucket boundary / batch changed" re-advise event; the
-    // driver's report cache makes the advisor projections behind it free
-    // on repeats (DESIGN.md §8).
-    let mut advice: BTreeMap<(usize, usize), usize> = BTreeMap::new();
-    let mut consults = 0usize;
 
     while steps < cfg.max_steps && !batcher.done() {
         if batcher.active().is_empty() {
@@ -837,41 +896,21 @@ pub fn serve_decode_with(
         // admissions stretch every active session's TPOT — the
         // continuous-batching prefill tax.
         if !newly.is_empty() {
-            let jobs: Vec<SimJob> = newly
-                .iter()
-                .map(|s| {
-                    let attn = cfg.geometry(1, s.prefill.clamp(1, cfg.kv_cap));
-                    SimJob::forward(topo, &attn, SimConfig::sampled(policy, topo, 2))
-                })
-                .collect();
-            for r in driver.run_all(jobs) {
-                prefill_sec += r.est_total_sec;
-                step_sec += r.est_total_sec;
+            let prompts: Vec<usize> = newly.iter().map(|s| s.prefill).collect();
+            for t in exec.prefill_charges(&prompts) {
+                prefill_sec += t;
+                step_sec += t;
             }
         }
         // Iteration-level batch: group the active set by bucketed KV
         // length; each group is one two-phase split-KV decode launch.
-        let mut groups: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut grouped: BTreeMap<usize, usize> = BTreeMap::new();
         for a in batcher.active() {
-            *groups.entry(cfg.bucket_of(a.kv_len(cfg.kv_cap))).or_insert(0) += 1;
+            *grouped.entry(cfg.bucket_of(a.kv_len(cfg.kv_cap))).or_insert(0) += 1;
         }
-        let mut jobs = Vec::with_capacity(groups.len());
-        for (&bucket, &count) in &groups {
-            let attn = cfg.geometry(count, bucket);
-            let splits = match advice.get(&(count, bucket)) {
-                Some(&s) => s,
-                None => {
-                    consults += 1;
-                    let a = advisor::advise_decode_with(driver, topo, &attn, None);
-                    let s = a.num_splits.unwrap_or(1);
-                    advice.insert((count, bucket), s);
-                    s
-                }
-            };
-            jobs.push(SimJob::decode(topo, &attn, SimConfig::decode(policy, splits)));
-        }
-        for r in driver.run_all(jobs) {
-            step_sec += r.est_total_sec;
+        let groups: Vec<(usize, usize)> = grouped.into_iter().collect();
+        for t in exec.decode_charges(&groups) {
+            step_sec += t;
         }
         now_sec += step_sec;
         let emitted = batcher.advance_step();
@@ -880,8 +919,9 @@ pub fn serve_decode_with(
         steps += 1;
     }
 
+    let (l2_hits, l2_misses) = exec.decode_l2();
     ServeStats {
-        policy,
+        policy: exec.policy(),
         sessions_completed: batcher.completed(),
         tokens,
         steps,
@@ -890,8 +930,13 @@ pub fn serve_decode_with(
         tpot_p50_ms: percentile(&tpot_ms, 0.50),
         tpot_p99_ms: percentile(&tpot_ms, 0.99),
         prefill_sec,
-        advisor_consults: consults,
-        distinct_geometries: advice.len(),
+        decode_l2_hit_pct: if l2_hits + l2_misses > 0 {
+            100.0 * l2_hits as f64 / (l2_hits + l2_misses) as f64
+        } else {
+            0.0
+        },
+        advisor_consults: exec.consults(),
+        distinct_geometries: exec.distinct_geometries(),
         truncated: !batcher.done(),
     }
 }
@@ -914,6 +959,227 @@ pub fn serve_report(driver: &SimDriver, topo: &Topology, quick: bool) -> ServeRe
         })
         .collect();
     ServeReport { rows }
+}
+
+// ---------------------------------------------------------------------
+// Cluster serving: the tensor-parallel sweep (docs/CLUSTER.md)
+// ---------------------------------------------------------------------
+
+/// One cluster-sweep scenario: a serving configuration at one TP degree.
+#[derive(Debug, Clone)]
+pub struct ClusterScenario {
+    /// Row label including the TP degree.
+    pub label: String,
+    /// Scenario label without the TP suffix (ties TP rows of one
+    /// scenario together for scaling-efficiency reporting).
+    pub base: String,
+    /// The loop configuration the row runs (once per policy).
+    pub cfg: ServeConfig,
+    /// Tensor-parallel degree (devices in the cluster).
+    pub tp: usize,
+}
+
+/// The cluster serving sweep: Llama-3 70B (GQA-8) scenarios crossed with
+/// the TP axis ([`CLUSTER_TP`]). `quick` runs one scenario at the axis
+/// endpoints (`tp ∈ {1, 8}` — enough for the TP-8 vs TP-1 scaling
+/// check); the full sweep runs every degree and adds a long-context
+/// scenario. Prompts skew long so the TP win (each device prefills
+/// `H_Q/tp` heads) dominates the per-step all-gather tax.
+pub fn cluster_scenarios(quick: bool) -> Vec<ClusterScenario> {
+    let base = ServeConfig {
+        prefill_lengths: vec![8192, 32768],
+        decode_tokens: vec![32, 128],
+        arrival_per_sec: 80.0,
+        sessions: 10,
+        max_active: 8,
+        max_steps: 1600,
+        ..ServeConfig::default()
+    };
+    // Quick mode runs the axis ENDPOINTS by construction, so extending
+    // CLUSTER_TP automatically moves the quick sweep (and the TP-max vs
+    // TP-min scaling checks built on it) to the new extremes.
+    let endpoints = [CLUSTER_TP[0], *CLUSTER_TP.last().unwrap()];
+    let tps: &[usize] = if quick { &endpoints } else { &CLUSTER_TP };
+    let mut scenarios = vec![("llama3-70b arr=80/s cap=8".to_string(), base.clone())];
+    if !quick {
+        scenarios.push((
+            "llama3-70b long-ctx arr=40/s cap=8".into(),
+            ServeConfig {
+                arrival_per_sec: 40.0,
+                prefill_lengths: vec![16 * 1024, 64 * 1024],
+                decode_tokens: vec![64, 256],
+                max_steps: 3200,
+                ..base
+            },
+        ));
+    }
+    let mut out = Vec::new();
+    for (label, cfg) in scenarios {
+        for &tp in tps {
+            out.push(ClusterScenario {
+                label: format!("{label} tp={tp}"),
+                base: label.clone(),
+                cfg: cfg.clone(),
+                tp,
+            });
+        }
+    }
+    out
+}
+
+/// One cluster-report row: a (scenario, TP degree) pair with per-policy
+/// serving stats.
+#[derive(Debug, Clone)]
+pub struct ClusterRow {
+    /// Row label (scenario + TP degree).
+    pub label: String,
+    /// Scenario label without the TP suffix.
+    pub base: String,
+    /// Tensor-parallel degree of this row.
+    pub tp: usize,
+    /// One [`ServeStats`] per applicable policy.
+    pub stats: Vec<ServeStats>,
+}
+
+/// The cluster serving report the `cluster` CLI subcommand emits: every
+/// sweep scenario at every TP degree, each comparing the applicable
+/// mapping policies, with scaling efficiency against the scenario's
+/// `tp = 1` row.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Rows in sweep order (scenario-major, TP ascending).
+    pub rows: Vec<ClusterRow>,
+}
+
+impl ClusterReport {
+    /// Stats for (row label, policy), for assertions in tests/benches.
+    pub fn stats(&self, label: &str, policy: Policy) -> Option<&ServeStats> {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)?
+            .stats
+            .iter()
+            .find(|s| s.policy == policy)
+    }
+
+    /// Scaling efficiency of a row's policy against the same scenario's
+    /// `tp = 1` row: `tokens_per_sec / (tp × tokens_per_sec(tp=1))`.
+    /// 1.0 = ideal linear scaling; `None` when the `tp = 1` row is
+    /// missing or degenerate.
+    pub fn efficiency(&self, row: &ClusterRow, policy: Policy) -> Option<f64> {
+        let this = row.stats.iter().find(|s| s.policy == policy)?;
+        let base = self
+            .rows
+            .iter()
+            .find(|r| r.base == row.base && r.tp == 1)?
+            .stats
+            .iter()
+            .find(|s| s.policy == policy)?;
+        if base.tokens_per_sec <= 0.0 {
+            return None;
+        }
+        Some(this.tokens_per_sec / (row.tp as f64 * base.tokens_per_sec))
+    }
+
+    /// Aligned-table rendering (one table per (scenario, TP) row).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            let mut t = Table::new(&[
+                "policy",
+                "tokens/s",
+                "scale eff",
+                "dec L2 %",
+                "TPOT p50 (ms)",
+                "sessions",
+                "re-advised",
+            ]);
+            for s in &row.stats {
+                let eff = self
+                    .efficiency(row, s.policy)
+                    .map(|e| format!("{e:.2}"))
+                    .unwrap_or_else(|| "-".into());
+                t.row(vec![
+                    s.policy.label().into(),
+                    format!("{:.0}", s.tokens_per_sec),
+                    eff,
+                    format!("{:.1}", s.decode_l2_hit_pct),
+                    format!("{:.3}", s.tpot_p50_ms),
+                    format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
+                    s.advisor_consults.to_string(),
+                ]);
+            }
+            out.push_str(&format!("== cluster — {} ==\n{}", row.label, t.render()));
+        }
+        if self.rows.iter().any(|r| r.stats.iter().any(|s| s.truncated)) {
+            out.push_str("(* = step budget exhausted before the trace drained)\n");
+        }
+        out
+    }
+
+    /// JSON rendering for `cluster --json` (stable row/policy order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "rows",
+            Json::arr(self.rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("label", Json::str(r.label.clone())),
+                    ("tp", Json::num(r.tp as f64)),
+                    (
+                        "policies",
+                        Json::arr(r.stats.iter().map(|s| {
+                            let mut obj = match s.to_json() {
+                                Json::Obj(pairs) => pairs,
+                                _ => unreachable!("ServeStats::to_json returns an object"),
+                            };
+                            if let Some(e) = self.efficiency(r, s.policy) {
+                                obj.push(("scaling_efficiency".into(), Json::num(e)));
+                            }
+                            Json::Obj(obj)
+                        })),
+                    ),
+                ])
+            })),
+        )])
+    }
+}
+
+/// Build one cluster-report row: the scenario served under every policy
+/// applicable to the shard-local geometry. The ONE place row assembly
+/// lives — the sweep ([`serve_cluster_report`]) and the CLI's
+/// `cluster --config` path both call it, so they cannot diverge.
+pub fn cluster_row(
+    driver: &SimDriver,
+    cluster: &ClusterTopology,
+    plan: &ShardPlan,
+    cfg: &ServeConfig,
+    label: String,
+    base: String,
+) -> ClusterRow {
+    let local = plan.local_attn(&cfg.base_geometry());
+    let stats = advisor::applicable_policies(cluster.device(0), &local)
+        .into_iter()
+        .map(|p| serve_decode_cluster_with(driver, cluster, plan, cfg, p))
+        .collect();
+    ClusterRow { label, base, tp: plan.tp, stats }
+}
+
+/// The full cluster serving report: every sweep scenario at every TP
+/// degree under every applicable policy, all priced through one driver —
+/// identical shards of a homogeneous cluster collapse to single cache
+/// entries, and the `tp = 1` rows share reports with the plain `serve`
+/// sweep where geometries coincide.
+pub fn serve_cluster_report(driver: &SimDriver, device: &Topology, quick: bool) -> ClusterReport {
+    let rows = cluster_scenarios(quick)
+        .into_iter()
+        .map(|sc| {
+            let cluster = ClusterTopology::node_of(device, sc.tp);
+            let plan = ShardPlan::new(&sc.cfg.base_geometry(), sc.tp, ShardStrategy::Contiguous)
+                .expect("sweep TP degrees divide the scenario's KV heads");
+            cluster_row(driver, &cluster, &plan, &sc.cfg, sc.label, sc.base)
+        })
+        .collect();
+    ClusterReport { rows }
 }
 
 #[cfg(test)]
@@ -1029,6 +1295,66 @@ mod serve_tests {
             "KV growth must cross a bucket boundary (saw {} geometries)",
             s.distinct_geometries
         );
+    }
+
+    #[test]
+    fn cluster_scenarios_cover_the_tp_axis() {
+        let quick = cluster_scenarios(true);
+        assert_eq!(quick.len(), 2, "quick: one scenario at the axis endpoints");
+        assert_eq!(quick[0].tp, 1);
+        assert_eq!(quick[1].tp, 8);
+        assert!(quick[1].label.ends_with("tp=8"), "{}", quick[1].label);
+        assert_eq!(quick[0].base, quick[1].base, "same scenario across TP rows");
+        let full = cluster_scenarios(false);
+        assert_eq!(full.len(), 2 * CLUSTER_TP.len());
+        for sc in &full {
+            sc.cfg.validate().unwrap();
+            assert!(CLUSTER_TP.contains(&sc.tp));
+            // Every degree divides the KV heads: the plan always builds.
+            ShardPlan::new(&sc.cfg.base_geometry(), sc.tp, ShardStrategy::Contiguous).unwrap();
+        }
+    }
+
+    #[test]
+    fn cluster_report_efficiency_and_render() {
+        // A tiny two-TP cluster sweep on the scaled topology: efficiency
+        // is 1.0 by definition on the tp=1 row and finite on tp=2.
+        let driver = SimDriver::new(2);
+        let device = fast_topo();
+        let cfg = tiny_serve();
+        let mut rows = Vec::new();
+        for tp in [1usize, 2] {
+            let cluster = ClusterTopology::node_of(&device, tp);
+            let plan =
+                ShardPlan::new(&cfg.base_geometry(), tp, ShardStrategy::Contiguous).unwrap();
+            let stats = vec![serve_decode_cluster_with(
+                &driver,
+                &cluster,
+                &plan,
+                &cfg,
+                Policy::SwizzledHeadFirst,
+            )];
+            rows.push(ClusterRow {
+                label: format!("tiny tp={tp}"),
+                base: "tiny".into(),
+                tp,
+                stats,
+            });
+        }
+        let report = ClusterReport { rows };
+        let tp1 = report.stats("tiny tp=1", Policy::SwizzledHeadFirst).unwrap();
+        let tp2 = report.stats("tiny tp=2", Policy::SwizzledHeadFirst).unwrap();
+        assert_eq!(tp1.tokens, tp2.tokens, "same trace at every TP degree");
+        let e1 = report.efficiency(&report.rows[0], Policy::SwizzledHeadFirst).unwrap();
+        assert!((e1 - 1.0).abs() < 1e-12, "tp=1 efficiency is 1.0 by definition, got {e1}");
+        let e2 = report.efficiency(&report.rows[1], Policy::SwizzledHeadFirst).unwrap();
+        assert!(e2 > 0.0 && e2.is_finite());
+        let rendered = report.render();
+        assert!(rendered.contains("scale eff"));
+        assert!(rendered.contains("tp=2"));
+        let json = report.to_json().render();
+        assert!(json.contains("\"scaling_efficiency\""));
+        assert!(json.contains("\"decode_l2_hit_pct\""));
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub use pool::{JobHandle, SimDriver};
 use std::sync::OnceLock;
 
 use crate::attn::AttnConfig;
+use crate::cluster::{ClusterTopology, ShardPlan};
 use crate::sim::{self, SimConfig, SimReport};
 use crate::topology::Topology;
 
@@ -97,6 +98,37 @@ impl SimJob {
             "decode jobs require a DecodeSplitKv sim config"
         );
         SimJob { topo: topo.clone(), attn: *attn, sim, pass: SimPass::Decode }
+    }
+
+    /// Forward-kernel job for one shard of a cluster deployment: the
+    /// plan's shard-local geometry on `device`'s own topology. Reports
+    /// are memoized per (device topology, shard geometry, sim config) —
+    /// on a homogeneous cluster with a balanced [`ShardPlan`] every
+    /// shard's job is the same key, so the whole cluster-wide launch
+    /// costs one engine run and every other (device, shard) pair is a
+    /// cache hit.
+    pub fn sharded_forward(
+        cluster: &ClusterTopology,
+        plan: &ShardPlan,
+        device: usize,
+        attn: &AttnConfig,
+        sim: SimConfig,
+    ) -> SimJob {
+        SimJob::forward(cluster.device(device), &plan.local_attn(attn), sim)
+    }
+
+    /// Decode-pass job for one shard of a cluster deployment (see
+    /// [`SimJob::sharded_forward`] for the per-(device, shard)
+    /// memoization contract; `sim.kernel` must be `DecodeSplitKv` like
+    /// [`SimJob::decode`]).
+    pub fn sharded_decode(
+        cluster: &ClusterTopology,
+        plan: &ShardPlan,
+        device: usize,
+        attn: &AttnConfig,
+        sim: SimConfig,
+    ) -> SimJob {
+        SimJob::decode(cluster.device(device), &plan.local_attn(attn), sim)
     }
 
     /// Execute the job directly (no cache, no pool). The pool's workers
@@ -182,6 +214,36 @@ mod tests {
         let second = driver.run_all(vec![job]);
         assert_eq!(driver.cache().hits(), 1, "repeat decode job served from cache");
         assert_eq!(first[0].to_json().render(), second[0].to_json().render());
+    }
+
+    #[test]
+    fn sharded_jobs_of_identical_shards_share_one_cache_entry() {
+        // The cluster memoization contract: on a homogeneous cluster
+        // with a balanced plan, the per-(device, shard) jobs of one
+        // launch are one cache key — N devices cost ONE engine run.
+        use crate::cluster::{ClusterTopology, ShardPlan, ShardStrategy};
+        let cluster = ClusterTopology::node_of(&tiny_topo(), 4);
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::gqa(1, 16, 8, 1024, 64) };
+        let plan = ShardPlan::new(&cfg, 4, ShardStrategy::Contiguous).unwrap();
+        let sim = SimConfig::forward(Policy::SwizzledHeadFirst);
+        let jobs: Vec<SimJob> = (0..4)
+            .map(|d| SimJob::sharded_forward(&cluster, &plan, d, &cfg, sim))
+            .collect();
+        assert_eq!(jobs[0], jobs[3], "identical shards, identical key");
+        assert_eq!(jobs[0].attn.h_q, 4, "shard-local heads");
+        assert_eq!(jobs[0].attn.h_k, 2);
+        // One worker: the dedup count is deterministic (two workers may
+        // race the same key and both miss — documented in cache.rs).
+        let driver = SimDriver::new(1);
+        let reports = driver.run_all(jobs);
+        assert_eq!(driver.cache().misses(), 1, "one engine run for the whole launch");
+        assert_eq!(driver.cache().hits(), 3);
+        assert_eq!(reports[0].to_json().render(), reports[3].to_json().render());
+        // Decode variant goes through the same path.
+        let dsim = SimConfig::decode(Policy::SwizzledHeadFirst, 2);
+        let djob = SimJob::sharded_decode(&cluster, &plan, 0, &cfg, dsim);
+        assert_eq!(djob.pass, SimPass::Decode);
+        assert_eq!(djob.attn.h_q, 4);
     }
 
     #[test]

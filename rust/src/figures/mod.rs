@@ -341,6 +341,33 @@ pub fn serve_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResu
     }
 }
 
+/// Cluster figure (docs/CLUSTER.md): decode throughput of the
+/// tensor-parallel cluster serving sweep, one row per (scenario, TP
+/// degree) over clusters of `topo` devices. The two-level claim this
+/// figure carries: Swizzled Head-first's tokens/s (and decode L2 hit
+/// rate, via [`crate::coordinator::ClusterReport`]) is >= Naive
+/// Head-first's on every (tp, policy) row — the level-2 mapping win
+/// survives head sharding — and TP-8 outruns TP-1 (asserted by
+/// `tests/cluster_serving.rs` and the `cluster_scaling` bench). The
+/// richer report (scaling efficiency vs. ideal, TPOT) is
+/// `numa-attn cluster`.
+pub fn cluster_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    let report = crate::coordinator::serve_cluster_report(driver, topo, quick);
+    FigureResult {
+        id: "cluster".into(),
+        title: "Tensor-parallel cluster decode serving throughput (Llama-3 70B GQA-8)".into(),
+        metric: "decode tokens/s over simulated time".into(),
+        rows: report
+            .rows
+            .iter()
+            .map(|row| FigureRow {
+                label: row.label.clone(),
+                values: row.stats.iter().map(|s| (s.policy, s.tokens_per_sec)).collect(),
+            })
+            .collect(),
+    }
+}
+
 /// Regenerate every figure (the `numa-attn figure all` path) through one
 /// driver: the whole set is still submitted figure-by-figure, but each
 /// figure's grid fans out across the pool and repeated (point, policy)
@@ -355,6 +382,7 @@ pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult
         fig16(driver, topo, quick),
         decode_fig(driver, topo, quick),
         serve_fig(driver, topo, quick),
+        cluster_fig(driver, topo, quick),
         gemm_motivation(topo),
     ]
 }

@@ -9,6 +9,9 @@
 //! The crate is organized bottom-up:
 //!
 //! * [`topology`] — chiplet GPU architecture models (MI300X preset etc.)
+//! * [`cluster`] — the second NUMA level: clusters of devices with
+//!   tensor-parallel head sharding ([`cluster::ClusterTopology`],
+//!   [`cluster::ShardPlan`]; docs/CLUSTER.md)
 //! * [`cache`] — set-associative/LRU cache models with hit/miss statistics
 //! * [`mem`] — HBM bandwidth/queue model shared across XCDs
 //! * [`attn`] — FlashAttention2 grid model: workgroups and their tile
@@ -37,6 +40,7 @@
 
 pub mod attn;
 pub mod cache;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod driver;
@@ -53,6 +57,7 @@ pub mod util;
 pub mod workload;
 
 pub use attn::AttnConfig;
+pub use cluster::{ClusterTopology, ShardPlan, ShardStrategy};
 pub use driver::{ReportCache, SimDriver, SimJob, SimPass};
 pub use mapping::Policy;
 pub use sim::{SimConfig, SimReport};

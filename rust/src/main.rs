@@ -4,11 +4,14 @@
 //! Subcommands:
 //!   simulate  — run the chiplet simulator on one attention configuration
 //!   decode    — run the two-phase split-KV decode pass (auto split count)
-//!   figure    — regenerate a paper figure (12..16, decode, serve, gemm, all)
+//!   figure    — regenerate a paper figure (12..16, decode, serve,
+//!               cluster, gemm, all)
 //!   explain   — print Table-1 style topology specs and mapping layouts
 //!   verify    — check AOT artifacts against golden checksums
 //!   serve     — run the continuous-batching decode serving loop
 //!               (docs/SERVING.md); `--live` runs the PJRT prefill demo
+//!   cluster   — run the serving loop tensor-parallel across a cluster of
+//!               devices (two-level NUMA; docs/CLUSTER.md)
 //!
 //! Run `numa-attn <subcommand> --help` for flags. The USAGE text below is
 //! pinned against README.md and the parsed flag set by `usage_tests`.
@@ -37,14 +40,15 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|serve|gemm|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|cluster|gemm|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
   numa-attn serve --live [--artifacts DIR] [--requests N] [--max-batch B]
                   [--max-wait-ms MS] [--seed S]
+  numa-attn cluster [--quick] [--config FILE] [--topo T] [--tp N] [--json]
 
-driver flags (simulate, decode, figure, serve):
+driver flags (simulate, decode, figure, serve, cluster):
   all simulations execute through the shared driver (src/driver): a worker
   pool plus a memoizing report cache keyed on (topology, attention, sim
   config). Results are bit-identical at any worker count.
@@ -75,6 +79,15 @@ serve flags (the continuous-batching decode loop; docs/SERVING.md):
   --live               run the live PJRT prefill demo instead (requires
                        artifacts; uses --artifacts/--requests/--max-batch/
                        --max-wait-ms/--seed)
+
+cluster flags (the tensor-parallel serving sweep; docs/CLUSTER.md):
+  --quick              one scenario at tp in {1, 8} (default: the full
+                       tp in {1, 2, 4, 8} sweep over --topo devices)
+  --config FILE        serve ONE scenario from an experiment file's
+                       [cluster] + [serve] sections instead of the sweep
+  --tp N               restrict the built-in sweep to one TP degree (the
+                       tp=1 baseline rows are kept: they anchor the
+                       scaling-efficiency column)
 ";
 
 fn main() {
@@ -109,6 +122,7 @@ fn run() -> anyhow::Result<()> {
         "explain" => cmd_explain(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         other => anyhow::bail!(
             "unknown subcommand '{other}' (expected one of: {})\n{USAGE}",
             SUBCOMMANDS.join(", ")
@@ -119,16 +133,12 @@ fn run() -> anyhow::Result<()> {
 /// Every CLI subcommand. `usage_tests` pins this list against the USAGE
 /// text, the dispatch match above, and README.md, so none of the three
 /// can drift from the others.
-const SUBCOMMANDS: [&str; 6] = ["simulate", "decode", "figure", "explain", "verify", "serve"];
+const SUBCOMMANDS: [&str; 7] =
+    ["simulate", "decode", "figure", "explain", "verify", "serve", "cluster"];
 
 fn topo_arg(args: &Args) -> anyhow::Result<numa_attn::topology::Topology> {
     let name: String = args.get_or("topo", "mi300x".to_string()).map_err(|e| anyhow::anyhow!(e))?;
-    presets::by_name(&name).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown topology '{name}' (available: {})",
-            presets::all_names().join(", ")
-        )
-    })
+    presets::by_name_or_err(&name).map_err(|e| anyhow::anyhow!(e))
 }
 
 /// Build the simulation driver from `--threads` / `--no-cache`.
@@ -342,6 +352,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "16" | "fig16" => vec![figures::fig16(&driver, &topo, quick)],
         "decode" => vec![figures::decode_fig(&driver, &topo, quick)],
         "serve" => vec![figures::serve_fig(&driver, &topo, quick)],
+        "cluster" => vec![figures::cluster_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
         "all" => figures::all(&driver, &topo, quick),
         other => anyhow::bail!("unknown figure '{other}'"),
@@ -440,6 +451,49 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     } else {
         let topo = topo_arg(args)?;
         coordinator::serve_report(&driver, &topo, args.has("quick"))
+    };
+    if args.has("json") {
+        println!("{}", report.to_json().render());
+    } else {
+        print!("{}", report.render());
+    }
+    print_driver_stats(&driver);
+    Ok(())
+}
+
+/// The tensor-parallel cluster serving sweep (docs/CLUSTER.md): run the
+/// built-in Llama-3 70B scenarios across the TP axis — or one
+/// `[cluster]` INI deployment — under every applicable mapping policy,
+/// fanning each step's launches over the shard plan's devices and
+/// charging the interconnect all-gather, and emit the deterministic
+/// cluster report (tokens/s, scaling efficiency vs. ideal, decode L2 hit
+/// rate per policy).
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    let a = |e: String| anyhow::anyhow!(e);
+    let driver = driver_arg(args)?;
+    let report = if let Some(path) = args.get::<String>("config").map_err(a)? {
+        let text = std::fs::read_to_string(&path)?;
+        let exp = ExperimentConfig::parse(&text).map_err(a)?;
+        let cluster = exp.cluster_topology().map_err(a)?;
+        let plan = exp.shard_plan().map_err(a)?;
+        let cfg = exp.serve_config().map_err(a)?;
+        let label = format!("{path} tp={}", plan.tp);
+        let row = coordinator::cluster_row(&driver, &cluster, &plan, &cfg, label, path);
+        coordinator::ClusterReport { rows: vec![row] }
+    } else {
+        let topo = topo_arg(args)?;
+        let mut report = coordinator::serve_cluster_report(&driver, &topo, args.has("quick"));
+        if let Some(tp) = args.get::<usize>("tp").map_err(a)? {
+            let degrees: Vec<usize> = report.rows.iter().map(|r| r.tp).collect();
+            anyhow::ensure!(
+                degrees.contains(&tp),
+                "no sweep rows at tp={tp} (sweep degrees: {degrees:?})"
+            );
+            // Keep the tp=1 rows: they are the baseline the requested
+            // degree's scaling efficiency is computed against.
+            report.rows.retain(|r| r.tp == tp || r.tp == 1);
+        }
+        report
     };
     if args.has("json") {
         println!("{}", report.to_json().render());

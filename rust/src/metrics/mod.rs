@@ -100,10 +100,26 @@ impl LatencyHistogram {
     }
 }
 
-/// Nearest-rank percentile of a sample set, `q` in `[0, 1]`. Sorts a
-/// copy with the IEEE-754 total order, so the result is deterministic
-/// for any input order — the serving report's TPOT p50/p99 go through
-/// this. Returns 0.0 for an empty slice.
+/// Nearest-rank percentile of a sample set, `q` in `[0, 1]`.
+///
+/// The exact rule (the "nearest-rank" method — **no interpolation**
+/// between samples; the result is always one of the inputs):
+///
+/// 1. sort a copy ascending with the IEEE-754 total order, so the result
+///    is deterministic for any input order (the serving report's TPOT
+///    p50/p99 go through this) and NaN-bearing inputs still order;
+/// 2. take the sample at rank `clamp(ceil(q · n), 1, n)` (1-based).
+///
+/// Consequences worth knowing at the edges:
+/// * empty slice → `0.0` (the one case where the result is not a sample);
+/// * single sample → that sample for every `q`;
+/// * `q = 0` (and any `q` with `q·n ≤ 1`) → the minimum, because the
+///   rank clamps up to 1 — so "p0" is the smallest sample, not an
+///   extrapolation below it;
+/// * `q = 1` (p100) → the maximum, and values of `q > 1` also clamp to
+///   it;
+/// * even-sized sets have no "middle average": `percentile(&[1.0, 2.0],
+///   0.5)` is `1.0` (rank `ceil(0.5·2) = 1`), not `1.5`.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
@@ -225,6 +241,33 @@ mod tests {
         let mut r = v;
         r.reverse();
         assert_eq!(percentile(&r, 0.5), percentile(&v, 0.5));
+    }
+
+    #[test]
+    fn percentile_edge_cases_pin_the_documented_rule() {
+        // Empty slice: 0.0, the one non-sample result.
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(percentile(&[], q), 0.0);
+        }
+        // Single sample: that sample at every quantile (rank clamps to 1).
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[7.5], q), 7.5);
+        }
+        // p0 is the minimum (rank clamps UP to 1), p100 the maximum —
+        // and an out-of-range q clamps rather than indexing out.
+        let v = [10.0, -3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), -3.0);
+        assert_eq!(percentile(&v, 1.0), 10.0);
+        assert_eq!(percentile(&v, 1.5), 10.0);
+        // Nearest rank means NO interpolation: the even-sized median is
+        // the lower of the two middle samples, never their average.
+        assert_eq!(percentile(&[1.0, 2.0], 0.5), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.0);
+        // Every non-empty result is one of the inputs.
+        for q in [0.0, 0.1, 0.33, 0.5, 0.77, 0.99, 1.0] {
+            let p = percentile(&v, q);
+            assert!(v.contains(&p), "q={q}: {p} is not a sample");
+        }
     }
 
     #[test]

@@ -372,6 +372,73 @@ fn merge_two_phase(attn: &AttnConfig, first: SimReport, second: SimReport) -> Si
     }
 }
 
+/// Merge the per-device reports of one cluster-wide kernel launch
+/// executed in *parallel* (one report per device, in device order): the
+/// dual of `merge_two_phase`'s sequential composition. Wall time is the
+/// slowest device (`max` of `est_total_sec` — the cluster step advances
+/// by its critical path), traffic and cache statistics are summed, the
+/// per-XCD statistics concatenate device-major (a cluster of 2× 8-XCD
+/// devices reports 16 per-XCD entries), and throughput is total
+/// completions over the critical-path window. The merged report keeps the
+/// FIRST report's policy/kernel/`sec_per_tick` identity; tick counts from
+/// other devices are rescaled onto that tick length like
+/// `merge_two_phase` does. Panics on an empty slice.
+pub fn merge_parallel(reports: &[SimReport]) -> SimReport {
+    let first = reports.first().expect("merge_parallel needs >= 1 report");
+    let mut l2 = CacheStats::default();
+    let mut l2_stats_per_xcd: Vec<CacheStats> = Vec::new();
+    let mut hbm = HbmStats::default();
+    let mut window_ticks_max = 0u64;
+    let mut window_completions = 0.0f64;
+    let mut est_total_sec = 0.0f64;
+    let mut est_total_ticks = 0.0f64;
+    let mut grid_size = 0usize;
+    let mut simulated_wgs = 0usize;
+    let mut flop_sec_sum = 0.0f64; // sum of (TFLOP/s x seconds) = TFLOPs
+    let mut truncated = false;
+    for r in reports {
+        l2.merge(&r.l2);
+        l2_stats_per_xcd.extend_from_slice(&r.l2_stats_per_xcd);
+        hbm.bytes_read += r.hbm.bytes_read;
+        hbm.bytes_written += r.hbm.bytes_written;
+        hbm.requests += r.hbm.requests;
+        hbm.mshr_merges += r.hbm.mshr_merges;
+        hbm.busy_ticks += r.hbm.busy_ticks;
+        hbm.queue_depth_sum += r.hbm.queue_depth_sum;
+        let scale = r.sec_per_tick / first.sec_per_tick;
+        window_ticks_max = window_ticks_max.max((r.ticks as f64 * scale).round() as u64);
+        window_completions += r.throughput_wgs_per_tick * r.ticks as f64;
+        est_total_sec = est_total_sec.max(r.est_total_sec);
+        est_total_ticks = est_total_ticks.max(r.est_total_ticks * scale);
+        grid_size += r.grid_size;
+        simulated_wgs += r.simulated_wgs;
+        flop_sec_sum += r.achieved_tflops * r.est_total_sec;
+        truncated |= r.truncated;
+    }
+    let l2_hit_rate_per_xcd = l2_stats_per_xcd.iter().map(CacheStats::hit_rate).collect();
+    SimReport {
+        policy: first.policy,
+        kernel: first.kernel,
+        grid_size,
+        simulated_wgs,
+        ticks: window_ticks_max,
+        sec_per_tick: first.sec_per_tick,
+        l2,
+        l2_stats_per_xcd,
+        l2_hit_rate_per_xcd,
+        hbm,
+        throughput_wgs_per_tick: if window_ticks_max > 0 {
+            window_completions / window_ticks_max as f64
+        } else {
+            0.0
+        },
+        est_total_ticks,
+        est_total_sec,
+        achieved_tflops: if est_total_sec > 0.0 { flop_sec_sum / est_total_sec } else { 0.0 },
+        truncated,
+    }
+}
+
 /// Mean stream length over a kernel's workgroups (causal-aware).
 pub(crate) fn avg_stream_len(cfg: &AttnConfig, kernel: KernelKind) -> f64 {
     match kernel {
@@ -599,6 +666,53 @@ mod tests {
             shf.hbm.bytes_read,
             nhf.hbm.bytes_read
         );
+    }
+
+    #[test]
+    fn merge_parallel_single_report_is_identity_on_cost() {
+        // The tp = 1 cluster path leans on this: merging one device's
+        // report must preserve its cost fields exactly (bit-for-bit for
+        // est_total_sec, which is what the serving loop charges).
+        let topo = tiny_topo();
+        let cfg = small_cfg();
+        let r = simulate(&topo, &cfg, &SimConfig::forward(Policy::SwizzledHeadFirst));
+        let m = merge_parallel(std::slice::from_ref(&r));
+        assert_eq!(m.est_total_sec.to_bits(), r.est_total_sec.to_bits());
+        assert_eq!(m.ticks, r.ticks);
+        assert_eq!(m.grid_size, r.grid_size);
+        assert_eq!(m.hbm.bytes_read, r.hbm.bytes_read);
+        assert_eq!(m.l2, r.l2);
+        assert_eq!(m.l2_stats_per_xcd, r.l2_stats_per_xcd);
+    }
+
+    #[test]
+    fn merge_parallel_sums_traffic_and_takes_critical_path() {
+        let topo = tiny_topo();
+        let cfg = small_cfg();
+        let r = simulate(&topo, &cfg, &SimConfig::forward(Policy::SwizzledHeadFirst));
+        // Two identical devices in parallel: same wall time, double
+        // traffic, per-XCD stats concatenated device-major.
+        let m = merge_parallel(&[r.clone(), r.clone()]);
+        assert_eq!(m.est_total_sec.to_bits(), r.est_total_sec.to_bits());
+        assert_eq!(m.ticks, r.ticks, "parallel devices do not add time");
+        assert_eq!(m.grid_size, 2 * r.grid_size);
+        assert_eq!(m.simulated_wgs, 2 * r.simulated_wgs);
+        assert_eq!(m.hbm.bytes_read, 2 * r.hbm.bytes_read);
+        assert_eq!(m.l2.accesses(), 2 * r.l2.accesses());
+        assert_eq!(m.l2_stats_per_xcd.len(), 2 * topo.num_xcds);
+        assert!((m.l2.hit_rate() - r.l2.hit_rate()).abs() < 1e-12);
+        // Twice the completions in the same window: double throughput.
+        assert!((m.throughput_wgs_per_tick - 2.0 * r.throughput_wgs_per_tick).abs() < 1e-9);
+        // A slower straggler device stretches the merged wall time.
+        let slow = simulate(&topo, &cfg, &SimConfig::forward(Policy::NaiveBlockFirst));
+        let (fast, slow) = if r.est_total_sec < slow.est_total_sec {
+            (r.clone(), slow)
+        } else {
+            (slow, r.clone())
+        };
+        let m = merge_parallel(&[fast.clone(), slow.clone()]);
+        assert_eq!(m.est_total_sec.to_bits(), slow.est_total_sec.to_bits());
+        assert_eq!(m.policy, fast.policy, "identity comes from the first report");
     }
 
     #[test]

@@ -85,6 +85,15 @@ pub fn by_name(name: &str) -> Option<Topology> {
     }
 }
 
+/// [`by_name`] with a self-describing error: an unknown preset name
+/// reports the full list of available presets. The one place the CLI,
+/// the experiment-file parser, and the cluster builder format that error.
+pub fn by_name_or_err(name: &str) -> Result<Topology, String> {
+    by_name(name).ok_or_else(|| {
+        format!("unknown topology preset '{name}' (available: {})", all_names().join(", "))
+    })
+}
+
 /// All preset names, for CLI help and sweep tooling.
 pub fn all_names() -> &'static [&'static str] {
     &["mi300x", "unified", "dual_die", "quad_die", "paper_fig7_10"]

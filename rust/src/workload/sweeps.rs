@@ -1,8 +1,10 @@
 //! Experiment sweep builders matching the paper's evaluation grids, plus
 //! the serving-regime split-KV decode sweeps (batch × KV length × split
-//! count) the `decode` figure plots.
+//! count) the `decode` figure plots and the tensor-parallel axis the
+//! cluster sweeps cross them with (docs/CLUSTER.md).
 
 use crate::attn::AttnConfig;
+use crate::cluster::{ShardPlan, ShardStrategy};
 
 use super::presets;
 
@@ -44,6 +46,10 @@ pub const DECODE_BATCH: [usize; 3] = [1, 4, 8];
 /// naive head-first mapping, hiding the locality difference the sweep
 /// measures (see docs/REFERENCE.md).
 pub const DECODE_SPLITS: [usize; 2] = [2, 4];
+/// Tensor-parallel degrees the cluster sweeps exercise. Every degree
+/// divides the GQA-8 sweeps' 8 KV heads, so a GQA-aware
+/// [`ShardPlan`] exists at each (KV heads are never split).
+pub const CLUSTER_TP: [usize; 4] = [1, 2, 4, 8];
 
 /// Paper Table 2: the MHA sensitivity grid (Figs. 12-13).
 /// D_HEAD = 128, BLOCK = 128x64.
@@ -141,6 +147,32 @@ pub fn gqa8_decode_sweep(n_ctxs: &[usize], batches: &[usize], splits: &[usize]) 
     decode_sweep(&presets::llama3_70b(), n_ctxs, batches, splits)
 }
 
+/// The GQA-8 decode sweep as ONE SHARD of a `tp`-way head-sharded
+/// deployment sees it: every point's geometry reduced to its shard-local
+/// view (`H_Q/tp` query heads, `H_K/tp` KV heads) through a contiguous
+/// [`ShardPlan`]. `tp` must divide the sweep's 8 KV heads. This is the
+/// grid the cluster benches replay per TP degree — the level-2 mapping
+/// claims (SHF ≥ NHF L2 hit rate) must hold on the *local* head range.
+pub fn sharded_gqa8_decode_sweep(
+    tp: usize,
+    n_ctxs: &[usize],
+    batches: &[usize],
+    splits: &[usize],
+) -> Vec<DecodePoint> {
+    gqa8_decode_sweep(n_ctxs, batches, splits)
+        .into_iter()
+        .map(|p| {
+            let plan = ShardPlan::new(&p.cfg, tp, ShardStrategy::Contiguous)
+                .expect("tp divides the GQA-8 sweep's KV heads");
+            DecodePoint {
+                label: format!("{} tp={tp}", p.label),
+                cfg: plan.local_attn(&p.cfg),
+                num_splits: p.num_splits,
+            }
+        })
+        .collect()
+}
+
 /// MHA decode sweep (64 query heads, D=128) — the non-grouped control
 /// row for the decode experiments.
 pub fn mha_decode_sweep(n_ctxs: &[usize], batches: &[usize], splits: &[usize]) -> Vec<DecodePoint> {
@@ -228,6 +260,25 @@ mod tests {
         }
         let labels: std::collections::BTreeSet<_> = pts.iter().map(|p| p.label.clone()).collect();
         assert_eq!(labels.len(), pts.len(), "decode labels unique");
+    }
+
+    #[test]
+    fn sharded_decode_sweep_reduces_heads_per_tp() {
+        for tp in CLUSTER_TP {
+            let pts = sharded_gqa8_decode_sweep(tp, &[16384], &[1, 8], &[2]);
+            assert_eq!(pts.len(), 2);
+            for p in &pts {
+                p.cfg.validate().unwrap();
+                assert_eq!(p.cfg.h_q, 64 / tp);
+                assert_eq!(p.cfg.h_k, 8 / tp);
+                assert_eq!(p.cfg.group(), 8, "GQA ratio survives sharding");
+                assert!(p.label.ends_with(&format!("tp={tp}")), "{}", p.label);
+            }
+        }
+        // tp = 1 is the unsharded sweep with a tp suffix.
+        let base = gqa8_decode_sweep(&[16384], &[1], &[2]);
+        let tp1 = sharded_gqa8_decode_sweep(1, &[16384], &[1], &[2]);
+        assert_eq!(base[0].cfg, tp1[0].cfg);
     }
 
     #[test]

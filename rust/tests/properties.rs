@@ -7,6 +7,7 @@ use numa_attn::attn::acc::AccSpread;
 use numa_attn::attn::trace::WgCursor;
 use numa_attn::attn::{AttnConfig, KernelKind, WorkItem};
 use numa_attn::cache::LruCache;
+use numa_attn::cluster::{ShardPlan, ShardStrategy};
 use numa_attn::mapping::{chiplet_swizzle, Mapping, Policy, ALL_POLICIES};
 use numa_attn::sched::{xcd_of_slot, Dispatcher};
 use numa_attn::util::rng::SplitMix64;
@@ -115,6 +116,78 @@ fn prop_shf_decode_splits_never_leave_their_xcd() {
                 ),
             }
         }
+    }
+}
+
+#[test]
+fn prop_shard_plan_is_a_bijection_over_query_heads() {
+    // The cluster analogue of prop_mapping_bijective (docs/CLUSTER.md):
+    // for any GQA geometry and any TP degree dividing H_K, under both
+    // strategies, each of the H_Q query heads lands on EXACTLY one
+    // device, and the partition is balanced (H_Q/tp heads per device).
+    let mut rng = SplitMix64::new(1111);
+    for case in 0..300 {
+        let tp = [1usize, 2, 4, 8][rng.gen_range(4) as usize];
+        let h_k = tp * (1 + rng.gen_range(8) as usize);
+        let group = 1 + rng.gen_range(8) as usize;
+        let h_q = h_k * group;
+        let strategies = [ShardStrategy::Contiguous, ShardStrategy::Strided];
+        let strategy = strategies[rng.gen_range(2) as usize];
+        let cfg = AttnConfig::gqa(1, h_q, h_k, 4096, 64);
+        let plan = ShardPlan::new(&cfg, tp, strategy).unwrap();
+        let mut owners = vec![0usize; h_q];
+        for d in 0..tp {
+            let heads = plan.query_heads(d);
+            assert_eq!(
+                heads.len(),
+                h_q / tp,
+                "case {case}: unbalanced shard ({strategy}, h_q={h_q}, tp={tp})"
+            );
+            for h in heads {
+                owners[h] += 1;
+                assert_eq!(plan.device_of_query_head(h), d, "case {case}: ownership disagrees");
+            }
+        }
+        assert!(
+            owners.iter().all(|&n| n == 1),
+            "case {case}: not a bijection ({strategy}, h_q={h_q}, h_k={h_k}, tp={tp}): {owners:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_shard_plan_never_straddles_a_gqa_group() {
+    // KV heads are never split: every query head of a KV group lives on
+    // that KV head's device, so no device ever needs a remote KV cache
+    // slice — the invariant that makes head sharding communication-free
+    // until the output all-gather.
+    let mut rng = SplitMix64::new(2222);
+    for case in 0..300 {
+        let tp = [1usize, 2, 4, 8][rng.gen_range(4) as usize];
+        let h_k = tp * (1 + rng.gen_range(8) as usize);
+        let group = 1 + rng.gen_range(8) as usize;
+        let h_q = h_k * group;
+        let strategy =
+            [ShardStrategy::Contiguous, ShardStrategy::Strided][rng.gen_range(2) as usize];
+        let cfg = AttnConfig::gqa(1, h_q, h_k, 4096, 64);
+        let plan = ShardPlan::new(&cfg, tp, strategy).unwrap();
+        for k in 0..h_k {
+            let dev = plan.device_of_kv_head(k);
+            for h in k * group..(k + 1) * group {
+                assert_eq!(
+                    plan.device_of_query_head(h),
+                    dev,
+                    "case {case}: query head {h} left KV head {k}'s device \
+                     ({strategy}, h_q={h_q}, h_k={h_k}, tp={tp})"
+                );
+            }
+        }
+        // The shard-local geometry stays a valid GQA config with the
+        // same group size — level 2 (the paper's mapping) sees a smaller
+        // but shape-identical problem.
+        let local = plan.local_attn(&cfg);
+        local.validate().unwrap();
+        assert_eq!(local.group(), cfg.group());
     }
 }
 
