@@ -53,10 +53,12 @@ pub const SIM_KEYS: [&str; 10] = [
 /// serving loop's knobs (`numa-attn serve --config`, docs/SERVING.md).
 /// The served model geometry comes from `[attention]` (`n_ctx` is the
 /// KV capacity; `batch` is ignored — the per-step batch is the number of
-/// active sessions).
-pub const SERVE_KEYS: [&str; 8] = [
+/// active sessions). `chunk_tokens`/`step_token_budget` switch on
+/// chunked prefill with mixed prefill+decode steps (docs/SERVING.md §6;
+/// both default to 0 = the historical monolithic behavior).
+pub const SERVE_KEYS: [&str; 10] = [
     "arrival_per_sec", "prefill_lengths", "decode_tokens", "sessions", "max_active", "steps",
-    "kv_bucket", "seed",
+    "kv_bucket", "chunk_tokens", "step_token_budget", "seed",
 ];
 
 /// Every `[cluster]` key [`ExperimentConfig::parse`] reads — the
@@ -148,6 +150,10 @@ pub struct ServeSection {
     pub steps: Option<usize>,
     /// KV bucketing quantum (tokens).
     pub kv_bucket: Option<usize>,
+    /// Chunked-prefill chunk size in prompt tokens (0 = off).
+    pub chunk_tokens: Option<usize>,
+    /// Mixed-step token budget, decode tokens first (0 = uncapped).
+    pub step_token_budget: Option<usize>,
     /// Trace seed.
     pub seed: Option<u64>,
 }
@@ -230,6 +236,8 @@ impl ExperimentConfig {
             max_active: ini.get_parsed("serve", "max_active")?,
             steps: ini.get_parsed("serve", "steps")?,
             kv_bucket: ini.get_parsed("serve", "kv_bucket")?,
+            chunk_tokens: ini.get_parsed("serve", "chunk_tokens")?,
+            step_token_budget: ini.get_parsed("serve", "step_token_budget")?,
             seed: ini.get_parsed("serve", "seed")?,
         };
         let cluster = if ini.has_section("cluster") {
@@ -420,6 +428,8 @@ impl ExperimentConfig {
             sessions: s.sessions.unwrap_or(defaults.sessions),
             max_active: s.max_active.unwrap_or(defaults.max_active),
             max_steps: s.steps.unwrap_or(defaults.max_steps),
+            chunk_tokens: s.chunk_tokens.unwrap_or(defaults.chunk_tokens),
+            step_token_budget: s.step_token_budget.unwrap_or(defaults.step_token_budget),
             seed: s.seed.unwrap_or(defaults.seed),
         };
         cfg.validate()?;
@@ -633,7 +643,48 @@ backward = true
         assert_eq!(cfg.sessions, 16);
         assert_eq!(cfg.max_active, 8);
         assert_eq!(cfg.max_steps, 1200);
+        assert_eq!(cfg.chunk_tokens, 1024, "worked example serves chunked");
+        assert_eq!(cfg.step_token_budget, 2048);
         assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn serve_chunk_keys_round_trip_and_reject_contradictions() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        // Both keys land where documented.
+        let on = format!("{base}\n[serve]\nchunk_tokens = 512\nstep_token_budget = 1024\n");
+        let cfg = ExperimentConfig::parse(&on).unwrap().serve_config().unwrap();
+        assert_eq!(cfg.chunk_tokens, 512);
+        assert_eq!(cfg.step_token_budget, 1024);
+
+        // Explicit zeros are the documented off state.
+        let off = format!("{base}\n[serve]\nchunk_tokens = 0\nstep_token_budget = 0\n");
+        let cfg = ExperimentConfig::parse(&off).unwrap().serve_config().unwrap();
+        assert_eq!((cfg.chunk_tokens, cfg.step_token_budget), (0, 0));
+
+        // A chunk that cannot fit in the step budget is rejected with an
+        // actionable message naming both keys.
+        let oversized = format!("{base}\n[serve]\nchunk_tokens = 2048\nstep_token_budget = 512\n");
+        let err = ExperimentConfig::parse(&oversized).unwrap().serve_config().unwrap_err();
+        assert!(err.contains("chunk_tokens (2048)"), "{err}");
+        assert!(err.contains("step_token_budget (512)"), "{err}");
+
+        // A budget with chunking off composes nothing: contradictory.
+        let orphan = format!("{base}\n[serve]\nstep_token_budget = 1024\n");
+        let err = ExperimentConfig::parse(&orphan).unwrap().serve_config().unwrap_err();
+        assert!(err.contains("contradictory"), "{err}");
+
+        // An uncapped budget with chunking on is valid.
+        let uncapped = format!("{base}\n[serve]\nchunk_tokens = 512\n");
+        let cfg = ExperimentConfig::parse(&uncapped).unwrap().serve_config().unwrap();
+        assert_eq!((cfg.chunk_tokens, cfg.step_token_budget), (512, 0));
     }
 
     #[test]

@@ -124,11 +124,18 @@ impl BatcherCore {
     }
 }
 
-/// A session admitted to the decode loop, with its generation progress.
+/// A session admitted to the decode loop, with its prefill and
+/// generation progress. Under chunked prefill (docs/SERVING.md §6) a
+/// session admits with `prefill_done = 0` and streams its prompt in
+/// chunks before it may decode; with chunking off the prompt is charged
+/// monolithically at admission and `prefill_done` starts complete.
 #[derive(Debug, Clone)]
 pub struct ActiveSession {
     /// The admitted session.
     pub session: Session,
+    /// Prompt tokens prefilled so far (== `session.prefill` once the
+    /// session has entered its decode phase).
+    pub prefill_done: usize,
     /// Decode tokens generated so far.
     pub generated: usize,
 }
@@ -139,9 +146,40 @@ impl ActiveSession {
         self.session.kv_len(self.generated, kv_cap)
     }
 
+    /// True once the whole prompt has been prefilled (the session is in
+    /// its decode phase and emits one token per step).
+    pub fn prefill_complete(&self) -> bool {
+        self.prefill_done >= self.session.prefill
+    }
+
+    /// Prompt tokens still waiting to be prefilled.
+    pub fn prefill_remaining(&self) -> usize {
+        self.session.prefill.saturating_sub(self.prefill_done)
+    }
+
     /// True once the session has generated its full decode budget.
     pub fn done(&self) -> bool {
         self.generated >= self.session.decode_tokens
+    }
+}
+
+/// One chunked-prefill launch planned for a step: extends session `id`'s
+/// prefilled prompt prefix from `start` to `end` tokens (raw prompt
+/// positions; the executor clamps to the KV capacity when pricing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillChunk {
+    /// Session the chunk belongs to.
+    pub id: u64,
+    /// Prompt tokens already prefilled before this chunk.
+    pub start: usize,
+    /// Prompt tokens prefilled after this chunk (`start < end`).
+    pub end: usize,
+}
+
+impl PrefillChunk {
+    /// Prompt tokens this chunk streams.
+    pub fn tokens(&self) -> usize {
+        self.end - self.start
     }
 }
 
@@ -150,14 +188,18 @@ impl ActiveSession {
 /// Holds the arrival-ordered backlog of not-yet-admitted sessions and the
 /// active set currently generating. Every decode step the serving loop
 /// (1) admits arrived sessions up to `max_active` ([`Self::admit`]),
-/// (2) reads the active set to form this step's kernel launches, and
-/// (3) calls [`Self::advance_step`] to emit one token per active session
-/// and retire the finished ones — freeing their slots for the next
-/// arrivals. No session ever waits for an unrelated session's completion,
-/// which is the continuous-batching property (docs/SERVING.md §3).
+/// (2) reads the active set to form this step's kernel launches —
+/// optionally planning chunked-prefill launches under a token budget
+/// ([`Self::plan_chunks`]) — and
+/// (3) calls [`Self::advance_step`] to emit one token per decode-phase
+/// session and retire the finished ones — freeing their slots for the
+/// next arrivals. No session ever waits for an unrelated session's
+/// completion, which is the continuous-batching property
+/// (docs/SERVING.md §3).
 #[derive(Debug)]
 pub struct StepBatcher {
     max_active: usize,
+    chunk_tokens: usize,
     backlog: VecDeque<Session>,
     active: Vec<ActiveSession>,
     completed: usize,
@@ -166,13 +208,18 @@ pub struct StepBatcher {
 impl StepBatcher {
     /// A batcher over an arrival-ordered trace (re-sorted defensively;
     /// ties break on session id so the order is total and deterministic).
-    pub fn new(mut sessions: Vec<Session>, max_active: usize) -> Self {
+    /// `chunk_tokens = 0` is monolithic prefill: admission marks the
+    /// whole prompt prefilled (the loop charges it in the admission
+    /// step); `chunk_tokens > 0` admits sessions with an empty prefix
+    /// and streams prompts through [`Self::plan_chunks`].
+    pub fn new(mut sessions: Vec<Session>, max_active: usize, chunk_tokens: usize) -> Self {
         assert!(max_active > 0, "max_active must be > 0");
         sessions.sort_by(|a, b| {
             a.arrival_sec.total_cmp(&b.arrival_sec).then(a.id.cmp(&b.id))
         });
         StepBatcher {
             max_active,
+            chunk_tokens,
             backlog: sessions.into(),
             active: Vec::new(),
             completed: 0,
@@ -181,7 +228,9 @@ impl StepBatcher {
 
     /// Admit every backlog session that has arrived by `now_sec`, oldest
     /// first, until the active set reaches `max_active`. Returns the
-    /// newly admitted sessions (the serving loop charges their prefill).
+    /// newly admitted sessions (with chunking off the serving loop
+    /// charges their whole prefill; with chunking on they enter with an
+    /// empty prefilled prefix and stream through [`Self::plan_chunks`]).
     pub fn admit(&mut self, now_sec: f64) -> Vec<Session> {
         let mut newly = Vec::new();
         while self.active.len() < self.max_active {
@@ -189,7 +238,8 @@ impl StepBatcher {
                 Some(s) if s.arrival_sec <= now_sec => {
                     let s = self.backlog.pop_front().unwrap();
                     newly.push(s.clone());
-                    self.active.push(ActiveSession { session: s, generated: 0 });
+                    let prefill_done = if self.chunk_tokens == 0 { s.prefill } else { 0 };
+                    self.active.push(ActiveSession { session: s, prefill_done, generated: 0 });
                 }
                 _ => break,
             }
@@ -202,19 +252,69 @@ impl StepBatcher {
         &self.active
     }
 
+    /// Sessions in their decode phase (prompt fully prefilled) — the set
+    /// that forms this step's decode launches and emits tokens. With
+    /// chunking off this is the whole active set.
+    pub fn decoding(&self) -> usize {
+        self.active.iter().filter(|a| a.prefill_complete()).count()
+    }
+
+    /// Plan this step's chunked-prefill launches under a prompt-token
+    /// budget: walk the active set in admission order, give each
+    /// still-prefilling session one chunk of up to `chunk_tokens` (less
+    /// only when its prompt runs out), and stop at the first chunk that
+    /// does not fit the remaining budget. Chunks are never *split* to
+    /// fit — that would leave ragged prefix lengths that defeat the
+    /// report cache's geometry sharing; instead the budget rolls over to
+    /// the next step, so every session's prefix walks `chunk_tokens`
+    /// multiples up to its prompt length. Advances each chunked
+    /// session's `prefill_done`, so the returned chunks are exactly the
+    /// prompt tokens executed this step — every prompt token appears in
+    /// exactly one chunk across the session's lifetime (pinned by
+    /// `tests/serving_invariants.rs`). Returns an empty plan when
+    /// chunking is off.
+    pub fn plan_chunks(&mut self, budget_tokens: usize) -> Vec<PrefillChunk> {
+        let mut out = Vec::new();
+        if self.chunk_tokens == 0 {
+            return out;
+        }
+        let mut left = budget_tokens;
+        for a in &mut self.active {
+            if a.prefill_complete() {
+                continue;
+            }
+            let take = self.chunk_tokens.min(a.prefill_remaining());
+            if take > left {
+                break;
+            }
+            out.push(PrefillChunk {
+                id: a.session.id,
+                start: a.prefill_done,
+                end: a.prefill_done + take,
+            });
+            a.prefill_done += take;
+            left -= take;
+        }
+        out
+    }
+
     /// Arrival time of the next backlog session (for jumping simulated
     /// time across idle gaps), `None` when the backlog is drained.
     pub fn next_arrival_sec(&self) -> Option<f64> {
         self.backlog.front().map(|s| s.arrival_sec)
     }
 
-    /// One decode step: every active session generates one token;
-    /// finished sessions retire, freeing their slots. Returns the number
-    /// of tokens emitted (the active count at entry).
+    /// One decode step: every decode-phase session generates one token;
+    /// finished sessions retire, freeing their slots. Sessions still
+    /// streaming their prompt neither emit nor retire. Returns the
+    /// number of tokens emitted (the decode-phase count at entry).
     pub fn advance_step(&mut self) -> usize {
-        let emitted = self.active.len();
+        let mut emitted = 0;
         for a in &mut self.active {
-            a.generated += 1;
+            if a.prefill_complete() {
+                a.generated += 1;
+                emitted += 1;
+            }
         }
         let before = self.active.len();
         self.active.retain(|a| !a.done());
@@ -253,7 +353,7 @@ mod tests {
     #[test]
     fn step_batcher_admits_in_arrival_order_up_to_cap() {
         let trace = vec![sess(0, 0.0, 4), sess(1, 0.0, 4), sess(2, 0.5, 4), sess(3, 9.0, 4)];
-        let mut b = StepBatcher::new(trace, 2);
+        let mut b = StepBatcher::new(trace, 2, 0);
         let newly = b.admit(0.6);
         assert_eq!(newly.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(b.active().len(), 2, "capacity caps admission");
@@ -266,7 +366,7 @@ mod tests {
     #[test]
     fn step_batcher_continuous_refill_and_completion() {
         let trace = vec![sess(0, 0.0, 2), sess(1, 0.0, 5), sess(2, 0.0, 5)];
-        let mut b = StepBatcher::new(trace, 2);
+        let mut b = StepBatcher::new(trace, 2, 0);
         b.admit(0.0);
         assert_eq!(b.advance_step(), 2); // ids 0, 1 emit a token each
         assert_eq!(b.advance_step(), 2); // id 0 finishes here
@@ -289,13 +389,67 @@ mod tests {
 
     #[test]
     fn step_batcher_kv_grows_per_token() {
-        let mut b = StepBatcher::new(vec![sess(0, 0.0, 3)], 1);
+        let mut b = StepBatcher::new(vec![sess(0, 0.0, 3)], 1, 0);
         b.admit(0.0);
         assert_eq!(b.active()[0].kv_len(1 << 20), 1024);
+        assert!(b.active()[0].prefill_complete(), "monolithic admission completes prefill");
         b.advance_step();
         assert_eq!(b.active()[0].kv_len(1 << 20), 1025);
         assert_eq!(b.active()[0].kv_len(1025), 1025);
         assert_eq!(b.active()[0].kv_len(512), 512, "capacity clamp");
+    }
+
+    #[test]
+    fn chunked_sessions_stream_prompts_before_decoding() {
+        // prefill = 1024, chunk = 512: two chunks before the first token.
+        let mut b = StepBatcher::new(vec![sess(0, 0.0, 2)], 1, 512);
+        b.admit(0.0);
+        assert!(!b.active()[0].prefill_complete());
+        assert_eq!(b.decoding(), 0);
+        assert_eq!(b.advance_step(), 0, "prefilling sessions emit nothing");
+
+        let c1 = b.plan_chunks(usize::MAX);
+        assert_eq!(c1, vec![PrefillChunk { id: 0, start: 0, end: 512 }]);
+        assert_eq!(b.advance_step(), 0);
+
+        let c2 = b.plan_chunks(usize::MAX);
+        assert_eq!(c2, vec![PrefillChunk { id: 0, start: 512, end: 1024 }]);
+        assert!(b.active()[0].prefill_complete());
+        assert_eq!(b.decoding(), 1);
+        assert_eq!(b.advance_step(), 1, "decode starts the step prefill completes");
+        assert!(b.plan_chunks(usize::MAX).is_empty(), "nothing left to prefill");
+        assert_eq!(b.advance_step(), 1);
+        assert!(b.done());
+        assert_eq!(b.completed(), 1);
+    }
+
+    #[test]
+    fn chunk_budget_caps_the_step_and_respects_admission_order() {
+        let mut b = StepBatcher::new(vec![sess(0, 0.0, 1), sess(1, 0.0, 1)], 2, 512);
+        b.admit(0.0);
+        // Budget 700: session 0 gets its full 512-token chunk; session
+        // 1's chunk does not fit the 188 tokens left, and chunks are
+        // never split to fit (ragged prefixes would defeat the report
+        // cache), so it waits for the next step.
+        let chunks = b.plan_chunks(700);
+        assert_eq!(chunks, vec![PrefillChunk { id: 0, start: 0, end: 512 }]);
+        // Zero budget plans nothing (decode tokens consumed it all).
+        assert!(b.plan_chunks(0).is_empty());
+        // Uncapped: both sessions stream one chunk, in admission order;
+        // a chunk never exceeds the session's remaining prompt.
+        let chunks = b.plan_chunks(usize::MAX);
+        assert_eq!(
+            chunks,
+            vec![
+                PrefillChunk { id: 0, start: 512, end: 1024 },
+                PrefillChunk { id: 1, start: 0, end: 512 },
+            ]
+        );
+        assert_eq!(chunks.iter().map(PrefillChunk::tokens).sum::<usize>(), 1024);
+        assert!(b.active()[0].prefill_complete());
+        let tail = b.plan_chunks(usize::MAX);
+        assert_eq!(tail, vec![PrefillChunk { id: 1, start: 512, end: 1024 }]);
+        assert!(b.active().iter().all(ActiveSession::prefill_complete));
     }
 
     #[test]

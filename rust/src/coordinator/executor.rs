@@ -32,6 +32,7 @@ use crate::sim::{merge_parallel, SimConfig};
 use crate::topology::Topology;
 
 use super::advisor;
+use super::batcher::PrefillChunk;
 use super::service::ServeConfig;
 
 /// Steady-state sample generations for prefill-kernel pricing (matches
@@ -52,6 +53,16 @@ pub trait StepExecutor {
     /// seconds per session, in the same order — the loop accumulates
     /// them in order, so implementations control nothing about summation.
     fn prefill_charges(&mut self, prompts: &[usize]) -> Vec<f64>;
+
+    /// Price this step's chunked-prefill launches (docs/SERVING.md §6):
+    /// each chunk extends one session's prefilled prompt prefix from
+    /// `start` to `end` tokens and is priced as the chunk's row fraction
+    /// of the forward kernel at the *prefix* geometry — the chunk's Q
+    /// row blocks each stream the whole prefilled prefix (FA2's
+    /// row-block work partitioning), so a full-prompt chunk degenerates
+    /// to exactly the monolithic [`Self::prefill_charges`] job. Returns
+    /// one duration in seconds per chunk, in the same order.
+    fn chunk_charges(&mut self, chunks: &[PrefillChunk]) -> Vec<f64>;
 
     /// Price this step's decode launches: one `(kv_bucket, batch)` group
     /// per entry, in ascending bucket order. Returns one duration in
@@ -145,6 +156,42 @@ impl StepExecutor for SingleDeviceExecutor<'_> {
             })
             .collect();
         self.driver.run_all(jobs).iter().map(|r| r.est_total_sec).collect()
+    }
+
+    fn chunk_charges(&mut self, chunks: &[PrefillChunk]) -> Vec<f64> {
+        // One forward job per chunk at the chunk's PREFIX geometry,
+        // scaled by the chunk's row fraction: the chunk's Q rows each
+        // stream the whole prefilled prefix, so a chunk of (end - start)
+        // tokens over an end-token prefix costs that fraction of the
+        // prefix kernel. A full-prompt chunk has fraction exactly 1.0 —
+        // the identical job and charge as the monolithic path (pinned by
+        // the golden-equivalence tests). A chunk entirely past the KV
+        // capacity collapses to an empty span: a free no-op, no job at
+        // all. Prefix geometries repeat across sessions and steps, so
+        // pricing rides the shared report cache.
+        let mut jobs = Vec::with_capacity(chunks.len());
+        let mut spans = Vec::with_capacity(chunks.len());
+        for c in chunks {
+            let (start, end) = self.cfg.chunk_span(c);
+            spans.push((start, end));
+            if start < end {
+                let attn = self.cfg.geometry(1, end);
+                let sim = SimConfig::sampled(self.policy, self.topo, GENERATIONS);
+                jobs.push(SimJob::forward(self.topo, &attn, sim));
+            }
+        }
+        let reports = self.driver.run_all(jobs);
+        let mut next = reports.iter();
+        spans
+            .into_iter()
+            .map(|(start, end)| {
+                if start == end {
+                    return 0.0;
+                }
+                let r = next.next().expect("one report per non-empty chunk");
+                r.est_total_sec * ((end - start) as f64 / end as f64)
+            })
+            .collect()
     }
 
     fn decode_charges(&mut self, groups: &[(usize, usize)]) -> Vec<f64> {
@@ -265,6 +312,50 @@ impl StepExecutor for ClusterExecutor<'_> {
             }
         }
         self.fan_out(jobs, prompts.len(), &tokens).into_iter().map(|(sec, _, _)| sec).collect()
+    }
+
+    fn chunk_charges(&mut self, chunks: &[PrefillChunk]) -> Vec<f64> {
+        // The single-device row-fraction pricing, fanned across the
+        // shard plan: each device runs the chunk's shard-local prefix
+        // kernel, the step advances by the slowest device scaled to the
+        // chunk's row fraction, and the all-gather moves only the
+        // chunk's own output rows (one gather latency per chunk launch —
+        // chunking is not free on an interconnect). A full-prompt chunk
+        // reproduces the monolithic sharded charge bit-for-bit, and an
+        // empty-span chunk (entirely past the KV capacity) is the same
+        // free no-op as on the single-device path — no jobs, no gather.
+        let n_dev = self.cluster.num_devices();
+        let base = self.cfg.base_geometry();
+        let mut jobs = Vec::with_capacity(chunks.len() * n_dev);
+        let mut spans = Vec::with_capacity(chunks.len());
+        for c in chunks {
+            let (start, end) = self.cfg.chunk_span(c);
+            spans.push((start, end));
+            if start < end {
+                let attn = self.cfg.geometry(1, end);
+                for d in 0..n_dev {
+                    let sim =
+                        SimConfig::sampled(self.policy, self.cluster.device(d), GENERATIONS);
+                    jobs.push(SimJob::sharded_forward(self.cluster, self.plan, d, &attn, sim));
+                }
+            }
+        }
+        let reports = self.driver.run_all(jobs);
+        let mut offset = 0;
+        let mut out = Vec::with_capacity(spans.len());
+        for (start, end) in spans {
+            if start == end {
+                out.push(0.0);
+                continue;
+            }
+            let merged = merge_parallel(&reports[offset..offset + n_dev]);
+            offset += n_dev;
+            let gather = self
+                .cluster
+                .all_gather_sec(self.plan.output_bytes_per_device(&base, end - start));
+            out.push(merged.est_total_sec * ((end - start) as f64 / end as f64) + gather);
+        }
+        out
     }
 
     fn decode_charges(&mut self, groups: &[(usize, usize)]) -> Vec<f64> {
@@ -397,6 +488,53 @@ mod tests {
         let (h, m) = tp2.decode_l2();
         assert!(h + m > 0, "decode L2 accounting is live");
         assert_eq!(tp2.consults(), 1);
+    }
+
+    #[test]
+    fn full_prompt_chunk_prices_like_monolithic_prefill() {
+        // The degenerate contract the golden-equivalence tests build on:
+        // a single chunk covering the whole prompt is the SAME forward
+        // job at row fraction 1.0, so its charge is bit-identical to the
+        // monolithic prefill charge — on both executors.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let mut single = SingleDeviceExecutor::new(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        let mono = single.prefill_charges(&[2048]);
+        let whole = single.chunk_charges(&[PrefillChunk { id: 0, start: 0, end: 2048 }]);
+        assert_eq!(mono[0].to_bits(), whole[0].to_bits(), "full-prompt chunk diverged");
+
+        // Streaming the same prompt in two chunks prices the two
+        // rectangles (rows x prefix), which undercut the full square.
+        let halves = single.chunk_charges(&[
+            PrefillChunk { id: 1, start: 0, end: 1024 },
+            PrefillChunk { id: 1, start: 1024, end: 2048 },
+        ]);
+        assert!(halves.iter().all(|&t| t > 0.0));
+        let sum: f64 = halves.iter().sum();
+        assert!(sum < mono[0], "chunked {sum:.3e} s >= monolithic {:.3e} s", mono[0]);
+
+        // A chunk entirely past the KV capacity is a free no-op.
+        let beyond = single.chunk_charges(&[PrefillChunk {
+            id: 2,
+            start: cfg.kv_cap,
+            end: cfg.kv_cap + 512,
+        }]);
+        assert_eq!(beyond[0], 0.0);
+
+        let cluster = ClusterTopology::node_of(&topo, 2);
+        let plan = ShardPlan::new(&cfg.base_geometry(), 2, ShardStrategy::Contiguous).unwrap();
+        let mut tp2 =
+            ClusterExecutor::new(&driver, &cluster, &plan, &cfg, Policy::SwizzledHeadFirst);
+        let mono = tp2.prefill_charges(&[2048]);
+        let mixed = tp2.chunk_charges(&[
+            PrefillChunk { id: 0, start: 0, end: 2048 },
+            // Entirely past the KV capacity: free on the cluster too —
+            // no shard jobs, and crucially no phantom all-gather latency.
+            PrefillChunk { id: 1, start: cfg.kv_cap, end: cfg.kv_cap + 512 },
+        ]);
+        assert_eq!(mono[0].to_bits(), mixed[0].to_bits(), "tp=2 full-prompt chunk diverged");
+        assert_eq!(mixed[1], 0.0, "beyond-capacity chunk must be free on a cluster");
     }
 
     #[test]

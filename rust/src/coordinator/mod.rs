@@ -17,10 +17,14 @@
 //!   a seeded schedule, the [`batcher::StepBatcher`] re-forms the active
 //!   batch every step, each step is priced by simulator reports from the
 //!   shared driver's cache, and the advisor re-picks the KV split count
-//!   as caches grow across bucket boundaries. This is the regime that
-//!   dominates production traffic (decode over growing KV caches) and
-//!   the first consumer that exercises the report cache across hundreds
-//!   of related geometries in one run.
+//!   as caches grow across bucket boundaries. With
+//!   [`ServeConfig::chunk_tokens`] set, prompts stream in row-block
+//!   chunks composed with decode into mixed steps under a token budget
+//!   (chunked prefill, docs/SERVING.md §6) instead of stalling the world
+//!   at admission. This is the regime that dominates production traffic
+//!   (decode over growing KV caches) and the first consumer that
+//!   exercises the report cache across hundreds of related geometries in
+//!   one run.
 //!
 //! Launch *pricing* inside the decode loop is pluggable
 //! ([`executor::StepExecutor`]): the historical single-device path and
@@ -46,12 +50,13 @@ pub use advisor::{
     advise, advise_decode, advise_decode_with, advise_with, applicable_policies, pick_num_splits,
     Advice,
 };
-pub use batcher::{ActiveSession, Batch, BatcherCore, BatcherConfig, StepBatcher};
+pub use batcher::{ActiveSession, Batch, BatcherCore, BatcherConfig, PrefillChunk, StepBatcher};
 pub use executor::{ClusterExecutor, SingleDeviceExecutor, StepExecutor};
 pub use router::Router;
 pub use service::{
     cluster_row, cluster_scenarios, serve_cluster_report, serve_decode, serve_decode_cluster,
-    serve_decode_cluster_with, serve_decode_with, serve_report, serve_scenarios, AttentionService,
+    serve_decode_cluster_with, serve_decode_with, serve_report, serve_row, serve_scenarios,
+    AttentionService,
     ClusterReport, ClusterRow, ClusterScenario, ServeConfig, ServeReport, ServeRow, ServeScenario,
     ServeStats, ServiceConfig, ServiceMetrics, Waiter,
 };

@@ -40,7 +40,7 @@ use crate::workload::Request;
 use crate::workload::SessionGenerator;
 
 use super::advisor;
-use super::batcher::{Batch, BatcherConfig, BatcherCore, StepBatcher};
+use super::batcher::{Batch, BatcherConfig, BatcherCore, PrefillChunk, StepBatcher};
 use super::executor::{ClusterExecutor, SingleDeviceExecutor, StepExecutor};
 use super::router::Router;
 
@@ -497,6 +497,19 @@ pub struct ServeConfig {
     /// Decode-step budget: the loop stops (and marks the run truncated)
     /// after this many steps even if sessions remain.
     pub max_steps: usize,
+    /// Chunked-prefill chunk size in prompt tokens (docs/SERVING.md §6).
+    /// `0` (the default) is the historical monolithic behavior: an
+    /// admitted session's whole prompt is charged in its admission step.
+    /// `> 0` admits sessions immediately and streams each prompt in
+    /// chunks of up to this many tokens, composed into mixed
+    /// prefill+decode steps under [`Self::step_token_budget`].
+    pub chunk_tokens: usize,
+    /// Mixed-step token budget (Sarathi-style): each step's decode
+    /// tokens (one per decode-phase session) claim the budget first and
+    /// the remainder streams prefill chunks. `0` = uncapped (every
+    /// still-prefilling session streams one chunk per step). Only
+    /// meaningful with [`Self::chunk_tokens`] `> 0`.
+    pub step_token_budget: usize,
     /// Trace seed (arrivals and session mix draws).
     pub seed: u64,
 }
@@ -519,6 +532,8 @@ impl Default for ServeConfig {
             sessions: 16,
             max_active: 8,
             max_steps: 1200,
+            chunk_tokens: 0,
+            step_token_budget: 0,
             seed: 7,
         }
     }
@@ -541,11 +556,42 @@ impl ServeConfig {
         if self.prefill_lengths.contains(&0) || self.decode_tokens.contains(&0) {
             return Err("prefill_lengths/decode_tokens entries must be > 0".into());
         }
+        if let Some(&p) = self.prefill_lengths.iter().find(|&&p| p > self.kv_cap) {
+            return Err(format!(
+                "prefill_lengths entry {p} exceeds the KV capacity ({}): a prompt cannot \
+                 outgrow the cache it is served from — raise [attention] n_ctx or shorten \
+                 the prompt mix",
+                self.kv_cap
+            ));
+        }
         if self.sessions == 0 {
             return Err("sessions must be > 0".into());
         }
         if self.max_active == 0 || self.max_steps == 0 {
             return Err("max_active/max_steps must be > 0".into());
+        }
+        if self.step_token_budget > 0 && self.chunk_tokens == 0 {
+            return Err(format!(
+                "step_token_budget ({}) without chunk_tokens is contradictory: the budget \
+                 only composes chunked-prefill steps — set [serve] chunk_tokens > 0 or drop \
+                 step_token_budget",
+                self.step_token_budget
+            ));
+        }
+        if self.chunk_tokens > self.step_token_budget && self.step_token_budget > 0 {
+            return Err(format!(
+                "chunk_tokens ({}) must not exceed step_token_budget ({}): a prefill chunk \
+                 must fit inside one mixed step — shrink chunk_tokens or raise the budget",
+                self.chunk_tokens, self.step_token_budget
+            ));
+        }
+        if self.step_token_budget > 0 && self.step_token_budget < self.max_active {
+            return Err(format!(
+                "step_token_budget ({}) is below max_active ({}): every decode-phase session \
+                 emits one token per step and decode is never dropped, so the budget must \
+                 cover max_active decode tokens — raise the budget or lower max_active",
+                self.step_token_budget, self.max_active
+            ));
         }
         Ok(())
     }
@@ -577,6 +623,16 @@ impl ServeConfig {
     pub fn bucket_of(&self, kv_len: usize) -> usize {
         (kv_len.max(1).div_ceil(self.kv_bucket) * self.kv_bucket).min(self.kv_cap.max(1))
     }
+
+    /// A chunk's `(start, end)` prompt-prefix positions clamped to what
+    /// the KV cache can hold (and to the simulator's one-token minimum
+    /// context): pricing never launches a longer prefix than `kv_cap`,
+    /// mirroring the monolithic path's prompt clamp. A chunk entirely
+    /// beyond the capacity collapses to an empty span (zero charge).
+    pub fn chunk_span(&self, c: &PrefillChunk) -> (usize, usize) {
+        let end = c.end.clamp(1, self.kv_cap.max(1));
+        (c.start.min(end), end)
+    }
 }
 
 /// Outcome of one serving run (one scenario × one mapping policy): the
@@ -601,9 +657,21 @@ pub struct ServeStats {
     pub tpot_p50_ms: f64,
     /// 99th-percentile time-per-output-token (ms).
     pub tpot_p99_ms: f64,
+    /// Median time-to-first-token over all sessions that reached their
+    /// first decode token: arrival → the end of the step emitting the
+    /// session's first token, in ms (docs/SERVING.md §6).
+    pub ttft_p50_ms: f64,
+    /// 99th-percentile time-to-first-token (ms) — the head-of-line
+    /// blocking metric chunked prefill targets.
+    pub ttft_p99_ms: f64,
     /// Simulated time spent in prefill kernels (stalls decode — the
     /// continuous-batching TPOT tax; see docs/SERVING.md §4).
     pub prefill_sec: f64,
+    /// Prompt tokens prefilled across the run (monolithic charges or
+    /// chunk launches) — the conservation counter: a drained trace
+    /// prefills every session's prompt exactly once, chunked or not
+    /// (pinned by `tests/serving_invariants.rs`).
+    pub prefill_tokens: u64,
     /// Aggregate L2 hit rate (%) across every decode launch the run
     /// priced — the serving-loop analogue of the `decode` figure's
     /// metric (summed over all shards for cluster runs).
@@ -630,7 +698,10 @@ impl ServeStats {
             ("tokens_per_sec", Json::num(self.tokens_per_sec)),
             ("tpot_p50_ms", Json::num(self.tpot_p50_ms)),
             ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
+            ("ttft_p50_ms", Json::num(self.ttft_p50_ms)),
+            ("ttft_p99_ms", Json::num(self.ttft_p99_ms)),
             ("prefill_sec", Json::num(self.prefill_sec)),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
             ("decode_l2_hit_pct", Json::num(self.decode_l2_hit_pct)),
             ("advisor_consults", Json::num(self.advisor_consults as f64)),
             ("distinct_geometries", Json::num(self.distinct_geometries as f64)),
@@ -668,6 +739,8 @@ impl ServeReport {
                 "tokens/s",
                 "TPOT p50 (ms)",
                 "TPOT p99 (ms)",
+                "TTFT p50 (ms)",
+                "TTFT p99 (ms)",
                 "dec L2 %",
                 "sessions",
                 "tokens",
@@ -681,6 +754,8 @@ impl ServeReport {
                     format!("{:.0}", s.tokens_per_sec),
                     format!("{:.3}", s.tpot_p50_ms),
                     format!("{:.3}", s.tpot_p99_ms),
+                    format!("{:.3}", s.ttft_p50_ms),
+                    format!("{:.3}", s.ttft_p99_ms),
                     format!("{:.1}", s.decode_l2_hit_pct),
                     format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
                     s.tokens.to_string(),
@@ -731,8 +806,10 @@ pub struct ServeScenario {
 }
 
 /// The serving sweep: Llama-3 70B (GQA-8) scenarios varying arrival rate,
-/// continuous-batch cap, and context mix. `quick` runs the two-scenario
-/// CI subset; the full sweep adds a wide-batch and a long-context row.
+/// continuous-batch cap, context mix, and prefill scheduling. `quick`
+/// runs the three-scenario CI subset (including one chunked-prefill
+/// row, so CI smokes the mixed-step composition); the full sweep adds a
+/// wide-batch row and a monolithic/chunked long-context pair.
 pub fn serve_scenarios(quick: bool) -> Vec<ServeScenario> {
     let base = ServeConfig::default();
     let mut out = vec![
@@ -749,6 +826,16 @@ pub fn serve_scenarios(quick: bool) -> Vec<ServeScenario> {
             label: "llama3-70b arr=120/s cap=8".into(),
             cfg: ServeConfig { arrival_per_sec: 120.0, max_active: 8, ..base.clone() },
         },
+        ServeScenario {
+            label: "llama3-70b chunked(1k/2k) arr=120/s cap=8".into(),
+            cfg: ServeConfig {
+                arrival_per_sec: 120.0,
+                max_active: 8,
+                chunk_tokens: 1024,
+                step_token_budget: 2048,
+                ..base.clone()
+            },
+        },
     ];
     if !quick {
         out.push(ServeScenario {
@@ -761,16 +848,28 @@ pub fn serve_scenarios(quick: bool) -> Vec<ServeScenario> {
                 ..base.clone()
             },
         });
+        let long_ctx = ServeConfig {
+            arrival_per_sec: 60.0,
+            max_active: 8,
+            sessions: 12,
+            prefill_lengths: vec![16 * 1024, 64 * 1024],
+            decode_tokens: vec![64, 256],
+            max_steps: 2400,
+            ..base
+        };
         out.push(ServeScenario {
             label: "llama3-70b long-ctx arr=60/s cap=8".into(),
+            cfg: long_ctx.clone(),
+        });
+        // The headline chunked regime: 64k prompts streamed in 2k
+        // row-block chunks instead of freezing every decode stream.
+        out.push(ServeScenario {
+            label: "llama3-70b chunked(2k/4k) long-ctx arr=60/s cap=8".into(),
             cfg: ServeConfig {
-                arrival_per_sec: 60.0,
-                max_active: 8,
-                sessions: 12,
-                prefill_lengths: vec![16 * 1024, 64 * 1024],
-                decode_tokens: vec![64, 256],
-                max_steps: 2400,
-                ..base
+                chunk_tokens: 2048,
+                step_token_budget: 4096,
+                max_steps: 4800,
+                ..long_ctx
             },
         });
     }
@@ -789,13 +888,17 @@ pub fn serve_decode(topo: &Topology, cfg: &ServeConfig, policy: Policy) -> Serve
 ///
 /// The loop (docs/SERVING.md has the worked walk-through):
 /// 1. admit arrived sessions up to the batch cap, charging each one's
-///    prefill (a sampled forward-kernel report at its prompt length);
-/// 2. group the active set by bucketed KV length — each group is one
-///    split-KV decode launch whose split count comes from the advisor,
-///    re-consulted whenever the (batch, KV bucket) geometry is new;
+///    prefill (a sampled forward-kernel report at its prompt length) —
+///    or, with `chunk_tokens > 0`, composing a mixed step: decode tokens
+///    claim the `step_token_budget` first and the remainder streams
+///    prompt chunks (docs/SERVING.md §6);
+/// 2. group the decode-phase sessions by bucketed KV length — each
+///    group is one split-KV decode launch whose split count comes from
+///    the advisor, re-consulted whenever the (batch, KV bucket) geometry
+///    is new;
 /// 3. advance simulated time by the step's summed `est_total_sec` and
-///    emit one token per active session (each gets the step duration as
-///    its TPOT sample);
+///    emit one token per decode-phase session (each gets the step
+///    duration as its TPOT sample; first tokens sample TTFT);
 /// 4. retire finished sessions and loop until the trace drains or the
 ///    step budget runs out.
 pub fn serve_decode_with(
@@ -859,13 +962,20 @@ pub fn serve_decode_cluster_with(
 }
 
 /// The executor-generic continuous-batching loop body shared by the
-/// single-device and cluster serving paths: admission, KV-bucket
-/// grouping, time advance, and retirement are identical in both — only
-/// launch *pricing* differs, behind [`StepExecutor`]. Charges are
-/// accumulated one launch at a time in launch order, so an executor
-/// cannot perturb the floating-point summation the determinism tests pin.
-/// The stats are stamped with the executor's own policy, so a run can
-/// never be labeled with a policy it didn't price.
+/// single-device and cluster serving paths: admission, step composition,
+/// KV-bucket grouping, time advance, and retirement are identical in
+/// both — only launch *pricing* differs, behind [`StepExecutor`].
+/// Charges are accumulated one launch at a time in launch order, so an
+/// executor cannot perturb the floating-point summation the determinism
+/// tests pin. The stats are stamped with the executor's own policy, so a
+/// run can never be labeled with a policy it didn't price.
+///
+/// With `chunk_tokens = 0` the step composition is the historical one:
+/// each admission's whole prompt is charged before that step's decode
+/// launches. With `chunk_tokens > 0` each step is a *mixed* step
+/// (docs/SERVING.md §6): the decode-phase sessions' tokens claim the
+/// `step_token_budget` first and the remainder streams prefill chunks,
+/// so one long prompt never stalls the world.
 fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats {
     let mut gen = SessionGenerator::new(
         cfg.seed,
@@ -873,13 +983,15 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
         cfg.prefill_lengths.clone(),
         cfg.decode_tokens.clone(),
     );
-    let mut batcher = StepBatcher::new(gen.take(cfg.sessions), cfg.max_active);
+    let mut batcher = StepBatcher::new(gen.take(cfg.sessions), cfg.max_active, cfg.chunk_tokens);
 
     let mut now_sec = 0.0f64;
     let mut prefill_sec = 0.0f64;
+    let mut prefill_tokens = 0u64;
     let mut tokens = 0u64;
     let mut steps = 0usize;
     let mut tpot_ms: Vec<f64> = Vec::new();
+    let mut ttft_ms: Vec<f64> = Vec::new();
 
     while steps < cfg.max_steps && !batcher.done() {
         if batcher.active().is_empty() {
@@ -891,21 +1003,44 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
         }
         let newly = batcher.admit(now_sec);
         let mut step_sec = 0.0f64;
-        // Prefill charge for this step's admissions: prompts run as
-        // sampled forward kernels before decode resumes, so co-scheduled
-        // admissions stretch every active session's TPOT — the
-        // continuous-batching prefill tax.
-        if !newly.is_empty() {
-            let prompts: Vec<usize> = newly.iter().map(|s| s.prefill).collect();
-            for t in exec.prefill_charges(&prompts) {
-                prefill_sec += t;
-                step_sec += t;
+        if cfg.chunk_tokens == 0 {
+            // Monolithic prefill charge for this step's admissions:
+            // prompts run as sampled forward kernels before decode
+            // resumes, so co-scheduled admissions stretch every active
+            // session's TPOT — the continuous-batching prefill tax.
+            if !newly.is_empty() {
+                let prompts: Vec<usize> = newly.iter().map(|s| s.prefill).collect();
+                prefill_tokens += prompts.iter().map(|&p| p as u64).sum::<u64>();
+                for t in exec.prefill_charges(&prompts) {
+                    prefill_sec += t;
+                    step_sec += t;
+                }
+            }
+        } else {
+            // Mixed-step composition: decode tokens first, the budget's
+            // remainder streams prompt chunks in admission order.
+            let budget = if cfg.step_token_budget == 0 {
+                usize::MAX
+            } else {
+                cfg.step_token_budget
+            };
+            let decoding = batcher.decoding();
+            let chunks = batcher.plan_chunks(budget.saturating_sub(decoding));
+            if !chunks.is_empty() {
+                prefill_tokens += chunks.iter().map(|c| c.tokens() as u64).sum::<u64>();
+                for t in exec.chunk_charges(&chunks) {
+                    prefill_sec += t;
+                    step_sec += t;
+                }
             }
         }
-        // Iteration-level batch: group the active set by bucketed KV
-        // length; each group is one two-phase split-KV decode launch.
+        // Iteration-level batch: group the decode-phase sessions by
+        // bucketed KV length; each group is one two-phase split-KV
+        // decode launch. A session whose prefill completed this very
+        // step decodes its first token in the same step — exactly the
+        // monolithic path's admission semantics.
         let mut grouped: BTreeMap<usize, usize> = BTreeMap::new();
-        for a in batcher.active() {
+        for a in batcher.active().iter().filter(|a| a.prefill_complete()) {
             *grouped.entry(cfg.bucket_of(a.kv_len(cfg.kv_cap))).or_insert(0) += 1;
         }
         let groups: Vec<(usize, usize)> = grouped.into_iter().collect();
@@ -913,6 +1048,13 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
             step_sec += t;
         }
         now_sec += step_sec;
+        // TTFT: sessions emitting their first decode token this step
+        // sample arrival → the step's end.
+        for a in batcher.active() {
+            if a.prefill_complete() && a.generated == 0 {
+                ttft_ms.push((now_sec - a.session.arrival_sec) * 1e3);
+            }
+        }
         let emitted = batcher.advance_step();
         tokens += emitted as u64;
         tpot_ms.extend(std::iter::repeat(step_sec * 1e3).take(emitted));
@@ -929,7 +1071,10 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
         tokens_per_sec: if now_sec > 0.0 { tokens as f64 / now_sec } else { 0.0 },
         tpot_p50_ms: percentile(&tpot_ms, 0.50),
         tpot_p99_ms: percentile(&tpot_ms, 0.99),
+        ttft_p50_ms: percentile(&ttft_ms, 0.50),
+        ttft_p99_ms: percentile(&ttft_ms, 0.99),
         prefill_sec,
+        prefill_tokens,
         decode_l2_hit_pct: if l2_hits + l2_misses > 0 {
             100.0 * l2_hits as f64 / (l2_hits + l2_misses) as f64
         } else {
@@ -941,6 +1086,24 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
     }
 }
 
+/// Build one serving-report row: the scenario served under every policy
+/// applicable to its geometry. The ONE place row assembly lives
+/// (mirroring [`cluster_row`]) — the sweep ([`serve_report`]) and the
+/// CLI's `--config` / chunking-override paths all call it, so they
+/// cannot diverge.
+pub fn serve_row(
+    driver: &SimDriver,
+    topo: &Topology,
+    cfg: &ServeConfig,
+    label: String,
+) -> ServeRow {
+    let stats = advisor::applicable_policies(topo, &cfg.base_geometry())
+        .into_iter()
+        .map(|p| serve_decode_with(driver, topo, cfg, p))
+        .collect();
+    ServeRow { label, stats }
+}
+
 /// The full serving report: every sweep scenario run under every
 /// applicable mapping policy, through one driver — the report cache is
 /// shared across policies, scenarios, and the advisor's projections, so
@@ -949,14 +1112,7 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
 pub fn serve_report(driver: &SimDriver, topo: &Topology, quick: bool) -> ServeReport {
     let rows = serve_scenarios(quick)
         .into_iter()
-        .map(|sc| {
-            let policies = advisor::applicable_policies(topo, &sc.cfg.base_geometry());
-            let stats = policies
-                .into_iter()
-                .map(|p| serve_decode_with(driver, topo, &sc.cfg, p))
-                .collect();
-            ServeRow { label: sc.label, stats }
-        })
+        .map(|sc| serve_row(driver, topo, &sc.cfg, sc.label))
         .collect();
     ServeReport { rows }
 }
@@ -1091,6 +1247,7 @@ impl ClusterReport {
                 "scale eff",
                 "dec L2 %",
                 "TPOT p50 (ms)",
+                "TTFT p99 (ms)",
                 "sessions",
                 "re-advised",
             ]);
@@ -1105,6 +1262,7 @@ impl ClusterReport {
                     eff,
                     format!("{:.1}", s.decode_l2_hit_pct),
                     format!("{:.3}", s.tpot_p50_ms),
+                    format!("{:.3}", s.ttft_p99_ms),
                     format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
                     s.advisor_consults.to_string(),
                 ]);
@@ -1272,6 +1430,86 @@ mod serve_tests {
         let second = serve_decode_with(&driver, &topo, &cfg, Policy::NaiveHeadFirst);
         assert_eq!(driver.cache().misses(), misses, "zero new engine runs");
         assert_eq!(first.to_json().render(), second.to_json().render());
+    }
+
+    #[test]
+    fn chunked_serve_conserves_tokens_and_improves_tails() {
+        // The chunked smoke: identical trace, every prompt token
+        // prefilled exactly once, and the mixed-step composition cuts
+        // both the prefill wall-clock (row-block chunks price the
+        // rectangle rows × prefix instead of the full square) and the
+        // first-token tail.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let mono_cfg = tiny_serve();
+        let chunked_cfg =
+            ServeConfig { chunk_tokens: 512, step_token_budget: 1024, ..tiny_serve() };
+        chunked_cfg.validate().unwrap();
+        let mono = serve_decode_with(&driver, &topo, &mono_cfg, Policy::SwizzledHeadFirst);
+        let chunked = serve_decode_with(&driver, &topo, &chunked_cfg, Policy::SwizzledHeadFirst);
+        assert!(!chunked.truncated && !mono.truncated);
+        assert_eq!(chunked.tokens, mono.tokens, "same trace, same decode tokens");
+        assert_eq!(chunked.sessions_completed, chunked_cfg.sessions);
+        assert_eq!(
+            chunked.prefill_tokens, mono.prefill_tokens,
+            "chunking must conserve prompt tokens"
+        );
+        assert!(
+            chunked.prefill_sec < mono.prefill_sec,
+            "multi-chunk prompts must undercut monolithic prefill ({} >= {})",
+            chunked.prefill_sec,
+            mono.prefill_sec
+        );
+        assert!(
+            chunked.ttft_p99_ms <= mono.ttft_p99_ms,
+            "chunked TTFT p99 {} > monolithic {}",
+            chunked.ttft_p99_ms,
+            mono.ttft_p99_ms
+        );
+        assert!(chunked.ttft_p50_ms > 0.0 && chunked.ttft_p50_ms <= chunked.ttft_p99_ms);
+        assert!(mono.ttft_p50_ms > 0.0 && mono.ttft_p50_ms <= mono.ttft_p99_ms);
+    }
+
+    #[test]
+    fn serve_config_rejects_contradictory_chunking() {
+        let budget_without_chunks =
+            ServeConfig { step_token_budget: 2048, ..tiny_serve() };
+        let err = budget_without_chunks.validate().unwrap_err();
+        assert!(err.contains("chunk_tokens"), "{err}");
+        let chunk_over_budget =
+            ServeConfig { chunk_tokens: 4096, step_token_budget: 1024, ..tiny_serve() };
+        let err = chunk_over_budget.validate().unwrap_err();
+        assert!(err.contains("must not exceed"), "{err}");
+        // A capped budget must cover max_active decode tokens (decode is
+        // never dropped, so a smaller budget could never be honored).
+        let starved = ServeConfig {
+            chunk_tokens: 2,
+            step_token_budget: 2,
+            max_active: 8,
+            ..tiny_serve()
+        };
+        let err = starved.validate().unwrap_err();
+        assert!(err.contains("below max_active"), "{err}");
+        // A prompt the KV cache cannot hold is rejected up front (it
+        // would otherwise stream hundreds of beyond-capacity chunks).
+        let over = ServeConfig { kv_cap: 1024, prefill_lengths: vec![512, 2048], ..tiny_serve() };
+        let err = over.validate().unwrap_err();
+        assert!(err.contains("exceeds the KV capacity"), "{err}");
+        // Uncapped budget with chunking on is fine.
+        ServeConfig { chunk_tokens: 512, ..tiny_serve() }.validate().unwrap();
+    }
+
+    #[test]
+    fn chunk_span_clamps_to_capacity() {
+        let cfg = ServeConfig { kv_cap: 4096, ..tiny_serve() };
+        let span = |start, end| cfg.chunk_span(&PrefillChunk { id: 0, start, end });
+        assert_eq!(span(0, 512), (0, 512));
+        assert_eq!(span(3584, 4096), (3584, 4096));
+        // Chunks straddling the capacity clamp their end...
+        assert_eq!(span(3584, 5000), (3584, 4096));
+        // ...and chunks entirely beyond it collapse to an empty span.
+        assert_eq!(span(4096, 5000), (4096, 4096));
+        assert_eq!(span(8000, 9000), (4096, 4096));
     }
 
     #[test]

@@ -325,20 +325,54 @@ pub fn decode_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureRes
 /// bench). The richer per-policy report (TPOT percentiles, advisor
 /// consult counts) is `numa-attn serve`.
 pub fn serve_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    serve_figs(driver, topo, quick).0
+}
+
+/// Both serving panels — throughput and the TTFT p99 tail — projected
+/// from ONE serving-report run: the panels are pure projections of the
+/// same [`crate::coordinator::ServeStats`] rows, so `figure serve` and
+/// `figure all` call this instead of running the sweep's serving loops
+/// once per panel. The TTFT panel (lower is better) is where the
+/// chunked sweep rows earn their keep: streaming prompts in row-block
+/// chunks keeps the first-token tail flat where monolithic prefill
+/// freezes every admission wave behind the longest prompt
+/// (docs/SERVING.md §6).
+pub fn serve_figs(
+    driver: &SimDriver,
+    topo: &Topology,
+    quick: bool,
+) -> (FigureResult, FigureResult) {
     let report = crate::coordinator::serve_report(driver, topo, quick);
-    FigureResult {
-        id: "serve".into(),
-        title: "Continuous-batching decode serving throughput (Llama-3 70B GQA-8)".into(),
-        metric: "decode tokens/s over simulated time".into(),
-        rows: report
+    let rows_by = |value: fn(&crate::coordinator::ServeStats) -> f64| -> Vec<FigureRow> {
+        report
             .rows
             .iter()
             .map(|row| FigureRow {
                 label: row.label.clone(),
-                values: row.stats.iter().map(|s| (s.policy, s.tokens_per_sec)).collect(),
+                values: row.stats.iter().map(|s| (s.policy, value(s))).collect(),
             })
-            .collect(),
-    }
+            .collect()
+    };
+    (
+        FigureResult {
+            id: "serve".into(),
+            title: "Continuous-batching decode serving throughput (Llama-3 70B GQA-8)".into(),
+            metric: "decode tokens/s over simulated time".into(),
+            rows: rows_by(|s| s.tokens_per_sec),
+        },
+        FigureResult {
+            id: "serve_ttft".into(),
+            title: "Continuous-batching TTFT p99 (Llama-3 70B GQA-8)".into(),
+            metric: "TTFT p99 (ms, arrival -> first decode token; lower is better)".into(),
+            rows: rows_by(|s| s.ttft_p99_ms),
+        },
+    )
+}
+
+/// The TTFT panel alone (the `figure serve_ttft` id) — see
+/// [`serve_figs`].
+pub fn serve_ttft_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    serve_figs(driver, topo, quick).1
 }
 
 /// Cluster figure (docs/CLUSTER.md): decode throughput of the
@@ -374,17 +408,20 @@ pub fn cluster_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureRe
 /// jobs between figures (e.g. Fig. 12's grid overlapping Fig. 13's) are
 /// served from the report cache.
 pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult> {
-    vec![
+    let mut figs = vec![
         fig12(driver, topo, quick),
         fig13(driver, topo, quick),
         fig14(driver, topo, quick),
         fig15(driver, topo, quick),
         fig16(driver, topo, quick),
         decode_fig(driver, topo, quick),
-        serve_fig(driver, topo, quick),
-        cluster_fig(driver, topo, quick),
-        gemm_motivation(topo),
-    ]
+    ];
+    let (serve, serve_ttft) = serve_figs(driver, topo, quick);
+    figs.push(serve);
+    figs.push(serve_ttft);
+    figs.push(cluster_fig(driver, topo, quick));
+    figs.push(gemm_motivation(topo));
+    figs
 }
 
 /// Sec. 1 motivating claim: GEMM L2 hit rate 43% -> 92% with the chiplet

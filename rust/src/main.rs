@@ -5,10 +5,11 @@
 //!   simulate  — run the chiplet simulator on one attention configuration
 //!   decode    — run the two-phase split-KV decode pass (auto split count)
 //!   figure    — regenerate a paper figure (12..16, decode, serve,
-//!               cluster, gemm, all)
+//!               serve_ttft, cluster, gemm, all)
 //!   explain   — print Table-1 style topology specs and mapping layouts
 //!   verify    — check AOT artifacts against golden checksums
-//!   serve     — run the continuous-batching decode serving loop
+//!   serve     — run the continuous-batching decode serving loop,
+//!               optionally with chunked prefill / mixed steps
 //!               (docs/SERVING.md); `--live` runs the PJRT prefill demo
 //!   cluster   — run the serving loop tensor-parallel across a cluster of
 //!               devices (two-level NUMA; docs/CLUSTER.md)
@@ -40,7 +41,7 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|serve|cluster|gemm|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|cluster|gemm|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
@@ -73,9 +74,19 @@ decode flags:
                        stderr; stdout stays row-stable)
 
 serve flags (the continuous-batching decode loop; docs/SERVING.md):
-  --quick              run the two-scenario CI sweep (default: full sweep)
+  --quick              run the three-scenario CI sweep (default: full
+                       sweep; both include a chunked-prefill scenario)
   --config FILE        serve ONE scenario from an experiment file's
                        [serve] section instead of the built-in sweep
+  --chunk-tokens N     override chunked prefill: stream prompts in
+                       N-token chunks, applied to every sweep scenario
+                       or the --config scenario (0 = monolithic
+                       prefill). Replaces a scenario's chunking policy
+                       wholesale: its own step budget is discarded in
+                       favor of --step-token-budget (or uncapped)
+  --step-token-budget N  override the mixed-step token budget (decode
+                       tokens first, prefill chunks with the remainder;
+                       0 = uncapped; ignored where chunking is off)
   --live               run the live PJRT prefill demo instead (requires
                        artifacts; uses --artifacts/--requests/--max-batch/
                        --max-wait-ms/--seed)
@@ -351,7 +362,12 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "15" | "fig15" => vec![figures::fig15(&driver, &topo, quick)],
         "16" | "fig16" => vec![figures::fig16(&driver, &topo, quick)],
         "decode" => vec![figures::decode_fig(&driver, &topo, quick)],
-        "serve" => vec![figures::serve_fig(&driver, &topo, quick)],
+        "serve" => {
+            // Both panels project from ONE serving-report run.
+            let (serve, serve_ttft) = figures::serve_figs(&driver, &topo, quick);
+            vec![serve, serve_ttft]
+        }
+        "serve_ttft" => vec![figures::serve_ttft_fig(&driver, &topo, quick)],
         "cluster" => vec![figures::cluster_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
         "all" => figures::all(&driver, &topo, quick),
@@ -438,19 +454,81 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let a = |e: String| anyhow::anyhow!(e);
     let driver = driver_arg(args)?;
+    // Chunked-prefill overrides, applied on top of the sweep scenarios
+    // or the --config scenario, then re-validated (so an oversized
+    // --chunk-tokens fails with the config section's message instead of
+    // a panic inside the loop). `--chunk-tokens 0` means "serve
+    // monolithically", so it also clears a scenario's own budget; a
+    // budget override only lands where chunking is actually on (it is
+    // meaningless for monolithic rows).
+    let chunk: Option<usize> = args.get("chunk-tokens").map_err(a)?;
+    let budget: Option<usize> = args.get("step-token-budget").map_err(a)?;
+    // `strict` (the single-scenario --config path) rejects a budget
+    // override the scenario cannot honor, matching the INI parser's
+    // contradiction error; the sweep path instead skips the budget on
+    // its monolithic rows (documented: "ignored where chunking is off").
+    let apply_overrides = |cfg: &mut coordinator::ServeConfig, strict: bool| -> anyhow::Result<()> {
+        if let Some(c) = chunk {
+            // Overriding the chunk size replaces the scenario's whole
+            // chunking policy: its own budget is discarded (a larger
+            // chunk must never trip over a budget the user never set)
+            // and the budget override — or uncapped — takes its place.
+            cfg.chunk_tokens = c;
+            cfg.step_token_budget = 0;
+        }
+        if cfg.chunk_tokens == 0 {
+            if strict && budget.unwrap_or(0) > 0 {
+                anyhow::bail!(
+                    "--step-token-budget ({}) without chunked prefill is contradictory: \
+                     this scenario serves monolithically — add --chunk-tokens > 0 or drop \
+                     the flag",
+                    budget.unwrap_or(0)
+                );
+            }
+            cfg.step_token_budget = 0;
+        } else if let Some(b) = budget {
+            cfg.step_token_budget = b;
+        }
+        if chunk.is_some() || budget.is_some() {
+            cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        }
+        Ok(())
+    };
+    // Overridden rows say so: the label carries the chunking policy the
+    // stats were ACTUALLY produced with, not the scenario's original one.
+    let override_label = |base: String, cfg: &coordinator::ServeConfig| -> String {
+        if chunk.is_none() && budget.is_none() {
+            base
+        } else if cfg.chunk_tokens == 0 {
+            format!("{base} [override: monolithic]")
+        } else {
+            format!(
+                "{base} [override: chunk={} budget={}]",
+                cfg.chunk_tokens, cfg.step_token_budget
+            )
+        }
+    };
     let report = if let Some(path) = args.get::<String>("config").map_err(a)? {
         let text = std::fs::read_to_string(&path)?;
         let exp = ExperimentConfig::parse(&text).map_err(a)?;
         let topo = exp.topology().map_err(a)?;
-        let cfg = exp.serve_config().map_err(a)?;
-        let stats = coordinator::applicable_policies(&topo, &cfg.base_geometry())
-            .into_iter()
-            .map(|p| coordinator::serve_decode_with(&driver, &topo, &cfg, p))
-            .collect();
-        coordinator::ServeReport { rows: vec![coordinator::ServeRow { label: path, stats }] }
-    } else {
+        let mut cfg = exp.serve_config().map_err(a)?;
+        apply_overrides(&mut cfg, true)?;
+        let label = override_label(path, &cfg);
+        coordinator::ServeReport { rows: vec![coordinator::serve_row(&driver, &topo, &cfg, label)] }
+    } else if chunk.is_none() && budget.is_none() {
         let topo = topo_arg(args)?;
         coordinator::serve_report(&driver, &topo, args.has("quick"))
+    } else {
+        let topo = topo_arg(args)?;
+        let mut rows = Vec::new();
+        for sc in coordinator::serve_scenarios(args.has("quick")) {
+            let mut cfg = sc.cfg;
+            apply_overrides(&mut cfg, false)?;
+            let label = override_label(sc.label, &cfg);
+            rows.push(coordinator::serve_row(&driver, &topo, &cfg, label));
+        }
+        coordinator::ServeReport { rows }
     };
     if args.has("json") {
         println!("{}", report.to_json().render());

@@ -174,6 +174,99 @@ fn sharding_shrinks_prefill_time_on_the_same_trace() {
 }
 
 #[test]
+fn golden_whole_prompt_chunks_reproduce_monolithic_cluster_serve() {
+    // The cluster half of the golden-equivalence pin: on a real tp=2
+    // shard plan, a chunk size covering every prompt degenerates to one
+    // full-prompt chunk per session — the identical sharded jobs plus
+    // the identical all-gather — so the cluster serving JSON reproduces
+    // the chunking-off run byte-for-byte at 1 and 8 driver workers.
+    let topo = fast_topo();
+    let off = small_serve();
+    let max_prompt = *off.prefill_lengths.iter().max().unwrap();
+    let one_chunk = ServeConfig { chunk_tokens: max_prompt, ..small_serve() };
+    let (cluster, plan) = tp_cluster(&topo, &off, 2);
+    for threads in [1usize, 8] {
+        let mono = serve_decode_cluster_with(
+            &SimDriver::new(threads),
+            &cluster,
+            &plan,
+            &off,
+            Policy::SwizzledHeadFirst,
+        );
+        let chunked = serve_decode_cluster_with(
+            &SimDriver::new(threads),
+            &cluster,
+            &plan,
+            &one_chunk,
+            Policy::SwizzledHeadFirst,
+        );
+        assert_eq!(
+            mono.to_json().render(),
+            chunked.to_json().render(),
+            "{threads} workers: one-chunk cluster serve diverged from monolithic"
+        );
+    }
+}
+
+#[test]
+fn chunked_tp1_cluster_serve_is_byte_identical_to_single_device() {
+    // The executor generalization holds under chunking too: a tp=1
+    // cluster prices chunked-prefill launches identically to the
+    // single-device path (same jobs, fraction 1.0-free math, zero
+    // all-gather).
+    let topo = fast_topo();
+    let cfg = ServeConfig { chunk_tokens: 512, step_token_budget: 1024, ..small_serve() };
+    let (cluster, plan) = tp_cluster(&topo, &cfg, 1);
+    for threads in [1usize, 8] {
+        let single =
+            serve_decode_with(&SimDriver::new(threads), &topo, &cfg, Policy::SwizzledHeadFirst);
+        let clustered = serve_decode_cluster_with(
+            &SimDriver::new(threads),
+            &cluster,
+            &plan,
+            &cfg,
+            Policy::SwizzledHeadFirst,
+        );
+        assert_eq!(
+            single.to_json().render(),
+            clustered.to_json().render(),
+            "{threads} workers: chunked tp=1 cluster diverged from single-device"
+        );
+    }
+}
+
+#[test]
+fn chunked_cluster_serve_conserves_tokens_and_cuts_prefill() {
+    // Chunking composes with sharding: the tp=2 chunked run serves the
+    // identical tokens, prefills every prompt token exactly once, and
+    // undercuts the monolithic tp=2 prefill wall-clock.
+    let driver = SimDriver::new(4);
+    let topo = fast_topo();
+    let mono_cfg = small_serve();
+    let chunked_cfg = ServeConfig { chunk_tokens: 512, step_token_budget: 1024, ..small_serve() };
+    let (cluster, plan) = tp_cluster(&topo, &mono_cfg, 2);
+    let mono =
+        serve_decode_cluster_with(&driver, &cluster, &plan, &mono_cfg, Policy::SwizzledHeadFirst);
+    let chunked = serve_decode_cluster_with(
+        &driver,
+        &cluster,
+        &plan,
+        &chunked_cfg,
+        Policy::SwizzledHeadFirst,
+    );
+    assert!(!mono.truncated && !chunked.truncated);
+    assert_eq!(chunked.tokens, mono.tokens);
+    assert_eq!(chunked.prefill_tokens, mono.prefill_tokens);
+    assert!(
+        chunked.prefill_sec < mono.prefill_sec,
+        "tp=2 chunked prefill {} s >= monolithic {} s",
+        chunked.prefill_sec,
+        mono.prefill_sec
+    );
+    assert!(chunked.ttft_p50_ms > 0.0 && chunked.ttft_p50_ms <= chunked.ttft_p99_ms);
+}
+
+#[test]
 fn strided_and_contiguous_plans_price_identically_when_homogeneous() {
     // The two strategies place different head IDS on each device, but on
     // a homogeneous cluster every device runs the same shard-local

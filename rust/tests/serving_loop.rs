@@ -2,7 +2,12 @@
 //! (docs/SERVING.md):
 //!
 //! * the serving report is *byte-identical* at any driver worker count
-//!   (the `serve` analogue of tests/driver_determinism.rs);
+//!   (the `serve` analogue of tests/driver_determinism.rs) — with
+//!   chunked prefill off AND on;
+//! * golden equivalence of the chunked-prefill refactor: `chunk_tokens
+//!   = 0` runs the historical monolithic path (pinned across worker
+//!   counts), and `chunk_tokens >= max prompt` degenerates to one chunk
+//!   whose serving stats reproduce the monolithic JSON byte-for-byte;
 //! * SwizzledHeadFirst's decode throughput is at least NaiveHeadFirst's
 //!   (the paper's mapping win, measured end-to-end through the loop);
 //! * `pick_num_splits` is monotone the way the loop relies on: once a
@@ -59,6 +64,76 @@ fn serve_json_is_byte_identical_at_threads_1_and_8() {
             "{policy} serve stats diverged between 1 and 8 workers"
         );
     }
+}
+
+#[test]
+fn chunked_serve_json_is_byte_identical_at_threads_1_and_8() {
+    // The determinism contract extends to mixed prefill+decode steps.
+    let topo = fast_topo();
+    let cfg = ServeConfig { chunk_tokens: 512, step_token_budget: 1024, ..small_serve() };
+    for policy in [Policy::SwizzledHeadFirst, Policy::NaiveHeadFirst] {
+        let serial = serve_decode_with(&SimDriver::new(1), &topo, &cfg, policy);
+        let parallel = serve_decode_with(&SimDriver::new(8), &topo, &cfg, policy);
+        assert_eq!(
+            serial.to_json().render(),
+            parallel.to_json().render(),
+            "{policy} chunked serve stats diverged between 1 and 8 workers"
+        );
+    }
+}
+
+#[test]
+fn golden_whole_prompt_chunks_reproduce_monolithic_serve_byte_for_byte() {
+    // The golden-equivalence pin of the chunked-prefill tentpole: a
+    // chunk size covering every prompt in the mix degenerates to ONE
+    // full-prompt chunk per session — the identical forward job at row
+    // fraction 1.0 — so the whole serving report (throughput, TPOT,
+    // TTFT, prefill accounting, advisor consults) must reproduce the
+    // chunking-off run byte-for-byte, at 1 and 8 driver workers.
+    let topo = fast_topo();
+    let off = small_serve();
+    let max_prompt = *off.prefill_lengths.iter().max().unwrap();
+    let one_chunk = ServeConfig { chunk_tokens: max_prompt, ..small_serve() };
+    for policy in [Policy::SwizzledHeadFirst, Policy::NaiveHeadFirst] {
+        for threads in [1usize, 8] {
+            let mono = serve_decode_with(&SimDriver::new(threads), &topo, &off, policy);
+            let chunked = serve_decode_with(&SimDriver::new(threads), &topo, &one_chunk, policy);
+            assert_eq!(
+                mono.to_json().render(),
+                chunked.to_json().render(),
+                "{policy} @ {threads} workers: one-chunk serve diverged from monolithic"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_serve_improves_the_first_token_tail() {
+    // The tentpole's payoff at test scale: streaming prompts in
+    // row-block chunks conserves every served token while cutting the
+    // prefill wall-clock and the TTFT tail (one prompt no longer
+    // freezes the decode streams of the step that admits it).
+    let driver = SimDriver::new(4);
+    let topo = fast_topo();
+    let mono_cfg = small_serve();
+    let chunked_cfg = ServeConfig { chunk_tokens: 512, step_token_budget: 1024, ..small_serve() };
+    let mono = serve_decode_with(&driver, &topo, &mono_cfg, Policy::SwizzledHeadFirst);
+    let chunked = serve_decode_with(&driver, &topo, &chunked_cfg, Policy::SwizzledHeadFirst);
+    assert!(!mono.truncated && !chunked.truncated);
+    assert_eq!(chunked.tokens, mono.tokens, "identical trace, identical tokens");
+    assert_eq!(chunked.prefill_tokens, mono.prefill_tokens, "prompt-token conservation");
+    assert!(
+        chunked.prefill_sec < mono.prefill_sec,
+        "chunked prefill {} s >= monolithic {} s",
+        chunked.prefill_sec,
+        mono.prefill_sec
+    );
+    assert!(
+        chunked.ttft_p99_ms <= mono.ttft_p99_ms,
+        "chunked TTFT p99 {} ms > monolithic {} ms",
+        chunked.ttft_p99_ms,
+        mono.ttft_p99_ms
+    );
 }
 
 #[test]
