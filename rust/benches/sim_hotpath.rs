@@ -2,32 +2,51 @@
 //! engine, LRU cache ops, and mapping decode — the §Perf targets for
 //! Layer 3 (DESIGN.md: the Table-2 sweep must run in minutes, so the
 //! engine needs >~10M tile-accesses/s/core).
+//!
+//! Besides the console rows, this bench writes the pinned perf
+//! trajectory `BENCH_sim_hotpath.json` at the repo root (docs/PERF.md):
+//! per-case mean/min/max plus derived metrics — `accesses_per_sec` for
+//! the engine-throughput floor and `speedup_vs_reference` comparing the
+//! event-driven engine against the reference per-tick scan on the same
+//! workload (`engine-reference:` cases time the oracle directly).
 
 mod common;
 
 use numa_attn::attn::{AttnConfig, KernelKind};
 use numa_attn::cache::LruCache;
 use numa_attn::mapping::{Mapping, Policy};
-use numa_attn::sim::{simulate, SimConfig};
+use numa_attn::sim::{simulate, simulate_decode, simulate_reference, SimConfig};
 use numa_attn::util::bench::Harness;
 
 fn main() {
     let mut h = Harness::new("sim_hotpath");
     let topo = common::topo();
 
-    // End-to-end engine throughput on a paper-scale sampled config.
+    // End-to-end engine throughput on a paper-scale sampled config. This
+    // is the compute-bound regime (slots advance almost every tick), so
+    // the event queue buys little here — the case exists to pin the
+    // accesses/s floor, not the event-skip win.
     let cfg = AttnConfig::mha(1, 64, 32768, 128);
+    let shf = SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2);
     let mut accesses = 0u64;
     h.run("engine: H=64 N=32K sampled (SHF)", 5, || {
-        let r = simulate(&topo, &cfg, &SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 2));
+        let r = simulate(&topo, &cfg, &shf);
         accesses = r.l2.accesses();
     });
-    let per_iter = h.results().last().unwrap().mean.as_secs_f64();
+    let fwd_mean = h.results().last().unwrap().mean.as_secs_f64();
+    let aps = accesses as f64 / fwd_mean;
     println!(
         "[perf] engine throughput: {:.1}M demand accesses/s ({} accesses/iter)",
-        accesses as f64 / per_iter / 1e6,
+        aps / 1e6,
         accesses
     );
+    h.metric("accesses_per_sec", aps);
+
+    h.run("engine-reference: H=64 N=32K sampled (SHF)", 3, || {
+        let _ = simulate_reference(&topo, &cfg, &shf);
+    });
+    let fwd_ref_mean = h.results().last().unwrap().mean.as_secs_f64();
+    h.metric("speedup_vs_event", fwd_ref_mean / fwd_mean);
 
     // Worst-case policy (block-first thrash floods the HBM queue).
     h.run("engine: H=64 N=32K sampled (NBF)", 5, || {
@@ -43,6 +62,40 @@ fn main() {
             &SimConfig::backward(Policy::SwizzledHeadFirst),
         );
     });
+
+    // Flash-decode, both phases (split-KV + reduction).
+    let dec_cfg = AttnConfig::gqa(32, 64, 8, 65536, 128);
+    let dec_sim = SimConfig::decode(Policy::SwizzledHeadFirst, 16);
+    h.run("engine: decode split16 B=32 GQA-8 N=64K", 3, || {
+        let _ = simulate_decode(&topo, &dec_cfg, &dec_sim);
+    });
+
+    // The reduction phase alone: the latency-epoch regime the event
+    // engine exists for. Its ticks are tiny (step FLOPs are a vector
+    // merge), so the HBM latency spans thousands of ticks and the
+    // reference engine spends almost all its time scanning slots that
+    // cannot move. This is the headline speedup case the acceptance
+    // criterion pins (>= 10x vs the pre-PR engine, which is the
+    // reference scan).
+    let red_sim = SimConfig {
+        kernel: KernelKind::DecodeReduce { num_splits: 16 },
+        ..dec_sim
+    };
+    h.run("engine: decode-reduce B=32 H=64 splits=16", 5, || {
+        let _ = simulate(&topo, &dec_cfg, &red_sim);
+    });
+    let red_mean = h.results().last().unwrap().mean.as_secs_f64();
+
+    h.run("engine-reference: decode-reduce B=32 H=64 splits=16", 3, || {
+        let _ = simulate_reference(&topo, &dec_cfg, &red_sim);
+    });
+    let red_ref_mean = h.results().last().unwrap().mean.as_secs_f64();
+    println!(
+        "[perf] decode-reduce: event {:.3} ms vs reference {:.3} ms ({:.1}x)",
+        red_mean * 1e3,
+        red_ref_mean * 1e3,
+        red_ref_mean / red_mean
+    );
 
     // LRU cache ops.
     h.run("lru: 1M mixed accesses, 25% working-set overflow", 10, || {
@@ -69,4 +122,20 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+
+    // Attach the headline speedup to the decode-reduce EVENT case (found
+    // by name so case insertions above cannot silently re-target it),
+    // then pin the trajectory at the repo root.
+    let idx = h
+        .results()
+        .iter()
+        .position(|r| r.name.starts_with("engine: decode-reduce"))
+        .expect("decode-reduce case present");
+    h.metric_at(idx, "speedup_vs_reference", red_ref_mean / red_mean);
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_sim_hotpath.json");
+    h.write_json(&path).expect("write BENCH_sim_hotpath.json");
+    println!("[perf] trajectory written to {}", path.display());
 }

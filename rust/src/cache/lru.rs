@@ -30,6 +30,10 @@ pub struct LruCache {
     head: u32, // most recently used
     tail: u32, // least recently used
     stats: CacheStats,
+    /// Analytic fast-path flag: the caller has proven the working set
+    /// fits, so eviction can never occur and recency order is
+    /// unobservable — hits skip the LRU `touch`. See `set_no_evict`.
+    no_evict: bool,
 }
 
 impl LruCache {
@@ -45,7 +49,20 @@ impl LruCache {
             head: NIL,
             tail: NIL,
             stats: CacheStats::default(),
+            no_evict: false,
         }
+    }
+
+    /// Enable (or disable) the analytic no-evict fast path. Correct ONLY
+    /// when the caller has proven the total bytes ever inserted fit in
+    /// `capacity_bytes` (e.g. the engine's per-XCD working-set bound):
+    /// then `evict_lru` is unreachable and the recency list is never
+    /// consulted, so skipping the MRU promotion on hits changes no
+    /// observable statistic. Entries stay fully linked (insertion order),
+    /// so `invalidate`/`clear`/`keys_mru_to_lru` remain valid — but the
+    /// latter reports insertion order, not recency, while enabled.
+    pub fn set_no_evict(&mut self, on: bool) {
+        self.no_evict = on;
     }
 
     /// The configured capacity.
@@ -96,12 +113,22 @@ impl LruCache {
     }
 
     /// Record an access: hit -> promote to MRU; miss -> insert (evicting).
-    /// Returns `true` on hit.
+    /// Returns `true` on hit. Single map probe per phase: the miss path
+    /// skips `fill`'s redundant presence re-check (the lookup just
+    /// failed), so a miss costs one `get` + one `insert` instead of the
+    /// former probe/probe/insert triple.
     pub fn access(&mut self, key: u64, bytes: u32) -> bool {
-        if self.probe(key, bytes) {
+        if let Some(&idx) = self.map.get(&key) {
+            self.stats.hits += 1;
+            self.stats.hit_bytes += bytes as u64;
+            if !self.no_evict {
+                self.touch(idx);
+            }
             true
         } else {
-            self.fill(key, bytes);
+            self.stats.misses += 1;
+            self.stats.miss_bytes += bytes as u64;
+            self.insert_absent(key, bytes);
             false
         }
     }
@@ -113,7 +140,9 @@ impl LruCache {
         if let Some(&idx) = self.map.get(&key) {
             self.stats.hits += 1;
             self.stats.hit_bytes += bytes as u64;
-            self.touch(idx);
+            if !self.no_evict {
+                self.touch(idx);
+            }
             true
         } else {
             self.stats.misses += 1;
@@ -134,7 +163,9 @@ impl LruCache {
         if let Some(&idx) = self.map.get(&key) {
             self.stats.hits += 1;
             self.stats.hit_bytes += bytes as u64;
-            self.touch(idx);
+            if !self.no_evict {
+                self.touch(idx);
+            }
             true
         } else {
             false
@@ -160,9 +191,20 @@ impl LruCache {
     /// by `probe`.
     pub fn fill(&mut self, key: u64, bytes: u32) {
         if let Some(&idx) = self.map.get(&key) {
-            self.touch(idx);
+            if !self.no_evict {
+                self.touch(idx);
+            }
             return;
         }
+        self.insert_absent(key, bytes);
+    }
+
+    /// Insert a key the caller has just verified absent (one failed map
+    /// lookup ago, with no intervening mutation). Evicts until it fits;
+    /// the entry is linked MRU-first even in no-evict mode so the list
+    /// invariants hold.
+    fn insert_absent(&mut self, key: u64, bytes: u32) {
+        debug_assert!(!self.map.contains_key(&key));
         let bytes64 = bytes as u64;
         if bytes64 > self.capacity_bytes {
             // Entry larger than the whole cache: streams straight through.
@@ -204,6 +246,7 @@ impl LruCache {
     }
 
     fn evict_lru(&mut self) {
+        debug_assert!(!self.no_evict, "eviction under no_evict: working-set bound lied");
         let idx = self.tail;
         debug_assert_ne!(idx, NIL, "evict on empty cache");
         let (key, bytes) = {
@@ -403,6 +446,45 @@ mod tests {
         }
         assert_eq!(c.stats().misses, 0);
         assert!((c.stats().hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_evict_mode_preserves_stats_and_contents() {
+        // Within-capacity workload: stats must be identical with the
+        // fast path on, since recency order is unobservable.
+        let mut fast = LruCache::new(1024);
+        fast.set_no_evict(true);
+        let mut slow = LruCache::new(1024);
+        for round in 0..3 {
+            for k in 0..8u64 {
+                assert_eq!(fast.access(k, 128), round > 0);
+                slow.access(k, 128);
+            }
+        }
+        assert_eq!(fast.stats().hits, slow.stats().hits);
+        assert_eq!(fast.stats().misses, slow.stats().misses);
+        assert_eq!(fast.stats().hit_bytes, slow.stats().hit_bytes);
+        assert_eq!(fast.stats().evictions, 0);
+        assert_eq!(fast.used_bytes(), slow.used_bytes());
+        // List stays fully linked: invalidate works, order is insertion.
+        assert_eq!(fast.keys_mru_to_lru(), vec![7, 6, 5, 4, 3, 2, 1, 0]);
+        assert!(fast.invalidate(3));
+        assert_eq!(fast.len(), 7);
+        assert_eq!(fast.used_bytes(), 7 * 128);
+    }
+
+    #[test]
+    fn no_evict_fill_and_probe_paths() {
+        let mut c = LruCache::new(1024);
+        c.set_no_evict(true);
+        assert!(!c.probe(1, 100));
+        c.fill(1, 100);
+        c.fill(1, 100); // present: no touch, no duplicate
+        assert!(c.try_hit(1, 100));
+        assert!(c.probe(1, 100));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().hits, 2);
+        assert_eq!(c.stats().misses, 1);
     }
 
     #[test]

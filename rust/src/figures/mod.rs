@@ -446,6 +446,56 @@ pub fn gemm_motivation(topo: &Topology) -> FigureResult {
     }
 }
 
+/// Render the pinned perf trajectory (a `bench-v1` document, normally
+/// the repo-root `BENCH_sim_hotpath.json` — format in docs/PERF.md) as
+/// the aligned text panel behind `numa-attn figure perf`: one row per
+/// bench case with its timings plus derived metrics (engine accesses/s,
+/// event-vs-reference speedup).
+pub fn perf_panel(doc: &crate::util::json::Json) -> Result<String, String> {
+    use crate::util::json::Json;
+    if doc.get("schema").and_then(Json::as_str) != Some("bench-v1") {
+        return Err("not a bench-v1 document (see docs/PERF.md)".into());
+    }
+    let suite = doc.get("suite").and_then(Json::as_str).unwrap_or("?");
+    let cases = doc
+        .get("cases")
+        .and_then(Json::as_arr)
+        .ok_or("bench-v1 document has no 'cases' array")?;
+    let mut t = Table::new(&["case", "iters", "mean ms", "min ms", "max ms", "metrics"]);
+    for case in cases {
+        let num = |k: &str| case.get(k).and_then(Json::as_f64);
+        let ms = |k: &str| num(k).map(|v| format!("{v:.3}")).unwrap_or_else(|| "?".into());
+        let metrics = match case.get("metrics") {
+            Some(Json::Obj(kvs)) => kvs
+                .iter()
+                .filter_map(|(k, v)| {
+                    let v = v.as_f64()?;
+                    Some(match k.as_str() {
+                        "accesses_per_sec" => format!("{:.1}M accesses/s", v / 1e6),
+                        k if k.starts_with("speedup") => format!("{k}={v:.1}x"),
+                        k => format!("{k}={v:.3}"),
+                    })
+                })
+                .collect::<Vec<_>>()
+                .join(", "),
+            _ => String::new(),
+        };
+        t.row(vec![
+            case.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            num("iters").map(|v| format!("{v:.0}")).unwrap_or_else(|| "?".into()),
+            ms("mean_ms"),
+            ms("min_ms"),
+            ms("max_ms"),
+            metrics,
+        ]);
+    }
+    Ok(format!(
+        "== perf — {suite} trajectory (bench-v1, docs/PERF.md) ==\n\
+         refresh: cargo bench --bench {suite}\n{}",
+        t.render()
+    ))
+}
+
 /// Table 1 as a rendered string (`numa-attn explain --topo`).
 pub fn table1(topo: &Topology) -> String {
     let mut t = Table::new(&["component", "specification"]);
@@ -529,6 +579,25 @@ mod tests {
         let small = "H=8 N=8K B=1";
         let nbf_small = f.value(small, Policy::NaiveBlockFirst).unwrap();
         assert!(nbf_small > 0.8, "small configs similar, got {nbf_small}");
+    }
+
+    #[test]
+    fn perf_panel_renders_bench_v1_and_rejects_other_schemas() {
+        let doc = crate::util::json::Json::parse(
+            r#"{"schema":"bench-v1","suite":"sim_hotpath","cases":[
+                {"name":"engine: X","iters":5,"mean_ms":12.5,"min_ms":12.0,"max_ms":13.0,
+                 "metrics":{"accesses_per_sec":24100000,"speedup_vs_reference":46.6}}]}"#,
+        )
+        .unwrap();
+        let panel = perf_panel(&doc).unwrap();
+        assert!(panel.contains("sim_hotpath trajectory"), "{panel}");
+        assert!(panel.contains("engine: X"), "{panel}");
+        assert!(panel.contains("24.1M accesses/s"), "{panel}");
+        assert!(panel.contains("speedup_vs_reference=46.6x"), "{panel}");
+        assert!(panel.contains("12.500"), "{panel}");
+
+        let bad = crate::util::json::Json::parse(r#"{"schema":"bench-v2","cases":[]}"#).unwrap();
+        assert!(perf_panel(&bad).is_err());
     }
 
     #[test]

@@ -41,7 +41,7 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|cluster|gemm|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|cluster|gemm|perf|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
@@ -370,6 +370,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "serve_ttft" => vec![figures::serve_ttft_fig(&driver, &topo, quick)],
         "cluster" => vec![figures::cluster_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
+        "perf" => return cmd_figure_perf(args),
         "all" => figures::all(&driver, &topo, quick),
         other => anyhow::bail!("unknown figure '{other}'"),
     };
@@ -381,6 +382,33 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         }
     }
     print_driver_stats(&driver);
+    Ok(())
+}
+
+/// `figure perf`: render the pinned perf trajectory instead of running a
+/// sweep. Reads the repo-root `BENCH_sim_hotpath.json` (bench-v1,
+/// docs/PERF.md) from the working directory or its parent, so the
+/// command works from both the repo root and `rust/`.
+fn cmd_figure_perf(args: &Args) -> anyhow::Result<()> {
+    let name = "BENCH_sim_hotpath.json";
+    let path = [name.to_string(), format!("../{name}")]
+        .iter()
+        .map(std::path::PathBuf::from)
+        .find(|p| p.is_file())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "{name} not found in . or .. — regenerate it with \
+                 `cargo bench --bench sim_hotpath` (docs/PERF.md)"
+            )
+        })?;
+    let text = std::fs::read_to_string(&path)?;
+    let doc = numa_attn::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    if args.has("json") {
+        println!("{}", doc.render());
+    } else {
+        println!("{}", figures::perf_panel(&doc).map_err(anyhow::Error::msg)?);
+    }
     Ok(())
 }
 

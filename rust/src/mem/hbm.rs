@@ -10,10 +10,6 @@ pub type RequestId = u64;
 #[derive(Debug, Clone)]
 struct Request {
     id: RequestId,
-    /// Slot that first issued the fetch (hit/miss attribution; read
-    /// back via the MSHR file, kept here for debug dumps).
-    #[allow(dead_code)]
-    origin: u32,
     /// XCD whose L2 will be filled.
     xcd: u32,
     /// Tile key being fetched.
@@ -26,9 +22,23 @@ struct Request {
     ready_at: u64,
 }
 
-/// A finished fill, to be inserted into `xcd`'s L2 and used to wake the
-/// workgroups waiting on it.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One MSHR file entry: the in-flight fetch of an (xcd, key) pair plus
+/// the workgroup slots waiting for it. Keeping the waiter list here (one
+/// hash probe per issue/join) instead of in a separate engine-side map
+/// (which cost a second probe per issue plus a third at completion) is
+/// the hot-path de-hashing of DESIGN.md §13.
+#[derive(Debug, Clone)]
+struct Mshr {
+    id: RequestId,
+    /// Slot that first issued the fetch (hit/miss attribution).
+    origin: u32,
+    /// Slots to wake when the fill lands, in registration order.
+    waiters: Vec<u32>,
+}
+
+/// A finished fill, to be inserted into `xcd`'s L2, carrying the slots
+/// registered to be woken by it (in registration order).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Completion {
     /// The request's id.
     pub id: RequestId,
@@ -38,10 +48,26 @@ pub struct Completion {
     pub key: u64,
     /// Fill size in bytes.
     pub bytes: u32,
+    /// Slots that joined the fetch via [`HbmModel::fetch`].
+    pub waiters: Vec<u32>,
+}
+
+/// How a [`HbmModel::fetch`] call was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchKind {
+    /// No fetch was in flight: a new HBM request was issued.
+    Started,
+    /// Joined an in-flight fetch this same slot issued earlier (a
+    /// prefetch that has not landed yet — a miss the prefetch failed to
+    /// hide; the miss was counted at issue time).
+    MergedOwn,
+    /// Joined an in-flight fetch issued by a DIFFERENT slot: true
+    /// inter-workgroup sharing, counted as an L2 hit by the engine.
+    MergedShared,
 }
 
 /// Aggregate traffic statistics.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct HbmStats {
     /// Total bytes transferred from HBM.
     pub bytes_read: u64,
@@ -68,18 +94,20 @@ impl HbmStats {
     }
 }
 
-/// The HBM model. Drive it with `request` / `write` and call `step` once
-/// per simulator tick; completions wake waiting workgroups.
-#[derive(Debug)]
+/// The HBM model. Drive it with `request` / `fetch` / `write` and call
+/// `step` once per simulator tick; completions wake waiting workgroups.
+/// An event-driven caller can ask [`HbmModel::next_completion_tick`] for
+/// the next tick on which `step` would deliver a fill and bulk-advance
+/// the completion-free gap with [`HbmModel::skip_to`].
+#[derive(Debug, Clone)]
 pub struct HbmModel {
     /// Bytes the memory system can deliver per tick (device aggregate).
     bytes_per_tick: u64,
     /// Fixed access latency in ticks before a request starts transferring.
     latency_ticks: u64,
     queue: VecDeque<Request>,
-    /// (xcd, key) -> (RequestId, origin slot) of the in-flight fetch
-    /// (the MSHR file).
-    inflight: FastMap<(u32, u64), (RequestId, u32)>,
+    /// (xcd, key) -> in-flight fetch + its waiter list (the MSHR file).
+    inflight: FastMap<(u32, u64), Mshr>,
     next_id: RequestId,
     /// Pending write bytes (drained at the same budget, lower priority).
     write_backlog: u64,
@@ -134,30 +162,73 @@ impl HbmModel {
     /// sharing (counted as an L2 hit by the engine); merging into one's
     /// own still-pending prefetch is a miss the prefetch failed to hide.
     pub fn inflight_origin(&self, xcd: u32, key: u64) -> Option<u32> {
-        self.inflight.get(&(xcd, key)).map(|&(_, origin)| origin)
+        self.inflight.get(&(xcd, key)).map(|m| m.origin)
     }
 
     /// Issue a demand read of `key` (`bytes` wide) on behalf of `xcd`.
     /// Returns the request id; if an identical (xcd, key) fetch is already
     /// in flight the ids are equal (MSHR merge) and no new traffic is
-    /// generated.
+    /// generated. Registers no waiter — see [`HbmModel::fetch`] for the
+    /// issue-or-join entry point the engine uses.
     pub fn request(&mut self, now: u64, xcd: u32, key: u64, bytes: u32, origin: u32) -> RequestId {
-        if let Some(&(id, _)) = self.inflight.get(&(xcd, key)) {
+        if let Some(m) = self.inflight.get(&(xcd, key)) {
             self.stats.mshr_merges += 1;
-            return id;
+            return m.id;
         }
+        let id = self.enqueue(now, xcd, key, bytes);
+        self.inflight.insert((xcd, key), Mshr { id, origin, waiters: Vec::new() });
+        id
+    }
+
+    /// Issue-or-join: the engine's single entry point for a tile access
+    /// that was not an L2 hit. One hash probe classifies the access
+    /// (fresh fetch / own in-flight prefetch / another slot's fetch),
+    /// registers `slot` to be woken by the completion, and — when no
+    /// fetch is in flight — enqueues the HBM request.
+    pub fn fetch(&mut self, now: u64, xcd: u32, key: u64, bytes: u32, slot: u32) -> FetchKind {
+        use std::collections::hash_map::Entry;
+        match self.inflight.entry((xcd, key)) {
+            Entry::Occupied(mut e) => {
+                let m = e.get_mut();
+                m.waiters.push(slot);
+                if m.origin == slot {
+                    FetchKind::MergedOwn
+                } else {
+                    FetchKind::MergedShared
+                }
+            }
+            Entry::Vacant(v) => {
+                // Mirror `enqueue` inline: the vacant entry borrows the
+                // map, but the queue/stats fields are disjoint.
+                let id = self.next_id;
+                self.next_id += 1;
+                self.queue.push_back(Request {
+                    id,
+                    xcd,
+                    key,
+                    remaining: bytes as u64,
+                    bytes,
+                    ready_at: now + self.latency_ticks,
+                });
+                self.stats.requests += 1;
+                self.stats.bytes_read += bytes as u64;
+                v.insert(Mshr { id, origin: slot, waiters: vec![slot] });
+                FetchKind::Started
+            }
+        }
+    }
+
+    fn enqueue(&mut self, now: u64, xcd: u32, key: u64, bytes: u32) -> RequestId {
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push_back(Request {
             id,
-            origin,
             xcd,
             key,
             remaining: bytes as u64,
             bytes,
             ready_at: now + self.latency_ticks,
         });
-        self.inflight.insert((xcd, key), (id, origin));
         self.stats.requests += 1;
         self.stats.bytes_read += bytes as u64;
         id
@@ -172,7 +243,7 @@ impl HbmModel {
 
     /// Advance one tick: spend the bandwidth budget on queued reads
     /// (FIFO), then leftover budget on the write backlog. Returns the
-    /// fills completed this tick.
+    /// fills completed this tick, each carrying its registered waiters.
     pub fn step(&mut self, now: u64) -> Vec<Completion> {
         let mut completions = Vec::new();
         if self.queue.is_empty() && self.write_backlog == 0 {
@@ -194,12 +265,17 @@ impl HbmModel {
             budget -= take;
             if front.remaining == 0 {
                 let r = self.queue.pop_front().unwrap();
-                self.inflight.remove(&(r.xcd, r.key));
+                let waiters = self
+                    .inflight
+                    .remove(&(r.xcd, r.key))
+                    .map(|m| m.waiters)
+                    .unwrap_or_default();
                 completions.push(Completion {
                     id: r.id,
                     xcd: r.xcd,
                     key: r.key,
                     bytes: r.bytes,
+                    waiters,
                 });
             }
         }
@@ -207,6 +283,71 @@ impl HbmModel {
         let wtake = self.write_backlog.min(budget);
         self.write_backlog -= wtake;
         completions
+    }
+
+    /// The earliest tick `t >= now` at which [`HbmModel::step`] would
+    /// deliver a completion, or `None` when the read queue is empty.
+    /// Exact under FIFO head-of-line service: the head transfers alone at
+    /// the full per-tick budget once `now` passes its latency.
+    pub fn next_completion_tick(&self, now: u64) -> Option<u64> {
+        let front = self.queue.front()?;
+        let start = now.max(front.ready_at);
+        // `remaining` is always > 0 for a queued request.
+        let ticks = front.remaining.div_ceil(self.bytes_per_tick);
+        Some(start + ticks - 1)
+    }
+
+    /// Bulk-advance over the completion-free gap `[now, target)`: exactly
+    /// what calling `step(t)` for each tick would have done — busy-tick
+    /// and queue-depth accounting, head-of-line transfer progress, and
+    /// write-backlog drain — without iterating tick by tick. The caller
+    /// must guarantee no completion lands before `target`
+    /// (`next_completion_tick(now) >= target`) and must not interleave
+    /// `request`/`fetch`/`write` calls inside the gap.
+    pub fn skip_to(&mut self, now: u64, target: u64) {
+        if let Some(c) = self.next_completion_tick(now) {
+            debug_assert!(c >= target, "skip_to({now}, {target}) would skip a completion at {c}");
+        }
+        let mut t = now;
+        while t < target {
+            if self.queue.is_empty() && self.write_backlog == 0 {
+                return; // idle for the rest of the gap
+            }
+            let gap = target - t;
+            let depth = self.queue.len() as u64;
+            if let Some(front) = self.queue.front_mut() {
+                if front.ready_at > t {
+                    // Latency stall: reads idle, the full budget drains
+                    // writes each tick (maximal per-tick drain makes the
+                    // cumulative drain min(backlog, budget * dt)).
+                    let dt = gap.min(front.ready_at - t);
+                    self.stats.busy_ticks += dt;
+                    self.stats.queue_depth_sum += depth * dt;
+                    let w = self.write_backlog.min(self.bytes_per_tick.saturating_mul(dt));
+                    self.write_backlog -= w;
+                    t += dt;
+                } else {
+                    // Transferring: the whole budget goes to the head
+                    // every tick (no leftover, so writes do not drain).
+                    // No completion before `target` implies the head has
+                    // strictly more than budget * gap bytes left.
+                    let dt = gap;
+                    let take = self.bytes_per_tick.saturating_mul(dt);
+                    debug_assert!(front.remaining > take);
+                    front.remaining -= take;
+                    self.stats.busy_ticks += dt;
+                    self.stats.queue_depth_sum += depth * dt;
+                    t += dt;
+                }
+            } else {
+                // Writes only: busy while backlog remains at tick entry.
+                let drain_ticks = self.write_backlog.div_ceil(self.bytes_per_tick);
+                self.stats.busy_ticks += gap.min(drain_ticks);
+                let w = self.write_backlog.min(self.bytes_per_tick.saturating_mul(gap));
+                self.write_backlog -= w;
+                t += gap;
+            }
+        }
     }
 }
 
@@ -304,5 +445,72 @@ mod tests {
         hbm.request(1, 0, 9, 100, 0);
         assert_eq!(hbm.stats().requests, 2);
         assert_eq!(hbm.stats().mshr_merges, 0);
+    }
+
+    #[test]
+    fn fetch_issues_then_joins_and_delivers_waiters_in_order() {
+        let mut hbm = HbmModel::new(1000, 0);
+        assert_eq!(hbm.fetch(0, 2, 7, 100, 5), FetchKind::Started);
+        assert_eq!(hbm.fetch(0, 2, 7, 100, 5), FetchKind::MergedOwn);
+        assert_eq!(hbm.fetch(0, 2, 7, 100, 9), FetchKind::MergedShared);
+        // Joins generate no new traffic and no merge stat (the engine
+        // attributes sharing in the L2 stats instead).
+        assert_eq!(hbm.stats().requests, 1);
+        assert_eq!(hbm.stats().mshr_merges, 0);
+        assert_eq!(hbm.stats().bytes_read, 100);
+        let done = hbm.step(0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].waiters, vec![5, 5, 9]);
+        // After completion the MSHR entry is gone: a refetch starts anew.
+        assert_eq!(hbm.fetch(1, 2, 7, 100, 9), FetchKind::Started);
+    }
+
+    #[test]
+    fn next_completion_tick_accounts_latency_and_transfer() {
+        let mut hbm = HbmModel::new(100, 2);
+        assert_eq!(hbm.next_completion_tick(0), None);
+        hbm.request(0, 0, 1, 250, 0); // ready at 2, 3 transfer ticks
+        assert_eq!(hbm.next_completion_tick(0), Some(4));
+        assert_eq!(hbm.next_completion_tick(3), Some(5)); // stalled caller
+        // One-budget request completes the tick it becomes ready.
+        let mut hbm = HbmModel::new(100, 5);
+        hbm.request(0, 0, 1, 100, 0);
+        assert_eq!(hbm.next_completion_tick(0), Some(5));
+    }
+
+    #[test]
+    fn skip_to_matches_tick_by_tick_stepping() {
+        // Differential: skipping a completion-free gap must leave the
+        // model in exactly the state per-tick stepping produces —
+        // including busy/depth statistics and the write backlog.
+        let mut a = HbmModel::new(100, 4);
+        a.request(0, 0, 1, 1000, 0); // completes at 4 + 9 = 13
+        a.request(0, 1, 2, 300, 0);
+        a.write(250);
+        let mut b = a.clone();
+        let next = a.next_completion_tick(0).unwrap();
+        assert_eq!(next, 13);
+        a.skip_to(0, next);
+        for t in 0..next {
+            assert!(b.step(t).is_empty(), "unexpected completion at {t}");
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(a.backlog_ticks(), b.backlog_ticks());
+        // Both deliver the same completion on the event tick.
+        assert_eq!(a.step(next), b.step(next));
+    }
+
+    #[test]
+    fn skip_to_drains_writes_and_goes_idle() {
+        let mut a = HbmModel::new(100, 0);
+        a.write(450); // 5 busy ticks to drain
+        let mut b = a.clone();
+        a.skip_to(0, 1000);
+        for t in 0..1000 {
+            b.step(t);
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(a.stats().busy_ticks, 5);
+        assert_eq!(a.backlog_ticks(), 0);
     }
 }

@@ -14,4 +14,4 @@
 
 pub mod hbm;
 
-pub use hbm::{Completion, HbmModel, HbmStats, RequestId};
+pub use hbm::{Completion, FetchKind, HbmModel, HbmStats, RequestId};

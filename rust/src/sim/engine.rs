@@ -1,14 +1,36 @@
 //! The tick-level simulation engine.
+//!
+//! Two execution strategies produce bit-identical [`SimReport`]s
+//! (DESIGN.md §13):
+//!
+//! * **Reference** — the original per-tick scan of every slot on every
+//!   XCD. Cost is O(slots) per tick even when nothing can move.
+//! * **Event-driven** (the default) — slots are advanced from a ready
+//!   queue keyed on `ready_at`, idle gaps are skipped to
+//!   `min(next ready slot, next HBM completion)` with the HBM model
+//!   bulk-advanced over the gap, and XCDs whose provable working-set
+//!   bound fits their effective L2 run the cache in no-evict mode (hits
+//!   skip the LRU relink). Cost scales with state *transitions*, not
+//!   ticks — the win is largest in latency-epoch regimes (decode reduce)
+//!   where the reference spins thousands of dead ticks per HBM round
+//!   trip.
+//!
+//! Exactness is pinned by `tests/engine_equivalence.rs` and the in-module
+//! differential tests below: every report field, including debug
+//! counters, must match the reference byte-for-byte.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
 
 use crate::attn::trace::WgCursor;
 use crate::attn::{AttnConfig, KernelKind};
 use crate::cache::{CacheStats, LruCache};
 use crate::mapping::Mapping;
-use crate::mem::{HbmModel, HbmStats};
-use crate::sched::Dispatcher;
+use crate::mem::{FetchKind, HbmModel, HbmStats};
+use crate::sched::{xcd_of_slot, Dispatcher};
 use crate::topology::Topology;
 
-use super::{avg_stream_len, SimConfig, SimReport};
+use super::{avg_stream_len, EngineDebugStats, SimConfig, SimReport};
 
 /// One resident workgroup.
 #[derive(Debug)]
@@ -54,10 +76,17 @@ impl Wg {
         ring[..len as usize].contains(&key)
     }
 
-    fn ring_push(ring: &mut [u64], len: &mut u8, key: u64) {
+    /// Push a key; returns false when the ring is full and the key was
+    /// dropped (the caller counts the overflow — see
+    /// [`EngineDebugStats`]).
+    #[must_use]
+    fn ring_push(ring: &mut [u64], len: &mut u8, key: u64) -> bool {
         if (*len as usize) < ring.len() {
             ring[*len as usize] = key;
             *len += 1;
+            true
+        } else {
+            false
         }
     }
 
@@ -65,21 +94,28 @@ impl Wg {
         Self::ring_remove(&mut self.issued, &mut self.issued_len, key)
     }
 
-    fn mark_issued(&mut self, key: u64) {
-        Self::ring_push(&mut self.issued, &mut self.issued_len, key);
+    #[must_use]
+    fn mark_issued(&mut self, key: u64) -> bool {
+        Self::ring_push(&mut self.issued, &mut self.issued_len, key)
     }
 
-    fn mark_pending(&mut self, key: u64) {
-        Self::ring_push(&mut self.pending, &mut self.pending_len, key);
+    #[must_use]
+    fn mark_pending(&mut self, key: u64) -> bool {
+        Self::ring_push(&mut self.pending, &mut self.pending_len, key)
     }
 
     fn is_pending(&self, key: u64) -> bool {
         Self::ring_contains(&self.pending, self.pending_len, key)
     }
 
-    fn block_on(&mut self, key: u64) {
-        Self::ring_push(&mut self.blocked, &mut self.blocked_len, key);
+    /// Block the consume on `key`. `outstanding` is bumped even when the
+    /// ring drops the key (preserving the historical engine's timing);
+    /// returns false on that drop so the engine can count it.
+    #[must_use]
+    fn block_on(&mut self, key: u64) -> bool {
+        let pushed = Self::ring_push(&mut self.blocked, &mut self.blocked_len, key);
         self.outstanding += 1;
+        pushed
     }
 
     /// A fill arrived: clear pending; if the consume was blocked on it,
@@ -95,6 +131,13 @@ impl Wg {
     }
 }
 
+/// Execution strategy; both produce bit-identical reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EngineMode {
+    Reference,
+    EventDriven,
+}
+
 /// The tick-level simulation engine for one kernel launch: per-XCD
 /// slots and L2s, the shared HBM queue, and the dispatcher.
 pub struct Engine {
@@ -107,8 +150,6 @@ pub struct Engine {
     /// XCD-major slot array: index = xcd * slots_per_xcd + local.
     slots: Vec<Option<Wg>>,
     slots_per_xcd: usize,
-    /// (xcd, key) -> global slot indices waiting on the fill.
-    waiters: crate::util::fxhash::FastMap<(u32, u64), Vec<u32>>,
     tick: u64,
     completed: usize,
     target: usize,
@@ -119,13 +160,32 @@ pub struct Engine {
     window_start_tick: u64,
     window_start_completed: usize,
     hbm_baseline: HbmStats,
+    mode: EngineMode,
+    /// Event-driven ready queue: (tick, global slot index), min-first.
+    /// Popping in (tick, slot) order reproduces the reference engine's
+    /// xcd-major scan order exactly, which is what keeps the HBM FIFO,
+    /// LRU state, and waiter order bit-identical.
+    events: BinaryHeap<Reverse<(u64, u32)>>,
+    debug: EngineDebugStats,
 }
 
 impl Engine {
-    /// Build an engine for one (topology, workload, sim-config) triple.
-    /// Panics on invalid configs — the driver's job keys are validated
-    /// upstream.
+    /// Build the (default) event-driven engine for one
+    /// (topology, workload, sim-config) triple. Bit-identical to
+    /// [`Engine::new_reference`] on every report field. Panics on invalid
+    /// configs — the driver's job keys are validated upstream.
     pub fn new(topo: Topology, attn: AttnConfig, sim: SimConfig) -> Self {
+        Self::with_mode(topo, attn, sim, EngineMode::EventDriven)
+    }
+
+    /// Build the reference engine: the original per-tick slot scan, kept
+    /// as the behavioral oracle the event-driven path is differentially
+    /// tested against.
+    pub fn new_reference(topo: Topology, attn: AttnConfig, sim: SimConfig) -> Self {
+        Self::with_mode(topo, attn, sim, EngineMode::Reference)
+    }
+
+    fn with_mode(topo: Topology, attn: AttnConfig, sim: SimConfig, mode: EngineMode) -> Self {
         topo.validate().expect("invalid topology");
         attn.validate().expect("invalid attention config");
         if let KernelKind::DecodeSplitKv { num_splits } | KernelKind::DecodeReduce { num_splits } =
@@ -135,7 +195,6 @@ impl Engine {
         }
         let mapping = Mapping::for_kernel(sim.policy, &attn, sim.kernel, topo.num_xcds)
             .expect("invalid mapping");
-        let dispatcher = Dispatcher::new(mapping, topo.dispatch_chunk, topo.num_xcds);
 
         let step_flops = attn.step_flops_for(sim.kernel);
         // compute_efficiency_factor models D_HEAD effects (MFMA K-granule
@@ -160,11 +219,27 @@ impl Engine {
         // concurrent ACC streams per XCD thrash (Fig. 13's collapse).
         let slots_per_xcd = topo.wg_slots_per_xcd();
         let effective_l2 = (topo.l2_bytes_per_xcd / 2).max(attn.kv_tile_bytes());
-        let caches = (0..topo.num_xcds)
+        let mut caches: Vec<LruCache> = (0..topo.num_xcds)
             .map(|_| LruCache::new(effective_l2))
             .collect();
+        // Analytic no-evict fast path (event-driven only, so the
+        // differential test pins its exactness against a reference that
+        // never takes it): when an XCD's distinct working set provably
+        // fits its effective L2, eviction cannot occur, recency order is
+        // unobservable, and hits can skip the LRU relink.
+        if mode == EngineMode::EventDriven {
+            for (cache, bound) in caches
+                .iter_mut()
+                .zip(working_set_bounds(&attn, sim.kernel, &mapping, &topo, effective_l2))
+            {
+                if bound <= effective_l2 {
+                    cache.set_no_evict(true);
+                }
+            }
+        }
         let slots = (0..topo.num_xcds * slots_per_xcd).map(|_| None).collect();
 
+        let dispatcher = Dispatcher::new(mapping, topo.dispatch_chunk, topo.num_xcds);
         let grid = dispatcher.grid_size();
         let target = if sim.max_wg_completions == 0 {
             grid
@@ -181,7 +256,6 @@ impl Engine {
             hbm,
             slots,
             slots_per_xcd,
-            waiters: Default::default(),
             tick: 0,
             completed: 0,
             target,
@@ -190,6 +264,9 @@ impl Engine {
             window_start_tick: 0,
             window_start_completed: 0,
             hbm_baseline: HbmStats::default(),
+            mode,
+            events: BinaryHeap::new(),
+            debug: EngineDebugStats::default(),
         }
     }
 
@@ -214,50 +291,104 @@ impl Engine {
     /// Run to the completion target (or `max_ticks`) and report.
     pub fn run(mut self) -> SimReport {
         let exact = self.target == self.dispatcher.grid_size();
-        let mut truncated = false;
-
-        while self.completed < self.target {
-            if self.tick >= self.sim.max_ticks {
-                truncated = true;
-                break;
-            }
-            self.step_tick();
-            self.tick += 1;
-            // Warmup boundary: reset measurement window.
-            if !exact
-                && !self.warmup_done
-                && self.completed >= self.sim.warmup_completions
-            {
-                self.warmup_done = true;
-                self.window_start_tick = self.tick;
-                self.window_start_completed = self.completed;
-                for c in &mut self.caches {
-                    c.reset_stats();
-                }
-                self.hbm_baseline = *self.hbm.stats();
-            }
-        }
+        let truncated = match self.mode {
+            EngineMode::Reference => self.run_reference(exact),
+            EngineMode::EventDriven => self.run_event_driven(exact),
+        };
         self.report(exact, truncated)
     }
 
-    fn step_tick(&mut self) {
-        // 1. HBM completions: fill caches, wake waiters.
+    fn run_reference(&mut self, exact: bool) -> bool {
+        while self.completed < self.target {
+            if self.tick >= self.sim.max_ticks {
+                return true;
+            }
+            self.step_tick();
+            self.tick += 1;
+            self.maybe_end_warmup(exact);
+        }
+        false
+    }
+
+    /// The event-driven main loop: process the current tick's events,
+    /// then jump straight to the next tick on which anything can happen —
+    /// `min(next ready slot, next HBM completion)` — bulk-advancing the
+    /// HBM model over the gap. With no events and no completions pending
+    /// (a stalled grid), it skips to `max_ticks`, which is exactly where
+    /// the reference scan ends up after spinning.
+    fn run_event_driven(&mut self, exact: bool) -> bool {
+        for idx in 0..self.slots.len() as u32 {
+            self.events.push(Reverse((0, idx)));
+        }
+        while self.completed < self.target {
+            if self.tick >= self.sim.max_ticks {
+                return true;
+            }
+            self.step_tick_event();
+            self.tick += 1;
+            self.maybe_end_warmup(exact);
+            // Tick skip. Both candidates are >= self.tick here: processed
+            // slots rescheduled at >= tick and the HBM front completes no
+            // earlier than the current tick.
+            let next_ready = self.events.peek().map(|Reverse((t, _))| *t);
+            let next_fill = self.hbm.next_completion_tick(self.tick);
+            let next_tick = match (next_ready, next_fill) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                // Nothing will ever move again: the reference spins to
+                // max_ticks, draining only the HBM write backlog.
+                (None, None) => self.sim.max_ticks,
+            }
+            .min(self.sim.max_ticks);
+            if next_tick > self.tick {
+                self.hbm.skip_to(self.tick, next_tick);
+                self.tick = next_tick;
+            }
+        }
+        false
+    }
+
+    /// Warmup boundary: reset the measurement window once enough WGs
+    /// completed (sampled runs only).
+    fn maybe_end_warmup(&mut self, exact: bool) {
+        if !exact && !self.warmup_done && self.completed >= self.sim.warmup_completions {
+            self.warmup_done = true;
+            self.window_start_tick = self.tick;
+            self.window_start_completed = self.completed;
+            for c in &mut self.caches {
+                c.reset_stats();
+            }
+            self.hbm_baseline = *self.hbm.stats();
+        }
+    }
+
+    /// HBM completions for this tick: fill caches, wake waiters. In
+    /// event-driven mode a wake that unblocks a WG also schedules its
+    /// next event (possibly this same tick, drained by the caller).
+    fn apply_hbm_completions(&mut self) {
         let completions = self.hbm.step(self.tick);
         for c in completions {
             self.caches[c.xcd as usize].fill(c.key, c.bytes);
-            if let Some(ws) = self.waiters.remove(&(c.xcd, c.key)) {
-                for slot_idx in ws {
-                    // Slot may have been recycled if the WG retired with
-                    // non-blocking prefetches still in flight.
-                    let Some(wg) = self.slots[slot_idx as usize].as_mut() else {
-                        continue;
-                    };
-                    if wg.note_arrival(c.key) {
-                        wg.ready_at = self.tick + wg.staged_ticks;
+            for slot_idx in c.waiters {
+                // Slot may have been recycled if the WG retired with
+                // non-blocking prefetches still in flight.
+                let Some(wg) = self.slots[slot_idx as usize].as_mut() else {
+                    continue;
+                };
+                if wg.note_arrival(c.key) {
+                    wg.ready_at = self.tick + wg.staged_ticks;
+                    if self.mode == EngineMode::EventDriven {
+                        self.events.push(Reverse((wg.ready_at, slot_idx)));
                     }
                 }
             }
         }
+    }
+
+    fn step_tick(&mut self) {
+        // 1. HBM completions: fill caches, wake waiters.
+        self.apply_hbm_completions();
 
         // 2. Advance every XCD's slots: dispatch into empty ones, issue
         //    the next step for ready ones.
@@ -269,37 +400,9 @@ impl Engine {
                 loop {
                     match &mut self.slots[idx] {
                         None => {
-                            let Some((dispatch_slot, item)) = self.dispatcher.next_for_xcd(xcd)
-                            else {
+                            if !self.dispatch_into(xcd, idx) {
                                 break;
-                            };
-                            let cursor = WgCursor::new(&self.attn, self.sim.kernel, item);
-                            // Bounded launch stagger (see SimConfig docs).
-                            // Phase spread grows with kernel duration
-                            // (longer streams accumulate more completion
-                            // skew), capped at `launch_stagger`.
-                            let span = (8 + cursor.stream_len() as u64 / 64)
-                                .min(self.sim.launch_stagger.max(1));
-                            let stagger = if self.sim.launch_stagger == 0 {
-                                0
-                            } else {
-                                crate::util::rng::mix(
-                                    self.sim.seed ^ (dispatch_slot as u64) << 17,
-                                ) % (span + 1)
-                            };
-                            self.slots[idx] = Some(Wg {
-                                cursor,
-                                outstanding: 0,
-                                ready_at: self.tick + stagger,
-                                staged_ticks: 0,
-                                steps_done: 0,
-                                issued: [0; 16],
-                                issued_len: 0,
-                                pending: [0; 16],
-                                pending_len: 0,
-                                blocked: [0; 8],
-                                blocked_len: 0,
-                            });
+                            }
                             // fall through (advances this tick if stagger 0)
                         }
                         Some(wg) => {
@@ -316,6 +419,93 @@ impl Engine {
                 }
             }
         }
+    }
+
+    /// Event-driven tick: completions first (their wakes may schedule
+    /// events at this very tick), then drain every event due now, in
+    /// (tick, slot) order — the reference scan order.
+    fn step_tick_event(&mut self) {
+        self.apply_hbm_completions();
+        while let Some(&Reverse((t, idx))) = self.events.peek() {
+            debug_assert!(t >= self.tick, "stale event ({t}) behind tick {}", self.tick);
+            if t > self.tick {
+                break;
+            }
+            self.events.pop();
+            self.process_slot(idx);
+        }
+    }
+
+    /// Replay the reference per-slot state machine for one due event and
+    /// schedule this slot's next event. Invariant: a slot has at most one
+    /// live event; blocked slots (outstanding > 0) have none — their wake
+    /// in `apply_hbm_completions` schedules it.
+    fn process_slot(&mut self, idx: u32) {
+        let xcd = (idx as usize / self.slots_per_xcd) as u32;
+        loop {
+            match &mut self.slots[idx as usize] {
+                None => {
+                    if !self.dispatch_into(xcd, idx as usize) {
+                        return; // grid exhausted for this XCD: stays idle
+                    }
+                    // Loop (= reference fall-through): advances this tick
+                    // if the stagger is 0, else the Some arm schedules.
+                }
+                Some(wg) => {
+                    if wg.outstanding > 0 {
+                        return; // stalled on HBM: the wake reschedules
+                    }
+                    if wg.ready_at > self.tick {
+                        self.events.push(Reverse((wg.ready_at, idx)));
+                        return; // mid-compute (or staggered launch)
+                    }
+                    if !self.advance_wg(xcd, idx) {
+                        continue; // retired: dispatch into the freed slot
+                    }
+                    // One advance per slot per tick (the reference breaks
+                    // here): if still runnable, the next advance is at
+                    // ready_at but never before the next tick.
+                    let wg = self.slots[idx as usize].as_ref().unwrap();
+                    if wg.outstanding == 0 {
+                        let at = wg.ready_at.max(self.tick + 1);
+                        self.events.push(Reverse((at, idx)));
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Dispatch the next workgroup for `xcd` into empty slot `idx`.
+    /// Returns false when the dispatcher has no more work for this XCD.
+    fn dispatch_into(&mut self, xcd: u32, idx: usize) -> bool {
+        let Some((dispatch_slot, item)) = self.dispatcher.next_for_xcd(xcd) else {
+            return false;
+        };
+        let cursor = WgCursor::new(&self.attn, self.sim.kernel, item);
+        // Bounded launch stagger (see SimConfig docs). Phase spread grows
+        // with kernel duration (longer streams accumulate more completion
+        // skew), capped at `launch_stagger`.
+        let span = (8 + cursor.stream_len() as u64 / 64).min(self.sim.launch_stagger.max(1));
+        let stagger = if self.sim.launch_stagger == 0 {
+            0
+        } else {
+            crate::util::rng::mix(self.sim.seed ^ (dispatch_slot as u64) << 17) % (span + 1)
+        };
+        self.slots[idx] = Some(Wg {
+            cursor,
+            outstanding: 0,
+            ready_at: self.tick + stagger,
+            staged_ticks: 0,
+            steps_done: 0,
+            issued: [0; 16],
+            issued_len: 0,
+            pending: [0; 16],
+            pending_len: 0,
+            blocked: [0; 8],
+            blocked_len: 0,
+        });
+        true
     }
 
     /// Issue the next step of the WG in `slot`. Returns false if the WG
@@ -343,7 +533,11 @@ impl Engine {
         let mut n_prefetch = 0;
         if self.sim.prefetch_depth > 0 {
             let first = steps_done == 1;
-            let range = if first { 0..self.sim.prefetch_depth } else { self.sim.prefetch_depth - 1..self.sim.prefetch_depth };
+            let range = if first {
+                0..self.sim.prefetch_depth
+            } else {
+                self.sim.prefetch_depth - 1..self.sim.prefetch_depth
+            };
             for ahead in range {
                 let Some(p) = wg.cursor.peek(ahead) else { break };
                 for r in p.reads() {
@@ -361,6 +555,11 @@ impl Engine {
         // depth 0, ring overflow) this IS the L2 transaction.
         let mut reads: [(u64, u32); 4] = [(0, 0); 4];
         let n_reads = step.reads().len();
+        debug_assert!(
+            n_reads <= reads.len(),
+            "kernel step has {n_reads} reads; the consume buffer holds {}",
+            reads.len()
+        );
         for (dst, r) in reads.iter_mut().zip(step.reads()) {
             *dst = (r.key, r.bytes);
         }
@@ -374,62 +573,55 @@ impl Engine {
                 // Stats were counted at issue. If the fill already
                 // arrived, the data sits in the CU's double buffer (L2
                 // eviction irrelevant); otherwise block on it.
-                if still_pending {
-                    self.slots[slot as usize].as_mut().unwrap().block_on(key);
+                if still_pending
+                    && !self.slots[slot as usize].as_mut().unwrap().block_on(key)
+                {
+                    self.debug.blocked_ring_overflows += 1;
                 }
                 continue;
             }
             // Un-prefetched access (prologue / depth 0 / ring overflow):
             // present -> hit; another WG's fill in flight -> shared hit
-            // (MSHR); else miss + fetch.
-            let cache = &mut self.caches[xcd as usize];
-            if cache.try_hit(key, bytes) {
+            // (MSHR); own still-pending fetch or fresh fetch -> miss. One
+            // MSHR-file probe classifies and registers the waiter.
+            if self.caches[xcd as usize].try_hit(key, bytes) {
                 continue;
             }
-            match self.hbm.inflight_origin(xcd, key) {
-                Some(origin) if origin != slot => {
-                    self.caches[xcd as usize].record_shared_hit(bytes);
-                }
-                Some(_) => self.caches[xcd as usize].record_miss(bytes),
-                None => {
-                    self.caches[xcd as usize].record_miss(bytes);
-                    self.hbm.request(self.tick, xcd, key, bytes, slot);
+            match self.hbm.fetch(self.tick, xcd, key, bytes, slot) {
+                FetchKind::MergedShared => self.caches[xcd as usize].record_shared_hit(bytes),
+                FetchKind::MergedOwn | FetchKind::Started => {
+                    self.caches[xcd as usize].record_miss(bytes)
                 }
             }
-            self.waiters.entry((xcd, key)).or_default().push(slot);
             let wg = self.slots[slot as usize].as_mut().unwrap();
-            wg.mark_pending(key);
-            wg.block_on(key);
+            if !wg.mark_pending(key) {
+                self.debug.pending_ring_overflows += 1;
+            }
+            if !wg.block_on(key) {
+                self.debug.blocked_ring_overflows += 1;
+            }
         }
 
         // Issue the double-buffered loads (after demand so demand sits
         // earlier in the FIFO queue), recording their hit/miss now.
         for &(key, bytes) in &prefetch_keys[..n_prefetch] {
-            let cache = &mut self.caches[xcd as usize];
             let mut in_flight = false;
-            if cache.try_hit(key, bytes) {
+            if self.caches[xcd as usize].try_hit(key, bytes) {
                 // Already resident: free hit, lands in the double buffer.
             } else {
-                match self.hbm.inflight_origin(xcd, key) {
-                    Some(origin) if origin != slot => {
-                        cache.record_shared_hit(bytes);
-                        in_flight = true;
-                    }
-                    Some(_) => in_flight = true, // own earlier issue
-                    None => {
-                        cache.record_miss(bytes);
-                        self.hbm.request(self.tick, xcd, key, bytes, slot);
-                        in_flight = true;
-                    }
+                in_flight = true;
+                match self.hbm.fetch(self.tick, xcd, key, bytes, slot) {
+                    FetchKind::MergedShared => self.caches[xcd as usize].record_shared_hit(bytes),
+                    FetchKind::MergedOwn => {} // own earlier issue
+                    FetchKind::Started => self.caches[xcd as usize].record_miss(bytes),
                 }
             }
-            if in_flight {
-                self.waiters.entry((xcd, key)).or_default().push(slot);
-            }
             let wg = self.slots[slot as usize].as_mut().unwrap();
-            wg.mark_issued(key);
-            if in_flight {
-                wg.mark_pending(key);
+            if !wg.mark_issued(key) {
+                self.debug.issued_ring_overflows += 1;
+            }
+            if in_flight && !wg.mark_pending(key) {
+                self.debug.pending_ring_overflows += 1;
             }
         }
 
@@ -498,14 +690,82 @@ impl Engine {
             est_total_sec,
             achieved_tflops: total_flops / est_total_sec / 1e12,
             truncated,
+            debug: self.debug,
         }
     }
+}
+
+/// Per-XCD upper bound on the bytes the kernel can EVER insert into that
+/// XCD's L2: resident operands per workgroup plus the full (causal-
+/// unmasked) streamed tensors of each distinct head mapped there. When
+/// the bound fits the effective L2, eviction is provably unreachable —
+/// the precondition of the no-evict fast path. Returns all-`u64::MAX`
+/// without scanning the grid when even a single head's stream exceeds
+/// the capacity (the common at-scale case — the scan is O(grid)).
+fn working_set_bounds(
+    attn: &AttnConfig,
+    kernel: KernelKind,
+    mapping: &Mapping,
+    topo: &Topology,
+    effective_l2: u64,
+) -> Vec<u64> {
+    let num_xcds = topo.num_xcds;
+    let ncol = attn.num_col_blocks() as u64;
+    let nrow = attn.num_row_blocks() as u64;
+    let kv_stream = ncol * 2 * attn.kv_tile_bytes();
+    let q_stream = nrow * 2 * (attn.q_block_bytes() + attn.vec_block_bytes());
+    // Any XCD with at least one workgroup pays at least one head's
+    // streamed tensors; if that alone overflows, skip the grid scan.
+    let per_head_floor = match kernel {
+        KernelKind::Forward | KernelKind::BwdDq | KernelKind::DecodeSplitKv { .. } => kv_stream,
+        KernelKind::BwdDkDv => q_stream,
+        KernelKind::DecodeReduce { num_splits } => {
+            num_splits as u64 * attn.decode_partial_bytes()
+        }
+    };
+    if per_head_floor > effective_l2 {
+        return vec![u64::MAX; num_xcds];
+    }
+
+    let mut wgs = vec![0u64; num_xcds];
+    let mut qheads: Vec<HashSet<(u32, u32)>> = vec![HashSet::new(); num_xcds];
+    let mut kvheads: Vec<HashSet<(u32, u32)>> = vec![HashSet::new(); num_xcds];
+    for slot in 0..mapping.grid_size() {
+        let x = xcd_of_slot(slot, topo.dispatch_chunk, num_xcds) as usize;
+        let item = mapping.decode(slot);
+        wgs[x] += 1;
+        qheads[x].insert((item.z, item.h));
+        kvheads[x].insert((item.z, attn.kv_head(item.h as usize) as u32));
+    }
+    (0..num_xcds)
+        .map(|x| {
+            let (w, q, kv) = (wgs[x], qheads[x].len() as u64, kvheads[x].len() as u64);
+            match kernel {
+                // Per-WG Q prologue + each distinct KV head's K/V stream.
+                KernelKind::Forward => w * attn.q_block_bytes() + kv * kv_stream,
+                // Per-WG K/V prologue + each distinct Q head's
+                // Q/dO/lse/delta row streams.
+                KernelKind::BwdDkDv => w * 2 * attn.kv_tile_bytes() + q * q_stream,
+                // Per-WG Q/dO/lse/delta prologue + K/V streams.
+                KernelKind::BwdDq => {
+                    w * 2 * (attn.q_block_bytes() + attn.vec_block_bytes()) + kv * kv_stream
+                }
+                // Per-WG query vector + K/V streams (splits partition
+                // each head's columns, so one full stream bounds them).
+                KernelKind::DecodeSplitKv { .. } => w * attn.q_vec_bytes() + kv * kv_stream,
+                // Each distinct head streams its num_splits partials.
+                KernelKind::DecodeReduce { num_splits } => {
+                    q * num_splits as u64 * attn.decode_partial_bytes()
+                }
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mapping::Policy;
+    use crate::mapping::{Policy, ALL_POLICIES};
     use crate::topology::presets;
 
     fn topo4() -> Topology {
@@ -650,5 +910,115 @@ mod tests {
         let sim = SimConfig { max_ticks: 50, ..SimConfig::forward(Policy::NaiveBlockFirst) };
         let r = Engine::new(topo4(), cfg, sim).run();
         assert!(r.truncated);
+    }
+
+    // ---- event-driven vs reference differential pins ----
+
+    fn assert_equivalent(topo: &Topology, cfg: AttnConfig, sim: SimConfig) {
+        let fast = Engine::new(topo.clone(), cfg, sim).run();
+        let slow = Engine::new_reference(topo.clone(), cfg, sim).run();
+        assert_eq!(fast.ticks, slow.ticks, "{:?} {:?}", sim.policy, sim.kernel);
+        assert_eq!(fast.l2, slow.l2);
+        assert_eq!(fast.l2_stats_per_xcd, slow.l2_stats_per_xcd);
+        assert_eq!(fast.hbm, slow.hbm);
+        assert_eq!(fast.debug, slow.debug);
+        assert_eq!(fast.simulated_wgs, slow.simulated_wgs);
+        assert_eq!(fast.truncated, slow.truncated);
+        assert_eq!(fast.est_total_sec.to_bits(), slow.est_total_sec.to_bits());
+        assert_eq!(fast.to_json().render(), slow.to_json().render());
+    }
+
+    #[test]
+    fn event_engine_matches_reference_all_policies_forward() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(2, 8, 2048, 64) };
+        for p in ALL_POLICIES {
+            assert_equivalent(&topo4(), cfg, SimConfig::forward(p));
+        }
+    }
+
+    #[test]
+    fn event_engine_matches_reference_backward_kernels() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 8, 2048, 64) };
+        let sim = SimConfig::backward(Policy::SwizzledHeadFirst);
+        assert_equivalent(&topo4(), cfg, sim);
+        assert_equivalent(&topo4(), cfg, SimConfig { kernel: KernelKind::BwdDq, ..sim });
+    }
+
+    #[test]
+    fn event_engine_matches_reference_decode_phases() {
+        // The reduce phase is the latency-epoch regime the event engine
+        // exists for — and the scale where the no-evict path fires.
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(2, 8, 2048, 64) };
+        let sim = SimConfig::decode(Policy::SwizzledHeadFirst, 4);
+        assert_equivalent(&topo4(), cfg, sim);
+        assert_equivalent(
+            &topo4(),
+            cfg,
+            SimConfig { kernel: KernelKind::DecodeReduce { num_splits: 4 }, ..sim },
+        );
+    }
+
+    #[test]
+    fn event_engine_matches_reference_with_jitter_and_causal() {
+        let cfg = AttnConfig {
+            block_m: 128,
+            block_n: 64,
+            causal: true,
+            ..AttnConfig::mha(1, 8, 2048, 64)
+        };
+        let sim = SimConfig { jitter_denom: 7, ..SimConfig::forward(Policy::NaiveBlockFirst) };
+        assert_equivalent(&topo4(), cfg, sim);
+    }
+
+    #[test]
+    fn event_engine_matches_reference_sampled_window() {
+        // Warmup boundary + steady-state window extrapolation.
+        let topo = topo4();
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 16, 4096, 64) };
+        let sim = SimConfig::sampled(Policy::SwizzledHeadFirst, &topo, 1);
+        assert_equivalent(&topo, cfg, sim);
+    }
+
+    #[test]
+    fn event_engine_matches_reference_truncated() {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(4, 16, 8192, 128) };
+        let sim = SimConfig { max_ticks: 500, ..SimConfig::forward(Policy::NaiveBlockFirst) };
+        assert_equivalent(&topo4(), cfg, sim);
+    }
+
+    #[test]
+    fn event_engine_matches_reference_when_no_evict_fires() {
+        // Small working set: every XCD's bound fits the 512 KiB effective
+        // L2, so the analytic path is active on the fast engine and the
+        // reference still takes the full LRU path — results must agree.
+        let cfg = AttnConfig { block_m: 128, block_n: 64, ..AttnConfig::mha(1, 4, 512, 64) };
+        let topo = topo4();
+        let bounds = {
+            let mapping = Mapping::for_kernel(
+                Policy::SwizzledHeadFirst,
+                &cfg,
+                KernelKind::Forward,
+                topo.num_xcds,
+            )
+            .unwrap();
+            working_set_bounds(&cfg, KernelKind::Forward, &mapping, &topo, 512 * 1024)
+        };
+        assert!(
+            bounds.iter().all(|&b| b <= 512 * 1024),
+            "test premise: bounds {bounds:?} must fit 512 KiB"
+        );
+        assert_equivalent(&topo, cfg, SimConfig::forward(Policy::SwizzledHeadFirst));
+    }
+
+    #[test]
+    fn working_set_bounds_skip_scan_at_scale() {
+        // A paper-scale stream can never fit: the cheap floor check must
+        // return MAX without scanning the million-slot grid.
+        let cfg = AttnConfig::mha(8, 128, 131_072, 128);
+        let topo = presets::mi300x();
+        let mapping =
+            Mapping::for_kernel(Policy::SwizzledHeadFirst, &cfg, KernelKind::Forward, 8).unwrap();
+        let b = working_set_bounds(&cfg, KernelKind::Forward, &mapping, &topo, 2 * 1024 * 1024);
+        assert!(b.iter().all(|&x| x == u64::MAX));
     }
 }

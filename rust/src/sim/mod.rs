@@ -27,6 +27,12 @@
 //!   pathology.
 //! * Performance is reported as steady-state throughput over a sampled
 //!   window (whole grid if small), extrapolated to the full grid.
+//!
+//! Two execution strategies exist: the event-driven engine behind
+//! [`simulate`] (the default — skips dead ticks and takes an analytic
+//! no-evict cache path when provably safe) and the reference per-tick
+//! scan behind [`simulate_reference`]. Their reports are bit-identical;
+//! `tests/engine_equivalence.rs` enforces it (DESIGN.md §13).
 
 mod engine;
 pub mod gemm;
@@ -177,6 +183,44 @@ impl std::hash::Hash for SimConfig {
     }
 }
 
+/// Engine-internal pressure counters surfaced for observability.
+///
+/// The per-WG `issued`/`pending`/`blocked` rings in the engine are
+/// fixed-size; historically a full ring dropped keys *silently*, which
+/// made ring pressure invisible (and, for the `blocked` ring, would
+/// manifest only as an inexplicable `max_ticks` truncation). Every drop
+/// is now counted here. All counters are zero for every supported
+/// kernel (≤ 4 reads per step, prefetch window ≤ 8 keys); a nonzero
+/// value means a future kernel outgrew the rings and they must be
+/// resized.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineDebugStats {
+    /// Keys dropped from the `issued` ring (prefetch bookkeeping lost:
+    /// the consume step re-counts the access as un-prefetched).
+    pub issued_ring_overflows: u64,
+    /// Keys dropped from the `pending` ring (an in-flight fill is no
+    /// longer tracked; its arrival is treated as already-consumed).
+    pub pending_ring_overflows: u64,
+    /// Keys dropped from the `blocked` ring while `outstanding` was
+    /// still bumped — the historical semantics, which can deadlock the
+    /// WG until `max_ticks`. Nonzero here demands a ring resize.
+    pub blocked_ring_overflows: u64,
+}
+
+impl EngineDebugStats {
+    /// Total dropped keys across all three rings.
+    pub fn total(&self) -> u64 {
+        self.issued_ring_overflows + self.pending_ring_overflows + self.blocked_ring_overflows
+    }
+
+    /// Accumulate another engine run's counters (multi-kernel merges).
+    pub fn merge(&mut self, other: &EngineDebugStats) {
+        self.issued_ring_overflows += other.issued_ring_overflows;
+        self.pending_ring_overflows += other.pending_ring_overflows;
+        self.blocked_ring_overflows += other.blocked_ring_overflows;
+    }
+}
+
 /// Simulation outcome: the quantities the paper's figures plot.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -213,6 +257,8 @@ pub struct SimReport {
     pub achieved_tflops: f64,
     /// True if the run hit `max_ticks` before its completion target.
     pub truncated: bool,
+    /// Engine ring-pressure counters (zero in every supported config).
+    pub debug: EngineDebugStats,
 }
 
 impl SimReport {
@@ -248,6 +294,7 @@ impl SimReport {
             ("est_total_sec", Json::num(self.est_total_sec)),
             ("achieved_tflops", Json::num(self.achieved_tflops)),
             ("truncated", Json::Bool(self.truncated)),
+            ("ring_overflows", Json::num(self.debug.total() as f64)),
         ])
     }
 
@@ -259,9 +306,18 @@ impl SimReport {
     }
 }
 
-/// Run one simulation.
+/// Run one simulation (event-driven engine; bit-identical to
+/// [`simulate_reference`], pinned by `tests/engine_equivalence.rs`).
 pub fn simulate(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) -> SimReport {
     Engine::new(topo.clone(), *attn, *sim).run()
+}
+
+/// Run one simulation on the reference per-tick-scan engine — the
+/// behavioral oracle for the event-driven path (DESIGN.md §13). Orders
+/// of magnitude slower in stall-heavy regimes; use [`simulate`] for
+/// everything except differential testing and benchmarking.
+pub fn simulate_reference(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) -> SimReport {
+    Engine::new_reference(topo.clone(), *attn, *sim).run()
 }
 
 /// Run the FA2 backward pass: both kernels (dK/dV then dQ) sequentially,
@@ -275,6 +331,28 @@ pub fn simulate_backward(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) ->
     )
     .run();
     let dq = Engine::new(
+        topo.clone(),
+        *attn,
+        SimConfig { kernel: KernelKind::BwdDq, ..*sim },
+    )
+    .run();
+    merge_two_phase(attn, dkdv, dq)
+}
+
+/// Reference-engine variant of [`simulate_backward`] (differential
+/// testing only — see [`simulate_reference`]).
+pub fn simulate_backward_reference(
+    topo: &Topology,
+    attn: &AttnConfig,
+    sim: &SimConfig,
+) -> SimReport {
+    let dkdv = Engine::new_reference(
+        topo.clone(),
+        *attn,
+        SimConfig { kernel: KernelKind::BwdDkDv, ..*sim },
+    )
+    .run();
+    let dq = Engine::new_reference(
         topo.clone(),
         *attn,
         SimConfig { kernel: KernelKind::BwdDq, ..*sim },
@@ -297,6 +375,26 @@ pub fn simulate_decode(topo: &Topology, attn: &AttnConfig, sim: &SimConfig) -> S
     };
     let split = Engine::new(topo.clone(), *attn, *sim).run();
     let reduce = Engine::new(
+        topo.clone(),
+        *attn,
+        SimConfig { kernel: KernelKind::DecodeReduce { num_splits }, ..*sim },
+    )
+    .run();
+    merge_two_phase(attn, split, reduce)
+}
+
+/// Reference-engine variant of [`simulate_decode`] (differential
+/// testing only — see [`simulate_reference`]).
+pub fn simulate_decode_reference(
+    topo: &Topology,
+    attn: &AttnConfig,
+    sim: &SimConfig,
+) -> SimReport {
+    let KernelKind::DecodeSplitKv { num_splits } = sim.kernel else {
+        panic!("simulate_decode requires a DecodeSplitKv sim config");
+    };
+    let split = Engine::new_reference(topo.clone(), *attn, *sim).run();
+    let reduce = Engine::new_reference(
         topo.clone(),
         *attn,
         SimConfig { kernel: KernelKind::DecodeReduce { num_splits }, ..*sim },
@@ -346,6 +444,9 @@ fn merge_two_phase(attn: &AttnConfig, first: SimReport, second: SimReport) -> Si
         + second.throughput_wgs_per_tick * second.ticks as f64;
     let throughput_wgs_per_tick = if ticks > 0 { window_completions / ticks as f64 } else { 0.0 };
 
+    let mut debug = first.debug;
+    debug.merge(&second.debug);
+
     let est_total_sec = first.est_total_sec + second.est_total_sec;
     let total_flops = attn.grid_size(first.kernel) as f64
         * attn.step_flops_for(first.kernel)
@@ -369,6 +470,7 @@ fn merge_two_phase(attn: &AttnConfig, first: SimReport, second: SimReport) -> Si
         est_total_sec,
         achieved_tflops: total_flops / est_total_sec / 1e12,
         truncated: first.truncated || second.truncated,
+        debug,
     }
 }
 
@@ -396,7 +498,9 @@ pub fn merge_parallel(reports: &[SimReport]) -> SimReport {
     let mut simulated_wgs = 0usize;
     let mut flop_sec_sum = 0.0f64; // sum of (TFLOP/s x seconds) = TFLOPs
     let mut truncated = false;
+    let mut debug = EngineDebugStats::default();
     for r in reports {
+        debug.merge(&r.debug);
         l2.merge(&r.l2);
         l2_stats_per_xcd.extend_from_slice(&r.l2_stats_per_xcd);
         hbm.bytes_read += r.hbm.bytes_read;
@@ -436,6 +540,7 @@ pub fn merge_parallel(reports: &[SimReport]) -> SimReport {
         est_total_sec,
         achieved_tflops: if est_total_sec > 0.0 { flop_sec_sum / est_total_sec } else { 0.0 },
         truncated,
+        debug,
     }
 }
 

@@ -1,8 +1,13 @@
 //! Micro-benchmark harness (criterion replacement): warmup, repeated
-//! timed runs, mean/min/max reporting. Used by every `rust/benches/*.rs`
+//! timed runs, mean/min/max reporting, per-case metrics, and JSON
+//! emission for the pinned perf trajectory (`BENCH_*.json` at the repo
+//! root — format in docs/PERF.md, schema-checked by
+//! `scripts/check_bench_json.py`). Used by every `rust/benches/*.rs`
 //! target (`harness = false`).
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 /// Timing summary of one benchmark case.
@@ -17,6 +22,9 @@ pub struct BenchResult {
     pub min: Duration,
     /// Slowest iteration.
     pub max: Duration,
+    /// Named derived metrics (e.g. `accesses_per_sec`,
+    /// `speedup_vs_reference`), emitted under `"metrics"` in the JSON.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl BenchResult {
@@ -30,6 +38,29 @@ impl BenchResult {
             self.max.as_secs_f64() * 1e3,
             self.iters
         )
+    }
+
+    /// Attach a named derived metric to this case.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// JSON rendering of one case (the `cases[]` element of the
+    /// `bench-v1` schema).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ms", Json::num(self.mean.as_secs_f64() * 1e3)),
+            ("min_ms", Json::num(self.min.as_secs_f64() * 1e3)),
+            ("max_ms", Json::num(self.max.as_secs_f64() * 1e3)),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -54,6 +85,7 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, budget: Duration, mut f: F) -
         mean: total / times.len() as u32,
         min: times.iter().min().copied().unwrap(),
         max: times.iter().max().copied().unwrap(),
+        metrics: Vec::new(),
     }
 }
 
@@ -61,6 +93,7 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, budget: Duration, mut f: F) -
 /// console layout closely enough for `cargo bench` logs).
 #[derive(Debug, Default)]
 pub struct Harness {
+    title: String,
     results: Vec<BenchResult>,
 }
 
@@ -68,7 +101,7 @@ impl Harness {
     /// A named benchmark suite.
     pub fn new(title: &str) -> Self {
         println!("=== bench: {title} ===");
-        Harness { results: Vec::new() }
+        Harness { title: title.to_string(), results: Vec::new() }
     }
 
     /// Time `f` for `iters` iterations and record the result.
@@ -78,9 +111,37 @@ impl Harness {
         self.results.push(r);
     }
 
+    /// Attach a named metric to the most recent case. Panics if no case
+    /// has been run yet.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.results.last_mut().expect("metric() before any run()").metric(name, value);
+    }
+
+    /// Attach a named metric to the case at `index` (in run order), for
+    /// metrics computed only after later cases ran (e.g. a speedup whose
+    /// reference timing comes from a subsequent case).
+    pub fn metric_at(&mut self, index: usize, name: &str, value: f64) {
+        self.results[index].metric(name, value);
+    }
+
     /// All recorded results.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// The whole suite as a `bench-v1` JSON document (docs/PERF.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("bench-v1")),
+            ("suite", Json::str(self.title.as_str())),
+            ("cases", Json::arr(self.results.iter().map(BenchResult::to_json))),
+        ])
+    }
+
+    /// Write the suite JSON to `path` (the repo-root `BENCH_<suite>.json`
+    /// convention — see docs/PERF.md for how trajectories are refreshed).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().render() + "\n")
     }
 }
 
@@ -103,5 +164,26 @@ mod tests {
             std::thread::sleep(Duration::from_millis(10));
         });
         assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn suite_json_matches_bench_v1_schema() {
+        let mut h = Harness::new("unit");
+        h.run("case_a", 2, || {
+            std::hint::black_box(1 + 1);
+        });
+        h.metric("accesses_per_sec", 123.5);
+        let j = h.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("bench-v1"));
+        assert_eq!(j.get("suite").unwrap().as_str(), Some("unit"));
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").unwrap().as_str(), Some("case_a"));
+        assert_eq!(cases[0].get("iters").unwrap().as_usize(), Some(2));
+        assert!(cases[0].get("mean_ms").unwrap().as_f64().is_some());
+        let m = cases[0].get("metrics").unwrap();
+        assert_eq!(m.get("accesses_per_sec").unwrap().as_f64(), Some(123.5));
+        // The rendering must round-trip through the parser.
+        assert!(Json::parse(&j.render()).is_ok());
     }
 }

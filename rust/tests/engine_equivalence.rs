@@ -1,0 +1,90 @@
+//! Differential pin of the event-driven engine against the reference
+//! per-tick-scan engine (DESIGN.md §13): across the golden forward /
+//! backward / decode × all-policies matrix, every `SimReport` must render
+//! to byte-identical JSON — on the serial driver AND the 8-worker pool.
+//! This is the contract that lets every consumer (figures, advisor,
+//! serving loop, cluster layer) run on the fast engine without any
+//! behavioral drift: if an optimization in the event path changes a
+//! single counter, this suite fails.
+
+use numa_attn::attn::AttnConfig;
+use numa_attn::driver::{SimDriver, SimJob};
+use numa_attn::mapping::ALL_POLICIES;
+use numa_attn::sim::{
+    simulate_backward_reference, simulate_decode_reference, simulate_reference, SimConfig,
+    SimReport,
+};
+use numa_attn::topology::{presets, Topology};
+use numa_attn::workload::sweeps;
+
+fn small_topo() -> Topology {
+    Topology {
+        name: "tiny".into(),
+        num_xcds: 4,
+        cus_per_xcd: 4,
+        l2_bytes_per_xcd: 512 * 1024,
+        ..presets::mi300x()
+    }
+}
+
+/// The golden matrix (mirrors `driver_determinism.rs`): a small sweep ×
+/// all 4 policies × forward/backward/decode = 36 jobs, each paired with
+/// the reference engine's report for the same job. The decode jobs
+/// include the reduce phase, whose tiny working set is exactly where the
+/// event engine's analytic no-evict path fires — so this matrix pins the
+/// fast path, not just the common one.
+fn matrix() -> (Vec<SimJob>, Vec<SimReport>) {
+    let topo = small_topo();
+    let points = sweeps::mha_sensitivity(&[1024, 2048], &[1], &[4]);
+    let extra = sweeps::backward_sweep(&[1024], &[1]);
+    let mut jobs = Vec::new();
+    let mut oracle = Vec::new();
+    for pt in points.iter().chain(&extra) {
+        let cfg = AttnConfig { block_m: 128, block_n: 64, h_q: 4, h_k: 4, ..pt.cfg };
+        for &p in &ALL_POLICIES {
+            let fwd = SimConfig::forward(p);
+            jobs.push(SimJob::forward(&topo, &cfg, fwd));
+            oracle.push(simulate_reference(&topo, &cfg, &fwd));
+            let bwd = SimConfig::backward(p);
+            jobs.push(SimJob::backward(&topo, &cfg, bwd));
+            oracle.push(simulate_backward_reference(&topo, &cfg, &bwd));
+            let dec = SimConfig::decode(p, 2);
+            jobs.push(SimJob::decode(&topo, &cfg, dec));
+            oracle.push(simulate_decode_reference(&topo, &cfg, &dec));
+        }
+    }
+    (jobs, oracle)
+}
+
+#[test]
+fn event_engine_byte_identical_to_reference_at_1_and_8_threads() {
+    let (jobs, oracle) = matrix();
+    assert_eq!(jobs.len(), oracle.len());
+    let serial = SimDriver::new(1).run_all(jobs.clone());
+    let parallel = SimDriver::new(8).run_all(jobs);
+    for (i, want) in oracle.iter().enumerate() {
+        let want = want.to_json().render();
+        assert_eq!(
+            serial[i].to_json().render(),
+            want,
+            "job {i}: event engine diverged from reference (serial driver)"
+        );
+        assert_eq!(
+            parallel[i].to_json().render(),
+            want,
+            "job {i}: event engine diverged from reference (8-worker driver)"
+        );
+    }
+}
+
+#[test]
+fn reference_reports_zero_ring_overflows_on_golden_matrix() {
+    // The satellite overflow counters are part of the equivalence
+    // surface (they render into the JSON); on every supported config
+    // they must be zero on BOTH engines — a nonzero value would mean a
+    // kernel outgrew the per-WG rings.
+    let (_, oracle) = matrix();
+    for (i, r) in oracle.iter().enumerate() {
+        assert_eq!(r.debug.total(), 0, "job {i}: ring overflow on reference engine");
+    }
+}

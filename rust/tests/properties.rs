@@ -283,6 +283,200 @@ fn prop_lru_never_exceeds_capacity_and_counts_consistently() {
     }
 }
 
+/// Naive, obviously-correct LRU reference: `BTreeMap` for contents,
+/// `VecDeque` (front = MRU) for recency — the oracle the slab+intrusive-
+/// list `LruCache` (and its single-probe access path) is checked against.
+struct NaiveLru {
+    cap: u64,
+    used: u64,
+    entries: std::collections::BTreeMap<u64, u32>,
+    order: std::collections::VecDeque<u64>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    hit_bytes: u64,
+    miss_bytes: u64,
+}
+
+impl NaiveLru {
+    fn new(cap: u64) -> Self {
+        NaiveLru {
+            cap,
+            used: 0,
+            entries: Default::default(),
+            order: Default::default(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            hit_bytes: 0,
+            miss_bytes: 0,
+        }
+    }
+
+    fn touch(&mut self, key: u64) {
+        let pos = self.order.iter().position(|&k| k == key).unwrap();
+        self.order.remove(pos);
+        self.order.push_front(key);
+    }
+
+    fn insert_absent(&mut self, key: u64, bytes: u32) {
+        if bytes as u64 > self.cap {
+            return; // oversized entries stream through
+        }
+        while self.used + bytes as u64 > self.cap {
+            let lru = self.order.pop_back().unwrap();
+            let b = self.entries.remove(&lru).unwrap();
+            self.used -= b as u64;
+            self.evictions += 1;
+        }
+        self.order.push_front(key);
+        self.entries.insert(key, bytes);
+        self.used += bytes as u64;
+    }
+
+    fn hit(&mut self, key: u64, bytes: u32) {
+        self.hits += 1;
+        self.hit_bytes += bytes as u64;
+        self.touch(key);
+    }
+
+    fn access(&mut self, key: u64, bytes: u32) -> bool {
+        if self.entries.contains_key(&key) {
+            self.hit(key, bytes);
+            true
+        } else {
+            self.misses += 1;
+            self.miss_bytes += bytes as u64;
+            self.insert_absent(key, bytes);
+            false
+        }
+    }
+
+    fn probe(&mut self, key: u64, bytes: u32) -> bool {
+        if self.entries.contains_key(&key) {
+            self.hit(key, bytes);
+            true
+        } else {
+            self.misses += 1;
+            self.miss_bytes += bytes as u64;
+            false
+        }
+    }
+
+    fn try_hit(&mut self, key: u64, bytes: u32) -> bool {
+        if self.entries.contains_key(&key) {
+            self.hit(key, bytes);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn fill(&mut self, key: u64, bytes: u32) {
+        if self.entries.contains_key(&key) {
+            self.touch(key);
+        } else {
+            self.insert_absent(key, bytes);
+        }
+    }
+
+    fn invalidate(&mut self, key: u64) -> bool {
+        if let Some(b) = self.entries.remove(&key) {
+            let pos = self.order.iter().position(|&k| k == key).unwrap();
+            self.order.remove(pos);
+            self.used -= b as u64;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[test]
+fn prop_lru_matches_naive_reference_model() {
+    // 10k mixed access/probe/try_hit/fill/invalidate ops per seed. The
+    // key space (96 keys x up to 512 B) deliberately straddles the
+    // capacity range so runs mix hit-heavy, eviction-heavy, and
+    // oversized-entry regimes. After every op: same return value and
+    // same used_bytes; at the end: identical stats and identical full
+    // MRU -> LRU order.
+    for seed in [11u64, 22, 33, 44, 55] {
+        let mut rng = SplitMix64::new(seed);
+        let cap = 1024 * (1 + rng.gen_range(16));
+        let mut real = LruCache::new(cap);
+        let mut model = NaiveLru::new(cap);
+        for op in 0..10_000u32 {
+            let key = rng.gen_range(96);
+            let bytes = (64 * (1 + rng.gen_range(8))) as u32;
+            let ctx = format!("seed {seed} op {op} key {key} bytes {bytes} cap {cap}");
+            match rng.gen_range(5) {
+                0 => assert_eq!(real.access(key, bytes), model.access(key, bytes), "{ctx}"),
+                1 => assert_eq!(real.probe(key, bytes), model.probe(key, bytes), "{ctx}"),
+                2 => assert_eq!(real.try_hit(key, bytes), model.try_hit(key, bytes), "{ctx}"),
+                3 => {
+                    real.fill(key, bytes);
+                    model.fill(key, bytes);
+                }
+                _ => {
+                    assert_eq!(real.invalidate(key), model.invalidate(key), "{ctx}");
+                }
+            }
+            assert_eq!(real.used_bytes(), model.used, "{ctx}");
+            assert_eq!(real.len(), model.entries.len(), "{ctx}");
+        }
+        let s = real.stats();
+        assert_eq!(s.hits, model.hits, "seed {seed}");
+        assert_eq!(s.misses, model.misses, "seed {seed}");
+        assert_eq!(s.evictions, model.evictions, "seed {seed}");
+        assert_eq!(s.hit_bytes, model.hit_bytes, "seed {seed}");
+        assert_eq!(s.miss_bytes, model.miss_bytes, "seed {seed}");
+        let order: Vec<u64> = model.order.iter().copied().collect();
+        assert_eq!(real.keys_mru_to_lru(), order, "seed {seed}: MRU order");
+    }
+}
+
+#[test]
+fn prop_lru_no_evict_stats_match_model_within_capacity() {
+    // The analytic fast path's contract: as long as the total distinct
+    // working set fits, set_no_evict(true) must leave every statistic
+    // identical to the honest LRU (only the unobservable recency order
+    // differs). Keys x bytes are drawn so the sum always fits.
+    for seed in [7u64, 77, 777] {
+        let mut rng = SplitMix64::new(seed);
+        let keys = 1 + rng.gen_range(32);
+        let bytes = 128u32;
+        let cap = keys * bytes as u64; // exact fit
+        let mut fast = LruCache::new(cap);
+        fast.set_no_evict(true);
+        let mut model = NaiveLru::new(cap);
+        for _ in 0..10_000u32 {
+            let key = rng.gen_range(keys);
+            match rng.gen_range(4) {
+                0 => {
+                    assert_eq!(fast.access(key, bytes), model.access(key, bytes));
+                }
+                1 => {
+                    assert_eq!(fast.probe(key, bytes), model.probe(key, bytes));
+                }
+                2 => {
+                    assert_eq!(fast.try_hit(key, bytes), model.try_hit(key, bytes));
+                }
+                _ => {
+                    fast.fill(key, bytes);
+                    model.fill(key, bytes);
+                }
+            }
+        }
+        let s = fast.stats();
+        assert_eq!(s.hits, model.hits, "seed {seed}");
+        assert_eq!(s.misses, model.misses, "seed {seed}");
+        assert_eq!(s.hit_bytes, model.hit_bytes, "seed {seed}");
+        assert_eq!(s.miss_bytes, model.miss_bytes, "seed {seed}");
+        assert_eq!(s.evictions, 0, "seed {seed}: no_evict must never evict");
+        assert_eq!(fast.used_bytes(), model.used, "seed {seed}");
+    }
+}
+
 #[test]
 fn prop_causal_streams_monotonic_in_block() {
     // Forward: later row blocks see >= K/V tiles; dK/dV: later column

@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Validator for the pinned `bench-v1` perf-trajectory JSON.
+
+`cargo bench --bench sim_hotpath` writes `BENCH_sim_hotpath.json` at the
+repo root (format: docs/PERF.md). This script checks that the file is a
+structurally valid `bench-v1` document and that the engine's headline
+performance contracts hold:
+
+  * every case carries name / iters / mean_ms / min_ms / max_ms /
+    metrics, with sane values (iters >= 1, 0 < min <= mean <= max);
+  * the end-to-end engine-throughput case ("engine: ... (SHF)") reports
+    `accesses_per_sec` >= 10e6 — the >=10M demand tile-accesses/s/core
+    floor from DESIGN.md §Perf (hard failure: the Table-2 sweep stops
+    fitting in minutes below it);
+  * the decode-reduce case reports `speedup_vs_reference`, the
+    event-driven engine vs the reference per-tick scan on the same
+    workload. Below 10x this warns rather than fails — the ratio
+    depends on the runner's scheduling noise, and the hard floor is
+    enforced where it is measured, in the self-checking bench run.
+
+Usage: python3 scripts/check_bench_json.py [path/to/BENCH_sim_hotpath.json]
+Exits non-zero listing every violation.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ACCESSES_FLOOR = 10e6
+SPEEDUP_FLOOR = 10.0
+THROUGHPUT_CASE = "engine: H=64 N=32K sampled (SHF)"
+SPEEDUP_CASE_PREFIX = "engine: decode-reduce"
+
+REQUIRED_CASE_FIELDS = ("name", "iters", "mean_ms", "min_ms", "max_ms", "metrics")
+
+
+def fail(errors, msg):
+    errors.append(msg)
+
+
+def check(doc, errors, warnings):
+    if not isinstance(doc, dict):
+        fail(errors, "top level is not a JSON object")
+        return
+    if doc.get("schema") != "bench-v1":
+        fail(errors, f"schema is {doc.get('schema')!r}, expected 'bench-v1'")
+    if not isinstance(doc.get("suite"), str) or not doc.get("suite"):
+        fail(errors, "missing or empty 'suite' string")
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail(errors, "missing or empty 'cases' array")
+        return
+
+    names = []
+    for i, case in enumerate(cases):
+        where = f"cases[{i}]"
+        if not isinstance(case, dict):
+            fail(errors, f"{where}: not an object")
+            continue
+        for field in REQUIRED_CASE_FIELDS:
+            if field not in case:
+                fail(errors, f"{where}: missing field {field!r}")
+        name = case.get("name")
+        if not isinstance(name, str) or not name:
+            fail(errors, f"{where}: missing or empty case name")
+            continue
+        names.append(name)
+        where = f"case {name!r}"
+        iters = case.get("iters")
+        if not isinstance(iters, int) or iters < 1:
+            fail(errors, f"{where}: iters must be an integer >= 1, got {iters!r}")
+        timings = {}
+        for field in ("mean_ms", "min_ms", "max_ms"):
+            v = case.get(field)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                fail(errors, f"{where}: {field} must be a number, got {v!r}")
+            else:
+                timings[field] = float(v)
+        if len(timings) == 3:
+            if timings["min_ms"] <= 0:
+                fail(errors, f"{where}: min_ms must be > 0")
+            if not (timings["min_ms"] <= timings["mean_ms"] <= timings["max_ms"]):
+                fail(errors, f"{where}: expected min_ms <= mean_ms <= max_ms, got {timings}")
+        metrics = case.get("metrics")
+        if not isinstance(metrics, dict):
+            fail(errors, f"{where}: metrics must be an object")
+            metrics = {}
+        for k, v in metrics.items():
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                fail(errors, f"{where}: metric {k!r} must be a number, got {v!r}")
+
+        if name == THROUGHPUT_CASE:
+            aps = metrics.get("accesses_per_sec")
+            if not isinstance(aps, (int, float)):
+                fail(errors, f"{where}: missing 'accesses_per_sec' metric")
+            elif aps < ACCESSES_FLOOR:
+                fail(
+                    errors,
+                    f"{where}: accesses_per_sec {aps:.3g} below the "
+                    f"{ACCESSES_FLOOR:.0e} floor (DESIGN.md §Perf)",
+                )
+        if name.startswith(SPEEDUP_CASE_PREFIX) and not name.startswith("engine-reference"):
+            speedup = metrics.get("speedup_vs_reference")
+            if not isinstance(speedup, (int, float)):
+                fail(errors, f"{where}: missing 'speedup_vs_reference' metric")
+            elif speedup < SPEEDUP_FLOOR:
+                warnings.append(
+                    f"{where}: speedup_vs_reference {speedup:.2f}x below the "
+                    f"{SPEEDUP_FLOOR:.0f}x target (noisy runner?)"
+                )
+
+    if THROUGHPUT_CASE not in names:
+        fail(errors, f"throughput case {THROUGHPUT_CASE!r} not present")
+    if not any(n.startswith(SPEEDUP_CASE_PREFIX) for n in names):
+        fail(errors, f"no case named {SPEEDUP_CASE_PREFIX!r}...")
+
+
+def main(argv):
+    path = Path(argv[1]) if len(argv) > 1 else Path(__file__).resolve().parent.parent / (
+        "BENCH_sim_hotpath.json"
+    )
+    if not path.is_file():
+        print(f"check_bench_json: {path} not found", file=sys.stderr)
+        return 1
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        print(f"check_bench_json: {path} is not valid JSON: {e}", file=sys.stderr)
+        return 1
+
+    errors, warnings = [], []
+    check(doc, errors, warnings)
+    for w in warnings:
+        print(f"check_bench_json: WARNING: {w}")
+    if errors:
+        for e in errors:
+            print(f"check_bench_json: FAIL: {e}", file=sys.stderr)
+        return 1
+    ncases = len(doc.get("cases", []))
+    print(f"check_bench_json: OK ({path.name}: {ncases} cases, {len(warnings)} warnings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
