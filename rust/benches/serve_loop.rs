@@ -83,6 +83,51 @@ fn main() {
         ),
     );
 
+    // The paged-KV prefix-sharing claim (docs/KVCACHE.md), on the
+    // sweep's 80%-shared scenario against its sharing-disabled twin
+    // (`kv_block_tokens = 0` disengages the pool; the trace is identical
+    // because the share draw rides its own RNG stream): credited
+    // prefixes must cut the first-token tail and raise throughput, and
+    // the NUMA placement rule must keep SwizzledHeadFirst's inserted
+    // blocks home where NaiveHeadFirst scatters them.
+    let shared = scenarios
+        .iter()
+        .find(|s| s.label == "llama3-70b 80%-shared arr=120/s cap=8")
+        .expect("80%-shared scenario in the sweep");
+    let mut unshared_cfg = shared.cfg.clone();
+    unshared_cfg.kv_block_tokens = 0;
+    let sh = serve_decode_with(&driver, &topo, &shared.cfg, Policy::SwizzledHeadFirst);
+    let un = serve_decode_with(&driver, &topo, &unshared_cfg, Policy::SwizzledHeadFirst);
+    let sh_nhf = serve_decode_with(&driver, &topo, &shared.cfg, Policy::NaiveHeadFirst);
+    common::check(
+        sh.kv_shared_tokens > 0 && sh.prefill_tokens + sh.kv_shared_tokens == un.prefill_tokens,
+        &format!(
+            "sharing credits tokens and conserves the prompt total ({} + {} == {})",
+            sh.prefill_tokens, sh.kv_shared_tokens, un.prefill_tokens
+        ),
+    );
+    common::check(
+        sh.ttft_p99_ms <= un.ttft_p99_ms,
+        &format!(
+            "80%-shared TTFT p99 ({:.3} ms) <= sharing-disabled ({:.3} ms)",
+            sh.ttft_p99_ms, un.ttft_p99_ms
+        ),
+    );
+    common::check(
+        sh.tokens_per_sec >= un.tokens_per_sec,
+        &format!(
+            "80%-shared throughput ({:.0} tok/s) >= sharing-disabled ({:.0} tok/s)",
+            sh.tokens_per_sec, un.tokens_per_sec
+        ),
+    );
+    common::check(
+        sh.kv_xcd_affinity_pct >= sh_nhf.kv_xcd_affinity_pct,
+        &format!(
+            "SHF KV-block XCD affinity ({:.1}%) >= NHF ({:.1}%)",
+            sh.kv_xcd_affinity_pct, sh_nhf.kv_xcd_affinity_pct
+        ),
+    );
+
     let cstats = driver.cache().counters();
     common::check(
         cstats.hits > cstats.misses,

@@ -270,6 +270,16 @@ impl ShardPlan {
         (0..self.h_q).filter(|&h| self.device_of_query_head(h) == d).collect()
     }
 
+    /// Global KV head `k`'s index within its owning device's shard-local
+    /// geometry — how many lower-numbered KV heads share its device.
+    /// This is the head the paged KV pool scores XCD affinity against
+    /// on a cluster (docs/KVCACHE.md): block placement is decided by
+    /// where the *local* mapping puts the head, not its global id.
+    pub fn kv_local_index(&self, k: usize) -> usize {
+        let d = self.kv_owner[k];
+        self.kv_owner[..k].iter().filter(|&&o| o == d).count()
+    }
+
     /// The shard-local view of a global geometry: the same workload with
     /// `H_Q/tp` query heads and `H_K/tp` KV heads (blocks, masking, and
     /// dtype unchanged). Every shard of the balanced partition has this
@@ -374,6 +384,18 @@ mod tests {
         assert_eq!(plan.device_of_kv_head(0), 0);
         assert_eq!(plan.device_of_kv_head(7), 3);
         assert_eq!(plan.device_of_query_head(63), 3);
+        // Contiguous: local indices count up within each device's pair.
+        let local: Vec<usize> = (0..8).map(|k| plan.kv_local_index(k)).collect();
+        assert_eq!(local, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn strided_kv_local_index_counts_per_device_rank() {
+        let plan = ShardPlan::new(&llama70b(), 4, ShardStrategy::Strided).unwrap();
+        // KV head k lives on device k % 4; its local rank is k / 4.
+        for k in 0..8 {
+            assert_eq!(plan.kv_local_index(k), k / 4, "kv head {k}");
+        }
     }
 
     #[test]

@@ -56,9 +56,13 @@ pub const SIM_KEYS: [&str; 10] = [
 /// active sessions). `chunk_tokens`/`step_token_budget` switch on
 /// chunked prefill with mixed prefill+decode steps (docs/SERVING.md §6;
 /// both default to 0 = the historical monolithic behavior).
-pub const SERVE_KEYS: [&str; 10] = [
+/// `kv_block_tokens`/`prefix_share_pct`/`kv_capacity_mb` configure the
+/// paged KV pool with cross-session prefix sharing (docs/KVCACHE.md;
+/// the pool engages only when both block size and share rate are > 0).
+pub const SERVE_KEYS: [&str; 13] = [
     "arrival_per_sec", "prefill_lengths", "decode_tokens", "sessions", "max_active", "steps",
-    "kv_bucket", "chunk_tokens", "step_token_budget", "seed",
+    "kv_bucket", "chunk_tokens", "step_token_budget", "kv_block_tokens", "prefix_share_pct",
+    "kv_capacity_mb", "seed",
 ];
 
 /// Every `[cluster]` key [`ExperimentConfig::parse`] reads — the
@@ -154,6 +158,12 @@ pub struct ServeSection {
     pub chunk_tokens: Option<usize>,
     /// Mixed-step token budget, decode tokens first (0 = uncapped).
     pub step_token_budget: Option<usize>,
+    /// Paged KV block size in prompt tokens (0 = pool off).
+    pub kv_block_tokens: Option<usize>,
+    /// Percent of sessions opening with the shared prefix (0 = off).
+    pub prefix_share_pct: Option<f64>,
+    /// Paged-pool byte budget in MiB (0 = unlimited).
+    pub kv_capacity_mb: Option<usize>,
     /// Trace seed.
     pub seed: Option<u64>,
 }
@@ -238,6 +248,9 @@ impl ExperimentConfig {
             kv_bucket: ini.get_parsed("serve", "kv_bucket")?,
             chunk_tokens: ini.get_parsed("serve", "chunk_tokens")?,
             step_token_budget: ini.get_parsed("serve", "step_token_budget")?,
+            kv_block_tokens: ini.get_parsed("serve", "kv_block_tokens")?,
+            prefix_share_pct: ini.get_parsed("serve", "prefix_share_pct")?,
+            kv_capacity_mb: ini.get_parsed("serve", "kv_capacity_mb")?,
             seed: ini.get_parsed("serve", "seed")?,
         };
         let cluster = if ini.has_section("cluster") {
@@ -430,6 +443,9 @@ impl ExperimentConfig {
             max_steps: s.steps.unwrap_or(defaults.max_steps),
             chunk_tokens: s.chunk_tokens.unwrap_or(defaults.chunk_tokens),
             step_token_budget: s.step_token_budget.unwrap_or(defaults.step_token_budget),
+            kv_block_tokens: s.kv_block_tokens.unwrap_or(defaults.kv_block_tokens),
+            prefix_share_pct: s.prefix_share_pct.unwrap_or(defaults.prefix_share_pct),
+            kv_capacity_mb: s.kv_capacity_mb.unwrap_or(defaults.kv_capacity_mb),
             seed: s.seed.unwrap_or(defaults.seed),
         };
         cfg.validate()?;
@@ -649,6 +665,25 @@ backward = true
     }
 
     #[test]
+    fn example_serve_share_file_builds_the_pool_config() {
+        // examples/serve_share.ini is the worked prefix-sharing scenario
+        // docs/KVCACHE.md walks through (and the CI serve smoke runs);
+        // this pins that it parses and the pool actually engages.
+        let text = include_str!("../../../examples/serve_share.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        let cfg = c.serve_config().unwrap();
+        assert_eq!((cfg.h_q, cfg.h_k, cfg.d_head), (64, 8, 128));
+        assert_eq!(cfg.kv_cap, 131072);
+        assert_eq!(cfg.kv_block_tokens, 256);
+        assert_eq!(cfg.prefix_share_pct, 80.0);
+        assert_eq!(cfg.kv_capacity_mb, 1024);
+        assert!(cfg.kv_pool_enabled(), "the worked example must exercise the pool");
+        assert_eq!(cfg.chunk_tokens, 0, "monolithic admission: credits discount the charge");
+        assert_eq!(cfg.shared_span(), 2048, "whole shortest prompt, block-aligned");
+    }
+
+    #[test]
     fn serve_chunk_keys_round_trip_and_reject_contradictions() {
         let base = r#"
 [attention]
@@ -685,6 +720,38 @@ d_head = 64
         let uncapped = format!("{base}\n[serve]\nchunk_tokens = 512\n");
         let cfg = ExperimentConfig::parse(&uncapped).unwrap().serve_config().unwrap();
         assert_eq!((cfg.chunk_tokens, cfg.step_token_budget), (512, 0));
+    }
+
+    #[test]
+    fn serve_kv_pool_keys_round_trip_and_validate() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        // All three pool keys land where documented (docs/KVCACHE.md).
+        let on = format!(
+            "{base}\n[serve]\nkv_block_tokens = 256\nprefix_share_pct = 80\nkv_capacity_mb = 512\n"
+        );
+        let cfg = ExperimentConfig::parse(&on).unwrap().serve_config().unwrap();
+        assert_eq!(cfg.kv_block_tokens, 256);
+        assert_eq!(cfg.prefix_share_pct, 80.0);
+        assert_eq!(cfg.kv_capacity_mb, 512);
+        assert!(cfg.kv_pool_enabled());
+
+        // Defaults: the pool is off.
+        let cfg = ExperimentConfig::parse(base).unwrap().serve_config().unwrap();
+        assert_eq!((cfg.kv_block_tokens, cfg.kv_capacity_mb), (0, 0));
+        assert_eq!(cfg.prefix_share_pct, 0.0);
+        assert!(!cfg.kv_pool_enabled());
+
+        // A share rate outside [0, 100] is rejected.
+        let over = format!("{base}\n[serve]\nkv_block_tokens = 256\nprefix_share_pct = 150\n");
+        let err = ExperimentConfig::parse(&over).unwrap().serve_config().unwrap_err();
+        assert!(err.contains("prefix_share_pct"), "{err}");
     }
 
     #[test]

@@ -203,6 +203,7 @@ pub struct StepBatcher {
     backlog: VecDeque<Session>,
     active: Vec<ActiveSession>,
     completed: usize,
+    retired: Vec<u64>,
 }
 
 impl StepBatcher {
@@ -223,6 +224,20 @@ impl StepBatcher {
             backlog: sessions.into(),
             active: Vec::new(),
             completed: 0,
+            retired: Vec::new(),
+        }
+    }
+
+    /// Credit a just-admitted session's leading `tokens` prompt tokens
+    /// as already prefilled — the paged KV pool found them resident
+    /// (docs/KVCACHE.md), so no prefill chunk will ever cover them.
+    /// Clamps to the prompt length; crediting the whole prompt moves
+    /// the session straight to its decode phase. Only meaningful under
+    /// chunked prefill (monolithic admission already marks the prompt
+    /// complete; the loop discounts its charge instead).
+    pub fn credit_prefix(&mut self, id: u64, tokens: usize) {
+        if let Some(a) = self.active.iter_mut().find(|a| a.session.id == id) {
+            a.prefill_done = a.prefill_done.max(tokens.min(a.session.prefill));
         }
     }
 
@@ -317,9 +332,22 @@ impl StepBatcher {
             }
         }
         let before = self.active.len();
-        self.active.retain(|a| !a.done());
+        let retired = &mut self.retired;
+        self.active.retain(|a| {
+            let keep = !a.done();
+            if !keep {
+                retired.push(a.session.id);
+            }
+            keep
+        });
         self.completed += before - self.active.len();
         emitted
+    }
+
+    /// Session ids retired since the last drain (in retirement order) —
+    /// the serving loop releases their KV-pool leases here.
+    pub fn drain_retired(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.retired)
     }
 
     /// Sessions retired so far.
@@ -347,7 +375,7 @@ mod tests {
     }
 
     fn sess(id: u64, arrival: f64, decode: usize) -> Session {
-        Session { id, arrival_sec: arrival, prefill: 1024, decode_tokens: decode }
+        Session { id, arrival_sec: arrival, prefill: 1024, decode_tokens: decode, shared_prefix: 0 }
     }
 
     #[test]
@@ -450,6 +478,34 @@ mod tests {
         let tail = b.plan_chunks(usize::MAX);
         assert_eq!(tail, vec![PrefillChunk { id: 1, start: 512, end: 1024 }]);
         assert!(b.active().iter().all(ActiveSession::prefill_complete));
+    }
+
+    #[test]
+    fn credit_prefix_skips_resident_prompt_and_retired_ids_drain() {
+        // prefill = 1024, chunk = 512, pool credited the first 512.
+        let mut b = StepBatcher::new(vec![sess(0, 0.0, 1), sess(1, 0.0, 2)], 2, 512);
+        b.admit(0.0);
+        b.credit_prefix(0, 512);
+        b.credit_prefix(7, 512); // unknown id: no-op
+        let chunks = b.plan_chunks(usize::MAX);
+        assert_eq!(
+            chunks,
+            vec![
+                PrefillChunk { id: 0, start: 512, end: 1024 },
+                PrefillChunk { id: 1, start: 0, end: 512 },
+            ],
+            "credited prefix is never re-planned"
+        );
+        // Credit never regresses progress and clamps to the prompt.
+        b.credit_prefix(1, 256);
+        b.credit_prefix(1, 4096);
+        assert!(b.active().iter().all(ActiveSession::prefill_complete));
+        assert_eq!(b.advance_step(), 2);
+        assert_eq!(b.drain_retired(), vec![0], "session 0 retired after its 1 token");
+        assert_eq!(b.advance_step(), 1);
+        assert_eq!(b.drain_retired(), vec![1]);
+        assert!(b.drain_retired().is_empty(), "drain is one-shot");
+        assert!(b.done());
     }
 
     #[test]

@@ -27,7 +27,8 @@ use std::collections::BTreeMap;
 
 use crate::cluster::{ClusterTopology, ShardPlan};
 use crate::driver::{SimDriver, SimJob};
-use crate::mapping::Policy;
+use crate::mapping::{Mapping, Policy};
+use crate::sched::xcd_of_slot;
 use crate::sim::{merge_parallel, SimConfig};
 use crate::topology::Topology;
 
@@ -79,6 +80,37 @@ pub trait StepExecutor {
     /// Aggregate L2 (hits, misses) across every decode launch priced so
     /// far — the serving report's `decode_l2_hit_pct` source.
     fn decode_l2(&self) -> (u64, u64);
+
+    /// NUMA placement score for one newly inserted KV block
+    /// (docs/KVCACHE.md): of the deployment's KV heads, how many have
+    /// block `block_idx` land in the same XCD this executor's mapping
+    /// policy pins the head's *first* block to — `(affine, total)`.
+    /// Head-first swizzles keep a head's whole KV stream in one XCD
+    /// (100%); Naive Head-first round-robins a head's blocks across
+    /// dies (~1/num_xcds). On a cluster the score is taken on the
+    /// shard-local geometry of the device that owns each KV head.
+    fn kv_block_affinity(&mut self, block_idx: usize) -> (usize, usize);
+}
+
+/// Per-KV-head XCD-affinity tables for one device: entry `[k][r]` says
+/// whether a KV block at residue `r` (block index mod `num_xcds`) lands
+/// in the same XCD as KV head `k`'s block 0. The home XCD comes from
+/// decoding a one-batch `num_xcds`-block dispatch grid of the policy
+/// and reading each slot's XCD off the dispatcher's round-robin
+/// ([`xcd_of_slot`]); a KV head is represented by the first query head
+/// of its GQA group (the whole group co-locates under every policy the
+/// serve path admits).
+fn kv_affinity_tables(policy: Policy, h_q: usize, h_k: usize, topo: &Topology) -> Vec<Vec<bool>> {
+    let x = topo.num_xcds;
+    let map = Mapping::new(policy, 1, h_q, x, x)
+        .expect("serve paths assert policy applicability before pricing");
+    let mut home = vec![vec![0u32; x]; h_q];
+    for s in 0..map.grid_size() {
+        let w = map.decode(s);
+        home[w.h as usize][w.b as usize] = xcd_of_slot(s, topo.dispatch_chunk, x);
+    }
+    let g = h_q / h_k;
+    (0..h_k).map(|k| (0..x).map(|r| home[k * g][r] == home[k * g][0]).collect()).collect()
 }
 
 /// The advisor/accounting state both executors embed — ONE definition of
@@ -127,6 +159,9 @@ pub struct SingleDeviceExecutor<'a> {
     cfg: &'a ServeConfig,
     policy: Policy,
     state: AdviceState,
+    // Lazily built on the first KV-block placement query, so executors
+    // for runs without the paged pool never decode the affinity grid.
+    kv_aff: Option<Vec<Vec<bool>>>,
 }
 
 impl<'a> SingleDeviceExecutor<'a> {
@@ -137,7 +172,14 @@ impl<'a> SingleDeviceExecutor<'a> {
         cfg: &'a ServeConfig,
         policy: Policy,
     ) -> Self {
-        SingleDeviceExecutor { driver, topo, cfg, policy, state: AdviceState::default() }
+        SingleDeviceExecutor {
+            driver,
+            topo,
+            cfg,
+            policy,
+            state: AdviceState::default(),
+            kv_aff: None,
+        }
     }
 }
 
@@ -225,6 +267,13 @@ impl StepExecutor for SingleDeviceExecutor<'_> {
     fn decode_l2(&self) -> (u64, u64) {
         (self.state.l2_hits, self.state.l2_misses)
     }
+
+    fn kv_block_affinity(&mut self, block_idx: usize) -> (usize, usize) {
+        let (policy, h_q, h_k, topo) = (self.policy, self.cfg.h_q, self.cfg.h_k, self.topo);
+        let tables = self.kv_aff.get_or_insert_with(|| kv_affinity_tables(policy, h_q, h_k, topo));
+        let affine = tables.iter().filter(|t| t[block_idx % t.len()]).count();
+        (affine, tables.len())
+    }
 }
 
 /// The cluster execution path: every launch fans out across the shard
@@ -247,6 +296,9 @@ pub struct ClusterExecutor<'a> {
     // (batch, KV bucket) — but computed on the shard-LOCAL geometry, so
     // the split count fills ONE device's slots.
     state: AdviceState,
+    // Per GLOBAL KV head: the affinity table of its owning device's
+    // shard-local mapping (lazy, like the single-device executor's).
+    kv_aff: Option<Vec<Vec<bool>>>,
 }
 
 impl<'a> ClusterExecutor<'a> {
@@ -266,7 +318,15 @@ impl<'a> ClusterExecutor<'a> {
             cluster.num_devices(),
             "shard plan tp must equal the cluster's device count"
         );
-        ClusterExecutor { driver, cluster, plan, cfg, policy, state: AdviceState::default() }
+        ClusterExecutor {
+            driver,
+            cluster,
+            plan,
+            cfg,
+            policy,
+            state: AdviceState::default(),
+            kv_aff: None,
+        }
     }
 
     /// The devices' merged launch cost plus the output all-gather for
@@ -404,6 +464,26 @@ impl StepExecutor for ClusterExecutor<'_> {
     fn decode_l2(&self) -> (u64, u64) {
         (self.state.l2_hits, self.state.l2_misses)
     }
+
+    fn kv_block_affinity(&mut self, block_idx: usize) -> (usize, usize) {
+        let (policy, plan, cluster) = (self.policy, self.plan, self.cluster);
+        let local = plan.local_attn(&self.cfg.base_geometry());
+        let tables = self.kv_aff.get_or_insert_with(|| {
+            // Each global KV head is scored on ITS device's shard-local
+            // mapping: under `ShardPlan` the block already lands on the
+            // owning device (level-1 NUMA); the table decides the XCD
+            // within it (level 2).
+            (0..plan.h_k)
+                .map(|k| {
+                    let topo = cluster.device(plan.device_of_kv_head(k));
+                    let device_tables = kv_affinity_tables(policy, local.h_q, local.h_k, topo);
+                    device_tables[plan.kv_local_index(k)].clone()
+                })
+                .collect()
+        });
+        let affine = tables.iter().filter(|t| t[block_idx % t.len()]).count();
+        (affine, tables.len())
+    }
 }
 
 #[cfg(test)]
@@ -535,6 +615,36 @@ mod tests {
         ]);
         assert_eq!(mono[0].to_bits(), mixed[0].to_bits(), "tp=2 full-prompt chunk diverged");
         assert_eq!(mixed[1], 0.0, "beyond-capacity chunk must be free on a cluster");
+    }
+
+    #[test]
+    fn kv_block_affinity_separates_swizzled_from_naive() {
+        let driver = SimDriver::new(1);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let x = topo.num_xcds;
+        // SHF pins each head's whole KV stream to one XCD: every block
+        // index is affine for every KV head.
+        let mut shf = SingleDeviceExecutor::new(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        for j in 0..2 * x {
+            assert_eq!(shf.kv_block_affinity(j), (cfg.h_k, cfg.h_k), "block {j}");
+        }
+        // NHF round-robins a head's blocks across dies: only block
+        // residue 0 shares the head's home XCD.
+        let mut nhf = SingleDeviceExecutor::new(&driver, &topo, &cfg, Policy::NaiveHeadFirst);
+        for j in 0..2 * x {
+            let expect = if j % x == 0 { cfg.h_k } else { 0 };
+            assert_eq!(nhf.kv_block_affinity(j), (expect, cfg.h_k), "block {j}");
+        }
+        // On a cluster the score runs on the shard-local geometry —
+        // SHF's full affinity survives sharding.
+        let cluster = ClusterTopology::node_of(&topo, 2);
+        let plan = ShardPlan::new(&cfg.base_geometry(), 2, ShardStrategy::Contiguous).unwrap();
+        let mut tp2 =
+            ClusterExecutor::new(&driver, &cluster, &plan, &cfg, Policy::SwizzledHeadFirst);
+        for j in 0..2 * x {
+            assert_eq!(tp2.kv_block_affinity(j), (cfg.h_k, cfg.h_k), "tp=2 block {j}");
+        }
     }
 
     #[test]

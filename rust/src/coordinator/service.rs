@@ -31,6 +31,7 @@ use crate::attn::AttnConfig;
 use crate::cluster::{ClusterTopology, ShardPlan, ShardStrategy};
 use crate::driver::{self, SimDriver};
 use crate::mapping::Policy;
+use crate::mem::{block_bytes, prompt_keys, KvPool};
 use crate::metrics::{percentile, LatencyHistogram, Table};
 use crate::runtime::{inputs, Runtime};
 use crate::topology::Topology;
@@ -510,6 +511,21 @@ pub struct ServeConfig {
     /// still-prefilling session streams one chunk per step). Only
     /// meaningful with [`Self::chunk_tokens`] `> 0`.
     pub step_token_budget: usize,
+    /// Paged KV block size in prompt tokens (docs/KVCACHE.md). `0` (the
+    /// default) disables the paged pool entirely; `> 0` with
+    /// [`Self::prefix_share_pct`] `> 0` turns on cross-session prefix
+    /// sharing: admissions whose leading blocks are already resident
+    /// skip those prefill tokens.
+    pub kv_block_tokens: usize,
+    /// Percentage of sessions whose prompt opens with the canonical
+    /// shared prefix (system prompt / few-shot preamble). `0` (the
+    /// default) disables sharing; the serving loop is then
+    /// byte-identical to the pre-pool behavior (the golden pins).
+    pub prefix_share_pct: f64,
+    /// Paged-pool HBM byte budget in MiB (`0` = unlimited). Under
+    /// pressure, refcount-0 blocks evict LRU-first; blocks still leased
+    /// by live sessions are never evicted.
+    pub kv_capacity_mb: usize,
     /// Trace seed (arrivals and session mix draws).
     pub seed: u64,
 }
@@ -534,6 +550,9 @@ impl Default for ServeConfig {
             max_steps: 1200,
             chunk_tokens: 0,
             step_token_budget: 0,
+            kv_block_tokens: 0,
+            prefix_share_pct: 0.0,
+            kv_capacity_mb: 0,
             seed: 7,
         }
     }
@@ -593,6 +612,12 @@ impl ServeConfig {
                 self.step_token_budget, self.max_active
             ));
         }
+        if !(0.0..=100.0).contains(&self.prefix_share_pct) {
+            return Err(format!(
+                "prefix_share_pct ({}) must be in [0, 100]",
+                self.prefix_share_pct
+            ));
+        }
         Ok(())
     }
 
@@ -632,6 +657,38 @@ impl ServeConfig {
     pub fn chunk_span(&self, c: &PrefillChunk) -> (usize, usize) {
         let end = c.end.clamp(1, self.kv_cap.max(1));
         (c.start.min(end), end)
+    }
+
+    /// True when the paged KV pool engages: both a block size and a
+    /// share rate are configured. With either at zero the serving loop
+    /// takes the exact pre-pool code path, which is what makes the
+    /// sharing-disabled golden pins hold by construction.
+    pub fn kv_pool_enabled(&self) -> bool {
+        self.kv_block_tokens > 0 && self.prefix_share_pct > 0.0
+    }
+
+    /// The canonical shared-prefix span: the shortest prompt in the mix,
+    /// rounded down to whole KV blocks (a partial tail block is keyed
+    /// per-session and never hits across sessions, so crediting it would
+    /// overstate sharing).
+    pub fn shared_span(&self) -> usize {
+        let min = self.prefill_lengths.iter().copied().min().unwrap_or(0);
+        if self.kv_block_tokens == 0 {
+            min
+        } else {
+            (min / self.kv_block_tokens) * self.kv_block_tokens
+        }
+    }
+
+    /// The paged pool for one serving run, or `None` when disabled.
+    fn kv_pool(&self) -> Option<KvPool> {
+        if !self.kv_pool_enabled() {
+            return None;
+        }
+        Some(KvPool::new(
+            block_bytes(self.kv_block_tokens, self.h_k, self.d_head, self.dtype_bytes),
+            self.kv_capacity_mb as u64 * 1024 * 1024,
+        ))
     }
 }
 
@@ -681,6 +738,16 @@ pub struct ServeStats {
     pub advisor_consults: usize,
     /// Distinct decode geometries the run launched.
     pub distinct_geometries: usize,
+    /// Prompt tokens satisfied by resident shared KV blocks instead of
+    /// prefill kernels (docs/KVCACHE.md). Zero when the paged pool is
+    /// disabled. Conservation: `prefill_tokens + kv_shared_tokens` of a
+    /// drained trace equals the trace's summed prompt lengths.
+    pub kv_shared_tokens: u64,
+    /// Percentage of inserted KV blocks that landed in the XCD their
+    /// heads map to under this run's policy — head-first swizzles pin
+    /// each KV head's group to one XCD (100%), NHF round-robins blocks
+    /// across XCDs (~1/num_xcds). Zero when the pool is disabled.
+    pub kv_xcd_affinity_pct: f64,
     /// True when the step budget ran out before the trace drained.
     pub truncated: bool,
 }
@@ -705,6 +772,8 @@ impl ServeStats {
             ("decode_l2_hit_pct", Json::num(self.decode_l2_hit_pct)),
             ("advisor_consults", Json::num(self.advisor_consults as f64)),
             ("distinct_geometries", Json::num(self.distinct_geometries as f64)),
+            ("kv_shared_tokens", Json::num(self.kv_shared_tokens as f64)),
+            ("kv_xcd_affinity_pct", Json::num(self.kv_xcd_affinity_pct)),
             ("truncated", Json::Bool(self.truncated)),
         ])
     }
@@ -742,6 +811,7 @@ impl ServeReport {
                 "TTFT p50 (ms)",
                 "TTFT p99 (ms)",
                 "dec L2 %",
+                "kv aff %",
                 "sessions",
                 "tokens",
                 "steps",
@@ -757,6 +827,7 @@ impl ServeReport {
                     format!("{:.3}", s.ttft_p50_ms),
                     format!("{:.3}", s.ttft_p99_ms),
                     format!("{:.1}", s.decode_l2_hit_pct),
+                    format!("{:.1}", s.kv_xcd_affinity_pct),
                     format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
                     s.tokens.to_string(),
                     s.steps.to_string(),
@@ -833,6 +904,20 @@ pub fn serve_scenarios(quick: bool) -> Vec<ServeScenario> {
                 max_active: 8,
                 chunk_tokens: 1024,
                 step_token_budget: 2048,
+                ..base.clone()
+            },
+        },
+        // The prefix-sharing regime (docs/KVCACHE.md): 80% of sessions
+        // open with the canonical shared prefix, so their leading blocks
+        // are resident at admission and skip prefill entirely.
+        ServeScenario {
+            label: "llama3-70b 80%-shared arr=120/s cap=8".into(),
+            cfg: ServeConfig {
+                arrival_per_sec: 120.0,
+                max_active: 8,
+                kv_block_tokens: 256,
+                prefix_share_pct: 80.0,
+                kv_capacity_mb: 1024,
                 ..base.clone()
             },
         },
@@ -983,11 +1068,21 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
         cfg.prefill_lengths.clone(),
         cfg.decode_tokens.clone(),
     );
+    if cfg.prefix_share_pct > 0.0 {
+        // The shared-prefix draw rides a separate RNG stream, so the
+        // arrival/prompt/decode trace is identical with sharing on or
+        // off (the sharing-disabled golden pins depend on this).
+        gen = gen.with_prefix_sharing(cfg.prefix_share_pct, cfg.shared_span());
+    }
     let mut batcher = StepBatcher::new(gen.take(cfg.sessions), cfg.max_active, cfg.chunk_tokens);
+    let mut pool = cfg.kv_pool();
 
     let mut now_sec = 0.0f64;
     let mut prefill_sec = 0.0f64;
     let mut prefill_tokens = 0u64;
+    let mut kv_shared_tokens = 0u64;
+    let mut kv_affine_blocks = 0u64;
+    let mut kv_total_blocks = 0u64;
     let mut tokens = 0u64;
     let mut steps = 0usize;
     let mut tpot_ms: Vec<f64> = Vec::new();
@@ -1002,13 +1097,54 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
             }
         }
         let newly = batcher.admit(now_sec);
+        // Paged-pool admission (docs/KVCACHE.md): each admission leases
+        // its prompt's block chain. Blocks already resident (a shared
+        // prefix another session inserted) are credited — those prompt
+        // tokens never reach a prefill kernel. Freshly inserted blocks
+        // score the NUMA placement stat: did the block land in the XCD
+        // its heads map to under this run's policy?
+        let mut credited: Vec<usize> = Vec::new();
+        if let Some(pool) = pool.as_mut() {
+            for s in &newly {
+                let keys = prompt_keys(s.id, s.prefill, s.shared_prefix, cfg.kv_block_tokens);
+                let got = pool.acquire(s.id, &keys);
+                for &j in &got.inserted {
+                    let (affine, total) = exec.kv_block_affinity(j);
+                    kv_affine_blocks += affine as u64;
+                    kv_total_blocks += total as u64;
+                }
+                let t = (got.credited_blocks * cfg.kv_block_tokens).min(s.prefill);
+                kv_shared_tokens += t as u64;
+                credited.push(t);
+            }
+        }
         let mut step_sec = 0.0f64;
         if cfg.chunk_tokens == 0 {
             // Monolithic prefill charge for this step's admissions:
             // prompts run as sampled forward kernels before decode
             // resumes, so co-scheduled admissions stretch every active
             // session's TPOT — the continuous-batching prefill tax.
-            if !newly.is_empty() {
+            if pool.is_some() {
+                // Pool path: price only each prompt's non-credited
+                // suffix, as one (credited, prefill] chunk. A chunk
+                // starting at 0 prices bit-identically to the monolithic
+                // charge (pinned by the executor tests), so a fully
+                // private prompt costs exactly what it always did; a
+                // fully resident prompt skips prefill entirely.
+                let chunks: Vec<PrefillChunk> = newly
+                    .iter()
+                    .zip(&credited)
+                    .filter(|(s, &c)| c < s.prefill)
+                    .map(|(s, &c)| PrefillChunk { id: s.id, start: c, end: s.prefill })
+                    .collect();
+                if !chunks.is_empty() {
+                    prefill_tokens += chunks.iter().map(|c| c.tokens() as u64).sum::<u64>();
+                    for t in exec.chunk_charges(&chunks) {
+                        prefill_sec += t;
+                        step_sec += t;
+                    }
+                }
+            } else if !newly.is_empty() {
                 let prompts: Vec<usize> = newly.iter().map(|s| s.prefill).collect();
                 prefill_tokens += prompts.iter().map(|&p| p as u64).sum::<u64>();
                 for t in exec.prefill_charges(&prompts) {
@@ -1017,6 +1153,13 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
                 }
             }
         } else {
+            // Pool path: credit resident prefixes before planning, so
+            // chunk streaming starts at each prompt's non-shared suffix.
+            for (s, &c) in newly.iter().zip(&credited) {
+                if c > 0 {
+                    batcher.credit_prefix(s.id, c);
+                }
+            }
             // Mixed-step composition: decode tokens first, the budget's
             // remainder streams prompt chunks in admission order.
             let budget = if cfg.step_token_budget == 0 {
@@ -1056,6 +1199,14 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
             }
         }
         let emitted = batcher.advance_step();
+        // Retired sessions drop their block leases; refcount-0 blocks
+        // stay resident (warm for the next sharer) until evicted by
+        // capacity pressure.
+        for id in batcher.drain_retired() {
+            if let Some(pool) = pool.as_mut() {
+                pool.release(id);
+            }
+        }
         tokens += emitted as u64;
         tpot_ms.extend(std::iter::repeat(step_sec * 1e3).take(emitted));
         steps += 1;
@@ -1082,6 +1233,12 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
         },
         advisor_consults: exec.consults(),
         distinct_geometries: exec.distinct_geometries(),
+        kv_shared_tokens,
+        kv_xcd_affinity_pct: if kv_total_blocks > 0 {
+            100.0 * kv_affine_blocks as f64 / kv_total_blocks as f64
+        } else {
+            0.0
+        },
         truncated: !batcher.done(),
     }
 }
@@ -1246,6 +1403,7 @@ impl ClusterReport {
                 "tokens/s",
                 "scale eff",
                 "dec L2 %",
+                "kv aff %",
                 "TPOT p50 (ms)",
                 "TTFT p99 (ms)",
                 "sessions",
@@ -1261,6 +1419,7 @@ impl ClusterReport {
                     format!("{:.0}", s.tokens_per_sec),
                     eff,
                     format!("{:.1}", s.decode_l2_hit_pct),
+                    format!("{:.1}", s.kv_xcd_affinity_pct),
                     format!("{:.3}", s.tpot_p50_ms),
                     format!("{:.3}", s.ttft_p99_ms),
                     format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
@@ -1533,6 +1692,110 @@ mod serve_tests {
             "KV growth must cross a bucket boundary (saw {} geometries)",
             s.distinct_geometries
         );
+    }
+
+    #[test]
+    fn shared_span_rounds_down_to_whole_blocks() {
+        let cfg = ServeConfig {
+            prefill_lengths: vec![1024, 2048],
+            kv_block_tokens: 300,
+            ..tiny_serve()
+        };
+        assert_eq!(cfg.shared_span(), 900, "3 whole 300-token blocks fit in 1024");
+        let exact = ServeConfig { kv_block_tokens: 256, ..cfg.clone() };
+        assert_eq!(exact.shared_span(), 1024);
+        let off = ServeConfig { kv_block_tokens: 0, ..cfg };
+        assert_eq!(off.shared_span(), 1024, "no block quantum, raw minimum");
+    }
+
+    #[test]
+    fn sharing_disabled_knobs_are_byte_inert() {
+        // Either gate at zero must take the exact pre-pool code path:
+        // a block size without a share rate (and vice versa) reproduces
+        // the baseline stats byte-for-byte. This is the unit-level form
+        // of the golden equivalence pins in tests/serving_loop.rs.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let base = serve_decode_with(&driver, &topo, &tiny_serve(), Policy::SwizzledHeadFirst);
+        let blocks_only = ServeConfig { kv_block_tokens: 256, ..tiny_serve() };
+        let share_only = ServeConfig { prefix_share_pct: 80.0, ..tiny_serve() };
+        for cfg in [blocks_only, share_only] {
+            assert!(!cfg.kv_pool_enabled());
+            let s = serve_decode_with(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+            assert_eq!(s.to_json().render(), base.to_json().render());
+        }
+        assert_eq!(base.kv_shared_tokens, 0);
+        assert_eq!(base.kv_xcd_affinity_pct, 0.0);
+    }
+
+    #[test]
+    fn shared_prefix_serving_credits_tokens_and_cuts_prefill() {
+        // 100%-shared twin of the baseline trace: every session opens
+        // with the canonical 1024-token prefix, so after the first
+        // insertion every admission's leading blocks are resident and
+        // skip prefill. The trace itself is identical (separate RNG
+        // stream), so decode-side stats are directly comparable.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let mono = serve_decode_with(&driver, &topo, &tiny_serve(), Policy::SwizzledHeadFirst);
+        let shared_cfg = ServeConfig {
+            kv_block_tokens: 256,
+            prefix_share_pct: 100.0,
+            ..tiny_serve()
+        };
+        let shared = serve_decode_with(&driver, &topo, &shared_cfg, Policy::SwizzledHeadFirst);
+        assert!(!shared.truncated && !mono.truncated);
+        assert_eq!(shared.tokens, mono.tokens, "same trace, same decode tokens");
+        assert!(shared.kv_shared_tokens > 0, "resident prefixes must credit tokens");
+        assert_eq!(
+            shared.prefill_tokens + shared.kv_shared_tokens,
+            mono.prefill_tokens,
+            "every prompt token is either prefilled or credited, never both"
+        );
+        assert!(
+            shared.prefill_sec < mono.prefill_sec,
+            "credited prefixes must cut prefill wall-clock ({} >= {})",
+            shared.prefill_sec,
+            mono.prefill_sec
+        );
+        assert!(
+            shared.ttft_p99_ms <= mono.ttft_p99_ms,
+            "shared TTFT p99 {} > baseline {}",
+            shared.ttft_p99_ms,
+            mono.ttft_p99_ms
+        );
+        // SHF pins each KV head's group to one XCD, so every inserted
+        // block lands affine; NHF round-robins blocks across XCDs.
+        assert_eq!(shared.kv_xcd_affinity_pct, 100.0);
+        let nhf = serve_decode_with(&driver, &topo, &shared_cfg, Policy::NaiveHeadFirst);
+        assert!(
+            nhf.kv_xcd_affinity_pct < shared.kv_xcd_affinity_pct,
+            "NHF affinity {} must trail SHF {}",
+            nhf.kv_xcd_affinity_pct,
+            shared.kv_xcd_affinity_pct
+        );
+    }
+
+    #[test]
+    fn chunked_shared_serving_conserves_prompt_tokens() {
+        // Pool + chunked prefill: credited prefixes advance the chunk
+        // cursor, so streaming starts at each prompt's private suffix
+        // and the conservation identity still holds.
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let chunked = ServeConfig { chunk_tokens: 512, step_token_budget: 1024, ..tiny_serve() };
+        let shared_cfg = ServeConfig {
+            kv_block_tokens: 256,
+            prefix_share_pct: 100.0,
+            ..chunked.clone()
+        };
+        let base = serve_decode_with(&driver, &topo, &chunked, Policy::SwizzledHeadFirst);
+        let shared = serve_decode_with(&driver, &topo, &shared_cfg, Policy::SwizzledHeadFirst);
+        assert!(!shared.truncated && !base.truncated);
+        assert_eq!(shared.tokens, base.tokens);
+        assert!(shared.kv_shared_tokens > 0);
+        assert_eq!(shared.prefill_tokens + shared.kv_shared_tokens, base.prefill_tokens);
+        assert!(shared.prefill_sec < base.prefill_sec);
     }
 
     #[test]

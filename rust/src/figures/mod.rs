@@ -341,7 +341,7 @@ pub fn serve_figs(
     driver: &SimDriver,
     topo: &Topology,
     quick: bool,
-) -> (FigureResult, FigureResult) {
+) -> (FigureResult, FigureResult, FigureResult) {
     let report = crate::coordinator::serve_report(driver, topo, quick);
     let rows_by = |value: fn(&crate::coordinator::ServeStats) -> f64| -> Vec<FigureRow> {
         report
@@ -366,6 +366,12 @@ pub fn serve_figs(
             metric: "TTFT p99 (ms, arrival -> first decode token; lower is better)".into(),
             rows: rows_by(|s| s.ttft_p99_ms),
         },
+        FigureResult {
+            id: "serve_share".into(),
+            title: "Paged KV pool XCD affinity of inserted blocks (Llama-3 70B GQA-8)".into(),
+            metric: "kv_xcd_affinity_pct (%, home-XCD-resident KV blocks; pool rows only)".into(),
+            rows: rows_by(|s| s.kv_xcd_affinity_pct),
+        },
     )
 }
 
@@ -373,6 +379,19 @@ pub fn serve_figs(
 /// [`serve_figs`].
 pub fn serve_ttft_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
     serve_figs(driver, topo, quick).1
+}
+
+/// The paged-KV NUMA-placement panel alone (the `figure serve_share`
+/// id, docs/KVCACHE.md §5): per-policy `kv_xcd_affinity_pct` — the
+/// share of freshly inserted KV blocks that land on the XCD their KV
+/// head's decode stream is pinned to under that mapping. Rows without
+/// the pool enabled (no `kv_block_tokens`/`prefix_share_pct`) report 0;
+/// on the pool row the head-first swizzle keeps every block home
+/// (100%) while the naive layout scatters blocks round-robin
+/// (~1/num_xcds) — the serving-side restatement of the paper's NUMA
+/// thesis.
+pub fn serve_share_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    serve_figs(driver, topo, quick).2
 }
 
 /// Cluster figure (docs/CLUSTER.md): decode throughput of the
@@ -416,9 +435,10 @@ pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult
         fig16(driver, topo, quick),
         decode_fig(driver, topo, quick),
     ];
-    let (serve, serve_ttft) = serve_figs(driver, topo, quick);
+    let (serve, serve_ttft, serve_share) = serve_figs(driver, topo, quick);
     figs.push(serve);
     figs.push(serve_ttft);
+    figs.push(serve_share);
     figs.push(cluster_fig(driver, topo, quick));
     figs.push(gemm_motivation(topo));
     figs

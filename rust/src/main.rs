@@ -5,7 +5,7 @@
 //!   simulate  — run the chiplet simulator on one attention configuration
 //!   decode    — run the two-phase split-KV decode pass (auto split count)
 //!   figure    — regenerate a paper figure (12..16, decode, serve,
-//!               serve_ttft, cluster, gemm, all)
+//!               serve_ttft, serve_share, cluster, gemm, all)
 //!   explain   — print Table-1 style topology specs and mapping layouts
 //!   verify    — check AOT artifacts against golden checksums
 //!   serve     — run the continuous-batching decode serving loop,
@@ -41,7 +41,7 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|cluster|gemm|perf|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|serve_share|cluster|gemm|perf|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
@@ -87,6 +87,13 @@ serve flags (the continuous-batching decode loop; docs/SERVING.md):
   --step-token-budget N  override the mixed-step token budget (decode
                        tokens first, prefill chunks with the remainder;
                        0 = uncapped; ignored where chunking is off)
+  --kv-block-tokens N  override the paged KV pool block size in prompt
+                       tokens (0 = pool off; docs/KVCACHE.md)
+  --prefix-share-pct P override the percent of sessions opening with
+                       the canonical shared prefix, in [0, 100] (the
+                       pool engages only with --kv-block-tokens > 0)
+  --kv-capacity-mb N   override the paged-pool HBM budget in MiB
+                       (0 = unlimited; refcount-0 blocks evict LRU)
   --live               run the live PJRT prefill demo instead (requires
                        artifacts; uses --artifacts/--requests/--max-batch/
                        --max-wait-ms/--seed)
@@ -363,11 +370,12 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "16" | "fig16" => vec![figures::fig16(&driver, &topo, quick)],
         "decode" => vec![figures::decode_fig(&driver, &topo, quick)],
         "serve" => {
-            // Both panels project from ONE serving-report run.
-            let (serve, serve_ttft) = figures::serve_figs(&driver, &topo, quick);
-            vec![serve, serve_ttft]
+            // All three panels project from ONE serving-report run.
+            let (serve, serve_ttft, serve_share) = figures::serve_figs(&driver, &topo, quick);
+            vec![serve, serve_ttft, serve_share]
         }
         "serve_ttft" => vec![figures::serve_ttft_fig(&driver, &topo, quick)],
+        "serve_share" => vec![figures::serve_share_fig(&driver, &topo, quick)],
         "cluster" => vec![figures::cluster_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
         "perf" => return cmd_figure_perf(args),
@@ -491,6 +499,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // meaningless for monolithic rows).
     let chunk: Option<usize> = args.get("chunk-tokens").map_err(a)?;
     let budget: Option<usize> = args.get("step-token-budget").map_err(a)?;
+    // Paged-KV pool overrides (docs/KVCACHE.md): the same replace-then
+    // -revalidate contract as the chunking flags, so an out-of-range
+    // --prefix-share-pct fails with the config section's message.
+    let kv_block: Option<usize> = args.get("kv-block-tokens").map_err(a)?;
+    let kv_share: Option<f64> = args.get("prefix-share-pct").map_err(a)?;
+    let kv_cap: Option<usize> = args.get("kv-capacity-mb").map_err(a)?;
+    let kv_override = kv_block.is_some() || kv_share.is_some() || kv_cap.is_some();
     // `strict` (the single-scenario --config path) rejects a budget
     // override the scenario cannot honor, matching the INI parser's
     // contradiction error; the sweep path instead skips the budget on
@@ -517,7 +532,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         } else if let Some(b) = budget {
             cfg.step_token_budget = b;
         }
-        if chunk.is_some() || budget.is_some() {
+        if let Some(bt) = kv_block {
+            cfg.kv_block_tokens = bt;
+        }
+        if let Some(p) = kv_share {
+            cfg.prefix_share_pct = p;
+        }
+        if let Some(mb) = kv_cap {
+            cfg.kv_capacity_mb = mb;
+        }
+        if chunk.is_some() || budget.is_some() || kv_override {
             cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
         }
         Ok(())
@@ -525,7 +549,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // Overridden rows say so: the label carries the chunking policy the
     // stats were ACTUALLY produced with, not the scenario's original one.
     let override_label = |base: String, cfg: &coordinator::ServeConfig| -> String {
-        if chunk.is_none() && budget.is_none() {
+        let label = if chunk.is_none() && budget.is_none() {
             base
         } else if cfg.chunk_tokens == 0 {
             format!("{base} [override: monolithic]")
@@ -534,6 +558,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 "{base} [override: chunk={} budget={}]",
                 cfg.chunk_tokens, cfg.step_token_budget
             )
+        };
+        if kv_override {
+            format!(
+                "{label} [override: kv block={} share={}% cap={}MiB]",
+                cfg.kv_block_tokens, cfg.prefix_share_pct, cfg.kv_capacity_mb
+            )
+        } else {
+            label
         }
     };
     let report = if let Some(path) = args.get::<String>("config").map_err(a)? {
@@ -544,7 +576,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         apply_overrides(&mut cfg, true)?;
         let label = override_label(path, &cfg);
         coordinator::ServeReport { rows: vec![coordinator::serve_row(&driver, &topo, &cfg, label)] }
-    } else if chunk.is_none() && budget.is_none() {
+    } else if chunk.is_none() && budget.is_none() && !kv_override {
         let topo = topo_arg(args)?;
         coordinator::serve_report(&driver, &topo, args.has("quick"))
     } else {

@@ -1,0 +1,477 @@
+//! Paged KV block pool with cross-session prefix sharing
+//! (docs/KVCACHE.md): fixed-size KV blocks keyed by canonical prefix
+//! hash, refcounted copy-on-write prefix trie, and LRU eviction of
+//! refcount-0 childless nodes under a byte budget.
+//!
+//! The serving loop ([`crate::coordinator::serve_decode`]) consults the
+//! pool at admission: the leading run of a prompt's blocks that is
+//! already resident is *credited* (those prefill tokens are charged
+//! zero — another session already prefilled them), and only the
+//! non-shared suffix is priced. Sessions hold a refcount *lease* on
+//! every block they hit or insert until they retire, which is what
+//! makes eviction safe: a live (refcount > 0) block is never evicted,
+//! and the copy-on-write rule is structural — a session forking off a
+//! shared prefix inserts only its diverging suffix blocks (keyed by its
+//! own session id), while the shared ancestors' refcounts climb.
+//!
+//! The pool is deliberately a pure data structure (no clocks, no
+//! driver handle): determinism is what lets `tests/properties.rs`
+//! check it differentially against a naive full-prefix map and lets
+//! the serving goldens stay byte-for-byte reproducible.
+
+use std::collections::HashMap;
+
+use crate::util::rng::mix;
+
+/// Salt distinguishing the canonical shared-prefix key stream from
+/// per-session private keys (which are salted by `session_id + 1`).
+const SHARED_SALT: u64 = 0;
+
+/// Bytes one KV block occupies in HBM: `block_tokens` K and V vectors
+/// across every KV head at the deployment's precision. With the worked
+/// llama3-70b geometry (8 KV heads x 128 dims x 2 bytes) a 256-token
+/// block is exactly 1 MiB.
+pub fn block_bytes(block_tokens: usize, h_k: usize, d_head: usize, dtype_bytes: usize) -> u64 {
+    2 * (block_tokens as u64) * (h_k as u64) * (d_head as u64) * (dtype_bytes as u64)
+}
+
+/// Canonical block-key sequence for a prompt: block `j` covers prompt
+/// tokens `[j*bt, min((j+1)*bt, prefill))`. Blocks that lie entirely
+/// inside the session's shared prefix hash from the canonical shared
+/// stream (identical across sessions — the cross-session hit path);
+/// every later block hashes from the session's own id, so private
+/// suffixes can never collide into another session's cache line — the
+/// copy-on-write fork point falls out of the keying.
+pub fn prompt_keys(
+    session_id: u64,
+    prefill: usize,
+    shared_prefix: usize,
+    block_tokens: usize,
+) -> Vec<u64> {
+    if block_tokens == 0 || prefill == 0 {
+        return Vec::new();
+    }
+    let blocks = prefill.div_ceil(block_tokens);
+    let shared = shared_prefix.min(prefill);
+    (0..blocks)
+        .map(|j| {
+            let salt = if (j + 1) * block_tokens <= shared { SHARED_SALT } else { session_id + 1 };
+            mix(salt.rotate_left(17) ^ mix(j as u64 ^ 0x9E3779B97F4A7C15))
+        })
+        .collect()
+}
+
+/// One trie node: a resident KV block at a specific position of a
+/// specific prefix chain.
+#[derive(Debug)]
+struct Node {
+    key: u64,
+    parent: Option<usize>,
+    children: HashMap<u64, usize>,
+    refs: usize,
+    /// Monotonic op clock of the last acquire that touched this node
+    /// (hit or insert) — the LRU eviction order.
+    last_use: u64,
+    /// Monotonic insertion id, the deterministic LRU tie-break.
+    insert_id: u64,
+}
+
+/// What [`KvPool::acquire`] did for one prompt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Acquire {
+    /// Leading blocks already resident (cross-session hits): these
+    /// prompt tokens are charged zero.
+    pub credited_blocks: usize,
+    /// Block indices (positions in the key sequence) newly inserted by
+    /// this acquire — the blocks whose placement the serving loop
+    /// scores for XCD affinity.
+    pub inserted: Vec<usize>,
+}
+
+/// Refcounted copy-on-write prefix trie over fixed-size KV blocks with
+/// a byte budget and LRU eviction of refcount-0 childless nodes. See
+/// the module docs for the serving-loop contract.
+#[derive(Debug)]
+pub struct KvPool {
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    roots: HashMap<u64, usize>,
+    /// Per-session lease: the node path acquired at admission, released
+    /// when the session retires.
+    leases: HashMap<u64, Vec<usize>>,
+    block_bytes: u64,
+    capacity_bytes: u64,
+    used_bytes: u64,
+    peak_used_bytes: u64,
+    clock: u64,
+    next_insert_id: u64,
+    evictions: u64,
+    hit_blocks: u64,
+    miss_blocks: u64,
+}
+
+impl KvPool {
+    /// A pool of `block_bytes`-sized blocks under `capacity_bytes`
+    /// (0 = unlimited).
+    pub fn new(block_bytes: u64, capacity_bytes: u64) -> Self {
+        assert!(block_bytes > 0, "block_bytes must be > 0");
+        KvPool {
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: HashMap::new(),
+            leases: HashMap::new(),
+            block_bytes,
+            capacity_bytes: if capacity_bytes == 0 { u64::MAX } else { capacity_bytes },
+            used_bytes: 0,
+            peak_used_bytes: 0,
+            clock: 0,
+            next_insert_id: 0,
+            evictions: 0,
+            hit_blocks: 0,
+            miss_blocks: 0,
+        }
+    }
+
+    fn node(&self, idx: usize) -> &Node {
+        self.nodes[idx].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, idx: usize) -> &mut Node {
+        self.nodes[idx].as_mut().expect("live node")
+    }
+
+    /// Acquire a lease on a prompt's block chain. Walks the trie along
+    /// `keys`: the leading resident run is credited (and its refcounts
+    /// climb — the copy-on-write sharing), then the remaining blocks
+    /// are inserted while the budget allows, evicting refcount-0
+    /// childless nodes in LRU order to make room. Blocks that do not
+    /// fit are simply not pooled (the serving loop prefills them
+    /// normally, uncached). A session may hold at most one lease;
+    /// re-acquiring without [`Self::release`] is a caller bug.
+    pub fn acquire(&mut self, session: u64, keys: &[u64]) -> Acquire {
+        assert!(
+            !self.leases.contains_key(&session),
+            "session {session} already holds a KV lease"
+        );
+        self.clock += 1;
+        let clock = self.clock;
+        let mut path: Vec<usize> = Vec::with_capacity(keys.len());
+        let mut credited = 0usize;
+        let mut inserted = Vec::new();
+        let mut cursor: Option<usize> = None;
+        let mut walking = true;
+        for (j, &key) in keys.iter().enumerate() {
+            if walking {
+                let child = match cursor {
+                    None => self.roots.get(&key).copied(),
+                    Some(c) => self.node(c).children.get(&key).copied(),
+                };
+                if let Some(idx) = child {
+                    let n = self.node_mut(idx);
+                    n.refs += 1;
+                    n.last_use = clock;
+                    path.push(idx);
+                    cursor = Some(idx);
+                    credited += 1;
+                    self.hit_blocks += 1;
+                    continue;
+                }
+                walking = false;
+            }
+            self.miss_blocks += 1;
+            if !self.make_room() {
+                break; // budget exhausted by live blocks: rest runs unpooled
+            }
+            let idx = self.alloc_node(Node {
+                key,
+                parent: cursor,
+                children: HashMap::new(),
+                refs: 1,
+                last_use: clock,
+                insert_id: 0, // set in alloc_node
+            });
+            match cursor {
+                None => {
+                    self.roots.insert(key, idx);
+                }
+                Some(c) => {
+                    self.node_mut(c).children.insert(key, idx);
+                }
+            }
+            self.used_bytes += self.block_bytes;
+            self.peak_used_bytes = self.peak_used_bytes.max(self.used_bytes);
+            path.push(idx);
+            cursor = Some(idx);
+            inserted.push(j);
+        }
+        self.leases.insert(session, path);
+        Acquire { credited_blocks: credited, inserted }
+    }
+
+    /// Release a session's lease: every block on its path drops one
+    /// refcount. Refcount-0 blocks stay resident (they are the shared
+    /// cache) until capacity pressure evicts them. Unknown sessions are
+    /// a no-op, so the serving loop may release unconditionally at
+    /// retirement even for sessions admitted before sharing engaged.
+    pub fn release(&mut self, session: u64) {
+        let Some(path) = self.leases.remove(&session) else { return };
+        for idx in path {
+            let n = self.node_mut(idx);
+            debug_assert!(n.refs > 0, "release underflow");
+            n.refs -= 1;
+        }
+    }
+
+    /// Length of the leading resident run for a key chain, without
+    /// touching refcounts or LRU state (differential-test probe).
+    pub fn probe(&self, keys: &[u64]) -> usize {
+        let mut cursor: Option<usize> = None;
+        let mut run = 0;
+        for &key in keys {
+            let child = match cursor {
+                None => self.roots.get(&key).copied(),
+                Some(c) => self.node(c).children.get(&key).copied(),
+            };
+            match child {
+                Some(idx) => {
+                    run += 1;
+                    cursor = Some(idx);
+                }
+                None => break,
+            }
+        }
+        run
+    }
+
+    /// Free one block's worth of budget, evicting refcount-0 childless
+    /// nodes in LRU order (`(last_use, insert_id)` ascending) until a
+    /// block fits. Returns false when every resident block is live —
+    /// nothing may be evicted, the caller's block stays unpooled.
+    fn make_room(&mut self) -> bool {
+        if self.block_bytes > self.capacity_bytes {
+            return false;
+        }
+        while self.used_bytes + self.block_bytes > self.capacity_bytes {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                .filter(|(_, n)| n.refs == 0 && n.children.is_empty())
+                .min_by_key(|(_, n)| (n.last_use, n.insert_id))
+                .map(|(i, _)| i);
+            let Some(idx) = victim else { return false };
+            self.evict(idx);
+        }
+        true
+    }
+
+    fn evict(&mut self, idx: usize) {
+        let n = self.nodes[idx].take().expect("evict live node");
+        debug_assert!(n.refs == 0 && n.children.is_empty());
+        match n.parent {
+            None => {
+                self.roots.remove(&n.key);
+            }
+            Some(p) => {
+                self.node_mut(p).children.remove(&n.key);
+            }
+        }
+        self.free.push(idx);
+        self.used_bytes -= self.block_bytes;
+        self.evictions += 1;
+    }
+
+    fn alloc_node(&mut self, mut n: Node) -> usize {
+        n.insert_id = self.next_insert_id;
+        self.next_insert_id += 1;
+        match self.free.pop() {
+            Some(idx) => {
+                self.nodes[idx] = Some(n);
+                idx
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Bytes currently resident.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// High-water mark of [`Self::used_bytes`] (the capacity invariant
+    /// `tests/serving_invariants.rs` checks).
+    pub fn peak_used_bytes(&self) -> u64 {
+        self.peak_used_bytes
+    }
+
+    /// The configured budget (`u64::MAX` when unlimited).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Blocks resident right now.
+    pub fn resident_blocks(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    /// Blocks evicted so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// (cross-session hit blocks, inserted-or-unpooled miss blocks)
+    /// across every acquire.
+    pub fn hit_miss_blocks(&self) -> (u64, u64) {
+        (self.hit_blocks, self.miss_blocks)
+    }
+
+    /// Sum of refcounts across resident nodes — conservation says this
+    /// equals the summed lease lengths ([`Self::leased_blocks`]).
+    pub fn total_refs(&self) -> usize {
+        self.nodes.iter().flatten().map(|n| n.refs).sum()
+    }
+
+    /// Sum of lease path lengths across live sessions.
+    pub fn leased_blocks(&self) -> usize {
+        self.leases.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn block_bytes_matches_worked_geometry() {
+        // llama3-70b serving geometry: 256-token block = exactly 1 MiB.
+        assert_eq!(block_bytes(256, 8, 128, 2), MB);
+    }
+
+    #[test]
+    fn prompt_keys_share_prefix_and_fork_suffix() {
+        // Two sessions sharing a 512-token prefix over 256-token blocks
+        // agree on the first two keys and diverge after — the
+        // copy-on-write fork is purely in the keying.
+        let a = prompt_keys(1, 1024, 512, 256);
+        let b = prompt_keys(2, 1024, 512, 256);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[..2], b[..2], "shared span keys are canonical");
+        assert_ne!(a[2], b[2], "private suffixes never collide");
+        // A partial tail block never counts as shared.
+        let c = prompt_keys(3, 600, 600, 256);
+        let d = prompt_keys(4, 600, 600, 256);
+        assert_eq!(c[..2], d[..2]);
+        assert_ne!(c[2], d[2], "partial tail block stays private");
+        assert!(prompt_keys(1, 0, 0, 256).is_empty());
+        assert!(prompt_keys(1, 1024, 0, 0).is_empty());
+    }
+
+    #[test]
+    fn second_session_hits_shared_prefix_and_forks() {
+        let mut pool = KvPool::new(MB, 0);
+        let a = prompt_keys(1, 1024, 512, 256);
+        let b = prompt_keys(2, 1024, 512, 256);
+        let first = pool.acquire(1, &a);
+        assert_eq!(first.credited_blocks, 0);
+        assert_eq!(first.inserted, vec![0, 1, 2, 3]);
+        let second = pool.acquire(2, &b);
+        assert_eq!(second.credited_blocks, 2, "shared span is credited");
+        assert_eq!(second.inserted, vec![2, 3], "only the fork is copied");
+        assert_eq!(pool.resident_blocks(), 6);
+        assert_eq!(pool.used_bytes(), 6 * MB);
+        assert_eq!(pool.total_refs(), pool.leased_blocks());
+        // The shared ancestors carry both sessions' refs.
+        pool.release(1);
+        pool.release(2);
+        assert_eq!(pool.total_refs(), 0);
+        assert_eq!(pool.resident_blocks(), 6, "refcount-0 blocks stay cached");
+    }
+
+    #[test]
+    fn live_blocks_are_never_evicted() {
+        // Capacity of 2 blocks, session 1 holds both live.
+        let mut pool = KvPool::new(MB, 2 * MB);
+        let a = pool.acquire(1, &prompt_keys(1, 512, 0, 256));
+        assert_eq!(a.inserted.len(), 2);
+        // Session 2 wants 2 more: nothing evictable, rest runs unpooled.
+        let b = pool.acquire(2, &prompt_keys(2, 512, 0, 256));
+        assert_eq!(b.credited_blocks, 0);
+        assert!(b.inserted.is_empty(), "live blocks must not be evicted");
+        assert_eq!(pool.evictions(), 0);
+        assert_eq!(pool.used_bytes(), 2 * MB);
+        pool.release(2);
+        pool.release(1);
+        // Now refcount-0: session 3 evicts LRU and fits.
+        let c = pool.acquire(3, &prompt_keys(3, 512, 0, 256));
+        assert_eq!(c.inserted.len(), 2);
+        assert_eq!(pool.evictions(), 2);
+        assert!(pool.used_bytes() <= pool.capacity_bytes());
+    }
+
+    #[test]
+    fn evicted_prefix_readmits_as_misses_exactly_once() {
+        // The re-prefill-exactly-once story: a shared prefix that was
+        // evicted must miss on readmission (it will be re-prefilled),
+        // and from then on hit again.
+        let shared = prompt_keys(0, 512, 512, 256); // note: 512/256 = 2 full blocks
+        let mut pool = KvPool::new(MB, 2 * MB);
+        pool.acquire(1, &shared[..2]);
+        pool.release(1);
+        // Force eviction with an unrelated 2-block working set.
+        pool.acquire(2, &prompt_keys(9, 512, 0, 256));
+        assert_eq!(pool.evictions(), 2, "idle shared prefix evicted");
+        pool.release(2);
+        let re = pool.acquire(3, &shared[..2]);
+        assert_eq!(re.credited_blocks, 0, "evicted prefix re-prefills");
+        assert_eq!(re.inserted.len(), 2);
+        pool.release(3);
+        let again = pool.acquire(4, &shared[..2]);
+        assert_eq!(again.credited_blocks, 2, "resident again after one re-prefill");
+    }
+
+    #[test]
+    fn eviction_is_lru_over_refcount_zero_leaves() {
+        let mut pool = KvPool::new(MB, 3 * MB);
+        pool.acquire(1, &prompt_keys(1, 256, 0, 256)); // block A, clock 1
+        pool.acquire(2, &prompt_keys(2, 256, 0, 256)); // block B, clock 2
+        pool.release(1);
+        pool.release(2);
+        // Touch A: it becomes most-recent.
+        let touched = pool.acquire(3, &prompt_keys(1, 256, 0, 256));
+        assert_eq!(touched.credited_blocks, 1);
+        pool.release(3);
+        // Two new blocks: B (LRU) goes first, then A.
+        pool.acquire(4, &prompt_keys(4, 512, 0, 256));
+        assert_eq!(pool.evictions(), 1);
+        assert_eq!(pool.probe(&prompt_keys(1, 256, 0, 256)), 1, "recently-touched A survives");
+        assert_eq!(pool.probe(&prompt_keys(2, 256, 0, 256)), 0, "LRU B evicted");
+    }
+
+    #[test]
+    fn zero_capacity_means_unlimited_and_tiny_budget_pools_nothing() {
+        let mut pool = KvPool::new(MB, 0);
+        assert_eq!(pool.capacity_bytes(), u64::MAX);
+        let a = pool.acquire(1, &prompt_keys(1, 64 * 256, 0, 256));
+        assert_eq!(a.inserted.len(), 64);
+
+        // Budget smaller than one block: nothing is ever pooled.
+        let mut tiny = KvPool::new(MB, MB / 2);
+        let b = tiny.acquire(1, &prompt_keys(1, 512, 0, 256));
+        assert!(b.inserted.is_empty());
+        assert_eq!(tiny.used_bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds")]
+    fn double_acquire_is_a_caller_bug() {
+        let mut pool = KvPool::new(MB, 0);
+        pool.acquire(1, &prompt_keys(1, 256, 0, 256));
+        pool.acquire(1, &prompt_keys(1, 256, 0, 256));
+    }
+}

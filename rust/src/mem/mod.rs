@@ -13,5 +13,7 @@
 //!   the queue and stall compute — the 50% performance loss of Fig. 12.
 
 pub mod hbm;
+pub mod kvpool;
 
 pub use hbm::{Completion, FetchKind, HbmModel, HbmStats, RequestId};
+pub use kvpool::{block_bytes, prompt_keys, Acquire, KvPool};

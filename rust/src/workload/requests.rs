@@ -74,6 +74,11 @@ pub struct Session {
     pub prefill: usize,
     /// Decode tokens to generate before the session finishes.
     pub decode_tokens: usize,
+    /// Leading prompt tokens drawn from the canonical shared prefix
+    /// (system prompt / few-shot preamble). 0 = a fully private prompt.
+    /// Only the paged KV pool reads this (docs/KVCACHE.md); the prefill
+    /// and decode cost model sees `prefill` regardless.
+    pub shared_prefix: usize,
 }
 
 impl Session {
@@ -92,6 +97,13 @@ impl Session {
 #[derive(Debug, Clone)]
 pub struct SessionGenerator {
     rng: SplitMix64,
+    /// Separate stream for the shared-prefix draw, so switching prefix
+    /// sharing on or off never perturbs the arrival/prompt/decode
+    /// trace — the sharing-disabled golden pins and the shared-vs-
+    /// private bench twins depend on the traces being identical.
+    share_rng: SplitMix64,
+    share_pct: f64,
+    share_span: usize,
     next_id: u64,
     clock_sec: f64,
     arrival_per_sec: f64,
@@ -115,12 +127,27 @@ impl SessionGenerator {
         assert!(!prefill_lengths.is_empty() && !decode_tokens.is_empty());
         SessionGenerator {
             rng: SplitMix64::new(seed),
+            share_rng: SplitMix64::new(seed ^ 0xA5A5_5A5A_D00D_F00D),
+            share_pct: 0.0,
+            share_span: 0,
             next_id: 0,
             clock_sec: 0.0,
             arrival_per_sec,
             prefill_lengths,
             decode_tokens,
         }
+    }
+
+    /// Enable prefix sharing: each generated session draws (from the
+    /// dedicated stream) whether it starts with the canonical shared
+    /// prefix of `span` tokens, with probability `pct` percent. The
+    /// draw happens only when `pct > 0`, so a sharing-disabled
+    /// generator emits the exact trace it always did.
+    pub fn with_prefix_sharing(mut self, pct: f64, span: usize) -> Self {
+        assert!((0.0..=100.0).contains(&pct), "share pct must be in [0, 100]");
+        self.share_pct = pct;
+        self.share_span = span;
+        self
     }
 
     /// Generate the next session. Arrival times are non-decreasing: each
@@ -132,9 +159,16 @@ impl SessionGenerator {
         self.clock_sec += -(1.0 - u).ln() / self.arrival_per_sec;
         let prefill = *self.rng.choose(&self.prefill_lengths);
         let decode = *self.rng.choose(&self.decode_tokens);
+        let shared_prefix = if self.share_pct > 0.0
+            && self.share_rng.next_f64() * 100.0 < self.share_pct
+        {
+            self.share_span.min(prefill)
+        } else {
+            0
+        };
         let id = self.next_id;
         self.next_id += 1;
-        Session { id, arrival_sec: self.clock_sec, prefill, decode_tokens: decode }
+        Session { id, arrival_sec: self.clock_sec, prefill, decode_tokens: decode, shared_prefix }
     }
 
     /// Generate a trace of `n` sessions (arrival-ordered).
@@ -176,8 +210,41 @@ mod tests {
     }
 
     #[test]
+    fn prefix_sharing_rides_a_separate_stream() {
+        // Enabling sharing must not perturb the base trace: arrivals,
+        // prompts, and decode budgets are identical with and without it
+        // (the sharing-disabled golden pins depend on this).
+        let base = SessionGenerator::new(11, 100.0, vec![1024, 4096], vec![16, 64]).take(200);
+        let shared = SessionGenerator::new(11, 100.0, vec![1024, 4096], vec![16, 64])
+            .with_prefix_sharing(80.0, 1024)
+            .take(200);
+        for (a, b) in base.iter().zip(&shared) {
+            assert_eq!((a.id, a.prefill, a.decode_tokens), (b.id, b.prefill, b.decode_tokens));
+            assert_eq!(a.arrival_sec.to_bits(), b.arrival_sec.to_bits());
+            assert_eq!(a.shared_prefix, 0, "pct = 0 never marks a session shared");
+            assert!(b.shared_prefix == 0 || b.shared_prefix == 1024);
+        }
+        // The share rate lands near the configured percentage, and the
+        // span clamps to the prompt (never exceeds it).
+        let hits = shared.iter().filter(|s| s.shared_prefix > 0).count();
+        assert!((120..=200).contains(&hits), "~80% of 200 sessions share, got {hits}");
+        assert!(shared.iter().all(|s| s.shared_prefix <= s.prefill));
+        // 0% and 100% are exact.
+        let all = SessionGenerator::new(5, 100.0, vec![512], vec![8])
+            .with_prefix_sharing(100.0, 4096)
+            .take(50);
+        assert!(all.iter().all(|s| s.shared_prefix == 512), "span clamps to prompt");
+    }
+
+    #[test]
     fn session_kv_len_grows_then_caps() {
-        let s = Session { id: 0, arrival_sec: 0.0, prefill: 1000, decode_tokens: 10 };
+        let s = Session {
+            id: 0,
+            arrival_sec: 0.0,
+            prefill: 1000,
+            decode_tokens: 10,
+            shared_prefix: 0,
+        };
         assert_eq!(s.kv_len(0, 4096), 1000);
         assert_eq!(s.kv_len(5, 4096), 1005);
         assert_eq!(s.kv_len(5000, 4096), 4096); // clamped to capacity

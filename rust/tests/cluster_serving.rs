@@ -209,6 +209,93 @@ fn golden_whole_prompt_chunks_reproduce_monolithic_cluster_serve() {
 }
 
 #[test]
+fn golden_sharing_disabled_reproduces_historical_cluster_serve() {
+    // The cluster half of the paged-KV golden pin (docs/KVCACHE.md): on
+    // a real tp=2 shard plan, either pool knob at 0 leaves the pool
+    // disengaged, so the cluster serving JSON reproduces the pool-free
+    // run byte-for-byte at 1 and 8 driver workers.
+    let topo = fast_topo();
+    let base = small_serve();
+    let blocks_only = ServeConfig { kv_block_tokens: 256, ..small_serve() };
+    let share_only = ServeConfig { prefix_share_pct: 80.0, ..small_serve() };
+    let (cluster, plan) = tp_cluster(&topo, &base, 2);
+    for threads in [1usize, 8] {
+        let driver = SimDriver::new(threads);
+        let want = serve_decode_cluster_with(
+            &driver,
+            &cluster,
+            &plan,
+            &base,
+            Policy::SwizzledHeadFirst,
+        )
+        .to_json()
+        .render();
+        for (name, cfg) in [("blocks_only", &blocks_only), ("share_only", &share_only)] {
+            assert!(!cfg.kv_pool_enabled(), "{name}: one knob must not enable the pool");
+            let got = serve_decode_cluster_with(
+                &driver,
+                &cluster,
+                &plan,
+                cfg,
+                Policy::SwizzledHeadFirst,
+            )
+            .to_json()
+            .render();
+            assert_eq!(
+                got, want,
+                "{threads} workers: {name} diverged from the pool-free cluster serve JSON"
+            );
+        }
+    }
+}
+
+#[test]
+fn shared_cluster_serve_credits_tokens_and_keeps_shf_affinity_home() {
+    // Sharing composes with sharding: on a tp=2 plan the pool-enabled
+    // run conserves prompt tokens across the charged/credited split,
+    // credits a strictly positive shared volume at 100% share, and the
+    // per-KV-head placement rule keeps every inserted block home under
+    // SwizzledHeadFirst (each device's shard-local swizzle pins a KV
+    // head's whole decode stream to one XCD), while NaiveHeadFirst
+    // scatters blocks round-robin and scores strictly lower.
+    let driver = SimDriver::new(4);
+    let topo = fast_topo();
+    let base = small_serve();
+    let shared = ServeConfig {
+        kv_block_tokens: 256,
+        prefix_share_pct: 100.0,
+        ..small_serve()
+    };
+    let (cluster, plan) = tp_cluster(&topo, &base, 2);
+    let mono =
+        serve_decode_cluster_with(&driver, &cluster, &plan, &base, Policy::SwizzledHeadFirst);
+    let shf =
+        serve_decode_cluster_with(&driver, &cluster, &plan, &shared, Policy::SwizzledHeadFirst);
+    let nhf = serve_decode_cluster_with(&driver, &cluster, &plan, &shared, Policy::NaiveHeadFirst);
+    assert!(!mono.truncated && !shf.truncated && !nhf.truncated);
+    assert_eq!(shf.tokens, mono.tokens, "identical trace, identical decode tokens");
+    assert!(shf.kv_shared_tokens > 0, "100%-share must credit resident prefixes");
+    assert_eq!(
+        shf.prefill_tokens + shf.kv_shared_tokens,
+        mono.prefill_tokens,
+        "charged + credited must cover every prompt token exactly once"
+    );
+    assert!(
+        shf.prefill_sec < mono.prefill_sec,
+        "credited prefixes must cut prefill wall-clock ({} >= {})",
+        shf.prefill_sec,
+        mono.prefill_sec
+    );
+    assert_eq!(shf.kv_xcd_affinity_pct, 100.0, "SHF keeps every inserted block home");
+    assert!(
+        nhf.kv_xcd_affinity_pct < shf.kv_xcd_affinity_pct,
+        "NHF scatters blocks across XCDs ({} >= {})",
+        nhf.kv_xcd_affinity_pct,
+        shf.kv_xcd_affinity_pct
+    );
+}
+
+#[test]
 fn chunked_tp1_cluster_serve_is_byte_identical_to_single_device() {
     // The executor generalization holds under chunking too: a tp=1
     // cluster prices chunked-prefill launches identically to the

@@ -9,6 +9,7 @@ use numa_attn::attn::{AttnConfig, KernelKind, WorkItem};
 use numa_attn::cache::LruCache;
 use numa_attn::cluster::{ShardPlan, ShardStrategy};
 use numa_attn::mapping::{chiplet_swizzle, Mapping, Policy, ALL_POLICIES};
+use numa_attn::mem::KvPool;
 use numa_attn::sched::{xcd_of_slot, Dispatcher};
 use numa_attn::util::rng::SplitMix64;
 
@@ -530,6 +531,211 @@ fn prop_trace_flops_match_totals() {
             assert!(total >= cfg.total_fwd_flops() * 0.99);
             assert!(total <= cfg.total_fwd_flops() * 2.0 + 1.0);
         }
+    }
+}
+
+/// Naive, obviously-correct paged-KV reference: each resident block is
+/// its FULL key prefix in a `BTreeMap` (no trie, no slab, no free
+/// list), leases are full prefix paths, and eviction re-derives
+/// "refcount-0 childless" by scanning for one-longer resident prefixes.
+/// The oracle `mem::KvPool`'s trie is checked against, op for op.
+struct NaiveKvPool {
+    /// Capacity in blocks (`usize::MAX` = unlimited).
+    cap_blocks: usize,
+    blocks: NaiveKvBlocks,
+    leases: std::collections::BTreeMap<u64, Vec<Vec<u64>>>,
+    clock: u64,
+    next_insert: u64,
+    evictions: u64,
+    hits: u64,
+    misses: u64,
+}
+
+struct NaiveKvBlock {
+    refs: usize,
+    last_use: u64,
+    insert_id: u64,
+}
+
+type NaiveKvBlocks = std::collections::BTreeMap<Vec<u64>, NaiveKvBlock>;
+
+fn naive_childless(blocks: &NaiveKvBlocks, p: &[u64]) -> bool {
+    !blocks.keys().any(|q| q.len() == p.len() + 1 && q[..p.len()] == *p)
+}
+
+impl NaiveKvPool {
+    fn new(cap_blocks: usize) -> Self {
+        NaiveKvPool {
+            cap_blocks,
+            blocks: Default::default(),
+            leases: Default::default(),
+            clock: 0,
+            next_insert: 0,
+            evictions: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn make_room(&mut self) -> bool {
+        if self.cap_blocks == 0 {
+            return false;
+        }
+        while self.blocks.len() + 1 > self.cap_blocks {
+            let victim = self
+                .blocks
+                .iter()
+                .filter(|(p, b)| b.refs == 0 && naive_childless(&self.blocks, p))
+                .min_by_key(|(_, b)| (b.last_use, b.insert_id))
+                .map(|(p, _)| p.clone());
+            let Some(p) = victim else { return false };
+            self.blocks.remove(&p);
+            self.evictions += 1;
+        }
+        true
+    }
+
+    fn acquire(&mut self, session: u64, keys: &[u64]) -> (usize, Vec<usize>) {
+        assert!(!self.leases.contains_key(&session), "model: double acquire");
+        self.clock += 1;
+        let clock = self.clock;
+        let mut path: Vec<Vec<u64>> = Vec::new();
+        let mut credited = 0usize;
+        let mut inserted = Vec::new();
+        let mut walking = true;
+        for j in 0..keys.len() {
+            let prefix = keys[..=j].to_vec();
+            if walking {
+                if let Some(b) = self.blocks.get_mut(&prefix) {
+                    b.refs += 1;
+                    b.last_use = clock;
+                    path.push(prefix);
+                    credited += 1;
+                    self.hits += 1;
+                    continue;
+                }
+                walking = false;
+            }
+            self.misses += 1;
+            if !self.make_room() {
+                break;
+            }
+            let block = NaiveKvBlock { refs: 1, last_use: clock, insert_id: self.next_insert };
+            self.next_insert += 1;
+            self.blocks.insert(prefix.clone(), block);
+            path.push(prefix);
+            inserted.push(j);
+        }
+        self.leases.insert(session, path);
+        (credited, inserted)
+    }
+
+    fn release(&mut self, session: u64) {
+        let Some(path) = self.leases.remove(&session) else { return };
+        for p in path {
+            self.blocks.get_mut(&p).expect("model: leased block resident").refs -= 1;
+        }
+    }
+
+    fn probe(&self, keys: &[u64]) -> usize {
+        let mut run = 0;
+        for j in 0..keys.len() {
+            if self.blocks.contains_key(&keys[..=j]) {
+                run += 1;
+            } else {
+                break;
+            }
+        }
+        run
+    }
+
+    fn total_refs(&self) -> usize {
+        self.blocks.values().map(|b| b.refs).sum()
+    }
+}
+
+#[test]
+fn prop_kvpool_matches_naive_full_prefix_model() {
+    // 10k mixed acquire/release/probe ops per seed against the
+    // full-prefix oracle. Chains reuse prefixes of earlier chains 3/4 of
+    // the time (the cross-session hit and copy-on-write fork regimes)
+    // over a 5-symbol key alphabet; capacities from 0 (unlimited) to 12
+    // blocks straddle hit-heavy, eviction-heavy, and budget-starved
+    // regimes. After every op: identical credited/inserted answers,
+    // identical used-bytes and resident-block accounting, refcount
+    // conservation (sum of refcounts == sum of lease lengths), the byte
+    // budget holds, and every live lease's full path is still resident
+    // (no live block was evicted).
+    const BB: u64 = 1024;
+    for seed in [13u64, 26, 39, 52, 65] {
+        let mut rng = SplitMix64::new(seed);
+        let cap_blocks = rng.gen_range(13) as usize; // 0 = unlimited
+        let mut pool = KvPool::new(BB, cap_blocks as u64 * BB);
+        let cap = if cap_blocks == 0 { usize::MAX } else { cap_blocks };
+        let mut model = NaiveKvPool::new(cap);
+        let mut chains: Vec<Vec<u64>> = Vec::new();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_session = 0u64;
+        for op in 0..10_000u32 {
+            // A fresh chain, usually forked off a prefix of an old one.
+            let len = 1 + rng.gen_range(6) as usize;
+            let mut chain: Vec<u64> = Vec::new();
+            if !chains.is_empty() && rng.gen_range(4) != 0 {
+                let base = &chains[rng.gen_range(chains.len() as u64) as usize];
+                let take = 1 + rng.gen_range(base.len() as u64) as usize;
+                chain.extend_from_slice(&base[..take]);
+            }
+            chain.truncate(len);
+            while chain.len() < len {
+                chain.push(1 + rng.gen_range(5));
+            }
+            let ctx = format!("seed {seed} op {op} cap {cap_blocks} chain {chain:?}");
+            match rng.gen_range(4) {
+                0 | 1 => {
+                    let sid = next_session;
+                    next_session += 1;
+                    let got = pool.acquire(sid, &chain);
+                    let (credited, inserted) = model.acquire(sid, &chain);
+                    assert_eq!(got.credited_blocks, credited, "{ctx}");
+                    assert_eq!(got.inserted, inserted, "{ctx}");
+                    live.push(sid);
+                    if chains.len() < 256 {
+                        chains.push(chain);
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let at = rng.gen_range(live.len() as u64) as usize;
+                    let sid = live.swap_remove(at);
+                    pool.release(sid);
+                    model.release(sid);
+                }
+                _ => {
+                    assert_eq!(pool.probe(&chain), model.probe(&chain), "{ctx}");
+                }
+            }
+            assert_eq!(pool.used_bytes(), model.blocks.len() as u64 * BB, "{ctx}");
+            assert_eq!(pool.resident_blocks(), model.blocks.len(), "{ctx}");
+            assert_eq!(pool.total_refs(), pool.leased_blocks(), "{ctx}: conservation");
+            assert_eq!(pool.total_refs(), model.total_refs(), "{ctx}");
+            assert_eq!(pool.leased_blocks(), model.leases.values().map(Vec::len).sum(), "{ctx}");
+            if cap_blocks > 0 {
+                assert!(pool.used_bytes() <= pool.capacity_bytes(), "{ctx}: over budget");
+            }
+            for (sid, path) in &model.leases {
+                if let Some(deepest) = path.last() {
+                    assert_eq!(
+                        pool.probe(deepest),
+                        path.len(),
+                        "{ctx}: session {sid}'s live lease lost a block"
+                    );
+                }
+            }
+        }
+        let (hits, misses) = pool.hit_miss_blocks();
+        assert_eq!(hits, model.hits, "seed {seed}");
+        assert_eq!(misses, model.misses, "seed {seed}");
+        assert_eq!(pool.evictions(), model.evictions, "seed {seed}");
+        assert!(pool.peak_used_bytes() >= pool.used_bytes(), "seed {seed}");
     }
 }
 

@@ -26,6 +26,7 @@ use std::collections::HashMap;
 use numa_attn::coordinator::{serve_decode_with, PrefillChunk, ServeConfig, StepBatcher};
 use numa_attn::driver::SimDriver;
 use numa_attn::mapping::Policy;
+use numa_attn::mem::{block_bytes, prompt_keys, KvPool};
 use numa_attn::topology::{presets, Topology};
 use numa_attn::workload::{Session, SessionGenerator};
 
@@ -233,6 +234,180 @@ fn prop_serve_stats_conserve_and_order_across_the_chunk_grid() {
             assert!(s.prefill_sec > 0.0 && s.prefill_sec < s.sim_sec, "{label}");
             assert!(s.tokens_per_sec > 0.0, "{label}");
             assert_eq!(s.advisor_consults, s.distinct_geometries, "{label}");
+        }
+    }
+}
+
+/// The trace the serving loop actually runs when sharing is on: the
+/// shared-prefix draw rides its own RNG stream on top of the base
+/// arrival/prompt/decode trace (pinned by workload tests).
+fn shared_trace(cfg: &ServeConfig) -> Vec<Session> {
+    SessionGenerator::new(
+        cfg.seed,
+        cfg.arrival_per_sec,
+        cfg.prefill_lengths.clone(),
+        cfg.decode_tokens.clone(),
+    )
+    .with_prefix_sharing(cfg.prefix_share_pct, cfg.shared_span())
+    .take(cfg.sessions)
+}
+
+/// The paged-pool sharing grid: (prefix_share_pct, kv_block_tokens,
+/// kv_capacity_mb, chunk_tokens). Covers partial-tail blocks (300 does
+/// not divide the 640-token minimum prompt), an eviction-heavy 1 MiB
+/// budget (4 blocks at 128 tokens, 1 block at 300), unlimited budgets,
+/// and both step compositions.
+const SHARE_GRID: [(f64, usize, usize, usize); 8] = [
+    (50.0, 128, 0, 0),
+    (100.0, 128, 0, 0),
+    (50.0, 128, 1, 0),
+    (100.0, 300, 1, 0),
+    (50.0, 128, 0, 256),
+    (100.0, 128, 1, 256),
+    (100.0, 300, 0, 256),
+    (50.0, 300, 1, 256),
+];
+
+#[test]
+fn prop_pool_conserves_prompt_tokens_across_the_sharing_grid() {
+    // The paged-pool conservation law (docs/KVCACHE.md): every admitted
+    // prompt token is either CHARGED to exactly one prefill launch
+    // (`prefill_tokens`) or SATISFIED by exactly one resident shared
+    // block (`kv_shared_tokens`) — their sum is the trace's prompt
+    // total, for every share ratio, block size, budget, and step
+    // composition. A shared prefix that was evicted under budget
+    // pressure re-enters on the charged side of the ledger (it is
+    // re-prefilled by the session that readmits it) — the sum never
+    // double-counts and never drops a token either way.
+    let driver = SimDriver::new(2);
+    let topo = fast_topo();
+    for seed in [3u64, 9] {
+        for (share, block, cap_mb, chunk) in SHARE_GRID {
+            let cfg = ServeConfig {
+                kv_block_tokens: block,
+                prefix_share_pct: share,
+                kv_capacity_mb: cap_mb,
+                ..tiny_serve(seed, chunk, 0)
+            };
+            cfg.validate().unwrap();
+            let s = serve_decode_with(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+            let label =
+                format!("seed {seed} share {share} block {block} cap {cap_mb} chunk {chunk}");
+            assert!(!s.truncated, "{label}: trace must drain");
+            assert_eq!(s.sessions_completed, cfg.sessions, "{label}");
+
+            let trace = trace_of(&cfg);
+            let want_decode: u64 = trace.iter().map(|t| t.decode_tokens as u64).sum();
+            let want_prefill: u64 = trace.iter().map(|t| t.prefill as u64).sum();
+            assert_eq!(s.tokens, want_decode, "{label}: decode-token conservation");
+            assert_eq!(
+                s.prefill_tokens + s.kv_shared_tokens,
+                want_prefill,
+                "{label}: charged + credited must cover every prompt token exactly once"
+            );
+            if cap_mb == 0 && share == 100.0 {
+                assert!(s.kv_shared_tokens > 0, "{label}: unlimited 100%-share must credit");
+            }
+            assert!(
+                (0.0..=100.0).contains(&s.kv_xcd_affinity_pct),
+                "{label}: affinity is a percentage ({})",
+                s.kv_xcd_affinity_pct
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pool_budget_and_lease_accounting_hold_step_by_step() {
+    // Replay the serving loop's admission/retirement protocol against a
+    // pool directly (the priced executor is irrelevant to these
+    // invariants) and check, after EVERY step: the pool never exceeds
+    // its byte budget even transiently (peak ≤ budget), refcount
+    // conservation (sum of refcounts == sum of live lease lengths), and
+    // the chunk stream of each credited session starts exactly at its
+    // credited offset — so charged + credited == the prompt, token for
+    // token, even when eviction forces a later sharer to re-prefill.
+    for seed in [1u64, 7, 23] {
+        for (share, block) in [(0.0f64, 128usize), (50.0, 128), (100.0, 128), (100.0, 300)] {
+            let cfg = ServeConfig {
+                kv_block_tokens: block,
+                prefix_share_pct: share,
+                kv_capacity_mb: 1,
+                ..tiny_serve(seed, 256, 0)
+            };
+            let label = format!("seed {seed} share {share} block {block}");
+            let trace = shared_trace(&cfg);
+            let by_id: HashMap<u64, Session> = trace.iter().map(|s| (s.id, s.clone())).collect();
+            let mut b = StepBatcher::new(trace.clone(), cfg.max_active, cfg.chunk_tokens);
+            let bb = block_bytes(block, cfg.h_k, cfg.d_head, cfg.dtype_bytes);
+            let budget_bytes = cfg.kv_capacity_mb as u64 * 1024 * 1024;
+            let mut pool = KvPool::new(bb, budget_bytes);
+            let mut credited: HashMap<u64, usize> = HashMap::new();
+            let mut charged: HashMap<u64, usize> = HashMap::new();
+            let mut cursor: HashMap<u64, usize> = HashMap::new();
+
+            let mut now = 0.0f64;
+            let mut step = 0usize;
+            while !b.done() {
+                assert!(step < 10_000, "{label}: loop must terminate");
+                if b.active().is_empty() {
+                    match b.next_arrival_sec() {
+                        Some(t) => now = now.max(t),
+                        None => break,
+                    }
+                }
+                for s in b.admit(now) {
+                    let keys = prompt_keys(s.id, s.prefill, s.shared_prefix, block);
+                    let got = pool.acquire(s.id, &keys);
+                    let t = (got.credited_blocks * block).min(s.prefill);
+                    credited.insert(s.id, t);
+                    cursor.insert(s.id, t);
+                    if t > 0 {
+                        b.credit_prefix(s.id, t);
+                    }
+                }
+                for c in b.plan_chunks(usize::MAX) {
+                    assert_eq!(
+                        cursor[&c.id], c.start,
+                        "{label}: session {} must stream from its credited offset",
+                        c.id
+                    );
+                    cursor.insert(c.id, c.end);
+                    *charged.entry(c.id).or_insert(0) += c.tokens();
+                    assert!(c.end <= by_id[&c.id].prefill, "{label}: chunk past the prompt");
+                }
+                b.advance_step();
+                for id in b.drain_retired() {
+                    pool.release(id);
+                }
+                assert!(
+                    pool.peak_used_bytes() <= budget_bytes,
+                    "{label}: pool peak {} exceeded budget {budget_bytes}",
+                    pool.peak_used_bytes()
+                );
+                assert_eq!(pool.total_refs(), pool.leased_blocks(), "{label}: ref conservation");
+                now += 1e-3;
+                step += 1;
+            }
+
+            assert_eq!(b.completed(), trace.len(), "{label}: every session retires");
+            assert_eq!(pool.total_refs(), 0, "{label}: every lease released at retirement");
+            for s in &trace {
+                assert_eq!(
+                    credited.get(&s.id).copied().unwrap_or(0)
+                        + charged.get(&s.id).copied().unwrap_or(0),
+                    s.prefill,
+                    "{label}: session {} prompt tokens charged-or-credited exactly once",
+                    s.id
+                );
+            }
+            // The all-private cell exercises eviction deterministically:
+            // 7 disjoint chains churn through a 4-block budget, and the
+            // 4th admission always lands after a retirement has dropped
+            // an earlier chain to refcount 0 (max_active is 3).
+            if share == 0.0 && block == 128 {
+                assert!(pool.evictions() > 0, "{label}: grid never hit the eviction path");
+            }
         }
     }
 }

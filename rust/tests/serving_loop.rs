@@ -108,6 +108,63 @@ fn golden_whole_prompt_chunks_reproduce_monolithic_serve_byte_for_byte() {
 }
 
 #[test]
+fn golden_sharing_disabled_reproduces_historical_serve_byte_for_byte() {
+    // The golden-equivalence pin of the paged-KV tentpole
+    // (docs/KVCACHE.md): the pool engages only when BOTH
+    // `kv_block_tokens` and `prefix_share_pct` are non-zero, so either
+    // knob at 0 must take the exact pre-pool code path and reproduce
+    // the historical serving JSON byte-for-byte — at 1 and 8 driver
+    // workers, under both step compositions.
+    let topo = fast_topo();
+    for chunk in [0usize, 512] {
+        let base = ServeConfig { chunk_tokens: chunk, ..small_serve() };
+        let blocks_only = ServeConfig { kv_block_tokens: 256, ..base.clone() };
+        let share_only = ServeConfig { prefix_share_pct: 80.0, ..base.clone() };
+        for policy in [Policy::SwizzledHeadFirst, Policy::NaiveHeadFirst] {
+            for threads in [1usize, 8] {
+                let driver = SimDriver::new(threads);
+                let want = serve_decode_with(&driver, &topo, &base, policy).to_json().render();
+                for (name, cfg) in [("blocks_only", &blocks_only), ("share_only", &share_only)] {
+                    assert!(!cfg.kv_pool_enabled(), "{name}: one knob must not enable the pool");
+                    let got = serve_decode_with(&driver, &topo, cfg, policy).to_json().render();
+                    assert_eq!(
+                        got, want,
+                        "{policy} @ {threads} workers chunk {chunk}: {name} diverged from \
+                         the pool-free serve JSON"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_serve_json_is_byte_identical_at_threads_1_and_8() {
+    // Determinism extends to the pool-enabled paths: credited prompts,
+    // suffix-chunk pricing, and the affinity stat are all priced through
+    // the memoizing driver, so worker count must never leak into the
+    // report.
+    let topo = fast_topo();
+    for chunk in [0usize, 512] {
+        let cfg = ServeConfig {
+            chunk_tokens: chunk,
+            kv_block_tokens: 256,
+            prefix_share_pct: 80.0,
+            kv_capacity_mb: 64,
+            ..small_serve()
+        };
+        let serial = serve_decode_with(&SimDriver::new(1), &topo, &cfg, Policy::SwizzledHeadFirst);
+        let parallel =
+            serve_decode_with(&SimDriver::new(8), &topo, &cfg, Policy::SwizzledHeadFirst);
+        assert_eq!(
+            serial.to_json().render(),
+            parallel.to_json().render(),
+            "chunk {chunk}: shared serve stats diverged between 1 and 8 workers"
+        );
+    }
+}
+
+#[test]
 fn chunked_serve_improves_the_first_token_tail() {
     // The tentpole's payoff at test scale: streaming prompts in
     // row-block chunks conserves every served token while cutting the
