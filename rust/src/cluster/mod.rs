@@ -41,6 +41,37 @@ pub const DEFAULT_LINK_BYTES_PER_SEC: f64 = 128e9;
 /// Default interconnect hop latency: 1 µs (switch + serialization).
 pub const DEFAULT_LINK_LATENCY_SEC: f64 = 1e-6;
 
+/// What serving phase a device pool is specialized for in a
+/// disaggregated deployment (docs/DISAGG.md). A colocated cluster (the
+/// historical `serve`/`cluster` paths) has no pool kind at all —
+/// [`ClusterTopology::pool`] is `None` there, and every byte of its
+/// behavior is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    /// Prompt-processing pool: compute-bound monolithic or chunked
+    /// prefill, no decode steps.
+    Prefill,
+    /// Token-generation pool: bandwidth-bound decode over growing KV
+    /// caches, fed by KV handoffs from the prefill pool.
+    Decode,
+}
+
+impl PoolKind {
+    /// Stable lowercase identifier (JSON/logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolKind::Prefill => "prefill",
+            PoolKind::Decode => "decode",
+        }
+    }
+}
+
+impl fmt::Display for PoolKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// A cluster of chiplet GPUs: the second NUMA level above
 /// [`Topology`]'s XCDs.
 ///
@@ -60,6 +91,12 @@ pub struct ClusterTopology {
     pub link_bytes_per_sec: f64,
     /// Per-hop interconnect latency in seconds.
     pub link_latency_sec: f64,
+    /// The serving phase this cluster is a pool for in a disaggregated
+    /// deployment, or `None` for the historical colocated cluster
+    /// (docs/DISAGG.md). Part of equality/hashing like every other
+    /// field, so a tagged pool never aliases a colocated cluster in a
+    /// memoization table.
+    pub pool: Option<PoolKind>,
 }
 
 impl ClusterTopology {
@@ -77,6 +114,7 @@ impl ClusterTopology {
             devices: vec![device.clone(); n],
             link_bytes_per_sec,
             link_latency_sec,
+            pool: None,
         }
     }
 
@@ -84,6 +122,24 @@ impl ClusterTopology {
     /// ([`DEFAULT_LINK_BYTES_PER_SEC`] / [`DEFAULT_LINK_LATENCY_SEC`]).
     pub fn node_of(device: &Topology, n: usize) -> ClusterTopology {
         Self::homogeneous(device, n, DEFAULT_LINK_BYTES_PER_SEC, DEFAULT_LINK_LATENCY_SEC)
+    }
+
+    /// A homogeneous pool of `n` devices specialized for one serving
+    /// phase of a disaggregated deployment (docs/DISAGG.md). Identical
+    /// to [`ClusterTopology::homogeneous`] except for the tag in the
+    /// name and the [`PoolKind`] marker.
+    pub fn pool_of(
+        device: &Topology,
+        n: usize,
+        kind: PoolKind,
+        link_bytes_per_sec: f64,
+        link_latency_sec: f64,
+    ) -> ClusterTopology {
+        ClusterTopology {
+            name: format!("{} {kind}-pool x{n}", device.name),
+            pool: Some(kind),
+            ..Self::homogeneous(device, n, link_bytes_per_sec, link_latency_sec)
+        }
     }
 
     /// Number of member devices.
@@ -132,6 +188,19 @@ impl ClusterTopology {
         }
         (n - 1) as f64 * (bytes_per_device / self.link_bytes_per_sec + self.link_latency_sec)
     }
+
+    /// Time for a point-to-point transfer of `bytes` over one link hop —
+    /// the KV-handoff charge of disaggregated serving (docs/DISAGG.md):
+    /// a session's non-credited KV blocks move from the prefill pool to
+    /// the decode pool over the same interconnect the all-gather uses.
+    /// Exactly zero for zero bytes (a fully credited handoff pays no
+    /// latency either — the blocks are already resident).
+    pub fn transfer_sec(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.link_bytes_per_sec + self.link_latency_sec
+    }
 }
 
 // Hash/Eq by bits, same convention as Topology/SimConfig: canonical
@@ -142,6 +211,7 @@ impl PartialEq for ClusterTopology {
             && self.devices == other.devices
             && self.link_bytes_per_sec.to_bits() == other.link_bytes_per_sec.to_bits()
             && self.link_latency_sec.to_bits() == other.link_latency_sec.to_bits()
+            && self.pool == other.pool
     }
 }
 
@@ -153,6 +223,7 @@ impl std::hash::Hash for ClusterTopology {
         self.devices.hash(state);
         self.link_bytes_per_sec.to_bits().hash(state);
         self.link_latency_sec.to_bits().hash(state);
+        self.pool.hash(state);
     }
 }
 
@@ -349,6 +420,26 @@ mod tests {
         // More devices move more data: all-gather grows with N.
         let four = ClusterTopology::homogeneous(&presets::mi300x(), 4, 100e9, 1e-6);
         assert!(four.all_gather_sec(1e6) < t);
+    }
+
+    #[test]
+    fn pool_of_tags_and_transfer_prices_point_to_point() {
+        let p = ClusterTopology::pool_of(&presets::mi300x(), 2, PoolKind::Prefill, 100e9, 1e-6);
+        assert_eq!(p.pool, Some(PoolKind::Prefill));
+        assert!(p.name.contains("prefill-pool x2"), "{}", p.name);
+        p.validate().unwrap();
+        // Point-to-point transfer: bytes/link + latency; exactly free at 0.
+        assert_eq!(p.transfer_sec(0.0), 0.0);
+        let t = p.transfer_sec(1e6);
+        let want = 1e6 / 100e9 + 1e-6;
+        assert!((t - want).abs() < 1e-15, "{t} vs {want}");
+        // The pool tag participates in equality on its own: clearing it
+        // (same name, same devices, same link) changes the key.
+        let mut untagged = p.clone();
+        untagged.pool = None;
+        assert_ne!(p, untagged);
+        // Colocated constructors stay untagged.
+        assert_eq!(ClusterTopology::node_of(&presets::mi300x(), 2).pool, None);
     }
 
     #[test]

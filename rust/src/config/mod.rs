@@ -21,7 +21,8 @@
 //! incl. `kernel = "decode"` + `num_splits`, engine knobs, and the
 //! `[serve]` decode-serving-loop section) is documented in
 //! `examples/experiment.ini` and mirrored by [`ATTENTION_KEYS`] /
-//! [`SIM_KEYS`] / [`SERVE_KEYS`]; the
+//! [`SIM_KEYS`] / [`SERVE_KEYS`] (plus [`CLUSTER_KEYS`] and
+//! [`DISAGG_KEYS`] for the deployment sections); the
 //! `example_experiment_file_stays_reconciled` test pins that the example
 //! file and this parser stay reconciled, and
 //! `example_serve_file_builds_the_serving_config` pins the worked
@@ -72,6 +73,18 @@ pub const SERVE_KEYS: [&str; 13] = [
 pub const CLUSTER_KEYS: [&str; 6] =
     ["devices", "topology", "tp", "strategy", "link_gbs", "link_latency_us"];
 
+/// Every `[disagg]` key [`ExperimentConfig::parse`] reads — the
+/// disaggregated prefill/decode deployment (`numa-attn disagg --config`,
+/// docs/DISAGG.md). Pool sizes, the KV-handoff interconnect, and the
+/// SLO mix; the serving trace itself comes from `[serve]` and the model
+/// geometry from `[attention]`. The worked key set lives in
+/// `examples/disagg.ini`, pinned by the
+/// `example_disagg_file_stays_reconciled` test.
+pub const DISAGG_KEYS: [&str; 6] = [
+    "prefill_devices", "decode_devices", "link_gbs", "link_latency_us", "interactive_pct",
+    "ttft_slo_ms",
+];
+
 /// Top-level experiment file.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -85,6 +98,8 @@ pub struct ExperimentConfig {
     pub serve: ServeSection,
     /// `[cluster]` section (`None` when the file has no such section).
     pub cluster: Option<ClusterSection>,
+    /// `[disagg]` section (`None` when the file has no such section).
+    pub disagg: Option<DisaggSection>,
 }
 
 /// `[attention]` section: the workload geometry.
@@ -188,6 +203,25 @@ pub struct ClusterSection {
     pub link_latency_us: Option<f64>,
 }
 
+/// `[disagg]` section: the disaggregated prefill/decode deployment —
+/// pool sizes, the KV-handoff interconnect, and the SLO traffic mix
+/// (docs/DISAGG.md). The trace and loop knobs come from `[serve]`.
+#[derive(Debug, Clone, Default)]
+pub struct DisaggSection {
+    /// Devices in the prefill pool (0 = colocated, no handoff).
+    pub prefill_devices: Option<usize>,
+    /// Devices in the decode pool (default 1).
+    pub decode_devices: Option<usize>,
+    /// KV-handoff interconnect bandwidth in GB/s (default 128).
+    pub link_gbs: Option<f64>,
+    /// KV-handoff hop latency in microseconds (default 1).
+    pub link_latency_us: Option<f64>,
+    /// Percent of sessions in the interactive SLO class (default 30).
+    pub interactive_pct: Option<f64>,
+    /// Interactive TTFT target in milliseconds (0 = preemption off).
+    pub ttft_slo_ms: Option<f64>,
+}
+
 /// Which pass an experiment file requests ([`ExperimentConfig::kernel`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExpKernel {
@@ -265,12 +299,25 @@ impl ExperimentConfig {
         } else {
             None
         };
+        let disagg = if ini.has_section("disagg") {
+            Some(DisaggSection {
+                prefill_devices: ini.get_parsed("disagg", "prefill_devices")?,
+                decode_devices: ini.get_parsed("disagg", "decode_devices")?,
+                link_gbs: ini.get_parsed("disagg", "link_gbs")?,
+                link_latency_us: ini.get_parsed("disagg", "link_latency_us")?,
+                interactive_pct: ini.get_parsed("disagg", "interactive_pct")?,
+                ttft_slo_ms: ini.get_parsed("disagg", "ttft_slo_ms")?,
+            })
+        } else {
+            None
+        };
         Ok(ExperimentConfig {
             topology: ini.get("", "topology").unwrap_or("mi300x").to_string(),
             attention,
             sim,
             serve,
             cluster,
+            disagg,
         })
     }
 
@@ -447,6 +494,28 @@ impl ExperimentConfig {
             prefix_share_pct: s.prefix_share_pct.unwrap_or(defaults.prefix_share_pct),
             kv_capacity_mb: s.kv_capacity_mb.unwrap_or(defaults.kv_capacity_mb),
             seed: s.seed.unwrap_or(defaults.seed),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Build the disaggregated serving configuration: the serving loop
+    /// from `[serve]`/`[attention]` via [`Self::serve_config`], pool
+    /// sizes, the KV-handoff interconnect, and the SLO mix from
+    /// `[disagg]` with [`crate::coordinator::DisaggConfig`] defaults for
+    /// absent keys. Requires a `[disagg]` section (use
+    /// [`Self::serve_config`] for the colocated single-pool loop).
+    pub fn disagg_config(&self) -> Result<crate::coordinator::DisaggConfig, String> {
+        let d = self.disagg.as_ref().ok_or("missing [disagg] section")?;
+        let defaults = crate::coordinator::DisaggConfig::default();
+        let cfg = crate::coordinator::DisaggConfig {
+            serve: self.serve_config()?,
+            prefill_devices: d.prefill_devices.unwrap_or(defaults.prefill_devices),
+            decode_devices: d.decode_devices.unwrap_or(defaults.decode_devices),
+            link_gbs: d.link_gbs.unwrap_or(defaults.link_gbs),
+            link_latency_us: d.link_latency_us.unwrap_or(defaults.link_latency_us),
+            interactive_pct: d.interactive_pct.unwrap_or(defaults.interactive_pct),
+            ttft_slo_ms: d.ttft_slo_ms.unwrap_or(defaults.ttft_slo_ms),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -987,6 +1056,97 @@ d_head = 128
             assert!(
                 documented.contains(&key),
                 "examples/cluster.ini does not document the [cluster] key '{key}'"
+            );
+        }
+    }
+
+    #[test]
+    fn disagg_section_round_trips_and_validates() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        // No [disagg] section: building the disagg config errors, and
+        // the colocated serve config is unaffected.
+        let c = ExperimentConfig::parse(base).unwrap();
+        assert!(c.disagg.is_none());
+        assert!(c.disagg_config().unwrap_err().contains("[disagg]"));
+        c.serve_config().unwrap();
+
+        // Every documented key lands where docs/DISAGG.md says.
+        let on = format!(
+            "{base}\n[disagg]\nprefill_devices = 2\ndecode_devices = 4\nlink_gbs = 200\n\
+             link_latency_us = 2\ninteractive_pct = 50\nttft_slo_ms = 25\n"
+        );
+        let cfg = ExperimentConfig::parse(&on).unwrap().disagg_config().unwrap();
+        assert_eq!((cfg.prefill_devices, cfg.decode_devices), (2, 4));
+        assert_eq!(cfg.link_gbs, 200.0);
+        assert_eq!(cfg.link_latency_us, 2.0);
+        assert_eq!(cfg.interactive_pct, 50.0);
+        assert_eq!(cfg.ttft_slo_ms, 25.0);
+        assert!(!cfg.colocated());
+        assert_eq!(cfg.serve.h_q, 16, "geometry still comes from [attention]");
+
+        // Minimal section: the coordinator defaults apply.
+        let minimal = format!("{base}\n[disagg]\nprefill_devices = 1\n");
+        let cfg = ExperimentConfig::parse(&minimal).unwrap().disagg_config().unwrap();
+        let defaults = crate::coordinator::DisaggConfig::default();
+        assert_eq!(cfg.decode_devices, defaults.decode_devices);
+        assert_eq!(cfg.interactive_pct, defaults.interactive_pct);
+        assert_eq!(cfg.link_gbs, defaults.link_gbs);
+
+        // Degenerate sections are rejected with actionable messages.
+        let zero = format!("{base}\n[disagg]\ndecode_devices = 0\n");
+        assert!(ExperimentConfig::parse(&zero).unwrap().disagg_config().is_err());
+        let indivisible = format!("{base}\n[disagg]\nprefill_devices = 3\n");
+        let err = ExperimentConfig::parse(&indivisible).unwrap().disagg_config().unwrap_err();
+        assert!(err.contains("must divide h_k"), "{err}");
+        let badpct = format!("{base}\n[disagg]\ninteractive_pct = 150\n");
+        let err = ExperimentConfig::parse(&badpct).unwrap().disagg_config().unwrap_err();
+        assert!(err.contains("interactive_pct"), "{err}");
+    }
+
+    #[test]
+    fn example_disagg_file_stays_reconciled() {
+        // Same contract as `example_cluster_file_stays_reconciled`, for
+        // the worked disaggregated scenario (docs/DISAGG.md): the file
+        // must parse, build the disagg config it documents, and every
+        // key its reference block documents must be one the parser reads
+        // — with the full [disagg] key set covered.
+        let text = include_str!("../../../examples/disagg.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        let cfg = c.disagg_config().unwrap();
+        assert_eq!((cfg.prefill_devices, cfg.decode_devices), (1, 1));
+        assert_eq!(cfg.link_gbs, 128.0);
+        assert_eq!(cfg.link_latency_us, 1.0);
+        assert_eq!(cfg.interactive_pct, 30.0);
+        assert_eq!(cfg.ttft_slo_ms, 40.0);
+        assert!(!cfg.colocated());
+        assert_eq!((cfg.serve.h_q, cfg.serve.h_k, cfg.serve.d_head), (64, 8, 128));
+        assert_eq!(cfg.serve.sessions, 12);
+        assert_eq!(cfg.serve.chunk_tokens, 1024, "worked example serves chunked");
+        assert_eq!(cfg.serve.seed, 7);
+
+        let documented = documented_keys(text);
+        for key in &documented {
+            assert!(
+                *key == "topology"
+                    || ATTENTION_KEYS.contains(key)
+                    || SIM_KEYS.contains(key)
+                    || SERVE_KEYS.contains(key)
+                    || DISAGG_KEYS.contains(key),
+                "examples/disagg.ini documents key '{key}' the parser does not read"
+            );
+        }
+        for key in DISAGG_KEYS {
+            assert!(
+                documented.contains(&key),
+                "examples/disagg.ini does not document the [disagg] key '{key}'"
             );
         }
     }

@@ -11,7 +11,8 @@
 //!   as sessions arrive and finish, vLLM-style, instead of holding a
 //!   batch together until every member completes.
 
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use crate::workload::{Request, Session};
@@ -183,6 +184,84 @@ impl PrefillChunk {
     }
 }
 
+/// Priority key of a session in the SLO admission queue: class rank
+/// first (interactive before batch), then arrival time, then id. The
+/// f64 arrival is compared by IEEE-754 bit pattern, which preserves
+/// order for the non-negative trace clocks the generator emits — and
+/// makes the whole ordering total and deterministic.
+fn slo_key(s: &Session) -> (u8, u64, u64) {
+    (s.slo.rank(), s.arrival_sec.to_bits(), s.id)
+}
+
+#[derive(Debug, Clone)]
+struct SloEntry {
+    key: (u8, u64, u64),
+    session: Session,
+}
+
+impl PartialEq for SloEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl Eq for SloEntry {}
+
+impl PartialOrd for SloEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for SloEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// SLO-aware admission queue for disaggregated serving
+/// (docs/DISAGG.md): a deterministic min-heap over arrived sessions,
+/// popping [`crate::workload::SloClass::Interactive`] sessions before
+/// `Batch` ones, ties broken by arrival time then id. Differentially
+/// pinned against a naive sorted-vector model in `tests/properties.rs`.
+#[derive(Debug, Default)]
+pub struct SloQueue {
+    heap: BinaryHeap<Reverse<SloEntry>>,
+}
+
+impl SloQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue an arrived session.
+    pub fn push(&mut self, session: Session) {
+        self.heap.push(Reverse(SloEntry { key: slo_key(&session), session }));
+    }
+
+    /// Dequeue the highest-priority session (interactive first, then
+    /// earliest arrival, then lowest id).
+    pub fn pop(&mut self) -> Option<Session> {
+        self.heap.pop().map(|Reverse(e)| e.session)
+    }
+
+    /// The session [`Self::pop`] would return, without removing it.
+    pub fn peek(&self) -> Option<&Session> {
+        self.heap.peek().map(|Reverse(e)| &e.session)
+    }
+
+    /// Sessions queued.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
 /// Iteration-level continuous batcher over simulated decode steps.
 ///
 /// Holds the arrival-ordered backlog of not-yet-admitted sessions and the
@@ -201,6 +280,9 @@ pub struct StepBatcher {
     max_active: usize,
     chunk_tokens: usize,
     backlog: VecDeque<Session>,
+    /// Arrived-but-unadmitted sessions under SLO-aware admission
+    /// ([`Self::admit_slo`]); always empty under plain [`Self::admit`].
+    slo_queue: SloQueue,
     active: Vec<ActiveSession>,
     completed: usize,
     retired: Vec<u64>,
@@ -222,6 +304,7 @@ impl StepBatcher {
             max_active,
             chunk_tokens,
             backlog: sessions.into(),
+            slo_queue: SloQueue::new(),
             active: Vec::new(),
             completed: 0,
             retired: Vec::new(),
@@ -262,6 +345,33 @@ impl StepBatcher {
         newly
     }
 
+    /// SLO-aware admission (docs/DISAGG.md): every backlog session that
+    /// has arrived by `now_sec` moves into the priority queue, then the
+    /// queue pops into free slots — interactive sessions first, ties by
+    /// arrival then id. With every session in one class this admits the
+    /// exact set plain [`Self::admit`] would (the queue key degenerates
+    /// to arrival order), which is what the no-SLO golden pins rely on.
+    /// Never mix `admit` and `admit_slo` on one batcher: plain `admit`
+    /// bypasses sessions already staged in the queue.
+    pub fn admit_slo(&mut self, now_sec: f64) -> Vec<Session> {
+        while self.backlog.front().is_some_and(|s| s.arrival_sec <= now_sec) {
+            let s = self.backlog.pop_front().unwrap();
+            self.slo_queue.push(s);
+        }
+        let mut newly = Vec::new();
+        while self.active.len() < self.max_active {
+            match self.slo_queue.pop() {
+                Some(s) => {
+                    newly.push(s.clone());
+                    let prefill_done = if self.chunk_tokens == 0 { s.prefill } else { 0 };
+                    self.active.push(ActiveSession { session: s, prefill_done, generated: 0 });
+                }
+                None => break,
+            }
+        }
+        newly
+    }
+
     /// The sessions decoding this step, in admission order.
     pub fn active(&self) -> &[ActiveSession] {
         &self.active
@@ -289,13 +399,27 @@ impl StepBatcher {
     /// `tests/serving_invariants.rs`). Returns an empty plan when
     /// chunking is off.
     pub fn plan_chunks(&mut self, budget_tokens: usize) -> Vec<PrefillChunk> {
+        self.plan_chunks_where(budget_tokens, |_| false)
+    }
+
+    /// [`Self::plan_chunks`] with a preemption filter (docs/DISAGG.md):
+    /// sessions for which `skip` returns true are passed over without a
+    /// chunk — their prefix cursor does not move and they consume no
+    /// budget, so the skipped chunk is re-planned (identically, from the
+    /// same `start`) on the next step that stops skipping it. With a
+    /// never-skip filter this is exactly `plan_chunks`.
+    pub fn plan_chunks_where(
+        &mut self,
+        budget_tokens: usize,
+        skip: impl Fn(&ActiveSession) -> bool,
+    ) -> Vec<PrefillChunk> {
         let mut out = Vec::new();
         if self.chunk_tokens == 0 {
             return out;
         }
         let mut left = budget_tokens;
         for a in &mut self.active {
-            if a.prefill_complete() {
+            if a.prefill_complete() || skip(a) {
                 continue;
             }
             let take = self.chunk_tokens.min(a.prefill_remaining());
@@ -309,6 +433,25 @@ impl StepBatcher {
             });
             a.prefill_done += take;
             left -= take;
+        }
+        out
+    }
+
+    /// Drain every prefill-complete active session — the disaggregated
+    /// prefill pool's handoff point (docs/DISAGG.md): sessions leave
+    /// this batcher the moment their prompt is fully prefilled and
+    /// continue their decode phase in the decode pool, so they neither
+    /// emit tokens nor count as completed here. Admission order is
+    /// preserved. The colocated loop never calls this.
+    pub fn take_prefilled(&mut self) -> Vec<Session> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].prefill_complete() {
+                out.push(self.active.remove(i).session);
+            } else {
+                i += 1;
+            }
         }
         out
     }
@@ -355,27 +498,40 @@ impl StepBatcher {
         self.completed
     }
 
-    /// Sessions still waiting for admission.
+    /// Sessions still waiting for admission (not-yet-arrived backlog
+    /// plus anything staged in the SLO queue).
     pub fn backlog_len(&self) -> usize {
-        self.backlog.len()
+        self.backlog.len() + self.slo_queue.len()
     }
 
     /// True once every session has been admitted and retired.
     pub fn done(&self) -> bool {
-        self.backlog.is_empty() && self.active.is_empty()
+        self.backlog.is_empty() && self.slo_queue.is_empty() && self.active.is_empty()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::SloClass;
 
     fn req(id: u64) -> Request {
         Request { id, n_ctx: 128, seed: id | 1 }
     }
 
     fn sess(id: u64, arrival: f64, decode: usize) -> Session {
-        Session { id, arrival_sec: arrival, prefill: 1024, decode_tokens: decode, shared_prefix: 0 }
+        Session {
+            id,
+            arrival_sec: arrival,
+            prefill: 1024,
+            decode_tokens: decode,
+            shared_prefix: 0,
+            slo: SloClass::Batch,
+        }
+    }
+
+    fn sess_slo(id: u64, arrival: f64, slo: SloClass) -> Session {
+        Session { slo, ..sess(id, arrival, 4) }
     }
 
     #[test]
@@ -506,6 +662,90 @@ mod tests {
         assert_eq!(b.drain_retired(), vec![1]);
         assert!(b.drain_retired().is_empty(), "drain is one-shot");
         assert!(b.done());
+    }
+
+    #[test]
+    fn slo_queue_orders_class_then_arrival_then_id() {
+        let mut q = SloQueue::new();
+        q.push(sess_slo(3, 0.5, SloClass::Batch));
+        q.push(sess_slo(1, 0.9, SloClass::Interactive));
+        q.push(sess_slo(2, 0.1, SloClass::Batch));
+        q.push(sess_slo(0, 0.9, SloClass::Interactive)); // id tie-break
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peek().unwrap().id, 0);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|s| s.id).collect();
+        // Interactive first (arrival tie broken by id), then batch by arrival.
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn admit_slo_prioritizes_interactive_and_matches_admit_when_uniform() {
+        // An interactive session that arrived *later* than two batch
+        // sessions jumps the queue when only one slot is free.
+        let trace = vec![
+            sess_slo(0, 0.0, SloClass::Batch),
+            sess_slo(1, 0.1, SloClass::Batch),
+            sess_slo(2, 0.2, SloClass::Interactive),
+        ];
+        let mut b = StepBatcher::new(trace, 1, 0);
+        let newly = b.admit_slo(0.5);
+        assert_eq!(newly.iter().map(|s| s.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.backlog_len(), 2, "bypassed sessions stay staged in the queue");
+        assert!(!b.done());
+        b.advance_step();
+        // All-one-class traces admit exactly like plain admit().
+        let uni: Vec<Session> = (0..4).map(|i| sess(i, 0.1 * i as f64, 2)).collect();
+        let mut a = StepBatcher::new(uni.clone(), 2, 0);
+        let mut s = StepBatcher::new(uni, 2, 0);
+        let ids = |v: Vec<Session>| v.iter().map(|x| x.id).collect::<Vec<_>>();
+        assert_eq!(ids(a.admit(1.0)), ids(s.admit_slo(1.0)));
+        a.advance_step();
+        s.advance_step();
+        assert_eq!(ids(a.admit(1.0)), ids(s.admit_slo(1.0)));
+    }
+
+    #[test]
+    fn plan_chunks_where_skips_without_spending_budget_and_replans_identically() {
+        let mut b = StepBatcher::new(vec![sess(0, 0.0, 1), sess(1, 0.0, 1)], 2, 512);
+        b.admit(0.0);
+        // Budget 512 with session 0 preempted: session 1 takes the
+        // budget session 0 would have consumed.
+        let chunks = b.plan_chunks_where(512, |a| a.session.id == 0);
+        assert_eq!(chunks, vec![PrefillChunk { id: 1, start: 0, end: 512 }]);
+        // Lifting the preemption re-plans session 0's chunk from the
+        // same start — exactly once, never duplicated.
+        let chunks = b.plan_chunks_where(512, |_| false);
+        assert_eq!(chunks, vec![PrefillChunk { id: 0, start: 0, end: 512 }]);
+        // A never-skip filter is plan_chunks.
+        let rest = b.plan_chunks(usize::MAX);
+        assert_eq!(
+            rest,
+            vec![
+                PrefillChunk { id: 0, start: 512, end: 1024 },
+                PrefillChunk { id: 1, start: 512, end: 1024 },
+            ]
+        );
+    }
+
+    #[test]
+    fn take_prefilled_drains_ready_sessions_without_completing_them() {
+        let mut b = StepBatcher::new(vec![sess(0, 0.0, 4), sess(1, 0.0, 4)], 2, 512);
+        b.admit(0.0);
+        assert!(b.take_prefilled().is_empty(), "nothing prefilled yet");
+        b.credit_prefix(0, 1024);
+        let handed = b.take_prefilled();
+        assert_eq!(handed.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(b.active().len(), 1, "session 1 still streaming");
+        assert_eq!(b.completed(), 0, "handoff is not completion");
+        b.plan_chunks(usize::MAX);
+        b.plan_chunks(usize::MAX);
+        assert_eq!(b.take_prefilled().len(), 1);
+        assert!(b.done(), "drained batcher is done");
+        // Monolithic admission hands off immediately after the charge.
+        let mut m = StepBatcher::new(vec![sess(2, 0.0, 4)], 1, 0);
+        m.admit(0.0);
+        assert_eq!(m.take_prefilled().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,1258 @@
+//! Disaggregated prefill/decode serving (docs/DISAGG.md): the
+//! DistServe/Splitwise-style production architecture in which prompt
+//! processing and token generation run on *separate* device pools,
+//! connected by the cluster layer's ring-link interconnect model.
+//!
+//! The pipeline per session: admit → prefill pool (SLO-priority
+//! admission, chunked or monolithic prompt streaming) → KV handoff (the
+//! session's KV blocks move to the decode pool as a point-to-point
+//! interconnect transfer, with blocks already resident on the decode
+//! side credited to zero bytes) → decode pool (continuous-batching
+//! decode to completion). Each pool is a [`ClusterExecutor`] over a
+//! [`ClusterTopology`] tagged with its [`PoolKind`]; the two pools
+//! advance independent simulated clocks in event lockstep — the pool
+//! whose clock trails runs its next step first, so a decode step can
+//! never consume a handoff the prefill timeline has not produced yet.
+//!
+//! Why this pays: prefill is compute-bound and decode is
+//! bandwidth-bound, so colocating them makes long prompts stall every
+//! decode stream (the TTFT/TPOT interference the chunked-prefill work
+//! only softens). Splitting the pools removes the interference
+//! entirely, lets the prefill pool admit interactive sessions ahead of
+//! batch ones ([`crate::coordinator::batcher::SloQueue`]), and lets it
+//! preempt batch prefill chunks when the interactive TTFT objective is
+//! at risk — at the price of the KV handoff, which is exactly what the
+//! interconnect transfer charge models. A colocated configuration
+//! (`prefill_devices = 0`) delegates wholly to the historical
+//! `serve`/`cluster` paths and reproduces their output byte for byte
+//! (the golden pins in `tests/serving_loop.rs`/`tests/cluster_serving.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterTopology, PoolKind, ShardPlan, ShardStrategy};
+use crate::driver::{self, SimDriver};
+use crate::mapping::Policy;
+use crate::mem::{block_bytes, prompt_keys, KvPool};
+use crate::metrics::{percentile, Table};
+use crate::topology::Topology;
+use crate::util::json::Json;
+use crate::workload::{Session, SessionGenerator, SloClass};
+
+use super::advisor;
+use super::batcher::{PrefillChunk, StepBatcher};
+use super::executor::{ClusterExecutor, StepExecutor};
+use super::router::SessionRouter;
+use super::service::{serve_decode_cluster_with, serve_decode_with, ServeConfig, ServeStats};
+
+/// Configuration of one disaggregated serving run: the base serving
+/// knobs plus the pool split, interconnect, and SLO policy. Maps to the
+/// `[disagg]` INI section ([`crate::config::DISAGG_KEYS`]).
+#[derive(Debug, Clone)]
+pub struct DisaggConfig {
+    /// The base serving configuration (geometry, trace, loop knobs) —
+    /// the `[serve]`/`[attention]` sections of an experiment file.
+    pub serve: ServeConfig,
+    /// Devices in the prefill pool. `0` = colocated: no prefill pool,
+    /// the decode pool serves both phases through the historical
+    /// `serve`/`cluster` code paths, byte for byte.
+    pub prefill_devices: usize,
+    /// Devices in the decode pool (each pool shards its launches at
+    /// `tp = pool size`; both sizes must divide the model's KV heads).
+    pub decode_devices: usize,
+    /// Interconnect bandwidth between (and within) pools in GB/s — the
+    /// rate a session's KV blocks cross at handoff.
+    pub link_gbs: f64,
+    /// Interconnect hop latency in microseconds.
+    pub link_latency_us: f64,
+    /// Percentage of sessions drawn as [`SloClass::Interactive`]
+    /// (dedicated RNG stream; `0` disables SLO classes entirely and the
+    /// trace is the exact no-SLO trace).
+    pub interactive_pct: f64,
+    /// Interactive TTFT objective in ms. When an interactive session's
+    /// prefill has been pending for more than half this objective, the
+    /// prefill pool preempts batch chunk streaming for the step
+    /// (docs/DISAGG.md §5). `0` disables preemption.
+    pub ttft_slo_ms: f64,
+}
+
+impl Default for DisaggConfig {
+    fn default() -> Self {
+        DisaggConfig {
+            serve: ServeConfig::default(),
+            prefill_devices: 1,
+            decode_devices: 1,
+            link_gbs: crate::cluster::DEFAULT_LINK_BYTES_PER_SEC / 1e9,
+            link_latency_us: crate::cluster::DEFAULT_LINK_LATENCY_SEC * 1e6,
+            interactive_pct: 30.0,
+            ttft_slo_ms: 0.0,
+        }
+    }
+}
+
+impl DisaggConfig {
+    /// True when no dedicated prefill pool exists (the historical
+    /// colocated deployment).
+    pub fn colocated(&self) -> bool {
+        self.prefill_devices == 0
+    }
+
+    /// Interconnect bandwidth in bytes/second.
+    pub fn link_bytes_per_sec(&self) -> f64 {
+        self.link_gbs * 1e9
+    }
+
+    /// Interconnect hop latency in seconds.
+    pub fn link_latency_sec(&self) -> f64 {
+        self.link_latency_us * 1e-6
+    }
+
+    /// Check the knobs are internally consistent on top of
+    /// [`ServeConfig::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        self.serve.validate()?;
+        if self.decode_devices == 0 {
+            return Err("decode_devices must be > 0".into());
+        }
+        let pools =
+            [("prefill_devices", self.prefill_devices), ("decode_devices", self.decode_devices)];
+        for (what, n) in pools {
+            if n > 0 && self.serve.h_k % n != 0 {
+                return Err(format!(
+                    "{what} ({n}) must divide h_k ({}): each pool shards at tp = pool size \
+                     and KV heads are never split",
+                    self.serve.h_k
+                ));
+            }
+        }
+        if self.link_gbs.is_nan() || self.link_gbs <= 0.0 {
+            return Err("link_gbs must be > 0".into());
+        }
+        if self.link_latency_us.is_nan() || self.link_latency_us < 0.0 {
+            return Err("link_latency_us must be >= 0".into());
+        }
+        if !(0.0..=100.0).contains(&self.interactive_pct) {
+            return Err(format!("interactive_pct ({}) must be in [0, 100]", self.interactive_pct));
+        }
+        if self.ttft_slo_ms.is_nan() || self.ttft_slo_ms < 0.0 {
+            return Err("ttft_slo_ms must be >= 0".into());
+        }
+        Ok(())
+    }
+
+    /// Full (uncredited) KV bytes of one session's handoff: the KV
+    /// cache of its prompt, clamped to the deployment's KV capacity.
+    pub fn session_kv_bytes(&self, prefill: usize) -> u64 {
+        let tokens = prefill.min(self.serve.kv_cap) as u64;
+        let per_token = 2 * self.serve.h_k as u64 * self.serve.d_head as u64;
+        tokens * per_token * self.serve.dtype_bytes as u64
+    }
+}
+
+/// Per-SLO-class latency/volume stats of one disaggregated run.
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    /// Sessions of this class that reached their first decode token.
+    pub sessions: usize,
+    /// Decode tokens emitted by this class.
+    pub tokens: u64,
+    /// Median time-to-first-token (ms): arrival → first decode token,
+    /// across prefill, handoff, and decode-pool queueing.
+    pub ttft_p50_ms: f64,
+    /// 99th-percentile time-to-first-token (ms) — the SLO metric
+    /// preemption protects for the interactive class.
+    pub ttft_p99_ms: f64,
+    /// Median time-per-output-token (ms) on the decode pool.
+    pub tpot_p50_ms: f64,
+    /// 99th-percentile time-per-output-token (ms).
+    pub tpot_p99_ms: f64,
+}
+
+impl ClassStats {
+    fn from_samples(ttft_ms: &[f64], tpot_ms: &[f64], tokens: u64) -> ClassStats {
+        ClassStats {
+            sessions: ttft_ms.len(),
+            tokens,
+            ttft_p50_ms: percentile(ttft_ms, 0.50),
+            ttft_p99_ms: percentile(ttft_ms, 0.99),
+            tpot_p50_ms: percentile(tpot_ms, 0.50),
+            tpot_p99_ms: percentile(tpot_ms, 0.99),
+        }
+    }
+
+    /// JSON rendering (stable key order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sessions", Json::num(self.sessions as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("ttft_p50_ms", Json::num(self.ttft_p50_ms)),
+            ("ttft_p99_ms", Json::num(self.ttft_p99_ms)),
+            ("tpot_p50_ms", Json::num(self.tpot_p50_ms)),
+            ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
+        ])
+    }
+}
+
+/// The disaggregation-specific counters of one run — absent
+/// (`None` in [`DisaggStats::extras`]) on a colocated run, whose JSON
+/// must stay byte-identical to the historical serving output.
+#[derive(Debug, Clone)]
+pub struct DisaggExtras {
+    /// Devices in the prefill pool.
+    pub prefill_devices: usize,
+    /// Devices in the decode pool.
+    pub decode_devices: usize,
+    /// Sessions handed off prefill → decode.
+    pub handoffs: u64,
+    /// Summed uncredited KV bytes of every handoff.
+    pub handoff_total_bytes: u64,
+    /// KV bytes actually moved over the interconnect.
+    pub handoff_transferred_bytes: u64,
+    /// KV bytes credited because the blocks were already resident on
+    /// the decode side (shared prefixes) — never transferred.
+    pub handoff_credited_bytes: u64,
+    /// Summed interconnect transfer time of every handoff (overlaps
+    /// pool compute; it delays only the session's decode admission).
+    pub handoff_sec: f64,
+    /// Steps on which batch chunk streaming was preempted to protect
+    /// the interactive TTFT objective.
+    pub preemptions: u64,
+    /// Steps the prefill pool executed.
+    pub prefill_steps: usize,
+    /// Steps the decode pool executed.
+    pub decode_steps: usize,
+    /// Interactive-class latency stats.
+    pub interactive: ClassStats,
+    /// Batch-class latency stats.
+    pub batch: ClassStats,
+}
+
+impl DisaggExtras {
+    /// JSON rendering (stable key order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prefill_devices", Json::num(self.prefill_devices as f64)),
+            ("decode_devices", Json::num(self.decode_devices as f64)),
+            ("handoffs", Json::num(self.handoffs as f64)),
+            ("handoff_total_bytes", Json::num(self.handoff_total_bytes as f64)),
+            ("handoff_transferred_bytes", Json::num(self.handoff_transferred_bytes as f64)),
+            ("handoff_credited_bytes", Json::num(self.handoff_credited_bytes as f64)),
+            ("handoff_sec", Json::num(self.handoff_sec)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("prefill_steps", Json::num(self.prefill_steps as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("interactive", self.interactive.to_json()),
+            ("batch", self.batch.to_json()),
+        ])
+    }
+}
+
+/// Outcome of one disaggregated serving run: the base serving stats
+/// (aggregated across both pools) plus the disaggregation extras.
+#[derive(Debug, Clone)]
+pub struct DisaggStats {
+    /// The base serving stats: throughput, latency percentiles,
+    /// conservation counters — same semantics as the colocated loop.
+    pub serve: ServeStats,
+    /// Disaggregation counters; `None` on a colocated run.
+    pub extras: Option<DisaggExtras>,
+}
+
+impl DisaggStats {
+    /// JSON rendering. A colocated run renders *exactly*
+    /// [`ServeStats::to_json`] — the golden equivalence pins compare
+    /// these bytes against the historical `serve`/`cluster` output.
+    pub fn to_json(&self) -> Json {
+        match &self.extras {
+            None => self.serve.to_json(),
+            Some(e) => {
+                let mut obj = match self.serve.to_json() {
+                    Json::Obj(pairs) => pairs,
+                    _ => unreachable!("ServeStats::to_json returns an object"),
+                };
+                obj.push(("disagg".into(), e.to_json()));
+                Json::Obj(obj)
+            }
+        }
+    }
+}
+
+/// One session's prefill → decode KV handoff, as the invariant suite
+/// sees it ([`serve_decode_disagg_traced`]).
+#[derive(Debug, Clone)]
+pub struct HandoffRecord {
+    /// Session id.
+    pub id: u64,
+    /// The session's SLO class.
+    pub slo: SloClass,
+    /// Uncredited KV bytes of the session's blocks.
+    pub total_bytes: u64,
+    /// Bytes moved over the interconnect.
+    pub transferred_bytes: u64,
+    /// Bytes credited (already resident on the decode side).
+    pub credited_bytes: u64,
+    /// Prefill-pool clock when the handoff left.
+    pub sent_sec: f64,
+    /// When the transfer completes — the session may not decode before
+    /// this instant (the no-early-decode invariant).
+    pub ready_sec: f64,
+    /// Decode-pool clock when the session was admitted to decode, once
+    /// it was (`None` on a truncated run that never admitted it).
+    pub admitted_sec: Option<f64>,
+}
+
+/// One batch-preemption event on the prefill pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PreemptionRecord {
+    /// Prefill-pool step index of the event.
+    pub step: usize,
+    /// The batch session whose chunk streaming was paused.
+    pub id: u64,
+    /// The session's prefilled-prefix cursor at the pause — the exact
+    /// `start` its next chunk must re-plan from (exactly once).
+    pub cursor: usize,
+}
+
+/// One per-step conservation audit row: every session is in exactly one
+/// of these places, so the counts must always sum to the trace size.
+#[derive(Debug, Clone, Copy)]
+pub struct StepAudit {
+    /// Pool that executed the step.
+    pub pool: PoolKind,
+    /// Sessions not yet admitted to the prefill pool (backlog + SLO
+    /// queue).
+    pub backlog: usize,
+    /// Sessions streaming prompts on the prefill pool.
+    pub prefill_active: usize,
+    /// Sessions in flight between the pools (handoff sent, decode
+    /// admission pending).
+    pub transit: usize,
+    /// Sessions decoding on the decode pool.
+    pub decode_active: usize,
+    /// Sessions fully retired.
+    pub completed: usize,
+}
+
+/// Everything the invariant suite needs to audit one disaggregated run
+/// ([`serve_decode_disagg_traced`]): per-session handoff records, the
+/// full chunk-plan history, preemption events, credited prefill tokens,
+/// and a per-step conservation audit.
+#[derive(Debug, Clone, Default)]
+pub struct DisaggTrace {
+    /// One record per handoff, in handoff order.
+    pub handoffs: Vec<HandoffRecord>,
+    /// Every prefill chunk the prefill pool planned, in plan order.
+    pub chunks: Vec<PrefillChunk>,
+    /// Every batch-preemption event.
+    pub preemptions: Vec<PreemptionRecord>,
+    /// Prompt tokens credited by the prefill-side KV pool per session.
+    pub credited_prefill: Vec<(u64, usize)>,
+    /// Per-step conservation audits.
+    pub audits: Vec<StepAudit>,
+    /// The generated trace (arrival order).
+    pub sessions: Vec<Session>,
+}
+
+/// Run the disaggregated serving loop for one policy through the
+/// process-wide shared driver ([`driver::global`]).
+pub fn serve_decode_disagg(device: &Topology, cfg: &DisaggConfig, policy: Policy) -> DisaggStats {
+    serve_decode_disagg_with(driver::global(), device, cfg, policy)
+}
+
+/// [`serve_decode_disagg`] through an explicit driver (tests, CLI
+/// `--threads`).
+pub fn serve_decode_disagg_with(
+    driver: &SimDriver,
+    device: &Topology,
+    cfg: &DisaggConfig,
+    policy: Policy,
+) -> DisaggStats {
+    serve_decode_disagg_traced(driver, device, cfg, policy).0
+}
+
+/// [`serve_decode_disagg_with`] returning the full audit trace the
+/// invariant suite sweeps (`tests/serving_invariants.rs`). A colocated
+/// configuration delegates to the historical single-device/cluster
+/// serving paths (byte-identical stats, empty trace, `extras: None`).
+pub fn serve_decode_disagg_traced(
+    driver: &SimDriver,
+    device: &Topology,
+    cfg: &DisaggConfig,
+    policy: Policy,
+) -> (DisaggStats, DisaggTrace) {
+    cfg.validate().expect("valid disagg config");
+    if cfg.colocated() {
+        let serve = if cfg.decode_devices == 1 {
+            serve_decode_with(driver, device, &cfg.serve, policy)
+        } else {
+            let cluster = ClusterTopology::homogeneous(
+                device,
+                cfg.decode_devices,
+                cfg.link_bytes_per_sec(),
+                cfg.link_latency_sec(),
+            );
+            let plan = ShardPlan::new(
+                &cfg.serve.base_geometry(),
+                cfg.decode_devices,
+                ShardStrategy::Contiguous,
+            )
+            .expect("validated: decode_devices divides h_k");
+            serve_decode_cluster_with(driver, &cluster, &plan, &cfg.serve, policy)
+        };
+        return (DisaggStats { serve, extras: None }, DisaggTrace::default());
+    }
+    run_disagg_loop(driver, device, cfg, policy)
+}
+
+/// Build one pool's [`PoolKind`]-tagged cluster and its `tp = pool
+/// size` shard plan, asserting the policy's applicability on the
+/// shard-local geometry of every device (mirroring
+/// [`serve_decode_cluster_with`]).
+fn pool_topology(
+    device: &Topology,
+    cfg: &DisaggConfig,
+    kind: PoolKind,
+    n: usize,
+    policy: Policy,
+) -> (ClusterTopology, ShardPlan) {
+    let cluster =
+        ClusterTopology::pool_of(device, n, kind, cfg.link_bytes_per_sec(), cfg.link_latency_sec());
+    let plan = ShardPlan::new(&cfg.serve.base_geometry(), n, ShardStrategy::Contiguous)
+        .expect("validated: pool size divides h_k");
+    let local = plan.local_attn(&cfg.serve.base_geometry());
+    for (i, d) in cluster.devices.iter().enumerate() {
+        assert!(
+            advisor::applicable_policies(d, &local).contains(&policy),
+            "policy {} is not applicable to the {kind}-pool shard-local h_q={} on \
+             device {i}'s {} XCDs",
+            policy.label(),
+            local.h_q,
+            d.num_xcds
+        );
+    }
+    (cluster, plan)
+}
+
+/// A session in flight between the pools.
+#[derive(Debug, Clone)]
+struct Handoff {
+    session: Session,
+    ready_sec: f64,
+    record_idx: usize,
+}
+
+/// A session decoding on the decode pool.
+#[derive(Debug, Clone)]
+struct DecodeSession {
+    session: Session,
+    generated: usize,
+}
+
+/// The two-pool event-lockstep loop body (docs/DISAGG.md §4). The pool
+/// whose clock trails executes its next step first, so every handoff a
+/// decode step could admit already exists: handoffs created later carry
+/// `ready_sec >= prefill_clock > decode_clock`. Charges accumulate one
+/// launch at a time in launch order, same discipline as the colocated
+/// loop, so worker threads can never perturb the summation.
+fn run_disagg_loop(
+    driver: &SimDriver,
+    device: &Topology,
+    cfg: &DisaggConfig,
+    policy: Policy,
+) -> (DisaggStats, DisaggTrace) {
+    let (prefill_cluster, prefill_plan) =
+        pool_topology(device, cfg, PoolKind::Prefill, cfg.prefill_devices, policy);
+    let (decode_cluster, decode_plan) =
+        pool_topology(device, cfg, PoolKind::Decode, cfg.decode_devices, policy);
+    let mut prefill_exec =
+        ClusterExecutor::new(driver, &prefill_cluster, &prefill_plan, &cfg.serve, policy);
+    let mut decode_exec =
+        ClusterExecutor::new(driver, &decode_cluster, &decode_plan, &cfg.serve, policy);
+    // The interconnect both pools hang off: the handoff transfer is a
+    // point-to-point hop on the same ring-link model the all-gather
+    // uses, so `decode_cluster.transfer_sec` prices it.
+    let link = &decode_cluster;
+
+    let serve = &cfg.serve;
+    let mut gen = SessionGenerator::new(
+        serve.seed,
+        serve.arrival_per_sec,
+        serve.prefill_lengths.clone(),
+        serve.decode_tokens.clone(),
+    );
+    if serve.prefix_share_pct > 0.0 {
+        gen = gen.with_prefix_sharing(serve.prefix_share_pct, serve.shared_span());
+    }
+    if cfg.interactive_pct > 0.0 {
+        gen = gen.with_slo_classes(cfg.interactive_pct);
+    }
+    let sessions = gen.take(serve.sessions);
+    let total_sessions = sessions.len();
+    // The session router: every session's phase placement is a pure
+    // function of the deployment shape (property-pinned).
+    let router = SessionRouter::new(true);
+    for s in &sessions {
+        let route = router.route(s);
+        debug_assert_eq!((route.prefill, route.decode), (PoolKind::Prefill, PoolKind::Decode));
+    }
+
+    let mut trace = DisaggTrace { sessions: sessions.clone(), ..DisaggTrace::default() };
+    let mut batcher = StepBatcher::new(sessions, serve.max_active, serve.chunk_tokens);
+    // Each pool holds its own paged KV pool when sharing is enabled:
+    // the prefill side credits resident prefixes against prefill
+    // compute; the decode side credits resident blocks against the
+    // handoff transfer (shared prefixes move across the link once, not
+    // once per sharer).
+    let pool_enabled = serve.kv_pool_enabled();
+    let bb = block_bytes(serve.kv_block_tokens.max(1), serve.h_k, serve.d_head, serve.dtype_bytes);
+    let mut prefill_pool = pool_enabled.then(|| {
+        KvPool::new(
+            block_bytes(serve.kv_block_tokens, serve.h_k, serve.d_head, serve.dtype_bytes),
+            serve.kv_capacity_mb as u64 * 1024 * 1024,
+        )
+    });
+    let mut decode_pool = pool_enabled.then(|| {
+        KvPool::new(
+            block_bytes(serve.kv_block_tokens, serve.h_k, serve.d_head, serve.dtype_bytes),
+            serve.kv_capacity_mb as u64 * 1024 * 1024,
+        )
+    });
+
+    let mut prefill_clock = 0.0f64;
+    let mut decode_clock = 0.0f64;
+    let mut prefill_done = false;
+    let mut prefill_steps = 0usize;
+    let mut decode_steps = 0usize;
+    let mut truncated = false;
+
+    let mut transit: Vec<Handoff> = Vec::new();
+    let mut decode_active: Vec<DecodeSession> = Vec::new();
+    let mut completed = 0usize;
+
+    let mut prefill_sec = 0.0f64;
+    let mut prefill_tokens = 0u64;
+    let mut kv_shared_tokens = 0u64;
+    let mut kv_affine_blocks = 0u64;
+    let mut kv_total_blocks = 0u64;
+    let mut tokens = 0u64;
+    let mut handoff_sec = 0.0f64;
+    let mut preemptions = 0u64;
+    let mut tpot_ms: Vec<f64> = Vec::new();
+    let mut ttft_ms: Vec<f64> = Vec::new();
+    let mut class_tpot: [Vec<f64>; 2] = [Vec::new(), Vec::new()];
+    let mut class_ttft: [Vec<f64>; 2] = [Vec::new(), Vec::new()];
+    let mut class_tokens = [0u64; 2];
+    let cls = |slo: SloClass| slo.rank() as usize;
+
+    loop {
+        if prefill_done && transit.is_empty() && decode_active.is_empty() {
+            break;
+        }
+        if !prefill_done && (batcher.done() || prefill_steps >= serve.max_steps) {
+            prefill_done = true;
+            truncated |= !batcher.done();
+            continue;
+        }
+        // Which pool steps next: the prefill pool when its clock trails
+        // (or the decode pool has nothing it may run yet). A handoff is
+        // only *known* runnable once its ready time is covered by the
+        // prefill timeline — everything the prefill pool still produces
+        // lands at `ready >= prefill_clock`.
+        let min_ready = transit.iter().map(|h| h.ready_sec).fold(f64::INFINITY, f64::min);
+        let decode_runnable = !decode_active.is_empty()
+            || (!transit.is_empty() && (prefill_done || min_ready <= prefill_clock));
+        let run_prefill = !prefill_done && (!decode_runnable || prefill_clock <= decode_clock);
+
+        if run_prefill {
+            // ---- one prefill-pool step ----
+            if batcher.active().is_empty() {
+                if let Some(t) = batcher.next_arrival_sec() {
+                    prefill_clock = prefill_clock.max(t);
+                }
+            }
+            let newly = batcher.admit_slo(prefill_clock);
+            let mut credited: Vec<usize> = Vec::new();
+            if let Some(pool) = prefill_pool.as_mut() {
+                for s in &newly {
+                    let keys = prompt_keys(s.id, s.prefill, s.shared_prefix, serve.kv_block_tokens);
+                    let got = pool.acquire(s.id, &keys);
+                    let t = (got.credited_blocks * serve.kv_block_tokens).min(s.prefill);
+                    kv_shared_tokens += t as u64;
+                    credited.push(t);
+                    trace.credited_prefill.push((s.id, t));
+                }
+            }
+            let mut step_sec = 0.0f64;
+            if serve.chunk_tokens == 0 {
+                // Monolithic prompt charges (credited suffix pricing
+                // when the pool engages — same rule as the colocated
+                // loop).
+                if prefill_pool.is_some() {
+                    let chunks: Vec<PrefillChunk> = newly
+                        .iter()
+                        .zip(&credited)
+                        .filter(|(s, &c)| c < s.prefill)
+                        .map(|(s, &c)| PrefillChunk { id: s.id, start: c, end: s.prefill })
+                        .collect();
+                    if !chunks.is_empty() {
+                        prefill_tokens += chunks.iter().map(|c| c.tokens() as u64).sum::<u64>();
+                        trace.chunks.extend(chunks.iter().copied());
+                        for t in prefill_exec.chunk_charges(&chunks) {
+                            prefill_sec += t;
+                            step_sec += t;
+                        }
+                    }
+                } else if !newly.is_empty() {
+                    let prompts: Vec<usize> = newly.iter().map(|s| s.prefill).collect();
+                    prefill_tokens += prompts.iter().map(|&p| p as u64).sum::<u64>();
+                    trace.chunks.extend(
+                        newly.iter().map(|s| PrefillChunk { id: s.id, start: 0, end: s.prefill }),
+                    );
+                    for t in prefill_exec.prefill_charges(&prompts) {
+                        prefill_sec += t;
+                        step_sec += t;
+                    }
+                }
+            } else {
+                for (s, &c) in newly.iter().zip(&credited) {
+                    if c > 0 {
+                        batcher.credit_prefix(s.id, c);
+                    }
+                }
+                let budget = if serve.step_token_budget == 0 {
+                    usize::MAX
+                } else {
+                    serve.step_token_budget
+                };
+                // SLO preemption (docs/DISAGG.md §5): when an
+                // interactive session's prefill has aged past half the
+                // TTFT objective, this step streams interactive chunks
+                // only — batch cursors freeze in place and re-plan the
+                // identical chunk once the pressure clears.
+                let at_risk = cfg.ttft_slo_ms > 0.0
+                    && batcher.active().iter().any(|a| {
+                        a.session.slo == SloClass::Interactive
+                            && !a.prefill_complete()
+                            && (prefill_clock - a.session.arrival_sec) * 1e3
+                                > 0.5 * cfg.ttft_slo_ms
+                    });
+                let chunks = if at_risk {
+                    let skipped: Vec<(u64, usize)> = batcher
+                        .active()
+                        .iter()
+                        .filter(|a| a.session.slo == SloClass::Batch && !a.prefill_complete())
+                        .map(|a| (a.session.id, a.prefill_done))
+                        .collect();
+                    if !skipped.is_empty() {
+                        preemptions += 1;
+                        trace.preemptions.extend(skipped.iter().map(|&(id, cursor)| {
+                            PreemptionRecord { step: prefill_steps, id, cursor }
+                        }));
+                    }
+                    batcher.plan_chunks_where(budget, |a| a.session.slo == SloClass::Batch)
+                } else {
+                    batcher.plan_chunks(budget)
+                };
+                if !chunks.is_empty() {
+                    prefill_tokens += chunks.iter().map(|c| c.tokens() as u64).sum::<u64>();
+                    trace.chunks.extend(chunks.iter().copied());
+                    for t in prefill_exec.chunk_charges(&chunks) {
+                        prefill_sec += t;
+                        step_sec += t;
+                    }
+                }
+            }
+            prefill_clock += step_sec;
+            // Handoff: prefill-complete sessions leave the pool now.
+            // The transfer charge is point-to-point on the ring link;
+            // blocks already resident on the decode side (a shared
+            // prefix a previous handoff moved) transfer nothing. The
+            // transfer overlaps both pools' compute — it delays only
+            // this session's decode admission.
+            for s in batcher.take_prefilled() {
+                if let Some(pool) = prefill_pool.as_mut() {
+                    pool.release(s.id);
+                }
+                let total_bytes = cfg.session_kv_bytes(s.prefill);
+                let (transferred, credited_b) = match decode_pool.as_mut() {
+                    Some(pool) => {
+                        let keys =
+                            prompt_keys(s.id, s.prefill, s.shared_prefix, serve.kv_block_tokens);
+                        let got = pool.acquire(s.id, &keys);
+                        for &j in &got.inserted {
+                            let (affine, total) = decode_exec.kv_block_affinity(j);
+                            kv_affine_blocks += affine as u64;
+                            kv_total_blocks += total as u64;
+                        }
+                        let t = got.inserted.len() as u64 * bb;
+                        (t.min(total_bytes), total_bytes.saturating_sub(t.min(total_bytes)))
+                    }
+                    None => (total_bytes, 0),
+                };
+                let xfer = link.transfer_sec(transferred as f64);
+                handoff_sec += xfer;
+                let ready_sec = prefill_clock + xfer;
+                trace.handoffs.push(HandoffRecord {
+                    id: s.id,
+                    slo: s.slo,
+                    total_bytes,
+                    transferred_bytes: transferred,
+                    credited_bytes: credited_b,
+                    sent_sec: prefill_clock,
+                    ready_sec,
+                    admitted_sec: None,
+                });
+                let record_idx = trace.handoffs.len() - 1;
+                transit.push(Handoff { session: s, ready_sec, record_idx });
+            }
+            prefill_steps += 1;
+            trace.audits.push(StepAudit {
+                pool: PoolKind::Prefill,
+                backlog: batcher.backlog_len(),
+                prefill_active: batcher.active().len(),
+                transit: transit.len(),
+                decode_active: decode_active.len(),
+                completed,
+            });
+            debug_assert_eq!(
+                batcher.backlog_len()
+                    + batcher.active().len()
+                    + transit.len()
+                    + decode_active.len()
+                    + completed,
+                total_sessions
+            );
+        } else {
+            // ---- one decode-pool step ----
+            if decode_steps >= serve.max_steps {
+                truncated = true;
+                break;
+            }
+            if decode_active.is_empty() {
+                decode_clock = decode_clock.max(min_ready);
+            }
+            // Admit ready handoffs into free slots, earliest ready
+            // first (ties by id — the order is total).
+            while decode_active.len() < serve.max_active {
+                let next = transit
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, h)| h.ready_sec <= decode_clock)
+                    .min_by(|(_, a), (_, b)| {
+                        a.ready_sec
+                            .total_cmp(&b.ready_sec)
+                            .then(a.session.id.cmp(&b.session.id))
+                    })
+                    .map(|(i, _)| i);
+                match next {
+                    Some(i) => {
+                        let h = transit.remove(i);
+                        trace.handoffs[h.record_idx].admitted_sec = Some(decode_clock);
+                        decode_active.push(DecodeSession { session: h.session, generated: 0 });
+                    }
+                    None => break,
+                }
+            }
+            // One iteration-level decode batch: group by bucketed KV
+            // length, one split-KV launch per group (ascending bucket
+            // order, exactly the colocated loop's grouping).
+            let mut grouped: BTreeMap<usize, usize> = BTreeMap::new();
+            for d in &decode_active {
+                let kv = d.session.kv_len(d.generated, serve.kv_cap);
+                *grouped.entry(serve.bucket_of(kv)).or_insert(0) += 1;
+            }
+            let groups: Vec<(usize, usize)> = grouped.into_iter().collect();
+            let mut step_sec = 0.0f64;
+            for t in decode_exec.decode_charges(&groups) {
+                step_sec += t;
+            }
+            decode_clock += step_sec;
+            for d in &mut decode_active {
+                if d.generated == 0 {
+                    let t = (decode_clock - d.session.arrival_sec) * 1e3;
+                    ttft_ms.push(t);
+                    class_ttft[cls(d.session.slo)].push(t);
+                }
+                d.generated += 1;
+                tokens += 1;
+                class_tokens[cls(d.session.slo)] += 1;
+                tpot_ms.push(step_sec * 1e3);
+                class_tpot[cls(d.session.slo)].push(step_sec * 1e3);
+            }
+            decode_active.retain(|d| {
+                let keep = d.generated < d.session.decode_tokens;
+                if !keep {
+                    if let Some(pool) = decode_pool.as_mut() {
+                        pool.release(d.session.id);
+                    }
+                    completed += 1;
+                }
+                keep
+            });
+            decode_steps += 1;
+            trace.audits.push(StepAudit {
+                pool: PoolKind::Decode,
+                backlog: batcher.backlog_len(),
+                prefill_active: batcher.active().len(),
+                transit: transit.len(),
+                decode_active: decode_active.len(),
+                completed,
+            });
+        }
+    }
+
+    let sim_sec = prefill_clock.max(decode_clock);
+    let (l2_hits, l2_misses) = decode_exec.decode_l2();
+    let serve_stats = ServeStats {
+        policy,
+        sessions_completed: completed,
+        tokens,
+        steps: prefill_steps + decode_steps,
+        sim_sec,
+        tokens_per_sec: if sim_sec > 0.0 { tokens as f64 / sim_sec } else { 0.0 },
+        tpot_p50_ms: percentile(&tpot_ms, 0.50),
+        tpot_p99_ms: percentile(&tpot_ms, 0.99),
+        ttft_p50_ms: percentile(&ttft_ms, 0.50),
+        ttft_p99_ms: percentile(&ttft_ms, 0.99),
+        prefill_sec,
+        prefill_tokens,
+        decode_l2_hit_pct: if l2_hits + l2_misses > 0 {
+            100.0 * l2_hits as f64 / (l2_hits + l2_misses) as f64
+        } else {
+            0.0
+        },
+        advisor_consults: prefill_exec.consults() + decode_exec.consults(),
+        distinct_geometries: prefill_exec.distinct_geometries()
+            + decode_exec.distinct_geometries(),
+        kv_shared_tokens,
+        kv_xcd_affinity_pct: if kv_total_blocks > 0 {
+            100.0 * kv_affine_blocks as f64 / kv_total_blocks as f64
+        } else {
+            0.0
+        },
+        truncated,
+    };
+    let extras = DisaggExtras {
+        prefill_devices: cfg.prefill_devices,
+        decode_devices: cfg.decode_devices,
+        handoffs: trace.handoffs.len() as u64,
+        handoff_total_bytes: trace.handoffs.iter().map(|h| h.total_bytes).sum(),
+        handoff_transferred_bytes: trace.handoffs.iter().map(|h| h.transferred_bytes).sum(),
+        handoff_credited_bytes: trace.handoffs.iter().map(|h| h.credited_bytes).sum(),
+        handoff_sec,
+        preemptions,
+        prefill_steps,
+        decode_steps,
+        interactive: ClassStats::from_samples(&class_ttft[0], &class_tpot[0], class_tokens[0]),
+        batch: ClassStats::from_samples(&class_ttft[1], &class_tpot[1], class_tokens[1]),
+    };
+    (DisaggStats { serve: serve_stats, extras: Some(extras) }, trace)
+}
+
+// ---------------------------------------------------------------------
+// Sweep / report / CLI plumbing (mirrors the serve and cluster sweeps)
+// ---------------------------------------------------------------------
+
+/// One disaggregated sweep scenario.
+#[derive(Debug, Clone)]
+pub struct DisaggScenario {
+    /// Row label in the disagg report / figure.
+    pub label: String,
+    /// The run configuration (once per applicable policy).
+    pub cfg: DisaggConfig,
+}
+
+/// The disaggregated serving sweep: a mixed interactive+batch Llama-3
+/// 70B trace served by a colocated baseline and by split pools on the
+/// same device count — the equal-hardware twins the `disagg_serving`
+/// bench compares. `quick` runs the 2-device pair; the full sweep adds
+/// the 4-device pair and an 80%-shared handoff-credit scenario.
+pub fn disagg_scenarios(quick: bool) -> Vec<DisaggScenario> {
+    let serve = ServeConfig {
+        arrival_per_sec: 120.0,
+        sessions: 12,
+        max_active: 8,
+        max_steps: 2400,
+        chunk_tokens: 1024,
+        step_token_budget: 2048,
+        prefill_lengths: vec![2048, 8192],
+        decode_tokens: vec![32, 128],
+        ..ServeConfig::default()
+    };
+    let base = DisaggConfig {
+        serve,
+        prefill_devices: 1,
+        decode_devices: 1,
+        interactive_pct: 30.0,
+        ttft_slo_ms: 40.0,
+        ..DisaggConfig::default()
+    };
+    let mut out = vec![
+        DisaggScenario {
+            label: "llama3-70b colocated x2 arr=120/s".into(),
+            cfg: DisaggConfig { prefill_devices: 0, decode_devices: 2, ..base.clone() },
+        },
+        DisaggScenario {
+            label: "llama3-70b disagg 1p+1d arr=120/s".into(),
+            cfg: base.clone(),
+        },
+    ];
+    if !quick {
+        out.push(DisaggScenario {
+            label: "llama3-70b colocated x4 arr=120/s".into(),
+            cfg: DisaggConfig { prefill_devices: 0, decode_devices: 4, ..base.clone() },
+        });
+        out.push(DisaggScenario {
+            label: "llama3-70b disagg 2p+2d arr=120/s".into(),
+            cfg: DisaggConfig { prefill_devices: 2, decode_devices: 2, ..base.clone() },
+        });
+        out.push(DisaggScenario {
+            label: "llama3-70b disagg 1p+1d 80%-shared arr=120/s".into(),
+            cfg: DisaggConfig {
+                serve: ServeConfig {
+                    kv_block_tokens: 256,
+                    prefix_share_pct: 80.0,
+                    kv_capacity_mb: 1024,
+                    ..base.serve.clone()
+                },
+                ..base
+            },
+        });
+    }
+    out
+}
+
+/// One disagg-report row: a scenario with per-policy stats.
+#[derive(Debug, Clone)]
+pub struct DisaggRow {
+    /// Scenario label.
+    pub label: String,
+    /// One [`DisaggStats`] per applicable policy.
+    pub stats: Vec<DisaggStats>,
+}
+
+/// The disaggregated serving report the `disagg` CLI subcommand emits.
+#[derive(Debug, Clone)]
+pub struct DisaggReport {
+    /// Scenario rows in sweep order.
+    pub rows: Vec<DisaggRow>,
+}
+
+/// Policies applicable to every pool of the deployment: the
+/// intersection over pool shard-local geometries. A colocated config
+/// reduces to the decode pool's set, which is exactly what the
+/// historical `serve`/`cluster` row assembly uses (the golden pins
+/// depend on identical policy lists).
+pub fn disagg_applicable_policies(device: &Topology, cfg: &DisaggConfig) -> Vec<Policy> {
+    let base = cfg.serve.base_geometry();
+    let local_of = |tp: usize| {
+        ShardPlan::new(&base, tp, ShardStrategy::Contiguous)
+            .expect("validated: pool size divides h_k")
+            .local_attn(&base)
+    };
+    let mut pols = advisor::applicable_policies(device, &local_of(cfg.decode_devices));
+    if cfg.prefill_devices > 0 {
+        let pre = advisor::applicable_policies(device, &local_of(cfg.prefill_devices));
+        pols.retain(|p| pre.contains(p));
+    }
+    pols
+}
+
+/// Build one disagg-report row: the scenario served under every policy
+/// applicable to all its pools. The ONE place row assembly lives — the
+/// sweep ([`disagg_report`]) and the CLI's `--config` path both call
+/// it.
+pub fn disagg_row(
+    driver: &SimDriver,
+    device: &Topology,
+    cfg: &DisaggConfig,
+    label: String,
+) -> DisaggRow {
+    let stats = disagg_applicable_policies(device, cfg)
+        .into_iter()
+        .map(|p| serve_decode_disagg_with(driver, device, cfg, p))
+        .collect();
+    DisaggRow { label, stats }
+}
+
+/// The full disaggregated serving report: every sweep scenario under
+/// every applicable policy through one driver (colocated twins share
+/// cache entries with the historical sweeps where geometries coincide).
+pub fn disagg_report(driver: &SimDriver, device: &Topology, quick: bool) -> DisaggReport {
+    let rows = disagg_scenarios(quick)
+        .into_iter()
+        .map(|sc| disagg_row(driver, device, &sc.cfg, sc.label))
+        .collect();
+    DisaggReport { rows }
+}
+
+impl DisaggReport {
+    /// Stats for (row label, policy), for assertions in tests/benches.
+    pub fn stats(&self, label: &str, policy: Policy) -> Option<&DisaggStats> {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)?
+            .stats
+            .iter()
+            .find(|s| s.serve.policy == policy)
+    }
+
+    /// Aligned-table rendering (one table per scenario row).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            let mut t = Table::new(&[
+                "policy",
+                "tokens/s",
+                "int TTFT p99 (ms)",
+                "bat TTFT p99 (ms)",
+                "TTFT p99 (ms)",
+                "TPOT p50 (ms)",
+                "handoffs",
+                "xfer MiB",
+                "credit MiB",
+                "preempt",
+                "sessions",
+            ]);
+            for s in &row.stats {
+                let (int_ttft, bat_ttft, handoffs, xfer, credit, preempt) = match &s.extras {
+                    Some(e) => (
+                        format!("{:.3}", e.interactive.ttft_p99_ms),
+                        format!("{:.3}", e.batch.ttft_p99_ms),
+                        e.handoffs.to_string(),
+                        format!("{:.1}", e.handoff_transferred_bytes as f64 / (1024.0 * 1024.0)),
+                        format!("{:.1}", e.handoff_credited_bytes as f64 / (1024.0 * 1024.0)),
+                        e.preemptions.to_string(),
+                    ),
+                    None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+                };
+                t.row(vec![
+                    s.serve.policy.label().into(),
+                    format!("{:.0}", s.serve.tokens_per_sec),
+                    int_ttft,
+                    bat_ttft,
+                    format!("{:.3}", s.serve.ttft_p99_ms),
+                    format!("{:.3}", s.serve.tpot_p50_ms),
+                    handoffs,
+                    xfer,
+                    credit,
+                    preempt,
+                    format!(
+                        "{}{}",
+                        s.serve.sessions_completed,
+                        if s.serve.truncated { "*" } else { "" }
+                    ),
+                ]);
+            }
+            out.push_str(&format!("== disagg — {} ==\n{}", row.label, t.render()));
+        }
+        if self.rows.iter().any(|r| r.stats.iter().any(|s| s.serve.truncated)) {
+            out.push_str("(* = step budget exhausted before the trace drained)\n");
+        }
+        out
+    }
+
+    /// JSON rendering for `disagg --json` (stable row/policy order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "rows",
+            Json::arr(self.rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("label", Json::str(r.label.clone())),
+                    ("policies", Json::arr(r.stats.iter().map(DisaggStats::to_json))),
+                ])
+            })),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn fast_topo() -> Topology {
+        Topology {
+            name: "mi300x-mini".into(),
+            cus_per_xcd: 8,
+            l2_bytes_per_xcd: 1024 * 1024,
+            hbm_bytes_per_sec: 5.3e12 / 4.75,
+            ..presets::mi300x()
+        }
+    }
+
+    fn tiny_serve() -> ServeConfig {
+        ServeConfig {
+            h_q: 16,
+            h_k: 8,
+            d_head: 64,
+            kv_cap: 8192,
+            kv_bucket: 2048,
+            arrival_per_sec: 2000.0,
+            prefill_lengths: vec![1024, 2048],
+            decode_tokens: vec![4, 12],
+            sessions: 6,
+            max_active: 3,
+            max_steps: 200,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn tiny_disagg() -> DisaggConfig {
+        DisaggConfig {
+            serve: tiny_serve(),
+            prefill_devices: 1,
+            decode_devices: 1,
+            interactive_pct: 50.0,
+            ttft_slo_ms: 0.0,
+            ..DisaggConfig::default()
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let ok = tiny_disagg();
+        ok.validate().unwrap();
+        let bad = DisaggConfig { decode_devices: 0, ..ok.clone() };
+        assert!(bad.validate().is_err());
+        let bad = DisaggConfig { prefill_devices: 3, ..ok.clone() };
+        assert!(bad.validate().unwrap_err().contains("divide h_k"), "tp must divide h_k");
+        let bad = DisaggConfig { link_gbs: 0.0, ..ok.clone() };
+        assert!(bad.validate().is_err());
+        let bad = DisaggConfig { interactive_pct: 140.0, ..ok.clone() };
+        assert!(bad.validate().is_err());
+        let bad = DisaggConfig { ttft_slo_ms: -1.0, ..ok };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn colocated_run_is_byte_identical_to_historical_serve() {
+        let topo = fast_topo();
+        let driver = SimDriver::new(2);
+        let cfg = DisaggConfig {
+            prefill_devices: 0,
+            decode_devices: 1,
+            interactive_pct: 0.0,
+            ..tiny_disagg()
+        };
+        let d = serve_decode_disagg_with(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        assert!(d.extras.is_none(), "colocated runs carry no extras");
+        let s = serve_decode_with(&driver, &topo, &cfg.serve, Policy::SwizzledHeadFirst);
+        assert_eq!(d.to_json().render(), s.to_json().render());
+        // Even with SLO classes drawn, the colocated path is class-blind
+        // and byte-identical (the class draw rides its own RNG stream).
+        let classed = DisaggConfig { interactive_pct: 50.0, ..cfg };
+        let dc = serve_decode_disagg_with(&driver, &topo, &classed, Policy::SwizzledHeadFirst);
+        assert_eq!(dc.to_json().render(), s.to_json().render());
+    }
+
+    #[test]
+    fn disagg_run_completes_and_conserves_sessions() {
+        let topo = fast_topo();
+        let driver = SimDriver::new(2);
+        let cfg = tiny_disagg();
+        let (stats, trace) =
+            serve_decode_disagg_traced(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        assert!(!stats.serve.truncated, "tiny trace drains");
+        assert_eq!(stats.serve.sessions_completed, cfg.serve.sessions);
+        let e = stats.extras.as_ref().expect("disagg extras present");
+        assert_eq!(e.handoffs as usize, cfg.serve.sessions, "every session hands off once");
+        assert!(e.handoff_total_bytes > 0 && e.handoff_sec > 0.0);
+        // Pool disabled: every handoff byte moves over the link.
+        assert_eq!(e.handoff_transferred_bytes, e.handoff_total_bytes);
+        assert_eq!(e.handoff_credited_bytes, 0);
+        // Tokens split per class and sum to the total.
+        assert_eq!(e.interactive.tokens + e.batch.tokens, stats.serve.tokens);
+        // Every decode admission respects its handoff's ready time.
+        for h in &trace.handoffs {
+            let adm = h.admitted_sec.expect("drained run admits every handoff");
+            assert!(adm >= h.ready_sec - 1e-12, "session {} decoded before its KV arrived", h.id);
+            assert!(h.ready_sec >= h.sent_sec);
+        }
+        // Conservation at every step: each session is in exactly one
+        // place.
+        for a in &trace.audits {
+            assert_eq!(
+                a.backlog + a.prefill_active + a.transit + a.decode_active + a.completed,
+                cfg.serve.sessions
+            );
+        }
+        // Prompt conservation: the chunk history covers every prompt
+        // token exactly once (monolithic config: one chunk per session).
+        let mut by_id: BTreeMap<u64, usize> = BTreeMap::new();
+        for c in &trace.chunks {
+            *by_id.entry(c.id).or_insert(0) += c.tokens();
+        }
+        for s in &trace.sessions {
+            assert_eq!(by_id.get(&s.id).copied().unwrap_or(0), s.prefill, "session {}", s.id);
+        }
+    }
+
+    #[test]
+    fn disagg_is_deterministic_across_driver_threads() {
+        let topo = fast_topo();
+        let cfg = DisaggConfig {
+            serve: ServeConfig { chunk_tokens: 256, step_token_budget: 512, ..tiny_serve() },
+            ttft_slo_ms: 20.0,
+            ..tiny_disagg()
+        };
+        let a =
+            serve_decode_disagg_with(&SimDriver::new(1), &topo, &cfg, Policy::SwizzledHeadFirst);
+        let b =
+            serve_decode_disagg_with(&SimDriver::new(8), &topo, &cfg, Policy::SwizzledHeadFirst);
+        assert_eq!(a.to_json().render(), b.to_json().render());
+    }
+
+    #[test]
+    fn shared_prefixes_credit_handoff_bytes() {
+        let topo = fast_topo();
+        let driver = SimDriver::new(2);
+        let cfg = DisaggConfig {
+            serve: ServeConfig {
+                kv_block_tokens: 256,
+                prefix_share_pct: 100.0,
+                kv_capacity_mb: 64,
+                ..tiny_serve()
+            },
+            ..tiny_disagg()
+        };
+        let (stats, trace) =
+            serve_decode_disagg_traced(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        let e = stats.extras.as_ref().unwrap();
+        assert!(e.handoff_credited_bytes > 0, "resident shared blocks transfer nothing");
+        assert!(
+            e.handoff_transferred_bytes + e.handoff_credited_bytes == e.handoff_total_bytes,
+            "every byte is transferred or credited, never both"
+        );
+        // The first sharer moves the shared prefix; later sharers
+        // credit it.
+        let first = &trace.handoffs[0];
+        assert_eq!(first.credited_bytes, 0, "first handoff finds nothing resident");
+        assert!(trace.handoffs.iter().skip(1).any(|h| h.credited_bytes > 0));
+    }
+
+    #[test]
+    fn report_renders_and_scenarios_validate() {
+        for sc in disagg_scenarios(false) {
+            sc.cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", sc.label));
+        }
+        // A tiny two-row report end to end (colocated + disagg).
+        let topo = fast_topo();
+        let driver = SimDriver::new(2);
+        let rows = vec![
+            disagg_row(
+                &driver,
+                &topo,
+                &DisaggConfig { prefill_devices: 0, ..tiny_disagg() },
+                "colo".into(),
+            ),
+            disagg_row(&driver, &topo, &tiny_disagg(), "disagg".into()),
+        ];
+        let report = DisaggReport { rows };
+        let text = report.render();
+        assert!(text.contains("== disagg — colo =="), "{text}");
+        assert!(text.contains("int TTFT p99"), "{text}");
+        let json = report.to_json().render();
+        assert!(json.contains("\"disagg\""), "disagg rows carry extras: {json}");
+        assert!(report.stats("disagg", Policy::SwizzledHeadFirst).is_some());
+    }
+}

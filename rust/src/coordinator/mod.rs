@@ -42,6 +42,7 @@
 
 pub mod advisor;
 pub mod batcher;
+pub mod disagg;
 pub mod executor;
 pub mod router;
 pub mod service;
@@ -50,9 +51,17 @@ pub use advisor::{
     advise, advise_decode, advise_decode_with, advise_with, applicable_policies, pick_num_splits,
     Advice,
 };
-pub use batcher::{ActiveSession, Batch, BatcherCore, BatcherConfig, PrefillChunk, StepBatcher};
+pub use batcher::{
+    ActiveSession, Batch, BatcherCore, BatcherConfig, PrefillChunk, SloQueue, StepBatcher,
+};
+pub use disagg::{
+    disagg_applicable_policies, disagg_report, disagg_row, disagg_scenarios, serve_decode_disagg,
+    serve_decode_disagg_traced, serve_decode_disagg_with, ClassStats, DisaggConfig, DisaggExtras,
+    DisaggReport, DisaggRow, DisaggScenario, DisaggStats, DisaggTrace, HandoffRecord,
+    PreemptionRecord, StepAudit,
+};
 pub use executor::{ClusterExecutor, SingleDeviceExecutor, StepExecutor};
-pub use router::Router;
+pub use router::{Router, SessionRoute, SessionRouter};
 pub use service::{
     cluster_row, cluster_scenarios, serve_cluster_report, serve_decode, serve_decode_cluster,
     serve_decode_cluster_with, serve_decode_with, serve_report, serve_row, serve_scenarios,

@@ -1,10 +1,19 @@
-//! Request routing: bucket incoming prefill requests by context length
-//! onto the fixed-shape attention artifacts the AOT step produced.
+//! Request routing, two layers:
+//!
+//! * [`Router`] — bucket incoming prefill requests by context length
+//!   onto the fixed-shape attention artifacts the AOT step produced
+//!   (the live PJRT service path).
+//! * [`SessionRouter`] — route decode serving sessions through a
+//!   disaggregated deployment (docs/DISAGG.md): which pool prefills the
+//!   prompt and which pool decodes, as a pure function of the session
+//!   and the deployment shape. admit → prefill pool → KV handoff →
+//!   decode pool.
 
 use std::collections::BTreeMap;
 
+use crate::cluster::PoolKind;
 use crate::runtime::Manifest;
-use crate::workload::Request;
+use crate::workload::{Request, Session};
 
 /// Maps a request's n_ctx to the artifact that serves it.
 #[derive(Debug, Clone)]
@@ -54,6 +63,55 @@ impl Router {
                 n_ctx: req.n_ctx,
                 max: self.buckets.keys().next_back().copied().unwrap_or(0),
             })
+    }
+}
+
+/// Where a session's two serving phases run in a disaggregated
+/// deployment (docs/DISAGG.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionRoute {
+    /// Pool that prefills the session's prompt.
+    pub prefill: PoolKind,
+    /// Pool that decodes the session's tokens (and so owns its KV cache
+    /// after the handoff).
+    pub decode: PoolKind,
+}
+
+/// Routes decode serving sessions onto device pools. The assignment is
+/// a *total function* of (session, deployment shape): it never depends
+/// on arrival interleaving, queue depth, or any other runtime state —
+/// pinned by the router property tests in `tests/properties.rs`. With a
+/// prefill pool present, every session prefills there and decodes in
+/// the decode pool (its KV blocks move across the interconnect at
+/// handoff); colocated deployments run both phases on the decode pool
+/// and hand off for free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionRouter {
+    disaggregated: bool,
+}
+
+impl SessionRouter {
+    /// A router for a deployment with (`disaggregated = true`) or
+    /// without (`false`, colocated) a dedicated prefill pool.
+    pub fn new(disaggregated: bool) -> Self {
+        SessionRouter { disaggregated }
+    }
+
+    /// True when a dedicated prefill pool exists.
+    pub fn disaggregated(&self) -> bool {
+        self.disaggregated
+    }
+
+    /// The pools serving this session's phases. Deliberately ignores
+    /// everything about the session except that it exists: in this
+    /// deployment model every session of a shape takes the same path,
+    /// so routing is reproducible no matter how arrivals interleave.
+    pub fn route(&self, _session: &Session) -> SessionRoute {
+        if self.disaggregated {
+            SessionRoute { prefill: PoolKind::Prefill, decode: PoolKind::Decode }
+        } else {
+            SessionRoute { prefill: PoolKind::Decode, decode: PoolKind::Decode }
+        }
     }
 }
 
@@ -139,5 +197,32 @@ mod tests {
         let r = Router::from_manifest(&manifest());
         let err = r.route(&req(512)).unwrap_err();
         assert_eq!(err, RouteError::TooLong { n_ctx: 512, max: 256 });
+    }
+
+    #[test]
+    fn session_router_is_shape_determined() {
+        use crate::workload::SloClass;
+        let s = Session {
+            id: 7,
+            arrival_sec: 1.5,
+            prefill: 2048,
+            decode_tokens: 16,
+            shared_prefix: 0,
+            slo: SloClass::Interactive,
+        };
+        let disagg = SessionRouter::new(true);
+        assert!(disagg.disaggregated());
+        assert_eq!(
+            disagg.route(&s),
+            SessionRoute { prefill: PoolKind::Prefill, decode: PoolKind::Decode }
+        );
+        let colo = SessionRouter::new(false);
+        assert_eq!(
+            colo.route(&s),
+            SessionRoute { prefill: PoolKind::Decode, decode: PoolKind::Decode }
+        );
+        // The route ignores per-session fields entirely.
+        let t = Session { id: 99, slo: SloClass::Batch, prefill: 64, ..s.clone() };
+        assert_eq!(disagg.route(&s), disagg.route(&t));
     }
 }

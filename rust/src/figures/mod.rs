@@ -421,6 +421,44 @@ pub fn cluster_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureRe
     }
 }
 
+/// Disaggregated-serving figure (docs/DISAGG.md): interactive TTFT p99
+/// of the prefill/decode-disaggregated serving sweep, one row per
+/// scenario ([`crate::coordinator::disagg_scenarios`]) over pools of
+/// `topo` devices. This is the panel the disaggregation claim lives in:
+/// the disagg rows' interactive tail beats the colocated rows' because
+/// a dedicated prefill pool keeps long prompts out of the decode
+/// steps' way (asserted by the `disagg_serving` bench). Colocated rows
+/// run the historical single-pool loop with no SLO classes, so they
+/// report the overall TTFT p99 — the apples-to-apples baseline tail.
+/// The richer report (per-class TPOT, handoff bytes, preemptions) is
+/// `numa-attn disagg`.
+pub fn disagg_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    let report = crate::coordinator::disagg_report(driver, topo, quick);
+    FigureResult {
+        id: "disagg".into(),
+        title: "Disaggregated prefill/decode interactive TTFT p99 (Llama-3 70B GQA-8)".into(),
+        metric: "interactive TTFT p99 (ms; overall p99 on colocated rows; lower is better)".into(),
+        rows: report
+            .rows
+            .iter()
+            .map(|row| FigureRow {
+                label: row.label.clone(),
+                values: row
+                    .stats
+                    .iter()
+                    .map(|s| {
+                        let v = match &s.extras {
+                            Some(e) => e.interactive.ttft_p99_ms,
+                            None => s.serve.ttft_p99_ms,
+                        };
+                        (s.serve.policy, v)
+                    })
+                    .collect(),
+            })
+            .collect(),
+    }
+}
+
 /// Regenerate every figure (the `numa-attn figure all` path) through one
 /// driver: the whole set is still submitted figure-by-figure, but each
 /// figure's grid fans out across the pool and repeated (point, policy)
@@ -440,6 +478,7 @@ pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult
     figs.push(serve_ttft);
     figs.push(serve_share);
     figs.push(cluster_fig(driver, topo, quick));
+    figs.push(disagg_fig(driver, topo, quick));
     figs.push(gemm_motivation(topo));
     figs
 }

@@ -57,7 +57,7 @@ pub mod util;
 pub mod workload;
 
 pub use attn::AttnConfig;
-pub use cluster::{ClusterTopology, ShardPlan, ShardStrategy};
+pub use cluster::{ClusterTopology, PoolKind, ShardPlan, ShardStrategy};
 pub use driver::{ReportCache, SimDriver, SimJob, SimPass};
 pub use mapping::Policy;
 pub use sim::{SimConfig, SimReport};

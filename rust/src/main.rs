@@ -13,6 +13,8 @@
 //!               (docs/SERVING.md); `--live` runs the PJRT prefill demo
 //!   cluster   — run the serving loop tensor-parallel across a cluster of
 //!               devices (two-level NUMA; docs/CLUSTER.md)
+//!   disagg    — run the serving loop disaggregated across prefill and
+//!               decode pools with SLO classes (docs/DISAGG.md)
 //!
 //! Run `numa-attn <subcommand> --help` for flags. The USAGE text below is
 //! pinned against README.md and the parsed flag set by `usage_tests`.
@@ -41,15 +43,16 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|serve_share|cluster|gemm|perf|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|serve_share|cluster|disagg|gemm|perf|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
   numa-attn serve --live [--artifacts DIR] [--requests N] [--max-batch B]
                   [--max-wait-ms MS] [--seed S]
   numa-attn cluster [--quick] [--config FILE] [--topo T] [--tp N] [--json]
+  numa-attn disagg [--quick] [--config FILE] [--topo T] [--json]
 
-driver flags (simulate, decode, figure, serve, cluster):
+driver flags (simulate, decode, figure, serve, cluster, disagg):
   all simulations execute through the shared driver (src/driver): a worker
   pool plus a memoizing report cache keyed on (topology, attention, sim
   config). Results are bit-identical at any worker count.
@@ -106,6 +109,13 @@ cluster flags (the tensor-parallel serving sweep; docs/CLUSTER.md):
   --tp N               restrict the built-in sweep to one TP degree (the
                        tp=1 baseline rows are kept: they anchor the
                        scaling-efficiency column)
+
+disagg flags (the disaggregated prefill/decode sweep; docs/DISAGG.md):
+  --quick              run the two-scenario CI sweep — colocated x2 vs
+                       disagg 1p+1d (default: the full sweep, adding
+                       wider pools and a prefix-sharing row)
+  --config FILE        serve ONE deployment from an experiment file's
+                       [disagg] + [serve] sections instead of the sweep
 ";
 
 fn main() {
@@ -141,6 +151,7 @@ fn run() -> anyhow::Result<()> {
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
+        "disagg" => cmd_disagg(&args),
         other => anyhow::bail!(
             "unknown subcommand '{other}' (expected one of: {})\n{USAGE}",
             SUBCOMMANDS.join(", ")
@@ -151,8 +162,8 @@ fn run() -> anyhow::Result<()> {
 /// Every CLI subcommand. `usage_tests` pins this list against the USAGE
 /// text, the dispatch match above, and README.md, so none of the three
 /// can drift from the others.
-const SUBCOMMANDS: [&str; 7] =
-    ["simulate", "decode", "figure", "explain", "verify", "serve", "cluster"];
+const SUBCOMMANDS: [&str; 8] =
+    ["simulate", "decode", "figure", "explain", "verify", "serve", "cluster", "disagg"];
 
 fn topo_arg(args: &Args) -> anyhow::Result<numa_attn::topology::Topology> {
     let name: String = args.get_or("topo", "mi300x".to_string()).map_err(|e| anyhow::anyhow!(e))?;
@@ -377,6 +388,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "serve_ttft" => vec![figures::serve_ttft_fig(&driver, &topo, quick)],
         "serve_share" => vec![figures::serve_share_fig(&driver, &topo, quick)],
         "cluster" => vec![figures::cluster_fig(&driver, &topo, quick)],
+        "disagg" => vec![figures::disagg_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
         "perf" => return cmd_figure_perf(args),
         "all" => figures::all(&driver, &topo, quick),
@@ -632,6 +644,36 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             report.rows.retain(|r| r.tp == tp || r.tp == 1);
         }
         report
+    };
+    if args.has("json") {
+        println!("{}", report.to_json().render());
+    } else {
+        print!("{}", report.render());
+    }
+    print_driver_stats(&driver);
+    Ok(())
+}
+
+/// The disaggregated prefill/decode serving sweep (docs/DISAGG.md): run
+/// the built-in colocated-vs-disaggregated scenarios — or one `[disagg]`
+/// INI deployment — under every applicable mapping policy, pricing the
+/// KV handoff against the pool interconnect and scheduling the SLO
+/// classes, and emit the deterministic disagg report (tokens/s,
+/// per-class TTFT/TPOT tails, handoff bytes, preemptions per policy).
+fn cmd_disagg(args: &Args) -> anyhow::Result<()> {
+    let a = |e: String| anyhow::anyhow!(e);
+    let driver = driver_arg(args)?;
+    let report = if let Some(path) = args.get::<String>("config").map_err(a)? {
+        let text = std::fs::read_to_string(&path)?;
+        let exp = ExperimentConfig::parse(&text).map_err(a)?;
+        let topo = exp.topology().map_err(a)?;
+        let cfg = exp.disagg_config().map_err(a)?;
+        let label = format!("{path} {}p+{}d", cfg.prefill_devices, cfg.decode_devices);
+        let row = coordinator::disagg_row(&driver, &topo, &cfg, label);
+        coordinator::DisaggReport { rows: vec![row] }
+    } else {
+        let topo = topo_arg(args)?;
+        coordinator::disagg_report(&driver, &topo, args.has("quick"))
     };
     if args.has("json") {
         println!("{}", report.to_json().render());

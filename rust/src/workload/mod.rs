@@ -7,4 +7,4 @@ pub mod requests;
 pub mod sweeps;
 
 pub use presets::ModelPreset;
-pub use requests::{Request, RequestGenerator, Session, SessionGenerator};
+pub use requests::{Request, RequestGenerator, Session, SessionGenerator, SloClass};

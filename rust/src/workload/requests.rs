@@ -58,6 +58,39 @@ impl RequestGenerator {
     }
 }
 
+/// Service-level-objective class of a serving session (docs/DISAGG.md):
+/// how urgently its first token is needed. The disaggregated scheduler
+/// admits `Interactive` sessions ahead of `Batch` ones and may preempt
+/// batch prefill chunks to protect the interactive TTFT tail; the
+/// historical colocated loop ignores the class entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SloClass {
+    /// Latency-sensitive (chat-style) traffic: tight TTFT objective.
+    Interactive,
+    /// Throughput-oriented (summarization/eval-style) traffic: no TTFT
+    /// objective. The default class — a generator with SLO classes
+    /// disabled emits only `Batch` sessions.
+    Batch,
+}
+
+impl SloClass {
+    /// Stable lowercase identifier (JSON/logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Admission priority rank: lower admits first.
+    pub fn rank(&self) -> u8 {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Batch => 1,
+        }
+    }
+}
+
 /// One decode serving session: a prompt that is prefilled once, then
 /// `decode_tokens` iteration-level decode steps over a KV cache that
 /// grows by one token per step. Sessions are what the continuous-batching
@@ -79,6 +112,10 @@ pub struct Session {
     /// Only the paged KV pool reads this (docs/KVCACHE.md); the prefill
     /// and decode cost model sees `prefill` regardless.
     pub shared_prefix: usize,
+    /// The session's SLO class. Only the disaggregated scheduler reads
+    /// this (docs/DISAGG.md); [`SloClass::Batch`] everywhere the class
+    /// draw is disabled.
+    pub slo: SloClass,
 }
 
 impl Session {
@@ -104,6 +141,12 @@ pub struct SessionGenerator {
     share_rng: SplitMix64,
     share_pct: f64,
     share_span: usize,
+    /// Separate stream for the SLO-class draw, same discipline as
+    /// `share_rng`: enabling SLO classes never perturbs the
+    /// arrival/prompt/decode/sharing trace, which is what keeps the
+    /// no-SLO disagg golden pins byte-identical to historical serving.
+    slo_rng: SplitMix64,
+    slo_pct: f64,
     next_id: u64,
     clock_sec: f64,
     arrival_per_sec: f64,
@@ -130,6 +173,8 @@ impl SessionGenerator {
             share_rng: SplitMix64::new(seed ^ 0xA5A5_5A5A_D00D_F00D),
             share_pct: 0.0,
             share_span: 0,
+            slo_rng: SplitMix64::new(seed ^ 0xA11C_E5ED_5105_C1A5),
+            slo_pct: 0.0,
             next_id: 0,
             clock_sec: 0.0,
             arrival_per_sec,
@@ -150,6 +195,17 @@ impl SessionGenerator {
         self
     }
 
+    /// Enable SLO classes: each generated session draws (from the
+    /// dedicated stream) whether it is [`SloClass::Interactive`], with
+    /// probability `pct` percent; the rest are [`SloClass::Batch`]. The
+    /// draw happens only when `pct > 0`, so a class-disabled generator
+    /// emits the exact trace it always did (all-batch).
+    pub fn with_slo_classes(mut self, pct: f64) -> Self {
+        assert!((0.0..=100.0).contains(&pct), "interactive pct must be in [0, 100]");
+        self.slo_pct = pct;
+        self
+    }
+
     /// Generate the next session. Arrival times are non-decreasing: each
     /// call advances the trace clock by an exponential inter-arrival gap
     /// with mean `1 / arrival_per_sec`.
@@ -166,9 +222,21 @@ impl SessionGenerator {
         } else {
             0
         };
+        let slo = if self.slo_pct > 0.0 && self.slo_rng.next_f64() * 100.0 < self.slo_pct {
+            SloClass::Interactive
+        } else {
+            SloClass::Batch
+        };
         let id = self.next_id;
         self.next_id += 1;
-        Session { id, arrival_sec: self.clock_sec, prefill, decode_tokens: decode, shared_prefix }
+        Session {
+            id,
+            arrival_sec: self.clock_sec,
+            prefill,
+            decode_tokens: decode,
+            shared_prefix,
+            slo,
+        }
     }
 
     /// Generate a trace of `n` sessions (arrival-ordered).
@@ -237,6 +305,37 @@ mod tests {
     }
 
     #[test]
+    fn slo_classes_ride_a_separate_stream() {
+        // Enabling SLO classes must not perturb the base trace — or the
+        // prefix-sharing draws, which ride their own stream. The no-SLO
+        // disagg golden pins depend on this.
+        let base = SessionGenerator::new(11, 100.0, vec![1024, 4096], vec![16, 64])
+            .with_prefix_sharing(50.0, 1024)
+            .take(200);
+        let classed = SessionGenerator::new(11, 100.0, vec![1024, 4096], vec![16, 64])
+            .with_prefix_sharing(50.0, 1024)
+            .with_slo_classes(30.0)
+            .take(200);
+        for (a, b) in base.iter().zip(&classed) {
+            assert_eq!((a.id, a.prefill, a.decode_tokens), (b.id, b.prefill, b.decode_tokens));
+            assert_eq!(a.arrival_sec.to_bits(), b.arrival_sec.to_bits());
+            assert_eq!(a.shared_prefix, b.shared_prefix, "share stream undisturbed");
+            assert_eq!(a.slo, SloClass::Batch, "pct = 0 emits only batch sessions");
+        }
+        // The interactive rate lands near the configured percentage.
+        let hits = classed.iter().filter(|s| s.slo == SloClass::Interactive).count();
+        assert!((30..=95).contains(&hits), "~30% of 200 sessions interactive, got {hits}");
+        // 100% is exact, and ranks order interactive first.
+        let all = SessionGenerator::new(5, 100.0, vec![512], vec![8])
+            .with_slo_classes(100.0)
+            .take(50);
+        assert!(all.iter().all(|s| s.slo == SloClass::Interactive));
+        assert!(SloClass::Interactive.rank() < SloClass::Batch.rank());
+        assert_eq!(SloClass::Interactive.name(), "interactive");
+        assert_eq!(SloClass::Batch.name(), "batch");
+    }
+
+    #[test]
     fn session_kv_len_grows_then_caps() {
         let s = Session {
             id: 0,
@@ -244,6 +343,7 @@ mod tests {
             prefill: 1000,
             decode_tokens: 10,
             shared_prefix: 0,
+            slo: SloClass::Batch,
         };
         assert_eq!(s.kv_len(0, 4096), 1000);
         assert_eq!(s.kv_len(5, 4096), 1005);

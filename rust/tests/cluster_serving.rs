@@ -14,7 +14,10 @@
 //!   all-gather included.
 
 use numa_attn::cluster::{ClusterTopology, ShardPlan, ShardStrategy};
-use numa_attn::coordinator::{serve_decode_cluster_with, serve_decode_with, ServeConfig};
+use numa_attn::coordinator::{
+    serve_decode_cluster_with, serve_decode_disagg_with, serve_decode_with, DisaggConfig,
+    ServeConfig,
+};
 use numa_attn::driver::SimDriver;
 use numa_attn::mapping::Policy;
 use numa_attn::topology::{presets, Topology};
@@ -244,6 +247,46 @@ fn golden_sharing_disabled_reproduces_historical_cluster_serve() {
             assert_eq!(
                 got, want,
                 "{threads} workers: {name} diverged from the pool-free cluster serve JSON"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_colocated_disagg_reproduces_cluster_serve_byte_for_byte() {
+    // The cluster half of the disaggregation golden pin (docs/DISAGG.md
+    // §2): a colocated DisaggConfig with `decode_devices = 2` runs the
+    // historical tensor-parallel cluster path on a homogeneous tp=2
+    // cluster with the default interconnect — the DisaggStats JSON
+    // (extras absent) must reproduce the `cluster` serve JSON
+    // byte-for-byte at 1 and 8 driver workers. DisaggConfig's default
+    // link (128 GB/s, 1 µs) is bitwise the cluster module's default, so
+    // the all-gather charges agree exactly.
+    let topo = fast_topo();
+    let base = small_serve();
+    let cfg = DisaggConfig {
+        serve: base.clone(),
+        prefill_devices: 0,
+        decode_devices: 2,
+        interactive_pct: 0.0,
+        ttft_slo_ms: 0.0,
+        ..DisaggConfig::default()
+    };
+    assert!(cfg.colocated());
+    let (cluster, plan) = tp_cluster(&topo, &base, 2);
+    for policy in [Policy::SwizzledHeadFirst, Policy::NaiveHeadFirst] {
+        for threads in [1usize, 8] {
+            let driver = SimDriver::new(threads);
+            let want = serve_decode_cluster_with(&driver, &cluster, &plan, &base, policy)
+                .to_json()
+                .render();
+            let got = serve_decode_disagg_with(&driver, &topo, &cfg, policy);
+            assert!(got.extras.is_none(), "colocated run must not grow extras");
+            assert_eq!(
+                got.to_json().render(),
+                want,
+                "{policy} @ {threads} workers: colocated x2 disagg diverged from the \
+                 historical cluster serve JSON"
             );
         }
     }

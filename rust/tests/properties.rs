@@ -7,11 +7,13 @@ use numa_attn::attn::acc::AccSpread;
 use numa_attn::attn::trace::WgCursor;
 use numa_attn::attn::{AttnConfig, KernelKind, WorkItem};
 use numa_attn::cache::LruCache;
-use numa_attn::cluster::{ShardPlan, ShardStrategy};
+use numa_attn::cluster::{PoolKind, ShardPlan, ShardStrategy};
+use numa_attn::coordinator::{SessionRouter, SloQueue};
 use numa_attn::mapping::{chiplet_swizzle, Mapping, Policy, ALL_POLICIES};
 use numa_attn::mem::KvPool;
 use numa_attn::sched::{xcd_of_slot, Dispatcher};
 use numa_attn::util::rng::SplitMix64;
+use numa_attn::workload::{Session, SloClass};
 
 fn policies(rng: &mut SplitMix64) -> Policy {
     ALL_POLICIES[rng.gen_range(4) as usize]
@@ -736,6 +738,105 @@ fn prop_kvpool_matches_naive_full_prefix_model() {
         assert_eq!(misses, model.misses, "seed {seed}");
         assert_eq!(pool.evictions(), model.evictions, "seed {seed}");
         assert!(pool.peak_used_bytes() >= pool.used_bytes(), "seed {seed}");
+    }
+}
+
+/// A random serving session — arbitrary fields, because the router
+/// property is exactly that it ignores them all.
+fn random_session(rng: &mut SplitMix64, id: u64) -> Session {
+    Session {
+        id,
+        arrival_sec: rng.next_f64() * 10.0,
+        prefill: 1 + rng.gen_range(8192) as usize,
+        decode_tokens: 1 + rng.gen_range(256) as usize,
+        shared_prefix: rng.gen_range(2048) as usize,
+        slo: if rng.gen_range(2) == 0 { SloClass::Interactive } else { SloClass::Batch },
+    }
+}
+
+#[test]
+fn prop_session_route_is_total_function_of_shape() {
+    // The disagg router's contract (docs/DISAGG.md §3): pool assignment
+    // is a total function of (session, deployment shape). Re-routing the
+    // same sessions under ANY arrival interleaving — and with any field
+    // values — yields identical per-session routes.
+    let mut rng = SplitMix64::new(4242);
+    for case in 0..200 {
+        let disagg = rng.gen_range(2) == 0;
+        let router = SessionRouter::new(disagg);
+        assert_eq!(router.disaggregated(), disagg);
+        let want = if disagg {
+            (PoolKind::Prefill, PoolKind::Decode)
+        } else {
+            (PoolKind::Decode, PoolKind::Decode)
+        };
+        let n = 1 + rng.gen_range(32) as usize;
+        let mut sessions: Vec<Session> =
+            (0..n).map(|i| random_session(&mut rng, i as u64)).collect();
+        let baseline: Vec<(u64, _)> = sessions.iter().map(|s| (s.id, router.route(s))).collect();
+        for (id, r) in &baseline {
+            assert_eq!((r.prefill, r.decode), want, "case {case} session {id}");
+        }
+        // Shuffle the interleaving (Fisher-Yates) and re-route: every
+        // session's route must be byte-identical to its baseline.
+        for i in (1..sessions.len()).rev() {
+            let j = rng.gen_range((i + 1) as u64) as usize;
+            sessions.swap(i, j);
+        }
+        for s in &sessions {
+            let base = baseline.iter().find(|(id, _)| *id == s.id).unwrap().1;
+            assert_eq!(router.route(s), base, "case {case}: route depends on interleaving");
+        }
+    }
+}
+
+#[test]
+fn prop_slo_queue_matches_sorted_vector_model() {
+    // Differential pin of the SLO admission queue (interactive first,
+    // then earliest arrival, then lowest id) against a naive
+    // sorted-vector priority model: 10k randomized push/pop ops per
+    // seed, with every pop, peek, and length compared exactly, then a
+    // full drain.
+    let key = |s: &Session| (s.slo.rank(), s.arrival_sec.to_bits(), s.id);
+    for seed in [13u64, 26, 39, 52, 65] {
+        let mut rng = SplitMix64::new(seed);
+        let mut q = SloQueue::new();
+        let mut model: Vec<Session> = Vec::new();
+        let mut next_id = 0u64;
+        let pop_best = |model: &mut Vec<Session>| -> Session {
+            let at = model
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| key(s))
+                .map(|(i, _)| i)
+                .expect("model non-empty");
+            model.remove(at)
+        };
+        for op in 0..10_000 {
+            if q.is_empty() || rng.gen_range(5) < 3 {
+                let s = random_session(&mut rng, next_id);
+                next_id += 1;
+                q.push(s.clone());
+                model.push(s);
+            } else {
+                let got = q.pop().expect("queue non-empty");
+                let want = pop_best(&mut model);
+                assert_eq!(key(&got), key(&want), "seed {seed} op {op}: pop order diverged");
+            }
+            assert_eq!(q.len(), model.len(), "seed {seed} op {op}");
+            assert_eq!(q.is_empty(), model.is_empty(), "seed {seed} op {op}");
+            let want_peek = model.iter().min_by_key(|s| key(s)).map(key);
+            assert_eq!(
+                q.peek().map(key),
+                want_peek,
+                "seed {seed} op {op}: peek diverged"
+            );
+        }
+        while let Some(got) = q.pop() {
+            let want = pop_best(&mut model);
+            assert_eq!(key(&got), key(&want), "seed {seed}: drain order diverged");
+        }
+        assert!(model.is_empty(), "seed {seed}: model must drain with the queue");
     }
 }
 

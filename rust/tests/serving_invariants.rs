@@ -20,10 +20,22 @@
 //!   most the number of prefills completing that step.);
 //! * **Ordering** — a session's first token precedes (or shares the step
 //!   of) its retirement, and TTFT can never exceed the run's span.
+//!
+//! The disaggregated prefill/decode loop (docs/DISAGG.md) adds its own
+//! conservation laws, swept across SLO mix × pool split × chunk size ×
+//! seed in `prop_disagg_conserves_sessions_and_handoff_bytes`: every
+//! session's KV bytes cross the interconnect exactly once (transferred
+//! or credited, never both); completed + active + transit + backlog
+//! covers the trace across BOTH pools at every step; a preempted batch
+//! chunk is re-planned exactly once from its frozen cursor; and no
+//! session decodes before its handoff has landed.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
-use numa_attn::coordinator::{serve_decode_with, PrefillChunk, ServeConfig, StepBatcher};
+use numa_attn::coordinator::{
+    serve_decode_disagg_traced, serve_decode_with, DisaggConfig, PrefillChunk, ServeConfig,
+    StepBatcher,
+};
 use numa_attn::driver::SimDriver;
 use numa_attn::mapping::Policy;
 use numa_attn::mem::{block_bytes, prompt_keys, KvPool};
@@ -428,4 +440,224 @@ fn prop_chunking_never_changes_what_is_served() {
         assert_eq!(s.prefill_tokens, off.prefill_tokens);
         assert_eq!(s.sessions_completed, off.sessions_completed);
     }
+}
+
+/// One cell of the disaggregated grid on the tiny GQA-8 geometry: pool
+/// sizes must divide `h_k = 8`, both step compositions, the SLO mix
+/// from all-batch to all-interactive, and a 100%-shared cell whose
+/// decode-pool prefix hits turn handoff bytes into credits. The
+/// chunked mixed cells set a deliberately unreachable 0.01 ms TTFT
+/// objective so the batch-preemption path fires inside the grid.
+fn tiny_disagg(
+    seed: u64,
+    (prefill_devices, decode_devices): (usize, usize),
+    (chunk, budget): (usize, usize),
+    interactive_pct: f64,
+    share: f64,
+) -> DisaggConfig {
+    let serve = ServeConfig {
+        kv_block_tokens: if share > 0.0 { 256 } else { 0 },
+        prefix_share_pct: share,
+        kv_capacity_mb: if share > 0.0 { 64 } else { 0 },
+        ..tiny_serve(seed, chunk, budget)
+    };
+    DisaggConfig {
+        serve,
+        prefill_devices,
+        decode_devices,
+        interactive_pct,
+        ttft_slo_ms: if chunk > 0 && interactive_pct > 0.0 { 0.01 } else { 0.0 },
+        ..DisaggConfig::default()
+    }
+}
+
+#[test]
+fn prop_disagg_conserves_sessions_and_handoff_bytes() {
+    let driver = SimDriver::new(2);
+    let topo = fast_topo();
+    let mut grid_preemptions = 0u64;
+    for seed in [13u64, 99] {
+        for pools in [(1usize, 1usize), (2, 2), (1, 2)] {
+            for comp in [(0usize, 0usize), (256, 512)] {
+                for pct in [0.0f64, 50.0, 100.0] {
+                    for share in [0.0f64, 100.0] {
+                        let cfg = tiny_disagg(seed, pools, comp, pct, share);
+                        let label = format!(
+                            "seed {seed} pools {pools:?} comp {comp:?} pct {pct} share {share}"
+                        );
+                        let (stats, trace) = serve_decode_disagg_traced(
+                            &driver,
+                            &topo,
+                            &cfg,
+                            Policy::SwizzledHeadFirst,
+                        );
+                        let total = trace.sessions.len();
+                        assert_eq!(total, cfg.serve.sessions, "{label}");
+                        assert!(!stats.serve.truncated, "{label}: trace must drain");
+                        assert_eq!(stats.serve.sessions_completed, total, "{label}");
+                        let extras = stats.extras.as_ref().expect("disagg run has extras");
+                        grid_preemptions += extras.preemptions;
+
+                        // KV handoff: every session's bytes cross the
+                        // link exactly once — transferred or credited
+                        // against resident shared blocks, never both.
+                        assert_eq!(extras.handoffs as usize, total, "{label}");
+                        assert_eq!(trace.handoffs.len(), total, "{label}");
+                        let by_id: HashMap<u64, &Session> =
+                            trace.sessions.iter().map(|s| (s.id, s)).collect();
+                        let mut handed_off = BTreeSet::new();
+                        for h in &trace.handoffs {
+                            assert!(
+                                handed_off.insert(h.id),
+                                "{label}: session {} handed off twice",
+                                h.id
+                            );
+                            let s = by_id[&h.id];
+                            assert_eq!(h.slo, s.slo, "{label}");
+                            assert_eq!(
+                                h.total_bytes,
+                                cfg.session_kv_bytes(s.prefill),
+                                "{label}: session {} handoff must price the whole KV cache",
+                                h.id
+                            );
+                            assert_eq!(
+                                h.transferred_bytes + h.credited_bytes,
+                                h.total_bytes,
+                                "{label}: session {} transferred-or-credited exactly once",
+                                h.id
+                            );
+                            if share == 0.0 {
+                                assert_eq!(h.credited_bytes, 0, "{label}: no pool, no credit");
+                            }
+                            assert!(h.ready_sec >= h.sent_sec, "{label}: link time is causal");
+                            let admitted = h.admitted_sec.unwrap_or_else(|| {
+                                panic!("{label}: session {} never reached decode", h.id)
+                            });
+                            assert!(
+                                admitted >= h.ready_sec - 1e-9,
+                                "{label}: session {} decoded before its handoff landed \
+                                 ({admitted} < {})",
+                                h.id,
+                                h.ready_sec
+                            );
+                        }
+                        assert_eq!(
+                            extras.handoff_total_bytes,
+                            trace.handoffs.iter().map(|h| h.total_bytes).sum::<u64>(),
+                            "{label}"
+                        );
+                        assert_eq!(
+                            extras.handoff_transferred_bytes + extras.handoff_credited_bytes,
+                            extras.handoff_total_bytes,
+                            "{label}: byte totals transferred-or-credited, never both"
+                        );
+                        if share > 0.0 {
+                            assert!(
+                                extras.handoff_credited_bytes > 0,
+                                "{label}: 100%-shared prefixes must credit handoff bytes"
+                            );
+                        }
+
+                        // Cross-pool session conservation at EVERY step:
+                        // backlog + prefill-active + in-transit +
+                        // decode-active + completed covers the trace.
+                        for (i, a) in trace.audits.iter().enumerate() {
+                            assert_eq!(
+                                a.backlog
+                                    + a.prefill_active
+                                    + a.transit
+                                    + a.decode_active
+                                    + a.completed,
+                                total,
+                                "{label}: step audit {i} ({:?} pool) leaks a session",
+                                a.pool
+                            );
+                        }
+                        assert_eq!(trace.audits.last().unwrap().completed, total, "{label}");
+                        assert_eq!(
+                            extras.prefill_steps + extras.decode_steps,
+                            trace.audits.len(),
+                            "{label}: one audit per step"
+                        );
+
+                        // Per-class decode tokens partition the run's.
+                        assert_eq!(
+                            extras.interactive.tokens + extras.batch.tokens,
+                            stats.serve.tokens,
+                            "{label}"
+                        );
+                        let want: u64 =
+                            trace.sessions.iter().map(|s| s.decode_tokens as u64).sum();
+                        assert_eq!(stats.serve.tokens, want, "{label}");
+                        assert_eq!(
+                            extras.interactive.sessions + extras.batch.sessions,
+                            total,
+                            "{label}: every session belongs to exactly one class"
+                        );
+                        if pct == 0.0 {
+                            assert_eq!(extras.interactive.sessions, 0, "{label}");
+                        }
+                        if pct == 100.0 {
+                            assert_eq!(extras.batch.sessions, 0, "{label}");
+                        }
+
+                        // Every prompt token prefills exactly once: the
+                        // chunk stream is gapless from the credited
+                        // offset to the end of the prompt.
+                        let credited: HashMap<u64, usize> =
+                            trace.credited_prefill.iter().copied().collect();
+                        let mut chunks_of: BTreeMap<u64, Vec<(usize, usize)>> = BTreeMap::new();
+                        for c in &trace.chunks {
+                            chunks_of.entry(c.id).or_default().push((c.start, c.end));
+                        }
+                        for s in &trace.sessions {
+                            let start = credited.get(&s.id).copied().unwrap_or(0).min(s.prefill);
+                            let mut cursor = start;
+                            let empty = Vec::new();
+                            for &(st, en) in chunks_of.get(&s.id).unwrap_or(&empty) {
+                                assert_eq!(
+                                    st, cursor,
+                                    "{label}: session {} chunk gap or overlap",
+                                    s.id
+                                );
+                                assert!(en > st && en <= s.prefill, "{label}: chunk bounds");
+                                cursor = en;
+                            }
+                            assert_eq!(
+                                cursor, s.prefill,
+                                "{label}: session {} prompt not covered exactly once",
+                                s.id
+                            );
+                        }
+
+                        // A preempted batch chunk freezes its cursor and
+                        // is re-planned exactly once from that offset
+                        // (dedup to distinct (id, cursor): a chunk kept
+                        // waiting stays in consecutive at-risk records).
+                        let frozen: BTreeSet<(u64, usize)> =
+                            trace.preemptions.iter().map(|p| (p.id, p.cursor)).collect();
+                        for &(id, cursor) in &frozen {
+                            let hits = trace
+                                .chunks
+                                .iter()
+                                .filter(|c| c.id == id && c.start == cursor)
+                                .count();
+                            assert_eq!(
+                                hits, 1,
+                                "{label}: preempted (session {id}, cursor {cursor}) must be \
+                                 re-planned exactly once, got {hits}"
+                            );
+                        }
+                        if !trace.preemptions.is_empty() {
+                            assert!(extras.preemptions > 0, "{label}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        grid_preemptions > 0,
+        "the tight-TTFT chunked cells never exercised the preemption path"
+    );
 }

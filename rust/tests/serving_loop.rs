@@ -17,7 +17,9 @@
 //!   only ever shrinks it.
 
 use numa_attn::attn::AttnConfig;
-use numa_attn::coordinator::{pick_num_splits, serve_decode_with, ServeConfig};
+use numa_attn::coordinator::{
+    pick_num_splits, serve_decode_disagg_with, serve_decode_with, DisaggConfig, ServeConfig,
+};
 use numa_attn::driver::SimDriver;
 use numa_attn::mapping::Policy;
 use numa_attn::topology::{presets, Topology};
@@ -161,6 +163,44 @@ fn shared_serve_json_is_byte_identical_at_threads_1_and_8() {
             parallel.to_json().render(),
             "chunk {chunk}: shared serve stats diverged between 1 and 8 workers"
         );
+    }
+}
+
+#[test]
+fn golden_colocated_disagg_reproduces_historical_serve_byte_for_byte() {
+    // The disaggregation tentpole's golden pin (docs/DISAGG.md §2):
+    // `prefill_devices = 0` means colocated, and with one decode device
+    // the run takes the exact historical single-device serving path —
+    // so the DisaggStats JSON (extras absent) must reproduce the
+    // `serve` JSON byte-for-byte, at 1 and 8 driver workers, under both
+    // step compositions. `interactive_pct` stays 0 so the trace is the
+    // identical all-batch session stream.
+    let topo = fast_topo();
+    for (chunk, budget) in [(0usize, 0usize), (512, 1024)] {
+        let base = ServeConfig { chunk_tokens: chunk, step_token_budget: budget, ..small_serve() };
+        let cfg = DisaggConfig {
+            serve: base.clone(),
+            prefill_devices: 0,
+            decode_devices: 1,
+            interactive_pct: 0.0,
+            ttft_slo_ms: 0.0,
+            ..DisaggConfig::default()
+        };
+        assert!(cfg.colocated());
+        for policy in [Policy::SwizzledHeadFirst, Policy::NaiveHeadFirst] {
+            for threads in [1usize, 8] {
+                let driver = SimDriver::new(threads);
+                let want = serve_decode_with(&driver, &topo, &base, policy).to_json().render();
+                let got = serve_decode_disagg_with(&driver, &topo, &cfg, policy);
+                assert!(got.extras.is_none(), "colocated run must not grow extras");
+                assert_eq!(
+                    got.to_json().render(),
+                    want,
+                    "{policy} @ {threads} workers chunk {chunk}: colocated disagg diverged \
+                     from the historical serve JSON"
+                );
+            }
+        }
     }
 }
 

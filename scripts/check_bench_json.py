@@ -1,24 +1,33 @@
 #!/usr/bin/env python3
-"""Validator for the pinned `bench-v1` perf-trajectory JSON.
+"""Validator for the pinned `bench-v1` perf-trajectory JSON files.
 
-`cargo bench --bench sim_hotpath` writes `BENCH_sim_hotpath.json` at the
-repo root (format: docs/PERF.md). This script checks that the file is a
-structurally valid `bench-v1` document and that the engine's headline
-performance contracts hold:
+The self-checking benches write `BENCH_<suite>.json` at the repo root
+(format: docs/PERF.md): `cargo bench --bench sim_hotpath` pins
+`BENCH_sim_hotpath.json`, `cargo bench --bench disagg_serving` pins
+`BENCH_disagg.json`. This script checks that a file is a structurally
+valid `bench-v1` document — every case carries name / iters / mean_ms /
+min_ms / max_ms / metrics, with sane values (iters >= 1,
+0 < min <= mean <= max) — and then applies the headline contracts of
+the suite the document declares:
 
-  * every case carries name / iters / mean_ms / min_ms / max_ms /
-    metrics, with sane values (iters >= 1, 0 < min <= mean <= max);
-  * the end-to-end engine-throughput case ("engine: ... (SHF)") reports
-    `accesses_per_sec` >= 10e6 — the >=10M demand tile-accesses/s/core
-    floor from DESIGN.md §Perf (hard failure: the Table-2 sweep stops
-    fitting in minutes below it);
-  * the decode-reduce case reports `speedup_vs_reference`, the
-    event-driven engine vs the reference per-tick scan on the same
-    workload. Below 10x this warns rather than fails — the ratio
-    depends on the runner's scheduling noise, and the hard floor is
-    enforced where it is measured, in the self-checking bench run.
+  * suite `sim_hotpath`: the end-to-end engine-throughput case
+    ("engine: ... (SHF)") reports `accesses_per_sec` >= 10e6 — the
+    >=10M demand tile-accesses/s/core floor from DESIGN.md §Perf (hard
+    failure: the Table-2 sweep stops fitting in minutes below it); the
+    decode-reduce case reports `speedup_vs_reference`, the event-driven
+    engine vs the reference per-tick scan on the same workload (below
+    10x warns rather than fails — the ratio depends on the runner's
+    scheduling noise, and the hard floor is enforced where it is
+    measured, in the self-checking bench run);
+  * suite `disagg`: the headline case ("disagg: 1p+1d (SHF)") reports
+    `ttft_speedup_vs_colocated` >= 1.0 and `tokens_ratio_vs_colocated`
+    >= 1.0 — the docs/DISAGG.md claim that the split deployment cuts
+    the interactive first-token tail without losing decode throughput
+    to the handoff (hard failures: the bench asserts the same ordering
+    where it is measured);
+  * any other suite: structural validation only.
 
-Usage: python3 scripts/check_bench_json.py [path/to/BENCH_sim_hotpath.json]
+Usage: python3 scripts/check_bench_json.py [path/to/BENCH_<suite>.json]
 Exits non-zero listing every violation.
 """
 
@@ -30,6 +39,9 @@ ACCESSES_FLOOR = 10e6
 SPEEDUP_FLOOR = 10.0
 THROUGHPUT_CASE = "engine: H=64 N=32K sampled (SHF)"
 SPEEDUP_CASE_PREFIX = "engine: decode-reduce"
+
+DISAGG_HEADLINE_CASE = "disagg: 1p+1d (SHF)"
+DISAGG_RATIO_METRICS = ("ttft_speedup_vs_colocated", "tokens_ratio_vs_colocated")
 
 REQUIRED_CASE_FIELDS = ("name", "iters", "mean_ms", "min_ms", "max_ms", "metrics")
 
@@ -89,30 +101,45 @@ def check(doc, errors, warnings):
             if not isinstance(v, (int, float)) or isinstance(v, bool):
                 fail(errors, f"{where}: metric {k!r} must be a number, got {v!r}")
 
-        if name == THROUGHPUT_CASE:
-            aps = metrics.get("accesses_per_sec")
-            if not isinstance(aps, (int, float)):
-                fail(errors, f"{where}: missing 'accesses_per_sec' metric")
-            elif aps < ACCESSES_FLOOR:
-                fail(
-                    errors,
-                    f"{where}: accesses_per_sec {aps:.3g} below the "
-                    f"{ACCESSES_FLOOR:.0e} floor (DESIGN.md §Perf)",
-                )
-        if name.startswith(SPEEDUP_CASE_PREFIX) and not name.startswith("engine-reference"):
-            speedup = metrics.get("speedup_vs_reference")
-            if not isinstance(speedup, (int, float)):
-                fail(errors, f"{where}: missing 'speedup_vs_reference' metric")
-            elif speedup < SPEEDUP_FLOOR:
-                warnings.append(
-                    f"{where}: speedup_vs_reference {speedup:.2f}x below the "
-                    f"{SPEEDUP_FLOOR:.0f}x target (noisy runner?)"
-                )
+        if doc.get("suite") == "sim_hotpath":
+            if name == THROUGHPUT_CASE:
+                aps = metrics.get("accesses_per_sec")
+                if not isinstance(aps, (int, float)):
+                    fail(errors, f"{where}: missing 'accesses_per_sec' metric")
+                elif aps < ACCESSES_FLOOR:
+                    fail(
+                        errors,
+                        f"{where}: accesses_per_sec {aps:.3g} below the "
+                        f"{ACCESSES_FLOOR:.0e} floor (DESIGN.md §Perf)",
+                    )
+            if name.startswith(SPEEDUP_CASE_PREFIX) and not name.startswith("engine-reference"):
+                speedup = metrics.get("speedup_vs_reference")
+                if not isinstance(speedup, (int, float)):
+                    fail(errors, f"{where}: missing 'speedup_vs_reference' metric")
+                elif speedup < SPEEDUP_FLOOR:
+                    warnings.append(
+                        f"{where}: speedup_vs_reference {speedup:.2f}x below the "
+                        f"{SPEEDUP_FLOOR:.0f}x target (noisy runner?)"
+                    )
+        if doc.get("suite") == "disagg" and name == DISAGG_HEADLINE_CASE:
+            for metric in DISAGG_RATIO_METRICS:
+                ratio = metrics.get(metric)
+                if not isinstance(ratio, (int, float)):
+                    fail(errors, f"{where}: missing {metric!r} metric")
+                elif ratio < 1.0:
+                    fail(
+                        errors,
+                        f"{where}: {metric} {ratio:.3f} below 1.0 — disaggregation "
+                        "lost its headline ordering (docs/DISAGG.md)",
+                    )
 
-    if THROUGHPUT_CASE not in names:
-        fail(errors, f"throughput case {THROUGHPUT_CASE!r} not present")
-    if not any(n.startswith(SPEEDUP_CASE_PREFIX) for n in names):
-        fail(errors, f"no case named {SPEEDUP_CASE_PREFIX!r}...")
+    if doc.get("suite") == "sim_hotpath":
+        if THROUGHPUT_CASE not in names:
+            fail(errors, f"throughput case {THROUGHPUT_CASE!r} not present")
+        if not any(n.startswith(SPEEDUP_CASE_PREFIX) for n in names):
+            fail(errors, f"no case named {SPEEDUP_CASE_PREFIX!r}...")
+    if doc.get("suite") == "disagg" and DISAGG_HEADLINE_CASE not in names:
+        fail(errors, f"headline case {DISAGG_HEADLINE_CASE!r} not present")
 
 
 def main(argv):
