@@ -40,11 +40,18 @@ def chiplet_swizzle(wgid, grid, num_xcd):
     Remaps a linear workgroup id so that ids which the round-robin
     dispatcher sends to the same XCD become *contiguous* in logical space:
     XCD ``x`` processes logical ids ``[x * grid/num_xcd, ...)`` in order.
+
+    Non-divisible grids (``grid % num_xcd != 0``) are balanced: the first
+    ``grid % num_xcd`` XCDs own one extra id each (exactly the
+    round-robin dispatcher's share), keeping the remap bijective instead
+    of colliding as a truncating ``grid // num_xcd`` stride would
+    (mirrors ``rust/src/mapping::chiplet_swizzle``).
     """
     wgids_per_xcd = grid // num_xcd
+    extra = grid % num_xcd  # XCDs [0, extra) own one extra id
     xcd = wgid % num_xcd
     local_wgid = wgid // num_xcd
-    return xcd * wgids_per_xcd + local_wgid
+    return xcd * wgids_per_xcd + min(xcd, extra) + local_wgid
 
 
 def decode_naive_block_first(wid, batch, num_heads, num_blocks, num_xcd):
@@ -126,15 +133,116 @@ _DECODERS = {
 }
 
 
-def decode(policy, wid, batch, num_heads, num_blocks, num_xcd):
-    """Map dispatch slot ``wid`` -> logical work ``(batch, head, row_block)``."""
-    if policy in ("swizzled_block_first", "swizzled_head_first"):
-        if num_heads % num_xcd != 0:
+# ---------------------------------------------------------------------------
+# Composed mapping algebra (mirrors rust/src/mapping/spec.rs).
+#
+# Every mapping is a point ``assign x traversal x order x split``, written
+# as a dash-joined spec string, e.g. ``swz-head-saw-inherit``:
+#   assign    rr | swz            round-robin vs chiplet-swizzled heads
+#   traversal block | head        which dimension varies fastest per XCD
+#   order     lin | saw           intra-head block order: linear, or
+#                                 sawtooth (odd heads walk blocks in
+#                                 reverse — boustrophedon wavefronts)
+#   split     inherit | grouped   flash-decode split placement: reuse the
+#                                 traversal, or force head-first on split
+#                                 grids only (splits of one head
+#                                 contiguous per XCD)
+# The four legacy policies are the ``lin`` + ``inherit`` plane.
+# ---------------------------------------------------------------------------
+
+SPEC_AXES = (("rr", "swz"), ("block", "head"), ("lin", "saw"),
+             ("inherit", "grouped"))
+
+_LEGACY_SPECS = {
+    "naive_block_first": ("rr", "block", "lin", "inherit"),
+    "swizzled_block_first": ("swz", "block", "lin", "inherit"),
+    "naive_head_first": ("rr", "head", "lin", "inherit"),
+    "swizzled_head_first": ("swz", "head", "lin", "inherit"),
+}
+
+
+def parse_spec(name):
+    """Parse a dash-joined composed spec into its 4-axis tuple."""
+    parts = tuple(name.split("-"))
+    if len(parts) != len(SPEC_AXES):
+        raise ValueError(
+            f"composed mapping spec '{name}' must have {len(SPEC_AXES)} "
+            "dash-joined axes: <rr|swz>-<block|head>-<lin|saw>-"
+            "<inherit|grouped>"
+        )
+    for value, valid in zip(parts, SPEC_AXES):
+        if value not in valid:
             raise ValueError(
-                f"{policy} requires num_heads ({num_heads}) divisible by "
-                f"num_xcd ({num_xcd}); see DESIGN.md"
+                f"unknown axis value '{value}' in spec '{name}' "
+                f"(expected one of {'|'.join(valid)})"
             )
-    return _DECODERS[policy](wid, batch, num_heads, num_blocks, num_xcd)
+    return parts
+
+
+def spec_of(policy):
+    """The 4-axis algebra point of a policy name (legacy or composed)."""
+    if policy in _LEGACY_SPECS:
+        return _LEGACY_SPECS[policy]
+    return parse_spec(policy)
+
+
+def decode_spec(spec, wid, batch, num_heads, num_blocks, num_xcd,
+                is_split_grid=False):
+    """Decode one dispatch slot under an algebra point (4-axis tuple).
+
+    On the ``lin`` + ``inherit`` plane both extra axes are identities and
+    the arithmetic reduces exactly to the legacy per-policy decoders
+    above (cross-checked in test_swizzle.py). ``is_split_grid`` marks
+    the block dimension as a flash-decode KV split; only the ``grouped``
+    split placement reads it, forcing head-first traversal there.
+    """
+    assign, traversal, order, split = spec
+    del batch
+    if assign == "swz" and num_heads % num_xcd != 0:
+        raise ValueError(
+            f"spec {'-'.join(spec)} requires num_heads ({num_heads}) "
+            f"divisible by num_xcd ({num_xcd}); see DESIGN.md"
+        )
+    if is_split_grid and split == "grouped":
+        traversal = "head"
+    per_batch = num_heads * num_blocks
+    z = wid // per_batch
+    r = wid % per_batch
+    if traversal == "block":
+        if assign == "rr":
+            h, b = r % num_heads, r // num_heads
+        else:
+            hpx = num_heads // num_xcd
+            x, j = r % num_xcd, r // num_xcd
+            h, b = x * hpx + j % hpx, j // hpx
+    else:
+        if assign == "rr":
+            h, b = r // num_blocks, r % num_blocks
+        else:
+            hpx = num_heads // num_xcd
+            x, j = r % num_xcd, r // num_xcd
+            h, b = x * hpx + j // num_blocks, j % num_blocks
+    if order == "saw" and h % 2 == 1:
+        b = num_blocks - 1 - b
+    return z, h, b
+
+
+def decode(policy, wid, batch, num_heads, num_blocks, num_xcd):
+    """Map dispatch slot ``wid`` -> logical work ``(batch, head, row_block)``.
+
+    ``policy`` is a legacy name (kept on the verbatim per-policy decoders
+    above) or a composed spec string routed through ``decode_spec``.
+    """
+    if policy in _DECODERS:
+        if policy in ("swizzled_block_first", "swizzled_head_first"):
+            if num_heads % num_xcd != 0:
+                raise ValueError(
+                    f"{policy} requires num_heads ({num_heads}) divisible by "
+                    f"num_xcd ({num_xcd}); see DESIGN.md"
+                )
+        return _DECODERS[policy](wid, batch, num_heads, num_blocks, num_xcd)
+    return decode_spec(parse_spec(policy), wid, batch, num_heads, num_blocks,
+                       num_xcd)
 
 
 def xcd_of(wid, num_xcd):
@@ -155,7 +263,11 @@ def decode_split_kv(policy, wid, batch, num_heads, num_splits, num_xcd):
     slices into several L2s whenever ``num_splits % num_xcd != 0``.
 
     Mirrored in Rust by ``Mapping::for_kernel(_, _, DecodeSplitKv, _)``
-    and pinned by the decode golden vectors in
+    (which marks the grid so the ``grouped`` split-placement axis can see
+    it) and pinned by the decode golden vectors in
     ``rust/src/mapping/golden.rs``.
     """
-    return decode(policy, wid, batch, num_heads, num_splits, num_xcd)
+    if policy in _DECODERS:
+        return decode(policy, wid, batch, num_heads, num_splits, num_xcd)
+    return decode_spec(parse_spec(policy), wid, batch, num_heads, num_splits,
+                       num_xcd, is_split_grid=True)

@@ -7,6 +7,8 @@ vectors for the paper's illustrative configuration (8 heads, 128 blocks,
 golden vectors (kept in rust/src/mapping/golden.rs, generated from here).
 """
 
+import itertools
+
 import pytest
 from hypothesis import given, settings, strategies as st
 
@@ -271,3 +273,139 @@ def test_decode_golden_matches_rust():
         (0, 0, 0), (0, 2, 0), (0, 4, 0), (0, 6, 0),
         (0, 1, 0), (0, 3, 0), (0, 5, 0), (0, 7, 0),
     ]
+
+
+# ---------------------------------------------------------------------------
+# The composed mapping algebra (docs/TUNING.md): the four legacy policies
+# are the lin+inherit plane of <rr|swz>-<block|head>-<lin|saw>-
+# <inherit|grouped>; the Rust mirror is mapping::MappingSpec.
+# ---------------------------------------------------------------------------
+
+ALL_SPEC_NAMES = [
+    "-".join(point) for point in itertools.product(*swizzle.SPEC_AXES)
+]
+
+
+def test_algebra_has_16_points_and_parses_round_trip():
+    assert len(ALL_SPEC_NAMES) == 16
+    for name in ALL_SPEC_NAMES:
+        assert "-".join(swizzle.parse_spec(name)) == name
+
+
+@pytest.mark.parametrize("policy", swizzle.POLICIES)
+@pytest.mark.parametrize("cfg", DIVISIBLE_CONFIGS)
+def test_legacy_decoders_lockstep_with_their_algebra_points(policy, cfg):
+    """The verbatim per-policy decoders and decode_spec on the policy's
+    lin+inherit point must agree slot-for-slot — the same pin the Rust
+    side keeps in rust/tests/mapping_algebra.rs."""
+    batch, heads, blocks, xcd = cfg
+    spec = swizzle.spec_of(policy)
+    assert spec[2:] == ("lin", "inherit")
+    for w in range(batch * heads * blocks):
+        legacy = swizzle.decode(policy, w, batch, heads, blocks, xcd)
+        composed = swizzle.decode_spec(spec, w, batch, heads, blocks, xcd)
+        assert legacy == composed, (policy, w)
+        # And on the split-KV grid: inherit means identical arithmetic.
+        legacy = swizzle.decode_split_kv(policy, w, batch, heads, blocks, xcd)
+        composed = swizzle.decode_spec(spec, w, batch, heads, blocks, xcd,
+                                       is_split_grid=True)
+        assert legacy == composed, (policy, w)
+
+
+@pytest.mark.parametrize("name", ALL_SPEC_NAMES)
+@pytest.mark.parametrize("split_grid", [False, True])
+def test_every_algebra_point_is_bijective(name, split_grid):
+    batch, heads, blocks, xcd = 2, 8, 6, 4
+    spec = swizzle.parse_spec(name)
+    grid = [
+        swizzle.decode_spec(spec, w, batch, heads, blocks, xcd,
+                            is_split_grid=split_grid)
+        for w in range(batch * heads * blocks)
+    ]
+    assert len(set(grid)) == len(grid) == batch * heads * blocks
+    for z, h, b in grid:
+        assert 0 <= z < batch and 0 <= h < heads and 0 <= b < blocks
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    heads_mult=st.integers(1, 8),
+    blocks=st.integers(1, 32),
+    xcd=st.sampled_from([2, 4, 8]),
+    name=st.sampled_from(ALL_SPEC_NAMES),
+    split_grid=st.booleans(),
+)
+def test_algebra_bijective_property(batch, heads_mult, blocks, xcd, name,
+                                    split_grid):
+    """Property: bijectivity holds across the whole searched space, on
+    prefill and split-KV grids, for arbitrary divisible geometries (the
+    rr half also for non-divisible ones — heads_mult*xcd - 1 heads)."""
+    spec = swizzle.parse_spec(name)
+    heads = heads_mult * xcd
+    if spec[0] == "rr" and heads > 1:
+        heads -= 1  # exercise the non-divisible space where it is legal
+    total = batch * heads * blocks
+    grid = [
+        swizzle.decode_spec(spec, w, batch, heads, blocks, xcd,
+                            is_split_grid=split_grid)
+        for w in range(total)
+    ]
+    assert len(set(grid)) == total
+
+
+def test_sawtooth_reverses_odd_heads_only():
+    """saw: odd heads walk blocks descending (b -> blocks-1-b), even
+    heads are untouched — head assignment and block sets unchanged."""
+    batch, heads, blocks, xcd = 1, 8, 16, 4
+    for lin_name in ("rr-block-lin-inherit", "swz-head-lin-inherit"):
+        saw_name = lin_name.replace("-lin-", "-saw-")
+        lin, saw = swizzle.parse_spec(lin_name), swizzle.parse_spec(saw_name)
+        for w in range(batch * heads * blocks):
+            z, h, b = swizzle.decode_spec(lin, w, batch, heads, blocks, xcd)
+            zs, hs, bs = swizzle.decode_spec(saw, w, batch, heads, blocks, xcd)
+            assert (zs, hs) == (z, h)
+            assert bs == (blocks - 1 - b if h % 2 == 1 else b)
+
+
+def test_grouped_split_placement_reads_only_split_grids():
+    """grouped: a no-op on prefill grids; on split-KV grids it forces
+    head-first traversal (all splits of one head contiguous)."""
+    batch, heads, splits, xcd = 1, 8, 4, 4
+    inh = swizzle.parse_spec("rr-block-lin-inherit")
+    grp = swizzle.parse_spec("rr-block-lin-grouped")
+    hf = swizzle.parse_spec("rr-head-lin-inherit")
+    for w in range(batch * heads * splits):
+        assert swizzle.decode_spec(grp, w, batch, heads, splits, xcd) == \
+            swizzle.decode_spec(inh, w, batch, heads, splits, xcd)
+        assert swizzle.decode_spec(grp, w, batch, heads, splits, xcd,
+                                   is_split_grid=True) == \
+            swizzle.decode_spec(hf, w, batch, heads, splits, xcd,
+                                is_split_grid=True)
+
+
+def test_spec_parse_errors_name_the_axis():
+    with pytest.raises(ValueError, match="4"):
+        swizzle.parse_spec("rr-block-lin")
+    with pytest.raises(ValueError, match=r"lin\|saw"):
+        swizzle.parse_spec("rr-block-zig-inherit")
+    with pytest.raises(ValueError, match=r"rr\|swz"):
+        swizzle.parse_spec("naive-block-lin-inherit")
+    with pytest.raises(ValueError, match="divisible"):
+        swizzle.decode_spec(swizzle.parse_spec("swz-head-saw-inherit"),
+                            0, 1, 6, 4, 8)
+
+
+def test_chiplet_swizzle_bijective_on_every_grid():
+    """The balanced remap (first grid % xcd XCDs take one extra id) stays
+    bijective for non-divisible grids and reduces to the historical
+    formula on divisible ones — the Rust mirror pins the same property."""
+    for xcd in (2, 4, 8):
+        for grid in range(1, 65):
+            remapped = [swizzle.chiplet_swizzle(w, grid, xcd)
+                        for w in range(grid)]
+            assert sorted(remapped) == list(range(grid)), (grid, xcd)
+            if grid % xcd == 0:
+                per = grid // xcd
+                for w in range(grid):
+                    assert remapped[w] == (w % xcd) * per + w // xcd

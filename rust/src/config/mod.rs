@@ -22,7 +22,8 @@
 //! `[serve]` decode-serving-loop section) is documented in
 //! `examples/experiment.ini` and mirrored by [`ATTENTION_KEYS`] /
 //! [`SIM_KEYS`] / [`SERVE_KEYS`] (plus [`CLUSTER_KEYS`] and
-//! [`DISAGG_KEYS`] for the deployment sections); the
+//! [`DISAGG_KEYS`] for the deployment sections and [`TUNE_KEYS`] for
+//! the mapping autotuner); the
 //! `example_experiment_file_stays_reconciled` test pins that the example
 //! file and this parser stay reconciled, and
 //! `example_serve_file_builds_the_serving_config` pins the worked
@@ -85,6 +86,14 @@ pub const DISAGG_KEYS: [&str; 6] = [
     "ttft_slo_ms",
 ];
 
+/// Every `[tune]` key [`ExperimentConfig::parse`] reads — the mapping
+/// autotuner's search strategy (`numa-attn tune --config`,
+/// docs/TUNING.md). The workload itself comes from `[attention]` +
+/// `[sim]` (kernel selection incl. `kernel = "decode"` + `num_splits`).
+/// The worked key set lives in `examples/tune.ini`, pinned by the
+/// `example_tune_file_stays_reconciled` test.
+pub const TUNE_KEYS: [&str; 2] = ["search", "beam_width"];
+
 /// Top-level experiment file.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -100,6 +109,8 @@ pub struct ExperimentConfig {
     pub cluster: Option<ClusterSection>,
     /// `[disagg]` section (`None` when the file has no such section).
     pub disagg: Option<DisaggSection>,
+    /// `[tune]` section (`None` when the file has no such section).
+    pub tune: Option<TuneSection>,
 }
 
 /// `[attention]` section: the workload geometry.
@@ -222,6 +233,18 @@ pub struct DisaggSection {
     pub ttft_slo_ms: Option<f64>,
 }
 
+/// `[tune]` section: the mapping autotuner's search strategy over the
+/// composed mapping algebra (docs/TUNING.md). The tuned workload comes
+/// from `[attention]` + `[sim]`.
+#[derive(Debug, Clone, Default)]
+pub struct TuneSection {
+    /// Search strategy: `"exhaustive"` (default) or `"beam"`.
+    pub search: Option<String>,
+    /// Legacy-plane survivors a beam search expands (default 2;
+    /// only meaningful with `search = "beam"`).
+    pub beam_width: Option<usize>,
+}
+
 /// Which pass an experiment file requests ([`ExperimentConfig::kernel`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExpKernel {
@@ -311,6 +334,14 @@ impl ExperimentConfig {
         } else {
             None
         };
+        let tune = if ini.has_section("tune") {
+            Some(TuneSection {
+                search: ini.get("tune", "search").map(|s| s.to_string()),
+                beam_width: ini.get_parsed("tune", "beam_width")?,
+            })
+        } else {
+            None
+        };
         Ok(ExperimentConfig {
             topology: ini.get("", "topology").unwrap_or("mi300x").to_string(),
             attention,
@@ -318,6 +349,7 @@ impl ExperimentConfig {
             serve,
             cluster,
             disagg,
+            tune,
         })
     }
 
@@ -519,6 +551,35 @@ impl ExperimentConfig {
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The `[tune]` section's search strategy, mapped onto
+    /// [`crate::coordinator::SearchMode`]: `None` when the file has no
+    /// `[tune]` section (callers apply their own default), an error for
+    /// an unknown strategy name, a zero beam width, or a contradictory
+    /// `beam_width` on an exhaustive search.
+    pub fn tune_mode(&self) -> Result<Option<crate::coordinator::SearchMode>, String> {
+        let Some(t) = &self.tune else { return Ok(None) };
+        match t.search.as_deref().unwrap_or("exhaustive") {
+            "exhaustive" => {
+                if t.beam_width.is_some() {
+                    return Err("tune.beam_width without search = \"beam\" is contradictory: \
+                         an exhaustive search prices every point"
+                        .into());
+                }
+                Ok(Some(crate::coordinator::SearchMode::Exhaustive))
+            }
+            "beam" => {
+                let width = t.beam_width.unwrap_or(2);
+                if width == 0 {
+                    return Err("tune.beam_width must be >= 1".into());
+                }
+                Ok(Some(crate::coordinator::SearchMode::Beam { width }))
+            }
+            other => {
+                Err(format!("unknown tune.search '{other}' (expected exhaustive or beam)"))
+            }
+        }
     }
 }
 
@@ -1147,6 +1208,86 @@ d_head = 64
             assert!(
                 documented.contains(&key),
                 "examples/disagg.ini does not document the [disagg] key '{key}'"
+            );
+        }
+    }
+
+    #[test]
+    fn tune_section_round_trips_and_validates() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        // No [tune] section: no mode — the CLI applies its own default.
+        let c = ExperimentConfig::parse(base).unwrap();
+        assert!(c.tune.is_none());
+        assert_eq!(c.tune_mode().unwrap(), None);
+
+        // Explicit strategies land where docs/TUNING.md says.
+        let ex = format!("{base}\n[tune]\nsearch = \"exhaustive\"\n");
+        let mode = ExperimentConfig::parse(&ex).unwrap().tune_mode().unwrap();
+        assert_eq!(mode, Some(crate::coordinator::SearchMode::Exhaustive));
+        let beam = format!("{base}\n[tune]\nsearch = \"beam\"\nbeam_width = 3\n");
+        let mode = ExperimentConfig::parse(&beam).unwrap().tune_mode().unwrap();
+        assert_eq!(mode, Some(crate::coordinator::SearchMode::Beam { width: 3 }));
+
+        // An empty section defaults to exhaustive; a bare beam search
+        // gets the default width.
+        let empty = format!("{base}\n[tune]\n");
+        let mode = ExperimentConfig::parse(&empty).unwrap().tune_mode().unwrap();
+        assert_eq!(mode, Some(crate::coordinator::SearchMode::Exhaustive));
+        let bare = format!("{base}\n[tune]\nsearch = \"beam\"\n");
+        let mode = ExperimentConfig::parse(&bare).unwrap().tune_mode().unwrap();
+        assert_eq!(mode, Some(crate::coordinator::SearchMode::Beam { width: 2 }));
+
+        // Degenerate sections are rejected with actionable messages.
+        let bogus = format!("{base}\n[tune]\nsearch = \"random\"\n");
+        let err = ExperimentConfig::parse(&bogus).unwrap().tune_mode().unwrap_err();
+        assert!(err.contains("exhaustive or beam"), "{err}");
+        let zero = format!("{base}\n[tune]\nsearch = \"beam\"\nbeam_width = 0\n");
+        let err = ExperimentConfig::parse(&zero).unwrap().tune_mode().unwrap_err();
+        assert!(err.contains("beam_width"), "{err}");
+        let orphan = format!("{base}\n[tune]\nbeam_width = 2\n");
+        let err = ExperimentConfig::parse(&orphan).unwrap().tune_mode().unwrap_err();
+        assert!(err.contains("contradictory"), "{err}");
+    }
+
+    #[test]
+    fn example_tune_file_stays_reconciled() {
+        // Same contract as `example_cluster_file_stays_reconciled`, for
+        // the worked autotuner workload (docs/TUNING.md): the file must
+        // parse, request the decode pass and beam search it documents,
+        // and every key its reference block documents must be one the
+        // parser reads — with the full [tune] key set covered.
+        let text = include_str!("../../../examples/tune.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        let attn = c.attn().unwrap();
+        assert_eq!((attn.h_q, attn.h_k, attn.n_ctx), (64, 8, 65536));
+        assert_eq!(c.kernel().unwrap(), ExpKernel::Decode(8));
+        assert_eq!(
+            c.tune_mode().unwrap(),
+            Some(crate::coordinator::SearchMode::Beam { width: 2 })
+        );
+
+        let documented = documented_keys(text);
+        for key in &documented {
+            assert!(
+                *key == "topology"
+                    || ATTENTION_KEYS.contains(key)
+                    || SIM_KEYS.contains(key)
+                    || TUNE_KEYS.contains(key),
+                "examples/tune.ini documents key '{key}' the parser does not read"
+            );
+        }
+        for key in TUNE_KEYS {
+            assert!(
+                documented.contains(&key),
+                "examples/tune.ini does not document the [tune] key '{key}'"
             );
         }
     }

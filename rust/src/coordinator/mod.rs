@@ -38,7 +38,12 @@
 //! deployment should configure the kernel with, backed by a quick
 //! simulator projection executed through the shared simulation driver
 //! ([`crate::driver`]) — repeated advice on a geometry the coordinator
-//! has already seen is served from the driver's report cache.
+//! has already seen is served from the driver's report cache. The
+//! [`tuner`] graduates that heuristic to a search result: it prices the
+//! full composed mapping algebra ([`crate::mapping::MappingSpec`]) per
+//! (topology, workload) through the same memoized driver and exposes
+//! [`tuner::advise_tuned`] for callers that want the searched optimum
+//! (docs/TUNING.md).
 
 pub mod advisor;
 pub mod batcher;
@@ -46,10 +51,15 @@ pub mod disagg;
 pub mod executor;
 pub mod router;
 pub mod service;
+pub mod tuner;
 
 pub use advisor::{
     advise, advise_decode, advise_decode_with, advise_with, applicable_policies, pick_num_splits,
     Advice,
+};
+pub use tuner::{
+    advise_tuned, advise_tuned_with, default_requests, search_space, tune, tune_sweep, tune_with,
+    SearchMode, TuneKernel, TuneRequest, TuneRow,
 };
 pub use batcher::{
     ActiveSession, Batch, BatcherCore, BatcherConfig, PrefillChunk, SloQueue, StepBatcher,

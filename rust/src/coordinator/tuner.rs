@@ -1,0 +1,490 @@
+//! Mapping autotuner: search the composed [`MappingSpec`] algebra for
+//! the best mapping per (topology, workload), instead of trusting the
+//! advisor's fixed four-policy heuristic.
+//!
+//! The search space is [`Policy::all_canonical`] pruned to the points
+//! that are *behaviorally distinct on the workload's grid*:
+//!
+//! * swizzled points are dropped when `h_q % num_xcds != 0` (the same
+//!   applicability rule as [`super::advisor::applicable_policies`]);
+//! * `grouped` split placement is a no-op on prefill/backward grids, so
+//!   non-decode workloads search only the `inherit` plane (8 points);
+//! * on decode grids `grouped` forces head-first traversal, so
+//!   `*-head-*-grouped` duplicates `*-head-*-inherit` and is dropped
+//!   (12 points remain).
+//!
+//! Every candidate is priced through the memoized driver
+//! ([`crate::driver::SimDriver`]): re-tuning a (topology, workload) the
+//! process has already seen is answered entirely from the report cache,
+//! and the legacy points share cache entries with the advisor's own
+//! projections. Ranking is a *strict* deterministic argmin on
+//! `est_total_sec` (first candidate wins ties, candidates enumerate in
+//! [`Policy::all_canonical`] order with the legacy points first) — so
+//! the tuned mapping is never worse than SwizzledHeadFirst on any row
+//! where SHF applies, by construction. Docs: docs/TUNING.md.
+
+use crate::attn::AttnConfig;
+use crate::driver::{self, SimDriver, SimJob};
+use crate::mapping::{Policy, SplitPlacement, Traversal, ALL_POLICIES};
+use crate::sim::SimConfig;
+use crate::topology::Topology;
+use crate::util::json::Json;
+use crate::workload::sweeps::fmt_ctx;
+
+use super::advisor::Advice;
+
+/// Search strategy over the pruned algebra.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Price every point in the pruned space.
+    Exhaustive,
+    /// Two-stage beam: price the legacy plane first, keep the best
+    /// `width` points, then price only the survivors' order × split
+    /// expansions. Cheaper than exhaustive when the space grows; the
+    /// beam rule is "a good assign × traversal stays good when the
+    /// extra axes move" (docs/TUNING.md).
+    Beam {
+        /// Legacy-plane survivors expanded in stage two.
+        width: usize,
+    },
+}
+
+/// Which kernel pass a tuning row prices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneKernel {
+    /// Forward kernel, exact whole-grid run.
+    Forward,
+    /// Backward pair (dK/dV + dQ).
+    Backward,
+    /// Two-phase split-KV decode with this split count (clamped to the
+    /// geometry's column blocks like [`super::advisor::advise_decode`]).
+    Decode {
+        /// Requested KV split count.
+        num_splits: usize,
+    },
+}
+
+/// One labelled workload the tuner prices.
+#[derive(Debug, Clone)]
+pub struct TuneRequest {
+    /// Row label (sweep-style, e.g. `gqa8 B=1 N=64K S=8 decode`).
+    pub label: String,
+    /// Attention geometry.
+    pub cfg: AttnConfig,
+    /// Kernel pass to search over.
+    pub kernel: TuneKernel,
+}
+
+/// Tuning result for one workload row.
+#[derive(Debug, Clone)]
+pub struct TuneRow {
+    /// Row label from the request.
+    pub label: String,
+    /// The winning mapping (strict argmin over the priced candidates).
+    pub best: Policy,
+    /// Projected seconds of the winning mapping.
+    pub best_sec: f64,
+    /// The reference policy the speedup column compares against: SHF
+    /// where it applies, else the best legacy point in the space.
+    pub baseline: Policy,
+    /// Projected seconds of the baseline policy.
+    pub baseline_sec: f64,
+    /// Every priced candidate in enumeration order with its projected
+    /// seconds (the beam prices a subset of the exhaustive space).
+    pub candidates: Vec<(Policy, f64)>,
+}
+
+impl TuneRow {
+    /// Tuned-over-baseline speedup; >= 1.0 whenever the baseline is in
+    /// the priced set (the argmin is never worse than any candidate).
+    pub fn speedup(&self) -> f64 {
+        self.baseline_sec / self.best_sec
+    }
+
+    /// JSON rendering for `tune --json` (bit-stable across thread
+    /// counts: candidate order is enumeration order, never timing).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("best", Json::str(self.best.name())),
+            ("best_sec", Json::num(self.best_sec)),
+            ("baseline", Json::str(self.baseline.name())),
+            ("baseline_sec", Json::num(self.baseline_sec)),
+            ("speedup_vs_baseline", Json::num(self.speedup())),
+            (
+                "candidates",
+                Json::arr(self.candidates.iter().map(|(p, t)| {
+                    Json::obj(vec![
+                        ("policy", Json::str(p.name())),
+                        ("est_total_sec", Json::num(*t)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// The pruned, behaviorally-distinct search space for a workload (see
+/// the module docs for the three pruning rules). Enumeration order is
+/// [`Policy::all_canonical`]: legacy points first, so deterministic
+/// tie-breaks favor the paper's named policies.
+pub fn search_space(topo: &Topology, cfg: &AttnConfig, kernel: TuneKernel) -> Vec<Policy> {
+    let decode_grid = matches!(kernel, TuneKernel::Decode { .. });
+    Policy::all_canonical()
+        .into_iter()
+        .filter(|p| !(p.requires_divisible_heads() && cfg.h_q % topo.num_xcds != 0))
+        .filter(|p| {
+            let s = p.spec();
+            if s.split == SplitPlacement::Grouped {
+                // No-op off decode grids; duplicates `inherit` when the
+                // traversal is already head-first.
+                return decode_grid && s.traversal != Traversal::HeadFirst;
+            }
+            true
+        })
+        .collect()
+}
+
+fn job_for(topo: &Topology, cfg: &AttnConfig, kernel: TuneKernel, policy: Policy) -> SimJob {
+    match kernel {
+        TuneKernel::Forward => SimJob::forward(topo, cfg, SimConfig::forward(policy)),
+        TuneKernel::Backward => SimJob::backward(topo, cfg, SimConfig::backward(policy)),
+        TuneKernel::Decode { num_splits } => {
+            let splits = cfg.clamp_num_splits(num_splits);
+            SimJob::decode(topo, cfg, SimConfig::decode(policy, splits))
+        }
+    }
+}
+
+/// Price `candidates` for one request and rank by strict argmin on
+/// `est_total_sec` (first candidate wins ties).
+fn price(
+    driver: &SimDriver,
+    topo: &Topology,
+    req: &TuneRequest,
+    candidates: &[Policy],
+) -> Vec<(Policy, f64)> {
+    let jobs: Vec<SimJob> = candidates
+        .iter()
+        .map(|&p| job_for(topo, &req.cfg, req.kernel, p))
+        .collect();
+    let reports = driver.run_all(jobs);
+    candidates
+        .iter()
+        .zip(&reports)
+        .map(|(&p, r)| (p, r.est_total_sec))
+        .collect()
+}
+
+fn argmin(priced: &[(Policy, f64)]) -> (Policy, f64) {
+    let mut best = priced[0];
+    for &(p, t) in &priced[1..] {
+        if t < best.1 {
+            best = (p, t);
+        }
+    }
+    best
+}
+
+fn row_from(req: &TuneRequest, priced: Vec<(Policy, f64)>) -> TuneRow {
+    let (best, best_sec) = argmin(&priced);
+    // SHF where it applies (it is always priced then: stage one covers
+    // the legacy plane), else the best legacy point priced.
+    let (baseline, baseline_sec) = priced
+        .iter()
+        .copied()
+        .find(|(p, _)| *p == Policy::SwizzledHeadFirst)
+        .unwrap_or_else(|| {
+            argmin(
+                &priced
+                    .iter()
+                    .copied()
+                    .filter(|(p, _)| ALL_POLICIES.contains(p))
+                    .collect::<Vec<_>>(),
+            )
+        });
+    TuneRow { label: req.label.clone(), best, best_sec, baseline, baseline_sec, candidates: priced }
+}
+
+/// Tune one workload row through an explicit driver.
+pub fn tune_with(
+    driver: &SimDriver,
+    topo: &Topology,
+    req: &TuneRequest,
+    mode: SearchMode,
+) -> TuneRow {
+    let space = search_space(topo, &req.cfg, req.kernel);
+    match mode {
+        SearchMode::Exhaustive => row_from(req, price(driver, topo, req, &space)),
+        SearchMode::Beam { width } => {
+            let width = width.max(1);
+            // Stage one: the legacy plane (always in the space).
+            let legacy: Vec<Policy> =
+                space.iter().copied().filter(|p| ALL_POLICIES.contains(p)).collect();
+            let mut priced = price(driver, topo, req, &legacy);
+            let mut survivors = priced.clone();
+            survivors.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("engine times are finite"));
+            survivors.truncate(width);
+            // Stage two: the survivors' order × split expansions, in
+            // space enumeration order (deterministic regardless of the
+            // stage-one sort).
+            let expansions: Vec<Policy> = space
+                .iter()
+                .copied()
+                .filter(|p| !legacy.contains(p))
+                .filter(|p| {
+                    let s = p.spec();
+                    survivors.iter().any(|(surv, _)| {
+                        let ss = surv.spec();
+                        ss.assign == s.assign && ss.traversal == s.traversal
+                    })
+                })
+                .collect();
+            priced.extend(price(driver, topo, req, &expansions));
+            row_from(req, priced)
+        }
+    }
+}
+
+/// [`tune_with`] through the process-wide shared driver.
+pub fn tune(topo: &Topology, req: &TuneRequest, mode: SearchMode) -> TuneRow {
+    tune_with(driver::global(), topo, req, mode)
+}
+
+/// The default tuning sweep: the decode and causal-forward regimes where
+/// intra-head order and split placement actually move the engine (plus a
+/// non-causal control row where every order is stream-identical and the
+/// tuner must simply re-derive SHF). `quick` keeps the two headline
+/// rows for CI smokes.
+pub fn default_requests(quick: bool) -> Vec<TuneRequest> {
+    let gqa8 = |b: usize, n: usize| AttnConfig::gqa(b, 64, 8, n, 128);
+    let causal = |mut cfg: AttnConfig| {
+        cfg.causal = true;
+        cfg
+    };
+    let mut rows = vec![
+        TuneRequest {
+            label: format!("gqa8 B=1 N={} S=8 decode", fmt_ctx(65536)),
+            cfg: gqa8(1, 65536),
+            kernel: TuneKernel::Decode { num_splits: 8 },
+        },
+        TuneRequest {
+            label: format!("mha-16 N={} causal fwd", fmt_ctx(8192)),
+            cfg: causal(AttnConfig::mha(1, 16, 8192, 128)),
+            kernel: TuneKernel::Forward,
+        },
+    ];
+    if !quick {
+        rows.extend([
+            TuneRequest {
+                label: format!("gqa8 B=1 N={} S=8 decode", fmt_ctx(131072)),
+                cfg: gqa8(1, 131072),
+                kernel: TuneKernel::Decode { num_splits: 8 },
+            },
+            TuneRequest {
+                label: format!("gqa8 B=2 N={} S=4 decode", fmt_ctx(65536)),
+                cfg: gqa8(2, 65536),
+                kernel: TuneKernel::Decode { num_splits: 4 },
+            },
+            TuneRequest {
+                label: format!("mha-64 B=1 N={} S=8 decode", fmt_ctx(65536)),
+                cfg: AttnConfig::mha(1, 64, 65536, 128),
+                kernel: TuneKernel::Decode { num_splits: 8 },
+            },
+            TuneRequest {
+                label: format!("gqa8 N={} causal fwd", fmt_ctx(16384)),
+                cfg: causal(gqa8(1, 16384)),
+                kernel: TuneKernel::Forward,
+            },
+            TuneRequest {
+                label: format!("mha-16 B=2 N={} bwd", fmt_ctx(8192)),
+                cfg: AttnConfig::mha(2, 16, 8192, 128),
+                kernel: TuneKernel::Backward,
+            },
+            TuneRequest {
+                label: format!("mha-64 N={} fwd", fmt_ctx(16384)),
+                cfg: AttnConfig::mha(1, 64, 16384, 128),
+                kernel: TuneKernel::Forward,
+            },
+        ]);
+    }
+    rows
+}
+
+/// Tune the default sweep ([`default_requests`]) row by row.
+pub fn tune_sweep(
+    driver: &SimDriver,
+    topo: &Topology,
+    mode: SearchMode,
+    quick: bool,
+) -> Vec<TuneRow> {
+    default_requests(quick)
+        .iter()
+        .map(|req| tune_with(driver, topo, req, mode))
+        .collect()
+}
+
+/// Advisor entry point backed by the tuner: like
+/// [`super::advisor::advise`] but recommending over the full pruned
+/// algebra instead of the four legacy policies, with a strict argmin
+/// (no 2% indifference band on the *choice* — the band still feeds the
+/// `indifferent` flag). Uses the same sampled forward jobs as `advise`,
+/// so the legacy points share its cache entries.
+pub fn advise_tuned(topo: &Topology, cfg: &AttnConfig) -> Advice {
+    advise_tuned_with(driver::global(), topo, cfg)
+}
+
+/// [`advise_tuned`] through an explicit driver.
+pub fn advise_tuned_with(driver: &SimDriver, topo: &Topology, cfg: &AttnConfig) -> Advice {
+    let policies = search_space(topo, cfg, TuneKernel::Forward);
+    let jobs: Vec<SimJob> = policies
+        .iter()
+        .map(|&p| SimJob::forward(topo, cfg, SimConfig::sampled(p, topo, 2)))
+        .collect();
+    let reports = driver.run_all(jobs);
+    let priced: Vec<(Policy, f64)> = policies
+        .iter()
+        .zip(&reports)
+        .map(|(&p, r)| (p, r.est_total_sec))
+        .collect();
+    let (recommended, best_sec) = argmin(&priced);
+    let spread = priced.iter().map(|(_, t)| t / best_sec).fold(1.0f64, f64::max);
+    let projections = policies
+        .iter()
+        .zip(&reports)
+        .map(|(&p, r)| (p, r.l2_hit_pct(), best_sec / r.est_total_sec))
+        .collect();
+    Advice {
+        recommended,
+        projections,
+        indifferent: topo.num_xcds == 1 || spread < 1.02,
+        num_splits: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn fast_topo() -> Topology {
+        Topology {
+            cus_per_xcd: 8,
+            l2_bytes_per_xcd: 1024 * 1024,
+            hbm_bytes_per_sec: 1.1e12,
+            ..presets::mi300x()
+        }
+    }
+
+    fn decode_req() -> TuneRequest {
+        TuneRequest {
+            label: "gqa decode".into(),
+            cfg: AttnConfig::gqa(1, 16, 8, 4096, 128),
+            kernel: TuneKernel::Decode { num_splits: 4 },
+        }
+    }
+
+    #[test]
+    fn space_prunes_by_grid_kind() {
+        let topo = fast_topo();
+        let cfg = AttnConfig::mha(1, 16, 4096, 128);
+        // Prefill: inherit plane only — 2 assign x 2 traversal x 2 order.
+        let fwd = search_space(&topo, &cfg, TuneKernel::Forward);
+        assert_eq!(fwd.len(), 8);
+        assert!(fwd.iter().all(|p| p.spec().split == SplitPlacement::Inherit));
+        // Decode: grouped survives only for block-first traversal.
+        let dec = search_space(&topo, &cfg, TuneKernel::Decode { num_splits: 2 });
+        assert_eq!(dec.len(), 12);
+        // Indivisible heads drop the swizzled half.
+        let odd = AttnConfig::mha(1, 12, 4096, 128);
+        assert_eq!(search_space(&topo, &odd, TuneKernel::Forward).len(), 4);
+        // Legacy points lead the enumeration (deterministic tie-break).
+        assert_eq!(&fwd[..4], &ALL_POLICIES[..]);
+    }
+
+    #[test]
+    fn exhaustive_never_loses_to_shf_and_memoizes() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let req = decode_req();
+        let row = tune_with(&driver, &topo, &req, SearchMode::Exhaustive);
+        assert_eq!(row.candidates.len(), 12);
+        assert_eq!(driver.cache().misses(), 12, "one engine pass per candidate");
+        assert_eq!(row.baseline, Policy::SwizzledHeadFirst);
+        assert!(row.best_sec <= row.baseline_sec, "argmin beats every candidate");
+        assert!(row.speedup() >= 1.0);
+        // Re-tuning the same workload is free.
+        let again = tune_with(&driver, &topo, &req, SearchMode::Exhaustive);
+        assert_eq!(driver.cache().misses(), 12, "zero new engine runs");
+        assert_eq!(again.best, row.best);
+        assert_eq!(again.best_sec.to_bits(), row.best_sec.to_bits());
+    }
+
+    #[test]
+    fn beam_prices_a_subset_and_agrees_on_the_baseline() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let req = decode_req();
+        let beam = tune_with(&driver, &topo, &req, SearchMode::Beam { width: 2 });
+        // Stage one (4 legacy) + the two survivors' expansions: at most
+        // the exhaustive space, at least the legacy plane.
+        assert!(beam.candidates.len() >= 4);
+        assert!(beam.candidates.len() <= 12);
+        assert_eq!(beam.baseline, Policy::SwizzledHeadFirst);
+        assert!(beam.speedup() >= 1.0);
+        // The exhaustive winner is at least as good as the beam's.
+        let ex = tune_with(&driver, &topo, &req, SearchMode::Exhaustive);
+        assert!(ex.best_sec <= beam.best_sec);
+        // Beam candidates are a subset of the exhaustive space.
+        let space = search_space(&topo, &req.cfg, req.kernel);
+        assert!(beam.candidates.iter().all(|(p, _)| space.contains(p)));
+    }
+
+    #[test]
+    fn serial_and_parallel_tuning_agree_bit_for_bit() {
+        let topo = fast_topo();
+        let req = decode_req();
+        let a = tune_with(&SimDriver::new(1), &topo, &req, SearchMode::Exhaustive);
+        let b = tune_with(&SimDriver::new(8), &topo, &req, SearchMode::Exhaustive);
+        assert_eq!(a.to_json().render(), b.to_json().render());
+    }
+
+    #[test]
+    fn advise_tuned_covers_the_algebra_and_caches() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = AttnConfig::mha(1, 16, 4096, 64);
+        let a = advise_tuned_with(&driver, &topo, &cfg);
+        assert_eq!(a.projections.len(), 8);
+        assert_eq!(driver.cache().misses(), 8, "one sampled run per point");
+        assert!(a.projections.iter().any(|(p, _, _)| *p == a.recommended));
+        assert_eq!(a.num_splits, None);
+        // The recommendation's relative perf is exactly 1.0.
+        let rec = a.projections.iter().find(|(p, _, _)| *p == a.recommended).unwrap();
+        assert!((rec.2 - 1.0).abs() < 1e-12);
+        // The legacy points share the advisor's own cache entries: a
+        // plain advise() after advise_tuned() performs zero engine runs.
+        let before = driver.cache().misses();
+        super::super::advisor::advise_with(&driver, &topo, &cfg);
+        assert_eq!(driver.cache().misses(), before, "legacy jobs already cached");
+        // Repeat tuned advice is free and bit-identical.
+        let b = advise_tuned_with(&driver, &topo, &cfg);
+        assert_eq!(driver.cache().misses(), before);
+        assert_eq!(a.recommended, b.recommended);
+        for (x, y) in a.projections.iter().zip(&b.projections) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.2.to_bits(), y.2.to_bits());
+        }
+    }
+
+    #[test]
+    fn default_requests_quick_is_a_prefix() {
+        let quick = default_requests(true);
+        let full = default_requests(false);
+        assert_eq!(quick.len(), 2);
+        assert!(full.len() > quick.len());
+        for (q, f) in quick.iter().zip(&full) {
+            assert_eq!(q.label, f.label);
+        }
+    }
+}

@@ -43,13 +43,13 @@ pub struct FigureResult {
 impl FigureResult {
     /// Render as the aligned text table the CLI prints.
     pub fn render(&self) -> String {
-        let mut headers: Vec<&str> = vec!["config"];
-        let labels: Vec<&str> = self
+        let labels: Vec<String> = self
             .rows
             .first()
             .map(|r| r.values.iter().map(|(p, _)| p.label()).collect())
             .unwrap_or_default();
-        headers.extend(labels);
+        let mut headers: Vec<&str> = vec!["config"];
+        headers.extend(labels.iter().map(String::as_str));
         let mut t = Table::new(&headers);
         for row in &self.rows {
             let mut cells = vec![row.label.clone()];

@@ -15,6 +15,8 @@
 //!               devices (two-level NUMA; docs/CLUSTER.md)
 //!   disagg    — run the serving loop disaggregated across prefill and
 //!               decode pools with SLO classes (docs/DISAGG.md)
+//!   tune      — search the composed mapping algebra for the best mapping
+//!               per workload through the memoized driver (docs/TUNING.md)
 //!
 //! Run `numa-attn <subcommand> --help` for flags. The USAGE text below is
 //! pinned against README.md and the parsed flag set by `usage_tests`.
@@ -43,7 +45,7 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|serve_share|cluster|disagg|gemm|perf|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|serve_share|cluster|disagg|gemm|perf|tune|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
   numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
@@ -51,8 +53,9 @@ USAGE:
                   [--max-wait-ms MS] [--seed S]
   numa-attn cluster [--quick] [--config FILE] [--topo T] [--tp N] [--json]
   numa-attn disagg [--quick] [--config FILE] [--topo T] [--json]
+  numa-attn tune [--quick] [--config FILE] [--topo T] [--beam N] [--json]
 
-driver flags (simulate, decode, figure, serve, cluster, disagg):
+driver flags (simulate, decode, figure, serve, cluster, disagg, tune):
   all simulations execute through the shared driver (src/driver): a worker
   pool plus a memoizing report cache keyed on (topology, attention, sim
   config). Results are bit-identical at any worker count.
@@ -62,7 +65,8 @@ driver flags (simulate, decode, figure, serve, cluster, disagg):
 
 simulate flags:
   --topo NAME          topology preset (mi300x, unified, dual_die, quad_die)
-  --policy P           nbf|sbf|nhf|shf (default: all four)
+  --policy P           nbf|sbf|nhf|shf or a composed spec such as
+                       swz-head-saw-inherit (docs/TUNING.md; default: all four)
   --batch Z --heads H --kv-heads HK --n-ctx N --d-head D
   --causal             causal masking
   --backward           FA2 backward pass (dK/dV + dQ kernels)
@@ -116,6 +120,16 @@ disagg flags (the disaggregated prefill/decode sweep; docs/DISAGG.md):
                        wider pools and a prefix-sharing row)
   --config FILE        serve ONE deployment from an experiment file's
                        [disagg] + [serve] sections instead of the sweep
+
+tune flags (the composed-mapping autotuner; docs/TUNING.md):
+  --quick              search the two-row CI sweep (default: the full
+                       decode/causal-forward/backward sweep)
+  --config FILE        tune ONE workload from an experiment file's
+                       [attention] + [sim] sections; the [tune] section
+                       picks the search strategy (search, beam_width)
+  --beam N             two-stage beam search keeping N legacy-plane
+                       survivors (default 0 = exhaustive over the
+                       pruned algebra; overrides the [tune] section)
 ";
 
 fn main() {
@@ -152,6 +166,7 @@ fn run() -> anyhow::Result<()> {
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
         "disagg" => cmd_disagg(&args),
+        "tune" => cmd_tune(&args),
         other => anyhow::bail!(
             "unknown subcommand '{other}' (expected one of: {})\n{USAGE}",
             SUBCOMMANDS.join(", ")
@@ -162,8 +177,8 @@ fn run() -> anyhow::Result<()> {
 /// Every CLI subcommand. `usage_tests` pins this list against the USAGE
 /// text, the dispatch match above, and README.md, so none of the three
 /// can drift from the others.
-const SUBCOMMANDS: [&str; 8] =
-    ["simulate", "decode", "figure", "explain", "verify", "serve", "cluster", "disagg"];
+const SUBCOMMANDS: [&str; 9] =
+    ["simulate", "decode", "figure", "explain", "verify", "serve", "cluster", "disagg", "tune"];
 
 fn topo_arg(args: &Args) -> anyhow::Result<numa_attn::topology::Topology> {
     let name: String = args.get_or("topo", "mi300x".to_string()).map_err(|e| anyhow::anyhow!(e))?;
@@ -185,17 +200,18 @@ fn driver_arg(args: &Args) -> anyhow::Result<SimDriver> {
 }
 
 /// Filter to the policies applicable to this geometry (the advisor's
-/// rule), printing a note for each one skipped.
+/// rule — swizzled assignment needs `heads % XCDs == 0`), printing a
+/// note for each one skipped. Checked per policy rather than by
+/// membership in the legacy list so composed specs pass through.
 fn filter_applicable(
     policies: Vec<Policy>,
     topo: &numa_attn::topology::Topology,
     attn: &AttnConfig,
 ) -> Vec<Policy> {
-    let applicable = coordinator::applicable_policies(topo, attn);
     policies
         .into_iter()
         .filter(|p| {
-            let ok = applicable.contains(p);
+            let ok = !p.requires_divisible_heads() || attn.h_q % topo.num_xcds == 0;
             if !ok {
                 eprintln!(
                     "note: skipping {} (heads {} not divisible by XCDs {})",
@@ -391,6 +407,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "disagg" => vec![figures::disagg_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
         "perf" => return cmd_figure_perf(args),
+        "tune" => return cmd_figure_tune(args),
         "all" => figures::all(&driver, &topo, quick),
         other => anyhow::bail!("unknown figure '{other}'"),
     };
@@ -429,6 +446,34 @@ fn cmd_figure_perf(args: &Args) -> anyhow::Result<()> {
     } else {
         println!("{}", figures::perf_panel(&doc).map_err(anyhow::Error::msg)?);
     }
+    Ok(())
+}
+
+/// `figure tune`: the tuned-vs-SHF panel — run the default tuning sweep
+/// (docs/TUNING.md) exhaustively and render each row's searched winner
+/// against the paper's swizzled_head_first, the figure-style view of how
+/// much the composed algebra buys beyond the four named policies.
+fn cmd_figure_tune(args: &Args) -> anyhow::Result<()> {
+    let driver = driver_arg(args)?;
+    let topo = topo_arg(args)?;
+    let rows = coordinator::tune_sweep(
+        &driver,
+        &topo,
+        coordinator::SearchMode::Exhaustive,
+        args.has("quick"),
+    );
+    if args.has("json") {
+        let obj = Json::obj(vec![
+            ("figure", Json::str("tune")),
+            ("title", Json::str(format!("Tuned mapping vs swizzled_head_first ({})", topo.name))),
+            ("rows", Json::arr(rows.iter().map(|r| r.to_json()))),
+        ]);
+        println!("{}", obj.render());
+    } else {
+        println!("== Figure tune: searched mapping vs swizzled_head_first ({}) ==", topo.name);
+        println!("{}", render_tune_rows(&rows));
+    }
+    print_driver_stats(&driver);
     Ok(())
 }
 
@@ -682,6 +727,70 @@ fn cmd_disagg(args: &Args) -> anyhow::Result<()> {
     }
     print_driver_stats(&driver);
     Ok(())
+}
+
+/// The mapping autotuner (docs/TUNING.md): search the pruned composed
+/// mapping algebra per workload — the built-in decode / causal-forward
+/// sweep, or ONE workload from an experiment file's [attention] + [sim]
+/// sections — through the memoized driver, and print the tuned mapping
+/// against the SwizzledHeadFirst baseline. stdout is bit-identical at
+/// any `--threads` count: candidates enumerate in canonical order and
+/// ranking is a strict argmin (driver stats go to stderr).
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let a = |e: String| anyhow::anyhow!(e);
+    let driver = driver_arg(args)?;
+    let beam: usize = args.get_or("beam", 0).map_err(a)?;
+    let flag_mode = (beam > 0).then_some(coordinator::SearchMode::Beam { width: beam });
+    let config_path = args.get::<String>("config").map_err(a)?;
+    let rows: Vec<coordinator::TuneRow> = if let Some(path) = config_path {
+        let text = std::fs::read_to_string(&path)?;
+        let exp = ExperimentConfig::parse(&text).map_err(a)?;
+        let topo = exp.topology().map_err(a)?;
+        let cfg = exp.attn().map_err(a)?;
+        let kernel = match exp.kernel().map_err(a)? {
+            config::ExpKernel::Forward => coordinator::TuneKernel::Forward,
+            config::ExpKernel::Backward => coordinator::TuneKernel::Backward,
+            config::ExpKernel::Decode(s) => coordinator::TuneKernel::Decode { num_splits: s },
+        };
+        let cfg_mode = exp.tune_mode().map_err(a)?;
+        let mode = flag_mode.or(cfg_mode).unwrap_or(coordinator::SearchMode::Exhaustive);
+        let req = coordinator::TuneRequest { label: path, cfg, kernel };
+        vec![coordinator::tune_with(&driver, &topo, &req, mode)]
+    } else {
+        let topo = topo_arg(args)?;
+        let mode = flag_mode.unwrap_or(coordinator::SearchMode::Exhaustive);
+        coordinator::tune_sweep(&driver, &topo, mode, args.has("quick"))
+    };
+    if args.has("json") {
+        println!("{}", Json::arr(rows.iter().map(|r| r.to_json())).render());
+    } else {
+        println!("{}", render_tune_rows(&rows));
+    }
+    print_driver_stats(&driver);
+    Ok(())
+}
+
+/// Shared table rendering for `tune` and `figure tune`.
+fn render_tune_rows(rows: &[coordinator::TuneRow]) -> String {
+    let mut t = Table::new(&[
+        "config",
+        "tuned mapping",
+        "tuned ms",
+        "baseline",
+        "baseline ms",
+        "speedup",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.label.clone(),
+            r.best.name(),
+            format!("{:.3}", r.best_sec * 1e3),
+            r.baseline.name(),
+            format!("{:.3}", r.baseline_sec * 1e3),
+            format!("{:.3}x", r.speedup()),
+        ]);
+    }
+    t.render()
 }
 
 /// The live PJRT prefill demo (`serve --live`): deterministic requests

@@ -6,33 +6,53 @@
 //! the software's only lever over *where* work runs — exactly the
 //! swizzling mechanism of the paper.
 //!
+//! The paper's four named policies are points in a larger composable
+//! algebra ([`spec::MappingSpec`]): head assignment × traversal ×
+//! intra-head block order × split placement. The legacy enum variants
+//! are kept as the canonical names for the `lin`+`inherit` plane and
+//! decode byte-for-byte as before; [`Policy::Composed`] opens the other
+//! 12 points to the [`crate::coordinator::tuner`] search.
+//!
 //! The arithmetic here mirrors `python/compile/kernels/swizzle.py`
 //! line-for-line; `golden` tests pin the two implementations together.
 
 mod golden;
+pub mod spec;
 
 use std::fmt;
 use std::str::FromStr;
 
+pub use spec::{
+    BlockOrder, HeadAssign, MappingSpec, SplitPlacement, Traversal, ALL_SPECS, SPEC_SYNTAX,
+};
+
 use crate::attn::{AttnConfig, KernelKind, WorkItem};
 
-/// The four mapping strategies the paper evaluates.
+/// A mapping strategy: one of the paper's four named policies, or any
+/// other point of the composed algebra ([`MappingSpec`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
     /// Fig. 7: block-first iteration, round-robin XCDs. Splits every
     /// XCD's L2 across H_Q/num_xcds concurrent ACC streams.
+    /// Algebra point `rr-block-lin-inherit`.
     NaiveBlockFirst,
     /// Fig. 8: block-first + chiplet swizzle (AITER's scheme). Pins
     /// contiguous head groups per XCD; optimal for GQA when groups ==
     /// XCDs, still interleaves multiple ACCs per XCD for MHA.
+    /// Algebra point `swz-block-lin-inherit`.
     SwizzledBlockFirst,
     /// Fig. 9: head-first iteration, round-robin XCDs (Triton default).
     /// One ACC live at a time but replicated into every XCD's L2.
+    /// Algebra point `rr-head-lin-inherit`.
     NaiveHeadFirst,
     /// Figs. 10-11: the paper's contribution. Head-first + spatial
     /// swizzle: every block of a head lands on one XCD; each XCD services
-    /// one ACC at a time.
+    /// one ACC at a time. Algebra point `swz-head-lin-inherit`.
     SwizzledHeadFirst,
+    /// Any non-legacy point of the algebra (sawtooth order and/or
+    /// grouped split placement). Constructed via [`Policy::from_spec`],
+    /// which canonicalizes legacy-plane points onto the variants above.
+    Composed(MappingSpec),
 }
 
 /// The four policies in the paper's presentation order.
@@ -44,35 +64,103 @@ pub const ALL_POLICIES: [Policy; 4] = [
 ];
 
 impl Policy {
-    /// Stable snake_case identifier (CLI/JSON).
-    pub fn name(&self) -> &'static str {
+    /// Stable snake_case / spec identifier (CLI/JSON). Legacy variants
+    /// keep their historical names; composed points use the dash-joined
+    /// spec syntax, e.g. `swz-head-saw-inherit`.
+    pub fn name(&self) -> String {
         match self {
-            Policy::NaiveBlockFirst => "naive_block_first",
-            Policy::SwizzledBlockFirst => "swizzled_block_first",
-            Policy::NaiveHeadFirst => "naive_head_first",
-            Policy::SwizzledHeadFirst => "swizzled_head_first",
+            Policy::NaiveBlockFirst => "naive_block_first".into(),
+            Policy::SwizzledBlockFirst => "swizzled_block_first".into(),
+            Policy::NaiveHeadFirst => "naive_head_first".into(),
+            Policy::SwizzledHeadFirst => "swizzled_head_first".into(),
+            Policy::Composed(spec) => spec.name(),
         }
     }
 
-    /// Short label used in figure output (matches the paper's legends).
-    pub fn label(&self) -> &'static str {
+    /// Short label used in figure output (matches the paper's legends
+    /// for the four named policies; spec syntax otherwise).
+    pub fn label(&self) -> String {
         match self {
-            Policy::NaiveBlockFirst => "Naive Block-first",
-            Policy::SwizzledBlockFirst => "Swizzled Block-first",
-            Policy::NaiveHeadFirst => "Naive Head-first",
-            Policy::SwizzledHeadFirst => "Swizzled Head-first",
+            Policy::NaiveBlockFirst => "Naive Block-first".into(),
+            Policy::SwizzledBlockFirst => "Swizzled Block-first".into(),
+            Policy::NaiveHeadFirst => "Naive Head-first".into(),
+            Policy::SwizzledHeadFirst => "Swizzled Head-first".into(),
+            Policy::Composed(spec) => spec.name(),
         }
+    }
+
+    /// The policy's point in the mapping algebra.
+    pub fn spec(&self) -> MappingSpec {
+        match self {
+            Policy::NaiveBlockFirst => MappingSpec::new(
+                HeadAssign::RoundRobin,
+                Traversal::BlockFirst,
+                BlockOrder::Linear,
+                SplitPlacement::Inherit,
+            ),
+            Policy::SwizzledBlockFirst => MappingSpec::new(
+                HeadAssign::Swizzled,
+                Traversal::BlockFirst,
+                BlockOrder::Linear,
+                SplitPlacement::Inherit,
+            ),
+            Policy::NaiveHeadFirst => MappingSpec::new(
+                HeadAssign::RoundRobin,
+                Traversal::HeadFirst,
+                BlockOrder::Linear,
+                SplitPlacement::Inherit,
+            ),
+            Policy::SwizzledHeadFirst => MappingSpec::new(
+                HeadAssign::Swizzled,
+                Traversal::HeadFirst,
+                BlockOrder::Linear,
+                SplitPlacement::Inherit,
+            ),
+            Policy::Composed(spec) => *spec,
+        }
+    }
+
+    /// Canonicalize a spec onto a policy: the `lin`+`inherit` plane maps
+    /// back to the legacy named variants (so equality/hashing — and
+    /// therefore the driver's memo cache — never distinguish a legacy
+    /// policy from its algebra point), everything else is `Composed`.
+    pub fn from_spec(spec: MappingSpec) -> Policy {
+        if spec.is_legacy_point() {
+            match (spec.assign, spec.traversal) {
+                (HeadAssign::RoundRobin, Traversal::BlockFirst) => Policy::NaiveBlockFirst,
+                (HeadAssign::Swizzled, Traversal::BlockFirst) => Policy::SwizzledBlockFirst,
+                (HeadAssign::RoundRobin, Traversal::HeadFirst) => Policy::NaiveHeadFirst,
+                (HeadAssign::Swizzled, Traversal::HeadFirst) => Policy::SwizzledHeadFirst,
+            }
+        } else {
+            Policy::Composed(spec)
+        }
+    }
+
+    /// All 16 canonical points of the algebra: the four legacy policies
+    /// (paper order) followed by the 12 composed points in
+    /// [`ALL_SPECS`] enumeration order. This is the tuner's search
+    /// space and the property-test domain.
+    pub fn all_canonical() -> Vec<Policy> {
+        let mut out: Vec<Policy> = ALL_POLICIES.to_vec();
+        out.extend(
+            ALL_SPECS
+                .iter()
+                .filter(|s| !s.is_legacy_point())
+                .map(|s| Policy::Composed(*s)),
+        );
+        out
     }
 
     /// Does this policy's swizzle arithmetic require `num_xcds | h_q`?
     pub fn requires_divisible_heads(&self) -> bool {
-        matches!(self, Policy::SwizzledBlockFirst | Policy::SwizzledHeadFirst)
+        self.spec().assign == HeadAssign::Swizzled
     }
 }
 
 impl fmt::Display for Policy {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(self.name())
+        f.write_str(&self.name())
     }
 }
 
@@ -85,20 +173,35 @@ impl FromStr for Policy {
             "swizzled_block_first" | "sbf" => Ok(Policy::SwizzledBlockFirst),
             "naive_head_first" | "nhf" => Ok(Policy::NaiveHeadFirst),
             "swizzled_head_first" | "shf" => Ok(Policy::SwizzledHeadFirst),
-            other => Err(format!(
-                "unknown policy '{other}' (expected one of nbf/sbf/nhf/shf or full names)"
-            )),
+            other => {
+                // Dash-joined strings are composed specs; canonicalize so
+                // e.g. "swz-head-lin-inherit" parses to SwizzledHeadFirst.
+                if other.contains('-') {
+                    return MappingSpec::parse(other).map(Policy::from_spec);
+                }
+                Err(format!(
+                    "unknown policy '{other}' (expected one of nbf/sbf/nhf/shf, a full \
+                     legacy name like 'swizzled_head_first', or a composed mapping spec \
+                     {SPEC_SYNTAX})"
+                ))
+            }
         }
     }
 }
 
 /// GEMM-style chiplet swizzle (paper Fig. 3): remaps a linear workgroup id
 /// so ids that round-robin to the same XCD become contiguous logically.
+///
+/// Non-divisible grids (`grid % num_xcd != 0`) are balanced: the first
+/// `grid % num_xcd` XCDs own one extra id each (exactly the round-robin
+/// dispatcher's share), so the remap stays bijective instead of
+/// colliding as the truncating `grid / num_xcd` stride would.
 pub fn chiplet_swizzle(wgid: usize, grid: usize, num_xcd: usize) -> usize {
     let wgids_per_xcd = grid / num_xcd;
+    let extra = grid % num_xcd; // XCDs [0, extra) own one extra id
     let xcd = wgid % num_xcd;
     let local_wgid = wgid / num_xcd;
-    xcd * wgids_per_xcd + local_wgid
+    xcd * wgids_per_xcd + xcd.min(extra) + local_wgid
 }
 
 /// A mapping instance bound to a grid geometry: decodes dispatch slots to
@@ -115,11 +218,18 @@ pub struct Mapping {
     pub blocks: usize,
     /// XCDs the swizzle arithmetic targets.
     pub num_xcds: usize,
+    /// Is the block dimension a flash-decode KV split (set by
+    /// [`Mapping::for_kernel`] for `DecodeSplitKv` grids)? Only the
+    /// [`SplitPlacement`] axis reads this.
+    pub is_split_grid: bool,
 }
 
 impl Mapping {
     /// A mapping over an explicit grid geometry; rejects degenerate
     /// dimensions and (for swizzled policies) indivisible head counts.
+    /// The grid is treated as a prefill grid (`is_split_grid = false`);
+    /// use [`Mapping::split_grid`] or [`Mapping::for_kernel`] for
+    /// flash-decode split grids.
     pub fn new(
         policy: Policy,
         batch: usize,
@@ -135,7 +245,13 @@ impl Mapping {
                 "{policy} requires num_heads ({heads}) divisible by num_xcds ({num_xcds})"
             ));
         }
-        Ok(Mapping { policy, batch, heads, blocks, num_xcds })
+        Ok(Mapping { policy, batch, heads, blocks, num_xcds, is_split_grid: false })
+    }
+
+    /// Mark (or unmark) the block dimension as a flash-decode KV split.
+    pub fn split_grid(mut self, is_split_grid: bool) -> Self {
+        self.is_split_grid = is_split_grid;
+        self
     }
 
     /// Build a mapping for an attention kernel grid.
@@ -146,6 +262,7 @@ impl Mapping {
         num_xcds: usize,
     ) -> Result<Self, String> {
         Self::new(policy, cfg.batch, cfg.h_q, cfg.blocks_for(kernel), num_xcds)
+            .map(|m| m.split_grid(matches!(kernel, KernelKind::DecodeSplitKv { .. })))
     }
 
     /// Total dispatch slots.
@@ -157,27 +274,50 @@ impl Mapping {
     ///
     /// Mirrors `swizzle.decode` in Python; batch is outermost everywhere
     /// (the paper Fig. 11's `wid_per_batch = wid // BATCH` line is a typo
-    /// for `wid % (heads*blocks)` — see DESIGN.md).
+    /// for `wid % (heads*blocks)` — see DESIGN.md). Routed through the
+    /// policy's [`MappingSpec`]: the legacy variants sit on the
+    /// `lin`+`inherit` plane where both extra axes are identities, so
+    /// their arithmetic is bit-identical to the historical enum match.
     #[inline]
     pub fn decode(&self, slot: usize) -> WorkItem {
         debug_assert!(slot < self.grid_size());
+        let spec = self.policy.spec();
         let per_batch = self.heads * self.blocks;
         let z = (slot / per_batch) as u32;
         let r = slot % per_batch;
-        let (h, b) = match self.policy {
-            Policy::NaiveBlockFirst => (r % self.heads, r / self.heads),
-            Policy::SwizzledBlockFirst => {
+        // Grouped split placement overrides the traversal on split grids
+        // only: all splits of one head contiguous in local slot order.
+        let traversal = if self.is_split_grid && spec.split == SplitPlacement::Grouped {
+            Traversal::HeadFirst
+        } else {
+            spec.traversal
+        };
+        let (h, b) = match (spec.assign, traversal) {
+            (HeadAssign::RoundRobin, Traversal::BlockFirst) => (r % self.heads, r / self.heads),
+            (HeadAssign::Swizzled, Traversal::BlockFirst) => {
                 let hpx = self.heads / self.num_xcds;
                 let x = r % self.num_xcds;
                 let j = r / self.num_xcds;
                 (x * hpx + j % hpx, j / hpx)
             }
-            Policy::NaiveHeadFirst => (r / self.blocks, r % self.blocks),
-            Policy::SwizzledHeadFirst => {
+            (HeadAssign::RoundRobin, Traversal::HeadFirst) => (r / self.blocks, r % self.blocks),
+            (HeadAssign::Swizzled, Traversal::HeadFirst) => {
                 let hpx = self.heads / self.num_xcds;
                 let x = r % self.num_xcds;
                 let j = r / self.num_xcds;
                 (x * hpx + j / self.blocks, j % self.blocks)
+            }
+        };
+        // Sawtooth wavefront reordering: odd heads walk blocks in
+        // reverse, so consecutive heads meet at a shared block boundary.
+        let b = match spec.order {
+            BlockOrder::Linear => b,
+            BlockOrder::Sawtooth => {
+                if h % 2 == 1 {
+                    self.blocks - 1 - b
+                } else {
+                    b
+                }
             }
         };
         WorkItem { z, h: h as u32, b: b as u32 }
@@ -211,16 +351,120 @@ mod tests {
         for policy in ALL_POLICIES {
             for (b, h, nb, x) in [(1, 8, 16, 4), (2, 16, 7, 8), (3, 8, 1, 2), (1, 128, 32, 8)] {
                 let m = Mapping::new(policy, b, h, nb, x).unwrap();
-                let set: BTreeSet<_> = m.decode_all().into_iter().map(|w| (w.z, w.h, w.b)).collect();
+                let set: BTreeSet<_> =
+                    m.decode_all().into_iter().map(|w| (w.z, w.h, w.b)).collect();
                 assert_eq!(set.len(), m.grid_size(), "{policy} {b}x{h}x{nb}/{x}");
             }
         }
     }
 
     #[test]
+    fn bijective_full_algebra() {
+        // Satellite: every searched MappingSpec decodes slots bijectively
+        // onto the work grid — no dropped or duplicated WorkItem — on
+        // both prefill and split grids, including non-divisible blocks,
+        // odd batches, and single-block grids.
+        for policy in Policy::all_canonical() {
+            for (b, h, nb, x) in [(1, 8, 16, 4), (2, 16, 7, 8), (3, 8, 1, 2), (1, 128, 32, 8)] {
+                for is_split in [false, true] {
+                    let m = Mapping::new(policy, b, h, nb, x).unwrap().split_grid(is_split);
+                    let grid = m.decode_all();
+                    let set: BTreeSet<_> = grid.iter().map(|w| (w.z, w.h, w.b)).collect();
+                    assert_eq!(
+                        set.len(),
+                        m.grid_size(),
+                        "{policy} {b}x{h}x{nb}/{x} split={is_split}"
+                    );
+                    for w in grid {
+                        assert!(
+                            (w.z as usize) < b && (w.h as usize) < h && (w.b as usize) < nb,
+                            "{policy}: out-of-range {w:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_policies_equal_their_algebra_points() {
+        // The lin+inherit plane decodes bit-identically whether reached
+        // through the named variant or a directly-constructed Composed
+        // point (from_spec canonicalizes; Composed bypasses it).
+        for legacy in ALL_POLICIES {
+            let composed = Policy::Composed(legacy.spec());
+            for (b, h, nb, x) in [(1, 8, 16, 4), (2, 16, 7, 8), (1, 64, 4, 8)] {
+                for is_split in [false, true] {
+                    let ml = Mapping::new(legacy, b, h, nb, x).unwrap().split_grid(is_split);
+                    let mc = Mapping::new(composed, b, h, nb, x).unwrap().split_grid(is_split);
+                    assert_eq!(ml.decode_all(), mc.decode_all(), "{legacy}");
+                }
+            }
+            assert_eq!(Policy::from_spec(legacy.spec()), legacy);
+        }
+    }
+
+    #[test]
+    fn sawtooth_reverses_odd_heads_only() {
+        let lin = Mapping::new(Policy::NaiveHeadFirst, 1, 4, 5, 4).unwrap();
+        let saw =
+            Mapping::new("rr-head-saw-inherit".parse::<Policy>().unwrap(), 1, 4, 5, 4).unwrap();
+        for slot in 0..lin.grid_size() {
+            let wl = lin.decode(slot);
+            let ws = saw.decode(slot);
+            assert_eq!((wl.z, wl.h), (ws.z, ws.h), "sawtooth only permutes blocks");
+            if wl.h % 2 == 0 {
+                assert_eq!(ws.b, wl.b);
+            } else {
+                assert_eq!(ws.b, 4 - wl.b);
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_split_placement_only_affects_split_grids() {
+        let p: Policy = "swz-block-lin-grouped".parse().unwrap();
+        let base = Policy::SwizzledBlockFirst;
+        // Prefill grid: identical to the inherit/legacy arithmetic.
+        let mp = Mapping::new(p, 1, 16, 6, 8).unwrap();
+        let mb = Mapping::new(base, 1, 16, 6, 8).unwrap();
+        assert_eq!(mp.decode_all(), mb.decode_all());
+        // Split grid: traversal flips to head-first — all splits of one
+        // head contiguous in an XCD's local slot order.
+        let ms = Mapping::new(p, 1, 16, 6, 8).unwrap().split_grid(true);
+        let shf_like = Mapping::new(Policy::SwizzledHeadFirst, 1, 16, 6, 8).unwrap();
+        assert_eq!(ms.decode_all(), shf_like.decode_all());
+    }
+
+    #[test]
+    fn for_kernel_marks_split_grids() {
+        let cfg = AttnConfig::gqa(1, 64, 8, 65536, 128);
+        let m = Mapping::for_kernel(
+            Policy::SwizzledHeadFirst,
+            &cfg,
+            KernelKind::DecodeSplitKv { num_splits: 4 },
+            8,
+        )
+        .unwrap();
+        assert!(m.is_split_grid);
+        let m =
+            Mapping::for_kernel(Policy::SwizzledHeadFirst, &cfg, KernelKind::Forward, 8).unwrap();
+        assert!(!m.is_split_grid);
+    }
+
+    #[test]
     fn shf_confines_each_head_to_one_xcd() {
         let cfg = AttnConfig::mha(2, 16, 2048, 128);
         let s = spread(Policy::SwizzledHeadFirst, &cfg, 8);
+        assert!(s.perfectly_colocated());
+    }
+
+    #[test]
+    fn sawtooth_preserves_shf_locality() {
+        // The order axis permutes blocks *within* a head, so it cannot
+        // change which XCD a head lands on.
+        let cfg = AttnConfig::mha(2, 16, 2048, 128);
+        let s = spread("swz-head-saw-inherit".parse().unwrap(), &cfg, 8);
         assert!(s.perfectly_colocated());
     }
 
@@ -322,11 +566,44 @@ mod tests {
     }
 
     #[test]
+    fn chiplet_swizzle_balanced_on_non_divisible_grids() {
+        // Satellite audit: the truncating grid/num_xcd stride used to
+        // collide ids on non-divisible grids (e.g. grid=10, X=4 sent
+        // wgids 8 and 1 both to logical 2). The balanced remap gives the
+        // first grid%X XCDs one extra id — exactly the round-robin
+        // dispatcher's share — and stays bijective for every grid.
+        for num_xcd in [2usize, 4, 8] {
+            for grid in 1..=64 {
+                let remapped: Vec<usize> =
+                    (0..grid).map(|w| chiplet_swizzle(w, grid, num_xcd)).collect();
+                let mut sorted = remapped.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..grid).collect::<Vec<_>>(), "grid={grid} X={num_xcd}");
+                // Each XCD's ids stay contiguous and in dispatch order.
+                for x in 0..num_xcd.min(grid) {
+                    let mine: Vec<usize> = (x..grid)
+                        .step_by(num_xcd)
+                        .map(|w| chiplet_swizzle(w, grid, num_xcd))
+                        .collect();
+                    for pair in mine.windows(2) {
+                        assert_eq!(pair[1], pair[0] + 1, "grid={grid} X={num_xcd} xcd={x}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn indivisible_heads_rejected_for_swizzled() {
         assert!(Mapping::new(Policy::SwizzledHeadFirst, 1, 6, 4, 8).is_err());
         assert!(Mapping::new(Policy::SwizzledBlockFirst, 1, 6, 4, 8).is_err());
         assert!(Mapping::new(Policy::NaiveHeadFirst, 1, 6, 4, 8).is_ok());
         assert!(Mapping::new(Policy::NaiveBlockFirst, 1, 6, 4, 8).is_ok());
+        // The swz axis carries the same constraint for composed points.
+        let p: Policy = "swz-head-saw-inherit".parse().unwrap();
+        assert!(Mapping::new(p, 1, 6, 4, 8).is_err());
+        let p: Policy = "rr-head-saw-inherit".parse().unwrap();
+        assert!(Mapping::new(p, 1, 6, 4, 8).is_ok());
     }
 
     #[test]
@@ -340,5 +617,28 @@ mod tests {
         for p in ALL_POLICIES {
             assert_eq!(p.name().parse::<Policy>().unwrap(), p);
         }
+    }
+
+    #[test]
+    fn composed_spec_parsing_round_trips_and_canonicalizes() {
+        // Every canonical point (legacy + composed) round-trips through
+        // its name; legacy-plane spec strings canonicalize onto the
+        // named variants rather than creating shadow Composed points.
+        for p in Policy::all_canonical() {
+            assert_eq!(p.name().parse::<Policy>().unwrap(), p, "{p}");
+        }
+        assert_eq!(
+            "swz-head-lin-inherit".parse::<Policy>().unwrap(),
+            Policy::SwizzledHeadFirst
+        );
+        assert_eq!(
+            "rr-block-lin-inherit".parse::<Policy>().unwrap(),
+            Policy::NaiveBlockFirst
+        );
+        let err = "zzz".parse::<Policy>().unwrap_err();
+        assert!(err.contains("nbf/sbf/nhf/shf"), "{err}");
+        assert!(err.contains("swz-head-saw-inherit"), "{err}");
+        let err = "swz-head-zig-inherit".parse::<Policy>().unwrap_err();
+        assert!(err.contains("lin|saw"), "{err}");
     }
 }

@@ -1,0 +1,277 @@
+//! The composable mapping algebra: three orthogonal axes that span (and
+//! extend) the paper's four policies.
+//!
+//! Every mapping the simulator can schedule is a point
+//! `assign × traversal × order × split`:
+//!
+//! * [`HeadAssign`] — *where* heads land: round-robin dispatch order
+//!   (`rr`, the paper's "naive" policies) or chiplet-swizzled so each
+//!   XCD owns a contiguous head group (`swz`, paper Fig. 3).
+//! * [`Traversal`] — *what varies fastest* between consecutive slots of
+//!   an XCD: the head (`block`-first, paper Figs. 7-8) or the block
+//!   (`head`-first, Figs. 9-11).
+//! * [`BlockOrder`] — *intra-head block order*: `lin`ear ascending, or
+//!   `saw`tooth wavefront reordering (odd heads walk their blocks in
+//!   reverse), so consecutive heads on one XCD meet at a shared block
+//!   boundary and re-hit the tiles the previous head just touched.
+//! * [`SplitPlacement`] — how flash-decode KV splits land relative to
+//!   head homes: `inherit` the traversal axis unchanged, or `grouped`,
+//!   which forces head-first traversal on split grids only (all splits
+//!   of one head contiguous) while leaving prefill grids untouched.
+//!
+//! The four legacy [`super::Policy`] variants are the `lin` + `inherit`
+//! plane of the space; [`super::Policy::from_spec`] canonicalizes those
+//! points back onto the named variants so the algebra stays
+//! byte-for-byte compatible with the historical enum (golden-pinned in
+//! `mapping/golden.rs` and `tests/mapping_algebra.rs`). Mirrored in
+//! `python/compile/kernels/swizzle.py`.
+
+use std::fmt;
+
+/// Head-assignment axis: round-robin (naive) vs chiplet-swizzled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HeadAssign {
+    /// Dispatch order = logical order; the round-robin dispatcher
+    /// stripes consecutive logical ids across XCDs (paper "naive").
+    RoundRobin,
+    /// Chiplet swizzle: each XCD owns a contiguous head group
+    /// (paper Fig. 3 / "swizzled"). Requires `num_xcds | h_q`.
+    Swizzled,
+}
+
+/// Traversal axis: which grid dimension varies fastest per XCD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Traversal {
+    /// Block-first: consecutive slots advance the head (Figs. 7-8).
+    BlockFirst,
+    /// Head-first: consecutive slots advance the block (Figs. 9-11).
+    HeadFirst,
+}
+
+/// Intra-head block-order axis (the first axis beyond the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockOrder {
+    /// Blocks in ascending order — the paper's (only) order.
+    Linear,
+    /// Sawtooth wavefront reordering: odd heads walk their blocks
+    /// descending (`b_eff = blocks-1-b`), so back-to-back heads on one
+    /// XCD meet at a shared block boundary (boustrophedon; GB10-style
+    /// wavefront remap). Bijective per head for any block count.
+    Sawtooth,
+}
+
+/// Split-placement axis: how DecodeSplitKv splits land vs head homes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SplitPlacement {
+    /// Split grids reuse the traversal axis verbatim (the historical
+    /// behavior: splits reinterpret the block dimension).
+    Inherit,
+    /// Force head-first traversal on split grids only: all splits of
+    /// one head are contiguous in local slot order even when the
+    /// prefill traversal is block-first. Prefill grids are untouched.
+    Grouped,
+}
+
+impl HeadAssign {
+    /// Spec-string token (`rr` / `swz`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            HeadAssign::RoundRobin => "rr",
+            HeadAssign::Swizzled => "swz",
+        }
+    }
+}
+
+impl Traversal {
+    /// Spec-string token (`block` / `head`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            Traversal::BlockFirst => "block",
+            Traversal::HeadFirst => "head",
+        }
+    }
+}
+
+impl BlockOrder {
+    /// Spec-string token (`lin` / `saw`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            BlockOrder::Linear => "lin",
+            BlockOrder::Sawtooth => "saw",
+        }
+    }
+}
+
+impl SplitPlacement {
+    /// Spec-string token (`inherit` / `grouped`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            SplitPlacement::Inherit => "inherit",
+            SplitPlacement::Grouped => "grouped",
+        }
+    }
+}
+
+/// One point in the mapping algebra; see the module docs for the axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MappingSpec {
+    /// Head-assignment axis.
+    pub assign: HeadAssign,
+    /// Traversal axis.
+    pub traversal: Traversal,
+    /// Intra-head block-order axis.
+    pub order: BlockOrder,
+    /// Flash-decode split-placement axis.
+    pub split: SplitPlacement,
+}
+
+/// The composed-spec string syntax, quoted by parse errors and docs.
+pub const SPEC_SYNTAX: &str =
+    "<rr|swz>-<block|head>-<lin|saw>-<inherit|grouped> (e.g. 'swz-head-saw-inherit')";
+
+/// All 16 points of the algebra, in deterministic enumeration order
+/// (assign, then traversal, then order, then split — each axis in
+/// declaration order). The `lin`+`inherit` plane (4 points) is the
+/// legacy [`super::Policy`] enum.
+pub const ALL_SPECS: [MappingSpec; 16] = build_all_specs();
+
+const fn build_all_specs() -> [MappingSpec; 16] {
+    const ASSIGNS: [HeadAssign; 2] = [HeadAssign::RoundRobin, HeadAssign::Swizzled];
+    const TRAVERSALS: [Traversal; 2] = [Traversal::BlockFirst, Traversal::HeadFirst];
+    const ORDERS: [BlockOrder; 2] = [BlockOrder::Linear, BlockOrder::Sawtooth];
+    const SPLITS: [SplitPlacement; 2] = [SplitPlacement::Inherit, SplitPlacement::Grouped];
+    let mut out = [MappingSpec {
+        assign: HeadAssign::RoundRobin,
+        traversal: Traversal::BlockFirst,
+        order: BlockOrder::Linear,
+        split: SplitPlacement::Inherit,
+    }; 16];
+    let mut i = 0;
+    while i < 16 {
+        out[i] = MappingSpec {
+            assign: ASSIGNS[i / 8],
+            traversal: TRAVERSALS[(i / 4) % 2],
+            order: ORDERS[(i / 2) % 2],
+            split: SPLITS[i % 2],
+        };
+        i += 1;
+    }
+    out
+}
+
+impl MappingSpec {
+    /// Construct a spec from its four axes.
+    pub const fn new(
+        assign: HeadAssign,
+        traversal: Traversal,
+        order: BlockOrder,
+        split: SplitPlacement,
+    ) -> Self {
+        MappingSpec { assign, traversal, order, split }
+    }
+
+    /// Stable dash-joined identifier, e.g. `swz-head-saw-inherit`.
+    /// Round-trips through [`MappingSpec::parse`].
+    pub fn name(&self) -> String {
+        format!(
+            "{}-{}-{}-{}",
+            self.assign.token(),
+            self.traversal.token(),
+            self.order.token(),
+            self.split.token()
+        )
+    }
+
+    /// Is this spec on the legacy plane (`lin` order, `inherit` split)?
+    pub fn is_legacy_point(&self) -> bool {
+        self.order == BlockOrder::Linear && self.split == SplitPlacement::Inherit
+    }
+
+    /// Parse the dash-joined spec syntax ([`SPEC_SYNTAX`]).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split('-').collect();
+        if parts.len() != 4 {
+            return Err(format!(
+                "composed mapping spec '{s}' must have 4 dash-joined axes: {SPEC_SYNTAX}"
+            ));
+        }
+        let assign = match parts[0] {
+            "rr" => HeadAssign::RoundRobin,
+            "swz" => HeadAssign::Swizzled,
+            other => {
+                return Err(format!(
+                    "unknown head-assign '{other}' in spec '{s}' (expected rr|swz)"
+                ))
+            }
+        };
+        let traversal = match parts[1] {
+            "block" => Traversal::BlockFirst,
+            "head" => Traversal::HeadFirst,
+            other => {
+                return Err(format!(
+                    "unknown traversal '{other}' in spec '{s}' (expected block|head)"
+                ))
+            }
+        };
+        let order = match parts[2] {
+            "lin" => BlockOrder::Linear,
+            "saw" => BlockOrder::Sawtooth,
+            other => {
+                return Err(format!(
+                    "unknown block order '{other}' in spec '{s}' (expected lin|saw)"
+                ))
+            }
+        };
+        let split = match parts[3] {
+            "inherit" => SplitPlacement::Inherit,
+            "grouped" => SplitPlacement::Grouped,
+            other => {
+                return Err(format!(
+                    "unknown split placement '{other}' in spec '{s}' (expected inherit|grouped)"
+                ))
+            }
+        };
+        Ok(MappingSpec { assign, traversal, order, split })
+    }
+}
+
+impl fmt::Display for MappingSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_distinct_points() {
+        let names: std::collections::BTreeSet<String> =
+            ALL_SPECS.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), 16);
+        // Exactly 4 points sit on the legacy plane.
+        assert_eq!(ALL_SPECS.iter().filter(|s| s.is_legacy_point()).count(), 4);
+    }
+
+    #[test]
+    fn spec_names_round_trip() {
+        for spec in ALL_SPECS {
+            assert_eq!(MappingSpec::parse(&spec.name()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "swz-head-saw",             // missing axis
+            "swz-head-saw-inherit-x",   // extra axis
+            "zzz-head-saw-inherit",     // bad assign
+            "swz-diag-saw-inherit",     // bad traversal
+            "swz-head-zig-inherit",     // bad order
+            "swz-head-saw-scattered",   // bad split
+        ] {
+            assert!(MappingSpec::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+}

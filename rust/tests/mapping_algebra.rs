@@ -1,0 +1,181 @@
+//! Golden pins of the composed mapping algebra (docs/TUNING.md): the
+//! legacy `Policy` variants and their algebra points are the *same
+//! mapping*, all the way through the simulation driver.
+//!
+//! Three contracts:
+//!   * canonicalization — legacy-plane spec strings parse back onto the
+//!     legacy enum variants (so cache keys, figures, and goldens never
+//!     see a second identity for the paper's four policies), and every
+//!     canonical point's name round-trips through `FromStr`;
+//!   * report equivalence — a directly-constructed `Policy::Composed`
+//!     legacy point (bypassing `from_spec` canonicalization) produces
+//!     byte-identical SimReport JSON to the named variant for forward,
+//!     backward, and split-KV decode, on the serial driver and the
+//!     8-worker pool, differing only in the policy-name field;
+//!   * bijectivity — every policy the tuner can search decodes its grid
+//!     as a permutation, for divisible and non-divisible head counts,
+//!     on prefill and split-KV decode grids alike.
+
+use std::collections::BTreeSet;
+use std::str::FromStr;
+
+use numa_attn::attn::{AttnConfig, KernelKind, WorkItem};
+use numa_attn::coordinator::{search_space, TuneKernel};
+use numa_attn::driver::{SimDriver, SimJob};
+use numa_attn::mapping::{Mapping, Policy, ALL_POLICIES};
+use numa_attn::sim::SimConfig;
+use numa_attn::topology::{presets, Topology};
+
+fn small_topo() -> Topology {
+    Topology {
+        name: "tiny".into(),
+        num_xcds: 4,
+        cus_per_xcd: 4,
+        l2_bytes_per_xcd: 512 * 1024,
+        ..presets::mi300x()
+    }
+}
+
+#[test]
+fn legacy_plane_spec_strings_canonicalize_onto_the_enum_variants() {
+    for &p in &ALL_POLICIES {
+        let spec_name = p.spec().name();
+        let parsed = Policy::from_str(&spec_name).unwrap();
+        assert_eq!(parsed, p, "{spec_name} must parse onto the legacy variant");
+        assert_eq!(Policy::from_spec(p.spec()), p);
+        // The canonical identity is the historical snake_case name, not
+        // the spec string — figures and cache keys are untouched.
+        assert_ne!(parsed.name(), spec_name);
+    }
+    for q in Policy::all_canonical() {
+        assert_eq!(Policy::from_str(&q.name()).unwrap(), q, "{} must round-trip", q.name());
+    }
+}
+
+/// Render a report list, rewriting the policy-name field from the
+/// composed spec string to the legacy name so the remaining bytes can
+/// be compared exactly.
+fn render_as(reports: &[numa_attn::SimReport], from: &Policy, to: &Policy) -> Vec<String> {
+    reports
+        .iter()
+        .map(|r| {
+            r.to_json()
+                .render()
+                .replace(&format!("\"{}\"", from.name()), &format!("\"{}\"", to.name()))
+        })
+        .collect()
+}
+
+#[test]
+fn raw_composed_legacy_points_report_byte_identically_to_the_variants() {
+    let topo = small_topo();
+    let cfg = AttnConfig {
+        block_m: 128,
+        block_n: 64,
+        causal: true,
+        ..AttnConfig::gqa(1, 4, 4, 2048, 128)
+    };
+    for threads in [1usize, 8] {
+        let driver = SimDriver::new(threads);
+        for &legacy in &ALL_POLICIES {
+            let raw = Policy::Composed(legacy.spec());
+            let jobs = |p: Policy| {
+                vec![
+                    SimJob::forward(&topo, &cfg, SimConfig::forward(p)),
+                    SimJob::backward(&topo, &cfg, SimConfig::backward(p)),
+                    SimJob::decode(&topo, &cfg, SimConfig::decode(p, 2)),
+                ]
+            };
+            let want = render_as(&driver.run_all(jobs(legacy)), &legacy, &legacy);
+            let got = render_as(&driver.run_all(jobs(raw)), &raw, &legacy);
+            assert_eq!(got, want, "{} diverged at {threads} worker(s)", raw.name());
+        }
+    }
+}
+
+fn assert_bijective(m: &Mapping) {
+    let mut seen = BTreeSet::new();
+    for s in 0..m.grid_size() {
+        let w = m.decode(s);
+        assert!((w.z as usize) < m.batch, "{}: batch out of range", m.policy.name());
+        assert!((w.h as usize) < m.heads, "{}: head out of range", m.policy.name());
+        assert!((w.b as usize) < m.blocks, "{}: block out of range", m.policy.name());
+        assert!(
+            seen.insert((w.z, w.h, w.b)),
+            "{}: slot {s} collides at ({}, {}, {})",
+            m.policy.name(),
+            w.z,
+            w.h,
+            w.b
+        );
+    }
+    assert_eq!(seen.len(), m.grid_size());
+}
+
+#[test]
+fn every_searched_policy_decodes_a_bijection() {
+    let topo = small_topo();
+    // Divisible (h_q = 8 over 4 XCDs) and non-divisible (h_q = 6) head
+    // counts; the non-divisible space is the rr-* half of the algebra.
+    for cfg in [AttnConfig::gqa(2, 8, 4, 2048, 128), AttnConfig::mha(2, 6, 2048, 128)] {
+        let kernels = [
+            (TuneKernel::Forward, KernelKind::Forward),
+            (TuneKernel::Backward, KernelKind::BwdDkDv),
+            (TuneKernel::Decode { num_splits: 4 }, KernelKind::DecodeSplitKv { num_splits: 4 }),
+        ];
+        for (tk, kk) in kernels {
+            let space = search_space(&topo, &cfg, tk);
+            assert!(!space.is_empty());
+            for p in space {
+                let m = Mapping::for_kernel(p, &cfg, kk, topo.num_xcds).unwrap();
+                assert_bijective(&m);
+            }
+        }
+    }
+}
+
+#[test]
+fn sawtooth_and_grouped_points_change_the_schedule_but_not_the_work() {
+    // The two extra axes must actually *do* something on the grids they
+    // target (otherwise search_space's pruning claim is vacuous), while
+    // preserving each head's block set exactly.
+    let cfg = AttnConfig::gqa(1, 8, 4, 2048, 128);
+    let lin = Policy::from_str("swz-head-lin-inherit").unwrap();
+    let saw = Policy::from_str("swz-head-saw-inherit").unwrap();
+    let kk = KernelKind::Forward;
+    let a = Mapping::for_kernel(lin, &cfg, kk, 4).unwrap().decode_all();
+    let b = Mapping::for_kernel(saw, &cfg, kk, 4).unwrap().decode_all();
+    assert_ne!(
+        a.iter().map(|w| (w.z, w.h, w.b)).collect::<Vec<_>>(),
+        b.iter().map(|w| (w.z, w.h, w.b)).collect::<Vec<_>>(),
+        "sawtooth must reorder the schedule"
+    );
+    // Same (head -> block multiset) under both orders.
+    let sets = |ws: &[WorkItem]| {
+        let mut m: std::collections::BTreeMap<u32, BTreeSet<u32>> = Default::default();
+        for w in ws {
+            m.entry(w.h).or_default().insert(w.b);
+        }
+        m
+    };
+    assert_eq!(sets(&a), sets(&b));
+
+    // Grouped: identity off split grids, head-first traversal on them.
+    let blk_inherit = Policy::from_str("rr-block-lin-inherit").unwrap();
+    let blk_grouped = Policy::from_str("rr-block-lin-grouped").unwrap();
+    let prefill_a = Mapping::for_kernel(blk_inherit, &cfg, kk, 4).unwrap().decode_all();
+    let prefill_b = Mapping::for_kernel(blk_grouped, &cfg, kk, 4).unwrap().decode_all();
+    assert_eq!(
+        prefill_a.iter().map(|w| (w.z, w.h, w.b)).collect::<Vec<_>>(),
+        prefill_b.iter().map(|w| (w.z, w.h, w.b)).collect::<Vec<_>>(),
+        "grouped must be a no-op on prefill grids"
+    );
+    let dk = KernelKind::DecodeSplitKv { num_splits: 4 };
+    let split_g = Mapping::for_kernel(blk_grouped, &cfg, dk, 4).unwrap();
+    let head_first = Mapping::for_kernel(Policy::NaiveHeadFirst, &cfg, dk, 4).unwrap();
+    assert_eq!(
+        split_g.decode_all().iter().map(|w| (w.z, w.h, w.b)).collect::<Vec<_>>(),
+        head_first.decode_all().iter().map(|w| (w.z, w.h, w.b)).collect::<Vec<_>>(),
+        "grouped must force head-first split placement on decode grids"
+    );
+}

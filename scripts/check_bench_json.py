@@ -4,7 +4,8 @@
 The self-checking benches write `BENCH_<suite>.json` at the repo root
 (format: docs/PERF.md): `cargo bench --bench sim_hotpath` pins
 `BENCH_sim_hotpath.json`, `cargo bench --bench disagg_serving` pins
-`BENCH_disagg.json`. This script checks that a file is a structurally
+`BENCH_disagg.json`, `cargo bench --bench mapping_tune` pins
+`BENCH_tune.json`. This script checks that a file is a structurally
 valid `bench-v1` document — every case carries name / iters / mean_ms /
 min_ms / max_ms / metrics, with sane values (iters >= 1,
 0 < min <= mean <= max) — and then applies the headline contracts of
@@ -25,6 +26,13 @@ the suite the document declares:
     the interactive first-token tail without losing decode throughput
     to the handoff (hard failures: the bench asserts the same ordering
     where it is measured);
+  * suite `tune`: every sweep case ("tune: ...") reports
+    `speedup_vs_shf` >= 1.0 — the autotuner's strict argmin can never
+    lose to a baseline inside its own search space (hard failure:
+    anything below 1.0 means the search or the baseline selection is
+    broken) — and at least one case reports `speedup_vs_shf` > 1.0,
+    the docs/TUNING.md claim that the composed mapping algebra strictly
+    beats swizzled_head_first somewhere in the sweep;
   * any other suite: structural validation only.
 
 Usage: python3 scripts/check_bench_json.py [path/to/BENCH_<suite>.json]
@@ -42,6 +50,9 @@ SPEEDUP_CASE_PREFIX = "engine: decode-reduce"
 
 DISAGG_HEADLINE_CASE = "disagg: 1p+1d (SHF)"
 DISAGG_RATIO_METRICS = ("ttft_speedup_vs_colocated", "tokens_ratio_vs_colocated")
+
+TUNE_CASE_PREFIX = "tune: "
+TUNE_SPEEDUP_METRIC = "speedup_vs_shf"
 
 REQUIRED_CASE_FIELDS = ("name", "iters", "mean_ms", "min_ms", "max_ms", "metrics")
 
@@ -121,6 +132,17 @@ def check(doc, errors, warnings):
                         f"{where}: speedup_vs_reference {speedup:.2f}x below the "
                         f"{SPEEDUP_FLOOR:.0f}x target (noisy runner?)"
                     )
+        if doc.get("suite") == "tune" and name.startswith(TUNE_CASE_PREFIX):
+            speedup = metrics.get(TUNE_SPEEDUP_METRIC)
+            if not isinstance(speedup, (int, float)):
+                fail(errors, f"{where}: missing {TUNE_SPEEDUP_METRIC!r} metric")
+            elif speedup < 1.0:
+                fail(
+                    errors,
+                    f"{where}: {TUNE_SPEEDUP_METRIC} {speedup:.4f} below 1.0 — the "
+                    "tuned mapping lost to a baseline inside its own search space "
+                    "(docs/TUNING.md)",
+                )
         if doc.get("suite") == "disagg" and name == DISAGG_HEADLINE_CASE:
             for metric in DISAGG_RATIO_METRICS:
                 ratio = metrics.get(metric)
@@ -140,6 +162,23 @@ def check(doc, errors, warnings):
             fail(errors, f"no case named {SPEEDUP_CASE_PREFIX!r}...")
     if doc.get("suite") == "disagg" and DISAGG_HEADLINE_CASE not in names:
         fail(errors, f"headline case {DISAGG_HEADLINE_CASE!r} not present")
+    if doc.get("suite") == "tune":
+        speedups = [
+            case.get("metrics", {}).get(TUNE_SPEEDUP_METRIC)
+            for case in cases
+            if isinstance(case, dict)
+            and isinstance(case.get("name"), str)
+            and case["name"].startswith(TUNE_CASE_PREFIX)
+        ]
+        if not speedups:
+            fail(errors, f"no case named {TUNE_CASE_PREFIX!r}...")
+        numeric = [s for s in speedups if isinstance(s, (int, float))]
+        if numeric and not any(s > 1.0 for s in numeric):
+            fail(
+                errors,
+                f"no sweep case has {TUNE_SPEEDUP_METRIC} > 1.0 — the composed "
+                "algebra never strictly beat swizzled_head_first (docs/TUNING.md)",
+            )
 
 
 def main(argv):
