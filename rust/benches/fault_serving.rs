@@ -1,0 +1,201 @@
+//! Cluster fault-injection bench (docs/SERVING.md §9): serves the
+//! widest-TP cluster deployment on the real MI300X topology through a
+//! planned mid-run device outage and asserts the headline resilience
+//! claims.
+//!
+//! Reproduction targets:
+//! * the outage actually fires and the shard plan re-forms — at least
+//!   one rebalance per health transition, with the evicted sessions
+//!   re-queued through the router;
+//! * exactly-once serving across fail/recover: no session is lost or
+//!   double-served (every admitted session completes exactly once) and
+//!   the run is not truncated;
+//! * the degraded interval is visibly slower than healthy full-width
+//!   serving (degraded busy-time tokens/s < healthy), and after the
+//!   device returns the post-recovery window restores at least 95% of
+//!   the pre-failure rate;
+//! * an empty fault plan takes the historical cluster path (no fault
+//!   extras recorded), so the fault layer is pay-for-what-you-use.
+//!
+//! The hard-asserted probe serves a decode-dominated lockstep workload
+//! (simultaneous arrivals, uniform decode budgets) so the pre-failure
+//! and post-recovery windows compare full batches against full batches;
+//! the `serve_burst` figure and the fault report printed alongside show
+//! the same machinery on the mixed cluster-sweep scenarios.
+//!
+//! Writes the pinned `bench-v1` trajectory `BENCH_faults.json` at the
+//! repo root, validated by `scripts/check_bench_json.py`.
+
+mod common;
+
+use numa_attn::coordinator::{
+    cluster_scenarios, fault_report, serve_decode_faulty_with, FaultEvent, FaultPlan, FaultSpec,
+    ServeConfig,
+};
+use numa_attn::figures;
+use numa_attn::mapping::Policy;
+use numa_attn::util::bench::Harness;
+use numa_attn::workload::sweeps::CLUSTER_TP;
+
+fn main() {
+    let driver = common::bench_driver();
+    let topo = common::topo();
+    let quick = !common::full_sweep();
+    let mut h = Harness::new("faults");
+
+    // The figure panel (tokens/s per fault window + TTFT p99, healthy
+    // vs degraded, every applicable policy). The driver memoizes
+    // per-geometry pricing, so the probe runs below re-use the cache
+    // this fill pays for.
+    let t0 = std::time::Instant::now();
+    let fig = figures::serve_burst_fig(&driver, &topo, quick);
+    let dt = t0.elapsed();
+    println!("{}", fig.render());
+
+    // Decode-dominated lockstep probe on the sweep's widest-TP
+    // geometry: all sessions arrive at once and carry the same decode
+    // budget, so occupancy stays flat until a sharp final drain and the
+    // window rates are batch-for-batch comparable.
+    let tp = *CLUSTER_TP.last().expect("cluster sweep has TP degrees");
+    let sc = cluster_scenarios(quick)
+        .into_iter()
+        .find(|sc| sc.tp == tp)
+        .expect("widest-TP scenario in the sweep");
+    let cfg = ServeConfig {
+        arrival_per_sec: 1.0e6,
+        prefill_lengths: vec![512],
+        decode_tokens: vec![256],
+        sessions: 8,
+        max_active: 8,
+        max_steps: 6400,
+        ..sc.cfg.clone()
+    };
+
+    let mut clean = None;
+    h.run("faults: clean full-width serve (SHF)", 2, || {
+        clean = Some(serve_decode_faulty_with(
+            &driver,
+            &topo,
+            tp,
+            &cfg,
+            Policy::SwizzledHeadFirst,
+            &FaultPlan::default(),
+        ));
+    });
+    let clean = clean.expect("clean run ran");
+    common::check(
+        clean.faults.is_none() && !clean.serve.truncated,
+        "an empty fault plan takes the historical cluster path (no fault extras)",
+    );
+    h.metric("tokens_per_sec", clean.serve.tokens_per_sec);
+    h.metric("sim_sec", clean.serve.sim_sec);
+
+    // One outage on device 1, timed off the clean run so the degraded
+    // interval lands squarely inside the serve.
+    let t = clean.serve.sim_sec;
+    let plan = FaultPlan {
+        events: vec![FaultEvent { device: 1, fail_sec: 0.35 * t, recover_sec: 0.65 * t }],
+    };
+    println!("[fault] probe plan [{}] over a {:.6} s clean serve", plan.render(), t);
+
+    let mut faulty = None;
+    h.run("faults: mid-serve outage, rebalance + recovery (SHF)", 2, || {
+        faulty = Some(serve_decode_faulty_with(
+            &driver,
+            &topo,
+            tp,
+            &cfg,
+            Policy::SwizzledHeadFirst,
+            &plan,
+        ));
+    });
+    let faulty = faulty.expect("faulty run ran");
+    let f = faulty.faults.as_ref().expect("a non-empty plan records fault extras");
+    h.metric("healthy_tokens_per_sec", f.healthy_tokens_per_sec);
+    h.metric("degraded_tokens_per_sec", f.degraded_tokens_per_sec);
+    h.metric("recovery_ratio", f.recovery_ratio);
+    h.metric("rebalances", f.rebalances as f64);
+    h.metric("requeued", f.requeued as f64);
+    h.metric("events_applied", f.events_applied as f64);
+    h.metric("degraded_sec", f.degraded_sec);
+
+    common::check(
+        f.events_applied == 2 * plan.events.len(),
+        &format!("both health transitions fired ({} applied)", f.events_applied),
+    );
+    common::check(
+        f.rebalances >= 1,
+        &format!("the outage re-formed the shard plan ({} rebalance(s))", f.rebalances),
+    );
+    common::check(
+        f.requeued >= 1,
+        &format!("the drop evicted and re-queued in-flight sessions ({} re-queued)", f.requeued),
+    );
+    common::check(
+        !faulty.serve.truncated && faulty.serve.sessions_completed == cfg.sessions,
+        &format!(
+            "no session lost or double-served across fail/recover ({}/{} completed)",
+            faulty.serve.sessions_completed, cfg.sessions
+        ),
+    );
+    common::check(
+        f.degraded_sec > 0.0 && f.degraded_tokens_per_sec < f.healthy_tokens_per_sec,
+        &format!(
+            "the degraded interval is visible: {:.0} tok/s degraded < {:.0} tok/s healthy \
+             over {:.6} s",
+            f.degraded_tokens_per_sec, f.healthy_tokens_per_sec, f.degraded_sec
+        ),
+    );
+    common::check(
+        f.recovery_ratio >= 0.95,
+        &format!(
+            "recovery restores >= 95% of the pre-failure rate (ratio {:.4})",
+            f.recovery_ratio
+        ),
+    );
+
+    // The operator surface: the same engineered plan through the
+    // `cluster --faults` report over the widest-TP sweep scenarios.
+    // Sweep configs keep their historical step budgets, so this is
+    // reported (and sanity-checked) rather than hard-asserted.
+    let spec = FaultSpec { events: plan.render(), ..FaultSpec::default() };
+    let mut report = None;
+    h.run("faults: fault report sweep", 1, || {
+        report = Some(fault_report(&driver, &topo, quick, &spec).expect("fault report"));
+    });
+    let report = report.expect("report ran");
+    println!("{}", report.render());
+    common::check(
+        !report.rows.is_empty() && report.rows.iter().all(|r| !r.stats.is_empty()),
+        &format!("every sweep row served under the plan ({} row(s))", report.rows.len()),
+    );
+    common::check(
+        report.rows.iter().all(|r| r.stats.iter().all(|s| s.faults.is_some())),
+        "every sweep run recorded fault extras for the non-empty plan",
+    );
+
+    let cstats = driver.cache().counters();
+    common::check(
+        cstats.hits > cstats.misses,
+        &format!(
+            "the fault loop re-uses the report cache (hits {} > misses {})",
+            cstats.hits, cstats.misses
+        ),
+    );
+    println!(
+        "[bench] faults: {} figure row(s) in {:.2} s on {} thread(s), \
+         cache {} hit(s)/{} miss(es) ({})",
+        fig.rows.len(),
+        dt.as_secs_f64(),
+        driver.threads(),
+        cstats.hits,
+        cstats.misses,
+        if quick { "quick sweep; NUMA_ATTN_FULL=1 for the full sweep" } else { "full sweep" }
+    );
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_faults.json");
+    h.write_json(&path).expect("write BENCH_faults.json");
+    println!("[perf] trajectory written to {}", path.display());
+}

@@ -22,8 +22,9 @@
 //! `[serve]` decode-serving-loop section) is documented in
 //! `examples/experiment.ini` and mirrored by [`ATTENTION_KEYS`] /
 //! [`SIM_KEYS`] / [`SERVE_KEYS`] (plus [`CLUSTER_KEYS`] and
-//! [`DISAGG_KEYS`] for the deployment sections and [`TUNE_KEYS`] for
-//! the mapping autotuner); the
+//! [`DISAGG_KEYS`] for the deployment sections, [`TUNE_KEYS`] for
+//! the mapping autotuner, and [`TRACE_KEYS`] / [`FAULTS_KEYS`] for
+//! load-replay traces and cluster fault plans); the
 //! `example_experiment_file_stays_reconciled` test pins that the example
 //! file and this parser stay reconciled, and
 //! `example_serve_file_builds_the_serving_config` pins the worked
@@ -94,6 +95,26 @@ pub const DISAGG_KEYS: [&str; 6] = [
 /// `example_tune_file_stays_reconciled` test.
 pub const TUNE_KEYS: [&str; 2] = ["search", "beam_width"];
 
+/// Every `[trace]` key [`ExperimentConfig::parse`] reads — the
+/// load-replay trace the serving loops draw sessions from instead of
+/// the stationary `[serve]` generator (docs/SERVING.md §8). Either
+/// `file` (an explicit `.trace` schedule the CLI loads) or the
+/// [`crate::workload::TraceSpec`] generator keys, never both. The
+/// worked key set lives in `examples/serve_burst.ini`, pinned by the
+/// `example_serve_burst_file_stays_reconciled` test.
+pub const TRACE_KEYS: [&str; 13] = [
+    "file", "shape", "seed", "sessions", "base_per_sec", "peak_per_sec", "period_sec", "duty_pct",
+    "prefill_lengths", "decode_tokens", "share_pct", "share_span", "interactive_pct",
+];
+
+/// Every `[faults]` key [`ExperimentConfig::parse`] reads — the
+/// cluster fault-injection plan (`numa-attn cluster --faults`,
+/// docs/SERVING.md §9). Either an explicit `events` schedule or the
+/// seeded-plan keys (`seed`/`count`/`horizon_sec`), never both. The
+/// worked key set lives in `examples/faults.ini`, pinned by the
+/// `example_faults_file_stays_reconciled` test.
+pub const FAULTS_KEYS: [&str; 4] = ["events", "seed", "count", "horizon_sec"];
+
 /// Top-level experiment file.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -111,6 +132,10 @@ pub struct ExperimentConfig {
     pub disagg: Option<DisaggSection>,
     /// `[tune]` section (`None` when the file has no such section).
     pub tune: Option<TuneSection>,
+    /// `[trace]` section (`None` when the file has no such section).
+    pub trace: Option<TraceSection>,
+    /// `[faults]` section (`None` when the file has no such section).
+    pub faults: Option<FaultsSection>,
 }
 
 /// `[attention]` section: the workload geometry.
@@ -245,6 +270,63 @@ pub struct TuneSection {
     pub beam_width: Option<usize>,
 }
 
+/// `[trace]` section: a load-replay trace for the serving loops
+/// (docs/SERVING.md §8) — either an explicit `.trace` file or a seeded
+/// bursty/diurnal generator ([`crate::workload::TraceSpec`]). When
+/// present, the serving trace comes from here instead of the
+/// stationary `[serve]` generator; the `[serve]` loop knobs
+/// (`max_active`, `steps`, chunking, the KV pool) still apply.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSection {
+    /// Path to an explicit `.trace` schedule. The CLI loads and parses
+    /// it (this module never touches the filesystem); contradictory
+    /// with the generator keys below.
+    pub file: Option<String>,
+    /// Arrival-rate curve: `"bursty"` (default) or `"diurnal"`.
+    pub shape: Option<String>,
+    /// Generator seed.
+    pub seed: Option<u64>,
+    /// Sessions to emit.
+    pub sessions: Option<usize>,
+    /// Off-burst / trough arrival rate (sessions per second).
+    pub base_per_sec: Option<f64>,
+    /// Burst / crest arrival rate (sessions per second).
+    pub peak_per_sec: Option<f64>,
+    /// Length of one rate cycle in seconds.
+    pub period_sec: Option<f64>,
+    /// Leading percentage of each period at the peak rate (bursty).
+    pub duty_pct: Option<f64>,
+    /// Comma-separated prompt-length mix.
+    pub prefill_lengths: Option<String>,
+    /// Comma-separated decode-budget mix.
+    pub decode_tokens: Option<String>,
+    /// Percentage of sessions on the canonical shared prefix.
+    pub share_pct: Option<f64>,
+    /// Shared-prefix span in tokens (clamped to the prompt).
+    pub share_span: Option<usize>,
+    /// Percentage of sessions in the interactive SLO class.
+    pub interactive_pct: Option<f64>,
+}
+
+/// `[faults]` section: the cluster fault-injection plan
+/// (docs/SERVING.md §9) — either an explicit `events` schedule or a
+/// seeded plan ([`crate::coordinator::FaultSpec`]). Applies to
+/// `numa-attn cluster`; an absent section (or an all-default one)
+/// injects nothing and reproduces the historical cluster output
+/// byte-for-byte.
+#[derive(Debug, Clone, Default)]
+pub struct FaultsSection {
+    /// Explicit schedule, `device:fail_sec:recover_sec` comma-separated;
+    /// contradictory with `count`.
+    pub events: Option<String>,
+    /// Seed for a generated plan.
+    pub seed: Option<u64>,
+    /// Outages to generate (0 = none).
+    pub count: Option<usize>,
+    /// Serve horizon the generated outages are spread across (seconds).
+    pub horizon_sec: Option<f64>,
+}
+
 /// Which pass an experiment file requests ([`ExperimentConfig::kernel`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExpKernel {
@@ -342,6 +424,35 @@ impl ExperimentConfig {
         } else {
             None
         };
+        let trace = if ini.has_section("trace") {
+            Some(TraceSection {
+                file: ini.get("trace", "file").map(|s| s.to_string()),
+                shape: ini.get("trace", "shape").map(|s| s.to_string()),
+                seed: ini.get_parsed("trace", "seed")?,
+                sessions: ini.get_parsed("trace", "sessions")?,
+                base_per_sec: ini.get_parsed("trace", "base_per_sec")?,
+                peak_per_sec: ini.get_parsed("trace", "peak_per_sec")?,
+                period_sec: ini.get_parsed("trace", "period_sec")?,
+                duty_pct: ini.get_parsed("trace", "duty_pct")?,
+                prefill_lengths: ini.get("trace", "prefill_lengths").map(|s| s.to_string()),
+                decode_tokens: ini.get("trace", "decode_tokens").map(|s| s.to_string()),
+                share_pct: ini.get_parsed("trace", "share_pct")?,
+                share_span: ini.get_parsed("trace", "share_span")?,
+                interactive_pct: ini.get_parsed("trace", "interactive_pct")?,
+            })
+        } else {
+            None
+        };
+        let faults = if ini.has_section("faults") {
+            Some(FaultsSection {
+                events: ini.get("faults", "events").map(|s| s.to_string()),
+                seed: ini.get_parsed("faults", "seed")?,
+                count: ini.get_parsed("faults", "count")?,
+                horizon_sec: ini.get_parsed("faults", "horizon_sec")?,
+            })
+        } else {
+            None
+        };
         Ok(ExperimentConfig {
             topology: ini.get("", "topology").unwrap_or("mi300x").to_string(),
             attention,
@@ -350,6 +461,8 @@ impl ExperimentConfig {
             cluster,
             disagg,
             tune,
+            trace,
+            faults,
         })
     }
 
@@ -526,9 +639,105 @@ impl ExperimentConfig {
             prefix_share_pct: s.prefix_share_pct.unwrap_or(defaults.prefix_share_pct),
             kv_capacity_mb: s.kv_capacity_mb.unwrap_or(defaults.kv_capacity_mb),
             seed: s.seed.unwrap_or(defaults.seed),
+            trace: self.trace_spec()?.map(|spec| spec.generate()),
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The explicit `.trace` schedule `[trace] file` names, when the
+    /// section replays a file. This module never touches the
+    /// filesystem — the CLI loads the file and installs the parsed
+    /// [`crate::workload::TraceReplay`] on the serving config itself.
+    pub fn trace_file(&self) -> Option<&str> {
+        self.trace.as_ref()?.file.as_deref()
+    }
+
+    /// Build and validate the generated-trace spec from `[trace]`
+    /// (docs/SERVING.md §8): `None` when the file has no such section
+    /// or when it replays an explicit file instead
+    /// ([`Self::trace_file`]). Every parameter is checked here, at
+    /// parse time, so a bad INI value reports an actionable `[trace]`
+    /// error instead of panicking inside the generator.
+    pub fn trace_spec(&self) -> Result<Option<crate::workload::TraceSpec>, String> {
+        let Some(t) = &self.trace else { return Ok(None) };
+        if t.file.is_some() {
+            if t.shape.is_some()
+                || t.seed.is_some()
+                || t.sessions.is_some()
+                || t.base_per_sec.is_some()
+                || t.peak_per_sec.is_some()
+                || t.period_sec.is_some()
+                || t.duty_pct.is_some()
+                || t.prefill_lengths.is_some()
+                || t.decode_tokens.is_some()
+                || t.share_pct.is_some()
+                || t.share_span.is_some()
+                || t.interactive_pct.is_some()
+            {
+                return Err("[trace] file replays an explicit schedule: the generator keys \
+                     are contradictory — drop them or the file key"
+                    .into());
+            }
+            return Ok(None);
+        }
+        let defaults = crate::workload::TraceSpec::default();
+        let spec = crate::workload::TraceSpec {
+            shape: match t.shape.as_deref() {
+                Some(s) => crate::workload::TraceShape::from_name(s)?,
+                None => defaults.shape,
+            },
+            seed: t.seed.unwrap_or(defaults.seed),
+            sessions: t.sessions.unwrap_or(defaults.sessions),
+            base_per_sec: t.base_per_sec.unwrap_or(defaults.base_per_sec),
+            peak_per_sec: t.peak_per_sec.unwrap_or(defaults.peak_per_sec),
+            period_sec: t.period_sec.unwrap_or(defaults.period_sec),
+            duty_pct: t.duty_pct.unwrap_or(defaults.duty_pct),
+            prefill_lengths: match &t.prefill_lengths {
+                Some(list) => parse_usize_list("trace.prefill_lengths", list)?,
+                None => defaults.prefill_lengths,
+            },
+            decode_tokens: match &t.decode_tokens {
+                Some(list) => parse_usize_list("trace.decode_tokens", list)?,
+                None => defaults.decode_tokens,
+            },
+            share_pct: t.share_pct.unwrap_or(defaults.share_pct),
+            share_span: t.share_span.unwrap_or(defaults.share_span),
+            interactive_pct: t.interactive_pct.unwrap_or(defaults.interactive_pct),
+        };
+        spec.validate()?;
+        Ok(Some(spec))
+    }
+
+    /// Build the cluster fault-injection spec from `[faults]`
+    /// (docs/SERVING.md §9): the all-default (inject-nothing) spec when
+    /// the file has no such section. The explicit `events` schedule is
+    /// format-checked here, at parse time, so a malformed INI value
+    /// reports an actionable `[faults]` error up front; device-range
+    /// checks need the cluster size and run when the spec resolves
+    /// against it ([`crate::coordinator::FaultSpec::resolve`]).
+    pub fn fault_spec(&self) -> Result<crate::coordinator::FaultSpec, String> {
+        let defaults = crate::coordinator::FaultSpec::default();
+        let Some(f) = &self.faults else { return Ok(defaults) };
+        let spec = crate::coordinator::FaultSpec {
+            events: f.events.clone().unwrap_or_default(),
+            seed: f.seed.unwrap_or(defaults.seed),
+            count: f.count.unwrap_or(defaults.count),
+            horizon_sec: f.horizon_sec.unwrap_or(defaults.horizon_sec),
+        };
+        if !spec.events.is_empty() && spec.count > 0 {
+            return Err("[faults] events and count are contradictory: an explicit schedule \
+                 already fixes the plan — drop count or the events list"
+                .into());
+        }
+        crate::coordinator::FaultPlan::parse(&spec.events)?;
+        if spec.count > 0 && !(spec.horizon_sec > 0.0 && spec.horizon_sec.is_finite()) {
+            return Err(format!(
+                "[faults] horizon_sec must be > 0 to seed a plan, got {}",
+                spec.horizon_sec
+            ));
+        }
+        Ok(spec)
     }
 
     /// Build the disaggregated serving configuration: the serving loop
@@ -1288,6 +1497,222 @@ d_head = 64
             assert!(
                 documented.contains(&key),
                 "examples/tune.ini does not document the [tune] key '{key}'"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_section_round_trips_and_validates() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        // No [trace] section: no spec, no file, and the serving config
+        // keeps the stationary generator (trace = None).
+        let c = ExperimentConfig::parse(base).unwrap();
+        assert!(c.trace.is_none());
+        assert!(c.trace_spec().unwrap().is_none());
+        assert_eq!(c.trace_file(), None);
+        assert!(c.serve_config().unwrap().trace.is_none());
+
+        // Every generator key lands where docs/SERVING.md §8 says, and
+        // the serving config carries the generated schedule.
+        let on = format!(
+            "{base}\n[trace]\nshape = \"diurnal\"\nseed = 21\nsessions = 12\n\
+             base_per_sec = 50\npeak_per_sec = 500\nperiod_sec = 0.5\nduty_pct = 20\n\
+             prefill_lengths = \"1024,4096\"\ndecode_tokens = \"16,64\"\n\
+             share_pct = 50\nshare_span = 512\ninteractive_pct = 25\n"
+        );
+        let c = ExperimentConfig::parse(&on).unwrap();
+        let spec = c.trace_spec().unwrap().unwrap();
+        assert_eq!(spec.shape, crate::workload::TraceShape::Diurnal);
+        assert_eq!((spec.seed, spec.sessions), (21, 12));
+        assert_eq!((spec.base_per_sec, spec.peak_per_sec), (50.0, 500.0));
+        assert_eq!((spec.period_sec, spec.duty_pct), (0.5, 20.0));
+        assert_eq!(spec.prefill_lengths, vec![1024, 4096]);
+        assert_eq!(spec.decode_tokens, vec![16, 64]);
+        assert_eq!((spec.share_pct, spec.share_span), (50.0, 512));
+        assert_eq!(spec.interactive_pct, 25.0);
+        let cfg = c.serve_config().unwrap();
+        assert_eq!(cfg.trace.as_ref().map(|t| t.len()), Some(12));
+
+        // A file-replay section defers loading to the CLI.
+        let file = format!("{base}\n[trace]\nfile = \"examples/bursty.trace\"\n");
+        let c = ExperimentConfig::parse(&file).unwrap();
+        assert_eq!(c.trace_file(), Some("examples/bursty.trace"));
+        assert!(c.trace_spec().unwrap().is_none());
+        assert!(c.serve_config().unwrap().trace.is_none());
+
+        // file + generator keys is contradictory.
+        let both = format!("{base}\n[trace]\nfile = \"x.trace\"\nseed = 3\n");
+        let err = ExperimentConfig::parse(&both).unwrap().trace_spec().unwrap_err();
+        assert!(err.contains("contradictory"), "{err}");
+
+        // Bad values error at parse time with [trace]-prefixed messages
+        // instead of panicking inside the generator.
+        for (frag, needle) in [
+            ("shape = \"weekly\"", "unknown trace shape"),
+            ("sessions = 0", "[trace] sessions"),
+            ("base_per_sec = 0", "[trace] base_per_sec"),
+            ("peak_per_sec = 1", "[trace] peak_per_sec"),
+            ("period_sec = 0", "[trace] period_sec"),
+            ("duty_pct = 200", "[trace] duty_pct"),
+            ("prefill_lengths = \"0\"", "trace.prefill_lengths"),
+            ("decode_tokens = \"4,zebra\"", "trace.decode_tokens"),
+            ("share_pct = -1", "[trace] share_pct"),
+            ("interactive_pct = 150", "[trace] interactive_pct"),
+        ] {
+            let bad = format!("{base}\n[trace]\n{frag}\n");
+            let err = ExperimentConfig::parse(&bad).unwrap().trace_spec().unwrap_err();
+            assert!(err.contains(needle), "{frag}: {err}");
+            // The serving-config builder surfaces the same error.
+            assert!(ExperimentConfig::parse(&bad).unwrap().serve_config().is_err(), "{frag}");
+        }
+    }
+
+    #[test]
+    fn faults_section_builds_the_spec_and_rejects_garbage() {
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        // No [faults] section: the inject-nothing default.
+        let c = ExperimentConfig::parse(base).unwrap();
+        assert!(c.faults.is_none());
+        assert!(c.fault_spec().unwrap().is_none());
+
+        // An explicit schedule lands verbatim.
+        let events = format!("{base}\n[faults]\nevents = \"1:0.2:0.4,0:0.5:0.6\"\n");
+        let spec = ExperimentConfig::parse(&events).unwrap().fault_spec().unwrap();
+        assert_eq!(spec.events, "1:0.2:0.4,0:0.5:0.6");
+        assert!(!spec.is_none());
+
+        // Seeded-plan keys land with defaults for the rest.
+        let seeded = format!("{base}\n[faults]\ncount = 2\nseed = 99\nhorizon_sec = 0.25\n");
+        let spec = ExperimentConfig::parse(&seeded).unwrap().fault_spec().unwrap();
+        assert_eq!((spec.count, spec.seed), (2, 99));
+        assert_eq!(spec.horizon_sec, 0.25);
+        assert!(!spec.is_none());
+
+        // Degenerate sections are rejected at parse time with
+        // [faults]-prefixed messages.
+        let both = format!("{base}\n[faults]\nevents = \"0:0.1:0.2\"\ncount = 2\n");
+        let err = ExperimentConfig::parse(&both).unwrap().fault_spec().unwrap_err();
+        assert!(err.contains("contradictory"), "{err}");
+        let garbled = format!("{base}\n[faults]\nevents = \"0:0.1\"\n");
+        let err = ExperimentConfig::parse(&garbled).unwrap().fault_spec().unwrap_err();
+        assert!(err.contains("[faults]"), "{err}");
+        let horizon = format!("{base}\n[faults]\ncount = 2\nhorizon_sec = 0\n");
+        let err = ExperimentConfig::parse(&horizon).unwrap().fault_spec().unwrap_err();
+        assert!(err.contains("horizon_sec"), "{err}");
+    }
+
+    #[test]
+    fn serve_section_rejects_generator_poisons_at_parse_time() {
+        // The values that used to reach SessionGenerator::new's asserts
+        // (and panic) from an experiment file must instead surface as
+        // config errors naming the offending key.
+        let base = r#"
+[attention]
+batch = 1
+h_q = 16
+h_k = 8
+n_ctx = 8192
+d_head = 64
+"#;
+        for (frag, needle) in [
+            ("arrival_per_sec = 0", "arrival_per_sec"),
+            ("arrival_per_sec = -80", "arrival_per_sec"),
+            ("sessions = 0", "sessions"),
+            ("max_active = 0", "max_active"),
+            ("steps = 0", "max_steps"),
+            ("kv_bucket = 0", "kv_bucket"),
+            ("prefill_lengths = \"999999\"", "KV capacity"),
+        ] {
+            let bad = format!("{base}\n[serve]\n{frag}\n");
+            let err = ExperimentConfig::parse(&bad).unwrap().serve_config().unwrap_err();
+            assert!(err.contains(needle), "{frag}: {err}");
+        }
+    }
+
+    #[test]
+    fn example_serve_burst_file_stays_reconciled() {
+        // Same contract as `example_serve_file_builds_the_serving_config`,
+        // for the worked bursty-trace scenario (docs/SERVING.md §8): the
+        // file must parse, generate the trace it documents, and every
+        // key its reference block documents must be one the parser reads
+        // — with the full [trace] key set covered.
+        let text = include_str!("../../../examples/serve_burst.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        let spec = c.trace_spec().unwrap().expect("worked example generates its trace");
+        assert_eq!(spec.shape, crate::workload::TraceShape::Bursty);
+        let cfg = c.serve_config().unwrap();
+        let trace = cfg.trace.as_ref().expect("serving config carries the trace");
+        assert_eq!(trace.len(), spec.sessions);
+        assert!(trace.sessions().iter().all(|s| s.prefill <= cfg.kv_cap));
+
+        let documented = documented_keys(text);
+        for key in &documented {
+            assert!(
+                *key == "topology"
+                    || ATTENTION_KEYS.contains(key)
+                    || SIM_KEYS.contains(key)
+                    || SERVE_KEYS.contains(key)
+                    || TRACE_KEYS.contains(key),
+                "examples/serve_burst.ini documents key '{key}' the parser does not read"
+            );
+        }
+        for key in TRACE_KEYS {
+            assert!(
+                documented.contains(&key),
+                "examples/serve_burst.ini does not document the [trace] key '{key}'"
+            );
+        }
+    }
+
+    #[test]
+    fn example_faults_file_stays_reconciled() {
+        // Same contract as `example_cluster_file_stays_reconciled`, for
+        // the worked fault-injection scenario (docs/SERVING.md §9): the
+        // file must parse, build the cluster it documents, resolve its
+        // fault plan against that cluster, and every key its reference
+        // block documents must be one the parser reads — with the full
+        // [faults] key set covered.
+        let text = include_str!("../../../examples/faults.ini");
+        let c = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(c.topology, "mi300x");
+        let cluster = c.cluster_topology().unwrap();
+        let spec = c.fault_spec().unwrap();
+        assert!(!spec.is_none(), "worked example injects faults");
+        let plan = spec.resolve(cluster.num_devices()).unwrap();
+        assert!(!plan.is_empty());
+        c.serve_config().unwrap();
+
+        let documented = documented_keys(text);
+        for key in &documented {
+            assert!(
+                *key == "topology"
+                    || ATTENTION_KEYS.contains(key)
+                    || SIM_KEYS.contains(key)
+                    || SERVE_KEYS.contains(key)
+                    || CLUSTER_KEYS.contains(key)
+                    || FAULTS_KEYS.contains(key),
+                "examples/faults.ini documents key '{key}' the parser does not read"
+            );
+        }
+        for key in FAULTS_KEYS {
+            assert!(
+                documented.contains(&key),
+                "examples/faults.ini does not document the [faults] key '{key}'"
             );
         }
     }

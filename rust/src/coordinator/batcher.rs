@@ -437,6 +437,31 @@ impl StepBatcher {
         out
     }
 
+    /// Evict the whole active set back into the backlog — the fault
+    /// path's re-queue (docs/SERVING.md §9): when devices drop mid-step,
+    /// every in-flight session loses its (device-resident) KV state, so
+    /// progress resets — prefill restarts from zero and the decode
+    /// counter rewinds; already-emitted tokens stay counted in the
+    /// loop's totals, so conservation checks must use completions, not
+    /// token counts, across a fault. Re-queued sessions keep their
+    /// original arrival times and ids and the backlog re-sorts to
+    /// arrival order, so post-fault admission is deterministic. Returns
+    /// the evicted sessions in admission order (the caller releases
+    /// their KV leases and re-routes them).
+    pub fn requeue_active(&mut self) -> Vec<Session> {
+        let evicted: Vec<Session> =
+            self.active.drain(..).map(|a| a.session).collect();
+        for s in &evicted {
+            self.backlog.push_back(s.clone());
+        }
+        let mut sorted: Vec<Session> = std::mem::take(&mut self.backlog).into();
+        sorted.sort_by(|a, b| {
+            a.arrival_sec.total_cmp(&b.arrival_sec).then(a.id.cmp(&b.id))
+        });
+        self.backlog = sorted.into();
+        evicted
+    }
+
     /// Drain every prefill-complete active session — the disaggregated
     /// prefill pool's handoff point (docs/DISAGG.md): sessions leave
     /// this batcher the moment their prompt is fully prefilled and
@@ -726,6 +751,36 @@ mod tests {
                 PrefillChunk { id: 1, start: 512, end: 1024 },
             ]
         );
+    }
+
+    #[test]
+    fn requeue_active_resets_progress_and_restores_arrival_order() {
+        let trace = vec![sess(0, 0.0, 4), sess(1, 0.1, 4), sess(2, 0.2, 4), sess(3, 9.0, 4)];
+        let mut b = StepBatcher::new(trace, 2, 0);
+        b.admit(0.5);
+        b.advance_step(); // ids 0, 1 each emit one token
+        let evicted = b.requeue_active();
+        assert_eq!(evicted.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(b.active().is_empty());
+        assert_eq!(b.backlog_len(), 4);
+        assert_eq!(b.completed(), 0, "eviction is not completion");
+        // Re-admission runs in arrival order, ahead of the never-admitted
+        // later arrivals, and progress restarts from zero.
+        let newly = b.admit(0.5);
+        assert_eq!(newly.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(b.active().iter().all(|a| a.generated == 0));
+        // Each session re-admits exactly once: drain to completion and
+        // count retirements.
+        let mut guard = 0;
+        while !b.done() {
+            b.advance_step();
+            b.admit(10.0);
+            guard += 1;
+            assert!(guard < 40, "loop must terminate");
+        }
+        assert_eq!(b.completed(), 4);
+        // An empty active set requeues nothing.
+        assert!(b.requeue_active().is_empty());
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::cluster::{ClusterTopology, PoolKind, ShardPlan, ShardStrategy};
 use crate::driver::{self, SimDriver};
 use crate::mapping::Policy;
 use crate::mem::{block_bytes, prompt_keys, KvPool};
-use crate::metrics::{percentile, Table};
+use crate::metrics::Table;
 use crate::topology::Topology;
 use crate::util::json::Json;
 use crate::workload::{Session, SessionGenerator, SloClass};
@@ -42,7 +42,10 @@ use super::advisor;
 use super::batcher::{PrefillChunk, StepBatcher};
 use super::executor::{ClusterExecutor, StepExecutor};
 use super::router::SessionRouter;
-use super::service::{serve_decode_cluster_with, serve_decode_with, ServeConfig, ServeStats};
+use super::service::{
+    fmt_ms, ms_json, pctl_or_nan, serve_decode_cluster_with, serve_decode_with, ServeConfig,
+    ServeStats,
+};
 
 /// Configuration of one disaggregated serving run: the base serving
 /// knobs plus the pool split, interconnect, and SLO policy. Maps to the
@@ -172,22 +175,23 @@ impl ClassStats {
         ClassStats {
             sessions: ttft_ms.len(),
             tokens,
-            ttft_p50_ms: percentile(ttft_ms, 0.50),
-            ttft_p99_ms: percentile(ttft_ms, 0.99),
-            tpot_p50_ms: percentile(tpot_ms, 0.50),
-            tpot_p99_ms: percentile(tpot_ms, 0.99),
+            ttft_p50_ms: pctl_or_nan(ttft_ms, 0.50),
+            ttft_p99_ms: pctl_or_nan(ttft_ms, 0.99),
+            tpot_p50_ms: pctl_or_nan(tpot_ms, 0.50),
+            tpot_p99_ms: pctl_or_nan(tpot_ms, 0.99),
         }
     }
 
-    /// JSON rendering (stable key order).
+    /// JSON rendering (stable key order). A class no session reached
+    /// renders its latency stats as `null`, not a perfect 0.0 ms.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("sessions", Json::num(self.sessions as f64)),
             ("tokens", Json::num(self.tokens as f64)),
-            ("ttft_p50_ms", Json::num(self.ttft_p50_ms)),
-            ("ttft_p99_ms", Json::num(self.ttft_p99_ms)),
-            ("tpot_p50_ms", Json::num(self.tpot_p50_ms)),
-            ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
+            ("ttft_p50_ms", ms_json(self.ttft_p50_ms)),
+            ("ttft_p99_ms", ms_json(self.ttft_p99_ms)),
+            ("tpot_p50_ms", ms_json(self.tpot_p50_ms)),
+            ("tpot_p99_ms", ms_json(self.tpot_p99_ms)),
         ])
     }
 }
@@ -473,19 +477,27 @@ fn run_disagg_loop(
     let link = &decode_cluster;
 
     let serve = &cfg.serve;
-    let mut gen = SessionGenerator::new(
-        serve.seed,
-        serve.arrival_per_sec,
-        serve.prefill_lengths.clone(),
-        serve.decode_tokens.clone(),
-    );
-    if serve.prefix_share_pct > 0.0 {
-        gen = gen.with_prefix_sharing(serve.prefix_share_pct, serve.shared_span());
-    }
-    if cfg.interactive_pct > 0.0 {
-        gen = gen.with_slo_classes(cfg.interactive_pct);
-    }
-    let sessions = gen.take(serve.sessions);
+    // A replayed trace supplies the sessions verbatim — arrival process,
+    // mix, shared prefixes, and SLO classes all come from its rows, so
+    // the generator knobs (including `interactive_pct`) are ignored.
+    let sessions = match &serve.trace {
+        Some(t) => t.sessions().to_vec(),
+        None => {
+            let mut gen = SessionGenerator::new(
+                serve.seed,
+                serve.arrival_per_sec,
+                serve.prefill_lengths.clone(),
+                serve.decode_tokens.clone(),
+            );
+            if serve.prefix_share_pct > 0.0 {
+                gen = gen.with_prefix_sharing(serve.prefix_share_pct, serve.shared_span());
+            }
+            if cfg.interactive_pct > 0.0 {
+                gen = gen.with_slo_classes(cfg.interactive_pct);
+            }
+            gen.take(serve.sessions)
+        }
+    };
     let total_sessions = sessions.len();
     // The session router: every session's phase placement is a pure
     // function of the deployment shape (property-pinned).
@@ -809,10 +821,10 @@ fn run_disagg_loop(
         steps: prefill_steps + decode_steps,
         sim_sec,
         tokens_per_sec: if sim_sec > 0.0 { tokens as f64 / sim_sec } else { 0.0 },
-        tpot_p50_ms: percentile(&tpot_ms, 0.50),
-        tpot_p99_ms: percentile(&tpot_ms, 0.99),
-        ttft_p50_ms: percentile(&ttft_ms, 0.50),
-        ttft_p99_ms: percentile(&ttft_ms, 0.99),
+        tpot_p50_ms: pctl_or_nan(&tpot_ms, 0.50),
+        tpot_p99_ms: pctl_or_nan(&tpot_ms, 0.99),
+        ttft_p50_ms: pctl_or_nan(&ttft_ms, 0.50),
+        ttft_p99_ms: pctl_or_nan(&ttft_ms, 0.99),
         prefill_sec,
         prefill_tokens,
         decode_l2_hit_pct: if l2_hits + l2_misses > 0 {
@@ -1016,8 +1028,8 @@ impl DisaggReport {
             for s in &row.stats {
                 let (int_ttft, bat_ttft, handoffs, xfer, credit, preempt) = match &s.extras {
                     Some(e) => (
-                        format!("{:.3}", e.interactive.ttft_p99_ms),
-                        format!("{:.3}", e.batch.ttft_p99_ms),
+                        fmt_ms(e.interactive.ttft_p99_ms),
+                        fmt_ms(e.batch.ttft_p99_ms),
                         e.handoffs.to_string(),
                         format!("{:.1}", e.handoff_transferred_bytes as f64 / (1024.0 * 1024.0)),
                         format!("{:.1}", e.handoff_credited_bytes as f64 / (1024.0 * 1024.0)),
@@ -1030,8 +1042,8 @@ impl DisaggReport {
                     format!("{:.0}", s.serve.tokens_per_sec),
                     int_ttft,
                     bat_ttft,
-                    format!("{:.3}", s.serve.ttft_p99_ms),
-                    format!("{:.3}", s.serve.tpot_p50_ms),
+                    fmt_ms(s.serve.ttft_p99_ms),
+                    fmt_ms(s.serve.tpot_p50_ms),
                     handoffs,
                     xfer,
                     credit,

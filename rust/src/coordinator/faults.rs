@@ -1,0 +1,1139 @@
+//! Cluster fault injection for the decode serving loop
+//! (docs/SERVING.md §9): seeded device fail/recover plans, mid-serve
+//! rebalancing onto the surviving devices, and degraded-interval
+//! reporting.
+//!
+//! The model follows from tensor parallelism: every active session's KV
+//! cache is sharded across *all* serving devices
+//! ([`crate::cluster::ShardPlan`]), so losing any one device invalidates
+//! the whole active set — there is no per-device subset of sessions to
+//! salvage. A fault transition therefore:
+//!
+//! 1. force-releases the active sessions' KV-pool leases (when the paged
+//!    pool is on) and re-queues them through the [`SessionRouter`] — they
+//!    re-admit in arrival order with their prefill restarted (emitted
+//!    tokens stay counted, so conservation is checked on *completions*);
+//! 2. re-forms the shard plan at the widest valid tensor-parallel width
+//!    that fits the survivors (a valid width divides the model's KV heads
+//!    and keeps the policy applicable on the shard-local geometry);
+//! 3. prices the transition: a point-to-point transfer of the evicted
+//!    KV bytes plus one output all-gather barrier on the new cluster.
+//!
+//! Transitions take effect at decode-step boundaries — a step in flight
+//! when the fault lands completes at its pre-fault price, exactly as a
+//! kernel already dispatched would. With every device down the clock
+//! jumps to the next recovery; with an empty fault plan the run delegates
+//! to [`serve_decode_cluster_with`] and is byte-identical to the
+//! historical cluster serving output (pinned by `tests/cluster_serving.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterTopology, PoolKind, ShardPlan, ShardStrategy};
+use crate::driver::{self, SimDriver};
+use crate::mapping::Policy;
+use crate::mem::prompt_keys;
+use crate::metrics::Table;
+use crate::topology::Topology;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use crate::workload::sweeps::CLUSTER_TP;
+
+use super::advisor;
+use super::batcher::{PrefillChunk, StepBatcher};
+use super::executor::{ClusterExecutor, StepExecutor};
+use super::router::SessionRouter;
+use super::service::{
+    cluster_scenarios, fmt_ms, ms_json, pctl_or_nan, serve_decode_cluster_with, ServeConfig,
+    ServeStats,
+};
+
+/// Stream-splitting constant for the seeded fault plan, XORed into the
+/// user seed so fault draws never correlate with the arrival/mix/share
+/// streams of [`crate::workload::SessionGenerator`].
+const FAULT_STREAM: u64 = 0xFA17_C0DE_BAD5_EED5;
+
+/// One planned outage: `device` drops at `fail_sec` (simulated seconds)
+/// and comes back at `recover_sec`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Device index within the serving cluster (`0..tp`).
+    pub device: usize,
+    /// Simulated time the device drops.
+    pub fail_sec: f64,
+    /// Simulated time the device returns (strictly after `fail_sec`).
+    pub recover_sec: f64,
+}
+
+/// A deterministic cluster fault plan: the full outage schedule, known
+/// up front (this is a simulator — reproducibility beats surprise).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Planned outages, in no particular order.
+    pub events: Vec<FaultEvent>,
+}
+
+/// One health transition derived from a [`FaultEvent`] endpoint.
+#[derive(Debug, Clone, Copy)]
+struct Transition {
+    time: f64,
+    device: usize,
+    /// `true` = recovery, `false` = failure.
+    up: bool,
+}
+
+impl FaultPlan {
+    /// True when the plan schedules no outages (the byte-pinned
+    /// delegation path).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the CLI/INI event list: comma-separated
+    /// `device:fail_sec:recover_sec` triples. Empty (or all-whitespace)
+    /// input is the empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() != 3 {
+                return Err(format!(
+                    "[faults] event '{part}' must be device:fail_sec:recover_sec"
+                ));
+            }
+            let device = fields[0]
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("[faults] bad device index in '{part}'"))?;
+            let fail_sec = fields[1]
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| format!("[faults] bad fail_sec in '{part}'"))?;
+            let recover_sec = fields[2]
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| format!("[faults] bad recover_sec in '{part}'"))?;
+            events.push(FaultEvent { device, fail_sec, recover_sec });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Render the plan back to the [`FaultPlan::parse`] grammar.
+    pub fn render(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| format!("{}:{}:{}", e.device, e.fail_sec, e.recover_sec))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// A seeded plan of `count` outages over `horizon_sec` of simulated
+    /// time across `devices` devices. The horizon is partitioned into
+    /// `count` equal slots and each outage stays inside its own slot, so
+    /// same-device outages can never overlap and the plan always passes
+    /// [`FaultPlan::validate`]. Device draws use
+    /// [`SplitMix64::gen_range_unbiased`] — new code takes the unbiased
+    /// mapping; only the frozen [`SplitMix64::gen_range`] traces keep
+    /// the historical modulo.
+    pub fn seeded(seed: u64, devices: usize, count: usize, horizon_sec: f64) -> FaultPlan {
+        assert!(devices > 0, "seeded fault plan needs at least one device");
+        assert!(
+            horizon_sec.is_finite() && horizon_sec > 0.0,
+            "seeded fault plan needs a positive horizon"
+        );
+        let mut rng = SplitMix64::new(seed ^ FAULT_STREAM);
+        let slot = horizon_sec / count.max(1) as f64;
+        let events = (0..count)
+            .map(|i| {
+                let device = rng.gen_range_unbiased(devices as u64) as usize;
+                let fail_sec = i as f64 * slot + rng.next_f64() * 0.5 * slot;
+                let outage = (0.1 + 0.8 * rng.next_f64()) * 0.5 * slot;
+                FaultEvent { device, fail_sec, recover_sec: fail_sec + outage }
+            })
+            .collect();
+        FaultPlan { events }
+    }
+
+    /// Check the plan against a cluster of `devices` devices: indices in
+    /// range, finite non-negative times, recovery strictly after failure,
+    /// and no overlapping (or touching) outages on one device — a device
+    /// cannot fail while already down.
+    pub fn validate(&self, devices: usize) -> Result<(), String> {
+        if devices == 0 {
+            return Err("[faults] the cluster needs at least one device".into());
+        }
+        for e in &self.events {
+            if e.device >= devices {
+                return Err(format!(
+                    "[faults] device {} is outside the cluster (valid devices are 0..{})",
+                    e.device, devices
+                ));
+            }
+            if !e.fail_sec.is_finite() || e.fail_sec < 0.0 {
+                return Err(format!(
+                    "[faults] fail_sec {} on device {} must be finite and >= 0",
+                    e.fail_sec, e.device
+                ));
+            }
+            if !e.recover_sec.is_finite() || e.recover_sec <= e.fail_sec {
+                return Err(format!(
+                    "[faults] recover_sec {} on device {} must be finite and after fail_sec {}",
+                    e.recover_sec, e.device, e.fail_sec
+                ));
+            }
+        }
+        let mut by_dev: BTreeMap<usize, Vec<(f64, f64)>> = BTreeMap::new();
+        for e in &self.events {
+            by_dev.entry(e.device).or_default().push((e.fail_sec, e.recover_sec));
+        }
+        for (d, mut spans) in by_dev {
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in spans.windows(2) {
+                if w[1].0 <= w[0].1 {
+                    return Err(format!(
+                        "[faults] device {d} outages [{}, {}] and [{}, {}] overlap: a device \
+                         cannot fail while already down",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The plan's health transitions, sorted by time (failures before
+    /// recoveries at equal instants, then by device) — the deterministic
+    /// order the serving loop applies them in.
+    fn timeline(&self) -> Vec<Transition> {
+        let mut t: Vec<Transition> = self
+            .events
+            .iter()
+            .flat_map(|e| {
+                [
+                    Transition { time: e.fail_sec, device: e.device, up: false },
+                    Transition { time: e.recover_sec, device: e.device, up: true },
+                ]
+            })
+            .collect();
+        t.sort_by(|a, b| {
+            a.time.total_cmp(&b.time).then(a.up.cmp(&b.up)).then(a.device.cmp(&b.device))
+        });
+        t
+    }
+}
+
+/// The `[faults]` INI / `--faults` CLI surface: either an explicit event
+/// list (wins when non-empty) or a seeded plan, resolved against the
+/// cluster size at run time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Explicit plan in the [`FaultPlan::parse`] grammar; empty = unset.
+    pub events: String,
+    /// Seed of the generated plan (`[faults] seed`).
+    pub seed: u64,
+    /// Outages to generate (`[faults] count`); `0` = no seeded plan.
+    pub count: usize,
+    /// Simulated horizon the seeded outages spread over
+    /// (`[faults] horizon_sec`).
+    pub horizon_sec: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { events: String::new(), seed: 13, count: 0, horizon_sec: 0.1 }
+    }
+}
+
+impl FaultSpec {
+    /// True when neither an explicit nor a seeded plan is configured —
+    /// the serving paths then skip fault injection entirely.
+    pub fn is_none(&self) -> bool {
+        self.events.trim().is_empty() && self.count == 0
+    }
+
+    /// Resolve to a concrete validated [`FaultPlan`] for a cluster of
+    /// `devices` devices.
+    pub fn resolve(&self, devices: usize) -> Result<FaultPlan, String> {
+        let plan = if !self.events.trim().is_empty() {
+            FaultPlan::parse(&self.events)?
+        } else if self.count > 0 {
+            if devices == 0 {
+                return Err("[faults] the cluster needs at least one device".into());
+            }
+            if !self.horizon_sec.is_finite() || self.horizon_sec <= 0.0 {
+                return Err(format!(
+                    "[faults] horizon_sec ({}) must be > 0 for a seeded plan",
+                    self.horizon_sec
+                ));
+            }
+            FaultPlan::seeded(self.seed, devices, self.count, self.horizon_sec)
+        } else {
+            FaultPlan::default()
+        };
+        plan.validate(devices)?;
+        Ok(plan)
+    }
+}
+
+/// One serving interval at a fixed tensor-parallel width, delimited by
+/// fault transitions: the `serve_burst` figure's time axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultWindow {
+    /// Simulated start of the window.
+    pub start_sec: f64,
+    /// Simulated end of the window.
+    pub end_sec: f64,
+    /// Serving width during the window (`0` = total blackout).
+    pub width: usize,
+    /// Decode tokens emitted in the window.
+    pub tokens: u64,
+    /// Busy simulated seconds (step + reshard charges; idle jumps to
+    /// arrivals or recoveries excluded).
+    pub busy_sec: f64,
+    /// `tokens / busy_sec` (NaN when the window never served).
+    pub tokens_per_sec: f64,
+    /// 99th-percentile TTFT of first tokens emitted in the window, ms
+    /// (NaN when none were).
+    pub ttft_p99_ms: f64,
+}
+
+impl FaultWindow {
+    /// JSON rendering (stable key order); NaN sentinels render `null`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("start_sec", Json::num(self.start_sec)),
+            ("end_sec", Json::num(self.end_sec)),
+            ("width", Json::num(self.width as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("busy_sec", Json::num(self.busy_sec)),
+            ("tokens_per_sec", ms_json(self.tokens_per_sec)),
+            ("ttft_p99_ms", ms_json(self.ttft_p99_ms)),
+        ])
+    }
+}
+
+/// Fault-injection extras riding on one serving run's [`ServeStats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultExtras {
+    /// Health transitions applied (each fail and each recovery counts).
+    pub events_applied: usize,
+    /// Transitions that changed the serving width (shard-plan re-forms).
+    pub rebalances: usize,
+    /// KV-pool leases force-released by evictions (0 with the pool off).
+    pub forced_releases: usize,
+    /// Session evictions re-queued through the router (a session evicted
+    /// twice counts twice).
+    pub requeued: usize,
+    /// Wall-simulated seconds spent below full width.
+    pub degraded_sec: f64,
+    /// Busy-time decode throughput over the full-width windows (NaN when
+    /// the run never served at full width).
+    pub healthy_tokens_per_sec: f64,
+    /// Busy-time decode throughput over the below-width windows (NaN
+    /// when the run never degraded while serving).
+    pub degraded_tokens_per_sec: f64,
+    /// Throughput of the last full-width window over the first — how
+    /// much of the healthy rate recovery restored (NaN without two
+    /// full-width serving windows).
+    pub recovery_ratio: f64,
+    /// Serving windows in time order.
+    pub windows: Vec<FaultWindow>,
+}
+
+impl FaultExtras {
+    /// JSON rendering (stable key order); NaN sentinels render `null`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events_applied", Json::num(self.events_applied as f64)),
+            ("rebalances", Json::num(self.rebalances as f64)),
+            ("forced_releases", Json::num(self.forced_releases as f64)),
+            ("requeued", Json::num(self.requeued as f64)),
+            ("degraded_sec", Json::num(self.degraded_sec)),
+            ("healthy_tokens_per_sec", ms_json(self.healthy_tokens_per_sec)),
+            ("degraded_tokens_per_sec", ms_json(self.degraded_tokens_per_sec)),
+            ("recovery_ratio", ms_json(self.recovery_ratio)),
+            ("windows", Json::arr(self.windows.iter().map(FaultWindow::to_json))),
+        ])
+    }
+}
+
+/// [`ServeStats`] plus the fault extras. With an empty plan `faults` is
+/// `None` and [`FaultyServeStats::to_json`] is byte-identical to the
+/// plain [`ServeStats::to_json`] — the golden-pin contract.
+#[derive(Debug, Clone)]
+pub struct FaultyServeStats {
+    /// The base serving stats (same semantics as a fault-free run; token
+    /// counts include pre-eviction partial progress).
+    pub serve: ServeStats,
+    /// Fault accounting, present only when the plan scheduled outages.
+    pub faults: Option<FaultExtras>,
+}
+
+impl FaultyServeStats {
+    /// JSON rendering: exactly [`ServeStats::to_json`] with an empty
+    /// plan, else the same object with a trailing `"faults"` key.
+    pub fn to_json(&self) -> Json {
+        match &self.faults {
+            None => self.serve.to_json(),
+            Some(f) => {
+                let mut obj = match self.serve.to_json() {
+                    Json::Obj(pairs) => pairs,
+                    _ => unreachable!("ServeStats::to_json returns an object"),
+                };
+                obj.push(("faults".into(), f.to_json()));
+                Json::Obj(obj)
+            }
+        }
+    }
+}
+
+/// Event log of one faulty serving run, for the invariant suite
+/// (`tests/failure_injection.rs`): exactly-once completion, eviction /
+/// re-admission pairing, and lease conservation are all checked off
+/// this rather than aggregate counters. Empty on the empty-plan
+/// delegation path.
+#[derive(Debug, Clone, Default)]
+pub struct FaultTrace {
+    /// Session ids in admission order (re-admissions repeat the id).
+    pub admissions: Vec<u64>,
+    /// Session ids in retirement order.
+    pub completions: Vec<u64>,
+    /// Session ids evicted by fault transitions, in eviction order.
+    pub evictions: Vec<u64>,
+    /// Applied transitions: (simulated apply time, device, is-recovery).
+    pub transitions: Vec<(f64, usize, bool)>,
+    /// KV-pool block references still held when the run ended (0 with
+    /// the pool off — and 0 with it on, unless a lease leaked).
+    pub leases_at_end: usize,
+}
+
+/// [`serve_decode_faulty_with`] through the process-wide shared driver.
+pub fn serve_decode_faulty(
+    device: &Topology,
+    tp: usize,
+    cfg: &ServeConfig,
+    policy: Policy,
+    plan: &FaultPlan,
+) -> FaultyServeStats {
+    serve_decode_faulty_with(driver::global(), device, tp, cfg, policy, plan)
+}
+
+/// Run the continuous-batching decode serving loop on a `tp`-device
+/// cluster of `device`s under a fault plan (module docs have the fault
+/// model). An empty plan delegates to [`serve_decode_cluster_with`] —
+/// byte-identical output, `faults: None`.
+pub fn serve_decode_faulty_with(
+    driver: &SimDriver,
+    device: &Topology,
+    tp: usize,
+    cfg: &ServeConfig,
+    policy: Policy,
+    plan: &FaultPlan,
+) -> FaultyServeStats {
+    serve_decode_faulty_traced(driver, device, tp, cfg, policy, plan).0
+}
+
+/// [`serve_decode_faulty_with`] plus the [`FaultTrace`] event log the
+/// invariant suite audits.
+pub fn serve_decode_faulty_traced(
+    driver: &SimDriver,
+    device: &Topology,
+    tp: usize,
+    cfg: &ServeConfig,
+    policy: Policy,
+    plan: &FaultPlan,
+) -> (FaultyServeStats, FaultTrace) {
+    plan.validate(tp).expect("valid fault plan");
+    let base = cfg.base_geometry();
+    if plan.is_empty() {
+        let cluster = ClusterTopology::node_of(device, tp);
+        let shard = ShardPlan::new(&base, tp, ShardStrategy::Contiguous)
+            .expect("tp must divide the served model's KV heads");
+        let serve = serve_decode_cluster_with(driver, &cluster, &shard, cfg, policy);
+        return (FaultyServeStats { serve, faults: None }, FaultTrace::default());
+    }
+    cfg.validate().expect("valid serve config");
+
+    // Every tensor-parallel width the run can rebalance to, ascending: it
+    // must divide the KV heads (never split across devices) and keep the
+    // policy applicable on the shard-local geometry of every member.
+    let widths: Vec<usize> = (1..=tp)
+        .filter(|&w| {
+            base.h_k % w == 0 && {
+                let p = ShardPlan::new(&base, w, ShardStrategy::Contiguous)
+                    .expect("w divides h_k by construction");
+                advisor::applicable_policies(device, &p.local_attn(&base)).contains(&policy)
+            }
+        })
+        .collect();
+    assert!(
+        widths.last() == Some(&tp),
+        "policy {policy} is not applicable at the full width tp={tp}"
+    );
+    assert!(
+        widths.first() == Some(&1),
+        "policy {policy} must stay applicable on a lone survivor (width 1)"
+    );
+    // Pre-built per-width clusters/plans, then the executors borrowing
+    // them: advisor state and L2/consult accounting persist per width
+    // across the outage/recovery cycles that revisit it.
+    let setups: Vec<(ClusterTopology, ShardPlan)> = widths
+        .iter()
+        .map(|&w| {
+            (
+                ClusterTopology::node_of(device, w),
+                ShardPlan::new(&base, w, ShardStrategy::Contiguous).expect("valid width"),
+            )
+        })
+        .collect();
+    let mut execs: Vec<ClusterExecutor> = setups
+        .iter()
+        .map(|(cl, sp)| ClusterExecutor::new(driver, cl, sp, cfg, policy))
+        .collect();
+
+    let timeline = plan.timeline();
+    let mut next_tr = 0usize;
+    let mut healthy = vec![true; tp];
+    // Index into `widths` of the current serving width; None = blackout.
+    let mut cur: Option<usize> = Some(widths.len() - 1);
+
+    let router = SessionRouter::new(false);
+    let mut source = cfg.session_source();
+    let sessions = source.take_sessions(cfg.session_budget());
+    let mut batcher = StepBatcher::new(sessions, cfg.max_active, cfg.chunk_tokens);
+    let mut pool = cfg.kv_pool();
+
+    let mut now_sec = 0.0f64;
+    let mut prefill_sec = 0.0f64;
+    let mut prefill_tokens = 0u64;
+    let mut kv_shared_tokens = 0u64;
+    let mut kv_affine_blocks = 0u64;
+    let mut kv_total_blocks = 0u64;
+    let mut tokens = 0u64;
+    let mut steps = 0usize;
+    let mut tpot_ms: Vec<f64> = Vec::new();
+    let mut ttft_ms: Vec<f64> = Vec::new();
+
+    let mut trace = FaultTrace::default();
+    let mut events_applied = 0usize;
+    let mut rebalances = 0usize;
+    let mut forced_releases = 0usize;
+    let mut requeued = 0usize;
+    let mut windows: Vec<FaultWindow> = Vec::new();
+    let mut win_start = 0.0f64;
+    let mut win_tokens = 0u64;
+    let mut win_busy = 0.0f64;
+    let mut win_ttft: Vec<f64> = Vec::new();
+
+    while steps < cfg.max_steps && !batcher.done() {
+        // 1. Fault transitions due at this step boundary. The evicted KV
+        //    bytes are priced at the pre-eviction lengths — that is what
+        //    must move off (or back onto) the re-formed shards.
+        if next_tr < timeline.len() && timeline[next_tr].time <= now_sec {
+            let kv_tokens: usize =
+                batcher.active().iter().map(|a| a.kv_len(cfg.kv_cap)).sum();
+            let evicted_bytes = (kv_tokens * cfg.h_k * cfg.d_head * cfg.dtype_bytes) as f64;
+            while next_tr < timeline.len() && timeline[next_tr].time <= now_sec {
+                let t = timeline[next_tr];
+                healthy[t.device] = t.up;
+                trace.transitions.push((now_sec, t.device, t.up));
+                events_applied += 1;
+                next_tr += 1;
+            }
+            let evicted = batcher.requeue_active();
+            requeued += evicted.len();
+            for s in &evicted {
+                trace.evictions.push(s.id);
+                // Re-queued sessions go back through the router; on this
+                // colocated cluster the route is always the decode pool.
+                debug_assert_eq!(
+                    router.route(s).decode,
+                    PoolKind::Decode,
+                    "colocated re-admission routes to the decode pool"
+                );
+                if let Some(pool) = pool.as_mut() {
+                    pool.release(s.id);
+                    forced_releases += 1;
+                }
+            }
+            windows.push(FaultWindow {
+                start_sec: win_start,
+                end_sec: now_sec,
+                width: cur.map_or(0, |i| widths[i]),
+                tokens: win_tokens,
+                busy_sec: win_busy,
+                tokens_per_sec: if win_busy > 0.0 {
+                    win_tokens as f64 / win_busy
+                } else {
+                    f64::NAN
+                },
+                ttft_p99_ms: pctl_or_nan(&win_ttft, 0.99),
+            });
+            win_start = now_sec;
+            win_tokens = 0;
+            win_busy = 0.0;
+            win_ttft.clear();
+
+            let survivors = healthy.iter().filter(|&&h| h).count();
+            let new_cur = widths.iter().rposition(|&w| w <= survivors);
+            if new_cur != cur {
+                rebalances += 1;
+            }
+            cur = new_cur;
+            if let Some(i) = cur {
+                let (cl, sp) = &setups[i];
+                let reshard =
+                    cl.transfer_sec(evicted_bytes) + cl.all_gather_sec(sp.output_bytes_per_device(&base, 1));
+                now_sec += reshard;
+                win_busy += reshard;
+            }
+            continue;
+        }
+        // 2. Blackout: no survivors can serve — the clock jumps straight
+        //    to the next transition (the earliest recovery); none left
+        //    means the run ends truncated.
+        if cur.is_none() {
+            match timeline.get(next_tr) {
+                Some(t) => now_sec = now_sec.max(t.time),
+                None => break,
+            }
+            continue;
+        }
+        let ci = cur.expect("blackout handled above");
+        if batcher.active().is_empty() {
+            // Idle: jump simulated time forward to the next arrival —
+            // but never past a pending fault transition.
+            match batcher.next_arrival_sec() {
+                Some(t) => {
+                    let target = now_sec.max(t);
+                    if let Some(tr) = timeline.get(next_tr) {
+                        if tr.time < target {
+                            now_sec = now_sec.max(tr.time);
+                            continue;
+                        }
+                    }
+                    now_sec = target;
+                }
+                None => break,
+            }
+        }
+        // 3. One serving step, mirroring the fault-free loop body in
+        //    `run_serve_loop` (admission → paged-pool leases → prefill
+        //    composition → bucketed decode → TTFT/TPOT sampling).
+        let newly = batcher.admit(now_sec);
+        trace.admissions.extend(newly.iter().map(|s| s.id));
+        let mut credited: Vec<usize> = Vec::new();
+        if let Some(pool) = pool.as_mut() {
+            for s in &newly {
+                let keys = prompt_keys(s.id, s.prefill, s.shared_prefix, cfg.kv_block_tokens);
+                let got = pool.acquire(s.id, &keys);
+                for &j in &got.inserted {
+                    let (affine, total) = execs[ci].kv_block_affinity(j);
+                    kv_affine_blocks += affine as u64;
+                    kv_total_blocks += total as u64;
+                }
+                let t = (got.credited_blocks * cfg.kv_block_tokens).min(s.prefill);
+                kv_shared_tokens += t as u64;
+                credited.push(t);
+            }
+        }
+        let mut step_sec = 0.0f64;
+        if cfg.chunk_tokens == 0 {
+            if pool.is_some() {
+                let chunks: Vec<PrefillChunk> = newly
+                    .iter()
+                    .zip(&credited)
+                    .filter(|(s, &c)| c < s.prefill)
+                    .map(|(s, &c)| PrefillChunk { id: s.id, start: c, end: s.prefill })
+                    .collect();
+                if !chunks.is_empty() {
+                    prefill_tokens += chunks.iter().map(|c| c.tokens() as u64).sum::<u64>();
+                    for t in execs[ci].chunk_charges(&chunks) {
+                        prefill_sec += t;
+                        step_sec += t;
+                    }
+                }
+            } else if !newly.is_empty() {
+                let prompts: Vec<usize> = newly.iter().map(|s| s.prefill).collect();
+                prefill_tokens += prompts.iter().map(|&p| p as u64).sum::<u64>();
+                for t in execs[ci].prefill_charges(&prompts) {
+                    prefill_sec += t;
+                    step_sec += t;
+                }
+            }
+        } else {
+            for (s, &c) in newly.iter().zip(&credited) {
+                if c > 0 {
+                    batcher.credit_prefix(s.id, c);
+                }
+            }
+            let budget = if cfg.step_token_budget == 0 {
+                usize::MAX
+            } else {
+                cfg.step_token_budget
+            };
+            let decoding = batcher.decoding();
+            let chunks = batcher.plan_chunks(budget.saturating_sub(decoding));
+            if !chunks.is_empty() {
+                prefill_tokens += chunks.iter().map(|c| c.tokens() as u64).sum::<u64>();
+                for t in execs[ci].chunk_charges(&chunks) {
+                    prefill_sec += t;
+                    step_sec += t;
+                }
+            }
+        }
+        let mut grouped: BTreeMap<usize, usize> = BTreeMap::new();
+        for a in batcher.active().iter().filter(|a| a.prefill_complete()) {
+            *grouped.entry(cfg.bucket_of(a.kv_len(cfg.kv_cap))).or_insert(0) += 1;
+        }
+        let groups: Vec<(usize, usize)> = grouped.into_iter().collect();
+        for t in execs[ci].decode_charges(&groups) {
+            step_sec += t;
+        }
+        now_sec += step_sec;
+        for a in batcher.active() {
+            if a.prefill_complete() && a.generated == 0 {
+                let sample = (now_sec - a.session.arrival_sec) * 1e3;
+                ttft_ms.push(sample);
+                win_ttft.push(sample);
+            }
+        }
+        let emitted = batcher.advance_step();
+        let retired = batcher.drain_retired();
+        for &id in &retired {
+            if let Some(pool) = pool.as_mut() {
+                pool.release(id);
+            }
+        }
+        trace.completions.extend(retired);
+        tokens += emitted as u64;
+        win_tokens += emitted as u64;
+        win_busy += step_sec;
+        tpot_ms.extend(std::iter::repeat(step_sec * 1e3).take(emitted));
+        steps += 1;
+    }
+    windows.push(FaultWindow {
+        start_sec: win_start,
+        end_sec: now_sec,
+        width: cur.map_or(0, |i| widths[i]),
+        tokens: win_tokens,
+        busy_sec: win_busy,
+        tokens_per_sec: if win_busy > 0.0 { win_tokens as f64 / win_busy } else { f64::NAN },
+        ttft_p99_ms: pctl_or_nan(&win_ttft, 0.99),
+    });
+    trace.leases_at_end = pool.as_ref().map_or(0, |p| p.total_refs());
+
+    let (l2_hits, l2_misses) = execs.iter().fold((0u64, 0u64), |(h, m), e| {
+        let (eh, em) = e.decode_l2();
+        (h + eh, m + em)
+    });
+    let serve = ServeStats {
+        policy,
+        sessions_completed: batcher.completed(),
+        tokens,
+        steps,
+        sim_sec: now_sec,
+        tokens_per_sec: if now_sec > 0.0 { tokens as f64 / now_sec } else { 0.0 },
+        tpot_p50_ms: pctl_or_nan(&tpot_ms, 0.50),
+        tpot_p99_ms: pctl_or_nan(&tpot_ms, 0.99),
+        ttft_p50_ms: pctl_or_nan(&ttft_ms, 0.50),
+        ttft_p99_ms: pctl_or_nan(&ttft_ms, 0.99),
+        prefill_sec,
+        prefill_tokens,
+        decode_l2_hit_pct: if l2_hits + l2_misses > 0 {
+            100.0 * l2_hits as f64 / (l2_hits + l2_misses) as f64
+        } else {
+            0.0
+        },
+        advisor_consults: execs.iter().map(|e| e.consults()).sum(),
+        distinct_geometries: execs.iter().map(|e| e.distinct_geometries()).sum(),
+        kv_shared_tokens,
+        kv_xcd_affinity_pct: if kv_total_blocks > 0 {
+            100.0 * kv_affine_blocks as f64 / kv_total_blocks as f64
+        } else {
+            0.0
+        },
+        truncated: !batcher.done(),
+    };
+
+    let rate = |pick: &dyn Fn(&FaultWindow) -> bool| {
+        let (t, b) = windows
+            .iter()
+            .filter(|w| pick(w))
+            .fold((0u64, 0.0f64), |(t, b), w| (t + w.tokens, b + w.busy_sec));
+        if b > 0.0 {
+            t as f64 / b
+        } else {
+            f64::NAN
+        }
+    };
+    let full: Vec<&FaultWindow> =
+        windows.iter().filter(|w| w.width == tp && w.busy_sec > 0.0).collect();
+    let extras = FaultExtras {
+        events_applied,
+        rebalances,
+        forced_releases,
+        requeued,
+        degraded_sec: windows
+            .iter()
+            .filter(|w| w.width < tp)
+            .map(|w| w.end_sec - w.start_sec)
+            .sum(),
+        healthy_tokens_per_sec: rate(&|w: &FaultWindow| w.width == tp),
+        degraded_tokens_per_sec: rate(&|w: &FaultWindow| w.width < tp),
+        recovery_ratio: if full.len() >= 2 {
+            full[full.len() - 1].tokens_per_sec / full[0].tokens_per_sec
+        } else {
+            f64::NAN
+        },
+        windows,
+    };
+    (FaultyServeStats { serve, faults: Some(extras) }, trace)
+}
+
+/// One fault-report row: a cluster scenario at full sweep width, each
+/// applicable policy served under the same fault plan.
+#[derive(Debug, Clone)]
+pub struct FaultRow {
+    /// Scenario label (shared with the cluster sweep).
+    pub label: String,
+    /// One [`FaultyServeStats`] per applicable policy.
+    pub stats: Vec<FaultyServeStats>,
+}
+
+/// The fault-injection report `cluster --faults` emits: the cluster
+/// sweep's full-width scenarios re-served under the resolved fault plan.
+#[derive(Debug, Clone)]
+pub struct FaultReport {
+    /// Scenario rows in sweep order.
+    pub rows: Vec<FaultRow>,
+    /// The resolved plan every row ran under.
+    pub plan: FaultPlan,
+}
+
+impl FaultReport {
+    /// Stats for (row label, policy), for assertions in tests/benches.
+    pub fn stats(&self, label: &str, policy: Policy) -> Option<&FaultyServeStats> {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)?
+            .stats
+            .iter()
+            .find(|s| s.serve.policy == policy)
+    }
+
+    /// Aligned-table rendering (one table per scenario).
+    pub fn render(&self) -> String {
+        let fmt_rate = |v: f64| if v.is_nan() { "n/a".into() } else { format!("{v:.0}") };
+        let mut out = format!("== faults — plan [{}] ==\n", self.plan.render());
+        for row in &self.rows {
+            let mut t = Table::new(&[
+                "policy",
+                "tokens/s",
+                "healthy t/s",
+                "degraded t/s",
+                "recovery",
+                "rebalances",
+                "requeued",
+                "TTFT p99 (ms)",
+                "sessions",
+            ]);
+            for s in &row.stats {
+                let f = s.faults.as_ref();
+                t.row(vec![
+                    s.serve.policy.label().into(),
+                    format!("{:.0}", s.serve.tokens_per_sec),
+                    f.map_or("-".into(), |f| fmt_rate(f.healthy_tokens_per_sec)),
+                    f.map_or("-".into(), |f| fmt_rate(f.degraded_tokens_per_sec)),
+                    f.map_or("-".into(), |f| {
+                        if f.recovery_ratio.is_nan() {
+                            "n/a".into()
+                        } else {
+                            format!("{:.2}", f.recovery_ratio)
+                        }
+                    }),
+                    f.map_or(0, |f| f.rebalances).to_string(),
+                    f.map_or(0, |f| f.requeued).to_string(),
+                    fmt_ms(s.serve.ttft_p99_ms),
+                    format!(
+                        "{}{}",
+                        s.serve.sessions_completed,
+                        if s.serve.truncated { "*" } else { "" }
+                    ),
+                ]);
+            }
+            out.push_str(&format!("== faults — {} ==\n{}", row.label, t.render()));
+        }
+        if self.rows.iter().any(|r| r.stats.iter().any(|s| s.serve.truncated)) {
+            out.push_str("(* = step budget exhausted before the trace drained)\n");
+        }
+        out
+    }
+
+    /// JSON rendering for `cluster --faults --json` (stable order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan", Json::str(self.plan.render())),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("label", Json::str(r.label.clone())),
+                        (
+                            "policies",
+                            Json::arr(r.stats.iter().map(FaultyServeStats::to_json)),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Build the fault report: the cluster sweep's scenarios at the full
+/// sweep width ([`CLUSTER_TP`]'s endpoint), each applicable policy
+/// served under the spec's resolved plan. A policy must stay applicable
+/// at *every* rebalance width to qualify — a run must never be forced
+/// onto a policy it did not start with.
+pub fn fault_report(
+    driver: &SimDriver,
+    device: &Topology,
+    quick: bool,
+    spec: &FaultSpec,
+) -> Result<FaultReport, String> {
+    let tp = *CLUSTER_TP.last().expect("cluster sweep has TP degrees");
+    let plan = spec.resolve(tp)?;
+    let rows = cluster_scenarios(quick)
+        .into_iter()
+        .filter(|sc| sc.tp == tp)
+        .map(|sc| {
+            let base = sc.cfg.base_geometry();
+            let stats = advisor::applicable_policies(device, &base)
+                .into_iter()
+                .filter(|p| {
+                    (1..=tp).filter(|w| base.h_k % w == 0).all(|w| {
+                        let sp = ShardPlan::new(&base, w, ShardStrategy::Contiguous)
+                            .expect("w divides h_k by construction");
+                        advisor::applicable_policies(device, &sp.local_attn(&base)).contains(p)
+                    })
+                })
+                .map(|p| serve_decode_faulty_with(driver, device, tp, &sc.cfg, p, &plan))
+                .collect();
+            FaultRow { label: sc.label, stats }
+        })
+        .collect();
+    Ok(FaultReport { rows, plan })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets;
+
+    fn fast_topo() -> Topology {
+        Topology {
+            cus_per_xcd: 8,
+            l2_bytes_per_xcd: 1024 * 1024,
+            hbm_bytes_per_sec: 1.1e12,
+            ..presets::mi300x()
+        }
+    }
+
+    fn tiny_serve() -> ServeConfig {
+        ServeConfig {
+            h_q: 16,
+            h_k: 8,
+            d_head: 64,
+            kv_cap: 8192,
+            kv_bucket: 2048,
+            arrival_per_sec: 2000.0,
+            prefill_lengths: vec![1024, 2048],
+            decode_tokens: vec![4, 12],
+            sessions: 6,
+            max_active: 3,
+            max_steps: 400,
+            seed: 9,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn plan_parse_render_round_trips_and_rejects_garbage() {
+        let plan = FaultPlan::parse("1:0.5:0.75, 0:1:2").unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0], FaultEvent { device: 1, fail_sec: 0.5, recover_sec: 0.75 });
+        assert_eq!(FaultPlan::parse(&plan.render()).unwrap(), plan);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ,  ").unwrap().is_empty());
+        assert!(FaultPlan::parse("1:0.5").unwrap_err().contains("device:fail_sec:recover_sec"));
+        assert!(FaultPlan::parse("x:0.5:1").unwrap_err().contains("bad device"));
+        assert!(FaultPlan::parse("0:a:1").unwrap_err().contains("bad fail_sec"));
+    }
+
+    #[test]
+    fn plan_validation_rejects_bad_schedules() {
+        let ok = FaultPlan::parse("1:0.5:0.75").unwrap();
+        ok.validate(2).unwrap();
+        assert!(ok.validate(1).unwrap_err().contains("outside the cluster"));
+        assert!(FaultPlan::parse("0:-1:2")
+            .unwrap()
+            .validate(2)
+            .unwrap_err()
+            .contains("must be finite and >= 0"));
+        assert!(FaultPlan::parse("0:2:2")
+            .unwrap()
+            .validate(2)
+            .unwrap_err()
+            .contains("after fail_sec"));
+        // Overlapping (and even touching) outages on one device.
+        assert!(FaultPlan::parse("0:0:1,0:0.5:2")
+            .unwrap()
+            .validate(2)
+            .unwrap_err()
+            .contains("overlap"));
+        assert!(FaultPlan::parse("0:0:1,0:1:2")
+            .unwrap()
+            .validate(2)
+            .unwrap_err()
+            .contains("overlap"));
+        // Distinct devices may overlap freely.
+        FaultPlan::parse("0:0:1,1:0.5:2").unwrap().validate(2).unwrap();
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_valid() {
+        let a = FaultPlan::seeded(7, 4, 3, 0.5);
+        let b = FaultPlan::seeded(7, 4, 3, 0.5);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_eq!(a.events.len(), 3);
+        a.validate(4).unwrap();
+        let c = FaultPlan::seeded(8, 4, 3, 0.5);
+        assert_ne!(a, c, "different seeds diverge");
+        // The spec surface resolves seeded plans the same way.
+        let spec = FaultSpec { count: 3, seed: 7, ..FaultSpec::default() };
+        assert!(!spec.is_none());
+        assert_eq!(spec.resolve(4).unwrap(), a);
+        assert!(FaultSpec::default().is_none());
+        assert!(FaultSpec::default().resolve(4).unwrap().is_empty());
+        let bad = FaultSpec { count: 1, horizon_sec: 0.0, ..FaultSpec::default() };
+        assert!(bad.resolve(4).unwrap_err().contains("horizon_sec"));
+    }
+
+    #[test]
+    fn empty_plan_is_byte_identical_to_the_cluster_path() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let cluster = ClusterTopology::node_of(&topo, 2);
+        let shard = ShardPlan::new(&cfg.base_geometry(), 2, ShardStrategy::Contiguous).unwrap();
+        let base =
+            serve_decode_cluster_with(&driver, &cluster, &shard, &cfg, Policy::SwizzledHeadFirst);
+        let faulty = serve_decode_faulty_with(
+            &driver,
+            &topo,
+            2,
+            &cfg,
+            Policy::SwizzledHeadFirst,
+            &FaultPlan::default(),
+        );
+        assert!(faulty.faults.is_none());
+        assert_eq!(faulty.to_json().render(), base.to_json().render());
+    }
+
+    #[test]
+    fn faults_fire_rebalance_and_conserve_sessions() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        // Decode-dominated workload: near-simultaneous arrivals, short
+        // prompts, long decode budgets — the run is a dense run of
+        // near-uniform decode steps, so an outage spanning 30% of the
+        // clean run is guaranteed to contain step boundaries (the fault
+        // fires) and to end well before the trace drains (the recovery
+        // fires too).
+        let cfg = ServeConfig {
+            arrival_per_sec: 1.0e6,
+            prefill_lengths: vec![64],
+            decode_tokens: vec![200],
+            sessions: 4,
+            max_active: 4,
+            max_steps: 4000,
+            ..tiny_serve()
+        };
+        let clean = serve_decode_faulty_with(
+            &driver,
+            &topo,
+            2,
+            &cfg,
+            Policy::SwizzledHeadFirst,
+            &FaultPlan::default(),
+        );
+        let t = clean.serve.sim_sec;
+        let plan = FaultPlan {
+            events: vec![FaultEvent { device: 1, fail_sec: 0.35 * t, recover_sec: 0.65 * t }],
+        };
+        let (stats, trace) = serve_decode_faulty_traced(
+            &driver,
+            &topo,
+            2,
+            &cfg,
+            Policy::SwizzledHeadFirst,
+            &plan,
+        );
+        let f = stats.faults.as_ref().expect("non-empty plan records extras");
+        assert_eq!(f.events_applied, 2, "one fail + one recovery");
+        assert_eq!(f.rebalances, 2, "width 2 -> 1 -> 2");
+        assert!(f.requeued > 0, "the fault landed mid-serve");
+        assert!(f.degraded_sec > 0.0);
+        assert_eq!(trace.evictions.len(), f.requeued);
+        assert_eq!(trace.transitions.len(), 2);
+        assert_eq!(trace.leases_at_end, 0);
+        // Windows partition the run: full width, degraded, full width.
+        let widths: Vec<usize> = f.windows.iter().map(|w| w.width).collect();
+        assert_eq!(widths, vec![2, 1, 2]);
+        // No session lost or double-served: every session completes
+        // exactly once, and every eviction pairs with one re-admission.
+        assert!(!stats.serve.truncated);
+        assert_eq!(stats.serve.sessions_completed, cfg.sessions);
+        let mut completed = trace.completions.clone();
+        completed.sort_unstable();
+        assert_eq!(completed, (0..cfg.sessions as u64).collect::<Vec<_>>());
+        for id in 0..cfg.sessions as u64 {
+            let admitted = trace.admissions.iter().filter(|&&a| a == id).count();
+            let evicted = trace.evictions.iter().filter(|&&e| e == id).count();
+            assert_eq!(admitted, 1 + evicted, "session {id} re-admits once per eviction");
+        }
+        // Re-served decode work inflates the token count past the clean
+        // trace's budget exactly when evictions hit decoding sessions.
+        assert!(stats.serve.tokens >= clean.serve.tokens);
+        // The JSON carries the extras under a trailing "faults" key.
+        let json = stats.to_json().render();
+        assert!(json.contains("\"faults\""));
+        assert!(json.contains("\"windows\""));
+    }
+
+    #[test]
+    fn blackout_jumps_to_recovery_and_still_drains() {
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        // Both devices down from t=0 (before the first arrival): the
+        // loop must jump the clock to the recoveries and then serve the
+        // whole backlog.
+        let plan = FaultPlan::parse("0:0:0.0002,1:0:0.0003").unwrap();
+        let (stats, trace) = serve_decode_faulty_traced(
+            &driver,
+            &topo,
+            2,
+            &cfg,
+            Policy::SwizzledHeadFirst,
+            &plan,
+        );
+        let f = stats.faults.as_ref().unwrap();
+        assert_eq!(f.events_applied, 4);
+        assert!(f.rebalances >= 2, "blackout and both recoveries re-form the plan");
+        assert!(!stats.serve.truncated);
+        assert_eq!(stats.serve.sessions_completed, cfg.sessions);
+        assert!(f.windows.iter().any(|w| w.width == 0), "a blackout window is recorded");
+        assert!(stats.serve.sim_sec >= 0.0003, "the clock jumped past the last recovery");
+        assert_eq!(trace.leases_at_end, 0);
+    }
+}

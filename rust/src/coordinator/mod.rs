@@ -49,6 +49,7 @@ pub mod advisor;
 pub mod batcher;
 pub mod disagg;
 pub mod executor;
+pub mod faults;
 pub mod router;
 pub mod service;
 pub mod tuner;
@@ -71,6 +72,11 @@ pub use disagg::{
     PreemptionRecord, StepAudit,
 };
 pub use executor::{ClusterExecutor, SingleDeviceExecutor, StepExecutor};
+pub use faults::{
+    fault_report, serve_decode_faulty, serve_decode_faulty_traced, serve_decode_faulty_with,
+    FaultEvent, FaultExtras, FaultPlan, FaultReport, FaultRow, FaultSpec, FaultTrace, FaultWindow,
+    FaultyServeStats,
+};
 pub use router::{Router, SessionRoute, SessionRouter};
 pub use service::{
     cluster_row, cluster_scenarios, serve_cluster_report, serve_decode, serve_decode_cluster,

@@ -39,6 +39,7 @@ use crate::util::json::Json;
 use crate::workload::sweeps::CLUSTER_TP;
 use crate::workload::Request;
 use crate::workload::SessionGenerator;
+use crate::workload::{SessionSource, TraceReplay};
 
 use super::advisor;
 use super::batcher::{Batch, BatcherConfig, BatcherCore, PrefillChunk, StepBatcher};
@@ -528,6 +529,13 @@ pub struct ServeConfig {
     pub kv_capacity_mb: usize,
     /// Trace seed (arrivals and session mix draws).
     pub seed: u64,
+    /// Replayed session trace (docs/SERVING.md §8). `None` (the default)
+    /// runs the seeded [`SessionGenerator`] exactly as before — the
+    /// golden pins depend on that path being untouched. `Some` replaces
+    /// the generator's arrival process *and* session count: the loop
+    /// consumes the trace's rows verbatim and [`Self::sessions`] /
+    /// [`Self::arrival_per_sec`] / the mix knobs are ignored.
+    pub trace: Option<TraceReplay>,
 }
 
 impl Default for ServeConfig {
@@ -554,6 +562,7 @@ impl Default for ServeConfig {
             prefix_share_pct: 0.0,
             kv_capacity_mb: 0,
             seed: 7,
+            trace: None,
         }
     }
 }
@@ -618,6 +627,19 @@ impl ServeConfig {
                 self.prefix_share_pct
             ));
         }
+        if let Some(trace) = &self.trace {
+            if trace.is_empty() {
+                return Err("trace must contain at least one session".into());
+            }
+            if let Some(s) = trace.sessions().iter().find(|s| s.prefill > self.kv_cap) {
+                return Err(format!(
+                    "trace session with prefill {} exceeds the KV capacity ({}): a prompt \
+                     cannot outgrow the cache it is served from — raise [attention] n_ctx \
+                     or regenerate the trace with shorter prompts",
+                    s.prefill, self.kv_cap
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -680,8 +702,44 @@ impl ServeConfig {
         }
     }
 
+    /// The session stream one serving run consumes: the replayed trace
+    /// when configured, else the seeded [`SessionGenerator`] built
+    /// exactly as the loop always built it — same constructor, same
+    /// sharing gate — so the generator path stays byte-identical to the
+    /// historical behavior (the golden pins).
+    pub(crate) fn session_source(&self) -> Box<dyn SessionSource> {
+        match &self.trace {
+            Some(t) => Box::new(t.clone()),
+            None => {
+                let mut gen = SessionGenerator::new(
+                    self.seed,
+                    self.arrival_per_sec,
+                    self.prefill_lengths.clone(),
+                    self.decode_tokens.clone(),
+                );
+                if self.prefix_share_pct > 0.0 {
+                    // The shared-prefix draw rides a separate RNG stream,
+                    // so the arrival/prompt/decode trace is identical
+                    // with sharing on or off (the sharing-disabled golden
+                    // pins depend on this).
+                    gen = gen.with_prefix_sharing(self.prefix_share_pct, self.shared_span());
+                }
+                Box::new(gen)
+            }
+        }
+    }
+
+    /// Sessions one run consumes: the whole trace when replaying,
+    /// [`Self::sessions`] when generating.
+    pub(crate) fn session_budget(&self) -> usize {
+        match &self.trace {
+            Some(t) => t.len(),
+            None => self.sessions,
+        }
+    }
+
     /// The paged pool for one serving run, or `None` when disabled.
-    fn kv_pool(&self) -> Option<KvPool> {
+    pub(crate) fn kv_pool(&self) -> Option<KvPool> {
         if !self.kv_pool_enabled() {
             return None;
         }
@@ -689,6 +747,41 @@ impl ServeConfig {
             block_bytes(self.kv_block_tokens, self.h_k, self.d_head, self.dtype_bytes),
             self.kv_capacity_mb as u64 * 1024 * 1024,
         ))
+    }
+}
+
+/// A percentile that distinguishes "no samples" from "fast":
+/// [`percentile`] of an empty slice returns `0.0` (a frozen contract its
+/// unit tests pin), which a serving report would misrender as a perfect
+/// `0.000 ms` — exactly what a fully degraded fault window produces.
+/// This wrapper returns NaN for the empty case; the render/JSON layers
+/// turn NaN into `n/a` / `null` ([`fmt_ms`], [`ms_json`]). Populated
+/// samples pass through untouched, so every historical pin holds.
+pub(crate) fn pctl_or_nan(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        f64::NAN
+    } else {
+        percentile(samples, q)
+    }
+}
+
+/// Millisecond table cell: `n/a` for the empty-sample NaN sentinel,
+/// else the historical `{:.3}` formatting byte-for-byte.
+pub(crate) fn fmt_ms(v: f64) -> String {
+    if v.is_nan() {
+        "n/a".into()
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Millisecond JSON value: `null` for the empty-sample NaN sentinel,
+/// else the historical numeric rendering byte-for-byte.
+pub(crate) fn ms_json(v: f64) -> Json {
+    if v.is_nan() {
+        Json::Null
+    } else {
+        Json::num(v)
     }
 }
 
@@ -763,10 +856,10 @@ impl ServeStats {
             ("steps", Json::num(self.steps as f64)),
             ("sim_sec", Json::num(self.sim_sec)),
             ("tokens_per_sec", Json::num(self.tokens_per_sec)),
-            ("tpot_p50_ms", Json::num(self.tpot_p50_ms)),
-            ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
-            ("ttft_p50_ms", Json::num(self.ttft_p50_ms)),
-            ("ttft_p99_ms", Json::num(self.ttft_p99_ms)),
+            ("tpot_p50_ms", ms_json(self.tpot_p50_ms)),
+            ("tpot_p99_ms", ms_json(self.tpot_p99_ms)),
+            ("ttft_p50_ms", ms_json(self.ttft_p50_ms)),
+            ("ttft_p99_ms", ms_json(self.ttft_p99_ms)),
             ("prefill_sec", Json::num(self.prefill_sec)),
             ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
             ("decode_l2_hit_pct", Json::num(self.decode_l2_hit_pct)),
@@ -822,10 +915,10 @@ impl ServeReport {
                 t.row(vec![
                     s.policy.label().into(),
                     format!("{:.0}", s.tokens_per_sec),
-                    format!("{:.3}", s.tpot_p50_ms),
-                    format!("{:.3}", s.tpot_p99_ms),
-                    format!("{:.3}", s.ttft_p50_ms),
-                    format!("{:.3}", s.ttft_p99_ms),
+                    fmt_ms(s.tpot_p50_ms),
+                    fmt_ms(s.tpot_p99_ms),
+                    fmt_ms(s.ttft_p50_ms),
+                    fmt_ms(s.ttft_p99_ms),
                     format!("{:.1}", s.decode_l2_hit_pct),
                     format!("{:.1}", s.kv_xcd_affinity_pct),
                     format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
@@ -1062,19 +1155,9 @@ pub fn serve_decode_cluster_with(
 /// `step_token_budget` first and the remainder streams prefill chunks,
 /// so one long prompt never stalls the world.
 fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats {
-    let mut gen = SessionGenerator::new(
-        cfg.seed,
-        cfg.arrival_per_sec,
-        cfg.prefill_lengths.clone(),
-        cfg.decode_tokens.clone(),
-    );
-    if cfg.prefix_share_pct > 0.0 {
-        // The shared-prefix draw rides a separate RNG stream, so the
-        // arrival/prompt/decode trace is identical with sharing on or
-        // off (the sharing-disabled golden pins depend on this).
-        gen = gen.with_prefix_sharing(cfg.prefix_share_pct, cfg.shared_span());
-    }
-    let mut batcher = StepBatcher::new(gen.take(cfg.sessions), cfg.max_active, cfg.chunk_tokens);
+    let mut source = cfg.session_source();
+    let sessions = source.take_sessions(cfg.session_budget());
+    let mut batcher = StepBatcher::new(sessions, cfg.max_active, cfg.chunk_tokens);
     let mut pool = cfg.kv_pool();
 
     let mut now_sec = 0.0f64;
@@ -1220,10 +1303,10 @@ fn run_serve_loop(exec: &mut dyn StepExecutor, cfg: &ServeConfig) -> ServeStats 
         steps,
         sim_sec: now_sec,
         tokens_per_sec: if now_sec > 0.0 { tokens as f64 / now_sec } else { 0.0 },
-        tpot_p50_ms: percentile(&tpot_ms, 0.50),
-        tpot_p99_ms: percentile(&tpot_ms, 0.99),
-        ttft_p50_ms: percentile(&ttft_ms, 0.50),
-        ttft_p99_ms: percentile(&ttft_ms, 0.99),
+        tpot_p50_ms: pctl_or_nan(&tpot_ms, 0.50),
+        tpot_p99_ms: pctl_or_nan(&tpot_ms, 0.99),
+        ttft_p50_ms: pctl_or_nan(&ttft_ms, 0.50),
+        ttft_p99_ms: pctl_or_nan(&ttft_ms, 0.99),
         prefill_sec,
         prefill_tokens,
         decode_l2_hit_pct: if l2_hits + l2_misses > 0 {
@@ -1420,8 +1503,8 @@ impl ClusterReport {
                     eff,
                     format!("{:.1}", s.decode_l2_hit_pct),
                     format!("{:.1}", s.kv_xcd_affinity_pct),
-                    format!("{:.3}", s.tpot_p50_ms),
-                    format!("{:.3}", s.ttft_p99_ms),
+                    fmt_ms(s.tpot_p50_ms),
+                    fmt_ms(s.ttft_p99_ms),
                     format!("{}{}", s.sessions_completed, if s.truncated { "*" } else { "" }),
                     s.advisor_consults.to_string(),
                 ]);
@@ -1796,6 +1879,82 @@ mod serve_tests {
         assert!(shared.kv_shared_tokens > 0);
         assert_eq!(shared.prefill_tokens + shared.kv_shared_tokens, base.prefill_tokens);
         assert!(shared.prefill_sec < base.prefill_sec);
+    }
+
+    #[test]
+    fn replayed_generator_trace_is_byte_identical() {
+        // The trace-replay golden contract: render the generator's own
+        // sessions to the `.trace` text format, parse it back, and serve
+        // the replay — the stats must reproduce the generator run
+        // byte-for-byte (Display round-trips f64 exactly, and the loop
+        // consumes the same rows in the same order).
+        let driver = SimDriver::new(2);
+        let topo = fast_topo();
+        let cfg = tiny_serve();
+        let base = serve_decode_with(&driver, &topo, &cfg, Policy::SwizzledHeadFirst);
+        let gen_sessions = SessionGenerator::new(
+            cfg.seed,
+            cfg.arrival_per_sec,
+            cfg.prefill_lengths.clone(),
+            cfg.decode_tokens.clone(),
+        )
+        .take(cfg.sessions);
+        let replay = TraceReplay::new(gen_sessions);
+        let reparsed = TraceReplay::parse(&replay.render()).unwrap();
+        assert_eq!(replay, reparsed, "trace text must round-trip the sessions exactly");
+        let replay_cfg = ServeConfig { trace: Some(reparsed), ..cfg };
+        let replayed = serve_decode_with(&driver, &topo, &replay_cfg, Policy::SwizzledHeadFirst);
+        assert_eq!(base.to_json().render(), replayed.to_json().render());
+    }
+
+    #[test]
+    fn empty_sample_stats_render_na_and_null() {
+        // A run where no session ever reaches its first token (exactly
+        // what a fully degraded fault window produces) must say "n/a",
+        // not a perfect 0.000 ms.
+        assert!(pctl_or_nan(&[], 0.99).is_nan());
+        assert_eq!(pctl_or_nan(&[2.0, 1.0], 0.50), percentile(&[2.0, 1.0], 0.50));
+        assert_eq!(fmt_ms(f64::NAN), "n/a");
+        assert_eq!(fmt_ms(1.25), "1.250");
+        assert_eq!(ms_json(f64::NAN).render(), "null");
+        assert_eq!(ms_json(1.25).render(), Json::num(1.25).render());
+        let empty = ServeStats {
+            policy: Policy::SwizzledHeadFirst,
+            sessions_completed: 0,
+            tokens: 0,
+            steps: 0,
+            sim_sec: 0.0,
+            tokens_per_sec: 0.0,
+            tpot_p50_ms: f64::NAN,
+            tpot_p99_ms: f64::NAN,
+            ttft_p50_ms: f64::NAN,
+            ttft_p99_ms: f64::NAN,
+            prefill_sec: 0.0,
+            prefill_tokens: 0,
+            decode_l2_hit_pct: 0.0,
+            advisor_consults: 0,
+            distinct_geometries: 0,
+            kv_shared_tokens: 0,
+            kv_xcd_affinity_pct: 0.0,
+            truncated: true,
+        };
+        let json = empty.to_json().render();
+        assert!(json.contains("\"ttft_p99_ms\": null"), "{json}");
+        let report = ServeReport {
+            rows: vec![ServeRow { label: "empty".into(), stats: vec![empty] }],
+        };
+        assert!(report.render().contains("n/a"));
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_traces() {
+        let empty = ServeConfig { trace: Some(TraceReplay::new(Vec::new())), ..tiny_serve() };
+        let err = empty.validate().unwrap_err();
+        assert!(err.contains("at least one session"), "{err}");
+        let long = TraceReplay::parse("0.5 100000 8\n").unwrap();
+        let over = ServeConfig { trace: Some(long), ..tiny_serve() };
+        let err = over.validate().unwrap_err();
+        assert!(err.contains("exceeds the KV capacity"), "{err}");
     }
 
     #[test]

@@ -459,6 +459,100 @@ pub fn disagg_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureRes
     }
 }
 
+/// Bursty-serving fault panel (docs/SERVING.md §9): the widest-TP
+/// cluster scenarios re-served under one engineered mid-run outage —
+/// device 1 down across the middle ~30% of a clean serve — reported as
+/// per-window busy-time decode throughput (full width before the
+/// failure, rebalanced width during the outage, full width again after
+/// recovery) plus the whole-run TTFT p99 tail and the recovery ratio
+/// (last full-width window's rate over the first). The outage is timed
+/// off the *fastest* policy's clean run, so the degraded interval lands
+/// inside every policy's serve and all three windows contain decode
+/// steps — every value is finite by construction (NaN would not render
+/// as JSON). Arbitrary plans, lease/requeue counters and the full
+/// scenario grid live in `numa-attn cluster --faults`.
+pub fn serve_burst_fig(driver: &SimDriver, topo: &Topology, quick: bool) -> FigureResult {
+    use crate::cluster::{ShardPlan, ShardStrategy};
+    use crate::coordinator::{self as coord, FaultEvent, FaultPlan};
+    let tp = *sweeps::CLUSTER_TP.last().expect("cluster sweep has TP degrees");
+    let mut rows = Vec::new();
+    for sc in coord::cluster_scenarios(quick).into_iter().filter(|sc| sc.tp == tp) {
+        // Headroom over the sweep's step budget so neither the clean
+        // timing runs nor the (longer) degraded re-serves ever truncate
+        // mid-outage — truncation would leave the recovery window empty.
+        let cfg = coord::ServeConfig { max_steps: sc.cfg.max_steps * 4, ..sc.cfg.clone() };
+        let base = cfg.base_geometry();
+        // Policies the rebalance can keep serving at every valid width
+        // (the same rule `cluster --faults` applies).
+        let policies: Vec<Policy> = coord::applicable_policies(topo, &base)
+            .into_iter()
+            .filter(|p| {
+                (1..=tp).filter(|w| base.h_k % w == 0).all(|w| {
+                    let sp = ShardPlan::new(&base, w, ShardStrategy::Contiguous)
+                        .expect("w divides h_k by construction");
+                    coord::applicable_policies(topo, &sp.local_attn(&base)).contains(p)
+                })
+            })
+            .collect();
+        let horizon = policies
+            .iter()
+            .map(|&p| {
+                coord::serve_decode_faulty_with(driver, topo, tp, &cfg, p, &FaultPlan::default())
+                    .serve
+                    .sim_sec
+            })
+            .fold(f64::INFINITY, f64::min);
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 1,
+                fail_sec: 0.35 * horizon,
+                recover_sec: 0.65 * horizon,
+            }],
+        };
+        let runs: Vec<(Policy, coord::FaultyServeStats)> = policies
+            .iter()
+            .map(|&p| (p, coord::serve_decode_faulty_with(driver, topo, tp, &cfg, p, &plan)))
+            .collect();
+        let extras = |s: &coord::FaultyServeStats| -> coord::FaultExtras {
+            s.faults.clone().expect("the plan scheduled an outage")
+        };
+        let degraded_width = extras(&runs[0].1)
+            .windows
+            .iter()
+            .find(|w| w.width < tp)
+            .map_or(0, |w| w.width);
+        let window_row = |tag: String, value: &dyn Fn(&coord::FaultExtras) -> f64| FigureRow {
+            label: format!("{} {tag}", sc.label),
+            values: runs.iter().map(|(p, s)| (*p, value(&extras(s)))).collect(),
+        };
+        rows.push(window_row(format!("tokens/s w0 full (tp={tp})"), &|f| {
+            f.windows.first().expect("pre-failure window").tokens_per_sec
+        }));
+        rows.push(window_row(format!("tokens/s w1 degraded (tp={degraded_width})"), &|f| {
+            f.degraded_tokens_per_sec
+        }));
+        rows.push(window_row(format!("tokens/s w2 recovered (tp={tp})"), &|f| {
+            f.windows
+                .iter()
+                .rev()
+                .find(|w| w.width == tp && w.busy_sec > 0.0)
+                .expect("the post-recovery window serves")
+                .tokens_per_sec
+        }));
+        rows.push(FigureRow {
+            label: format!("{} ttft p99 (ms)", sc.label),
+            values: runs.iter().map(|(p, s)| (*p, s.serve.ttft_p99_ms)).collect(),
+        });
+        rows.push(window_row("recovery ratio (w2/w0)".into(), &|f| f.recovery_ratio));
+    }
+    FigureResult {
+        id: "serve_burst".into(),
+        title: "Cluster serving through a mid-run device outage (Llama-3 70B GQA-8)".into(),
+        metric: "per-row: busy-time decode tokens/s (w0/w1/w2), TTFT p99 ms, recovery ratio".into(),
+        rows,
+    }
+}
+
 /// Regenerate every figure (the `numa-attn figure all` path) through one
 /// driver: the whole set is still submitted figure-by-figure, but each
 /// figure's grid fans out across the pool and repeated (point, policy)
@@ -478,6 +572,7 @@ pub fn all(driver: &SimDriver, topo: &Topology, quick: bool) -> Vec<FigureResult
     figs.push(serve_ttft);
     figs.push(serve_share);
     figs.push(cluster_fig(driver, topo, quick));
+    figs.push(serve_burst_fig(driver, topo, quick));
     figs.push(disagg_fig(driver, topo, quick));
     figs.push(gemm_motivation(topo));
     figs
@@ -709,6 +804,40 @@ mod tests {
         }
         let parallel = decode_fig(&SimDriver::new(8), &topo, true);
         assert_eq!(serial.to_json().render(), parallel.to_json().render());
+    }
+
+    #[test]
+    fn serve_burst_fig_windows_are_finite_and_degraded_loses() {
+        let topo = fast_topo();
+        let driver = SimDriver::new(2);
+        let f = serve_burst_fig(&driver, &topo, true);
+        // One widest-TP scenario in quick mode, five panel rows.
+        assert_eq!(f.rows.len(), 5, "{:?}", f.rows.iter().map(|r| &r.label).collect::<Vec<_>>());
+        for row in &f.rows {
+            for (p, v) in &row.values {
+                assert!(v.is_finite(), "{} {p:?} = {v} must render as JSON", row.label);
+            }
+        }
+        let label_of = |needle: &str| {
+            f.rows
+                .iter()
+                .find(|r| r.label.contains(needle))
+                .unwrap_or_else(|| panic!("row containing {needle:?}"))
+                .label
+                .clone()
+        };
+        let full = label_of("w0 full");
+        let degraded = label_of("w1 degraded");
+        let ratio = label_of("recovery ratio");
+        for (p, _) in &f.rows[0].values {
+            let w0 = f.value(&full, *p).unwrap();
+            let w1 = f.value(&degraded, *p).unwrap();
+            assert!(w1 < w0, "{p:?}: degraded {w1} should fall below healthy {w0}");
+            let r = f.value(&ratio, *p).unwrap();
+            assert!(r > 0.5, "{p:?}: recovery should restore most of the rate, got {r}");
+        }
+        // The panel must render as parseable JSON (no NaN leakage).
+        crate::util::json::Json::parse(&f.to_json().render()).unwrap();
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::str::FromStr;
 use std::sync::Arc;
 
 use numa_attn::attn::AttnConfig;
+use numa_attn::cluster::{ClusterTopology, ShardPlan, ShardStrategy};
 use numa_attn::config::{self, ExperimentConfig};
 use numa_attn::coordinator::{self, BatcherConfig, ServiceConfig};
 use numa_attn::driver::{self, ReportCache, SimDriver, SimJob};
@@ -36,7 +37,7 @@ use numa_attn::sim::{self, SimConfig};
 use numa_attn::topology::presets;
 use numa_attn::util::args::Args;
 use numa_attn::util::json::Json;
-use numa_attn::workload::RequestGenerator;
+use numa_attn::workload::{RequestGenerator, TraceReplay};
 
 const USAGE: &str = "\
 numa-attn — NUMA-aware attention scheduling on chiplet GPUs
@@ -45,14 +46,15 @@ USAGE:
   numa-attn simulate [--config FILE | --topo T --heads H --n-ctx N ...]
   numa-attn decode [--topo T --batch Z --heads H --kv-heads HK --n-ctx N]
                    [--num-splits S] [--policy P] [--json]
-  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|serve_share|cluster|disagg|gemm|perf|tune|all> [--topo T] [--quick] [--json]
+  numa-attn figure <12|13|14|15|16|decode|serve|serve_ttft|serve_share|serve_burst|cluster|disagg|gemm|perf|tune|all> [--topo T] [--quick] [--json]
   numa-attn explain [--topo T] [--mapping POLICY|all] [--heads H] [--blocks B]
   numa-attn verify [--artifacts DIR]
-  numa-attn serve [--quick] [--config FILE] [--topo T] [--json]
+  numa-attn serve [--quick] [--config FILE] [--topo T] [--trace FILE] [--json]
   numa-attn serve --live [--artifacts DIR] [--requests N] [--max-batch B]
                   [--max-wait-ms MS] [--seed S]
   numa-attn cluster [--quick] [--config FILE] [--topo T] [--tp N] [--json]
-  numa-attn disagg [--quick] [--config FILE] [--topo T] [--json]
+                    [--trace FILE] [--faults SPEC]
+  numa-attn disagg [--quick] [--config FILE] [--topo T] [--trace FILE] [--json]
   numa-attn tune [--quick] [--config FILE] [--topo T] [--beam N] [--json]
 
 driver flags (simulate, decode, figure, serve, cluster, disagg, tune):
@@ -101,6 +103,10 @@ serve flags (the continuous-batching decode loop; docs/SERVING.md):
                        pool engages only with --kv-block-tokens > 0)
   --kv-capacity-mb N   override the paged-pool HBM budget in MiB
                        (0 = unlimited; refcount-0 blocks evict LRU)
+  --trace FILE         replay an explicit .trace arrival schedule instead
+                       of the generated session stream (docs/SERVING.md
+                       §8; an INI [trace] section can also name the file
+                       or generate a bursty/diurnal trace)
   --live               run the live PJRT prefill demo instead (requires
                        artifacts; uses --artifacts/--requests/--max-batch/
                        --max-wait-ms/--seed)
@@ -113,6 +119,15 @@ cluster flags (the tensor-parallel serving sweep; docs/CLUSTER.md):
   --tp N               restrict the built-in sweep to one TP degree (the
                        tp=1 baseline rows are kept: they anchor the
                        scaling-efficiency column)
+  --trace FILE         replay an explicit .trace arrival schedule in every
+                       sweep row (or the --config scenario)
+  --faults SPEC        inject device outages mid-serve and reprice every
+                       rebalance (docs/SERVING.md §9): SPEC is a
+                       comma-separated device:fail_sec:recover_sec list.
+                       Runs the built-in fault sweep at the widest TP
+                       degree; an INI [faults] section (explicit events,
+                       or a seeded seed/count/horizon_sec plan) does the
+                       same
 
 disagg flags (the disaggregated prefill/decode sweep; docs/DISAGG.md):
   --quick              run the two-scenario CI sweep — colocated x2 vs
@@ -120,6 +135,9 @@ disagg flags (the disaggregated prefill/decode sweep; docs/DISAGG.md):
                        wider pools and a prefix-sharing row)
   --config FILE        serve ONE deployment from an experiment file's
                        [disagg] + [serve] sections instead of the sweep
+  --trace FILE         replay an explicit .trace arrival schedule in every
+                       sweep row (or the --config deployment); trace rows
+                       carry their own interactive/batch SLO classes
 
 tune flags (the composed-mapping autotuner; docs/TUNING.md):
   --quick              search the two-row CI sweep (default: the full
@@ -221,6 +239,15 @@ fn filter_applicable(
             ok
         })
         .collect()
+}
+
+/// Load and parse a `.trace` replay schedule (docs/SERVING.md §8) named
+/// by the serving subcommands' `--trace` flag or an INI `[trace] file`
+/// key.
+fn load_trace(path: &str) -> anyhow::Result<TraceReplay> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("trace file {path}: {e}"))?;
+    TraceReplay::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
 }
 
 /// Cache/thread statistics on stderr (stdout stays row-for-row stable).
@@ -403,6 +430,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         }
         "serve_ttft" => vec![figures::serve_ttft_fig(&driver, &topo, quick)],
         "serve_share" => vec![figures::serve_share_fig(&driver, &topo, quick)],
+        "serve_burst" => vec![figures::serve_burst_fig(&driver, &topo, quick)],
         "cluster" => vec![figures::cluster_fig(&driver, &topo, quick)],
         "disagg" => vec![figures::disagg_fig(&driver, &topo, quick)],
         "gemm" => vec![figures::gemm_motivation(&topo)],
@@ -563,6 +591,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let kv_share: Option<f64> = args.get("prefix-share-pct").map_err(a)?;
     let kv_cap: Option<usize> = args.get("kv-capacity-mb").map_err(a)?;
     let kv_override = kv_block.is_some() || kv_share.is_some() || kv_cap.is_some();
+    // Load replay (docs/SERVING.md §8): the --trace flag wins over an
+    // INI `[trace] file` key; a generated `[trace]` section already
+    // landed on the config via `serve_config()`.
+    let trace_flag: Option<String> = args.get("trace").map_err(a)?;
     // `strict` (the single-scenario --config path) rejects a budget
     // override the scenario cannot honor, matching the INI parser's
     // contradiction error; the sweep path instead skips the budget on
@@ -631,9 +663,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let topo = exp.topology().map_err(a)?;
         let mut cfg = exp.serve_config().map_err(a)?;
         apply_overrides(&mut cfg, true)?;
+        if let Some(p) = trace_flag.as_deref().or(exp.trace_file()) {
+            cfg.trace = Some(load_trace(p)?);
+            cfg.validate().map_err(a)?;
+        }
         let label = override_label(path, &cfg);
         coordinator::ServeReport { rows: vec![coordinator::serve_row(&driver, &topo, &cfg, label)] }
-    } else if chunk.is_none() && budget.is_none() && !kv_override {
+    } else if chunk.is_none() && budget.is_none() && !kv_override && trace_flag.is_none() {
         let topo = topo_arg(args)?;
         coordinator::serve_report(&driver, &topo, args.has("quick"))
     } else {
@@ -642,7 +678,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         for sc in coordinator::serve_scenarios(args.has("quick")) {
             let mut cfg = sc.cfg;
             apply_overrides(&mut cfg, false)?;
+            if let Some(p) = trace_flag.as_deref() {
+                cfg.trace = Some(load_trace(p)?);
+                cfg.validate().map_err(a)?;
+            }
             let label = override_label(sc.label, &cfg);
+            let label =
+                if trace_flag.is_some() { format!("{label} [trace]") } else { label };
             rows.push(coordinator::serve_row(&driver, &topo, &cfg, label));
         }
         coordinator::ServeReport { rows }
@@ -666,18 +708,99 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let a = |e: String| anyhow::anyhow!(e);
     let driver = driver_arg(args)?;
-    let report = if let Some(path) = args.get::<String>("config").map_err(a)? {
-        let text = std::fs::read_to_string(&path)?;
-        let exp = ExperimentConfig::parse(&text).map_err(a)?;
+    let trace_flag: Option<String> = args.get("trace").map_err(a)?;
+    let config_path: Option<String> = args.get::<String>("config").map_err(a)?;
+    let exp = match &config_path {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            Some(ExperimentConfig::parse(&text).map_err(a)?)
+        }
+        None => None,
+    };
+    // Fault injection (docs/SERVING.md §9): the --faults flag (an
+    // explicit device:fail_sec:recover_sec schedule) wins over the
+    // file's [faults] section. A non-empty spec switches to the fault
+    // report — the built-in scenario grid at the sweep's widest TP
+    // degree, with the outages applied and every rebalance priced.
+    let mut fault_spec = match &exp {
+        Some(e) => e.fault_spec().map_err(a)?,
+        None => coordinator::FaultSpec::default(),
+    };
+    if let Some(events) = args.get::<String>("faults").map_err(a)? {
+        fault_spec = coordinator::FaultSpec { events, ..coordinator::FaultSpec::default() };
+    }
+    if !fault_spec.is_none() {
+        anyhow::ensure!(
+            trace_flag.is_none(),
+            "--faults runs the built-in fault sweep and cannot replay a --trace schedule"
+        );
+        let topo = match &exp {
+            Some(e) => {
+                let name = e
+                    .cluster
+                    .as_ref()
+                    .and_then(|c| c.topology.clone())
+                    .unwrap_or_else(|| e.topology.clone());
+                eprintln!(
+                    "[faults] running the built-in fault sweep on '{name}' \
+                     (the [cluster]/[serve] scenario keys do not apply)"
+                );
+                presets::by_name_or_err(&name).map_err(a)?
+            }
+            None => topo_arg(args)?,
+        };
+        let report =
+            coordinator::fault_report(&driver, &topo, args.has("quick"), &fault_spec).map_err(a)?;
+        if args.has("json") {
+            println!("{}", report.to_json().render());
+        } else {
+            print!("{}", report.render());
+        }
+        print_driver_stats(&driver);
+        return Ok(());
+    }
+    let report = if let (Some(exp), Some(path)) = (&exp, &config_path) {
         let cluster = exp.cluster_topology().map_err(a)?;
         let plan = exp.shard_plan().map_err(a)?;
-        let cfg = exp.serve_config().map_err(a)?;
+        let mut cfg = exp.serve_config().map_err(a)?;
+        if let Some(p) = trace_flag.as_deref().or(exp.trace_file()) {
+            cfg.trace = Some(load_trace(p)?);
+            cfg.validate().map_err(a)?;
+        }
         let label = format!("{path} tp={}", plan.tp);
-        let row = coordinator::cluster_row(&driver, &cluster, &plan, &cfg, label, path);
+        let row = coordinator::cluster_row(&driver, &cluster, &plan, &cfg, label, path.clone());
         coordinator::ClusterReport { rows: vec![row] }
     } else {
         let topo = topo_arg(args)?;
-        let mut report = coordinator::serve_cluster_report(&driver, &topo, args.has("quick"));
+        let mut report = if let Some(p) = trace_flag.as_deref() {
+            // The built-in sweep with every scenario replaying the same
+            // schedule: mirrors `serve_cluster_report` with the trace
+            // installed on each scenario's config.
+            let replay = load_trace(p)?;
+            let rows = coordinator::cluster_scenarios(args.has("quick"))
+                .into_iter()
+                .map(|sc| {
+                    let cluster = ClusterTopology::node_of(&topo, sc.tp);
+                    let plan =
+                        ShardPlan::new(&sc.cfg.base_geometry(), sc.tp, ShardStrategy::Contiguous)
+                            .expect("sweep TP degrees divide the scenario's KV heads");
+                    let cfg =
+                        coordinator::ServeConfig { trace: Some(replay.clone()), ..sc.cfg };
+                    cfg.validate().map_err(a)?;
+                    Ok(coordinator::cluster_row(
+                        &driver,
+                        &cluster,
+                        &plan,
+                        &cfg,
+                        format!("{} [trace]", sc.label),
+                        sc.base,
+                    ))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            coordinator::ClusterReport { rows }
+        } else {
+            coordinator::serve_cluster_report(&driver, &topo, args.has("quick"))
+        };
         if let Some(tp) = args.get::<usize>("tp").map_err(a)? {
             let degrees: Vec<usize> = report.rows.iter().map(|r| r.tp).collect();
             anyhow::ensure!(
@@ -708,14 +831,35 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
 fn cmd_disagg(args: &Args) -> anyhow::Result<()> {
     let a = |e: String| anyhow::anyhow!(e);
     let driver = driver_arg(args)?;
+    let trace_flag: Option<String> = args.get("trace").map_err(a)?;
     let report = if let Some(path) = args.get::<String>("config").map_err(a)? {
         let text = std::fs::read_to_string(&path)?;
         let exp = ExperimentConfig::parse(&text).map_err(a)?;
         let topo = exp.topology().map_err(a)?;
-        let cfg = exp.disagg_config().map_err(a)?;
+        let mut cfg = exp.disagg_config().map_err(a)?;
+        if let Some(p) = trace_flag.as_deref().or(exp.trace_file()) {
+            cfg.serve.trace = Some(load_trace(p)?);
+            cfg.validate().map_err(a)?;
+        }
         let label = format!("{path} {}p+{}d", cfg.prefill_devices, cfg.decode_devices);
         let row = coordinator::disagg_row(&driver, &topo, &cfg, label);
         coordinator::DisaggReport { rows: vec![row] }
+    } else if let Some(p) = trace_flag.as_deref() {
+        // The built-in sweep with every deployment replaying the same
+        // schedule; trace rows carry their own SLO classes, so the
+        // scenarios' interactive_pct draw is bypassed.
+        let topo = topo_arg(args)?;
+        let replay = load_trace(p)?;
+        let rows = coordinator::disagg_scenarios(args.has("quick"))
+            .into_iter()
+            .map(|sc| {
+                let mut cfg = sc.cfg;
+                cfg.serve.trace = Some(replay.clone());
+                cfg.validate().map_err(a)?;
+                Ok(coordinator::disagg_row(&driver, &topo, &cfg, format!("{} [trace]", sc.label)))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        coordinator::DisaggReport { rows }
     } else {
         let topo = topo_arg(args)?;
         coordinator::disagg_report(&driver, &topo, args.has("quick"))

@@ -111,7 +111,13 @@ impl LatencyHistogram {
 /// 2. take the sample at rank `clamp(ceil(q · n), 1, n)` (1-based).
 ///
 /// Consequences worth knowing at the edges:
-/// * empty slice → `0.0` (the one case where the result is not a sample);
+/// * empty slice → `0.0` (the one case where the result is not a
+///   sample). This is **frozen**: historical serving goldens bake the
+///   `0.0` into their JSON, so it must not change to `NaN` here.
+///   Callers that want "no samples" to *render* as `n/a`/`null` instead
+///   of a fake zero (the fault windows' per-window rates, for example)
+///   check for emptiness themselves and carry a `NaN` sentinel that
+///   their own rendering maps to `n/a` (tables) or `null` (JSON);
 /// * single sample → that sample for every `q`;
 /// * `q = 0` (and any `q` with `q·n ≤ 1`) → the minimum, because the
 ///   rank clamps up to 1 — so "p0" is the smallest sample, not an

@@ -20,10 +20,47 @@ impl SplitMix64 {
         mix(self.state)
     }
 
-    /// Uniform in [0, n) (n > 0).
+    /// Uniform-ish in [0, n) (n > 0).
+    ///
+    /// **Frozen trace-compat guarantee:** this is a plain
+    /// `next_u64() % n`, which carries the classic modulo bias (values
+    /// below `2^64 mod n` are marginally more likely). The bias is
+    /// negligible for the small `n` the workload generators use, but it
+    /// is *observable*: every historical [`crate::workload::Session`]
+    /// trace — and through them every serving/cluster/disagg golden
+    /// pin — was drawn through this exact mapping. Changing it would
+    /// silently re-roll all of those traces, so the modulo form is
+    /// frozen here on purpose. New consumers that want exact uniformity
+    /// (e.g. fault-plan draws) should use [`Self::gen_range_unbiased`]
+    /// instead.
     pub fn gen_range(&mut self, n: u64) -> u64 {
         debug_assert!(n > 0);
         self.next_u64() % n
+    }
+
+    /// Exactly uniform in [0, n) (n > 0), via rejection sampling.
+    ///
+    /// Unlike the trace-frozen [`Self::gen_range`], this discards draws
+    /// from the biased tail (`x >= 2^64 - (2^64 mod n)`) and re-rolls,
+    /// so every value in [0, n) is equally likely. It may consume more
+    /// than one `next_u64()` per call (still deterministic for a given
+    /// seed and call sequence), so it must never replace `gen_range` on
+    /// a pinned stream. Use it for new randomness (fault plans).
+    pub fn gen_range_unbiased(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 2^64 mod n, computed without overflowing u64. Draws at or
+        // above 2^64 - rem land in the short final partial cycle of
+        // `% n` (the biased tail) and are re-rolled.
+        let rem = (u64::MAX % n + 1) % n;
+        if rem == 0 {
+            return self.next_u64() % n;
+        }
+        loop {
+            let x = self.next_u64();
+            if x <= u64::MAX - rem {
+                return x % n;
+            }
+        }
     }
 
     /// Uniform in [0, 1).
@@ -67,6 +104,41 @@ mod tests {
             assert!(r.gen_range(7) < 7);
             let f = r.next_f64();
             assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn gen_range_is_the_frozen_modulo_mapping() {
+        // The trace-compat guarantee in the rustdoc: gen_range must stay
+        // exactly `next_u64() % n`, because every historical Session
+        // trace (and every golden pin built on one) was drawn through
+        // it. If this test fails, traces silently re-rolled.
+        let mut a = SplitMix64::new(99);
+        let mut b = SplitMix64::new(99);
+        for n in [1u64, 3, 7, 10, 1 << 20, u64::MAX] {
+            assert_eq!(a.gen_range(n), b.next_u64() % n);
+        }
+    }
+
+    #[test]
+    fn gen_range_unbiased_bounds_and_uniformity() {
+        let mut r = SplitMix64::new(17);
+        for _ in 0..1000 {
+            assert!(r.gen_range_unbiased(7) < 7);
+            assert_eq!(r.gen_range_unbiased(1), 0);
+        }
+        let mut counts = [0u32; 5];
+        for _ in 0..5000 {
+            counts[r.gen_range_unbiased(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((800..1200).contains(&c), "{counts:?}");
+        }
+        // Powers of two never reject (2^64 mod 2^k = 0).
+        let mut p = SplitMix64::new(17);
+        let mut q = SplitMix64::new(17);
+        for _ in 0..100 {
+            assert_eq!(p.gen_range_unbiased(8), q.next_u64() % 8);
         }
     }
 

@@ -5,6 +5,8 @@
 pub mod presets;
 pub mod requests;
 pub mod sweeps;
+pub mod trace;
 
 pub use presets::ModelPreset;
 pub use requests::{Request, RequestGenerator, Session, SessionGenerator, SloClass};
+pub use trace::{SessionSource, TraceReplay, TraceShape, TraceSpec};

@@ -336,6 +336,37 @@ mod tests {
     }
 
     #[test]
+    fn session_trace_pin_seed_11() {
+        // The trace-compat pin behind `SplitMix64::gen_range`'s frozen
+        // modulo mapping: the exact sessions a historical seed draws.
+        // If this fails, every serving/cluster/disagg golden built on a
+        // generated trace silently re-rolled. Prompt/decode picks are
+        // exact (integer stream); arrivals allow 1 ulp-scale slack for
+        // the platform ln().
+        let got = SessionGenerator::new(11, 100.0, vec![1024, 4096], vec![16, 64]).take(8);
+        let want = [
+            (0.0038015472479826563, 4096, 64),
+            (0.010825728101193569, 1024, 16),
+            (0.011885051326241498, 1024, 16),
+            (0.04340270740578941, 1024, 64),
+            (0.06767290728748605, 4096, 64),
+            (0.07049107688060997, 1024, 16),
+            (0.08316236607424983, 1024, 16),
+            (0.09997350446954167, 1024, 64),
+        ];
+        for (s, (arrival, prefill, decode)) in got.iter().zip(want) {
+            assert_eq!((s.prefill, s.decode_tokens), (prefill, decode), "session {}", s.id);
+            assert!(
+                (s.arrival_sec - arrival).abs() < 1e-12,
+                "session {}: arrival {} != pinned {arrival}",
+                s.id,
+                s.arrival_sec
+            );
+            assert_eq!((s.shared_prefix, s.slo), (0, SloClass::Batch));
+        }
+    }
+
+    #[test]
     fn session_kv_len_grows_then_caps() {
         let s = Session {
             id: 0,

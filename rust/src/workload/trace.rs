@@ -1,0 +1,523 @@
+//! Load-replay traces for the serving loops (docs/SERVING.md §8):
+//! a small line-based `.trace` text format holding an explicit arrival
+//! schedule — one `arrival_sec prefill decode [shared] [slo]` row per
+//! session — plus seeded generators for the two non-stationary shapes
+//! the ROADMAP's scenario-pack item calls out (bursty square-wave and
+//! diurnal sinusoid arrival rates, sampled by Poisson thinning).
+//!
+//! The [`SessionSource`] trait is the seam: [`SessionGenerator`] (the
+//! historical stationary-Poisson stream) and [`TraceReplay`] (an
+//! explicit schedule, parsed from a file or built by a
+//! [`TraceSpec`]) are interchangeable everywhere the serving loops
+//! consume sessions. Replay is exact: [`TraceReplay::render`] writes
+//! `arrival_sec` with Rust's shortest-round-trip float formatting, so
+//! parsing a rendered trace reproduces every `f64` bit-for-bit — the
+//! "replayed generator trace ≡ generated trace" golden pin.
+
+use crate::util::rng::SplitMix64;
+use crate::workload::requests::{Session, SessionGenerator, SloClass};
+
+/// Anything the serving loops can draw an arrival-ordered session
+/// stream from. [`SessionGenerator`] draws sessions lazily from its
+/// seeded streams; [`TraceReplay`] hands out a pre-built schedule.
+pub trait SessionSource {
+    /// The next `n` sessions, arrival-ordered. A finite source (a
+    /// trace) returns fewer than `n` once exhausted.
+    fn take_sessions(&mut self, n: usize) -> Vec<Session>;
+}
+
+impl SessionSource for SessionGenerator {
+    fn take_sessions(&mut self, n: usize) -> Vec<Session> {
+        SessionGenerator::take(self, n)
+    }
+}
+
+/// An explicit session schedule replayed verbatim: the in-memory form
+/// of a `.trace` file. Construction assigns ids in row order (0..n),
+/// exactly like a generator would.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceReplay {
+    sessions: Vec<Session>,
+    cursor: usize,
+}
+
+impl TraceReplay {
+    /// Wrap an arrival-ordered session list, re-assigning ids in row
+    /// order so a trace's identity is its rows, not its provenance.
+    pub fn new(mut sessions: Vec<Session>) -> Self {
+        for (i, s) in sessions.iter_mut().enumerate() {
+            s.id = i as u64;
+        }
+        TraceReplay { sessions, cursor: 0 }
+    }
+
+    /// The full schedule (row order).
+    pub fn sessions(&self) -> &[Session] {
+        &self.sessions
+    }
+
+    /// Number of sessions in the trace.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// True when the trace holds no sessions.
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Parse the `.trace` text format: one whitespace-separated
+    /// `arrival_sec prefill decode [shared] [slo]` row per line, `#`
+    /// starting a comment, blank lines ignored. `shared` (leading
+    /// prompt tokens on the canonical shared prefix) defaults to 0;
+    /// `slo` is `interactive` or `batch` (default). Arrivals must be
+    /// finite, non-negative, and non-decreasing; prefill and decode
+    /// must be positive. Errors name the offending line.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut sessions = Vec::new();
+        let mut prev_arrival = 0.0f64;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let at = |msg: String| format!("trace line {}: {msg}", lineno + 1);
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() < 3 || fields.len() > 5 {
+                return Err(at(format!(
+                    "expected 'arrival_sec prefill decode [shared] [slo]', got {} fields",
+                    fields.len()
+                )));
+            }
+            let arrival_sec: f64 = fields[0]
+                .parse()
+                .map_err(|_| at(format!("bad arrival_sec {:?}", fields[0])))?;
+            if !arrival_sec.is_finite() || arrival_sec < 0.0 {
+                return Err(at(format!("arrival_sec must be finite and >= 0, got {arrival_sec}")));
+            }
+            if arrival_sec < prev_arrival {
+                return Err(at(format!(
+                    "arrivals must be non-decreasing ({arrival_sec} < {prev_arrival})"
+                )));
+            }
+            prev_arrival = arrival_sec;
+            let uint = |what: &str, s: &str| -> Result<usize, String> {
+                let v: usize = s.parse().map_err(|_| at(format!("bad {what} {s:?}")))?;
+                Ok(v)
+            };
+            let prefill = uint("prefill", fields[1])?;
+            let decode_tokens = uint("decode", fields[2])?;
+            if prefill == 0 || decode_tokens == 0 {
+                return Err(at("prefill and decode must be > 0".into()));
+            }
+            let shared_prefix = match fields.get(3) {
+                Some(s) => uint("shared", s)?,
+                None => 0,
+            };
+            if shared_prefix > prefill {
+                return Err(at(format!(
+                    "shared prefix {shared_prefix} exceeds prefill {prefill}"
+                )));
+            }
+            let slo = match fields.get(4) {
+                Some(&"interactive") => SloClass::Interactive,
+                Some(&"batch") | None => SloClass::Batch,
+                Some(other) => {
+                    return Err(at(format!(
+                        "bad slo class {other:?} (expected 'interactive' or 'batch')"
+                    )))
+                }
+            };
+            sessions.push(Session {
+                id: sessions.len() as u64,
+                arrival_sec,
+                prefill,
+                decode_tokens,
+                shared_prefix,
+                slo,
+            });
+        }
+        Ok(TraceReplay { sessions, cursor: 0 })
+    }
+
+    /// Render the canonical `.trace` text of this schedule. Arrivals
+    /// use Rust's shortest-round-trip `f64` formatting, so
+    /// `parse(render(t))` reproduces `t`'s sessions bit-for-bit — the
+    /// mechanism behind the replayed-≡-generated golden pin. Optional
+    /// columns are emitted only when a later column needs them.
+    pub fn render(&self) -> String {
+        let mut out = String::from("# arrival_sec prefill decode [shared] [slo]\n");
+        for s in &self.sessions {
+            out.push_str(&format!("{} {} {}", s.arrival_sec, s.prefill, s.decode_tokens));
+            let interactive = s.slo == SloClass::Interactive;
+            if s.shared_prefix > 0 || interactive {
+                out.push_str(&format!(" {}", s.shared_prefix));
+            }
+            if interactive {
+                out.push_str(" interactive");
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl SessionSource for TraceReplay {
+    fn take_sessions(&mut self, n: usize) -> Vec<Session> {
+        let end = (self.cursor + n).min(self.sessions.len());
+        let out = self.sessions[self.cursor..end].to_vec();
+        self.cursor = end;
+        out
+    }
+}
+
+/// Shape of a generated trace's arrival-rate curve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceShape {
+    /// Square wave: the rate sits at `peak_per_sec` for the leading
+    /// `duty_pct`% of every period, at `base_per_sec` otherwise — the
+    /// on/off burst regime.
+    Bursty,
+    /// Raised sinusoid: the rate sweeps smoothly from `base_per_sec`
+    /// up to `peak_per_sec` and back once per period — the day/night
+    /// load curve, compressed.
+    Diurnal,
+}
+
+impl TraceShape {
+    /// Stable lowercase identifier (`bursty` / `diurnal`), as written
+    /// in `[trace] shape` and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceShape::Bursty => "bursty",
+            TraceShape::Diurnal => "diurnal",
+        }
+    }
+
+    /// Parse the identifier form.
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "bursty" => Ok(TraceShape::Bursty),
+            "diurnal" => Ok(TraceShape::Diurnal),
+            other => Err(format!("unknown trace shape {other:?} (bursty | diurnal)")),
+        }
+    }
+}
+
+/// A seeded non-stationary trace generator: everything needed to build
+/// a [`TraceReplay`] with a bursty or diurnal arrival-rate curve.
+/// Arrivals are sampled by Poisson thinning at `peak_per_sec` (draw
+/// candidate gaps at the peak rate, accept each with probability
+/// `rate(t) / peak`), so the schedule is exactly reproducible from the
+/// seed. Prompt/decode/sharing/SLO draws follow the
+/// [`SessionGenerator`] discipline: the shared-prefix and SLO draws
+/// ride separate streams, so toggling them never perturbs arrivals.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Arrival-rate curve shape.
+    pub shape: TraceShape,
+    /// Generator seed.
+    pub seed: u64,
+    /// Number of sessions to emit.
+    pub sessions: usize,
+    /// Off-burst / trough arrival rate (sessions per second).
+    pub base_per_sec: f64,
+    /// Burst / crest arrival rate (sessions per second).
+    pub peak_per_sec: f64,
+    /// Length of one rate cycle in seconds.
+    pub period_sec: f64,
+    /// [`TraceShape::Bursty`] only: the leading percentage of each
+    /// period spent at the peak rate (ignored by `Diurnal`).
+    pub duty_pct: f64,
+    /// Prompt-length mix (uniformly sampled).
+    pub prefill_lengths: Vec<usize>,
+    /// Decode-budget mix (uniformly sampled).
+    pub decode_tokens: Vec<usize>,
+    /// Percentage of sessions starting on the canonical shared prefix.
+    pub share_pct: f64,
+    /// Shared-prefix span in tokens (clamped to the prompt).
+    pub share_span: usize,
+    /// Percentage of sessions in the interactive SLO class.
+    pub interactive_pct: f64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            shape: TraceShape::Bursty,
+            seed: 7,
+            sessions: 16,
+            base_per_sec: 40.0,
+            peak_per_sec: 400.0,
+            period_sec: 0.25,
+            duty_pct: 25.0,
+            prefill_lengths: vec![2048, 8192],
+            decode_tokens: vec![32, 128],
+            share_pct: 0.0,
+            share_span: 0,
+            interactive_pct: 0.0,
+        }
+    }
+}
+
+impl TraceSpec {
+    /// Check every parameter, returning an actionable message instead
+    /// of panicking on user-supplied INI/flag values.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.base_per_sec > 0.0) || !self.base_per_sec.is_finite() {
+            return Err(format!("[trace] base_per_sec must be > 0, got {}", self.base_per_sec));
+        }
+        if !(self.peak_per_sec >= self.base_per_sec) || !self.peak_per_sec.is_finite() {
+            return Err(format!(
+                "[trace] peak_per_sec must be >= base_per_sec ({}), got {}",
+                self.base_per_sec, self.peak_per_sec
+            ));
+        }
+        if !(self.period_sec > 0.0) || !self.period_sec.is_finite() {
+            return Err(format!("[trace] period_sec must be > 0, got {}", self.period_sec));
+        }
+        if !(0.0..=100.0).contains(&self.duty_pct) {
+            return Err(format!("[trace] duty_pct must be in [0, 100], got {}", self.duty_pct));
+        }
+        if self.sessions == 0 {
+            return Err("[trace] sessions must be > 0".into());
+        }
+        if self.prefill_lengths.is_empty() || self.prefill_lengths.contains(&0) {
+            return Err("[trace] prefill mix must be non-empty with positive entries".into());
+        }
+        if self.decode_tokens.is_empty() || self.decode_tokens.contains(&0) {
+            return Err("[trace] decode mix must be non-empty with positive entries".into());
+        }
+        if !(0.0..=100.0).contains(&self.share_pct) {
+            return Err(format!("[trace] share_pct must be in [0, 100], got {}", self.share_pct));
+        }
+        if !(0.0..=100.0).contains(&self.interactive_pct) {
+            return Err(format!(
+                "[trace] interactive_pct must be in [0, 100], got {}",
+                self.interactive_pct
+            ));
+        }
+        Ok(())
+    }
+
+    /// The instantaneous arrival rate at trace time `t` seconds.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let phase = (t / self.period_sec).fract();
+        match self.shape {
+            TraceShape::Bursty => {
+                if phase * 100.0 < self.duty_pct {
+                    self.peak_per_sec
+                } else {
+                    self.base_per_sec
+                }
+            }
+            TraceShape::Diurnal => {
+                let swing = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+                self.base_per_sec + (self.peak_per_sec - self.base_per_sec) * swing
+            }
+        }
+    }
+
+    /// Generate the schedule. Panics only on an invalid spec — callers
+    /// holding user input run [`Self::validate`] first.
+    pub fn generate(&self) -> TraceReplay {
+        self.validate().expect("valid trace spec");
+        let mut rng = SplitMix64::new(self.seed);
+        let mut share_rng = SplitMix64::new(self.seed ^ 0xA5A5_5A5A_D00D_F00D);
+        let mut slo_rng = SplitMix64::new(self.seed ^ 0xA11C_E5ED_5105_C1A5);
+        let mut clock = 0.0f64;
+        let mut sessions = Vec::with_capacity(self.sessions);
+        while sessions.len() < self.sessions {
+            // Thinning: candidate arrivals at the peak rate, accepted
+            // with probability rate(t)/peak. Both draws come from the
+            // main stream so the arrival schedule is one frozen
+            // function of the seed.
+            let u = rng.next_f64();
+            clock += -(1.0 - u).ln() / self.peak_per_sec;
+            if rng.next_f64() * self.peak_per_sec >= self.rate_at(clock) {
+                continue;
+            }
+            let prefill = *rng.choose(&self.prefill_lengths);
+            let decode = *rng.choose(&self.decode_tokens);
+            let shared_prefix =
+                if self.share_pct > 0.0 && share_rng.next_f64() * 100.0 < self.share_pct {
+                    self.share_span.min(prefill)
+                } else {
+                    0
+                };
+            let slo = if self.interactive_pct > 0.0
+                && slo_rng.next_f64() * 100.0 < self.interactive_pct
+            {
+                SloClass::Interactive
+            } else {
+                SloClass::Batch
+            };
+            sessions.push(Session {
+                id: sessions.len() as u64,
+                arrival_sec: clock,
+                prefill,
+                decode_tokens: decode,
+                shared_prefix,
+                slo,
+            });
+        }
+        TraceReplay { sessions, cursor: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TraceSpec {
+        TraceSpec {
+            sessions: 64,
+            share_pct: 50.0,
+            share_span: 1024,
+            interactive_pct: 25.0,
+            ..TraceSpec::default()
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trips_bit_for_bit() {
+        // The golden-pin mechanism: shortest-round-trip f64 formatting
+        // means a rendered trace parses back to the exact sessions.
+        for shape in [TraceShape::Bursty, TraceShape::Diurnal] {
+            let t = TraceSpec { shape, ..spec() }.generate();
+            let back = TraceReplay::parse(&t.render()).unwrap();
+            assert_eq!(t.sessions().len(), back.sessions().len());
+            for (a, b) in t.sessions().iter().zip(back.sessions()) {
+                assert_eq!(a.arrival_sec.to_bits(), b.arrival_sec.to_bits(), "{shape:?}");
+                assert_eq!(a, b, "{shape:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_handles_comments_defaults_and_errors() {
+        let t = TraceReplay::parse(
+            "# header\n\
+             0.5 1024 16\n\
+             0.75 2048 32 512   # inline comment\n\
+             \n\
+             1.0 4096 64 0 interactive\n",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.sessions()[0].shared_prefix, 0);
+        assert_eq!(t.sessions()[0].slo, SloClass::Batch);
+        assert_eq!(t.sessions()[1].shared_prefix, 512);
+        assert_eq!(t.sessions()[2].slo, SloClass::Interactive);
+        assert_eq!(t.sessions().iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+
+        for (bad, needle) in [
+            ("1.0 1024", "got 2 fields"),
+            ("x 1024 16", "bad arrival_sec"),
+            ("-1 1024 16", ">= 0"),
+            ("2.0 1024 16\n1.0 1024 16", "non-decreasing"),
+            ("1.0 0 16", "must be > 0"),
+            ("1.0 1024 16 2048", "exceeds prefill"),
+            ("1.0 1024 16 0 gold", "bad slo class"),
+            ("inf 1024 16", "finite"),
+        ] {
+            let err = TraceReplay::parse(bad).unwrap_err();
+            assert!(err.contains(needle), "{bad:?} -> {err}");
+            assert!(err.contains("trace line"), "{err}");
+        }
+    }
+
+    #[test]
+    fn generated_shapes_are_deterministic_and_bursty_clusters() {
+        let a = spec().generate();
+        let b = spec().generate();
+        assert_eq!(a, b);
+        for w in a.sessions().windows(2) {
+            assert!(w[0].arrival_sec <= w[1].arrival_sec);
+        }
+        // The burst carries most arrivals: sessions landing in the
+        // leading duty window of their period outnumber the rest even
+        // though the window covers only 25% of each period.
+        let s = spec();
+        let in_burst = a
+            .sessions()
+            .iter()
+            .filter(|x| (x.arrival_sec / s.period_sec).fract() * 100.0 < s.duty_pct)
+            .count();
+        assert!(in_burst * 2 > a.len(), "{in_burst}/{} arrivals in the 25% burst", a.len());
+        // Optional draws behave like the generator's: spans clamp,
+        // classes only appear when enabled.
+        assert!(a.sessions().iter().all(|x| x.shared_prefix <= x.prefill));
+        assert!(a.sessions().iter().any(|x| x.slo == SloClass::Interactive));
+        let plain = TraceSpec { share_pct: 0.0, interactive_pct: 0.0, ..spec() }.generate();
+        assert!(plain.sessions().iter().all(|x| x.shared_prefix == 0));
+        assert!(plain.sessions().iter().all(|x| x.slo == SloClass::Batch));
+        // Toggling the optional draws never perturbs the arrivals.
+        for (p, q) in plain.sessions().iter().zip(a.sessions()) {
+            assert_eq!(p.arrival_sec.to_bits(), q.arrival_sec.to_bits());
+            assert_eq!((p.prefill, p.decode_tokens), (q.prefill, q.decode_tokens));
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_sweeps_between_base_and_peak() {
+        let s = TraceSpec { shape: TraceShape::Diurnal, ..spec() };
+        assert!((s.rate_at(0.0) - s.base_per_sec).abs() < 1e-9);
+        let crest = s.rate_at(s.period_sec / 2.0);
+        assert!((crest - s.peak_per_sec).abs() < 1e-6 * s.peak_per_sec);
+        for i in 0..100 {
+            let r = s.rate_at(i as f64 * s.period_sec / 100.0);
+            assert!(r >= s.base_per_sec - 1e-9 && r <= s.peak_per_sec + 1e-9);
+        }
+    }
+
+    #[test]
+    fn session_sources_are_interchangeable() {
+        // The trait seam: a generator and a replay of its output hand
+        // the loop identical sessions, in identical chunks.
+        let mut g = SessionGenerator::new(11, 100.0, vec![1024, 4096], vec![16, 64]);
+        let all = g.clone().take(10);
+        let mut replay = TraceReplay::new(all.clone());
+        let via_gen: Vec<Session> = SessionSource::take_sessions(&mut g, 10);
+        let via_replay = replay.take_sessions(10);
+        assert_eq!(via_gen, all);
+        assert_eq!(via_replay, all);
+        // A finite source drains: further takes are empty.
+        assert!(replay.take_sessions(5).is_empty());
+        // Partial takes chunk without loss.
+        let mut r2 = TraceReplay::new(all.clone());
+        let mut parts = r2.take_sessions(3);
+        parts.extend(r2.take_sessions(100));
+        assert_eq!(parts, all);
+        assert!(!r2.is_empty());
+        assert_eq!(r2.len(), 10);
+    }
+
+    #[test]
+    fn shape_names_round_trip() {
+        for shape in [TraceShape::Bursty, TraceShape::Diurnal] {
+            assert_eq!(TraceShape::from_name(shape.name()).unwrap(), shape);
+        }
+        assert!(TraceShape::from_name("weekly").unwrap_err().contains("unknown trace shape"));
+    }
+
+    #[test]
+    fn spec_validate_rejects_each_bad_field() {
+        assert!(spec().validate().is_ok());
+        let cases: Vec<(TraceSpec, &str)> = vec![
+            (TraceSpec { base_per_sec: 0.0, ..spec() }, "base_per_sec"),
+            (TraceSpec { peak_per_sec: 1.0, ..spec() }, "peak_per_sec"),
+            (TraceSpec { period_sec: 0.0, ..spec() }, "period_sec"),
+            (TraceSpec { duty_pct: 101.0, ..spec() }, "duty_pct"),
+            (TraceSpec { sessions: 0, ..spec() }, "sessions"),
+            (TraceSpec { prefill_lengths: vec![], ..spec() }, "prefill"),
+            (TraceSpec { decode_tokens: vec![0], ..spec() }, "decode"),
+            (TraceSpec { share_pct: -1.0, ..spec() }, "share_pct"),
+            (TraceSpec { interactive_pct: 200.0, ..spec() }, "interactive_pct"),
+        ];
+        for (bad, needle) in cases {
+            let err = bad.validate().unwrap_err();
+            assert!(err.contains(needle), "{err}");
+        }
+    }
+}

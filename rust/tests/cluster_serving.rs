@@ -15,8 +15,8 @@
 
 use numa_attn::cluster::{ClusterTopology, ShardPlan, ShardStrategy};
 use numa_attn::coordinator::{
-    serve_decode_cluster_with, serve_decode_disagg_with, serve_decode_with, DisaggConfig,
-    ServeConfig,
+    serve_decode_cluster_with, serve_decode_disagg_with, serve_decode_faulty_with,
+    serve_decode_with, DisaggConfig, FaultPlan, ServeConfig,
 };
 use numa_attn::driver::SimDriver;
 use numa_attn::mapping::Policy;
@@ -413,4 +413,76 @@ fn strided_and_contiguous_plans_price_identically_when_homogeneous() {
     let a = serve_decode_cluster_with(&driver, &cluster, &cont, &cfg, Policy::SwizzledHeadFirst);
     let b = serve_decode_cluster_with(&driver, &cluster, &strd, &cfg, Policy::SwizzledHeadFirst);
     assert_eq!(a.to_json().render(), b.to_json().render());
+}
+
+#[test]
+fn golden_empty_fault_plan_reproduces_cluster_serve_byte_for_byte() {
+    // The fault-injection golden pin (docs/SERVING.md §9): an empty
+    // plan delegates straight to the historical cluster path — the
+    // JSON matches byte-for-byte (no trailing "faults" key) at 1 and 8
+    // driver workers, so enabling the fault machinery cost the
+    // fault-free deployment nothing.
+    let topo = fast_topo();
+    let cfg = small_serve();
+    let (cluster, plan) = tp_cluster(&topo, &cfg, 2);
+    for policy in [Policy::SwizzledHeadFirst, Policy::NaiveHeadFirst] {
+        for threads in [1usize, 8] {
+            let driver = SimDriver::new(threads);
+            let want = serve_decode_cluster_with(&driver, &cluster, &plan, &cfg, policy)
+                .to_json()
+                .render();
+            let got =
+                serve_decode_faulty_with(&driver, &topo, 2, &cfg, policy, &FaultPlan::default());
+            assert!(got.faults.is_none(), "an empty plan must not grow fault extras");
+            assert_eq!(
+                got.to_json().render(),
+                want,
+                "{policy} @ {threads} workers: empty fault plan diverged from the \
+                 historical cluster serve JSON"
+            );
+        }
+    }
+}
+
+#[test]
+fn faulty_cluster_serve_is_byte_identical_across_worker_counts() {
+    // Determinism holds through evictions and resharding: the same
+    // non-empty plan renders identical JSON at 1 and 8 driver workers.
+    let topo = fast_topo();
+    let cfg = ServeConfig {
+        prefill_lengths: vec![512],
+        decode_tokens: vec![64],
+        ..small_serve()
+    };
+    let clean = serve_decode_faulty_with(
+        &SimDriver::new(1),
+        &topo,
+        2,
+        &cfg,
+        Policy::SwizzledHeadFirst,
+        &FaultPlan::default(),
+    );
+    let t = clean.serve.sim_sec;
+    let plan = FaultPlan::parse(&format!("1:{}:{}", 0.3 * t, 0.6 * t)).unwrap();
+    let serial = serve_decode_faulty_with(
+        &SimDriver::new(1),
+        &topo,
+        2,
+        &cfg,
+        Policy::SwizzledHeadFirst,
+        &plan,
+    );
+    let parallel = serve_decode_faulty_with(
+        &SimDriver::new(8),
+        &topo,
+        2,
+        &cfg,
+        Policy::SwizzledHeadFirst,
+        &plan,
+    );
+    assert_eq!(
+        serial.to_json().render(),
+        parallel.to_json().render(),
+        "faulty cluster serve diverged between 1 and 8 workers"
+    );
 }

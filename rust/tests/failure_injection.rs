@@ -1,12 +1,26 @@
-//! Failure-injection tests: corrupt artifacts, missing files, tampered
-//! goldens, and degenerate service configurations must fail loudly and
-//! precisely — never hang, never serve wrong numbers silently.
+//! Failure-injection tests, two layers deep:
+//!
+//! * artifact-level: corrupt artifacts, missing files, tampered
+//!   goldens, and degenerate service configurations must fail loudly
+//!   and precisely — never hang, never serve wrong numbers silently;
+//! * cluster-level (docs/SERVING.md §9): the fault-injection grid —
+//!   seed × fault plan × KV pool on/off — must conserve sessions and
+//!   leases through every fail/recover cycle: no session lost, none
+//!   double-served, every eviction paired with exactly one
+//!   re-admission, and no pool lease still held when the run drains.
 
 use std::fs;
 use std::path::PathBuf;
 
-use numa_attn::coordinator::{AttentionService, BatcherConfig, ServiceConfig};
+use numa_attn::coordinator::{
+    serve_decode_disagg_traced, serve_decode_faulty_traced, serve_decode_faulty_with,
+    AttentionService, BatcherConfig, DisaggConfig, FaultEvent, FaultPlan, ServeConfig,
+    ServiceConfig,
+};
+use numa_attn::driver::SimDriver;
+use numa_attn::mapping::Policy;
 use numa_attn::runtime::{Manifest, Runtime};
+use numa_attn::topology::{presets, Topology};
 
 fn artifact_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -145,5 +159,203 @@ fn verify_on_artifact_without_golden_errors() {
     if let Some(name) = name {
         rt.load(&name).unwrap();
         assert!(rt.verify(&name, 1e-3).is_err());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cluster fault-injection invariants (docs/SERVING.md §9)
+// ---------------------------------------------------------------------
+
+/// Scaled-down MI300X (same shape as tests/serving_loop.rs) so the
+/// serving loops run in test time.
+fn fast_topo() -> Topology {
+    Topology {
+        cus_per_xcd: 8,
+        l2_bytes_per_xcd: 1024 * 1024,
+        hbm_bytes_per_sec: 1.1e12,
+        ..presets::mi300x()
+    }
+}
+
+/// Decode-dominated serving config (near-simultaneous arrivals, short
+/// prompts, long decode budgets): the run is a dense train of decode
+/// steps, so mid-run outages are guaranteed to land on step boundaries
+/// and fire. `pool` switches the paged KV pool (and with it the lease
+/// machinery the grid audits) on.
+fn fault_serve(seed: u64, pool: bool) -> ServeConfig {
+    ServeConfig {
+        h_q: 16,
+        h_k: 8,
+        d_head: 64,
+        kv_cap: 16384,
+        kv_bucket: 2048,
+        arrival_per_sec: 1.0e6,
+        prefill_lengths: vec![512],
+        decode_tokens: vec![100],
+        sessions: 6,
+        max_active: 6,
+        max_steps: 4000,
+        seed,
+        kv_block_tokens: if pool { 256 } else { 0 },
+        prefix_share_pct: if pool { 50.0 } else { 0.0 },
+        kv_capacity_mb: if pool { 1024 } else { 0 },
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn fault_grid_no_session_lost_or_double_served() {
+    // The invariant grid: seed × fault plan × KV pool. Each cell runs
+    // the tp=2 faulty serving loop and audits the event log — the
+    // exactly-once and lease-conservation contracts must hold whether
+    // the outage is a mid-run single failure, staggered failures of
+    // both devices, or a pre-arrival total blackout.
+    let driver = SimDriver::new(4);
+    let topo = fast_topo();
+    let tp = 2;
+    for seed in [7u64, 13] {
+        for pool in [false, true] {
+            let cfg = fault_serve(seed, pool);
+            let clean = serve_decode_faulty_with(
+                &driver,
+                &topo,
+                tp,
+                &cfg,
+                Policy::SwizzledHeadFirst,
+                &FaultPlan::default(),
+            );
+            assert!(!clean.serve.truncated, "seed={seed} pool={pool}: clean run truncated");
+            let t = clean.serve.sim_sec;
+            let plans = [
+                // One device drops across the middle of the serve.
+                FaultPlan {
+                    events: vec![FaultEvent {
+                        device: 1,
+                        fail_sec: 0.35 * t,
+                        recover_sec: 0.65 * t,
+                    }],
+                },
+                // Staggered outages hit both devices in turn.
+                FaultPlan {
+                    events: vec![
+                        FaultEvent { device: 0, fail_sec: 0.2 * t, recover_sec: 0.4 * t },
+                        FaultEvent { device: 1, fail_sec: 0.55 * t, recover_sec: 0.7 * t },
+                    ],
+                },
+                // Total blackout before the first arrival.
+                FaultPlan {
+                    events: vec![
+                        FaultEvent { device: 0, fail_sec: 0.0, recover_sec: 1e-7 },
+                        FaultEvent { device: 1, fail_sec: 0.0, recover_sec: 2e-7 },
+                    ],
+                },
+            ];
+            for (pi, plan) in plans.iter().enumerate() {
+                let tag = format!("seed={seed} pool={pool} plan#{pi}");
+                let (stats, trace) = serve_decode_faulty_traced(
+                    &driver,
+                    &topo,
+                    tp,
+                    &cfg,
+                    Policy::SwizzledHeadFirst,
+                    plan,
+                );
+                let f = stats.faults.as_ref().expect("non-empty plan records extras");
+                assert!(!stats.serve.truncated, "{tag}: faulty run truncated");
+                // Every scheduled transition was applied.
+                assert_eq!(f.events_applied, 2 * plan.events.len(), "{tag}");
+                assert_eq!(trace.transitions.len(), f.events_applied, "{tag}");
+                // No session lost, none double-served: ids 0..sessions
+                // each retire exactly once.
+                assert_eq!(stats.serve.sessions_completed, cfg.sessions, "{tag}");
+                let mut completed = trace.completions.clone();
+                completed.sort_unstable();
+                assert_eq!(
+                    completed,
+                    (0..cfg.sessions as u64).collect::<Vec<_>>(),
+                    "{tag}: a session was lost or double-served"
+                );
+                // Every eviction pairs with exactly one re-admission.
+                for id in 0..cfg.sessions as u64 {
+                    let admitted = trace.admissions.iter().filter(|&&a| a == id).count();
+                    let evicted = trace.evictions.iter().filter(|&&e| e == id).count();
+                    assert_eq!(admitted, 1 + evicted, "{tag}: session {id}");
+                }
+                assert_eq!(trace.evictions.len(), f.requeued, "{tag}");
+                // Lease conservation: evictions force-release exactly
+                // their leases, and nothing is still held at the end.
+                assert_eq!(trace.leases_at_end, 0, "{tag}: a KV lease leaked");
+                if pool {
+                    assert_eq!(f.forced_releases, f.requeued, "{tag}");
+                } else {
+                    assert_eq!(f.forced_releases, 0, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn disagg_pool_split_grid_conserves_sessions_under_replayed_traces() {
+    // The disaggregated half of the grid: seed × pool split, each cell
+    // serving a replayed trace (docs/SERVING.md §8) through the
+    // prefill/decode-split loop. Handoffs, completions, and per-step
+    // audits must all conserve sessions — the trace machinery must not
+    // open a path for a session to vanish between pools.
+    let driver = SimDriver::new(4);
+    let topo = fast_topo();
+    for seed in [7u64, 13] {
+        for (prefill_devices, decode_devices) in [(1usize, 1usize), (1, 2)] {
+            let tag = format!("seed={seed} split={prefill_devices}p/{decode_devices}d");
+            let spec = numa_attn::workload::TraceSpec {
+                seed,
+                sessions: 6,
+                prefill_lengths: vec![512, 2040],
+                decode_tokens: vec![8, 24],
+                interactive_pct: 50.0,
+                ..numa_attn::workload::TraceSpec::default()
+            };
+            let generated = spec.generate();
+            let replayed =
+                numa_attn::workload::TraceReplay::parse(&generated.render()).unwrap();
+            let cfg = DisaggConfig {
+                serve: ServeConfig {
+                    h_q: 16,
+                    h_k: 8,
+                    d_head: 64,
+                    kv_cap: 16384,
+                    kv_bucket: 2048,
+                    sessions: 6,
+                    max_active: 4,
+                    max_steps: 2000,
+                    seed,
+                    trace: Some(replayed),
+                    ..ServeConfig::default()
+                },
+                prefill_devices,
+                decode_devices,
+                interactive_pct: 50.0,
+                ..DisaggConfig::default()
+            };
+            let (stats, trace) = serve_decode_disagg_traced(
+                &driver,
+                &topo,
+                &cfg,
+                Policy::SwizzledHeadFirst,
+            );
+            assert!(!stats.serve.truncated, "{tag}: run truncated");
+            assert_eq!(stats.serve.sessions_completed, spec.sessions, "{tag}");
+            assert_eq!(trace.sessions.len(), spec.sessions, "{tag}: trace rows served");
+            // Disaggregated cells hand each session off exactly once.
+            if prefill_devices > 0 {
+                let mut handed: Vec<u64> = trace.handoffs.iter().map(|h| h.id).collect();
+                handed.sort_unstable();
+                assert_eq!(
+                    handed,
+                    (0..spec.sessions as u64).collect::<Vec<_>>(),
+                    "{tag}: each session must hand off exactly once"
+                );
+            }
+        }
     }
 }

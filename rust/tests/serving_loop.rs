@@ -23,6 +23,7 @@ use numa_attn::coordinator::{
 use numa_attn::driver::SimDriver;
 use numa_attn::mapping::Policy;
 use numa_attn::topology::{presets, Topology};
+use numa_attn::workload::{TraceReplay, TraceSpec};
 
 /// Scaled-down MI300X (same shape as the advisor's unit-test topology)
 /// so the loop runs in test time.
@@ -317,4 +318,54 @@ fn serve_step_budget_truncates_cleanly() {
     assert_eq!(s.steps, 3);
     assert!(s.sessions_completed < cfg.sessions);
     assert!(s.tokens <= (cfg.max_active * s.steps) as u64);
+}
+
+#[test]
+fn golden_replayed_trace_reproduces_generated_trace_byte_for_byte() {
+    // The .trace round-trip pin (docs/SERVING.md §8): rendering a
+    // generated bursty schedule and parsing it back must reproduce the
+    // identical session list — arrivals use shortest-round-trip f64
+    // formatting — so the replayed serve renders JSON byte-identical
+    // to the generated serve at 1 and 8 driver workers.
+    let topo = fast_topo();
+    let spec = TraceSpec {
+        sessions: 8,
+        prefill_lengths: vec![2040, 4096],
+        decode_tokens: vec![8, 24],
+        share_pct: 50.0,
+        share_span: 1024,
+        interactive_pct: 50.0,
+        ..TraceSpec::default()
+    };
+    let generated = spec.generate();
+    let replayed = TraceReplay::parse(&generated.render()).unwrap();
+    assert_eq!(generated.render(), replayed.render(), "render/parse must round-trip");
+    let gen_cfg = ServeConfig { trace: Some(generated), ..small_serve() };
+    let rep_cfg = ServeConfig { trace: Some(replayed), ..small_serve() };
+    for threads in [1usize, 8] {
+        let driver = SimDriver::new(threads);
+        let a = serve_decode_with(&driver, &topo, &gen_cfg, Policy::SwizzledHeadFirst);
+        let b = serve_decode_with(&driver, &topo, &rep_cfg, Policy::SwizzledHeadFirst);
+        assert_eq!(
+            a.to_json().render(),
+            b.to_json().render(),
+            "{threads} workers: replayed trace diverged from the generated trace"
+        );
+    }
+}
+
+#[test]
+fn golden_no_trace_config_is_untouched_by_the_trace_field() {
+    // The trace plumbing must cost the historical generator path
+    // nothing: `trace: None` (the default) renders the same serving
+    // JSON as before the field existed, at 1 and 8 driver workers —
+    // locked here so trace-threading refactors can't silently perturb
+    // the seeded-generator golden.
+    let topo = fast_topo();
+    let cfg = small_serve();
+    assert!(cfg.trace.is_none(), "small_serve must stay on the generator path");
+    let serial = serve_decode_with(&SimDriver::new(1), &topo, &cfg, Policy::SwizzledHeadFirst);
+    let parallel = serve_decode_with(&SimDriver::new(8), &topo, &cfg, Policy::SwizzledHeadFirst);
+    assert_eq!(serial.to_json().render(), parallel.to_json().render());
+    assert_eq!(serial.sessions_completed, cfg.sessions);
 }

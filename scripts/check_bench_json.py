@@ -26,6 +26,15 @@ the suite the document declares:
     the interactive first-token tail without losing decode throughput
     to the handoff (hard failures: the bench asserts the same ordering
     where it is measured);
+  * suite `faults`: the outage case ("faults: mid-serve outage,
+    rebalance + recovery (SHF)") reports `rebalances` >= 1 (the fault
+    cells actually fired and re-formed the shard plan),
+    `degraded_tokens_per_sec` < `healthy_tokens_per_sec` (losing a
+    device visibly slows the degraded interval), and `recovery_ratio`
+    >= 0.95 — the docs/SERVING.md §9 claim that the post-recovery
+    window restores at least 95% of the pre-failure busy-time rate
+    (hard failures: the bench asserts the same ordering where it is
+    measured);
   * suite `tune`: every sweep case ("tune: ...") reports
     `speedup_vs_shf` >= 1.0 — the autotuner's strict argmin can never
     lose to a baseline inside its own search space (hard failure:
@@ -53,6 +62,9 @@ DISAGG_RATIO_METRICS = ("ttft_speedup_vs_colocated", "tokens_ratio_vs_colocated"
 
 TUNE_CASE_PREFIX = "tune: "
 TUNE_SPEEDUP_METRIC = "speedup_vs_shf"
+
+FAULTS_OUTAGE_CASE = "faults: mid-serve outage, rebalance + recovery (SHF)"
+FAULTS_RECOVERY_FLOOR = 0.95
 
 REQUIRED_CASE_FIELDS = ("name", "iters", "mean_ms", "min_ms", "max_ms", "metrics")
 
@@ -143,6 +155,41 @@ def check(doc, errors, warnings):
                     "tuned mapping lost to a baseline inside its own search space "
                     "(docs/TUNING.md)",
                 )
+        if doc.get("suite") == "faults" and name == FAULTS_OUTAGE_CASE:
+            rebalances = metrics.get("rebalances")
+            if not isinstance(rebalances, (int, float)):
+                fail(errors, f"{where}: missing 'rebalances' metric")
+            elif rebalances < 1:
+                fail(
+                    errors,
+                    f"{where}: rebalances {rebalances} — the outage never re-formed "
+                    "the shard plan (docs/SERVING.md §9)",
+                )
+            degraded = metrics.get("degraded_tokens_per_sec")
+            healthy = metrics.get("healthy_tokens_per_sec")
+            if not isinstance(degraded, (int, float)) or not isinstance(healthy, (int, float)):
+                fail(
+                    errors,
+                    f"{where}: missing 'degraded_tokens_per_sec' / "
+                    "'healthy_tokens_per_sec' metrics",
+                )
+            elif not degraded < healthy:
+                fail(
+                    errors,
+                    f"{where}: degraded rate {degraded:.0f} not below healthy "
+                    f"{healthy:.0f} — the degraded interval is invisible "
+                    "(docs/SERVING.md §9)",
+                )
+            recovery = metrics.get("recovery_ratio")
+            if not isinstance(recovery, (int, float)):
+                fail(errors, f"{where}: missing 'recovery_ratio' metric")
+            elif recovery < FAULTS_RECOVERY_FLOOR:
+                fail(
+                    errors,
+                    f"{where}: recovery_ratio {recovery:.4f} below the "
+                    f"{FAULTS_RECOVERY_FLOOR} floor — recovery never restored the "
+                    "pre-failure rate (docs/SERVING.md §9)",
+                )
         if doc.get("suite") == "disagg" and name == DISAGG_HEADLINE_CASE:
             for metric in DISAGG_RATIO_METRICS:
                 ratio = metrics.get(metric)
@@ -162,6 +209,8 @@ def check(doc, errors, warnings):
             fail(errors, f"no case named {SPEEDUP_CASE_PREFIX!r}...")
     if doc.get("suite") == "disagg" and DISAGG_HEADLINE_CASE not in names:
         fail(errors, f"headline case {DISAGG_HEADLINE_CASE!r} not present")
+    if doc.get("suite") == "faults" and FAULTS_OUTAGE_CASE not in names:
+        fail(errors, f"outage case {FAULTS_OUTAGE_CASE!r} not present")
     if doc.get("suite") == "tune":
         speedups = [
             case.get("metrics", {}).get(TUNE_SPEEDUP_METRIC)
